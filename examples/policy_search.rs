@@ -1,0 +1,75 @@
+//! Rust-driven differentiable NAS search (paper §4): the Lion optimizer
+//! walks the per-step guidance scores α against the AOT'd search-gradient
+//! module, then the learned α is extracted as a discrete policy and run.
+//!
+//! ```sh
+//! cargo run --release --example policy_search -- --iters 40
+//! ```
+
+use adaptive_guidance::coordinator::engine::Engine;
+use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::eval::harness::{mean_std, run_policy, ssim_series, RunSpec};
+use adaptive_guidance::prompts::{self, Prompt};
+use adaptive_guidance::runtime;
+use adaptive_guidance::search::{run_search, SearchConfig};
+use adaptive_guidance::util::cli::Args;
+use adaptive_guidance::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let Some(mut be) = runtime::try_load_default() else { return Ok(()) };
+    let meta = be.manifest.search.clone();
+    let img = be.manifest.img;
+    let cfg = SearchConfig {
+        steps: meta.steps,
+        options: meta.options.len(),
+        batch: meta.batch,
+        latent_len: be.manifest.flat_dim,
+        iters: args.usize("iters", 40),
+        lr: args.f64("lr", 0.02) as f32,
+        seed: args.u64("seed", 0),
+    };
+    println!(
+        "searching over {} policies ({} steps × {} options), {} Lion iterations…\n",
+        (cfg.options as f64).powi(cfg.steps as i32),
+        cfg.steps,
+        cfg.options,
+        cfg.iters
+    );
+    let mut grad = |a: &[f32], g: &[f32], x: &[f32], t: &[i32]| be.run_search_grad(a, g, x, t);
+    let res = run_search(&mut grad, &cfg, |rng: &mut Rng| {
+        Prompt::nth(rng.below(Prompt::space_size())).tokens()
+    })?;
+
+    // α heat-map (text): one row per step, one column per option
+    println!("learned softmax(α) — {:?}", meta.options);
+    for (t, row) in res.scores().iter().enumerate() {
+        let cells: Vec<String> = row.iter().map(|p| format!("{p:.2}")).collect();
+        let best = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        println!("  step {t:>2}: [{}] → {}", cells.join(" "), meta.options[best]);
+    }
+
+    // run the extracted policy vs the CFG baseline
+    let policy = res.extract_policy(meta.s_base as f32);
+    let Some(be2) = runtime::try_load_default() else { return Ok(()) };
+    let mut engine = Engine::new(be2);
+    let ps = prompts::eval_set(32, 42);
+    let spec = RunSpec::new("dit_s", meta.steps);
+    let baseline = run_policy(&mut engine, &ps, &spec,
+                              GuidancePolicy::Cfg { s: meta.s_base as f32 })?;
+    let searched = run_policy(&mut engine, &ps, &spec, policy)?;
+    let (sm, ss) = mean_std(&ssim_series(&searched, &baseline, img));
+    println!(
+        "\nextracted policy: {:.1} NFEs/img (CFG: {:.1}), SSIM vs baseline {:.3}±{:.3}",
+        searched.mean_nfes(),
+        baseline.mean_nfes(),
+        sm,
+        ss
+    );
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: load the AOT'd artifacts, generate a few images under
+//! Adaptive Guidance, and compare the cost against plain CFG.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use adaptive_guidance::coordinator::engine::Engine;
+use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::request::Request;
+use adaptive_guidance::prompts::Prompt;
+use adaptive_guidance::runtime;
+use adaptive_guidance::util::ppm;
+
+fn main() -> anyhow::Result<()> {
+    let Some(be) = runtime::try_load_default() else { return Ok(()) };
+    let img = be.manifest.img;
+    let mut engine = Engine::new(be);
+
+    let prompt = Prompt::parse("a large red circle at the center").unwrap();
+    println!("prompt: \"{}\" (tokens {:?})\n", prompt.text(), prompt.tokens());
+
+    // Same seed, two policies: CFG (the baseline) and Adaptive Guidance.
+    let cfg = Request::new(0, "dit_b", prompt.tokens(), 7, 20,
+                           GuidancePolicy::Cfg { s: 7.5 });
+    let ag = Request::new(1, "dit_b", prompt.tokens(), 7, 20,
+                          GuidancePolicy::Ag { s: 7.5, gamma_bar: 0.9988 });
+    let out = engine.run(vec![cfg, ag])?;
+
+    std::fs::create_dir_all("out")?;
+    for (c, name) in out.iter().zip(["cfg", "ag"]) {
+        let up = ppm::upscale(&c.image, img, img, 8);
+        let path = format!("out/quickstart_{name}.ppm");
+        ppm::write_ppm(std::path::Path::new(&path), &up, img * 8, img * 8)?;
+        println!(
+            "{name:>4}: {} NFEs{}  -> {path}",
+            c.nfes,
+            c.truncated_at
+                .map(|t| format!(" (guidance dropped after step {t})"))
+                .unwrap_or_default(),
+        );
+    }
+    let ssim = adaptive_guidance::quality::ssim::ssim_rgb(
+        &out[0].image, &out[1].image, img, img);
+    println!(
+        "\nAG replicated CFG at SSIM {:.4} while saving {} NFEs ({:.0}%).",
+        ssim,
+        out[0].nfes - out[1].nfes,
+        100.0 * (out[0].nfes - out[1].nfes) as f64 / out[0].nfes as f64
+    );
+    println!("gamma trace (Eq. 7): {:?}",
+             out[0].gammas.iter().map(|g| (g * 1e4).round() / 1e4).collect::<Vec<_>>());
+    Ok(())
+}

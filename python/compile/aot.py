@@ -1,0 +1,249 @@
+"""AOT lowering: JAX (L2 + L1) → HLO **text** artifacts + manifest.json.
+
+Emits one self-contained HLO module per (function, batch-bucket) with the
+trained weights baked in as constants, so the Rust coordinator is fully
+standalone at request time. HLO *text* — not ``.serialize()`` — is the
+interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids which
+xla_extension 0.5.1 (the version the published ``xla`` crate binds) rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts (all under ``artifacts/``):
+
+  denoiser_<model>_b<B>.hlo.txt   (x[B,16,16,C], t[B], tokens[B,4]) -> eps
+  guide_b<B>.hlo.txt              (eps_c[B,M], eps_u[B,M], s[B]) -> (eps_cfg, gamma)
+  solver_b<B>.hlo.txt             (x, eps, x0_prev[B,M], coefs[B,5]) -> (x_next, x0)
+  search_grad.hlo.txt             (alpha, gumbel, x_T, tokens) -> (loss, grad, mse, nfe)
+  manifest.json                   everything Rust needs to stay in sync
+
+Run via ``make artifacts`` (trains checkpoints first if missing).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, diffusion, model, search_graph, train
+from .kernels import cfg_combine as cfg_kernel
+from .kernels import dpmpp as dpmpp_kernel
+
+BUCKETS = [1, 2, 4, 8, 16]
+EDIT_BUCKETS = [1, 2, 4]
+FLAT_DIM = data.IMG * data.IMG * data.CHANNELS  # 768
+SEARCH_STEPS = 20
+SEARCH_BATCH = 4
+DEFAULT_GUIDANCE = 7.5
+DEFAULT_STEPS = 20
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning round trip).
+
+    `as_hlo_text(True)` = print_large_constants: without it the baked model
+    weights are elided as ``constant({...})`` and the Rust-side parse fails.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text(True)
+
+
+def _write(out_dir: str, name: str, text: str) -> str:
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {name} ({len(text) / 1e6:.2f} MB)")
+    return name
+
+
+def lower_denoiser(params, cfg: model.DiTConfig, batch: int):
+    """One denoiser executable; weights are closed-over constants."""
+    def fn(x, t, tokens):
+        return (model.forward(params, cfg, x, t, tokens, use_pallas=True),)
+
+    spec_x = jax.ShapeDtypeStruct((batch, cfg.img, cfg.img, cfg.in_channels),
+                                  jnp.float32)
+    spec_t = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    spec_tok = jax.ShapeDtypeStruct((batch, len(cfg.vocab_sizes)), jnp.int32)
+    return jax.jit(fn).lower(spec_x, spec_t, spec_tok)
+
+
+def lower_guide(batch: int):
+    def fn(eps_c, eps_u, s):
+        return cfg_kernel.cfg_combine(eps_c, eps_u, s)
+
+    v = jax.ShapeDtypeStruct((batch, FLAT_DIM), jnp.float32)
+    s = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    return jax.jit(fn).lower(v, v, s)
+
+
+def lower_solver(batch: int):
+    def fn(x, eps, x0_prev, coefs):
+        return dpmpp_kernel.dpmpp_step(x, eps, x0_prev, coefs)
+
+    v = jax.ShapeDtypeStruct((batch, FLAT_DIM), jnp.float32)
+    c = jax.ShapeDtypeStruct((batch, 5), jnp.float32)
+    return jax.jit(fn).lower(v, v, v, c)
+
+
+def lower_search(params, cfg: model.DiTConfig):
+    fn = search_graph.build_search_fn(
+        params, cfg, num_steps=SEARCH_STEPS, s_base=DEFAULT_GUIDANCE,
+        lam_cost=0.02, cost_target=30.0)
+    a = jax.ShapeDtypeStruct((SEARCH_STEPS, search_graph.NUM_OPTIONS),
+                             jnp.float32)
+    x = jax.ShapeDtypeStruct((SEARCH_BATCH, cfg.img, cfg.img,
+                              cfg.in_channels), jnp.float32)
+    tok = jax.ShapeDtypeStruct((SEARCH_BATCH, len(cfg.vocab_sizes)),
+                               jnp.int32)
+    return jax.jit(fn).lower(a, a, x, tok)
+
+
+def build_parity_fixture(params, cfg: model.DiTConfig) -> dict:
+    """Reference values for the Rust integration tests (L2↔L3 parity).
+
+    A deterministic x_T and prompt, the single-eval denoiser output, and two
+    full reference trajectories (CFG and AG) from `diffusion.sample` — the
+    Rust engine must reproduce the images and gammas within f32 tolerance.
+    """
+    rng = np.random.default_rng(1234)
+    x_init = rng.standard_normal((1, cfg.img, cfg.img, 3)).astype(np.float32)
+    tokens = np.array([[1, 2, 3, 1]], dtype=np.int32)
+    uncond = np.zeros_like(tokens)
+    eps_fn = model.eps_fn(params, cfg, use_pallas=True)
+
+    t_probe = 0.5
+    eps_probe = np.asarray(
+        eps_fn(jnp.asarray(x_init), jnp.full((1,), t_probe), jnp.asarray(tokens)))
+
+    def run(gamma_bar):
+        res = diffusion.sample(eps_fn, jnp.asarray(x_init), jnp.asarray(tokens),
+                               jnp.asarray(uncond), num_steps=DEFAULT_STEPS,
+                               guidance=DEFAULT_GUIDANCE, gamma_bar=gamma_bar)
+        return {
+            "image": [float(v) for v in res.image.ravel()],
+            "nfes": int(res.nfes),
+            "gammas": [float(g) for g in res.gammas[:, 0]],
+        }
+
+    return {
+        "model": cfg.name,
+        "x_init": [float(v) for v in x_init.ravel()],
+        "tokens": [int(v) for v in tokens.ravel()],
+        "denoiser_t": t_probe,
+        "denoiser_eps": [float(v) for v in eps_probe.ravel()],
+        "sample_cfg": run(gamma_bar=1.1),
+        "sample_ag": {**run(gamma_bar=0.991), "gamma_bar": 0.991},
+    }
+
+
+def build_manifest(models: dict, artifacts: dict) -> dict:
+    table = diffusion.coef_table(DEFAULT_STEPS)
+    return {
+        "version": 1,
+        "flat_dim": FLAT_DIM,
+        "img": data.IMG,
+        "channels": data.CHANNELS,
+        "buckets": BUCKETS,
+        "edit_buckets": EDIT_BUCKETS,
+        "defaults": {"guidance": DEFAULT_GUIDANCE, "steps": DEFAULT_STEPS},
+        "schedule": {
+            "kind": "cosine-vp",
+            "cosine_s": diffusion.COSINE_S,
+            "t_max": diffusion.T_MAX,
+            "t_min": diffusion.T_MIN,
+            # parity table for rust tests: timesteps + folded coefficients
+            "timesteps_20": [float(t) for t in
+                             diffusion.timesteps(DEFAULT_STEPS)],
+            "coefs_20": [[float(v) for v in row] for row in table],
+        },
+        "vocab": {
+            "shapes": data.SHAPES,
+            "colors": data.COLORS,
+            "positions": data.POSITIONS,
+            "sizes": data.SIZES,
+        },
+        "models": models,
+        "artifacts": artifacts,
+        "search": {
+            "steps": SEARCH_STEPS,
+            "batch": SEARCH_BATCH,
+            "options": search_graph.OPTION_NAMES,
+            "costs": [float(c) for c in search_graph.OPTION_COSTS],
+            "s_base": DEFAULT_GUIDANCE,
+            "lam_cost": 0.02,
+            "cost_target": 30.0,
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-search", action="store_true")
+    ap.add_argument("--skip-missing", action="store_true",
+                    help="skip models whose checkpoint is absent instead of failing")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    models_meta: dict = {}
+    artifacts: dict = {"denoisers": {}, "guide": {}, "solver": {}}
+
+    for name in ("dit_s", "dit_b", "dit_edit"):
+        cfg = model.CONFIGS[name]
+        ckpt = train.ckpt_path(out, name)
+        if not os.path.exists(ckpt):
+            if args.skip_missing:
+                print(f"[{name}] checkpoint missing, skipping")
+                continue
+            raise SystemExit(
+                f"missing checkpoint {ckpt}; run `make train` first")
+        params = model.load_params(ckpt)
+        buckets = EDIT_BUCKETS if name == "dit_edit" else BUCKETS
+        per_bucket = {}
+        print(f"[{name}] lowering denoiser ({model.param_count(params)} params)")
+        for b in buckets:
+            text = to_hlo_text(lower_denoiser(params, cfg, b))
+            per_bucket[str(b)] = _write(out, f"denoiser_{name}_b{b}.hlo.txt",
+                                        text)
+        artifacts["denoisers"][name] = per_bucket
+        models_meta[name] = {
+            "params": model.param_count(params),
+            "in_channels": cfg.in_channels,
+            "buckets": buckets,
+            "checkpoint": os.path.basename(ckpt),
+        }
+        if name == "dit_s":
+            print(f"[{name}] building parity fixture (python reference run)")
+            fixture = build_parity_fixture(params, cfg)
+            with open(os.path.join(out, "parity.json"), "w") as f:
+                json.dump(fixture, f)
+        if name == "dit_s" and not args.skip_search:
+            print(f"[{name}] lowering search graph "
+                  f"(T={SEARCH_STEPS}, unrolled x2 trajectories)")
+            artifacts["search_grad"] = _write(
+                out, "search_grad.hlo.txt", to_hlo_text(lower_search(params,
+                                                                     cfg)))
+
+    print("[shared] lowering guide + solver kernels")
+    for b in BUCKETS:
+        artifacts["guide"][str(b)] = _write(
+            out, f"guide_b{b}.hlo.txt", to_hlo_text(lower_guide(b)))
+        artifacts["solver"][str(b)] = _write(
+            out, f"solver_b{b}.hlo.txt", to_hlo_text(lower_solver(b)))
+
+    manifest = build_manifest(models_meta, artifacts)
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest.json written; {len(os.listdir(out))} files in {out}")
+
+
+if __name__ == "__main__":
+    main()

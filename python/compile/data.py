@@ -1,0 +1,154 @@
+"""Procedural "shapes" corpus: the CC3M/OUI substitute (see DESIGN.md §3).
+
+Renders 16x16 RGB images of colored shapes with compositional text prompts
+("a large red circle at the top-left"). The same prompt vocabulary and token
+encoding are mirrored in ``rust/src/prompts.rs``; the vocabularies are
+exported through ``manifest.json`` so the two sides cannot drift.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import numpy as np
+
+IMG = 16          # image side
+CHANNELS = 3
+
+SHAPES = ["circle", "square", "triangle", "cross"]
+COLORS = ["red", "green", "blue", "yellow", "white"]
+POSITIONS = ["center", "top-left", "top-right", "bottom-left", "bottom-right"]
+SIZES = ["small", "large"]
+
+# token slot layout: [shape, color, position, size]; index 0 in every slot is
+# the null (unconditional) token, so real attributes are 1-based.
+VOCAB_SIZES = [len(SHAPES) + 1, len(COLORS) + 1, len(POSITIONS) + 1,
+               len(SIZES) + 1]
+NUM_SLOTS = 4
+NULL_TOKENS = np.zeros(NUM_SLOTS, dtype=np.int32)
+
+_RGB = {
+    "red": (0.9, 0.15, 0.15),
+    "green": (0.15, 0.85, 0.2),
+    "blue": (0.2, 0.3, 0.95),
+    "yellow": (0.9, 0.85, 0.2),
+    "white": (0.95, 0.95, 0.95),
+}
+
+_POS_CENTER = {
+    "center": (8.0, 8.0),
+    "top-left": (4.5, 4.5),
+    "top-right": (4.5, 11.5),
+    "bottom-left": (11.5, 4.5),
+    "bottom-right": (11.5, 11.5),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Prompt:
+    shape: int      # 0-based attribute indices
+    color: int
+    position: int
+    size: int
+
+    def tokens(self) -> np.ndarray:
+        """1-based token encoding with 0 reserved for null."""
+        return np.array([self.shape + 1, self.color + 1, self.position + 1,
+                         self.size + 1], dtype=np.int32)
+
+    def text(self) -> str:
+        return (f"a {SIZES[self.size]} {COLORS[self.color]} "
+                f"{SHAPES[self.shape]} at the {POSITIONS[self.position]}")
+
+
+ALL_PROMPTS = [Prompt(s, c, p, z) for s, c, p, z in
+               itertools.product(range(len(SHAPES)), range(len(COLORS)),
+                                 range(len(POSITIONS)), range(len(SIZES)))]
+
+
+def _mask(shape: str, cy: float, cx: float, radius: float) -> np.ndarray:
+    yy, xx = np.mgrid[0:IMG, 0:IMG].astype(np.float64)
+    dy, dx = yy - cy, xx - cx
+    if shape == "circle":
+        d = np.sqrt(dy ** 2 + dx ** 2) - radius
+    elif shape == "square":
+        d = np.maximum(np.abs(dy), np.abs(dx)) - radius
+    elif shape == "triangle":
+        # upward triangle: inside if below the two slanted edges and above base
+        d = np.maximum.reduce([
+            dy - radius,                       # base
+            (-dy) * 0.5 + np.abs(dx) - radius  # slanted sides
+        ])
+    elif shape == "cross":
+        bar = radius * 0.45
+        d = np.minimum(np.maximum(np.abs(dy) - bar, np.abs(dx) - radius),
+                       np.maximum(np.abs(dx) - bar, np.abs(dy) - radius))
+    else:
+        raise ValueError(shape)
+    # soft 1px anti-aliased edge — keeps the data distribution smooth.
+    return np.clip(0.5 - d, 0.0, 1.0)
+
+
+def render(prompt: Prompt, rng: np.random.Generator | None = None) -> np.ndarray:
+    """Render one prompt to a ``(16, 16, 3)`` float32 image in [-1, 1].
+
+    With ``rng``, applies the augmentations the corpus is trained with
+    (sub-pixel jitter, brightness, background noise) so the model learns a
+    distribution rather than a lookup table.
+    """
+    cy, cx = _POS_CENTER[POSITIONS[prompt.position]]
+    radius = 2.4 if SIZES[prompt.size] == "small" else 4.2
+    jitter_y = jitter_x = 0.0
+    brightness = 1.0
+    bg_noise = 0.0
+    if rng is not None:
+        jitter_y, jitter_x = rng.uniform(-0.75, 0.75, size=2)
+        brightness = rng.uniform(0.85, 1.0)
+        bg_noise = 1.0
+    m = _mask(SHAPES[prompt.shape], cy + jitter_y, cx + jitter_x, radius)
+    rgb = np.asarray(_RGB[COLORS[prompt.color]]) * brightness
+    img = np.full((IMG, IMG, CHANNELS), 0.08, dtype=np.float64)
+    if rng is not None:
+        img += rng.normal(0.0, 0.015, size=img.shape) * bg_noise
+    img = img * (1.0 - m[..., None]) + rgb[None, None, :] * m[..., None]
+    return (img * 2.0 - 1.0).astype(np.float32)
+
+
+def make_batch(rng: np.random.Generator, batch: int):
+    """Sample a training batch: images (B,16,16,3) and tokens (B,4)."""
+    idx = rng.integers(0, len(ALL_PROMPTS), size=batch)
+    imgs = np.stack([render(ALL_PROMPTS[i], rng) for i in idx])
+    toks = np.stack([ALL_PROMPTS[i].tokens() for i in idx])
+    return imgs, toks
+
+
+# --------------------------------------------------------------------------
+# Editing task (Appendix B substitute): source image + instruction -> target.
+# --------------------------------------------------------------------------
+
+def make_edit_example(rng: np.random.Generator):
+    """One editing triple: (source image, instruction tokens, target image).
+
+    The instruction changes exactly one attribute; its token encoding sets
+    only the changed slot (other slots null), e.g. "make it blue" ->
+    [0, blue, 0, 0].
+    """
+    src = ALL_PROMPTS[rng.integers(0, len(ALL_PROMPTS))]
+    slot = int(rng.integers(0, NUM_SLOTS))
+    nvals = [len(SHAPES), len(COLORS), len(POSITIONS), len(SIZES)][slot]
+    cur = [src.shape, src.color, src.position, src.size]
+    new_val = int(rng.integers(0, nvals - 1))
+    if new_val >= cur[slot]:
+        new_val += 1  # ensure a real change
+    tgt_attrs = list(cur)
+    tgt_attrs[slot] = new_val
+    tgt = Prompt(*tgt_attrs)
+    instr = np.zeros(NUM_SLOTS, dtype=np.int32)
+    instr[slot] = new_val + 1
+    return render(src, rng), instr, render(tgt, rng)
+
+
+def make_edit_batch(rng: np.random.Generator, batch: int):
+    srcs, instrs, tgts = zip(*(make_edit_example(rng) for _ in range(batch)))
+    return np.stack(srcs), np.stack(instrs), np.stack(tgts)

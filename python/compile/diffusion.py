@@ -1,0 +1,182 @@
+"""Diffusion schedule math + reference samplers (build-time only).
+
+Defines the VP cosine schedule, the DPM-Solver++(2M) coefficient folding used
+by both the AOT'd Pallas solver kernel and the Rust coordinator
+(``rust/src/coordinator/solver.rs`` re-implements ``fold_coefs`` and is tested
+against the sample table exported in ``manifest.json``), and pure-python
+reference samplers (CFG / AG / naive step reduction) used as oracles for the
+Rust engine's integration tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Schedule constants — shared with rust/src/coordinator/solver.rs.
+COSINE_S = 0.008
+T_MAX = 0.98   # start of sampling (sigma ~ 0.9995)
+T_MIN = 0.02   # end of sampling   (sigma ~ 0.044)
+
+
+def alpha_bar(t):
+    """Cosine cumulative signal level, normalized so alpha_bar(0) = 1."""
+    f = lambda u: math.cos((u + COSINE_S) / (1.0 + COSINE_S) * math.pi / 2.0) ** 2
+    if isinstance(t, (float, int)):
+        return f(t) / f(0.0)
+    g = lambda u: jnp.cos((u + COSINE_S) / (1.0 + COSINE_S) * jnp.pi / 2.0) ** 2
+    return g(t) / g(0.0)
+
+
+def alpha_sigma(t):
+    """VP (alpha_t, sigma_t) with alpha^2 + sigma^2 = 1."""
+    ab = alpha_bar(t)
+    if isinstance(ab, float):
+        return math.sqrt(ab), math.sqrt(1.0 - ab)
+    return jnp.sqrt(ab), jnp.sqrt(1.0 - ab)
+
+
+def lam(t: float) -> float:
+    """Half log-SNR lambda_t = log(alpha_t / sigma_t)."""
+    a, s = alpha_sigma(float(t))
+    return math.log(a / s)
+
+
+def timesteps(num_steps: int) -> np.ndarray:
+    """Uniform time grid from T_MAX down to T_MIN, ``num_steps + 1`` points."""
+    return np.linspace(T_MAX, T_MIN, num_steps + 1)
+
+
+def fold_coefs(t_s: float, t_t: float, t_r: float | None) -> np.ndarray:
+    """Fold the DPM-Solver++(2M) update into 5 affine coefficients.
+
+    Step from time ``t_s`` to ``t_t`` with the previous solver point at
+    ``t_r`` (``None`` → first step → Euler / DPM++(1S)).
+
+    Returns ``[k_x, k_eps, k_prev, j_x, j_eps]`` such that
+
+      x_next = k_x * x + k_eps * eps + k_prev * x0_prev
+      x0     = j_x * x + j_eps * eps
+
+    This is the exact algebra the fused Pallas kernel (``kernels/dpmpp.py``)
+    and the Rust coordinator consume.
+    """
+    a_s, s_s = alpha_sigma(float(t_s))
+    a_t, s_t = alpha_sigma(float(t_t))
+    l_s, l_t = lam(t_s), lam(t_t)
+    h = l_t - l_s
+    e = a_t * (1.0 - math.exp(-h))  # = -alpha_t (exp(-h) - 1)
+    if t_r is None:
+        big_a, big_b = 1.0, 0.0
+    else:
+        l_r = lam(t_r)
+        r0 = (l_s - l_r) / h
+        big_a = 1.0 + 1.0 / (2.0 * r0)
+        big_b = -1.0 / (2.0 * r0)
+    j_x = 1.0 / a_s
+    j_eps = -s_s / a_s
+    k_x = s_t / s_s + e * big_a * j_x
+    k_eps = e * big_a * j_eps
+    k_prev = e * big_b
+    return np.array([k_x, k_eps, k_prev, j_x, j_eps], dtype=np.float64)
+
+
+def coef_table(num_steps: int) -> np.ndarray:
+    """``(num_steps, 5)`` coefficient table for a full trajectory."""
+    ts = timesteps(num_steps)
+    rows = []
+    for i in range(num_steps):
+        t_r = ts[i - 1] if i > 0 else None
+        rows.append(fold_coefs(ts[i], ts[i + 1], t_r))
+    return np.stack(rows)
+
+
+# ---------------------------------------------------------------------------
+# Reference samplers (oracles for the Rust engine).
+# ---------------------------------------------------------------------------
+
+EpsFn = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
+# eps_fn(x (B,H,W,C), t (B,), tokens (B,K)) -> eps (B,H,W,C)
+
+
+@dataclasses.dataclass
+class SampleResult:
+    image: np.ndarray          # final x0 prediction, (B, H, W, C)
+    nfes: int                  # total network function evaluations
+    gammas: np.ndarray         # per-step x0-space cosine (the AG signal)
+    gammas_eps: np.ndarray     # per-step raw-eps cosine (Eq. 7 as printed)
+    cfg_steps: int             # steps that used guidance
+
+
+def _flat(x):
+    return x.reshape(x.shape[0], -1)
+
+
+def sample(eps_fn: EpsFn, x_t: jax.Array, tokens: jax.Array,
+           uncond_tokens: jax.Array, num_steps: int, guidance: float,
+           gamma_bar: float = 1.1, cond_only: bool = False) -> SampleResult:
+    """Reference CFG / AG / conditional-only sampler.
+
+    ``gamma_bar > 1`` never truncates → plain CFG. ``gamma_bar <= 1`` →
+    Adaptive Guidance: once the sample's convergence signal gamma_t exceeds
+    gamma_bar, subsequent steps use the conditional score only.
+    ``cond_only=True`` is the guidance-distillation cost proxy.
+
+    The AG signal is Eq. 7's cosine evaluated on the *data predictions*
+    ``x0 = j_x x + j_eps eps`` rather than on raw eps: the two are affine
+    re-parameterizations of the same network output, but in x0 space the
+    cond/uncond difference is scaled by sigma/alpha → 0, which makes the
+    convergence robust to the eps-error floor of small models (DESIGN.md
+    §Hardware-Adaptation). The raw-eps cosine (the paper's printed form)
+    is recorded alongside.
+    """
+    from .kernels import ref
+
+    b = x_t.shape[0]
+    shape = x_t.shape
+    ts = timesteps(num_steps)
+    x = _flat(x_t)
+    x0_prev = jnp.zeros_like(x)
+    truncated = np.zeros(b, dtype=bool)
+    gammas, gammas_eps, nfes, cfg_steps = [], [], 0, 0
+
+    def _cos(a, bb):
+        num = jnp.sum(a * bb, -1)
+        den = jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(bb, axis=-1)
+        return num / jnp.maximum(den, 1e-12)
+
+    for i in range(num_steps):
+        coefs_row = jnp.asarray(
+            fold_coefs(ts[i], ts[i + 1], ts[i - 1] if i else None), x.dtype)
+        tv = jnp.full((b,), float(ts[i]), x.dtype)
+        eps_c = _flat(eps_fn(x.reshape(shape), tv, tokens))
+        nfes += b
+        if cond_only or bool(np.all(truncated)):
+            eps = eps_c
+            gamma = jnp.ones((b,))
+            g_eps = jnp.ones((b,))
+        else:
+            eps_u = _flat(eps_fn(x.reshape(shape), tv, uncond_tokens))
+            nfes += int(np.sum(~truncated))
+            s = jnp.full((b,), guidance, x.dtype)
+            eps_cfg, g_eps = ref.cfg_combine(eps_c, eps_u, s)
+            x0_c = coefs_row[3] * x + coefs_row[4] * eps_c
+            x0_u = coefs_row[3] * x + coefs_row[4] * eps_u
+            gamma = _cos(x0_c, x0_u)
+            # Per-sample AG switch: truncated samples keep the cheap score.
+            mask = jnp.asarray(truncated)[:, None]
+            eps = jnp.where(mask, eps_c, eps_cfg)
+            cfg_steps += 1
+            truncated = truncated | (np.asarray(gamma) >= gamma_bar)
+        gammas.append(np.asarray(gamma))
+        gammas_eps.append(np.asarray(g_eps))
+        coefs = jnp.tile(coefs_row[None, :], (b, 1))
+        x, x0 = ref.dpmpp_step(x, eps, x0_prev, coefs)
+        x0_prev = x0
+    return SampleResult(np.asarray(x0_prev).reshape(shape), nfes,
+                        np.stack(gammas), np.stack(gammas_eps), cfg_steps)

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: fused multi-head attention.
+
+The denoiser's hot-spot. The kernel is written TPU-idiomatically: the grid
+iterates over ``(batch, head, query-block)``; each program instance streams a
+``(BLOCK_Q, D)`` query tile plus the full ``(N, D)`` key/value panels through
+VMEM and produces its output tile in a single pass (softmax statistics kept in
+VMEM, no HBM round-trip for the logits).
+
+On this testbed the kernel is lowered with ``interpret=True`` so it executes
+as plain HLO on the CPU PJRT client; on a real TPU the same BlockSpecs map the
+HBM→VMEM schedule that a CUDA implementation would express with threadblocks
+(see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Query tile. N (token count) is 64 for the 16x16/patch-2 models, so tiles of
+# 32 give a 2-deep grid per head: big enough to exercise real tiling, small
+# enough that (BLOCK_Q, D) + (N, D)*2 panels stay far below VMEM limits.
+BLOCK_Q = 32
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Fused MHA forward. ``q, k, v: (B, H, N, D)`` → ``(B, H, N, D)``.
+
+    Matches ``ref.attention`` to float32 precision.
+
+    §Perf iteration (EXPERIMENTS.md): the grid tiles *queries only*; the
+    batch and head dimensions ride inside the block as batched-matmul dims.
+    Interpret-mode Pallas lowers grid cells to a sequential loop, so a
+    ``(B, H, qb)`` grid serialized every batch element on the CPU backend
+    (per-NFE cost *rose* with bucket size). Folding (B, H) into the block
+    keeps one grid axis for VMEM tiling while letting XLA vectorize across
+    the batch; the VMEM bound stays modest (q tile + K/V panels + logits
+    ≈ 1.3 MiB at bucket 16).
+    """
+    b, h, n, d = q.shape
+    block_q = min(BLOCK_Q, n)
+    assert n % block_q == 0, f"token count {n} not divisible by {block_q}"
+    grid = (n // block_q,)
+    q_spec = pl.BlockSpec((b, h, block_q, d), lambda qb: (0, 0, qb, 0))
+    kv_spec = pl.BlockSpec((b, h, n, d), lambda qb: (0, 0, 0, 0))
+
+    def kernel(q_ref, k_ref, v_ref, o_ref):
+        qv = q_ref[...]  # (b, h, block_q, d)
+        kv = k_ref[...]  # (b, h, n, d)
+        vv = v_ref[...]
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, qv.dtype))
+        logits = jax.lax.dot_general(
+            qv, kv,
+            dimension_numbers=(((3,), (3,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (b, h, block_q, n)
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        p = jnp.exp(logits - m)
+        denom = jnp.sum(p, axis=-1, keepdims=True)
+        out = jax.lax.dot_general(
+            p, vv,
+            dimension_numbers=(((3,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32,
+        )
+        o_ref[...] = (out / denom).astype(o_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, n, d), q.dtype),
+        interpret=True,
+    )(q, k, v)

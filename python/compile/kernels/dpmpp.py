@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: fused DPM-Solver++(2M) update.
+
+The solver update is a pure affine combination once the per-step schedule
+scalars are folded into five coefficients (see ``ref.dpmpp_step`` for the
+algebra and ``python/compile/diffusion.py`` / ``rust/src/coordinator/solver.rs``
+for the folding). Fusing it keeps the latent in VMEM for one pass instead of
+five elementwise HLO ops, and emits both the next latent and the
+data-prediction ``x0`` needed by the 2M history.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def dpmpp_step(x: jax.Array, eps: jax.Array, x0_prev: jax.Array,
+               coefs: jax.Array):
+    """Fused solver update.
+
+    Args:
+      x, eps, x0_prev: ``(B, M)``.
+      coefs: ``(B, 5)`` = ``[k_x, k_eps, k_prev, j_x, j_eps]``.
+
+    Returns:
+      ``(x_next (B, M), x0 (B, M))``; matches ``ref.dpmpp_step``.
+    """
+    b, m = x.shape
+    # single full block (batched) — see modulate.py for the §Perf rationale.
+    grid = (1,)
+    vec_spec = pl.BlockSpec((b, m), lambda i: (0, 0))
+    coef_spec = pl.BlockSpec((b, 5), lambda i: (0, 0))
+
+    def kernel(x_ref, eps_ref, prev_ref, coef_ref, next_ref, x0_ref):
+        xv = x_ref[...]
+        ev = eps_ref[...]
+        pv = prev_ref[...]
+        c = coef_ref[...]
+        next_ref[...] = (c[:, 0][:, None] * xv + c[:, 1][:, None] * ev
+                         + c[:, 2][:, None] * pv)
+        x0_ref[...] = c[:, 3][:, None] * xv + c[:, 4][:, None] * ev
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[vec_spec, vec_spec, vec_spec, coef_spec],
+        out_specs=[vec_spec, vec_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m), x.dtype),
+            jax.ShapeDtypeStruct((b, m), x.dtype),
+        ],
+        interpret=True,
+    )(x, eps, x0_prev, coefs)

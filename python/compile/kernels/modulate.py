@@ -1,0 +1,42 @@
+"""L1 Pallas kernel: fused adaLN modulation.
+
+DiT applies ``x * (1 + scale) + shift`` after every LayerNorm, with the
+``(B, D)`` shift/scale vectors produced from the (time, text) conditioning.
+Fusing the broadcast + multiply-add into one VMEM pass removes two
+materializations of the ``(B, N, D)`` activation per block per step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def modulate(x: jax.Array, shift: jax.Array, scale: jax.Array) -> jax.Array:
+    """``x * (1 + scale) + shift``; ``x: (B, N, D)``, ``shift/scale: (B, D)``.
+
+    Matches ``ref.modulate`` exactly (same op order).
+    """
+    b, n, d = x.shape
+    # single full-array block: elementwise math vectorizes across the batch
+    # (a (b,) grid would serialize under the interpreter — see EXPERIMENTS
+    # §Perf); VMEM footprint is b*n*d*4 ≈ 768 KiB at bucket 16 for dit_b.
+    grid = (1,)
+    x_spec = pl.BlockSpec((b, n, d), lambda i: (0, 0, 0))
+    c_spec = pl.BlockSpec((b, d), lambda i: (0, 0))
+
+    def kernel(x_ref, shift_ref, scale_ref, o_ref):
+        xv = x_ref[...]          # (b, n, d)
+        sh = shift_ref[...]      # (b, d)
+        sc = scale_ref[...]
+        o_ref[...] = xv * (1.0 + sc[:, None, :]) + sh[:, None, :]
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[x_spec, c_spec, c_spec],
+        out_specs=x_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n, d), x.dtype),
+        interpret=True,
+    )(x, shift, scale)

@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness references: each kernel in
+``attention.py`` / ``modulate.py`` / ``cfg_combine.py`` / ``dpmpp.py`` must
+match its oracle here to tight tolerances (see ``python/tests/``), and the
+same math is re-implemented on the Rust side where the coordinator needs it
+(e.g. LINEARAG's affine combine).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Multi-head scaled dot-product attention.
+
+    Args:
+      q, k, v: ``(B, H, N, D)``.
+
+    Returns:
+      ``(B, H, N, D)`` attention output.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    logits = jnp.einsum("bhnd,bhmd->bhnm", q, k) * scale
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhnm,bhmd->bhnd", probs, v)
+
+
+def modulate(x: jax.Array, shift: jax.Array, scale: jax.Array) -> jax.Array:
+    """adaLN modulation: ``x * (1 + scale) + shift`` with per-sample vectors.
+
+    Args:
+      x: ``(B, N, D)`` token activations.
+      shift, scale: ``(B, D)`` conditioning vectors, broadcast over tokens.
+    """
+    return x * (1.0 + scale[:, None, :]) + shift[:, None, :]
+
+
+def cfg_combine(eps_c: jax.Array, eps_u: jax.Array, s: jax.Array):
+    """Classifier-free-guidance combine fused with the AG decision signal.
+
+    Implements Eq. (3) and Eq. (7) of the paper in a single pass:
+
+      eps_cfg = eps_u + s * (eps_c - eps_u)
+      gamma   = <eps_c, eps_u> / (|eps_c| |eps_u|)
+
+    Args:
+      eps_c, eps_u: ``(B, M)`` flattened conditional/unconditional scores.
+      s: ``(B,)`` per-request guidance strength.
+
+    Returns:
+      ``(eps_cfg (B, M), gamma (B,))``.
+    """
+    eps_cfg = eps_u + s[:, None] * (eps_c - eps_u)
+    num = jnp.sum(eps_c * eps_u, axis=-1)
+    den = jnp.linalg.norm(eps_c, axis=-1) * jnp.linalg.norm(eps_u, axis=-1)
+    gamma = num / jnp.maximum(den, 1e-12)
+    return eps_cfg, gamma
+
+
+def dpmpp_step(x: jax.Array, eps: jax.Array, x0_prev: jax.Array,
+               coefs: jax.Array):
+    """DPM-Solver++(2M) update expressed as an affine combination.
+
+    The per-step schedule scalars are folded (by the caller — python
+    reference sampler or the Rust coordinator) into five coefficients
+
+      ``coefs = [k_x, k_eps, k_prev, j_x, j_eps]``
+
+    such that
+
+      x_next = k_x * x + k_eps * eps + k_prev * x0_prev
+      x0     = j_x * x + j_eps * eps
+
+    The Euler (first) step is the special case ``k_prev == 0``.
+
+    Args:
+      x, eps, x0_prev: ``(B, M)``.
+      coefs: ``(B, 5)``.
+
+    Returns:
+      ``(x_next (B, M), x0 (B, M))``.
+    """
+    k_x, k_eps, k_prev, j_x, j_eps = (coefs[:, i][:, None] for i in range(5))
+    x_next = k_x * x + k_eps * eps + k_prev * x0_prev
+    x0 = j_x * x + j_eps * eps
+    return x_next, x0
+
+
+def linear_uncond_estimate(eps_c_hist: jax.Array, eps_u_hist: jax.Array,
+                           beta_c: jax.Array, beta_u: jax.Array) -> jax.Array:
+    """LINEARAG unconditional-score estimator (Eq. 8).
+
+    Args:
+      eps_c_hist: ``(Kc, M)`` conditional scores at steps T..t (most recent last).
+      eps_u_hist: ``(Ku, M)`` unconditional scores (true or estimated) at T..t+1.
+      beta_c: ``(Kc,)`` scalar regression coefficients.
+      beta_u: ``(Ku,)``.
+
+    Returns:
+      ``(M,)`` estimate of eps(x_t, null).
+    """
+    return beta_c @ eps_c_hist + beta_u @ eps_u_hist

@@ -1,0 +1,272 @@
+"""L2: DiT-style conditional denoiser (build-time JAX, lowered to HLO).
+
+A small Diffusion Transformer with adaLN-Zero conditioning on (time,
+compositional text tokens). The forward pass routes its hot-spots through the
+L1 Pallas kernels (``kernels.attention``, ``kernels.modulate``); everything
+lowers into one HLO module per (model, batch-bucket) via ``aot.py``.
+
+Three configs (DESIGN.md §3):
+  * ``dit_s``   — the LDM-512 analogue used for the NAS search,
+  * ``dit_b``   — the EMU-768 analogue used to show policy generalization,
+  * ``dit_edit``— the InstructPix2Pix analogue (image + instruction cond).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .kernels import attention as attn_kernel
+from .kernels import modulate as mod_kernel
+from .kernels import ref as ref_kernels
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class DiTConfig:
+    name: str
+    dim: int = 64
+    depth: int = 3
+    heads: int = 4
+    patch: int = 2
+    img: int = data.IMG
+    in_channels: int = data.CHANNELS    # 6 for the editing model (x || src)
+    out_channels: int = data.CHANNELS
+    mlp_ratio: int = 4
+    vocab_sizes: tuple = tuple(data.VOCAB_SIZES)
+
+    @property
+    def tokens(self) -> int:
+        return (self.img // self.patch) ** 2
+
+    @property
+    def patch_dim(self) -> int:
+        return self.in_channels * self.patch ** 2
+
+    @property
+    def out_patch_dim(self) -> int:
+        return self.out_channels * self.patch ** 2
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+
+DIT_S = DiTConfig(name="dit_s", dim=48, depth=2, heads=4)
+DIT_B = DiTConfig(name="dit_b", dim=64, depth=3, heads=4)
+DIT_EDIT = DiTConfig(name="dit_edit", dim=64, depth=3, heads=4,
+                     in_channels=2 * data.CHANNELS)
+
+CONFIGS = {c.name: c for c in (DIT_S, DIT_B, DIT_EDIT)}
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _linear_init(key, fan_in: int, fan_out: int, zero: bool = False) -> Params:
+    if zero:
+        w = jnp.zeros((fan_in, fan_out), jnp.float32)
+    else:
+        lim = 1.0 / math.sqrt(fan_in)
+        w = jax.random.uniform(key, (fan_in, fan_out), jnp.float32, -lim, lim)
+    return {"w": w, "b": jnp.zeros((fan_out,), jnp.float32)}
+
+
+def init_params(key: jax.Array, cfg: DiTConfig) -> Params:
+    """Initialize all weights (adaLN projections zero-init per DiT)."""
+    keys = iter(jax.random.split(key, 64))
+    d = cfg.dim
+    p: Params = {
+        "patch_embed": _linear_init(next(keys), cfg.patch_dim, d),
+        "pos_embed": jax.random.normal(next(keys), (cfg.tokens, d)) * 0.02,
+        "t_mlp1": _linear_init(next(keys), d, d),
+        "t_mlp2": _linear_init(next(keys), d, d),
+        "slot_embeds": [
+            jax.random.normal(next(keys), (v, d)) * 0.02
+            for v in cfg.vocab_sizes
+        ],
+        "final_adaln": _linear_init(next(keys), d, 2 * d, zero=True),
+        "final_out": _linear_init(next(keys), d, cfg.out_patch_dim, zero=True),
+        "blocks": [],
+    }
+    for _ in range(cfg.depth):
+        p["blocks"].append({
+            "adaln": _linear_init(next(keys), d, 6 * d, zero=True),
+            "qkv": _linear_init(next(keys), d, 3 * d),
+            "proj": _linear_init(next(keys), d, d),
+            "mlp1": _linear_init(next(keys), d, cfg.mlp_ratio * d),
+            "mlp2": _linear_init(next(keys), cfg.mlp_ratio * d, d),
+        })
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _linear(p: Params, x: jax.Array) -> jax.Array:
+    return x @ p["w"] + p["b"]
+
+
+def _layernorm(x: jax.Array) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-6)
+
+
+def timestep_embedding(t: jax.Array, dim: int) -> jax.Array:
+    """Sinusoidal embedding of continuous t in [0, 1] (scaled by 1000)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / half)
+    args = t[:, None] * 1000.0 * freqs[None, :]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def cond_embedding(p: Params, tokens: jax.Array) -> jax.Array:
+    """Sum of per-slot embeddings; all-null tokens = the unconditional input."""
+    embs = [p["slot_embeds"][i][tokens[:, i]] for i in range(tokens.shape[1])]
+    return sum(embs)
+
+
+def patchify(x: jax.Array, patch: int) -> jax.Array:
+    b, h, w, c = x.shape
+    gh, gw = h // patch, w // patch
+    x = x.reshape(b, gh, patch, gw, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, gh * gw, patch * patch * c)
+
+
+def unpatchify(x: jax.Array, patch: int, img: int, channels: int) -> jax.Array:
+    b, n, _ = x.shape
+    g = img // patch
+    x = x.reshape(b, g, g, patch, patch, channels)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, img, img, channels)
+
+
+def _block(bp: Params, x: jax.Array, c: jax.Array, cfg: DiTConfig,
+           use_pallas: bool) -> jax.Array:
+    attn = attn_kernel.attention if use_pallas else ref_kernels.attention
+    mod = mod_kernel.modulate if use_pallas else ref_kernels.modulate
+    b, n, d = x.shape
+    mods = _linear(bp["adaln"], c)  # (B, 6d)
+    sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mods, 6, axis=-1)
+    h = mod(_layernorm(x), sh1, sc1)
+    qkv = _linear(bp["qkv"], h).reshape(b, n, 3, cfg.heads, cfg.head_dim)
+    qkv = qkv.transpose(2, 0, 3, 1, 4)  # (3, B, H, N, Dh)
+    a = attn(qkv[0], qkv[1], qkv[2])
+    a = a.transpose(0, 2, 1, 3).reshape(b, n, d)
+    x = x + g1[:, None, :] * _linear(bp["proj"], a)
+    h = mod(_layernorm(x), sh2, sc2)
+    h = _linear(bp["mlp2"], jax.nn.gelu(_linear(bp["mlp1"], h)))
+    return x + g2[:, None, :] * h
+
+
+def forward(p: Params, cfg: DiTConfig, x: jax.Array, t: jax.Array,
+            tokens: jax.Array, use_pallas: bool = True) -> jax.Array:
+    """Denoiser forward: eps prediction.
+
+    Args:
+      x: ``(B, 16, 16, in_channels)`` noisy latent (editing model: ``x || src``).
+      t: ``(B,)`` continuous time in [0, 1].
+      tokens: ``(B, 4)`` slot tokens (0 = null → unconditional).
+      use_pallas: route hot-spots through the L1 Pallas kernels (the AOT /
+        inference path). Training passes ``False`` to use the pure-jnp
+        oracles instead — Pallas interpret-mode has no reverse-mode autodiff
+        — and ``python/tests/test_model.py`` pins the two paths together.
+
+    Returns:
+      ``(B, 16, 16, out_channels)`` predicted noise.
+    """
+    c = _linear(p["t_mlp2"], jax.nn.silu(
+        _linear(p["t_mlp1"], timestep_embedding(t, cfg.dim))))
+    c = jax.nn.silu(c + cond_embedding(p, tokens))
+    h = _linear(p["patch_embed"], patchify(x, cfg.patch)) + p["pos_embed"]
+    for bp in p["blocks"]:
+        h = _block(bp, h, c, cfg, use_pallas)
+    sh, sc = jnp.split(_linear(p["final_adaln"], c), 2, axis=-1)
+    mod = mod_kernel.modulate if use_pallas else ref_kernels.modulate
+    h = mod(_layernorm(h), sh, sc)
+    out = _linear(p["final_out"], h)
+    return unpatchify(out, cfg.patch, cfg.img, cfg.out_channels)
+
+
+def eps_fn(p: Params, cfg: DiTConfig, use_pallas: bool = True):
+    """Bind params → the ``EpsFn`` signature used by diffusion.sample."""
+    def fn(x, t, tokens):
+        return forward(p, cfg, x, t, tokens, use_pallas=use_pallas)
+    return fn
+
+
+def edit_eps_fn(p: Params, cfg: DiTConfig, src: jax.Array):
+    """Editing denoiser with a fixed source-image conditioning channel.
+
+    ``src`` of zeros is the image-unconditional input (Eq. 9's ∅ image).
+    """
+    def fn(x, t, tokens):
+        return forward(p, cfg, jnp.concatenate([x, src], axis=-1), t, tokens)
+    return fn
+
+
+def param_count(p: Params) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(p))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint (de)serialization — flat npz with path-encoded keys.
+# ---------------------------------------------------------------------------
+
+def save_params(path: str, p: Params) -> None:
+    flat = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                rec(f"{prefix}/{k}", v)
+        elif isinstance(node, list):
+            for i, v in enumerate(node):
+                rec(f"{prefix}/{i}", v)
+        else:
+            flat[prefix] = np.asarray(node)
+
+    rec("p", p)
+    np.savez(path, **flat)
+
+
+def load_params(path: str) -> Params:
+    flat = dict(np.load(path))
+    root: Params = {}
+    for key in sorted(flat):
+        parts = key.split("/")[1:]
+        node = root
+        for i, part in enumerate(parts[:-1]):
+            nxt = parts[i + 1]
+            default: Any = [] if nxt.isdigit() else {}
+            if part.isdigit():
+                idx = int(part)
+                while len(node) <= idx:
+                    node.append(None)
+                if node[idx] is None:
+                    node[idx] = default
+                node = node[idx]
+            else:
+                node = node.setdefault(part, default)
+        last = parts[-1]
+        arr = jnp.asarray(flat[key])
+        if last.isdigit():
+            idx = int(last)
+            while len(node) <= idx:
+                node.append(None)
+            node[idx] = arr
+        else:
+            node[last] = arr
+    return root

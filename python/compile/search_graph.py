@@ -1,0 +1,127 @@
+"""L2: the differentiable NAS search graph (paper §4, Eqs. 5-6).
+
+Unrolls the student diffusion process with per-step *soft* guidance choices
+and produces ``(loss, grad_alpha, mse, soft_nfe)`` in a single lowered HLO
+module, so the Rust coordinator can drive the DARTS-style search with its own
+Lion optimizer (``rust/src/search/``) — python stays off the optimization
+loop.
+
+Per-step options (paper §4.1, k = 3 guidance strengths):
+
+    index  option                    cost (NFEs)
+    0      unconditional eps(x, ∅)   1
+    1      conditional   eps(x, c)   1
+    2      cfg, s = 0.5 * s_base     2
+    3      cfg, s = 1.0 * s_base     2
+    4      cfg, s = 2.0 * s_base     2
+
+All five options are affine in the two network evaluations (eps_c, eps_u), so
+each unrolled step costs 2 NFEs at *search* time regardless of the soft
+weighting — the same trick the paper exploits.
+
+The teacher trajectory (plain CFG at s_base, Eq. 4) is computed inside the
+same module under ``stop_gradient``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import diffusion, model
+
+NUM_OPTIONS = 5
+OPTION_NAMES = ["uncond", "cond", "cfg_half", "cfg_base", "cfg_double"]
+OPTION_COSTS = np.array([1.0, 1.0, 2.0, 2.0, 2.0], dtype=np.float32)
+SCALE_FACTORS = [0.5, 1.0, 2.0]
+
+
+def _flat(x):
+    return x.reshape(x.shape[0], -1)
+
+
+def _options(eps_c, eps_u, s_base):
+    """Stack the 5 option scores: (5, B, M); all affine in (eps_c, eps_u)."""
+    opts = [eps_u, eps_c]
+    for a in SCALE_FACTORS:
+        opts.append(eps_u + a * s_base * (eps_c - eps_u))
+    return jnp.stack(opts)
+
+
+def unroll(eps_fn, x_t, tokens, uncond_tokens, num_steps, mix_fn):
+    """Unrolled DPM++(2M) trajectory; ``mix_fn(i, eps_c, eps_u) -> eps``.
+
+    Returns the final data prediction x0.
+    """
+    b = x_t.shape[0]
+    shape = x_t.shape
+    ts = diffusion.timesteps(num_steps)
+    x = _flat(x_t)
+    x0_prev = jnp.zeros_like(x)
+    for i in range(num_steps):
+        tv = jnp.full((b,), float(ts[i]), x.dtype)
+        eps_c = _flat(eps_fn(x.reshape(shape), tv, tokens))
+        eps_u = _flat(eps_fn(x.reshape(shape), tv, uncond_tokens))
+        e = mix_fn(i, eps_c, eps_u)
+        c = jnp.asarray(diffusion.fold_coefs(ts[i], ts[i + 1],
+                                             ts[i - 1] if i else None),
+                        x.dtype)
+        x, x0_prev = (c[0] * x + c[1] * e + c[2] * x0_prev,
+                      c[3] * x + c[4] * e)
+    return x0_prev
+
+
+def search_loss(alpha, gumbel, x_t, tokens, params, cfg, *, num_steps,
+                s_base, lam_cost, cost_target, tau=1.0):
+    """Eq. 6: replication distance + Gumbel-softmax NFE-cost penalty.
+
+    Args:
+      alpha: ``(num_steps, 5)`` architecture scores.
+      gumbel: ``(num_steps, 5)`` pre-sampled Gumbel(0,1) noise (passed in so
+        the lowered module is deterministic; Rust supplies it per iteration).
+      x_t: ``(B, H, W, C)`` starting noise.
+      tokens: ``(B, 4)`` condition tokens.
+
+    Returns:
+      ``(loss, (replication_mse, soft_nfe))``.
+    """
+    uncond = jnp.zeros_like(tokens)
+    eps = model.eps_fn(params, cfg, use_pallas=False)
+
+    def student_mix(i, eps_c, eps_u):
+        w = jax.nn.softmax(alpha[i])                       # Eq. 5
+        return jnp.einsum("o,obm->bm", w, _options(eps_c, eps_u, s_base))
+
+    def teacher_mix(i, eps_c, eps_u):
+        return eps_u + s_base * (eps_c - eps_u)            # Eq. 3, f_t = cfg
+
+    x0_student = unroll(eps, x_t, tokens, uncond, num_steps, student_mix)
+    x0_teacher = jax.lax.stop_gradient(
+        unroll(eps, x_t, tokens, uncond, num_steps, teacher_mix))
+    mse = jnp.mean((x0_student - x0_teacher) ** 2)
+
+    # Differentiable NFE proxy: Gumbel-softmax sample of the per-step choice,
+    # weighted by per-option cost, ReLU-offset to the target budget.
+    gs = jax.nn.softmax((alpha + gumbel) / tau, axis=-1)   # (T, 5)
+    soft_nfe = jnp.sum(gs @ jnp.asarray(OPTION_COSTS))
+    cost_pen = jax.nn.relu(soft_nfe - cost_target)
+    return mse + lam_cost * cost_pen, (mse, soft_nfe)
+
+
+def build_search_fn(params, cfg, *, num_steps=20, s_base=7.5,
+                    lam_cost=0.02, cost_target=30.0):
+    """Returns a jittable fn: ``(alpha, gumbel, x_t, tokens) →
+    (loss, grad_alpha, mse, soft_nfe)`` — the module AOT'd for Rust."""
+
+    def fn(alpha, gumbel, x_t, tokens):
+        (loss, (mse, nfe)), grad = jax.value_and_grad(
+            functools.partial(search_loss, num_steps=num_steps,
+                              s_base=s_base, lam_cost=lam_cost,
+                              cost_target=cost_target),
+            has_aux=True)(alpha, gumbel, x_t, tokens, params, cfg)
+        return loss, grad, mse, nfe
+
+    return fn

@@ -1,0 +1,174 @@
+"""Build-time training of the denoiser checkpoints (DDPM eps-objective).
+
+Trains the three DiT configs on the procedural shapes corpus with
+classifier-free-guidance dropout (10% of conditionings nulled, per Ho &
+Salimans), using a hand-rolled Adam (the image has no optax). Checkpoints are
+cached under ``artifacts/``; ``make artifacts`` skips training when they
+exist.
+
+Usage::
+
+    python -m compile.train --model dit_s --steps 3000 --out ../artifacts
+    python -m compile.train --all --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, diffusion, model
+
+COND_DROPOUT = 0.15
+
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": zeros, "step": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    step = state["step"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                               state["v"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps),
+        params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# DDPM loss + train step
+# ---------------------------------------------------------------------------
+
+def ddpm_loss(params, cfg, key, x0, tokens):
+    """eps-prediction MSE at uniformly sampled t, with CFG dropout."""
+    b = x0.shape[0]
+    k_t, k_eps, k_drop = jax.random.split(key, 3)
+    # mild low-t oversampling (u^1.3): the unconditional head must be
+    # accurate late in the trajectory for the paper's gamma_t -> 1
+    # convergence to emerge (see DESIGN.md §3).
+    t = jax.random.uniform(k_t, (b,), minval=1e-3, maxval=1.0) ** 1.3
+    alpha, sigma = diffusion.alpha_sigma(t)
+    eps = jax.random.normal(k_eps, x0.shape)
+    x_t = alpha[:, None, None, None] * x0 + sigma[:, None, None, None] * eps
+    drop = jax.random.bernoulli(k_drop, COND_DROPOUT, (b,))
+    toks = jnp.where(drop[:, None], jnp.zeros_like(tokens), tokens)
+    pred = model.forward(params, cfg, x_t, t, toks, use_pallas=False)
+    return jnp.mean((pred - eps) ** 2)
+
+
+def edit_loss(params, cfg, key, src, instr, tgt):
+    """Editing objective: denoise the target conditioned on (src, instr).
+
+    Independent dropout of the instruction tokens and the source image
+    reproduces the InstructPix2Pix conditioning structure that Eq. 9 needs
+    (evals at (c, I), (∅, I), (∅, ∅))."""
+    b = tgt.shape[0]
+    k_t, k_eps, k_di, k_ds = jax.random.split(key, 4)
+    t = jax.random.uniform(k_t, (b,), minval=1e-3, maxval=1.0)
+    alpha, sigma = diffusion.alpha_sigma(t)
+    eps = jax.random.normal(k_eps, tgt.shape)
+    x_t = alpha[:, None, None, None] * tgt + sigma[:, None, None, None] * eps
+    drop_i = jax.random.bernoulli(k_di, COND_DROPOUT, (b,))
+    drop_s = jax.random.bernoulli(k_ds, COND_DROPOUT, (b,))
+    toks = jnp.where(drop_i[:, None], jnp.zeros_like(instr), instr)
+    src_in = jnp.where(drop_s[:, None, None, None], jnp.zeros_like(src), src)
+    pred = model.forward(params, cfg, jnp.concatenate([x_t, src_in], axis=-1),
+                         t, toks, use_pallas=False)
+    return jnp.mean((pred - eps) ** 2)
+
+
+def train(cfg: model.DiTConfig, steps: int, batch: int = 64,
+          lr: float = 2e-3, seed: int = 0, log_every: int = 200):
+    """Train one config with cosine LR decay; returns (params, history)."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(key, cfg)
+    opt = adam_init(params)
+    is_edit = cfg.in_channels != data.CHANNELS
+
+    if is_edit:
+        @jax.jit
+        def step_fn(params, opt, key, lr_t, src, instr, tgt):
+            loss, grads = jax.value_and_grad(edit_loss)(
+                params, cfg, key, src, instr, tgt)
+            params, opt = adam_update(params, grads, opt, lr_t)
+            return params, opt, loss
+    else:
+        @jax.jit
+        def step_fn(params, opt, key, lr_t, x0, tokens):
+            loss, grads = jax.value_and_grad(ddpm_loss)(
+                params, cfg, key, x0, tokens)
+            params, opt = adam_update(params, grads, opt, lr_t)
+            return params, opt, loss
+
+    history = []
+    t0 = time.time()
+    import math as _math
+    for i in range(steps):
+        key, sub = jax.random.split(key)
+        # cosine decay to 5% of the base LR
+        lr_t = lr * (0.05 + 0.95 * 0.5 *
+                     (1.0 + _math.cos(_math.pi * i / max(steps - 1, 1))))
+        if is_edit:
+            src, instr, tgt = data.make_edit_batch(rng, batch)
+            params, opt, loss = step_fn(params, opt, sub, lr_t,
+                                        jnp.asarray(src), jnp.asarray(instr),
+                                        jnp.asarray(tgt))
+        else:
+            imgs, toks = data.make_batch(rng, batch)
+            params, opt, loss = step_fn(params, opt, sub, lr_t,
+                                        jnp.asarray(imgs), jnp.asarray(toks))
+        if i % log_every == 0 or i == steps - 1:
+            history.append((i, float(loss)))
+            print(f"[{cfg.name}] step {i:5d} loss {float(loss):.5f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    return params, history
+
+
+def ckpt_path(out_dir: str, name: str) -> str:
+    return os.path.join(out_dir, f"ckpt_{name}.npz")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", choices=list(model.CONFIGS), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--steps", type=int, default=3000)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    names = list(model.CONFIGS) if args.all else [args.model or "dit_b"]
+    os.makedirs(args.out, exist_ok=True)
+    for name in names:
+        path = ckpt_path(args.out, name)
+        if os.path.exists(path) and not args.force:
+            print(f"[{name}] checkpoint exists at {path}, skipping")
+            continue
+        cfg = model.CONFIGS[name]
+        params, hist = train(cfg, args.steps, args.batch)
+        model.save_params(path, params)
+        n = model.param_count(params)
+        print(f"[{name}] saved {n} params -> {path}; "
+              f"final loss {hist[-1][1]:.5f}")
+
+
+if __name__ == "__main__":
+    main()

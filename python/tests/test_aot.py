@@ -1,0 +1,76 @@
+"""AOT path: HLO-text lowering sanity (the interchange contract with Rust)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, data, diffusion, model
+
+
+def test_to_hlo_text_basic():
+    def fn(x, y):
+        return (x @ y + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "ENTRY" in text
+    assert "f32[2,2]" in text
+
+
+def test_lower_guide_contains_both_outputs():
+    text = aot.to_hlo_text(aot.lower_guide(2))
+    assert "ENTRY" in text
+    # tuple of (eps_cfg (2,768), gamma (2,))
+    assert "f32[2,768]" in text and "f32[2]" in text
+
+
+def test_lower_solver_shapes():
+    text = aot.to_hlo_text(aot.lower_solver(4))
+    assert "f32[4,768]" in text and "f32[4,5]" in text
+
+
+def test_lower_denoiser_tiny():
+    cfg = model.DIT_S
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    text = aot.to_hlo_text(aot.lower_denoiser(params, cfg, 1))
+    assert "ENTRY" in text
+    assert "f32[1,16,16,3]" in text
+    assert "s32[1,4]" in text
+
+
+def test_manifest_schedule_parity_table():
+    m = aot.build_manifest({}, {})
+    ts = m["schedule"]["timesteps_20"]
+    assert len(ts) == 21
+    table = m["schedule"]["coefs_20"]
+    assert len(table) == 20 and len(table[0]) == 5
+    want = diffusion.coef_table(20)
+    np.testing.assert_allclose(np.asarray(table), want, rtol=1e-12)
+    # manifest must be JSON-serializable as-is
+    json.dumps(m)
+
+
+def test_manifest_vocab_matches_data():
+    m = aot.build_manifest({}, {})
+    assert m["vocab"]["shapes"] == data.SHAPES
+    assert m["vocab"]["colors"] == data.COLORS
+    assert m["flat_dim"] == 768
+
+
+@pytest.mark.skipif(not os.path.exists(
+    os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built")
+def test_built_artifacts_consistent():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        m = json.load(f)
+    for name, buckets in m["artifacts"]["denoisers"].items():
+        for b, fname in buckets.items():
+            path = os.path.join(root, fname)
+            assert os.path.exists(path), path
+            head = open(path).read(4096)
+            assert "HloModule" in head

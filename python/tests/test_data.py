@@ -1,0 +1,80 @@
+"""Procedural corpus: rendering + token encoding invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data
+
+
+def test_prompt_space_size():
+    assert len(data.ALL_PROMPTS) == 4 * 5 * 5 * 2
+
+
+def test_tokens_one_based_with_null_reserved():
+    for p in data.ALL_PROMPTS[:20]:
+        t = p.tokens()
+        assert t.shape == (4,)
+        assert np.all(t >= 1)
+        for slot, v in enumerate(t):
+            assert v < data.VOCAB_SIZES[slot]
+    assert np.all(data.NULL_TOKENS == 0)
+
+
+def test_render_deterministic_without_rng():
+    p = data.ALL_PROMPTS[17]
+    a = data.render(p)
+    b = data.render(p)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_render_range_and_shape():
+    for p in data.ALL_PROMPTS[::37]:
+        img = data.render(p)
+        assert img.shape == (16, 16, 3)
+        assert img.min() >= -1.0 and img.max() <= 1.0
+
+
+def test_render_color_dominates_shape_region():
+    # a large red circle at the center: red channel must dominate mid-pixels.
+    p = data.Prompt(shape=0, color=0, position=0, size=1)
+    img = data.render(p)
+    center = img[7:9, 7:9]
+    assert center[..., 0].mean() > 0.5          # red high
+    assert center[..., 1].mean() < 0.0          # green low (in [-1,1])
+
+
+def test_render_positions_distinct():
+    imgs = [data.render(data.Prompt(0, 0, pos, 1)) for pos in range(5)]
+    for i in range(5):
+        for j in range(i + 1, 5):
+            assert np.abs(imgs[i] - imgs[j]).max() > 0.5
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 20), batch=st.integers(1, 16))
+def test_make_batch_shapes(seed, batch):
+    rng = np.random.default_rng(seed)
+    imgs, toks = data.make_batch(rng, batch)
+    assert imgs.shape == (batch, 16, 16, 3)
+    assert toks.shape == (batch, 4)
+    assert imgs.dtype == np.float32 and toks.dtype == np.int32
+
+
+def test_edit_example_changes_exactly_one_slot():
+    rng = np.random.default_rng(3)
+    for _ in range(50):
+        src, instr, tgt = data.make_edit_example(rng)
+        assert src.shape == tgt.shape == (16, 16, 3)
+        changed = instr != 0
+        assert changed.sum() == 1
+        # the instruction token must be a valid (non-null) attribute value
+        slot = int(np.argmax(changed))
+        assert 1 <= instr[slot] < data.VOCAB_SIZES[slot]
+
+
+def test_edit_batch_shapes():
+    rng = np.random.default_rng(4)
+    src, instr, tgt = data.make_edit_batch(rng, 8)
+    assert src.shape == tgt.shape == (8, 16, 16, 3)
+    assert instr.shape == (8, 4)

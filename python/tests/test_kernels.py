@@ -1,0 +1,149 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and guidance strengths / coefficient magnitudes)
+so the kernels are pinned to the refs across the whole envelope the
+coordinator can request, not just the default model shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (attention as attn_k, cfg_combine as cfg_k,
+                             dpmpp as dpmpp_k, modulate as mod_k, ref)
+
+TOL = dict(rtol=2e-4, atol=2e-5)
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 4), h=st.integers(1, 4),
+       n=st.sampled_from([32, 64, 128]), d=st.sampled_from([8, 12, 16]),
+       seed=st.integers(0, 2 ** 16))
+def test_attention_matches_ref(b, h, n, d, seed):
+    q = _rand(seed, (b, h, n, d))
+    k = _rand(seed + 1, (b, h, n, d))
+    v = _rand(seed + 2, (b, h, n, d))
+    np.testing.assert_allclose(attn_k.attention(q, k, v),
+                               ref.attention(q, k, v), **TOL)
+
+
+def test_attention_block_tiling_exercised():
+    # n=64 with BLOCK_Q=32 → 2 query tiles per (b, h); result must still match.
+    assert attn_k.BLOCK_Q < 64
+    q, k, v = (_rand(i, (2, 4, 64, 16)) for i in range(3))
+    np.testing.assert_allclose(attn_k.attention(q, k, v),
+                               ref.attention(q, k, v), **TOL)
+
+
+def test_attention_softmax_rows_convex():
+    # identity value → output rows must be convex combinations of v rows.
+    q = _rand(0, (1, 1, 32, 8), scale=3.0)
+    k = _rand(1, (1, 1, 32, 8), scale=3.0)
+    v = jnp.eye(32, 8)[None, None]
+    out = np.asarray(attn_k.attention(q, k, v))
+    assert out.min() >= -1e-6 and out.max() <= 1.0 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# modulate
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 8), n=st.sampled_from([16, 64]),
+       d=st.sampled_from([32, 48, 64]), seed=st.integers(0, 2 ** 16))
+def test_modulate_matches_ref(b, n, d, seed):
+    x = _rand(seed, (b, n, d))
+    sh = _rand(seed + 1, (b, d))
+    sc = _rand(seed + 2, (b, d))
+    np.testing.assert_allclose(mod_k.modulate(x, sh, sc),
+                               ref.modulate(x, sh, sc), **TOL)
+
+
+def test_modulate_zero_cond_is_identity():
+    x = _rand(0, (2, 64, 48))
+    z = jnp.zeros((2, 48))
+    np.testing.assert_allclose(mod_k.modulate(x, z, z), x, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# cfg_combine
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 8), m=st.sampled_from([64, 768, 1024]),
+       s=st.floats(0.0, 16.0), seed=st.integers(0, 2 ** 16))
+def test_cfg_combine_matches_ref(b, m, s, seed):
+    ec = _rand(seed, (b, m))
+    eu = _rand(seed + 1, (b, m))
+    sv = jnp.full((b,), jnp.float32(s))
+    got_e, got_g = cfg_k.cfg_combine(ec, eu, sv)
+    want_e, want_g = ref.cfg_combine(ec, eu, sv)
+    np.testing.assert_allclose(got_e, want_e, **TOL)
+    np.testing.assert_allclose(got_g, want_g, **TOL)
+
+
+def test_cfg_combine_s1_is_conditional():
+    ec, eu = _rand(0, (3, 768)), _rand(1, (3, 768))
+    out, _ = cfg_k.cfg_combine(ec, eu, jnp.ones((3,)))
+    np.testing.assert_allclose(out, ec, rtol=1e-5, atol=1e-6)
+
+
+def test_cfg_combine_gamma_bounds_and_self_similarity():
+    ec = _rand(0, (4, 768))
+    out, gamma = cfg_k.cfg_combine(ec, ec, jnp.full((4,), 7.5))
+    np.testing.assert_allclose(gamma, 1.0, atol=1e-5)
+    np.testing.assert_allclose(out, ec, rtol=1e-4, atol=1e-5)
+    _, g2 = cfg_k.cfg_combine(ec, -ec, jnp.full((4,), 7.5))
+    np.testing.assert_allclose(g2, -1.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dpmpp solver step
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 8), m=st.sampled_from([64, 768]),
+       seed=st.integers(0, 2 ** 16))
+def test_dpmpp_matches_ref(b, m, seed):
+    x = _rand(seed, (b, m))
+    e = _rand(seed + 1, (b, m))
+    p = _rand(seed + 2, (b, m))
+    c = _rand(seed + 3, (b, 5), scale=2.0)
+    got_x, got_0 = dpmpp_k.dpmpp_step(x, e, p, c)
+    want_x, want_0 = ref.dpmpp_step(x, e, p, c)
+    np.testing.assert_allclose(got_x, want_x, **TOL)
+    np.testing.assert_allclose(got_0, want_0, **TOL)
+
+
+def test_dpmpp_euler_ignores_prev():
+    # k_prev = 0 → x0_prev must not affect the update.
+    x, e = _rand(0, (2, 768)), _rand(1, (2, 768))
+    c = jnp.tile(jnp.asarray([0.9, -0.1, 0.0, 1.1, -0.4])[None], (2, 1))
+    a1, _ = dpmpp_k.dpmpp_step(x, e, jnp.zeros_like(x), c)
+    a2, _ = dpmpp_k.dpmpp_step(x, e, _rand(2, (2, 768)) * 100, c)
+    np.testing.assert_allclose(a1, a2, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# linear (LINEARAG) estimator ref
+# ---------------------------------------------------------------------------
+
+def test_linear_uncond_estimate_exact_recovery():
+    # If eps_u is exactly a known affine combination, the estimator recovers it.
+    hist_c = _rand(0, (3, 64))
+    hist_u = _rand(1, (2, 64))
+    bc = jnp.asarray([0.2, -0.5, 1.1])
+    bu = jnp.asarray([0.7, 0.3])
+    target = bc @ hist_c + bu @ hist_u
+    got = ref.linear_uncond_estimate(hist_c, hist_u, bc, bu)
+    np.testing.assert_allclose(got, target, rtol=1e-5)

@@ -1,0 +1,108 @@
+"""NAS search graph: gradient correctness + objective semantics."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, diffusion, model, search_graph
+
+STEPS = 3  # tiny unroll for finite differences
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = model.DIT_S
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key, cfg)
+    # perturb so the zero-init heads produce signal
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(jax.random.PRNGKey(1), len(leaves))
+    leaves = [l + 0.05 * jax.random.normal(k, l.shape)
+              for l, k in zip(leaves, keys)]
+    params = jax.tree_util.tree_unflatten(treedef, leaves)
+    x_t = jax.random.normal(jax.random.PRNGKey(2), (2, 16, 16, 3))
+    toks = jnp.asarray(np.stack([p.tokens() for p in
+                                 data.ALL_PROMPTS[:2]]))
+    return cfg, params, x_t, toks
+
+
+def _loss_fn(cfg, params, **kw):
+    defaults = dict(num_steps=STEPS, s_base=7.5, lam_cost=0.02,
+                    cost_target=4.0)
+    defaults.update(kw)
+    return functools.partial(search_graph.search_loss, params=params,
+                             cfg=cfg, **defaults)
+
+
+def test_option_stack_affine_identities():
+    ec = jax.random.normal(jax.random.PRNGKey(0), (2, 8))
+    eu = jax.random.normal(jax.random.PRNGKey(1), (2, 8))
+    opts = search_graph._options(ec, eu, 7.5)
+    assert opts.shape == (5, 2, 8)
+    np.testing.assert_allclose(opts[0], eu)
+    np.testing.assert_allclose(opts[1], ec)
+    np.testing.assert_allclose(opts[3], eu + 7.5 * (ec - eu), rtol=1e-6)
+
+
+def test_gradient_matches_finite_differences(setup):
+    cfg, params, x_t, toks = setup
+    loss = _loss_fn(cfg, params)
+    alpha = 0.3 * jax.random.normal(jax.random.PRNGKey(3),
+                                    (STEPS, search_graph.NUM_OPTIONS))
+    gumbel = jnp.zeros_like(alpha)
+
+    def f(a):
+        return loss(a, gumbel, x_t, toks)[0]
+
+    grad = jax.grad(f)(alpha)
+    eps = 1e-3
+    for (i, j) in [(0, 0), (1, 3), (2, 4)]:
+        d = jnp.zeros_like(alpha).at[i, j].set(eps)
+        fd = (float(f(alpha + d)) - float(f(alpha - d))) / (2 * eps)
+        assert abs(fd - float(grad[i, j])) < 5e-3 * max(1.0, abs(fd)), \
+            (i, j, fd, float(grad[i, j]))
+
+
+def test_pure_cfg_alpha_replicates_teacher(setup):
+    # alpha concentrated on option 3 (cfg at s_base) → student == teacher.
+    cfg, params, x_t, toks = setup
+    loss = _loss_fn(cfg, params, lam_cost=0.0)
+    alpha = jnp.full((STEPS, 5), -40.0).at[:, 3].set(40.0)
+    val, (mse, _) = loss(alpha, jnp.zeros_like(alpha), x_t, toks)
+    assert float(mse) < 1e-8, float(mse)
+
+
+def test_cost_penalty_kicks_in_above_target(setup):
+    cfg, params, x_t, toks = setup
+    alpha_cheap = jnp.full((STEPS, 5), -40.0).at[:, 1].set(40.0)  # all cond
+    alpha_rich = jnp.full((STEPS, 5), -40.0).at[:, 3].set(40.0)   # all cfg
+    gum = jnp.zeros_like(alpha_cheap)
+    # target below the all-CFG cost (2*STEPS) but above all-cond (STEPS)
+    loss = _loss_fn(cfg, params, lam_cost=1.0, cost_target=STEPS + 0.5)
+    _, (_, nfe_cheap) = loss(alpha_cheap, gum, x_t, toks)
+    _, (_, nfe_rich) = loss(alpha_rich, gum, x_t, toks)
+    assert float(nfe_cheap) == pytest.approx(STEPS, abs=1e-3)
+    assert float(nfe_rich) == pytest.approx(2 * STEPS, abs=1e-3)
+
+
+def test_soft_nfe_grad_pushes_toward_cheap_options(setup):
+    cfg, params, x_t, toks = setup
+    loss = _loss_fn(cfg, params, lam_cost=10.0, cost_target=0.0)
+    alpha = jnp.zeros((STEPS, 5))
+    grad = jax.grad(lambda a: loss(a, jnp.zeros_like(a), x_t, toks)[0])(alpha)
+    # cost gradient must favor (make more positive) the expensive options.
+    assert float(grad[:, 3].mean()) > float(grad[:, 1].mean())
+
+
+def test_build_search_fn_outputs(setup):
+    cfg, params, x_t, toks = setup
+    fn = search_graph.build_search_fn(params, cfg, num_steps=STEPS,
+                                      cost_target=4.0)
+    alpha = jnp.zeros((STEPS, 5))
+    loss, grad, mse, nfe = jax.jit(fn)(alpha, alpha, x_t, toks)
+    assert grad.shape == (STEPS, 5)
+    assert np.isfinite(float(loss)) and np.isfinite(float(mse))
+    assert 0.0 < float(nfe) <= 2 * STEPS + 1e-3

@@ -1,0 +1,66 @@
+//! **Figure 15 / Appendix C** — per-step OLS errors: MSE between the
+//! Eq. 8 linear estimator ε̂(x_t, ∅) and the true unconditional score, on
+//! the training trajectories and a held-out test set (paper: 200 train /
+//! 100 test paths from a 20-step CFG model).
+//!
+//! Run: `cargo bench --bench fig15_ols_errors -- --train 200 --test 100`
+
+use adaptive_guidance::coordinator::engine::Engine;
+use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::eval::harness::{print_table, run_policy, RunSpec};
+use adaptive_guidance::ols;
+use adaptive_guidance::prompts;
+use adaptive_guidance::runtime;
+use adaptive_guidance::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let Some(be) = runtime::try_load_default() else { return };
+    let n_train = args.usize("train", 120);
+    let n_test = args.usize("test", 60);
+    let steps = args.usize("steps", 20);
+    let s = args.f64("guidance", 7.5) as f32;
+    let model = args.get_or("model", "dit_b").to_owned();
+
+    println!(
+        "# Fig. 15 — per-step OLS MSE ({} train / {} test trajectories, model={model})\n",
+        n_train, n_test
+    );
+
+    let mut engine = Engine::new(be);
+    let mut spec = RunSpec::new(&model, steps);
+    spec.record_trajectory = true;
+    spec.seed_base = 10_000;
+    let ps = prompts::eval_set(n_train + n_test, 11);
+    eprintln!("generating {} recorded trajectories…", n_train + n_test);
+    let run = run_policy(&mut engine, &ps, &spec, GuidancePolicy::Cfg { s }).unwrap();
+    let trajs: Vec<_> = run
+        .completions
+        .into_iter()
+        .map(|c| c.trajectory.unwrap())
+        .collect();
+    let (train, test) = trajs.split_at(n_train);
+
+    let coeffs = ols::fit(train, 1e-4);
+    let train_mse = ols::eval_mse(&coeffs, train);
+    let test_mse = ols::eval_mse(&coeffs, test);
+
+    let rows: Vec<Vec<String>> = (0..steps)
+        .map(|t| {
+            vec![
+                format!("{t}"),
+                format!("{:.6}", train_mse[t]),
+                format!("{:.6}", test_mse[t]),
+                format!("{:.2}", test_mse[t] / train_mse[t].max(1e-12)),
+            ]
+        })
+        .collect();
+    print_table(&["step", "train MSE", "test MSE", "test/train"], &rows);
+    let tm: f64 = test_mse.iter().sum::<f64>() / steps as f64;
+    println!(
+        "\nmean test MSE {tm:.6} — the paper's observation: the estimator is \
+         accurate enough to replace unconditional NFEs, and train/test curves \
+         overlap (no overfitting despite {} scalar coefficients/step max).",
+        2 * steps - 1
+    );
+}

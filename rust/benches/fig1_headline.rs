@@ -1,0 +1,80 @@
+//! **Figure 1** (headline) + the latency footnote — the cost axis of the
+//! paper's claims on this testbed:
+//!   * CFG ≈ 2× the latency/NFEs of a guidance-distilled model (CondOnly),
+//!   * AG recovers ~50% of GD's speed-up, training-free,
+//!   * AG beats the naive step-reduction at matched NFEs.
+//!
+//! Run: `cargo bench --bench fig1_headline -- --n 64 --gamma-bar 0.9995`
+
+use adaptive_guidance::coordinator::engine::Engine;
+use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::eval::harness::{mean_std, print_table, run_policy, ssim_series, RunSpec};
+use adaptive_guidance::prompts;
+use adaptive_guidance::runtime;
+use adaptive_guidance::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let Some(be) = runtime::try_load_default() else { return };
+    let img = be.manifest.img;
+    let n = args.usize("n", 32);
+    let steps = args.usize("steps", 20);
+    let s = args.f64("guidance", 7.5) as f32;
+    let gamma_bar = args.f64("gamma-bar", 0.9988);
+    let model = args.get_or("model", "dit_b");
+
+    println!("# Fig. 1 — headline comparison (model={model}, {n} prompts, T={steps})\n");
+
+    let ps = prompts::eval_set(n, 42);
+    let spec = RunSpec::new(model, steps);
+    let mut engine = Engine::new(be);
+
+    let cfg = run_policy(&mut engine, &ps, &spec, GuidancePolicy::Cfg { s }).unwrap();
+    let ag = run_policy(&mut engine, &ps, &spec, GuidancePolicy::Ag { s, gamma_bar }).unwrap();
+    let gd = run_policy(&mut engine, &ps, &spec, GuidancePolicy::CondOnly).unwrap();
+    // naive reduction: CFG with fewer steps so total NFEs ≈ AG's
+    let naive_steps = ((ag.mean_nfes() / 2.0).round() as usize).clamp(2, steps);
+    let naive_spec = RunSpec::new(model, naive_steps);
+    let naive = run_policy(&mut engine, &ps, &naive_spec, GuidancePolicy::Cfg { s }).unwrap();
+
+    let rows: Vec<Vec<String>> = [
+        ("CFG (baseline)", &cfg),
+        (&format!("AG γ̄={gamma_bar}") as &str, &ag),
+        ("GD proxy (cond-only)", &gd),
+        (&format!("naive CFG T={naive_steps}"), &naive),
+    ]
+    .iter()
+    .map(|(name, run)| {
+        let (sm, ss) = mean_std(&ssim_series(run, &cfg, img));
+        vec![
+            name.to_string(),
+            format!("{:.1}±{:.1}", run.mean_nfes(), run.nfe_std()),
+            format!("{:.1}", run.wall.as_secs_f64() * 1e3 / n as f64),
+            format!("{:.3}±{:.3}", sm, ss),
+            format!("{:.1}", run.mean_occupancy),
+        ]
+    })
+    .collect();
+    print_table(
+        &["policy", "NFEs/img", "ms/img", "SSIM vs CFG", "occupancy"],
+        &rows,
+    );
+
+    let cfg_ms = cfg.wall.as_secs_f64() / n as f64;
+    let ag_ms = ag.wall.as_secs_f64() / n as f64;
+    let gd_ms = gd.wall.as_secs_f64() / n as f64;
+    println!(
+        "\nlatency ratios: CFG/GD = {:.2}x (paper footnote: ~1.85x on A100);  \
+         AG/GD = {:.2}x",
+        cfg_ms / gd_ms,
+        ag_ms / gd_ms
+    );
+    let gd_speedup = cfg_ms - gd_ms;
+    let ag_speedup = cfg_ms - ag_ms;
+    println!(
+        "AG NFE saving: {:.1}% (paper: 25%);  AG achieves {:.0}% of GD's wall-clock \
+         speed-up (paper: ~50%)",
+        100.0 * (1.0 - ag.mean_nfes() / cfg.mean_nfes()),
+        100.0 * ag_speedup / gd_speedup
+    );
+}

@@ -1,0 +1,110 @@
+//! §Perf microbenchmarks (not a paper figure): the quantities the
+//! optimization pass iterates on.
+//!
+//!  * denoiser executable latency per batch bucket (L2 hot path),
+//!  * amortized per-item cost vs bucket (batching payoff),
+//!  * L3 scheduler overhead: engine loop on a near-zero-cost backend,
+//!  * host combine+solve vs the device guide/solver executables (ablation:
+//!    where should the tiny per-step math live?).
+//!
+//! Run: `cargo bench --bench perf_microbench`
+
+use adaptive_guidance::backend::{Backend, EvalInput, GmmBackend};
+use adaptive_guidance::coordinator::engine::Engine;
+use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::request::Request;
+use adaptive_guidance::coordinator::solver;
+use adaptive_guidance::perfstat::{bench, print_summaries};
+use adaptive_guidance::runtime;
+use adaptive_guidance::sim::gmm::Gmm;
+use adaptive_guidance::tensor::Tensor;
+use adaptive_guidance::util::cli::Args;
+use adaptive_guidance::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let iters = args.usize("iters", 30);
+    let mut rows = Vec::new();
+
+    // ---- L3 scheduler overhead: GMM backend is ~free, so the per-item time
+    // is almost pure engine bookkeeping.
+    {
+        let mut engine = Engine::new(GmmBackend::new(Gmm::axes(768, 4, 3.0, 0.05)));
+        let mut id = 0u64;
+        let s = bench("L3 engine loop (16 req x 10 steps, gmm)", 2, iters, || {
+            let reqs: Vec<Request> = (0..16)
+                .map(|i| {
+                    id += 1;
+                    Request::new(id, "gmm", vec![1 + (i % 4) as i32, 0, 0, 0],
+                                 id, 10, GuidancePolicy::Cfg { s: 2.0 })
+                })
+                .collect();
+            engine.run(reqs).unwrap();
+        });
+        let per_item_us = s.p50_ms * 1e3 / (16.0 * 10.0 * 2.0);
+        rows.push(s);
+        println!("scheduler overhead: ~{per_item_us:.1} us per NFE item (incl. gmm math)\n");
+    }
+
+    // ---- host combine + solve (the per-step non-NFE math)
+    {
+        let mut rng = Rng::new(1);
+        let c = Tensor::new(vec![768], rng.normal_vec(768));
+        let u = Tensor::new(vec![768], rng.normal_vec(768));
+        let x = rng.normal_vec(768);
+        let x0p = rng.normal_vec(768);
+        let coefs = solver::fold_coefs(0.6, 0.55, Some(0.65));
+        rows.push(bench("host combine+cosine+solve (768d)", 10, iters * 10, || {
+            let eps = Tensor::cfg_combine(&c, &u, 7.5);
+            std::hint::black_box(c.cosine(&u));
+            std::hint::black_box(solver::apply_step(&x, &eps.data, &x0p, &coefs));
+        }));
+    }
+
+    // ---- PJRT paths (need artifacts)
+    if let Some(mut be) = runtime::try_load_default() {
+        let mut rng = Rng::new(2);
+        for &b in &[1usize, 2, 4, 8, 16] {
+            let items: Vec<EvalInput> = (0..b)
+                .map(|i| EvalInput {
+                    x: rng.normal_vec(768),
+                    t: 0.5,
+                    tokens: vec![1 + (i % 4) as i32, 1, 1, 1],
+                })
+                .collect();
+            be.denoise("dit_b", &items).unwrap(); // warm compile
+            let s = bench(&format!("denoiser dit_b bucket {b}"), 3, iters, || {
+                std::hint::black_box(be.denoise("dit_b", &items).unwrap());
+            });
+            println!(
+                "bucket {b}: {:.3} ms/batch = {:.3} ms/NFE",
+                s.p50_ms,
+                s.p50_ms / b as f64
+            );
+            rows.push(s);
+        }
+        // device guide vs host combine
+        let ec = rng.normal_vec(768);
+        let eu = rng.normal_vec(768);
+        be.run_guide(&ec, &eu, &[7.5]).unwrap();
+        rows.push(bench("device guide exec (b1)", 3, iters, || {
+            std::hint::black_box(be.run_guide(&ec, &eu, &[7.5]).unwrap());
+        }));
+        let x = rng.normal_vec(768);
+        let x0p = rng.normal_vec(768);
+        let carr = [0.9f32, -0.1, 0.05, 1.2, -0.7];
+        be.run_solver(&x, &ec, &x0p, &carr).unwrap();
+        rows.push(bench("device solver exec (b1)", 3, iters, || {
+            std::hint::black_box(be.run_solver(&x, &ec, &x0p, &carr).unwrap());
+        }));
+    }
+
+    println!();
+    print_summaries(&rows);
+    println!(
+        "\nreading: per-NFE cost should fall with bucket size (batching pays);\n\
+         host combine+solve should be far below one denoiser NFE (it is the\n\
+         right place for the per-step math — the device round-trip dominates\n\
+         the device guide/solver numbers)."
+    );
+}

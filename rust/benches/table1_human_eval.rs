@@ -1,0 +1,102 @@
+//! **Table 1** — AG (γ̄, ~25% fewer NFEs) vs the 20-step CFG baseline:
+//! mean SSIM, simulated 5-annotator majority votes, and the two-sided
+//! Wilcoxon signed-rank test on vote differences.
+//!
+//! Paper row (EMU-768, 1000 OUI prompts):
+//!   CFG  SSIM 0.91±0.03  win 502  lose 498  NFEs 40
+//!   AG   (γ̄=0.991)       win 498  lose 502  NFEs 29.6±1.3
+//!
+//! Run: `cargo bench --bench table1_human_eval -- --n 200 --gamma-bar 0.9995
+//!       [--model dit_b] [--dump-images out/]`
+
+use adaptive_guidance::coordinator::engine::Engine;
+use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::eval::annotators::{run_study, Panel};
+use adaptive_guidance::eval::harness::{mean_std, print_table, run_policy, ssim_series, RunSpec};
+use adaptive_guidance::prompts;
+use adaptive_guidance::runtime;
+use adaptive_guidance::util::cli::Args;
+use adaptive_guidance::util::ppm;
+
+fn main() {
+    let args = Args::from_env();
+    let Some(be) = runtime::try_load_default() else { return };
+    let img = be.manifest.img;
+    let n = args.usize("n", 48);
+    let steps = args.usize("steps", 20);
+    let s = args.f64("guidance", 7.5) as f32;
+    let gamma_bar = args.f64("gamma-bar", 0.9988);
+    let model = args.get_or("model", "dit_b");
+
+    println!("# Table 1 — human-evaluation protocol (simulated panel)");
+    println!("# model={model} prompts={n} (paper: 1000) steps={steps} γ̄={gamma_bar}\n");
+
+    let ps = prompts::eval_set(n, 42);
+    let spec = RunSpec::new(model, steps);
+    let mut engine = Engine::new(be);
+    let cfg = run_policy(&mut engine, &ps, &spec, GuidancePolicy::Cfg { s }).unwrap();
+    let ag = run_policy(&mut engine, &ps, &spec, GuidancePolicy::Ag { s, gamma_bar }).unwrap();
+
+    let ssim = ssim_series(&ag, &cfg, img);
+    let (ssim_m, ssim_s) = mean_std(&ssim);
+
+    // the annotator pairs: A = AG image, B = CFG image (paper order: CFG first)
+    let pairs: Vec<(Vec<f32>, Vec<f32>)> = cfg
+        .completions
+        .iter()
+        .zip(&ag.completions)
+        .map(|(c, a)| (c.image.clone(), a.image.clone()))
+        .collect();
+    let outcome = run_study(&pairs, img, img, &Panel::default(), 7);
+
+    print_table(
+        &["policy", "SSIM(vs CFG)", "win", "lose", "NFEs"],
+        &[
+            vec![
+                "CFG".into(),
+                format!("{:.2}±{:.2}", ssim_m, ssim_s),
+                format!("{}", outcome.wins_a),
+                format!("{}", outcome.wins_b),
+                format!("{}", cfg.mean_nfes()),
+            ],
+            vec![
+                format!("AG γ̄={gamma_bar}"),
+                String::from("—"),
+                format!("{}", outcome.wins_b),
+                format!("{}", outcome.wins_a),
+                format!("{:.1}±{:.1}", ag.mean_nfes(), ag.nfe_std()),
+            ],
+        ],
+    );
+    println!(
+        "\nvote diff: mean {:.3} (SD {:.3});  Wilcoxon W={:.0}, z={:.3}, p={:.3} \
+         (paper: mean -0.047, SD 2.543, p=0.603)",
+        outcome.mean_diff,
+        outcome.sd_diff,
+        outcome.wilcoxon.w_plus.min(outcome.wilcoxon.w_minus),
+        outcome.wilcoxon.z,
+        outcome.wilcoxon.p_value
+    );
+    println!(
+        "NFE saving: {:.1}% (paper: ~25%);  significant difference: {}",
+        100.0 * (1.0 - ag.mean_nfes() / cfg.mean_nfes()),
+        if outcome.wilcoxon.p_value > 0.05 { "no (p > 0.05) ✓" } else { "YES — unexpected" }
+    );
+
+    if let Some(dir) = args.get("dump-images") {
+        std::fs::create_dir_all(dir).unwrap();
+        // dump the most extreme vote differences (Figs. 6/12/13 protocol)
+        let mut idx: Vec<usize> = (0..pairs.len()).collect();
+        idx.sort_by(|&a, &b| outcome.diffs[b].abs().partial_cmp(&outcome.diffs[a].abs()).unwrap());
+        for &i in idx.iter().take(6) {
+            let up_cfg = ppm::upscale(&pairs[i].0, img, img, 8);
+            let up_ag = ppm::upscale(&pairs[i].1, img, img, 8);
+            let path = std::path::Path::new(dir).join(format!(
+                "pair_{:03}_diff{}.ppm",
+                i, outcome.diffs[i] as i32
+            ));
+            ppm::write_ppm_row(&path, &[&up_cfg, &up_ag], img * 8, img * 8).unwrap();
+        }
+        println!("wrote 6 extreme pairs (CFG|AG) to {dir}/");
+    }
+}

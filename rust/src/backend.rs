@@ -1,0 +1,161 @@
+//! The denoiser execution interface between the coordinator (L3) and the
+//! compute substrate.
+//!
+//! Two implementations:
+//!  * [`runtime::PjrtBackend`](crate::runtime) — the production path: AOT'd
+//!    HLO executables (DiT + Pallas kernels) on the PJRT CPU client.
+//!  * [`GmmBackend`] — the analytic Gaussian-mixture oracle
+//!    ([`sim::gmm`](crate::sim::gmm)): exact scores, no artifacts needed.
+//!    Coordinator unit/property tests and scheduler stress tests run on it.
+
+use anyhow::Result;
+
+use crate::sim::gmm::Gmm;
+
+/// One denoiser evaluation request: a single NFE's inputs.
+#[derive(Debug, Clone)]
+pub struct EvalInput {
+    /// flattened latent (length = `flat_in(model)`)
+    pub x: Vec<f32>,
+    /// continuous time in [0, 1]
+    pub t: f32,
+    /// condition tokens (all-zero = unconditional)
+    pub tokens: Vec<i32>,
+}
+
+/// Batched denoiser execution.
+///
+/// Not `Send`: the PJRT client wraps thread-affine host state, so the
+/// serving front-end constructs its backend *inside* the engine thread (see
+/// `server::serve`'s factory parameter).
+pub trait Backend {
+    /// Flattened *input* latent length for `model` (editing models take
+    /// `2 * flat_out`: latent ‖ source image).
+    fn flat_in(&self, model: &str) -> usize;
+
+    /// Flattened *output* score length for `model`.
+    fn flat_out(&self, model: &str) -> usize;
+
+    /// Batch-size buckets this backend can execute, ascending.
+    fn buckets(&self) -> &[usize];
+
+    /// Largest batch executable for `model` (defaults to the global max;
+    /// models lowered with fewer buckets — e.g. the editing model — cap
+    /// lower, and the scheduler packs per-model accordingly).
+    fn max_batch(&self, _model: &str) -> usize {
+        *self.buckets().last().expect("backend has no buckets")
+    }
+
+    /// Execute one batch of evaluations (`items.len() <= max bucket`);
+    /// returns one flat score vector per item, in order.
+    fn denoise(&mut self, model: &str, items: &[EvalInput]) -> Result<Vec<Vec<f32>>>;
+
+    /// Available model names.
+    fn models(&self) -> Vec<String>;
+}
+
+/// Analytic GMM backend (test substrate). Token slot 0 selects the mixture
+/// component (1-based; 0 = unconditional), mirroring the shapes vocabulary.
+pub struct GmmBackend {
+    pub gmm: Gmm,
+    buckets: Vec<usize>,
+    /// number of denoise() calls (lets tests assert batching behaviour)
+    pub calls: usize,
+    /// total items executed
+    pub items_executed: usize,
+}
+
+impl GmmBackend {
+    pub fn new(gmm: Gmm) -> GmmBackend {
+        GmmBackend {
+            gmm,
+            buckets: vec![1, 2, 4, 8, 16],
+            calls: 0,
+            items_executed: 0,
+        }
+    }
+
+    pub fn with_buckets(mut self, buckets: Vec<usize>) -> GmmBackend {
+        assert!(!buckets.is_empty());
+        self.buckets = buckets;
+        self
+    }
+}
+
+impl Backend for GmmBackend {
+    fn flat_in(&self, _model: &str) -> usize {
+        self.gmm.dim
+    }
+
+    fn flat_out(&self, _model: &str) -> usize {
+        self.gmm.dim
+    }
+
+    fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn denoise(&mut self, _model: &str, items: &[EvalInput]) -> Result<Vec<Vec<f32>>> {
+        let max = *self.buckets.last().unwrap();
+        anyhow::ensure!(
+            items.len() <= max,
+            "batch {} exceeds max bucket {max}",
+            items.len()
+        );
+        self.calls += 1;
+        self.items_executed += items.len();
+        Ok(items
+            .iter()
+            .map(|it| {
+                let cond = if it.tokens[0] == 0 {
+                    None
+                } else {
+                    Some((it.tokens[0] - 1) as usize)
+                };
+                self.gmm.eps(&it.x, it.t as f64, cond)
+            })
+            .collect())
+    }
+
+    fn models(&self) -> Vec<String> {
+        vec!["gmm".to_owned()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gmm_backend_routes_condition_tokens() {
+        let mut be = GmmBackend::new(Gmm::axes(4, 2, 2.0, 0.1));
+        let x = vec![0.5f32; 4];
+        let mk = |tok: i32| EvalInput {
+            x: x.clone(),
+            t: 0.5,
+            tokens: vec![tok, 0, 0, 0],
+        };
+        let out = be.denoise("gmm", &[mk(0), mk(1), mk(2)]).unwrap();
+        assert_eq!(out.len(), 3);
+        // conditional scores for different components differ; both differ
+        // from the unconditional mixture score.
+        assert_ne!(out[1], out[2]);
+        assert_ne!(out[0], out[1]);
+        assert_eq!(be.calls, 1);
+        assert_eq!(be.items_executed, 3);
+    }
+
+    #[test]
+    fn gmm_backend_rejects_oversized_batch() {
+        let mut be =
+            GmmBackend::new(Gmm::axes(4, 2, 2.0, 0.1)).with_buckets(vec![1, 2]);
+        let items: Vec<EvalInput> = (0..3)
+            .map(|_| EvalInput {
+                x: vec![0.0; 4],
+                t: 0.5,
+                tokens: vec![0; 4],
+            })
+            .collect();
+        assert!(be.denoise("gmm", &items).is_err());
+    }
+}

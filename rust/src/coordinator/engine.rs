@@ -1,0 +1,335 @@
+//! The serving engine: continuation batching over NFE work items.
+//!
+//! The paper's policies make per-step NFE counts *dynamic* (AG drops the
+//! unconditional stream mid-request), so a fixed lock-step batcher wastes
+//! slots. This engine treats every network evaluation as a fungible work
+//! item — an (x, t, tokens) triple — and packs items from *different
+//! requests at different steps* into fixed-batch executions, exactly the
+//! continuation-batching idea of Orca/vLLM applied to diffusion guidance.
+//!
+//! Single-threaded and deterministic: `submit()` adds requests (possible at
+//! any time, enabling open-loop arrival processes), `pump()` executes one
+//! batch and advances whatever completed, `run()` drains to completion.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::backend::Backend;
+use crate::coordinator::request::{Completion, Request, RequestState};
+use crate::stats::hist::Histogram;
+
+/// One pending network evaluation.
+#[derive(Debug)]
+struct WorkItem {
+    state_idx: usize,
+    slot: usize,
+    model: String,
+}
+
+/// Batching statistics (§Perf: occupancy is the quantity to keep high).
+#[derive(Debug)]
+pub struct BatchStats {
+    pub batches: usize,
+    pub items: usize,
+    /// batch-occupancy histogram: items per executed batch
+    pub occupancy: Histogram,
+}
+
+impl BatchStats {
+    fn new(max_bucket: usize) -> BatchStats {
+        BatchStats {
+            batches: 0,
+            items: 0,
+            occupancy: Histogram::new(0.5, max_bucket as f64 + 0.5, max_bucket),
+        }
+    }
+
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.items as f64 / self.batches as f64
+        }
+    }
+}
+
+/// The engine. Generic over the backend so coordinator tests run on the
+/// analytic GMM oracle and production runs on PJRT artifacts.
+pub struct Engine<B: Backend> {
+    pub backend: B,
+    states: Vec<Option<RequestState>>,
+    queue: VecDeque<WorkItem>,
+    active: usize,
+    pub stats: BatchStats,
+}
+
+impl<B: Backend> Engine<B> {
+    pub fn new(backend: B) -> Engine<B> {
+        let max_bucket = *backend.buckets().last().expect("backend has no buckets");
+        Engine {
+            backend,
+            states: Vec::new(),
+            queue: VecDeque::new(),
+            active: 0,
+            stats: BatchStats::new(max_bucket),
+        }
+    }
+
+    /// Number of requests still in flight.
+    pub fn active(&self) -> usize {
+        self.active
+    }
+
+    pub fn idle(&self) -> bool {
+        self.active == 0
+    }
+
+    /// Admit a request; its first step's evals enter the work queue.
+    pub fn submit(&mut self, req: Request) {
+        let flat_out = self.backend.flat_out(&req.model);
+        let state = RequestState::new(req, flat_out);
+        let idx = self.states.len();
+        self.enqueue_step(&state, idx);
+        self.states.push(Some(state));
+        self.active += 1;
+    }
+
+    fn enqueue_step(&mut self, state: &RequestState, idx: usize) {
+        for (slot, _kind) in state.current_evals().iter().enumerate() {
+            self.queue.push_back(WorkItem {
+                state_idx: idx,
+                slot,
+                model: state.req.model.clone(),
+            });
+        }
+    }
+
+    /// Execute one batch of work items (same model, up to the largest
+    /// bucket) and advance all requests whose step completed. Returns the
+    /// completions this round produced.
+    pub fn pump(&mut self) -> Result<Vec<Completion>> {
+        let Some(front) = self.queue.front() else {
+            return Ok(Vec::new());
+        };
+        let model = front.model.clone();
+        let max_bucket = self.backend.max_batch(&model);
+
+        // take up to max_bucket items for this model, preserving FIFO order
+        // for the rest.
+        let mut batch_items = Vec::new();
+        let mut rest = VecDeque::new();
+        while let Some(item) = self.queue.pop_front() {
+            if item.model == model && batch_items.len() < max_bucket {
+                batch_items.push(item);
+            } else {
+                rest.push_back(item);
+            }
+        }
+        self.queue = rest;
+
+        // build inputs
+        let inputs: Vec<_> = batch_items
+            .iter()
+            .map(|it| {
+                let st = self.states[it.state_idx].as_ref().unwrap();
+                let kind = st.current_evals()[it.slot];
+                st.eval_input(kind)
+            })
+            .collect();
+
+        let outputs = self.backend.denoise(&model, &inputs)?;
+        self.stats.batches += 1;
+        self.stats.items += inputs.len();
+        self.stats.occupancy.add(inputs.len() as f64);
+
+        // deliver results; collect which states finished their step
+        let mut ready = Vec::new();
+        for (item, eps) in batch_items.into_iter().zip(outputs) {
+            let st = self.states[item.state_idx].as_mut().unwrap();
+            if st.deliver(item.slot, eps) {
+                ready.push(item.state_idx);
+            }
+        }
+
+        // advance completed steps (a state can appear once — all its slots
+        // deliver before `deliver` returns true exactly once).
+        let mut completions = Vec::new();
+        for idx in ready {
+            let st = self.states[idx].as_mut().unwrap();
+            if let Some(done) = st.complete_step() {
+                self.states[idx] = None;
+                self.active -= 1;
+                completions.push(done);
+            } else {
+                let st = self.states[idx].take().unwrap();
+                self.enqueue_step(&st, idx);
+                self.states[idx] = Some(st);
+            }
+        }
+        Ok(completions)
+    }
+
+    /// Drain all submitted requests to completion.
+    pub fn drain(&mut self) -> Result<Vec<Completion>> {
+        let mut out = Vec::new();
+        while !self.idle() {
+            let round = self.pump()?;
+            out.extend(round);
+        }
+        // completions arrive in finish order; return in id order for
+        // deterministic downstream comparisons.
+        out.sort_by_key(|c| c.id);
+        Ok(out)
+    }
+
+    /// Convenience: submit a batch of requests and drain.
+    pub fn run(&mut self, requests: Vec<Request>) -> Result<Vec<Completion>> {
+        for r in requests {
+            self.submit(r);
+        }
+        self.drain()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::GmmBackend;
+    use crate::coordinator::policy::GuidancePolicy;
+    use crate::sim::gmm::Gmm;
+
+    fn engine() -> Engine<GmmBackend> {
+        Engine::new(GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05)))
+    }
+
+    fn req(id: u64, comp: i32, policy: GuidancePolicy) -> Request {
+        Request::new(id, "gmm", vec![comp, 0, 0, 0], 100 + id, 10, policy)
+    }
+
+    /// Same request but with a *shared* seed — policy-comparison tests need
+    /// identical starting noise (the paper's same-seed-sequence protocol).
+    fn req_seeded(id: u64, comp: i32, policy: GuidancePolicy) -> Request {
+        Request::new(id, "gmm", vec![comp, 0, 0, 0], 777, 10, policy)
+    }
+
+    #[test]
+    fn single_cfg_request_runs_to_completion() {
+        let mut e = engine();
+        let out = e.run(vec![req(0, 1, GuidancePolicy::Cfg { s: 2.0 })]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].nfes, 20);
+        assert_eq!(out[0].cfg_steps, 10);
+        assert_eq!(out[0].image.len(), 8);
+    }
+
+    #[test]
+    fn ag_saves_nfes_on_the_analytic_model() {
+        let mut e = engine();
+        let out = e
+            .run(vec![
+                req_seeded(0, 1, GuidancePolicy::Cfg { s: 2.0 }),
+                req_seeded(1, 1, GuidancePolicy::Ag { s: 2.0, gamma_bar: 0.995 }),
+            ])
+            .unwrap();
+        let cfg = &out[0];
+        let ag = &out[1];
+        assert!(ag.nfes < cfg.nfes, "AG {} vs CFG {}", ag.nfes, cfg.nfes);
+        assert!(ag.truncated_at.is_some());
+        // the trajectories share the guided prefix → same gammas up to
+        // (and including) the truncation step.
+        let k = ag.truncated_at.unwrap();
+        for i in 0..=k {
+            assert!((ag.gammas[i] - cfg.gammas[i]).abs() < 1e-9, "step {i}");
+        }
+    }
+
+    #[test]
+    fn ag_with_unreachable_threshold_replicates_cfg_exactly() {
+        let mut e = engine();
+        let out = e
+            .run(vec![
+                req_seeded(0, 2, GuidancePolicy::Cfg { s: 2.0 }),
+                req_seeded(1, 2, GuidancePolicy::Ag { s: 2.0, gamma_bar: 1.01 }),
+            ])
+            .unwrap();
+        assert_eq!(out[0].image, out[1].image);
+        assert_eq!(out[0].nfes, out[1].nfes);
+    }
+
+    #[test]
+    fn batching_packs_items_across_requests() {
+        let mut e = engine();
+        let reqs: Vec<_> = (0..8)
+            .map(|i| req(i, 1 + (i % 4) as i32, GuidancePolicy::Cfg { s: 2.0 }))
+            .collect();
+        let out = e.run(reqs).unwrap();
+        assert_eq!(out.len(), 8);
+        // 8 requests * 2 evals = 16 items per step → exactly one max-bucket
+        // batch per step round.
+        assert!(e.stats.mean_occupancy() > 15.9, "{}", e.stats.mean_occupancy());
+        assert_eq!(e.stats.items, 8 * 10 * 2);
+    }
+
+    #[test]
+    fn mixed_policy_traffic_fills_freed_slots() {
+        // 8 AG requests that truncate quickly: total items must be well
+        // below the CFG cost, and the batcher keeps packing the remaining
+        // conditional items together (occupancy stays above 8 = #requests).
+        let mut e = engine();
+        let reqs: Vec<_> = (0..8)
+            .map(|i| req(i, 1, GuidancePolicy::Ag { s: 2.0, gamma_bar: 0.99 }))
+            .collect();
+        let out = e.run(reqs).unwrap();
+        let total: usize = out.iter().map(|c| c.nfes).sum();
+        assert!(total < 8 * 20, "AG saved nothing: {total}");
+        assert_eq!(e.stats.items, total);
+        assert!(e.stats.mean_occupancy() >= 8.0);
+    }
+
+    #[test]
+    fn incremental_submission_between_pumps() {
+        let mut e = engine();
+        e.submit(req(0, 1, GuidancePolicy::Cfg { s: 2.0 }));
+        let mut done = Vec::new();
+        let mut pumped = 0;
+        while !e.idle() {
+            done.extend(e.pump().unwrap());
+            pumped += 1;
+            if pumped == 3 {
+                e.submit(req(1, 2, GuidancePolicy::Cfg { s: 2.0 }));
+            }
+        }
+        assert_eq!(done.len(), 2);
+    }
+
+    #[test]
+    fn seeds_make_runs_reproducible() {
+        let run = || {
+            let mut e = engine();
+            e.run(vec![req(0, 3, GuidancePolicy::Cfg { s: 2.0 })]).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a[0].image, b[0].image);
+    }
+
+    #[test]
+    fn cond_only_is_half_the_cost_of_cfg() {
+        let mut e = engine();
+        let out = e
+            .run(vec![
+                req(0, 1, GuidancePolicy::Cfg { s: 2.0 }),
+                req(1, 1, GuidancePolicy::CondOnly),
+            ])
+            .unwrap();
+        assert_eq!(out[0].nfes, 2 * out[1].nfes);
+    }
+
+    #[test]
+    fn empty_run_is_fine() {
+        let mut e = engine();
+        assert!(e.run(vec![]).unwrap().is_empty());
+        assert!(e.pump().unwrap().is_empty());
+    }
+}

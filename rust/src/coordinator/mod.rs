@@ -1,0 +1,11 @@
+//! L3 coordinator: the paper's system contribution.
+//!
+//! * [`policy`] — guidance policies (CFG / AG / LINEARAG / searched / pix2pix)
+//! * [`solver`] — cosine-VP schedule + DPM-Solver++(2M) coefficient folding
+//! * [`request`] — per-request state machine (combine, truncation, history)
+//! * [`engine`] — continuation batching of NFE work items over a [`crate::Backend`]
+
+pub mod engine;
+pub mod policy;
+pub mod request;
+pub mod solver;

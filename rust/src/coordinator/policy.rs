@@ -1,0 +1,311 @@
+//! Guidance policies — the paper's contribution surface.
+//!
+//! A policy maps `(step index, total steps, AG-truncation state)` to a
+//! [`StepPlan`] describing which network evaluations the step needs and how
+//! they are combined. The engine executes plans, feeds back the cosine
+//! signal gamma_t (Eq. 7), and the policy's truncation rule decides when the
+//! unconditional stream can be dropped.
+//!
+//! Implemented policies (paper reference in parens):
+//!  * [`GuidancePolicy::Cfg`] — classic classifier-free guidance (Eq. 3).
+//!  * [`GuidancePolicy::CondOnly`] — conditional-only; the cost model of a
+//!    guidance-distilled network (the GD comparator in Fig. 1).
+//!  * [`GuidancePolicy::Ag`] — Adaptive Guidance (§5): CFG until
+//!    `gamma_t >= gamma_bar`, conditional afterwards.
+//!  * [`GuidancePolicy::AgFixedPrefix`] — first `cfg_steps` guided, rest
+//!    conditional (the "5 CFG + 15 cond" ablation of Fig. 8).
+//!  * [`GuidancePolicy::AlternatingCfg`] — Fig. 8's naive baseline:
+//!    alternate CFG/cond in the first half, cond in the second half.
+//!  * [`GuidancePolicy::LinearAg`] — LINEARAG (§5.1, Eq. 11): alternate CFG
+//!    and OLS-estimated CFG in the first half, OLS-estimated CFG after.
+//!  * [`GuidancePolicy::Searched`] — an explicit per-step choice sequence, as
+//!    produced by the NAS search (§4).
+//!  * [`GuidancePolicy::Pix2Pix`] — image-editing guidance (Eq. 9) with
+//!    optional AG truncation of the two auxiliary streams (App. B).
+
+use std::sync::Arc;
+
+use crate::ols::OlsCoeffs;
+
+/// Per-step option chosen by a searched policy (§4.1's F_t).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StepChoice {
+    Uncond,
+    Cond,
+    Cfg { s: f32 },
+}
+
+/// What one denoising step must execute.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StepPlan {
+    /// Evaluate cond + uncond, combine with strength `s`, report gamma.
+    Guided { s: f32 },
+    /// Evaluate cond only.
+    CondOnly,
+    /// Evaluate uncond only (searched policies may select it).
+    UncondOnly,
+    /// Evaluate cond only; substitute the OLS estimate for eps_u (Eq. 10).
+    LinearGuided { s: f32 },
+    /// Editing triple-eval (Eq. 9): (c, I), (∅, I), (∅, ∅).
+    EditGuided { s_text: f32, s_img: f32 },
+    /// Editing after AG truncation: (c, I) only.
+    EditCondOnly,
+}
+
+impl StepPlan {
+    /// Network evaluations this plan costs.
+    pub fn nfes(&self) -> usize {
+        match self {
+            StepPlan::Guided { .. } => 2,
+            StepPlan::CondOnly | StepPlan::UncondOnly | StepPlan::LinearGuided { .. } => 1,
+            StepPlan::EditGuided { .. } => 3,
+            StepPlan::EditCondOnly => 1,
+        }
+    }
+}
+
+/// A guidance policy (see module docs).
+#[derive(Debug, Clone)]
+pub enum GuidancePolicy {
+    Cfg { s: f32 },
+    CondOnly,
+    Ag { s: f32, gamma_bar: f64 },
+    AgFixedPrefix { s: f32, cfg_steps: usize },
+    AlternatingCfg { s: f32 },
+    LinearAg { s: f32, coeffs: Arc<OlsCoeffs> },
+    Searched { choices: Vec<StepChoice> },
+    Pix2Pix {
+        s_text: f32,
+        s_img: f32,
+        gamma_bar: Option<f64>,
+        /// fixed guided-prefix length (App. B's protocol: 10 of 20 steps
+        /// use the full Eq. 9 triple-eval, saving 33.3% of NFEs); `None`
+        /// leaves truncation purely to `gamma_bar`
+        full_prefix: Option<usize>,
+    },
+}
+
+impl GuidancePolicy {
+    /// The plan for step `step` of `total`, given whether AG has truncated.
+    pub fn plan(&self, step: usize, total: usize, truncated: bool) -> StepPlan {
+        match self {
+            GuidancePolicy::Cfg { s } => StepPlan::Guided { s: *s },
+            GuidancePolicy::CondOnly => StepPlan::CondOnly,
+            GuidancePolicy::Ag { s, .. } => {
+                if truncated {
+                    StepPlan::CondOnly
+                } else {
+                    StepPlan::Guided { s: *s }
+                }
+            }
+            GuidancePolicy::AgFixedPrefix { s, cfg_steps } => {
+                if step < *cfg_steps {
+                    StepPlan::Guided { s: *s }
+                } else {
+                    StepPlan::CondOnly
+                }
+            }
+            GuidancePolicy::AlternatingCfg { s } => {
+                if step < total / 2 && step % 2 == 0 {
+                    StepPlan::Guided { s: *s }
+                } else {
+                    StepPlan::CondOnly
+                }
+            }
+            GuidancePolicy::LinearAg { s, .. } => {
+                // Eq. 11: true CFG on even steps of the first half, LR-CFG on
+                // odd first-half steps and the entire second half.
+                if step < total / 2 && step % 2 == 0 {
+                    StepPlan::Guided { s: *s }
+                } else {
+                    StepPlan::LinearGuided { s: *s }
+                }
+            }
+            GuidancePolicy::Searched { choices } => match choices
+                .get(step)
+                .copied()
+                .unwrap_or(StepChoice::Cond)
+            {
+                StepChoice::Uncond => StepPlan::UncondOnly,
+                StepChoice::Cond => StepPlan::CondOnly,
+                StepChoice::Cfg { s } => StepPlan::Guided { s },
+            },
+            GuidancePolicy::Pix2Pix { s_text, s_img, full_prefix, .. } => {
+                let past_prefix = full_prefix.map_or(false, |k| step >= k);
+                if truncated || past_prefix {
+                    StepPlan::EditCondOnly
+                } else {
+                    StepPlan::EditGuided {
+                        s_text: *s_text,
+                        s_img: *s_img,
+                    }
+                }
+            }
+        }
+    }
+
+    /// AG truncation rule: should subsequent steps drop the extra streams?
+    /// Called by the engine after a guided step with the observed gamma.
+    pub fn should_truncate(&self, gamma: f64) -> bool {
+        match self {
+            GuidancePolicy::Ag { gamma_bar, .. } => gamma >= *gamma_bar,
+            GuidancePolicy::Pix2Pix {
+                gamma_bar: Some(g), ..
+            } => gamma >= *g,
+            _ => false,
+        }
+    }
+
+    /// Whether this policy consumes the OLS trajectory history.
+    pub fn needs_history(&self) -> bool {
+        matches!(self, GuidancePolicy::LinearAg { .. })
+    }
+
+    /// Upper bound on total NFEs for a request of `total` steps (exact for
+    /// non-adaptive policies; AG's worst case is no truncation).
+    pub fn max_nfes(&self, total: usize) -> usize {
+        (0..total)
+            .map(|i| self.plan(i, total, false).nfes())
+            .sum()
+    }
+
+    /// Short display name for reports.
+    pub fn name(&self) -> String {
+        match self {
+            GuidancePolicy::Cfg { s } => format!("cfg(s={s})"),
+            GuidancePolicy::CondOnly => "cond-only".into(),
+            GuidancePolicy::Ag { gamma_bar, .. } => format!("ag(ḡ={gamma_bar})"),
+            GuidancePolicy::AgFixedPrefix { cfg_steps, .. } => {
+                format!("ag-prefix({cfg_steps})")
+            }
+            GuidancePolicy::AlternatingCfg { .. } => "alternating".into(),
+            GuidancePolicy::LinearAg { .. } => "linear-ag".into(),
+            GuidancePolicy::Searched { .. } => "searched".into(),
+            GuidancePolicy::Pix2Pix { gamma_bar, .. } => match gamma_bar {
+                Some(g) => format!("pix2pix-ag(ḡ={g})"),
+                None => "pix2pix".into(),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cfg_always_guided() {
+        let p = GuidancePolicy::Cfg { s: 7.5 };
+        for i in 0..20 {
+            assert_eq!(p.plan(i, 20, false), StepPlan::Guided { s: 7.5 });
+        }
+        assert_eq!(p.max_nfes(20), 40);
+        assert!(!p.should_truncate(1.0));
+    }
+
+    #[test]
+    fn ag_switches_on_truncation_flag() {
+        let p = GuidancePolicy::Ag {
+            s: 7.5,
+            gamma_bar: 0.99,
+        };
+        assert_eq!(p.plan(3, 20, false), StepPlan::Guided { s: 7.5 });
+        assert_eq!(p.plan(3, 20, true), StepPlan::CondOnly);
+        assert!(p.should_truncate(0.995));
+        assert!(!p.should_truncate(0.98));
+    }
+
+    #[test]
+    fn ag_prefix_counts() {
+        let p = GuidancePolicy::AgFixedPrefix {
+            s: 7.5,
+            cfg_steps: 5,
+        };
+        let plans: Vec<_> = (0..20).map(|i| p.plan(i, 20, false)).collect();
+        let guided = plans
+            .iter()
+            .filter(|pl| matches!(pl, StepPlan::Guided { .. }))
+            .count();
+        assert_eq!(guided, 5);
+        assert_eq!(p.max_nfes(20), 25);
+    }
+
+    #[test]
+    fn alternating_matches_fig8_description() {
+        // first half: CFG on even steps; second half: all conditional.
+        let p = GuidancePolicy::AlternatingCfg { s: 7.5 };
+        let guided: Vec<usize> = (0..20)
+            .filter(|&i| matches!(p.plan(i, 20, false), StepPlan::Guided { .. }))
+            .collect();
+        assert_eq!(guided, vec![0, 2, 4, 6, 8]);
+        assert_eq!(p.max_nfes(20), 25);
+    }
+
+    #[test]
+    fn linear_ag_matches_eq11() {
+        let coeffs = Arc::new(OlsCoeffs {
+            beta_c: vec![vec![]; 20],
+            beta_u: vec![vec![]; 20],
+        });
+        let p = GuidancePolicy::LinearAg { s: 7.5, coeffs };
+        // T=20: steps 0,2,4,6,8 true CFG; 1,3,5,7,9 LR; 10..19 LR
+        for i in 0..20 {
+            let plan = p.plan(i, 20, false);
+            if i < 10 && i % 2 == 0 {
+                assert_eq!(plan, StepPlan::Guided { s: 7.5 }, "step {i}");
+            } else {
+                assert_eq!(plan, StepPlan::LinearGuided { s: 7.5 }, "step {i}");
+            }
+        }
+        // 5 guided * 2 + 15 LR * 1 = 25 NFEs (the paper's 75% guidance saving
+        // relative to CFG's extra 20: only 5 extra evals remain)
+        assert_eq!(p.max_nfes(20), 25);
+        assert!(p.needs_history());
+    }
+
+    #[test]
+    fn searched_policy_maps_choices() {
+        let p = GuidancePolicy::Searched {
+            choices: vec![
+                StepChoice::Cfg { s: 7.5 },
+                StepChoice::Cond,
+                StepChoice::Uncond,
+            ],
+        };
+        assert_eq!(p.plan(0, 3, false), StepPlan::Guided { s: 7.5 });
+        assert_eq!(p.plan(1, 3, false), StepPlan::CondOnly);
+        assert_eq!(p.plan(2, 3, false), StepPlan::UncondOnly);
+        // out-of-range steps default to conditional
+        assert_eq!(p.plan(7, 3, false), StepPlan::CondOnly);
+        assert_eq!(p.max_nfes(3), 4);
+    }
+
+    #[test]
+    fn pix2pix_truncation() {
+        let p = GuidancePolicy::Pix2Pix {
+            s_text: 7.5,
+            s_img: 1.5,
+            gamma_bar: Some(0.99),
+            full_prefix: None,
+        };
+        assert_eq!(p.plan(0, 20, false).nfes(), 3);
+        assert_eq!(p.plan(0, 20, true), StepPlan::EditCondOnly);
+        assert!(p.should_truncate(0.995));
+        // without a threshold it never truncates
+        let p2 = GuidancePolicy::Pix2Pix {
+            s_text: 7.5,
+            s_img: 1.5,
+            gamma_bar: None,
+            full_prefix: None,
+        };
+        assert!(!p2.should_truncate(1.0));
+        assert_eq!(p2.max_nfes(20), 60);
+    }
+
+    #[test]
+    fn nfe_summary_matches_paper_fig1() {
+        // Fig. 1's cost axis at T=20: CFG=40, GD-proxy=20, AG(no trunc)=40.
+        assert_eq!(GuidancePolicy::Cfg { s: 7.5 }.max_nfes(20), 40);
+        assert_eq!(GuidancePolicy::CondOnly.max_nfes(20), 20);
+    }
+}

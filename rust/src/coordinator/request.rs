@@ -1,0 +1,494 @@
+//! Generation requests and their per-step state machine.
+//!
+//! A request owns its latent, its policy, its trajectory history and its NFE
+//! accounting. The engine (`engine.rs`) only moves *evaluation results*
+//! between the backend and this state machine; all guidance semantics live
+//! here and in `policy.rs`.
+
+use crate::backend::EvalInput;
+use crate::coordinator::policy::{GuidancePolicy, StepPlan};
+use crate::coordinator::solver::{self, StepCoefs};
+use crate::ols::ScoreTrajectory;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// An inference request as submitted by a client.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// backend model name (e.g. "dit_b", "dit_edit", "gmm")
+    pub model: String,
+    /// condition tokens
+    pub tokens: Vec<i32>,
+    /// negative prompt: used in place of the null tokens for the
+    /// unconditional stream (the dynamic-negative-prompt capability that
+    /// guidance distillation loses and AG keeps — paper §2.2 / Fig. 7).
+    pub neg_tokens: Option<Vec<i32>>,
+    /// editing source image (flat, `flat_out` length); requires an editing
+    /// model that takes `x ‖ src` input
+    pub src_image: Option<Vec<f32>>,
+    pub seed: u64,
+    pub steps: usize,
+    pub policy: GuidancePolicy,
+    /// record the (eps_c, eps_u) score trajectory (OLS fitting / Fig. 15)
+    pub record_trajectory: bool,
+    /// record the per-step data predictions x0_t (Fig. 17's decoded iterates)
+    pub record_iterates: bool,
+    /// explicit starting noise (overrides the seed-derived x_T); used by the
+    /// python-parity integration tests and replication experiments
+    pub init_noise: Option<Vec<f32>>,
+}
+
+impl Request {
+    /// Convenience constructor with the common defaults.
+    pub fn new(id: u64, model: &str, tokens: Vec<i32>, seed: u64, steps: usize,
+               policy: GuidancePolicy) -> Request {
+        Request {
+            id,
+            model: model.to_owned(),
+            tokens,
+            neg_tokens: None,
+            src_image: None,
+            seed,
+            steps,
+            policy,
+            record_trajectory: false,
+            record_iterates: false,
+            init_noise: None,
+        }
+    }
+}
+
+/// The evaluation streams a step may request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalKind {
+    /// eps(x, c)
+    Cond,
+    /// eps(x, ∅) — or eps(x, c_neg) under a negative prompt
+    Uncond,
+    /// editing: eps(x, c, I)
+    EditFull,
+    /// editing: eps(x, ∅, I)
+    EditImg,
+    /// editing: eps(x, ∅, ∅)
+    EditNull,
+}
+
+/// Completed request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    /// final data prediction x0 (flat)
+    pub image: Vec<f32>,
+    pub nfes: usize,
+    pub cfg_steps: usize,
+    /// step at which AG's rule fired (truncation effective from the next step)
+    pub truncated_at: Option<usize>,
+    /// convergence signal per step: Eq. 7's cosine on the x0 data
+    /// predictions (NaN for steps without both streams) — the AG signal
+    pub gammas: Vec<f64>,
+    /// Eq. 7's cosine on the raw eps predictions (the paper's printed form)
+    pub gammas_eps: Vec<f64>,
+    pub trajectory: Option<ScoreTrajectory>,
+    /// per-step data predictions (present when `record_iterates` was set)
+    pub iterates: Vec<Vec<f32>>,
+}
+
+/// Live per-request state.
+#[derive(Debug)]
+pub struct RequestState {
+    pub req: Request,
+    pub x: Vec<f32>,
+    pub x0_prev: Vec<f32>,
+    pub step: usize,
+    pub truncated: bool,
+    pub truncated_at: Option<usize>,
+    pub nfes: usize,
+    pub cfg_steps: usize,
+    pub gammas: Vec<f64>,
+    pub gammas_eps: Vec<f64>,
+    /// results for the current step's evals, indexed by plan slot
+    pending: Vec<Option<Vec<f32>>>,
+    pending_left: usize,
+    plan: StepPlan,
+    hist_c: Vec<Tensor>,
+    hist_u: Vec<Tensor>,
+    coefs: Vec<StepCoefs>,
+    iterates: Vec<Vec<f32>>,
+}
+
+impl RequestState {
+    /// Initialize: draw x_T ~ N(0, I) from the request seed and plan step 0.
+    pub fn new(req: Request, flat_out: usize) -> RequestState {
+        assert!(req.steps >= 1, "request needs at least one step");
+        let x = match &req.init_noise {
+            Some(noise) => {
+                assert_eq!(noise.len(), flat_out, "init_noise length mismatch");
+                noise.clone()
+            }
+            None => Rng::new(req.seed).normal_vec(flat_out),
+        };
+        let coefs = solver::coef_table(req.steps);
+        let plan = req.policy.plan(0, req.steps, false);
+        let slots = Self::evals_for(&plan).len();
+        RequestState {
+            req,
+            x,
+            x0_prev: vec![0.0; flat_out],
+            step: 0,
+            truncated: false,
+            truncated_at: None,
+            nfes: 0,
+            cfg_steps: 0,
+            gammas: Vec::new(),
+            gammas_eps: Vec::new(),
+            pending: vec![None; slots],
+            pending_left: slots,
+            plan,
+            hist_c: Vec::new(),
+            hist_u: Vec::new(),
+            coefs,
+            iterates: Vec::new(),
+        }
+    }
+
+    fn evals_for(plan: &StepPlan) -> Vec<EvalKind> {
+        match plan {
+            StepPlan::Guided { .. } => vec![EvalKind::Cond, EvalKind::Uncond],
+            StepPlan::CondOnly | StepPlan::LinearGuided { .. } => vec![EvalKind::Cond],
+            StepPlan::UncondOnly => vec![EvalKind::Uncond],
+            StepPlan::EditGuided { .. } => {
+                vec![EvalKind::EditFull, EvalKind::EditImg, EvalKind::EditNull]
+            }
+            StepPlan::EditCondOnly => vec![EvalKind::EditFull],
+        }
+    }
+
+    /// Evals required for the current step, in slot order.
+    pub fn current_evals(&self) -> Vec<EvalKind> {
+        Self::evals_for(&self.plan)
+    }
+
+    /// Current continuous time for the step.
+    pub fn current_t(&self) -> f64 {
+        solver::timesteps(self.req.steps)[self.step]
+    }
+
+    /// Build the backend input for one eval slot.
+    pub fn eval_input(&self, kind: EvalKind) -> EvalInput {
+        let t = self.current_t() as f32;
+        let null = vec![0i32; self.req.tokens.len()];
+        let uncond_tokens = self.req.neg_tokens.clone().unwrap_or(null.clone());
+        let (tokens, with_src) = match kind {
+            EvalKind::Cond => (self.req.tokens.clone(), false),
+            EvalKind::Uncond => (uncond_tokens, false),
+            EvalKind::EditFull => (self.req.tokens.clone(), true),
+            EvalKind::EditImg => (uncond_tokens, true),
+            EvalKind::EditNull => (null, false),
+        };
+        let x = if self.req.src_image.is_some()
+            && matches!(
+                kind,
+                EvalKind::EditFull | EvalKind::EditImg | EvalKind::EditNull
+            ) {
+            // editing model input is x ‖ src (or x ‖ 0 for the null-image eval)
+            let src = self.req.src_image.as_ref().unwrap();
+            let mut v = Vec::with_capacity(self.x.len() * 2);
+            v.extend_from_slice(&self.x);
+            if with_src {
+                v.extend_from_slice(src);
+            } else {
+                v.extend(std::iter::repeat(0.0f32).take(src.len()));
+            }
+            v
+        } else {
+            self.x.clone()
+        };
+        EvalInput { x, t, tokens }
+    }
+
+    /// Record one eval result (by slot index). Returns true when the step
+    /// has all its results and can be advanced with [`Self::complete_step`].
+    pub fn deliver(&mut self, slot: usize, eps: Vec<f32>) -> bool {
+        assert!(self.pending[slot].is_none(), "duplicate delivery");
+        self.pending[slot] = Some(eps);
+        self.pending_left -= 1;
+        self.nfes += 1;
+        self.pending_left == 0
+    }
+
+    /// Combine the step's evals per the plan, advance the solver, and set up
+    /// the next step. Returns `Some(Completion)` when the request finishes.
+    pub fn complete_step(&mut self) -> Option<Completion> {
+        assert_eq!(self.pending_left, 0, "step still has pending evals");
+        let results: Vec<Vec<f32>> =
+            self.pending.drain(..).map(Option::unwrap).collect();
+        let dim = self.x.len();
+        let record = self.req.record_trajectory || self.req.policy.needs_history();
+        let step_coefs = self.coefs[self.step];
+
+        // Eq. 7's cosine on the x0 data predictions (x0 = j_x x + j_eps eps):
+        // an affine re-parameterization of the same network outputs whose
+        // cond/uncond difference shrinks with sigma/alpha, making the AG
+        // signal robust on small models (DESIGN.md §Hardware-Adaptation).
+        let x0_cosine = |a: &Tensor, b: &Tensor, x: &[f32]| -> f64 {
+            let jx = step_coefs.j_x as f32;
+            let je = step_coefs.j_eps as f32;
+            let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
+            for i in 0..x.len() {
+                let xa = (jx * x[i] + je * a.data[i]) as f64;
+                let xb = (jx * x[i] + je * b.data[i]) as f64;
+                dot += xa * xb;
+                na += xa * xa;
+                nb += xb * xb;
+            }
+            dot / (na.sqrt() * nb.sqrt()).max(1e-12)
+        };
+
+        let (eps, gamma, gamma_eps) = match &self.plan {
+            StepPlan::Guided { s } => {
+                let c = Tensor::new(vec![dim], results[0].clone());
+                let u = Tensor::new(vec![dim], results[1].clone());
+                let gamma_eps = c.cosine(&u);
+                let gamma = x0_cosine(&c, &u, &self.x);
+                let eps = Tensor::cfg_combine(&c, &u, *s).data;
+                if record {
+                    self.hist_c.push(c);
+                    self.hist_u.push(u);
+                }
+                self.cfg_steps += 1;
+                if !self.truncated && self.req.policy.should_truncate(gamma) {
+                    self.truncated = true;
+                    self.truncated_at = Some(self.step);
+                }
+                (eps, gamma, gamma_eps)
+            }
+            StepPlan::CondOnly => {
+                if record {
+                    // conditional-only steps have no unconditional stream;
+                    // history-consuming policies never emit this plan.
+                    debug_assert!(!self.req.policy.needs_history());
+                }
+                (results[0].clone(), f64::NAN, f64::NAN)
+            }
+            StepPlan::UncondOnly => (results[0].clone(), f64::NAN, f64::NAN),
+            StepPlan::LinearGuided { s } => {
+                let c = Tensor::new(vec![dim], results[0].clone());
+                self.hist_c.push(c.clone());
+                let coeffs = match &self.req.policy {
+                    GuidancePolicy::LinearAg { coeffs, .. } => coeffs.clone(),
+                    _ => panic!("LinearGuided plan from a non-LinearAg policy"),
+                };
+                let u_hat = coeffs.predict(self.step, &self.hist_c, &self.hist_u);
+                let gamma_eps = c.cosine(&u_hat);
+                let gamma = x0_cosine(&c, &u_hat, &self.x);
+                let eps = Tensor::cfg_combine(&c, &u_hat, *s).data;
+                self.hist_u.push(u_hat);
+                (eps, gamma, gamma_eps)
+            }
+            StepPlan::EditGuided { s_text, s_img } => {
+                let full = Tensor::new(vec![dim], results[0].clone());
+                let img = Tensor::new(vec![dim], results[1].clone());
+                let null = Tensor::new(vec![dim], results[2].clone());
+                // Eq. 9: null + s_text (full - img) + s_img (img - null)
+                let mut eps = null.clone();
+                eps.axpy(*s_text, &full);
+                eps.axpy(-*s_text, &img);
+                eps.axpy(*s_img, &img);
+                eps.axpy(-*s_img, &null);
+                let gamma_eps = full.cosine(&img);
+                // For editing, truncation uses the raw-ε cosine of the
+                // instruction pair: both streams share the source-image
+                // anchor, so their x0 predictions agree almost immediately
+                // while the instruction-guidance direction (what Eq. 9's
+                // s_text term needs) converges gradually — the paper's
+                // "terms in Eq. 9 converge over time".
+                let gamma = gamma_eps;
+                self.cfg_steps += 1;
+                if !self.truncated && self.req.policy.should_truncate(gamma) {
+                    self.truncated = true;
+                    self.truncated_at = Some(self.step);
+                }
+                (eps.data, gamma, gamma_eps)
+            }
+            StepPlan::EditCondOnly => (results[0].clone(), f64::NAN, f64::NAN),
+        };
+        self.gammas.push(gamma);
+        self.gammas_eps.push(gamma_eps);
+
+        // solver advance
+        let c = &step_coefs;
+        let (x_next, x0) = solver::apply_step(&self.x, &eps, &self.x0_prev, c);
+        self.x = x_next;
+        self.x0_prev = x0;
+        if self.req.record_iterates {
+            self.iterates.push(self.x0_prev.clone());
+        }
+        self.step += 1;
+
+        if self.step == self.req.steps {
+            let trajectory = if self.req.record_trajectory {
+                Some(ScoreTrajectory {
+                    eps_c: std::mem::take(&mut self.hist_c),
+                    eps_u: std::mem::take(&mut self.hist_u),
+                })
+            } else {
+                None
+            };
+            return Some(Completion {
+                id: self.req.id,
+                image: std::mem::take(&mut self.x0_prev),
+                nfes: self.nfes,
+                cfg_steps: self.cfg_steps,
+                truncated_at: self.truncated_at,
+                gammas: std::mem::take(&mut self.gammas),
+                gammas_eps: std::mem::take(&mut self.gammas_eps),
+                trajectory,
+                iterates: std::mem::take(&mut self.iterates),
+            });
+        }
+
+        // plan the next step
+        self.plan = self
+            .req
+            .policy
+            .plan(self.step, self.req.steps, self.truncated);
+        let slots = Self::evals_for(&self.plan).len();
+        self.pending = vec![None; slots];
+        self.pending_left = slots;
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::GuidancePolicy;
+
+    fn mk_state(policy: GuidancePolicy) -> RequestState {
+        let req = Request::new(1, "gmm", vec![1, 0, 0, 0], 42, 4, policy);
+        RequestState::new(req, 8)
+    }
+
+    #[test]
+    fn seeded_init_is_deterministic() {
+        let a = mk_state(GuidancePolicy::Cfg { s: 2.0 });
+        let b = mk_state(GuidancePolicy::Cfg { s: 2.0 });
+        assert_eq!(a.x, b.x);
+    }
+
+    #[test]
+    fn cfg_step_lifecycle_and_nfe_count() {
+        let mut st = mk_state(GuidancePolicy::Cfg { s: 2.0 });
+        for step in 0..4 {
+            let evals = st.current_evals();
+            assert_eq!(evals, vec![EvalKind::Cond, EvalKind::Uncond]);
+            assert!(!st.deliver(0, vec![0.1; 8]));
+            assert!(st.deliver(1, vec![0.2; 8]));
+            let done = st.complete_step();
+            assert_eq!(done.is_some(), step == 3);
+        }
+    }
+
+    #[test]
+    fn completion_reports_accounting() {
+        let mut st = mk_state(GuidancePolicy::Cfg { s: 2.0 });
+        let mut out = None;
+        for _ in 0..4 {
+            st.deliver(0, vec![0.1; 8]);
+            st.deliver(1, vec![0.1; 8]);
+            out = st.complete_step();
+        }
+        let c = out.unwrap();
+        assert_eq!(c.nfes, 8);
+        assert_eq!(c.cfg_steps, 4);
+        assert_eq!(c.gammas.len(), 4);
+        assert_eq!(c.truncated_at, None);
+    }
+
+    #[test]
+    fn ag_truncates_on_identical_streams() {
+        // identical cond/uncond → gamma = 1 → truncate after step 0.
+        let mut st = mk_state(GuidancePolicy::Ag {
+            s: 2.0,
+            gamma_bar: 0.999,
+        });
+        st.deliver(0, vec![0.5; 8]);
+        st.deliver(1, vec![0.5; 8]);
+        assert!(st.complete_step().is_none());
+        assert_eq!(st.truncated_at, Some(0));
+        // subsequent steps are conditional-only
+        assert_eq!(st.current_evals(), vec![EvalKind::Cond]);
+        st.deliver(0, vec![0.4; 8]);
+        st.complete_step();
+        assert_eq!(st.current_evals(), vec![EvalKind::Cond]);
+    }
+
+    #[test]
+    fn negative_prompt_replaces_uncond_tokens() {
+        let mut req = Request::new(1, "m", vec![1, 2, 0, 0], 0, 2,
+                                   GuidancePolicy::Cfg { s: 2.0 });
+        req.neg_tokens = Some(vec![0, 3, 0, 0]);
+        let st = RequestState::new(req, 8);
+        let inp = st.eval_input(EvalKind::Uncond);
+        assert_eq!(inp.tokens, vec![0, 3, 0, 0]);
+        let inp = st.eval_input(EvalKind::Cond);
+        assert_eq!(inp.tokens, vec![1, 2, 0, 0]);
+    }
+
+    #[test]
+    fn edit_inputs_concatenate_source() {
+        let mut req = Request::new(1, "dit_edit", vec![0, 2, 0, 0], 0, 2,
+                                   GuidancePolicy::Pix2Pix {
+                                       s_text: 7.5,
+                                       s_img: 1.5,
+                                       gamma_bar: None,
+                                       full_prefix: None,
+                                   });
+        req.src_image = Some(vec![0.7; 8]);
+        let st = RequestState::new(req, 8);
+        let full = st.eval_input(EvalKind::EditFull);
+        assert_eq!(full.x.len(), 16);
+        assert_eq!(&full.x[8..], &[0.7f32; 8][..]);
+        let null = st.eval_input(EvalKind::EditNull);
+        assert_eq!(&null.x[8..], &[0.0f32; 8][..]);
+        assert_eq!(null.tokens, vec![0, 0, 0, 0]);
+        // eq-9 triple eval costs 3 NFEs
+        assert_eq!(st.current_evals().len(), 3);
+    }
+
+    #[test]
+    fn trajectory_recorded_when_requested() {
+        let mut req = Request::new(1, "m", vec![1, 0, 0, 0], 7, 3,
+                                   GuidancePolicy::Cfg { s: 2.0 });
+        req.record_trajectory = true;
+        let mut st = RequestState::new(req, 8);
+        let mut out = None;
+        for i in 0..3 {
+            st.deliver(0, vec![i as f32 + 0.5; 8]);
+            st.deliver(1, vec![i as f32; 8]);
+            out = st.complete_step();
+        }
+        let tr = out.unwrap().trajectory.unwrap();
+        assert_eq!(tr.eps_c.len(), 3);
+        assert_eq!(tr.eps_u.len(), 3);
+        assert_eq!(tr.eps_c[1].data, vec![1.5; 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate delivery")]
+    fn duplicate_delivery_panics() {
+        let mut st = mk_state(GuidancePolicy::Cfg { s: 2.0 });
+        st.deliver(0, vec![0.0; 8]);
+        st.deliver(0, vec![0.0; 8]);
+    }
+
+    #[test]
+    fn times_decrease_over_steps() {
+        let mut st = mk_state(GuidancePolicy::CondOnly);
+        let t0 = st.current_t();
+        st.deliver(0, vec![0.0; 8]);
+        st.complete_step();
+        assert!(st.current_t() < t0);
+    }
+}

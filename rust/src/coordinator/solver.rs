@@ -1,0 +1,220 @@
+//! Schedule math: the Rust mirror of `python/compile/diffusion.py`.
+//!
+//! The cosine VP schedule and the DPM-Solver++(2M) coefficient folding must
+//! agree bit-for-bit in structure (f64 math, same formulas) with the python
+//! side that lowered the solver kernel; `runtime` integration tests pin this
+//! module against the parity table exported in `manifest.json`.
+
+/// Schedule constants — keep in sync with diffusion.py.
+pub const COSINE_S: f64 = 0.008;
+pub const T_MAX: f64 = 0.98;
+pub const T_MIN: f64 = 0.02;
+
+/// Cosine cumulative signal level, normalized so `alpha_bar(0) = 1`.
+pub fn alpha_bar(t: f64) -> f64 {
+    let f = |u: f64| ((u + COSINE_S) / (1.0 + COSINE_S) * std::f64::consts::FRAC_PI_2)
+        .cos()
+        .powi(2);
+    f(t) / f(0.0)
+}
+
+/// VP `(alpha_t, sigma_t)` with `alpha^2 + sigma^2 = 1`.
+pub fn alpha_sigma(t: f64) -> (f64, f64) {
+    let ab = alpha_bar(t);
+    (ab.sqrt(), (1.0 - ab).sqrt())
+}
+
+/// Half log-SNR `lambda_t = log(alpha_t / sigma_t)`.
+pub fn lambda(t: f64) -> f64 {
+    let (a, s) = alpha_sigma(t);
+    (a / s).ln()
+}
+
+/// Uniform time grid from `T_MAX` down to `T_MIN`, `num_steps + 1` points.
+pub fn timesteps(num_steps: usize) -> Vec<f64> {
+    assert!(num_steps >= 1);
+    (0..=num_steps)
+        .map(|i| T_MAX + (T_MIN - T_MAX) * i as f64 / num_steps as f64)
+        .collect()
+}
+
+/// The five folded DPM++(2M) coefficients for one step (see
+/// `kernels/dpmpp.py` for the consuming kernel and `ref.dpmpp_step` for the
+/// algebra): `[k_x, k_eps, k_prev, j_x, j_eps]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepCoefs {
+    pub k_x: f64,
+    pub k_eps: f64,
+    pub k_prev: f64,
+    pub j_x: f64,
+    pub j_eps: f64,
+}
+
+impl StepCoefs {
+    pub fn as_array(&self) -> [f64; 5] {
+        [self.k_x, self.k_eps, self.k_prev, self.j_x, self.j_eps]
+    }
+}
+
+/// Fold the update from `t_s` to `t_t` (previous solver point `t_r`, `None`
+/// → Euler first step) into affine coefficients.
+pub fn fold_coefs(t_s: f64, t_t: f64, t_r: Option<f64>) -> StepCoefs {
+    let (a_s, s_s) = alpha_sigma(t_s);
+    let (a_t, s_t) = alpha_sigma(t_t);
+    let h = lambda(t_t) - lambda(t_s);
+    let e = a_t * (1.0 - (-h).exp());
+    let (big_a, big_b) = match t_r {
+        None => (1.0, 0.0),
+        Some(tr) => {
+            let r0 = (lambda(t_s) - lambda(tr)) / h;
+            (1.0 + 1.0 / (2.0 * r0), -1.0 / (2.0 * r0))
+        }
+    };
+    let j_x = 1.0 / a_s;
+    let j_eps = -s_s / a_s;
+    StepCoefs {
+        k_x: s_t / s_s + e * big_a * j_x,
+        k_eps: e * big_a * j_eps,
+        k_prev: e * big_b,
+        j_x,
+        j_eps,
+    }
+}
+
+/// Full coefficient table for a trajectory of `num_steps` updates.
+pub fn coef_table(num_steps: usize) -> Vec<StepCoefs> {
+    let ts = timesteps(num_steps);
+    (0..num_steps)
+        .map(|i| {
+            let t_r = if i > 0 { Some(ts[i - 1]) } else { None };
+            fold_coefs(ts[i], ts[i + 1], t_r)
+        })
+        .collect()
+}
+
+/// Host-side solver update (f32, matching the device kernel's arithmetic):
+/// returns `(x_next, x0)`.
+pub fn apply_step(x: &[f32], eps: &[f32], x0_prev: &[f32], c: &StepCoefs) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(x.len(), eps.len());
+    debug_assert_eq!(x.len(), x0_prev.len());
+    let (kx, ke, kp, jx, je) = (
+        c.k_x as f32,
+        c.k_eps as f32,
+        c.k_prev as f32,
+        c.j_x as f32,
+        c.j_eps as f32,
+    );
+    let mut x_next = Vec::with_capacity(x.len());
+    let mut x0 = Vec::with_capacity(x.len());
+    for i in 0..x.len() {
+        x_next.push(kx * x[i] + ke * eps[i] + kp * x0_prev[i]);
+        x0.push(jx * x[i] + je * eps[i]);
+    }
+    (x_next, x0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vp_identity() {
+        for i in 0..=32 {
+            let t = i as f64 / 32.0;
+            let (a, s) = alpha_sigma(t);
+            assert!((a * a + s * s - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn alpha_bar_boundaries() {
+        assert!((alpha_bar(0.0) - 1.0).abs() < 1e-12);
+        assert!(alpha_bar(1.0) < 1e-3);
+        // monotone decreasing
+        let mut prev = 1.0;
+        for i in 1..=64 {
+            let v = alpha_bar(i as f64 / 64.0);
+            assert!(v <= prev + 1e-15);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn timesteps_grid() {
+        let ts = timesteps(20);
+        assert_eq!(ts.len(), 21);
+        assert_eq!(ts[0], T_MAX);
+        assert!((ts[20] - T_MIN).abs() < 1e-12);
+        assert!(ts.windows(2).all(|w| w[1] < w[0]));
+    }
+
+    #[test]
+    fn euler_step_has_no_prev() {
+        let ts = timesteps(20);
+        let c = fold_coefs(ts[0], ts[1], None);
+        assert_eq!(c.k_prev, 0.0);
+    }
+
+    #[test]
+    fn x0_row_is_data_prediction() {
+        let t = 0.6;
+        let (a, s) = alpha_sigma(t);
+        let c = fold_coefs(t, 0.55, Some(0.65));
+        assert!((c.j_x - 1.0 / a).abs() < 1e-12);
+        assert!((c.j_eps + s / a).abs() < 1e-12);
+    }
+
+    #[test]
+    fn apply_step_matches_formula() {
+        let c = StepCoefs {
+            k_x: 0.9,
+            k_eps: -0.1,
+            k_prev: 0.05,
+            j_x: 1.2,
+            j_eps: -0.7,
+        };
+        let (xn, x0) = apply_step(&[1.0, 2.0], &[0.5, -0.5], &[4.0, 0.0], &c);
+        assert!((xn[0] - (0.9 - 0.05 + 0.2)).abs() < 1e-6);
+        assert!((x0[1] - (2.4 + 0.35)).abs() < 1e-6);
+    }
+
+    /// Same analytic-model convergence test as python's
+    /// test_dpmpp_matches_fine_euler_on_analytic_model, proving the Rust
+    /// mirror integrates the same ODE to the same accuracy.
+    #[test]
+    fn solver_tracks_analytic_ode() {
+        let run = |steps: usize| -> Vec<f32> {
+            let ts = timesteps(steps);
+            let mut rng = crate::util::rng::Rng::new(7);
+            let mut x = rng.normal_vec(48);
+            let mut x0_prev = vec![0.0f32; 48];
+            for i in 0..steps {
+                let (_, s) = alpha_sigma(ts[i]);
+                let eps: Vec<f32> = x.iter().map(|&v| v * s as f32).collect();
+                let t_r = if i > 0 { Some(ts[i - 1]) } else { None };
+                let c = fold_coefs(ts[i], ts[i + 1], t_r);
+                let (xn, x0) = apply_step(&x, &eps, &x0_prev, &c);
+                x = xn;
+                x0_prev = x0;
+            }
+            x
+        };
+        let coarse = run(20);
+        let fine = run(400);
+        let max_ref = fine.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        let err = coarse
+            .iter()
+            .zip(&fine)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(err / max_ref < 1e-2, "rel err {}", err / max_ref);
+    }
+
+    #[test]
+    fn coef_table_matches_fold() {
+        let table = coef_table(20);
+        assert_eq!(table.len(), 20);
+        let ts = timesteps(20);
+        assert_eq!(table[5], fold_coefs(ts[5], ts[6], Some(ts[4])));
+    }
+}

@@ -1,0 +1,180 @@
+//! Shared experiment harness for the figure/table benches: run a policy
+//! over an evaluation set with paper-protocol seeding (same seed sequence
+//! for every policy), and aggregate quality/NFE/latency.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::backend::Backend;
+use crate::coordinator::engine::Engine;
+use crate::coordinator::policy::GuidancePolicy;
+use crate::coordinator::request::{Completion, Request};
+use crate::prompts::Prompt;
+use crate::quality::ssim::ssim_rgb;
+use crate::stats;
+
+/// One policy evaluated over the full prompt set.
+#[derive(Debug)]
+pub struct PolicyRun {
+    pub name: String,
+    pub completions: Vec<Completion>,
+    pub wall: Duration,
+    pub mean_occupancy: f64,
+}
+
+impl PolicyRun {
+    pub fn total_nfes(&self) -> usize {
+        self.completions.iter().map(|c| c.nfes).sum()
+    }
+
+    pub fn mean_nfes(&self) -> f64 {
+        self.total_nfes() as f64 / self.completions.len() as f64
+    }
+
+    pub fn nfe_std(&self) -> f64 {
+        let v: Vec<f64> = self.completions.iter().map(|c| c.nfes as f64).collect();
+        stats::std_dev(&v)
+    }
+
+    pub fn images(&self) -> Vec<&[f32]> {
+        self.completions.iter().map(|c| c.image.as_slice()).collect()
+    }
+}
+
+/// Evaluation-run options.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub model: String,
+    pub steps: usize,
+    pub seed_base: u64,
+    pub record_trajectory: bool,
+    pub record_iterates: bool,
+    pub neg_tokens: Option<Vec<i32>>,
+}
+
+impl RunSpec {
+    pub fn new(model: &str, steps: usize) -> RunSpec {
+        RunSpec {
+            model: model.to_owned(),
+            steps,
+            seed_base: 1000,
+            record_trajectory: false,
+            record_iterates: false,
+            neg_tokens: None,
+        }
+    }
+}
+
+/// Run one policy over the prompt set. Request i uses seed `seed_base + i`
+/// regardless of policy — the paper's "same seed sequence for both models".
+pub fn run_policy<B: Backend>(
+    engine: &mut Engine<B>,
+    prompts: &[Prompt],
+    spec: &RunSpec,
+    policy: GuidancePolicy,
+) -> Result<PolicyRun> {
+    let batches_before = engine.stats.batches;
+    let items_before = engine.stats.items;
+    let reqs: Vec<Request> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let mut r = Request::new(
+                i as u64,
+                &spec.model,
+                p.tokens(),
+                spec.seed_base + i as u64,
+                spec.steps,
+                policy.clone(),
+            );
+            r.record_trajectory = spec.record_trajectory;
+            r.record_iterates = spec.record_iterates;
+            r.neg_tokens = spec.neg_tokens.clone();
+            r
+        })
+        .collect();
+    let started = Instant::now();
+    let completions = engine.run(reqs)?;
+    let wall = started.elapsed();
+    let batches = engine.stats.batches - batches_before;
+    let items = engine.stats.items - items_before;
+    Ok(PolicyRun {
+        name: policy.name(),
+        completions,
+        wall,
+        mean_occupancy: if batches == 0 {
+            0.0
+        } else {
+            items as f64 / batches as f64
+        },
+    })
+}
+
+/// Pairwise SSIM of two runs (same prompt order), 16x16 RGB latents.
+pub fn ssim_series(a: &PolicyRun, b: &PolicyRun, img: usize) -> Vec<f64> {
+    a.completions
+        .iter()
+        .zip(&b.completions)
+        .map(|(x, y)| ssim_rgb(&x.image, &y.image, img, img))
+        .collect()
+}
+
+/// mean ± std of a series.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    (stats::mean(xs), stats::std_dev(xs))
+}
+
+/// Print an aligned table: `widths` derived from headers.
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: Vec<String>| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>width$}", c, width = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", line(headers.iter().map(|h| h.to_string()).collect()));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    for row in rows {
+        println!("{}", line(row.clone()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::GmmBackend;
+    use crate::sim::gmm::Gmm;
+
+    #[test]
+    fn run_policy_uses_shared_seeds() {
+        let ps = crate::prompts::eval_set(4, 0);
+        let spec = RunSpec::new("gmm", 8);
+        let mut e1 = Engine::new(GmmBackend::new(Gmm::axes(8, 6, 3.0, 0.05)));
+        let a = run_policy(&mut e1, &ps, &spec, GuidancePolicy::Cfg { s: 2.0 }).unwrap();
+        let mut e2 = Engine::new(GmmBackend::new(Gmm::axes(8, 6, 3.0, 0.05)));
+        let b = run_policy(&mut e2, &ps, &spec,
+                           GuidancePolicy::Ag { s: 2.0, gamma_bar: 2.0 }).unwrap();
+        // unreachable threshold → identical trajectories per prompt
+        for (x, y) in a.completions.iter().zip(&b.completions) {
+            assert_eq!(x.image, y.image);
+        }
+        assert!(a.mean_nfes() >= b.mean_nfes() - 1e-9);
+    }
+
+    #[test]
+    fn table_printer_does_not_panic() {
+        print_table(
+            &["policy", "NFEs"],
+            &[vec!["cfg".into(), "40".into()], vec!["ag".into(), "29.6".into()]],
+        );
+    }
+}

@@ -1,0 +1,6 @@
+//! Evaluation harnesses shared by the figure/table benches.
+
+pub mod annotators;
+pub mod harness;
+pub mod probe;
+pub mod scene_org;

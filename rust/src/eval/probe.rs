@@ -1,0 +1,82 @@
+//! Attribute probes: verify semantics of generated images without a learned
+//! classifier. Used by the negative-prompt experiment (Fig. 7/11): a
+//! negative color prompt must *suppress* that color in the output, and AG
+//! must match CFG's suppression.
+
+/// Mean RGB over the brightest region (the rendered shape) of an image in
+/// [-1, 1]. The shape is found as the pixels in the top 40% of the image's
+/// luma *range* — robust to the shape occupying only a few percent of the
+/// pixels (a percentile threshold collapses onto the background there).
+pub fn shape_color(img: &[f32], width: usize, height: usize) -> [f64; 3] {
+    let luma: Vec<f32> = crate::quality::luma(img);
+    let lo = luma.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+    let hi = luma.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let thresh = lo + 0.6 * (hi - lo);
+    let mut acc = [0.0f64; 3];
+    let mut n = 0usize;
+    for i in 0..width * height {
+        if luma[i] as f64 >= thresh {
+            for c in 0..3 {
+                acc[c] += img[i * 3 + c] as f64;
+            }
+            n += 1;
+        }
+    }
+    if n > 0 {
+        for a in &mut acc {
+            *a /= n as f64;
+        }
+    }
+    acc
+}
+
+/// Strength of color channel `channel` relative to the others in the shape
+/// region; higher = more of that color.
+pub fn color_dominance(img: &[f32], width: usize, height: usize, channel: usize) -> f64 {
+    let c = shape_color(img, width, height);
+    let others: f64 = (0..3).filter(|&i| i != channel).map(|i| c[i]).sum::<f64>() / 2.0;
+    c[channel] - others
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn solid_shape(rgb: [f32; 3]) -> Vec<f32> {
+        // dark background with a bright 6x6 square of the given color
+        let mut img = vec![-0.8f32; 16 * 16 * 3];
+        for y in 5..11 {
+            for x in 5..11 {
+                for c in 0..3 {
+                    img[(y * 16 + x) * 3 + c] = rgb[c];
+                }
+            }
+        }
+        img
+    }
+
+    #[test]
+    fn detects_red_shape() {
+        let img = solid_shape([0.9, -0.5, -0.5]);
+        let c = shape_color(&img, 16, 16);
+        assert!(c[0] > 0.5, "{c:?}");
+        assert!(c[1] < 0.0 && c[2] < 0.0, "{c:?}");
+        assert!(color_dominance(&img, 16, 16, 0) > 1.0);
+    }
+
+    #[test]
+    fn dominance_is_comparative() {
+        let red = solid_shape([0.9, -0.5, -0.5]);
+        let green = solid_shape([-0.5, 0.9, -0.5]);
+        assert!(color_dominance(&red, 16, 16, 0) > color_dominance(&green, 16, 16, 0));
+        assert!(color_dominance(&green, 16, 16, 1) > color_dominance(&red, 16, 16, 1));
+    }
+
+    #[test]
+    fn white_shape_has_no_dominant_channel() {
+        let img = solid_shape([0.9, 0.9, 0.9]);
+        for c in 0..3 {
+            assert!(color_dominance(&img, 16, 16, c).abs() < 0.1);
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! # adaptive-guidance
+//!
+//! A full-system reproduction of *"Adaptive Guidance: Training-free
+//! Acceleration of Conditional Diffusion Models"* (AAAI 2025) as a
+//! three-layer Rust + JAX + Pallas serving stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator: continuation batching of
+//!   NFE work items, the guidance policy engine (CFG / AG / LINEARAG /
+//!   searched / pix2pix), OLS fitting, the NAS search driver, metrics,
+//!   quality + statistics substrates, and the CLI/server.
+//! * **L2/L1 (`python/compile/`)** — the DiT denoiser and Pallas kernels,
+//!   AOT-lowered once to HLO text and executed here via the PJRT C API
+//!   (`runtime`). Python never runs on the request path.
+//!
+//! Start with [`coordinator::engine::Engine`] and
+//! [`coordinator::policy::GuidancePolicy`]; see `examples/quickstart.rs`.
+
+pub mod backend;
+pub mod coordinator;
+pub mod eval;
+pub mod metrics;
+pub mod ols;
+pub mod perfstat;
+pub mod prompts;
+pub mod quality;
+pub mod render;
+pub mod runtime;
+pub mod search;
+pub mod server;
+pub mod sim;
+pub mod stats;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+
+pub use backend::{Backend, EvalInput, GmmBackend};
+pub use coordinator::engine::Engine;
+pub use coordinator::policy::GuidancePolicy;
+pub use coordinator::request::{Completion, Request};

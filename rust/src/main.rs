@@ -1,0 +1,291 @@
+//! `agd` — the Adaptive Guidance serving CLI (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   info                         artifact + model inventory
+//!   generate [--prompt ..]       generate images under a policy, write PPMs
+//!   serve [--addr ..]            TCP line-protocol server
+//!   search [--iters ..]          run the NAS policy search (§4)
+//!   fit-ols [--train ..]         collect trajectories + fit LINEARAG OLS
+//!
+//! All subcommands load artifacts from `--artifacts` (default `artifacts/`).
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use adaptive_guidance::coordinator::engine::Engine;
+use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::request::Request;
+use adaptive_guidance::ols;
+use adaptive_guidance::prompts::{self, Prompt};
+use adaptive_guidance::runtime::PjrtBackend;
+use adaptive_guidance::search;
+use adaptive_guidance::server::{serve, ServerConfig};
+use adaptive_guidance::util::cli::Args;
+use adaptive_guidance::util::json;
+use adaptive_guidance::util::ppm;
+use adaptive_guidance::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "info" => cmd_info(&args),
+        "generate" => cmd_generate(&args),
+        "serve" => cmd_serve(&args),
+        "search" => cmd_search(&args),
+        "fit-ols" => cmd_fit_ols(&args),
+        "help" | _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    eprintln!(
+        "agd — Adaptive Guidance diffusion serving\n\n\
+         USAGE: agd <info|generate|serve|search|fit-ols> [options]\n\n\
+         common options:\n\
+           --artifacts DIR     artifacts directory (default: artifacts)\n\
+           --model NAME        dit_s | dit_b (default: dit_b)\n\n\
+         generate: --prompt TEXT --negative TEXT --policy cfg|ag|cond\n\
+           --gamma-bar F --guidance F --steps N --seed N --n N --out DIR\n\
+         serve:    --addr HOST:PORT\n\
+         search:   --iters N --lr F --seed N --out FILE\n\
+         fit-ols:  --train N --test N --steps N --out FILE"
+    );
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn backend(args: &Args) -> Result<PjrtBackend> {
+    PjrtBackend::load(&artifacts_dir(args))
+}
+
+fn policy_from_args(args: &Args) -> Result<GuidancePolicy> {
+    let s = args.f64("guidance", 7.5) as f32;
+    let gamma_bar = args.f64("gamma-bar", 0.9988);
+    Ok(match args.get_or("policy", "ag") {
+        "cfg" => GuidancePolicy::Cfg { s },
+        "cond" | "distilled" => GuidancePolicy::CondOnly,
+        "ag" => GuidancePolicy::Ag { s, gamma_bar },
+        other => return Err(anyhow!("unknown policy `{other}`")),
+    })
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let be = backend(args)?;
+    let m = &be.manifest;
+    println!("artifacts: {}", m.root.display());
+    println!(
+        "latent: {}x{}x{} (flat {})  buckets {:?}",
+        m.img, m.img, m.channels, m.flat_dim, m.buckets
+    );
+    println!(
+        "defaults: guidance {} steps {}",
+        m.default_guidance, m.default_steps
+    );
+    for (name, meta) in &m.models {
+        println!(
+            "model {name}: {} params, in_channels {}, buckets {:?}",
+            meta.params, meta.in_channels, meta.buckets
+        );
+    }
+    println!(
+        "search graph: {} (T={} options={:?})",
+        m.search.artifact.as_deref().unwrap_or("<missing>"),
+        m.search.steps,
+        m.search.options
+    );
+    println!("prompt space: {} prompts", Prompt::space_size());
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let be = backend(args)?;
+    let model = args.get_or("model", "dit_b").to_owned();
+    let img = be.manifest.img;
+    let steps = args.usize("steps", be.manifest.default_steps);
+    let n = args.usize("n", 4);
+    let seed = args.u64("seed", 0);
+    let policy = policy_from_args(args)?;
+    let out_dir = PathBuf::from(args.get_or("out", "out"));
+    std::fs::create_dir_all(&out_dir)?;
+
+    let mut engine = Engine::new(be);
+    let prompt_list: Vec<Prompt> = match args.get("prompt") {
+        Some(text) => vec![Prompt::parse(text).ok_or_else(|| anyhow!("bad prompt"))?],
+        None => prompts::eval_set(n, seed),
+    };
+    let mut reqs = Vec::new();
+    for i in 0..n {
+        let p = prompt_list[i % prompt_list.len()];
+        let mut r = Request::new(i as u64, &model, p.tokens(), seed + i as u64,
+                                 steps, policy.clone());
+        if let Some(neg) = args.get("negative") {
+            let np = Prompt::parse(neg).unwrap();
+            r.neg_tokens = Some(prompts::negative_tokens(1, np.color as i32 + 1));
+        }
+        reqs.push((p, r));
+    }
+    let started = std::time::Instant::now();
+    let completions = engine.run(reqs.iter().map(|(_, r)| r.clone()).collect())?;
+    let elapsed = started.elapsed().as_secs_f64();
+    let mut total_nfes = 0;
+    for ((p, _), c) in reqs.iter().zip(&completions) {
+        total_nfes += c.nfes;
+        let up = ppm::upscale(&c.image, img, img, 8);
+        let path = out_dir.join(format!("sample_{}.ppm", c.id));
+        ppm::write_ppm(&path, &up, img * 8, img * 8)?;
+        println!(
+            "#{} \"{}\" nfes={} truncated_at={:?} -> {}",
+            c.id,
+            p.text(),
+            c.nfes,
+            c.truncated_at,
+            path.display()
+        );
+    }
+    println!(
+        "policy {}: {} images, {} NFEs total ({:.1} avg), {:.2}s, occupancy {:.1}",
+        policy.name(),
+        completions.len(),
+        total_nfes,
+        total_nfes as f64 / completions.len() as f64,
+        elapsed,
+        engine.stats.mean_occupancy()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "dit_b").to_owned();
+    let dir = artifacts_dir(args);
+    let cfg = ServerConfig {
+        addr: args.get_or("addr", "127.0.0.1:7458").to_owned(),
+        model: model.clone(),
+        default_steps: args.usize("steps", 20),
+        default_guidance: args.f64("guidance", 7.5),
+        default_gamma_bar: args.f64("gamma-bar", 0.9988),
+    };
+    // the PJRT client is thread-affine: construct it inside the engine thread
+    serve(
+        move || {
+            let mut be = PjrtBackend::load(&dir)?;
+            be.warmup(&model)?;
+            Ok(be)
+        },
+        cfg,
+    )
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let mut be = backend(args)?;
+    let meta = be.manifest.search.clone();
+    let latent_len = be.manifest.flat_dim;
+    let cfg = search::SearchConfig {
+        steps: meta.steps,
+        options: meta.options.len(),
+        batch: meta.batch,
+        latent_len,
+        iters: args.usize("iters", 60),
+        lr: args.f64("lr", 0.02) as f32,
+        seed: args.u64("seed", 0),
+    };
+    eprintln!(
+        "searching: T={} options={} iters={} (target cost {})",
+        cfg.steps, cfg.options, cfg.iters, meta.cost_target
+    );
+    let mut grad = |a: &[f32], g: &[f32], x: &[f32], t: &[i32]| be.run_search_grad(a, g, x, t);
+    let res = search::run_search(&mut grad, &cfg, |rng: &mut Rng| {
+        Prompt::nth(rng.below(Prompt::space_size())).tokens()
+    })?;
+    println!("step  {:>9} {:>9} {:>9} {:>9} {:>9}", "uncond", "cond", "cfg/2", "cfg", "cfg*2");
+    for (t, row) in res.scores().iter().enumerate() {
+        println!(
+            "{t:>4}  {:>9.3} {:>9.3} {:>9.3} {:>9.3} {:>9.3}",
+            row[0], row[1], row[2], row[3], row[4]
+        );
+    }
+    println!(
+        "final loss {:.5} mse {:.5} soft-NFE {:.2}",
+        res.trace.loss.last().unwrap(),
+        res.trace.mse.last().unwrap(),
+        res.trace.soft_nfe.last().unwrap()
+    );
+    if let Some(path) = args.get("out") {
+        let v = json::obj(vec![
+            (
+                "alpha",
+                json::arr(res.alpha.iter().map(|&a| json::num(a as f64)).collect()),
+            ),
+            ("steps", json::num(res.steps as f64)),
+            ("options", json::num(res.options as f64)),
+        ]);
+        std::fs::write(path, json::to_string(&v))?;
+        eprintln!("alpha written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_fit_ols(args: &Args) -> Result<()> {
+    let be = backend(args)?;
+    let model = args.get_or("model", "dit_b").to_owned();
+    let steps = args.usize("steps", 20);
+    let n_train = args.usize("train", 200);
+    let n_test = args.usize("test", 100);
+    let s = args.f64("guidance", 7.5) as f32;
+    let seed = args.u64("seed", 0);
+    let out = args.get_or("out", "artifacts/ols_coeffs.json").to_owned();
+
+    let mut engine = Engine::new(be);
+    let trajs = collect_trajectories(&mut engine, &model, n_train + n_test, steps, s, seed)?;
+    let (train, test) = trajs.split_at(n_train);
+    eprintln!("fitting OLS on {} trajectories ({} held out)", train.len(), test.len());
+    let coeffs = ols::fit(train, 1e-6);
+    let train_mse = ols::eval_mse(&coeffs, train);
+    let test_mse = ols::eval_mse(&coeffs, test);
+    println!("step  {:>12} {:>12}", "train MSE", "test MSE");
+    for t in 0..steps {
+        println!("{t:>4}  {:>12.6} {:>12.6}", train_mse[t], test_mse[t]);
+    }
+    std::fs::write(&out, json::to_string(&coeffs.to_json()))?;
+    eprintln!("coefficients written to {out}");
+    Ok(())
+}
+
+/// Generate `n` CFG trajectories with score recording (shared by fit-ols and
+/// the LINEARAG example).
+pub fn collect_trajectories(
+    engine: &mut Engine<PjrtBackend>,
+    model: &str,
+    n: usize,
+    steps: usize,
+    s: f32,
+    seed: u64,
+) -> Result<Vec<ols::ScoreTrajectory>> {
+    let ps = prompts::eval_set(n, seed);
+    let reqs: Vec<Request> = ps
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let mut r = Request::new(i as u64, model, p.tokens(), seed + i as u64,
+                                     steps, GuidancePolicy::Cfg { s });
+            r.record_trajectory = true;
+            r
+        })
+        .collect();
+    let completions = engine.run(reqs)?;
+    Ok(completions
+        .into_iter()
+        .map(|c| c.trajectory.expect("trajectory recorded"))
+        .collect())
+}
+

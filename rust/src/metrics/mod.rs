@@ -1,0 +1,121 @@
+//! Serving metrics: latency recorder + throughput counters for the
+//! end-to-end driver (`examples/serve_throughput.rs`) and the benches.
+
+use std::time::{Duration, Instant};
+
+use crate::stats;
+
+/// Records per-request wall-clock latencies and derives percentiles.
+#[derive(Debug, Default)]
+pub struct LatencyRecorder {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> LatencyRecorder {
+        LatencyRecorder::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_ms.push(d.as_secs_f64() * 1e3);
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        self.samples_ms.push(ms);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples_ms)
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        stats::percentile(&self.samples_ms, p)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.2}ms p50={:.2}ms p90={:.2}ms p99={:.2}ms",
+            self.count(),
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(90.0),
+            self.percentile(99.0)
+        )
+    }
+}
+
+/// Wall-clock throughput window.
+#[derive(Debug)]
+pub struct Throughput {
+    start: Instant,
+    pub completed: usize,
+    pub nfes: usize,
+}
+
+impl Throughput {
+    pub fn start() -> Throughput {
+        Throughput {
+            start: Instant::now(),
+            completed: 0,
+            nfes: 0,
+        }
+    }
+
+    pub fn observe(&mut self, nfes: usize) {
+        self.completed += 1;
+        self.nfes += nfes;
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn images_per_sec(&self) -> f64 {
+        self.completed as f64 / self.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn nfes_per_sec(&self) -> f64 {
+        self.nfes as f64 / self.elapsed().as_secs_f64().max(1e-9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=100 {
+            r.record_ms(i as f64);
+        }
+        assert_eq!(r.count(), 100);
+        assert!((r.percentile(50.0) - 50.5).abs() < 1.0);
+        assert!(r.percentile(99.0) > 98.0);
+        assert!((r.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_recorder_is_safe() {
+        let r = LatencyRecorder::new();
+        assert_eq!(r.percentile(99.0), 0.0);
+        assert_eq!(r.mean(), 0.0);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::start();
+        t.observe(30);
+        t.observe(40);
+        assert_eq!(t.completed, 2);
+        assert_eq!(t.nfes, 70);
+        assert!(t.images_per_sec() > 0.0);
+    }
+}

@@ -1,0 +1,104 @@
+//! Small dense linear algebra: Cholesky solve for symmetric positive
+//! definite systems (the OLS normal equations; K ≤ 41 for T = 20).
+
+/// Solve `A x = b` for SPD `A` (row-major `n x n`). Returns `None` if the
+/// factorization encounters a non-positive pivot (singular / not PD).
+pub fn solve_spd(a: &[f64], b: &[f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    // Cholesky: A = L L^T, lower-triangular L stored in place.
+    let mut l = a.to_vec();
+    for j in 0..n {
+        let mut diag = l[j * n + j];
+        for k in 0..j {
+            diag -= l[j * n + k] * l[j * n + k];
+        }
+        if diag <= 0.0 || !diag.is_finite() {
+            return None;
+        }
+        let dsqrt = diag.sqrt();
+        l[j * n + j] = dsqrt;
+        for i in j + 1..n {
+            let mut v = l[i * n + j];
+            for k in 0..j {
+                v -= l[i * n + k] * l[j * n + k];
+            }
+            l[i * n + j] = v / dsqrt;
+        }
+    }
+    // forward solve L y = b
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut v = b[i];
+        for k in 0..i {
+            v -= l[i * n + k] * y[k];
+        }
+        y[i] = v / l[i * n + i];
+    }
+    // back solve L^T x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut v = y[i];
+        for k in i + 1..n {
+            v -= l[k * n + i] * x[k];
+        }
+        x[i] = v / l[i * n + i];
+    }
+    Some(x)
+}
+
+/// Matrix-vector product for row-major `n x n` (test helper + residual checks).
+pub fn matvec(a: &[f64], x: &[f64], n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| (0..n).map(|j| a[i * n + j] * x[j]).sum())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solves_identity() {
+        let n = 4;
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(solve_spd(&a, &b, n).unwrap(), b);
+    }
+
+    #[test]
+    fn solves_random_spd() {
+        let mut rng = Rng::new(0);
+        for n in [1usize, 3, 8, 20, 41] {
+            // A = M M^T + eps I is SPD
+            let m: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+            let mut a = vec![0.0; n * n];
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for k in 0..n {
+                        s += m[i * n + k] * m[j * n + k];
+                    }
+                    a[i * n + j] = s + if i == j { 0.1 } else { 0.0 };
+                }
+            }
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = matvec(&a, &x_true, n);
+            let x = solve_spd(&a, &b, n).unwrap();
+            for (xs, xt) in x.iter().zip(&x_true) {
+                assert!((xs - xt).abs() < 1e-8, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        // A = [[1, 2], [2, 1]] has a negative eigenvalue.
+        let a = vec![1.0, 2.0, 2.0, 1.0];
+        assert!(solve_spd(&a, &[1.0, 1.0], 2).is_none());
+    }
+}

@@ -1,0 +1,76 @@
+//! `perfstat`: a small benchmarking harness (criterion substitute for the
+//! offline vendor set). Warmup + timed iterations + robust summary stats;
+//! used by the `cargo bench` targets (all `harness = false`).
+
+use std::time::Instant;
+
+/// Timing summary over iterations.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub min_ms: f64,
+}
+
+impl Summary {
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.name.clone(),
+            format!("{}", self.iters),
+            format!("{:.3}", self.mean_ms),
+            format!("{:.3}", self.p50_ms),
+            format!("{:.3}", self.p95_ms),
+            format!("{:.3}", self.min_ms),
+        ]
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs, then `iters` timed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Summary {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        name: name.to_owned(),
+        iters,
+        mean_ms: samples.iter().sum::<f64>() / iters as f64,
+        p50_ms: crate::stats::percentile_sorted(&samples, 50.0),
+        p95_ms: crate::stats::percentile_sorted(&samples, 95.0),
+        min_ms: samples[0],
+    }
+}
+
+/// Print a set of summaries as an aligned table.
+pub fn print_summaries(rows: &[Summary]) {
+    crate::eval::harness::print_table(
+        &["benchmark", "iters", "mean ms", "p50 ms", "p95 ms", "min ms"],
+        &rows.iter().map(Summary::row).collect::<Vec<_>>(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let s = bench("spin", 2, 20, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.iters, 20);
+        assert!(s.min_ms <= s.p50_ms);
+        assert!(s.p50_ms <= s.p95_ms + 1e-9);
+        assert!(s.mean_ms > 0.0);
+    }
+}

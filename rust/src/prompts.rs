@@ -1,0 +1,171 @@
+//! The prompt vocabulary — Rust mirror of `python/compile/data.py`.
+//!
+//! Prompts are compositional: (shape, color, position, size) with a 4-slot
+//! token encoding where 0 is the null token of each slot. The OUI-substitute
+//! evaluation sets are deterministic samples from this space; negative
+//! prompts are partial token vectors (e.g. "not red" → only the color slot
+//! set). The vocab lists are also exported in `manifest.json` and checked at
+//! backend load so the two sides cannot drift.
+
+use crate::util::rng::Rng;
+
+pub const SHAPES: [&str; 4] = ["circle", "square", "triangle", "cross"];
+pub const COLORS: [&str; 5] = ["red", "green", "blue", "yellow", "white"];
+pub const POSITIONS: [&str; 5] = [
+    "center",
+    "top-left",
+    "top-right",
+    "bottom-left",
+    "bottom-right",
+];
+pub const SIZES: [&str; 2] = ["small", "large"];
+pub const NUM_SLOTS: usize = 4;
+
+/// A fully-specified prompt (0-based attribute indices).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Prompt {
+    pub shape: usize,
+    pub color: usize,
+    pub position: usize,
+    pub size: usize,
+}
+
+impl Prompt {
+    /// 1-based token encoding (0 reserved for null in every slot).
+    pub fn tokens(&self) -> Vec<i32> {
+        vec![
+            self.shape as i32 + 1,
+            self.color as i32 + 1,
+            self.position as i32 + 1,
+            self.size as i32 + 1,
+        ]
+    }
+
+    pub fn text(&self) -> String {
+        format!(
+            "a {} {} {} at the {}",
+            SIZES[self.size], COLORS[self.color], SHAPES[self.shape],
+            POSITIONS[self.position]
+        )
+    }
+
+    /// Total prompt space size (4 * 5 * 5 * 2 = 200).
+    pub fn space_size() -> usize {
+        SHAPES.len() * COLORS.len() * POSITIONS.len() * SIZES.len()
+    }
+
+    /// The i-th prompt in the canonical enumeration (itertools.product
+    /// order, matching python's ALL_PROMPTS).
+    pub fn nth(i: usize) -> Prompt {
+        assert!(i < Self::space_size());
+        let per_shape = COLORS.len() * POSITIONS.len() * SIZES.len();
+        let per_color = POSITIONS.len() * SIZES.len();
+        Prompt {
+            shape: i / per_shape,
+            color: (i % per_shape) / per_color,
+            position: (i % per_color) / SIZES.len(),
+            size: i % SIZES.len(),
+        }
+    }
+
+    /// Parse "a large red circle at the top-left" (the `text()` format) or a
+    /// compact "red circle" subset (missing attributes default to 0).
+    pub fn parse(text: &str) -> Option<Prompt> {
+        let mut p = Prompt {
+            shape: 0,
+            color: 0,
+            position: 0,
+            size: 0,
+        };
+        let lower = text.to_lowercase();
+        for tok in lower
+            .split(|c: char| c.is_whitespace() || c == ',')
+            .filter(|t| !t.is_empty())
+        {
+            if let Some(i) = SHAPES.iter().position(|s| *s == tok) {
+                p.shape = i;
+            } else if let Some(i) = COLORS.iter().position(|s| *s == tok) {
+                p.color = i;
+            } else if let Some(i) = POSITIONS.iter().position(|s| *s == tok) {
+                p.position = i;
+            } else if let Some(i) = SIZES.iter().position(|s| *s == tok) {
+                p.size = i;
+            }
+        }
+        Some(p)
+    }
+}
+
+/// A negative prompt: suppress one attribute value (e.g. a color).
+/// Token encoding sets only that slot, mirroring data.py's instruction style.
+pub fn negative_tokens(slot: usize, value_1based: i32) -> Vec<i32> {
+    assert!(slot < NUM_SLOTS);
+    let mut t = vec![0i32; NUM_SLOTS];
+    t[slot] = value_1based;
+    t
+}
+
+/// Deterministic OUI-substitute evaluation set: `n` prompts sampled without
+/// replacement cycling through the space, shuffled by `seed`.
+pub fn eval_set(n: usize, seed: u64) -> Vec<Prompt> {
+    let mut order: Vec<usize> = (0..Prompt::space_size()).collect();
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut order);
+    (0..n).map(|i| Prompt::nth(order[i % order.len()])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn space_size_is_200() {
+        assert_eq!(Prompt::space_size(), 200);
+    }
+
+    #[test]
+    fn nth_enumerates_all_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..Prompt::space_size() {
+            let p = Prompt::nth(i);
+            assert!(seen.insert(p.tokens()));
+        }
+    }
+
+    #[test]
+    fn tokens_are_one_based() {
+        let p = Prompt::nth(0);
+        assert_eq!(p.tokens(), vec![1, 1, 1, 1]);
+        let last = Prompt::nth(199);
+        assert_eq!(last.tokens(), vec![4, 5, 5, 2]);
+    }
+
+    #[test]
+    fn text_and_parse_roundtrip() {
+        for i in (0..200).step_by(17) {
+            let p = Prompt::nth(i);
+            let q = Prompt::parse(&p.text()).unwrap();
+            assert_eq!(p, q, "{}", p.text());
+        }
+    }
+
+    #[test]
+    fn negative_tokens_single_slot() {
+        let t = negative_tokens(1, 3); // "not blue"
+        assert_eq!(t, vec![0, 3, 0, 0]);
+    }
+
+    #[test]
+    fn eval_set_deterministic_and_covering() {
+        let a = eval_set(50, 7);
+        let b = eval_set(50, 7);
+        assert_eq!(a, b);
+        let c = eval_set(50, 8);
+        assert_ne!(a, c);
+        // first 200 draws cover the whole space exactly once
+        let full = eval_set(200, 7);
+        let uniq: std::collections::HashSet<_> =
+            full.iter().map(|p| p.tokens()).collect();
+        assert_eq!(uniq.len(), 200);
+    }
+}

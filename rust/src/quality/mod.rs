@@ -1,0 +1,93 @@
+//! Image-quality metrics substrate: SSIM (the paper's replication metric in
+//! Table 1 / Figs. 5, 9), PSNR/MSE, and a high-frequency sharpness proxy used
+//! by the simulated annotator panel (the paper notes CFG "tends to produce
+//! higher frequencies" — Fig. 6).
+
+pub mod ssim;
+
+/// Mean squared error over interleaved RGB buffers.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// PSNR in dB for images in [-1, 1] (dynamic range 2.0).
+pub fn psnr(a: &[f32], b: &[f32]) -> f64 {
+    let m = mse(a, b);
+    if m == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (4.0 / m).log10()
+}
+
+/// High-frequency energy: mean squared Laplacian response over the image.
+/// A cheap proxy for perceived sharpness / high-frequency content.
+pub fn high_freq_energy(img: &[f32], width: usize, height: usize) -> f64 {
+    assert_eq!(img.len(), width * height * 3);
+    let mut acc = 0.0;
+    let mut count = 0usize;
+    for y in 1..height - 1 {
+        for x in 1..width - 1 {
+            for c in 0..3 {
+                let at = |yy: usize, xx: usize| img[(yy * width + xx) * 3 + c] as f64;
+                let lap =
+                    4.0 * at(y, x) - at(y - 1, x) - at(y + 1, x) - at(y, x - 1) - at(y, x + 1);
+                acc += lap * lap;
+                count += 1;
+            }
+        }
+    }
+    acc / count as f64
+}
+
+/// Convert interleaved RGB to per-channel luma (Rec. 601) — SSIM operates on
+/// luma, matching common SSIM implementations.
+pub fn luma(img: &[f32]) -> Vec<f32> {
+    img.chunks_exact(3)
+        .map(|p| 0.299 * p[0] + 0.587 * p[1] + 0.114 * p[2])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_zero_for_identical() {
+        let a = vec![0.3f32; 48];
+        assert_eq!(mse(&a, &a), 0.0);
+        assert_eq!(psnr(&a, &a), f64::INFINITY);
+    }
+
+    #[test]
+    fn psnr_known_value() {
+        let a = vec![0.0f32; 300];
+        let b = vec![0.2f32; 300];
+        // mse = 0.04 → psnr = 10 log10(4/0.04) = 20 dB (f32 rounding)
+        assert!((psnr(&a, &b) - 20.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn high_freq_flat_is_zero_noise_is_high() {
+        let flat = vec![0.5f32; 16 * 16 * 3];
+        assert_eq!(high_freq_energy(&flat, 16, 16), 0.0);
+        let mut rng = crate::util::rng::Rng::new(0);
+        let noisy: Vec<f32> = (0..16 * 16 * 3).map(|_| rng.normal() as f32).collect();
+        assert!(high_freq_energy(&noisy, 16, 16) > 1.0);
+    }
+
+    #[test]
+    fn luma_weights() {
+        let img = [1.0f32, 0.0, 0.0, 0.0, 1.0, 0.0];
+        let l = luma(&img);
+        assert!((l[0] - 0.299).abs() < 1e-6);
+        assert!((l[1] - 0.587).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,151 @@
+//! SSIM (Wang et al. 2004) with a gaussian window — the metric the paper
+//! uses to quantify how closely an efficient policy replicates the CFG
+//! baseline (Table 1, Figs. 5/9).
+//!
+//! Operates on luma; the window size shrinks gracefully for small images
+//! (our 16x16 testbed uses a 7x7 window, σ = 1.5, matching the standard
+//! parameterization scaled to resolution).
+
+use super::luma;
+
+const K1: f64 = 0.01;
+const K2: f64 = 0.03;
+
+/// Gaussian window weights (normalized), side = 2*radius + 1.
+fn gaussian_window(radius: usize, sigma: f64) -> Vec<f64> {
+    let side = 2 * radius + 1;
+    let mut w = vec![0.0; side * side];
+    let mut sum = 0.0;
+    for y in 0..side {
+        for x in 0..side {
+            let dy = y as f64 - radius as f64;
+            let dx = x as f64 - radius as f64;
+            let g = (-(dx * dx + dy * dy) / (2.0 * sigma * sigma)).exp();
+            w[y * side + x] = g;
+            sum += g;
+        }
+    }
+    for v in &mut w {
+        *v /= sum;
+    }
+    w
+}
+
+/// SSIM between two luma planes with dynamic range `l_range`.
+pub fn ssim_luma(a: &[f32], b: &[f32], width: usize, height: usize, l_range: f64) -> f64 {
+    assert_eq!(a.len(), width * height);
+    assert_eq!(b.len(), width * height);
+    let radius = 3usize.min((width.min(height) - 1) / 2);
+    let win = gaussian_window(radius, 1.5);
+    let side = 2 * radius + 1;
+    let c1 = (K1 * l_range).powi(2);
+    let c2 = (K2 * l_range).powi(2);
+
+    let mut acc = 0.0;
+    let mut count = 0usize;
+    for cy in radius..height - radius {
+        for cx in radius..width - radius {
+            let (mut ma, mut mb) = (0.0f64, 0.0f64);
+            for wy in 0..side {
+                for wx in 0..side {
+                    let w = win[wy * side + wx];
+                    let idx = (cy + wy - radius) * width + (cx + wx - radius);
+                    ma += w * a[idx] as f64;
+                    mb += w * b[idx] as f64;
+                }
+            }
+            let (mut va, mut vb, mut cov) = (0.0f64, 0.0f64, 0.0f64);
+            for wy in 0..side {
+                for wx in 0..side {
+                    let w = win[wy * side + wx];
+                    let idx = (cy + wy - radius) * width + (cx + wx - radius);
+                    let da = a[idx] as f64 - ma;
+                    let db = b[idx] as f64 - mb;
+                    va += w * da * da;
+                    vb += w * db * db;
+                    cov += w * da * db;
+                }
+            }
+            let s = ((2.0 * ma * mb + c1) * (2.0 * cov + c2))
+                / ((ma * ma + mb * mb + c1) * (va + vb + c2));
+            acc += s;
+            count += 1;
+        }
+    }
+    acc / count as f64
+}
+
+/// SSIM between two RGB images in [-1, 1] (converted to luma internally).
+pub fn ssim_rgb(a: &[f32], b: &[f32], width: usize, height: usize) -> f64 {
+    ssim_luma(&luma(a), &luma(b), width, height, 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_img(seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..16 * 16 * 3)
+            .map(|_| rng.range(-1.0, 1.0) as f32)
+            .collect()
+    }
+
+    #[test]
+    fn identical_images_score_one() {
+        let a = random_img(0);
+        assert!((ssim_rgb(&a, &a, 16, 16) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn symmetric() {
+        let a = random_img(1);
+        let b = random_img(2);
+        let ab = ssim_rgb(&a, &b, 16, 16);
+        let ba = ssim_rgb(&b, &a, 16, 16);
+        assert!((ab - ba).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bounded() {
+        for s in 0..5 {
+            let a = random_img(s);
+            let b = random_img(s + 100);
+            let v = ssim_rgb(&a, &b, 16, 16);
+            assert!((-1.0..=1.0).contains(&v), "{v}");
+        }
+    }
+
+    #[test]
+    fn degrades_monotonically_with_noise() {
+        let a = random_img(3);
+        let mut rng = Rng::new(99);
+        let noise: Vec<f32> = (0..a.len()).map(|_| rng.normal() as f32).collect();
+        let mut prev = 1.0;
+        for &level in &[0.05f32, 0.15, 0.4, 1.0] {
+            let b: Vec<f32> = a
+                .iter()
+                .zip(&noise)
+                .map(|(&x, &n)| x + level * n)
+                .collect();
+            let s = ssim_rgb(&a, &b, 16, 16);
+            assert!(s < prev, "ssim did not decrease at noise {level}: {s} >= {prev}");
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn unrelated_images_score_low() {
+        let a = random_img(10);
+        let b = random_img(20);
+        assert!(ssim_rgb(&a, &b, 16, 16) < 0.3);
+    }
+
+    #[test]
+    fn window_normalized() {
+        let w = gaussian_window(3, 1.5);
+        let sum: f64 = w.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,126 @@
+//! Procedural shape renderer — Rust mirror of `python/compile/data.py`'s
+//! deterministic path (no augmentation). Used by the editing experiment
+//! (source images for Eq. 9), attribute probes, and workload generation.
+//!
+//! Keep the geometry in sync with data.py: signed-distance masks with a 1px
+//! anti-aliased edge over a 0.08-grey background, output in [-1, 1].
+
+use crate::prompts::{Prompt, COLORS, POSITIONS, SHAPES, SIZES};
+
+pub const IMG: usize = 16;
+
+fn rgb_of(color: &str) -> [f64; 3] {
+    match color {
+        "red" => [0.9, 0.15, 0.15],
+        "green" => [0.15, 0.85, 0.2],
+        "blue" => [0.2, 0.3, 0.95],
+        "yellow" => [0.9, 0.85, 0.2],
+        "white" => [0.95, 0.95, 0.95],
+        _ => unreachable!("unknown color {color}"),
+    }
+}
+
+fn center_of(position: &str) -> (f64, f64) {
+    match position {
+        "center" => (8.0, 8.0),
+        "top-left" => (4.5, 4.5),
+        "top-right" => (4.5, 11.5),
+        "bottom-left" => (11.5, 4.5),
+        "bottom-right" => (11.5, 11.5),
+        _ => unreachable!("unknown position {position}"),
+    }
+}
+
+fn sdf(shape: &str, dy: f64, dx: f64, radius: f64) -> f64 {
+    match shape {
+        "circle" => (dy * dy + dx * dx).sqrt() - radius,
+        "square" => dy.abs().max(dx.abs()) - radius,
+        "triangle" => (dy - radius).max((-dy) * 0.5 + dx.abs() - radius),
+        "cross" => {
+            let bar = radius * 0.45;
+            let h = (dy.abs() - bar).max(dx.abs() - radius);
+            let v = (dx.abs() - bar).max(dy.abs() - radius);
+            h.min(v)
+        }
+        _ => unreachable!("unknown shape {shape}"),
+    }
+}
+
+/// Render a prompt to a flat `(16*16*3)` RGB image in [-1, 1]
+/// (deterministic: matches `data.render(prompt, rng=None)`).
+pub fn render(p: &Prompt) -> Vec<f32> {
+    let (cy, cx) = center_of(POSITIONS[p.position]);
+    let radius = if SIZES[p.size] == "small" { 2.4 } else { 4.2 };
+    let rgb = rgb_of(COLORS[p.color]);
+    let mut img = vec![0f32; IMG * IMG * 3];
+    for y in 0..IMG {
+        for x in 0..IMG {
+            let d = sdf(SHAPES[p.shape], y as f64 - cy, x as f64 - cx, radius);
+            let m = (0.5 - d).clamp(0.0, 1.0); // 1px anti-aliased edge
+            for c in 0..3 {
+                let v = 0.08 * (1.0 - m) + rgb[c] * m;
+                img[(y * IMG + x) * 3 + c] = (v * 2.0 - 1.0) as f32;
+            }
+        }
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::probe::color_dominance;
+
+    #[test]
+    fn renders_in_range() {
+        for i in (0..200).step_by(13) {
+            let img = render(&Prompt::nth(i));
+            assert_eq!(img.len(), 768);
+            assert!(img.iter().all(|&v| (-1.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn color_is_where_it_should_be() {
+        // large red circle at the center → red dominant in the shape region
+        let p = Prompt { shape: 0, color: 0, position: 0, size: 1 };
+        let img = render(&p);
+        assert!(color_dominance(&img, IMG, IMG, 0) > 0.8);
+        let center = &img[(8 * IMG + 8) * 3..(8 * IMG + 8) * 3 + 3];
+        assert!(center[0] > 0.5 && center[1] < 0.0);
+    }
+
+    #[test]
+    fn positions_are_distinct() {
+        let imgs: Vec<Vec<f32>> = (0..5)
+            .map(|pos| render(&Prompt { shape: 1, color: 2, position: pos, size: 1 }))
+            .collect();
+        for i in 0..5 {
+            for j in i + 1..5 {
+                let d: f32 = imgs[i]
+                    .iter()
+                    .zip(&imgs[j])
+                    .map(|(&a, &b)| (a - b).abs())
+                    .fold(0.0, f32::max);
+                assert!(d > 0.5, "positions {i}/{j} too similar");
+            }
+        }
+    }
+
+    #[test]
+    fn shapes_are_distinct() {
+        let imgs: Vec<Vec<f32>> = (0..4)
+            .map(|s| render(&Prompt { shape: s, color: 4, position: 0, size: 1 }))
+            .collect();
+        for i in 0..4 {
+            for j in i + 1..4 {
+                let d: f32 = imgs[i]
+                    .iter()
+                    .zip(&imgs[j])
+                    .map(|(&a, &b)| (a - b).abs())
+                    .fold(0.0, f32::max);
+                assert!(d > 0.3, "shapes {i}/{j} too similar");
+            }
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! PJRT runtime: loads the HLO-text artifacts emitted by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client via the
+//! `xla` crate. This is the only module that touches the device; everything
+//! above it works on [`crate::tensor::Tensor`] buffers.
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::Manifest;
+pub use pjrt::PjrtBackend;
+
+/// Load the default artifacts directory (`$AGD_ARTIFACTS` or `artifacts/`
+/// relative to the crate root), or `None` with a note — benches and examples
+/// use this to skip gracefully on a checkout without `make artifacts`.
+pub fn try_load_default() -> Option<PjrtBackend> {
+    let dir = std::env::var("AGD_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        });
+    if !dir.join("manifest.json").exists() {
+        eprintln!(
+            "artifacts not found at {} — run `make artifacts` first",
+            dir.display()
+        );
+        return None;
+    }
+    match PjrtBackend::load(&dir) {
+        Ok(be) => Some(be),
+        Err(e) => {
+            eprintln!("failed to load artifacts: {e:#}");
+            None
+        }
+    }
+}

@@ -1,0 +1,296 @@
+//! The PJRT backend: compiles + executes the AOT'd HLO-text artifacts.
+//!
+//! One `PjRtLoadedExecutable` per (artifact, bucket), compiled lazily on
+//! first use and cached for the life of the backend (the paper's models are
+//! "compiled once per variant" — §Perf). Batches are padded up to the
+//! smallest bucket that fits; padding lanes replay the first item's inputs
+//! and their outputs are dropped.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::backend::{Backend, EvalInput};
+use crate::runtime::manifest::Manifest;
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// compile + execute counters (perf accounting)
+    pub compiles: usize,
+    pub executions: usize,
+}
+
+fn f32_literal(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+        .map_err(|e| anyhow!("f32 literal: {e:?}"))
+}
+
+fn i32_literal(dims: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)
+        .map_err(|e| anyhow!("i32 literal: {e:?}"))
+}
+
+impl PjrtBackend {
+    /// Create a backend over an artifacts directory (`make artifacts`).
+    pub fn load(artifacts_dir: &Path) -> Result<PjrtBackend> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        manifest.validate()?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(PjrtBackend {
+            client,
+            manifest,
+            execs: HashMap::new(),
+            compiles: 0,
+            executions: 0,
+        })
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact file.
+    fn exec(&mut self, file: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.execs.contains_key(file) {
+            let path = self.manifest.artifact_path(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+            self.compiles += 1;
+            self.execs.insert(file.to_owned(), exe);
+        }
+        Ok(&self.execs[file])
+    }
+
+    /// Smallest bucket >= n from `buckets` (error if none fits).
+    fn bucket_for(buckets: &[usize], n: usize) -> Result<usize> {
+        buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .ok_or_else(|| anyhow!("batch of {n} exceeds largest bucket {buckets:?}"))
+    }
+
+    /// Warm the executable cache for a model's buckets (and the shared
+    /// guide/solver artifacts) so serving latency excludes compilation.
+    pub fn warmup(&mut self, model: &str) -> Result<()> {
+        let files: Vec<String> = {
+            let meta = self
+                .manifest
+                .models
+                .get(model)
+                .ok_or_else(|| anyhow!("unknown model {model}"))?;
+            meta.denoisers.values().cloned().collect()
+        };
+        for f in files {
+            self.exec(&f)?;
+        }
+        Ok(())
+    }
+
+    fn run_tuple(
+        &mut self,
+        file: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.exec(file)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {file}: {e:?}"))?;
+        self.executions += 1;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {file}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {file}: {e:?}"))
+    }
+
+    /// Execute the fused guide kernel artifact: returns (eps_cfg, gamma).
+    /// Device-side alternative to the host combine (ablation in §Perf).
+    pub fn run_guide(
+        &mut self,
+        eps_c: &[f32],
+        eps_u: &[f32],
+        s: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let b_actual = s.len();
+        let m = self.manifest.flat_dim;
+        let buckets: Vec<usize> = self.manifest.guide.keys().copied().collect();
+        let b = Self::bucket_for(&buckets, b_actual)?;
+        let file = self.manifest.guide[&b].clone();
+        let mut ec = eps_c.to_vec();
+        let mut eu = eps_u.to_vec();
+        let mut sv = s.to_vec();
+        for _ in b_actual..b {
+            ec.extend_from_slice(&eps_c[..m]);
+            eu.extend_from_slice(&eps_u[..m]);
+            sv.push(s[0]);
+        }
+        let out = self.run_tuple(
+            &file,
+            &[
+                f32_literal(&[b, m], &ec)?,
+                f32_literal(&[b, m], &eu)?,
+                f32_literal(&[b], &sv)?,
+            ],
+        )?;
+        let eps_cfg: Vec<f32> = out[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let gamma: Vec<f32> = out[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        Ok((
+            eps_cfg[..b_actual * m].to_vec(),
+            gamma[..b_actual].to_vec(),
+        ))
+    }
+
+    /// Execute the fused DPM++(2M) solver artifact: returns (x_next, x0).
+    pub fn run_solver(
+        &mut self,
+        x: &[f32],
+        eps: &[f32],
+        x0_prev: &[f32],
+        coefs: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let m = self.manifest.flat_dim;
+        let b_actual = x.len() / m;
+        let buckets: Vec<usize> = self.manifest.solver.keys().copied().collect();
+        let b = Self::bucket_for(&buckets, b_actual)?;
+        let file = self.manifest.solver[&b].clone();
+        let pad = |v: &[f32], row: usize| {
+            let mut out = v.to_vec();
+            for _ in b_actual..b {
+                out.extend_from_slice(&v[..row]);
+            }
+            out
+        };
+        let out = self.run_tuple(
+            &file,
+            &[
+                f32_literal(&[b, m], &pad(x, m))?,
+                f32_literal(&[b, m], &pad(eps, m))?,
+                f32_literal(&[b, m], &pad(x0_prev, m))?,
+                f32_literal(&[b, 5], &pad(coefs, 5))?,
+            ],
+        )?;
+        let xn: Vec<f32> = out[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let x0: Vec<f32> = out[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        Ok((xn[..b_actual * m].to_vec(), x0[..b_actual * m].to_vec()))
+    }
+
+    /// Execute the NAS search-gradient artifact (§4, lowered by aot.py):
+    /// `(alpha, gumbel, x_t, tokens) -> (loss, grad, mse, soft_nfe)`.
+    pub fn run_search_grad(
+        &mut self,
+        alpha: &[f32],
+        gumbel: &[f32],
+        x_t: &[f32],
+        tokens: &[i32],
+    ) -> Result<(f32, Vec<f32>, f32, f32)> {
+        let meta = self.manifest.search.clone();
+        let file = meta
+            .artifact
+            .ok_or_else(|| anyhow!("manifest has no search_grad artifact"))?;
+        let t = meta.steps;
+        let k = meta.options.len();
+        let b = meta.batch;
+        let img = self.manifest.img;
+        let ch = self.manifest.channels;
+        anyhow::ensure!(alpha.len() == t * k, "alpha shape");
+        anyhow::ensure!(x_t.len() == b * img * img * ch, "x_t shape");
+        let out = self.run_tuple(
+            &file,
+            &[
+                f32_literal(&[t, k], alpha)?,
+                f32_literal(&[t, k], gumbel)?,
+                f32_literal(&[b, img, img, ch], x_t)?,
+                i32_literal(&[b, 4], tokens)?,
+            ],
+        )?;
+        let loss: Vec<f32> = out[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let grad: Vec<f32> = out[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let mse: Vec<f32> = out[2].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let nfe: Vec<f32> = out[3].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        Ok((loss[0], grad, mse[0], nfe[0]))
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn flat_in(&self, model: &str) -> usize {
+        let meta = &self.manifest.models[model];
+        self.manifest.img * self.manifest.img * meta.in_channels
+    }
+
+    fn flat_out(&self, _model: &str) -> usize {
+        self.manifest.flat_dim
+    }
+
+    fn buckets(&self) -> &[usize] {
+        &self.manifest.buckets
+    }
+
+    fn max_batch(&self, model: &str) -> usize {
+        self.manifest
+            .models
+            .get(model)
+            .and_then(|m| m.buckets.last().copied())
+            .unwrap_or_else(|| *self.manifest.buckets.last().unwrap())
+    }
+
+    fn denoise(&mut self, model: &str, items: &[EvalInput]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(!items.is_empty(), "empty batch");
+        let meta = self
+            .manifest
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("unknown model {model}"))?
+            .clone();
+        let b = Self::bucket_for(&meta.buckets, items.len())?;
+        let file = meta.denoisers[&b].clone();
+        let img = self.manifest.img;
+        let ch = meta.in_channels;
+        let flat_in = img * img * ch;
+        let flat_out = self.manifest.flat_dim;
+
+        let mut xs = Vec::with_capacity(b * flat_in);
+        let mut ts = Vec::with_capacity(b);
+        let mut toks = Vec::with_capacity(b * 4);
+        for i in 0..b {
+            let it = &items[i.min(items.len() - 1)]; // pad lanes replay item 0..
+            anyhow::ensure!(
+                it.x.len() == flat_in,
+                "item {} input length {} != {flat_in} for model {model}",
+                i.min(items.len() - 1),
+                it.x.len()
+            );
+            xs.extend_from_slice(&it.x);
+            ts.push(it.t);
+            toks.extend_from_slice(&it.tokens);
+        }
+        let out = self.run_tuple(
+            &file,
+            &[
+                f32_literal(&[b, img, img, ch], &xs)?,
+                f32_literal(&[b], &ts)?,
+                i32_literal(&[b, 4], &toks)?,
+            ],
+        )?;
+        let eps: Vec<f32> = out[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        anyhow::ensure!(eps.len() == b * flat_out, "unexpected output length");
+        Ok(items
+            .iter()
+            .enumerate()
+            .map(|(i, _)| eps[i * flat_out..(i + 1) * flat_out].to_vec())
+            .collect())
+    }
+
+    fn models(&self) -> Vec<String> {
+        self.manifest.models.keys().cloned().collect()
+    }
+}

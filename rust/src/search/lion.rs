@@ -1,0 +1,86 @@
+//! Lion optimizer (Chen et al. 2023) — the optimizer the paper uses for the
+//! NAS search (§4.1): sign-of-interpolated-momentum updates.
+//!
+//!   update = sign(β1 · m + (1 − β1) · g)
+//!   θ     ← θ − lr · update
+//!   m     ← β2 · m + (1 − β2) · g
+
+#[derive(Debug, Clone)]
+pub struct Lion {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    momentum: Vec<f32>,
+}
+
+impl Lion {
+    pub fn new(n: usize, lr: f32, beta1: f32, beta2: f32) -> Lion {
+        Lion {
+            lr,
+            beta1,
+            beta2,
+            momentum: vec![0.0; n],
+        }
+    }
+
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), self.momentum.len());
+        assert_eq!(grads.len(), self.momentum.len());
+        for i in 0..params.len() {
+            let interp = self.beta1 * self.momentum[i] + (1.0 - self.beta1) * grads[i];
+            params[i] -= self.lr * interp.signum() * (interp != 0.0) as u8 as f32;
+            self.momentum[i] = self.beta2 * self.momentum[i] + (1.0 - self.beta2) * grads[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moves_against_gradient_sign() {
+        let mut opt = Lion::new(3, 0.1, 0.9, 0.99);
+        let mut p = vec![1.0f32, 1.0, 1.0];
+        opt.step(&mut p, &[2.0, -0.3, 0.0]);
+        assert!((p[0] - 0.9).abs() < 1e-6); // positive grad → step down by lr
+        assert!((p[1] - 1.1).abs() < 1e-6); // negative grad → step up by lr
+        assert!((p[2] - 1.0).abs() < 1e-6); // zero grad, zero momentum → no move
+    }
+
+    #[test]
+    fn update_magnitude_is_always_lr() {
+        let mut opt = Lion::new(1, 0.05, 0.9, 0.99);
+        let mut p = vec![0.0f32];
+        for g in [100.0f32, 0.001, -7.0] {
+            let before = p[0];
+            opt.step(&mut p, &[g]);
+            assert!(((p[0] - before).abs() - 0.05).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn minimizes_quadratic() {
+        let mut opt = Lion::new(2, 0.01, 0.9, 0.99);
+        let mut p = vec![3.0f32, -2.0];
+        for _ in 0..1000 {
+            let g = vec![2.0 * p[0], 2.0 * p[1]];
+            opt.step(&mut p, &g);
+        }
+        assert!(p[0].abs() < 0.05, "{p:?}");
+        assert!(p[1].abs() < 0.05, "{p:?}");
+    }
+
+    #[test]
+    fn momentum_smooths_oscillating_gradients() {
+        // alternating gradients: with momentum, updates eventually follow
+        // the mean direction (positive → params decrease).
+        let mut opt = Lion::new(1, 0.01, 0.9, 0.99);
+        let mut p = vec![0.0f32];
+        for i in 0..200 {
+            let g = if i % 2 == 0 { 3.0 } else { -1.0 }; // mean +1
+            opt.step(&mut p, &[g]);
+        }
+        assert!(p[0] < 0.0, "{p:?}");
+    }
+}

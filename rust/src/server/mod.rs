@@ -1,0 +1,373 @@
+//! Line-protocol serving front-end (std::net + mini-JSON; the offline
+//! vendor set has no tokio, so the event loop is threads + channels).
+//!
+//! Protocol: one JSON object per line.
+//!
+//! request  {"prompt": "a large red circle at the center", "policy": "ag",
+//!           "gamma_bar": 0.991, "steps": 20, "guidance": 7.5, "seed": 1,
+//!           "negative": "green", "image": false}
+//! response {"id": 3, "nfes": 31, "cfg_steps": 11, "truncated_at": 10,
+//!           "ms": 128.4, "image": [...]?}
+//!
+//! The engine runs on a dedicated thread (it owns the PJRT client);
+//! connection handlers forward requests through an mpsc channel and block on
+//! a per-request response channel — requests from many connections batch
+//! together inside the engine exactly like the drain-mode benches.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::backend::Backend;
+use crate::coordinator::engine::Engine;
+use crate::coordinator::policy::GuidancePolicy;
+use crate::coordinator::request::{Completion, Request};
+use crate::prompts::Prompt;
+use crate::util::json::{self, Value};
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub addr: String,
+    pub model: String,
+    pub default_steps: usize,
+    pub default_guidance: f64,
+    pub default_gamma_bar: f64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            addr: "127.0.0.1:7458".into(),
+            model: "dit_b".into(),
+            default_steps: 20,
+            default_guidance: 7.5,
+            default_gamma_bar: 0.9988,
+        }
+    }
+}
+
+/// Parse one protocol line into a [`Request`] (without an id — the engine
+/// thread assigns ids).
+pub fn parse_request_line(line: &str, cfg: &ServerConfig) -> Result<(Request, bool)> {
+    let v = json::parse(line).map_err(|e| anyhow!("bad request json: {e}"))?;
+    let prompt_text = v
+        .get("prompt")
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow!("missing `prompt`"))?;
+    let prompt = Prompt::parse(prompt_text).ok_or_else(|| anyhow!("unparseable prompt"))?;
+    let steps = v
+        .get("steps")
+        .and_then(Value::as_usize)
+        .unwrap_or(cfg.default_steps);
+    let s = v
+        .get("guidance")
+        .and_then(Value::as_f64)
+        .unwrap_or(cfg.default_guidance) as f32;
+    let gamma_bar = v
+        .get("gamma_bar")
+        .and_then(Value::as_f64)
+        .unwrap_or(cfg.default_gamma_bar);
+    let policy = match v.get("policy").and_then(Value::as_str).unwrap_or("ag") {
+        "cfg" => GuidancePolicy::Cfg { s },
+        "cond" | "distilled" => GuidancePolicy::CondOnly,
+        "ag" => GuidancePolicy::Ag { s, gamma_bar },
+        other => return Err(anyhow!("unknown policy `{other}`")),
+    };
+    let mut req = Request::new(
+        0,
+        &v.get("model")
+            .and_then(Value::as_str)
+            .unwrap_or(&cfg.model)
+            .to_owned(),
+        prompt.tokens(),
+        v.get("seed").and_then(Value::as_f64).unwrap_or(0.0) as u64,
+        steps,
+        policy,
+    );
+    if let Some(neg) = v.get("negative").and_then(Value::as_str) {
+        let p = Prompt::parse(neg).unwrap();
+        // negative prompts set only the slots mentioned; color-only is the
+        // common case, so map any parsed attribute that differs from default
+        let mut toks = vec![0i32; 4];
+        let lower = neg.to_lowercase();
+        if crate::prompts::SHAPES.iter().any(|s| lower.contains(s)) {
+            toks[0] = p.shape as i32 + 1;
+        }
+        if crate::prompts::COLORS.iter().any(|s| lower.contains(s)) {
+            toks[1] = p.color as i32 + 1;
+        }
+        if crate::prompts::POSITIONS.iter().any(|s| lower.contains(s)) {
+            toks[2] = p.position as i32 + 1;
+        }
+        if crate::prompts::SIZES.iter().any(|s| lower.contains(s)) {
+            toks[3] = p.size as i32 + 1;
+        }
+        req.neg_tokens = Some(toks);
+    }
+    let want_image = v.get("image").and_then(Value::as_bool).unwrap_or(false);
+    Ok((req, want_image))
+}
+
+/// Encode a completion as a protocol line.
+pub fn completion_to_line(c: &Completion, ms: f64, with_image: bool) -> String {
+    use json::{arr, num, obj};
+    let mut fields = vec![
+        ("id", num(c.id as f64)),
+        ("nfes", num(c.nfes as f64)),
+        ("cfg_steps", num(c.cfg_steps as f64)),
+        ("ms", num((ms * 100.0).round() / 100.0)),
+        (
+            "truncated_at",
+            c.truncated_at.map(|t| num(t as f64)).unwrap_or(Value::Null),
+        ),
+    ];
+    if with_image {
+        fields.push((
+            "image",
+            arr(c.image.iter().map(|&v| num(v as f64)).collect()),
+        ));
+    }
+    json::to_string(&obj(fields))
+}
+
+struct Job {
+    req: Request,
+    want_image: bool,
+    started: Instant,
+    reply: Sender<String>,
+}
+
+/// Engine thread: batch whatever is queued, reply per request.
+fn engine_loop<B: Backend>(mut engine: Engine<B>, rx: Receiver<Job>) {
+    let mut next_id: u64 = 0;
+    let mut jobs: HashMap<u64, Job> = HashMap::new();
+    loop {
+        // admit new work; block when fully idle (no busy spin)
+        if engine.idle() {
+            match rx.recv() {
+                Ok(job) => admit(&mut engine, &mut jobs, &mut next_id, job),
+                Err(_) => return, // all senders gone → shut down
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(job) => admit(&mut engine, &mut jobs, &mut next_id, job),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    if engine.idle() {
+                        return;
+                    }
+                    break;
+                }
+            }
+        }
+        match engine.pump() {
+            Ok(completions) => {
+                for c in completions {
+                    if let Some(job) = jobs.remove(&c.id) {
+                        let ms = job.started.elapsed().as_secs_f64() * 1e3;
+                        let line = completion_to_line(&c, ms, job.want_image);
+                        let _ = job.reply.send(line);
+                    }
+                }
+            }
+            Err(e) => {
+                log::error!("engine pump failed: {e:#}");
+                for (_, job) in jobs.drain() {
+                    let _ = job.reply.send(format!("{{\"error\":\"{e}\"}}"));
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn admit<B: Backend>(
+    engine: &mut Engine<B>,
+    jobs: &mut HashMap<u64, Job>,
+    next_id: &mut u64,
+    mut job: Job,
+) {
+    job.req.id = *next_id;
+    *next_id += 1;
+    engine.submit(job.req.clone());
+    jobs.insert(job.req.id, job);
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<Job>, cfg: ServerConfig) {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_default();
+    let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    let mut writer = stream;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply_line = match parse_request_line(&line, &cfg) {
+            Ok((req, want_image)) => {
+                let (rtx, rrx) = channel();
+                let job = Job {
+                    req,
+                    want_image,
+                    started: Instant::now(),
+                    reply: rtx,
+                };
+                if tx.send(job).is_err() {
+                    break;
+                }
+                match rrx.recv() {
+                    Ok(l) => l,
+                    Err(_) => break,
+                }
+            }
+            Err(e) => format!("{{\"error\":\"{e}\"}}"),
+        };
+        if writer.write_all(reply_line.as_bytes()).is_err()
+            || writer.write_all(b"\n").is_err()
+        {
+            break;
+        }
+    }
+    log::info!("connection {peer} closed");
+}
+
+/// Serve forever (or until the listener errors).
+///
+/// `factory` constructs the backend *inside* the engine thread — the PJRT
+/// client is thread-affine (not `Send`), so it must be born where it runs.
+pub fn serve<B, F>(factory: F, cfg: ServerConfig) -> Result<()>
+where
+    B: Backend + 'static,
+    F: FnOnce() -> Result<B> + Send + 'static,
+{
+    let (tx, rx) = channel::<Job>();
+    let listener = TcpListener::bind(&cfg.addr)?;
+    eprintln!("agd serving on {} (model {})", cfg.addr, cfg.model);
+    std::thread::spawn(move || match factory() {
+        Ok(backend) => engine_loop(Engine::new(backend), rx),
+        Err(e) => log::error!("backend construction failed: {e:#}"),
+    });
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let tx = tx.clone();
+        let cfg = cfg.clone();
+        std::thread::spawn(move || handle_conn(stream, tx, cfg));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::GmmBackend;
+    use crate::sim::gmm::Gmm;
+
+    fn cfg() -> ServerConfig {
+        ServerConfig {
+            model: "gmm".into(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn parses_minimal_request() {
+        let (req, img) =
+            parse_request_line(r#"{"prompt": "red circle"}"#, &cfg()).unwrap();
+        assert_eq!(req.tokens, vec![1, 1, 1, 1]);
+        assert_eq!(req.steps, 20);
+        assert!(!img);
+        assert!(matches!(req.policy, GuidancePolicy::Ag { .. }));
+    }
+
+    #[test]
+    fn parses_full_request() {
+        let line = r#"{"prompt": "a large blue square at the top-left",
+            "policy": "cfg", "steps": 10, "guidance": 5.0, "seed": 9,
+            "negative": "red", "image": true}"#;
+        let (req, img) = parse_request_line(line, &cfg()).unwrap();
+        assert_eq!(req.steps, 10);
+        assert!(img);
+        assert!(matches!(req.policy, GuidancePolicy::Cfg { s } if s == 5.0));
+        assert_eq!(req.neg_tokens, Some(vec![0, 1, 0, 0])); // red = color 1
+        assert_eq!(req.seed, 9);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(parse_request_line("not json", &cfg()).is_err());
+        assert!(parse_request_line(r#"{"no_prompt": 1}"#, &cfg()).is_err());
+        assert!(
+            parse_request_line(r#"{"prompt": "x", "policy": "warp"}"#, &cfg()).is_err()
+        );
+    }
+
+    #[test]
+    fn completion_roundtrip_line() {
+        let c = Completion {
+            id: 7,
+            image: vec![0.5, -0.5],
+            nfes: 31,
+            cfg_steps: 11,
+            truncated_at: Some(10),
+            gammas: vec![],
+            gammas_eps: vec![],
+            trajectory: None,
+            iterates: vec![],
+        };
+        let line = completion_to_line(&c, 12.345, true);
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.req("nfes").as_f64(), Some(31.0));
+        assert_eq!(v.req("truncated_at").as_f64(), Some(10.0));
+        assert_eq!(v.req("image").as_arr().unwrap().len(), 2);
+        let line2 = completion_to_line(&c, 1.0, false);
+        assert!(json::parse(&line2).unwrap().get("image").is_none());
+    }
+
+    /// Full TCP round trip against the GMM backend.
+    #[test]
+    fn tcp_end_to_end() {
+        use std::io::{BufRead, BufReader, Write};
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let scfg = ServerConfig {
+            addr: addr.to_string(),
+            model: "gmm".into(),
+            ..Default::default()
+        };
+        let (tx, rx) = channel::<Job>();
+        std::thread::spawn(move || {
+            let backend = GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05));
+            engine_loop(Engine::new(backend), rx)
+        });
+        {
+            let scfg = scfg.clone();
+            std::thread::spawn(move || {
+                for stream in listener.incoming() {
+                    let tx = tx.clone();
+                    let scfg = scfg.clone();
+                    std::thread::spawn(move || handle_conn(stream.unwrap(), tx, scfg));
+                }
+            });
+        }
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(
+            br#"{"prompt": "red circle", "policy": "ag", "steps": 8, "guidance": 2.0}"#,
+        )
+        .unwrap();
+        conn.write_all(b"\n").unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = json::parse(line.trim()).unwrap();
+        assert!(v.get("error").is_none(), "{line}");
+        assert!(v.req("nfes").as_f64().unwrap() <= 16.0);
+    }
+}

@@ -1,0 +1,222 @@
+//! Analytic conditional diffusion oracle: a Gaussian-mixture data
+//! distribution whose *exact* conditional and unconditional scores are
+//! available in closed form.
+//!
+//! This is the PJRT-free test substrate for the whole coordinator: it
+//! implements the same `Backend` interface as the AOT'd DiT denoiser, but
+//! its epsilon-predictions come from the true posterior of a GMM, so
+//! coordinator tests can assert *semantic* properties (AG truncation
+//! behaviour, gamma convergence, policy NFE accounting, solver transport)
+//! without any artifacts on disk.
+//!
+//! Math: for VP diffusion `x_t = a x0 + s eps` over a mixture
+//! `p(x0 | c) = sum_k w_k(c) N(mu_k, v I)`, the marginal at time t is a
+//! mixture of `N(a mu_k, (a^2 v + s^2) I)` and the MMSE noise prediction is
+//!
+//!   eps(x, t, c) = -s * score = sum_k r_k(x) * (x - a mu_k) * s / (a^2 v + s^2)
+//!
+//! with softmax responsibilities r_k. The unconditional score uses uniform
+//! component weights; a condition selects a single component. As t -> 0 the
+//! responsibilities of both collapse onto the mode nearest x, which is
+//! exactly the cosine-similarity convergence (Eq. 7) the paper observes in
+//! trained networks.
+
+use crate::coordinator::solver;
+
+/// Conditional Gaussian-mixture score model.
+#[derive(Debug, Clone)]
+pub struct Gmm {
+    pub dim: usize,
+    /// component means, row-major `(k, dim)`
+    pub means: Vec<Vec<f32>>,
+    /// shared isotropic data variance
+    pub var: f64,
+}
+
+impl Gmm {
+    /// A well-separated mixture on coordinate axes — the default test model.
+    pub fn axes(dim: usize, components: usize, radius: f32, var: f64) -> Gmm {
+        assert!(components <= 2 * dim, "need an axis direction per component");
+        let means = (0..components)
+            .map(|k| {
+                let mut m = vec![0.0f32; dim];
+                let axis = k / 2;
+                m[axis] = if k % 2 == 0 { radius } else { -radius };
+                m
+            })
+            .collect();
+        Gmm {
+            dim,
+            means,
+            var,
+        }
+    }
+
+    pub fn components(&self) -> usize {
+        self.means.len()
+    }
+
+    /// Exact noise prediction. `cond = Some(k)` conditions on component `k`;
+    /// `None` is the unconditional (uniform-mixture) score.
+    pub fn eps(&self, x: &[f32], t: f64, cond: Option<usize>) -> Vec<f32> {
+        assert_eq!(x.len(), self.dim);
+        let (a, s) = solver::alpha_sigma(t);
+        let tau = a * a * self.var + s * s; // marginal component variance
+        match cond {
+            Some(k) => self.eps_single(x, a, s, tau, k),
+            None => self.eps_mixture(x, a, s, tau),
+        }
+    }
+
+    fn eps_single(&self, x: &[f32], a: f64, s: f64, tau: f64, k: usize) -> Vec<f32> {
+        let mu = &self.means[k];
+        x.iter()
+            .zip(mu)
+            .map(|(&xi, &mi)| ((xi as f64 - a * mi as f64) * s / tau) as f32)
+            .collect()
+    }
+
+    fn eps_mixture(&self, x: &[f32], a: f64, s: f64, tau: f64) -> Vec<f32> {
+        // responsibilities via log-sum-exp of -|x - a mu_k|^2 / (2 tau)
+        let logits: Vec<f64> = self
+            .means
+            .iter()
+            .map(|mu| {
+                let d2: f64 = x
+                    .iter()
+                    .zip(mu)
+                    .map(|(&xi, &mi)| {
+                        let d = xi as f64 - a * mi as f64;
+                        d * d
+                    })
+                    .sum();
+                -d2 / (2.0 * tau)
+            })
+            .collect();
+        let max = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let weights: Vec<f64> = logits.iter().map(|l| (l - max).exp()).collect();
+        let z: f64 = weights.iter().sum();
+        let mut out = vec![0.0f32; self.dim];
+        for (k, mu) in self.means.iter().enumerate() {
+            let r = weights[k] / z;
+            for i in 0..self.dim {
+                out[i] += (r * (x[i] as f64 - a * mu[i] as f64) * s / tau) as f32;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn toy() -> Gmm {
+        Gmm::axes(8, 4, 3.0, 0.05)
+    }
+
+    #[test]
+    fn single_component_eps_is_linear() {
+        let g = toy();
+        let x = vec![1.0f32; 8];
+        let e1 = g.eps(&x, 0.5, Some(0));
+        // doubling (x - a*mu) doubles eps: check via x' = a*mu + 2*(x - a*mu)
+        let (a, _) = solver::alpha_sigma(0.5);
+        let x2: Vec<f32> = x
+            .iter()
+            .zip(&g.means[0])
+            .map(|(&xi, &mi)| (a as f32) * mi + 2.0 * (xi - (a as f32) * mi))
+            .collect();
+        let e2 = g.eps(&x2, 0.5, Some(0));
+        for (v1, v2) in e1.iter().zip(&e2) {
+            assert!((2.0 * v1 - v2).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn uncond_equals_cond_far_from_other_modes() {
+        // deep inside component 0's basin the mixture score ≈ component-0 score
+        let g = toy();
+        let (a, _) = solver::alpha_sigma(0.05);
+        let mut x = vec![0.0f32; 8];
+        x[0] = (a as f32) * 3.0 + 0.01; // at component 0's scaled mean
+        let ec = g.eps(&x, 0.05, Some(0));
+        let eu = g.eps(&x, 0.05, None);
+        for (c, u) in ec.iter().zip(&eu) {
+            assert!((c - u).abs() < 1e-4, "{c} vs {u}");
+        }
+    }
+
+    #[test]
+    fn gamma_converges_along_denoising_trajectory() {
+        // Run the actual DPM++ sampler conditioned on component 1 and check
+        // the paper's Eq. 7 phenomenon: cosine(eps_c, eps_u) -> 1 as t -> 0.
+        let g = toy();
+        let steps = 20;
+        let ts = solver::timesteps(steps);
+        let mut rng = Rng::new(3);
+        let mut x = rng.normal_vec(8);
+        let mut x0_prev = vec![0.0f32; 8];
+        let mut gammas = Vec::new();
+        for i in 0..steps {
+            let ec = g.eps(&x, ts[i], Some(1));
+            let eu = g.eps(&x, ts[i], None);
+            let tc = Tensor::new(vec![8], ec.clone());
+            let tu = Tensor::new(vec![8], eu);
+            gammas.push(tc.cosine(&tu));
+            // guide with s = 2 then step
+            let eps: Vec<f32> = tc
+                .data
+                .iter()
+                .zip(&tu.data)
+                .map(|(&c, &u)| u + 2.0 * (c - u))
+                .collect();
+            let t_r = if i > 0 { Some(ts[i - 1]) } else { None };
+            let c = solver::fold_coefs(ts[i], ts[i + 1], t_r);
+            let (xn, x0) = solver::apply_step(&x, &eps, &x0_prev, &c);
+            x = xn;
+            x0_prev = x0;
+        }
+        // late gamma must exceed early gamma and approach 1
+        let early = gammas[..5].iter().sum::<f64>() / 5.0;
+        let late = gammas[steps - 5..].iter().sum::<f64>() / 5.0;
+        assert!(late > early, "late {late} <= early {early}");
+        assert!(late > 0.999, "late gamma {late}");
+    }
+
+    #[test]
+    fn sampling_transports_to_conditioned_mode() {
+        // CFG sampling conditioned on component k must land near mu_k.
+        let g = toy();
+        let steps = 20;
+        let ts = solver::timesteps(steps);
+        for k in 0..g.components() {
+            let mut rng = Rng::new(100 + k as u64);
+            let mut x = rng.normal_vec(8);
+            let mut x0_prev = vec![0.0f32; 8];
+            for i in 0..steps {
+                let ec = g.eps(&x, ts[i], Some(k));
+                let eu = g.eps(&x, ts[i], None);
+                let eps: Vec<f32> = ec
+                    .iter()
+                    .zip(&eu)
+                    .map(|(&c, &u)| u + 2.0 * (c - u))
+                    .collect();
+                let t_r = if i > 0 { Some(ts[i - 1]) } else { None };
+                let c = solver::fold_coefs(ts[i], ts[i + 1], t_r);
+                let (xn, x0) = solver::apply_step(&x, &eps, &x0_prev, &c);
+                x = xn;
+                x0_prev = x0;
+            }
+            let dist: f64 = x0_prev
+                .iter()
+                .zip(&g.means[k])
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            assert!(dist < 1.5, "component {k}: landed {dist} away");
+        }
+    }
+}

@@ -1,0 +1,3 @@
+//! Analytic simulation substrates (PJRT-free test oracles).
+
+pub mod gmm;

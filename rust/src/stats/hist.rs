@@ -1,0 +1,108 @@
+//! Fixed-bin histograms: latency distributions (metrics) and the annotator
+//! vote-difference distribution (Fig. 10).
+
+/// Histogram over uniform bins spanning [lo, hi); out-of-range samples clamp
+/// into the edge bins so nothing is silently dropped.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Histogram {
+        assert!(bins > 0 && hi > lo);
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            total: 0,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let idx = ((x - self.lo) / (self.hi - self.lo) * bins as f64)
+            .floor()
+            .clamp(0.0, (bins - 1) as f64) as usize;
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        self.lo + (i as f64 + 0.5) * w
+    }
+
+    /// Fraction of mass in bin i.
+    pub fn frac(&self, i: usize) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.counts[i] as f64 / self.total as f64
+        }
+    }
+
+    /// Render an ASCII bar chart (used by the figure benches to print the
+    /// same series the paper plots).
+    pub fn ascii(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let bar = "#".repeat((c as usize * width + max as usize - 1) / max as usize);
+            out.push_str(&format!(
+                "{:>8.2} | {:<width$} {}\n",
+                self.bin_center(i),
+                bar,
+                c,
+                width = width
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_and_clamping() {
+        let mut h = Histogram::new(0.0, 10.0, 5);
+        h.add(0.5); // bin 0
+        h.add(9.9); // bin 4
+        h.add(-3.0); // clamps to bin 0
+        h.add(42.0); // clamps to bin 4
+        assert_eq!(h.counts, vec![2, 0, 0, 0, 2]);
+        assert_eq!(h.total, 4);
+    }
+
+    #[test]
+    fn centers() {
+        let h = Histogram::new(0.0, 10.0, 5);
+        assert_eq!(h.bin_center(0), 1.0);
+        assert_eq!(h.bin_center(4), 9.0);
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let mut h = Histogram::new(-1.0, 1.0, 8);
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..1000 {
+            h.add(rng.range(-1.0, 1.0));
+        }
+        let sum: f64 = (0..8).map(|i| h.frac(i)).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ascii_renders_every_bin() {
+        let mut h = Histogram::new(0.0, 4.0, 4);
+        h.add(0.5);
+        h.add(1.5);
+        let art = h.ascii(10);
+        assert_eq!(art.lines().count(), 4);
+    }
+}

@@ -1,0 +1,150 @@
+//! Statistics substrate: descriptive stats, confidence intervals, the
+//! Wilcoxon signed-rank test (Table 1's significance test), and histograms
+//! (Fig. 10's vote distribution).
+
+pub mod hist;
+pub mod wilcoxon;
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Normal-approximation confidence interval for the mean: returns
+/// `(lo, hi)` at the given z (1.96 → 95%, 2.576 → 99%).
+pub fn mean_ci(xs: &[f64], z: f64) -> (f64, f64) {
+    let m = mean(xs);
+    if xs.len() < 2 {
+        return (m, m);
+    }
+    let half = z * std_dev(xs) / (xs.len() as f64).sqrt();
+    (m - half, m + half)
+}
+
+/// z-value for a 99% CI (Fig. 4 uses 99% bands).
+pub const Z_99: f64 = 2.576;
+/// z-value for a 95% CI.
+pub const Z_95: f64 = 1.96;
+
+/// Percentile via linear interpolation on a *sorted* slice; p in [0, 100].
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Convenience: percentile of an unsorted slice.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Standard normal CDF via the Abramowitz-Stegun erf approximation
+/// (max abs error ~1.5e-7, ample for p-value reporting).
+pub fn normal_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Simple percentile bootstrap for the mean: returns (lo, hi) of the
+/// `level` (e.g. 0.95) interval with `iters` resamples.
+pub fn bootstrap_mean_ci(
+    xs: &[f64],
+    level: f64,
+    iters: usize,
+    rng: &mut crate::util::rng::Rng,
+) -> (f64, f64) {
+    assert!(!xs.is_empty());
+    let mut means = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let mut s = 0.0;
+        for _ in 0..xs.len() {
+            s += xs[rng.below(xs.len())];
+        }
+        means.push(s / xs.len() as f64);
+    }
+    means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let alpha = (1.0 - level) / 2.0;
+    (
+        percentile_sorted(&means, alpha * 100.0),
+        percentile_sorted(&means, (1.0 - alpha) * 100.0),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        // sample std of this classic set is ~2.138
+        assert!((std_dev(&xs) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        let a: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let b: Vec<f64> = (0..1000).map(|i| (i % 10) as f64).collect();
+        let (alo, ahi) = mean_ci(&a, Z_95);
+        let (blo, bhi) = mean_ci(&b, Z_95);
+        assert!(bhi - blo < ahi - alo);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn normal_cdf_reference_values() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((normal_cdf(1.96) - 0.975).abs() < 1e-3);
+        assert!((normal_cdf(-1.96) - 0.025).abs() < 1e-3);
+        assert!((normal_cdf(3.0) - 0.99865).abs() < 1e-4);
+    }
+
+    #[test]
+    fn bootstrap_contains_true_mean() {
+        let mut rng = crate::util::rng::Rng::new(0);
+        let xs: Vec<f64> = (0..200).map(|_| rng.normal() + 3.0).collect();
+        let (lo, hi) = bootstrap_mean_ci(&xs, 0.95, 500, &mut rng);
+        assert!(lo < 3.0 && 3.0 < hi, "({lo}, {hi})");
+    }
+}

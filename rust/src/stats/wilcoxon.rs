@@ -1,0 +1,160 @@
+//! Two-sided Wilcoxon signed-rank test with tie handling — the statistical
+//! test the paper's human evaluation reports (Table 1: "two-sided Wilcoxon
+//! Signed-Rank Test, p = 0.603").
+//!
+//! Uses the normal approximation with tie- and zero-corrections, which is the
+//! standard procedure for n ≳ 20 (the paper's n is 1000 prompts).
+
+use super::normal_cdf;
+
+/// Result of the test.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WilcoxonResult {
+    /// W+ — sum of ranks of positive differences (the reported statistic).
+    pub w_plus: f64,
+    /// W- — sum of ranks of negative differences.
+    pub w_minus: f64,
+    /// Number of non-zero differences actually ranked.
+    pub n_used: usize,
+    /// Two-sided p-value (normal approximation, continuity-corrected).
+    pub p_value: f64,
+    /// z statistic.
+    pub z: f64,
+}
+
+/// Paired test: `diffs[i] = a[i] - b[i]`. Zero differences are dropped
+/// (Wilcoxon's original procedure); ties among |diffs| get average ranks.
+pub fn signed_rank(diffs: &[f64]) -> WilcoxonResult {
+    // (|d|, sign)
+    let mut items: Vec<(f64, f64)> = diffs
+        .iter()
+        .filter(|d| **d != 0.0)
+        .map(|&d| (d.abs(), d.signum()))
+        .collect();
+    let n = items.len();
+    if n == 0 {
+        return WilcoxonResult {
+            w_plus: 0.0,
+            w_minus: 0.0,
+            n_used: 0,
+            p_value: 1.0,
+            z: 0.0,
+        };
+    }
+    items.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    // average ranks for tied |d|; accumulate tie correction term Σ(t³ - t)
+    let mut w_plus = 0.0;
+    let mut tie_correction = 0.0;
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j < n && items[j].0 == items[i].0 {
+            j += 1;
+        }
+        let t = (j - i) as f64;
+        // ranks are 1-based: positions i..j → average rank
+        let avg_rank = (i + 1 + j) as f64 / 2.0;
+        for item in &items[i..j] {
+            if item.1 > 0.0 {
+                w_plus += avg_rank;
+            }
+        }
+        if t > 1.0 {
+            tie_correction += t * t * t - t;
+        }
+        i = j;
+    }
+    let nf = n as f64;
+    let total = nf * (nf + 1.0) / 2.0;
+    let w_minus = total - w_plus;
+
+    let mean = total / 2.0;
+    let var = nf * (nf + 1.0) * (2.0 * nf + 1.0) / 24.0 - tie_correction / 48.0;
+    let w = w_plus.min(w_minus);
+    // continuity correction: 0.5 toward the mean
+    let z = if var > 0.0 {
+        (w - mean + 0.5) / var.sqrt()
+    } else {
+        0.0
+    };
+    let p = (2.0 * normal_cdf(z)).min(1.0);
+    WilcoxonResult {
+        w_plus,
+        w_minus,
+        n_used: n,
+        p_value: p,
+        z,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symmetric_differences_not_significant() {
+        // perfectly symmetric → W+ == W-, p == 1-ish
+        let diffs: Vec<f64> = (1..=20).flat_map(|i| [i as f64, -(i as f64)]).collect();
+        let r = signed_rank(&diffs);
+        assert_eq!(r.w_plus, r.w_minus);
+        assert!(r.p_value > 0.9, "p={}", r.p_value);
+    }
+
+    #[test]
+    fn strongly_one_sided_is_significant() {
+        let diffs: Vec<f64> = (1..=30).map(|i| i as f64).collect();
+        let r = signed_rank(&diffs);
+        assert_eq!(r.w_minus, 0.0);
+        assert!(r.p_value < 1e-4, "p={}", r.p_value);
+    }
+
+    #[test]
+    fn zeros_are_dropped() {
+        let diffs = [0.0, 0.0, 1.0, -1.0, 2.0, -2.0];
+        let r = signed_rank(&diffs);
+        assert_eq!(r.n_used, 4);
+    }
+
+    #[test]
+    fn reference_example() {
+        // classic worked example (Wilcoxon 1945-style):
+        // diffs with known W+ = 40, W- = 5, n = 9
+        let diffs = [-2.0, 4.0, 6.0, 8.0, 10.0, 12.0, 14.0, 16.0, -3.0];
+        let r = signed_rank(&diffs);
+        // |d| sorted: 2,3,4,6,8,10,12,14,16 → ranks 1..9
+        // negatives: |2|→rank1, |3|→rank2 → W- = 3
+        assert_eq!(r.w_minus, 3.0);
+        assert_eq!(r.w_plus, 42.0);
+    }
+
+    #[test]
+    fn ties_get_average_ranks() {
+        let diffs = [1.0, 1.0, -1.0, 2.0];
+        let r = signed_rank(&diffs);
+        // |d|: 1,1,1 (ranks avg 2.0) and 2 (rank 4)
+        assert!((r.w_plus - (2.0 + 2.0 + 4.0)).abs() < 1e-12);
+        assert!((r.w_minus - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_all_zero() {
+        assert_eq!(signed_rank(&[]).p_value, 1.0);
+        assert_eq!(signed_rank(&[0.0, 0.0]).n_used, 0);
+    }
+
+    #[test]
+    fn near_even_votes_match_paper_regime() {
+        // Simulate the paper's outcome: 1000 vote differences, symmetric-ish.
+        let mut rng = crate::util::rng::Rng::new(42);
+        let diffs: Vec<f64> = (0..1000)
+            .map(|_| {
+                // votes in {-5,-3,-1,1,3,5}: 5 annotators, no ties allowed
+                let k = rng.below(6);
+                [-5.0, -3.0, -1.0, 1.0, 3.0, 5.0][k]
+            })
+            .collect();
+        let r = signed_rank(&diffs);
+        assert!(r.p_value > 0.05, "symmetric votes must not be significant");
+    }
+}

@@ -1,0 +1,173 @@
+//! Host-side tensors: the coordinator's working representation of latents
+//! and score estimates (dense f32, row-major). Conversions to/from
+//! `xla::Literal` live in `runtime/`; everything in the policy/solver hot
+//! path operates on these buffers directly.
+
+use std::fmt;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Squared L2 norm.
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// Cosine similarity with another tensor (Eq. 7's gamma when applied to
+    /// score estimates) — the pure-Rust mirror of the fused kernel's scalar.
+    pub fn cosine(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.len(), other.len());
+        let mut dot = 0f64;
+        let mut na = 0f64;
+        let mut nb = 0f64;
+        for (&a, &b) in self.data.iter().zip(&other.data) {
+            dot += a as f64 * b as f64;
+            na += a as f64 * a as f64;
+            nb += b as f64 * b as f64;
+        }
+        dot / (na.sqrt() * nb.sqrt()).max(1e-12)
+    }
+
+    /// `self += alpha * other` (LINEARAG's accumulation primitive).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.len(), other.len());
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for v in &mut self.data {
+            *v *= alpha;
+        }
+    }
+
+    /// Mean squared error against another tensor.
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.len(), other.len());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = a as f64 - b as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / self.len() as f64
+    }
+
+    /// CFG combine (Eq. 3) done host-side: `u + s * (c - u)`. Used by the
+    /// GmmBackend path and LINEARAG (where the "u" is an OLS estimate that
+    /// never went through the device).
+    pub fn cfg_combine(cond: &Tensor, uncond: &Tensor, s: f32) -> Tensor {
+        assert_eq!(cond.len(), uncond.len());
+        let data = cond
+            .data
+            .iter()
+            .zip(&uncond.data)
+            .map(|(&c, &u)| u + s * (c - u))
+            .collect();
+        Tensor::new(cond.shape.clone(), data)
+    }
+}
+
+/// Dense row-major i32 tensor (token inputs).
+#[derive(Clone, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl fmt::Debug for TensorI32 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "TensorI32{:?}{:?}", self.shape, self.data)
+    }
+}
+
+impl TensorI32 {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> TensorI32 {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorI32 { shape, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn cosine_identities() {
+        let a = Tensor::new(vec![4], vec![1.0, 2.0, -1.0, 0.5]);
+        let mut b = a.clone();
+        assert!((a.cosine(&b) - 1.0).abs() < 1e-9);
+        b.scale(-3.0);
+        assert!((a.cosine(&b) + 1.0).abs() < 1e-9);
+        let c = Tensor::new(vec![4], vec![2.0, -1.0, 0.0, 0.0]);
+        // orthogonal: 1*2 + 2*(-1) = 0
+        assert!(a.cosine(&c).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cfg_combine_matches_formula() {
+        let c = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]);
+        let u = Tensor::new(vec![3], vec![0.0, 1.0, 2.0]);
+        let out = Tensor::cfg_combine(&c, &u, 7.5);
+        assert_eq!(out.data, vec![7.5, 8.5, 9.5]);
+        // s = 1 → conditional
+        assert_eq!(Tensor::cfg_combine(&c, &u, 1.0).data, c.data);
+        // s = 0 → unconditional
+        assert_eq!(Tensor::cfg_combine(&c, &u, 0.0).data, u.data);
+    }
+
+    #[test]
+    fn axpy_and_mse() {
+        let mut a = Tensor::zeros(vec![3]);
+        let b = Tensor::new(vec![3], vec![1.0, -2.0, 4.0]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data, vec![0.5, -1.0, 2.0]);
+        assert!((a.mse(&b) - ((0.25 + 1.0 + 4.0) / 3.0)).abs() < 1e-6);
+    }
+}

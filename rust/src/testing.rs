@@ -1,0 +1,78 @@
+//! `proptest-lite`: a tiny property-testing harness (the offline vendor set
+//! has no proptest). Runs a property over many seeded random cases and, on
+//! failure, reports the case seed so the exact input is reproducible with
+//! `case_rng(seed)`.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` over `cases` random cases derived from `base_seed`.
+/// The property receives a per-case RNG; panic inside = failure.
+pub fn forall(base_seed: u64, cases: usize, prop: impl Fn(&mut Rng)) {
+    for case in 0..cases {
+        let seed = case_seed(base_seed, case);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed on case {case} (reproduce with case seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// The derived seed for one case (for reproducing failures in isolation).
+pub fn case_seed(base_seed: u64, case: usize) -> u64 {
+    base_seed
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add(case as u64)
+}
+
+/// Helpers for building random test inputs.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    pub fn vec_f32(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::cell::Cell::new(0);
+        forall(1, 25, |_rng| {
+            counter.set(counter.get() + 1);
+        });
+        assert_eq!(counter.get(), 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed on case")]
+    fn failing_property_reports_case() {
+        forall(2, 50, |rng| {
+            let v = rng.uniform();
+            assert!(v < 0.9, "value {v} too large");
+        });
+    }
+
+    #[test]
+    fn case_seeds_are_distinct() {
+        let a = case_seed(7, 0);
+        let b = case_seed(7, 1);
+        assert_ne!(a, b);
+    }
+}

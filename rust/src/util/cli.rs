@@ -1,0 +1,140 @@
+//! Tiny CLI argument parser (substrate — no clap in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional arguments;
+//! used by the `agd` binary, the examples, and every bench harness (benches
+//! receive their args after cargo's `--` separator).
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — `--key value`, `--key=value`,
+    /// `--flag` (when the next token is another option or absent).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // bare `--`: everything after is positional
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_owned(), v.to_owned());
+                } else {
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.options.insert(body.to_owned(), v);
+                        }
+                        _ => out.flags.push(body.to_owned()),
+                    }
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments (skipping argv[0], and a leading
+    /// `--bench` that cargo-bench passes to harness=false targets).
+    pub fn from_env() -> Args {
+        let items: Vec<String> = std::env::args()
+            .skip(1)
+            .filter(|a| a != "--bench")
+            .collect();
+        Args::parse(items)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name}: expected integer, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name}: expected integer, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name}: expected float, got `{v}`")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_owned))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = args("--model dit_b --steps=20 run");
+        assert_eq!(a.get("model"), Some("dit_b"));
+        assert_eq!(a.usize("steps", 0), 20);
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn flags_without_values() {
+        let a = args("--verbose --out x --dry-run");
+        assert!(a.flag("verbose"));
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get("out"), Some("x"));
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = args("--quick --n 5");
+        assert!(a.flag("quick"));
+        assert_eq!(a.usize("n", 0), 5);
+    }
+
+    #[test]
+    fn double_dash_positional() {
+        let a = args("--a 1 -- --b 2");
+        assert_eq!(a.get("a"), Some("1"));
+        assert_eq!(a.positional, vec!["--b", "2"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("");
+        assert_eq!(a.usize("n", 7), 7);
+        assert_eq!(a.f64("x", 0.5), 0.5);
+        assert_eq!(a.get_or("m", "d"), "d");
+    }
+
+    #[test]
+    #[should_panic(expected = "expected integer")]
+    fn bad_integer_panics() {
+        args("--n abc").usize("n", 0);
+    }
+}

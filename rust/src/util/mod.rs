@@ -1,0 +1,7 @@
+//! Infrastructure substrates: the offline vendor set has no serde / clap /
+//! rand / criterion, so these are first-class implementations.
+
+pub mod cli;
+pub mod json;
+pub mod ppm;
+pub mod rng;

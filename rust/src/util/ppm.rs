@@ -1,0 +1,107 @@
+//! PPM/PGM image writer (substrate) — dumps generated samples and
+//! win/lose pairs (Figs. 6/12/13) without an image-codec dependency.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write an RGB image stored as `[-1, 1]` floats in HWC order to binary PPM.
+pub fn write_ppm(path: &Path, pixels: &[f32], width: usize, height: usize) -> std::io::Result<()> {
+    assert_eq!(pixels.len(), width * height * 3, "pixel buffer size mismatch");
+    let mut buf = Vec::with_capacity(width * height * 3 + 32);
+    write!(buf, "P6\n{width} {height}\n255\n")?;
+    buf.extend(pixels.iter().map(|&v| to_u8(v)));
+    std::fs::write(path, buf)
+}
+
+/// Horizontally concatenate images (same size) into one PPM — side-by-side
+/// comparison panels.
+pub fn write_ppm_row(
+    path: &Path,
+    images: &[&[f32]],
+    width: usize,
+    height: usize,
+) -> std::io::Result<()> {
+    let n = images.len();
+    assert!(n > 0);
+    for img in images {
+        assert_eq!(img.len(), width * height * 3);
+    }
+    let mut row = vec![0f32; width * n * height * 3];
+    for (i, img) in images.iter().enumerate() {
+        for y in 0..height {
+            let src = &img[y * width * 3..(y + 1) * width * 3];
+            let dst_off = (y * width * n + i * width) * 3;
+            row[dst_off..dst_off + width * 3].copy_from_slice(src);
+        }
+    }
+    write_ppm(path, &row, width * n, height)
+}
+
+fn to_u8(v: f32) -> u8 {
+    (((v + 1.0) * 0.5).clamp(0.0, 1.0) * 255.0).round() as u8
+}
+
+/// Nearest-neighbour upscale (makes 16x16 samples viewable).
+pub fn upscale(pixels: &[f32], width: usize, height: usize, factor: usize) -> Vec<f32> {
+    let mut out = vec![0f32; width * factor * height * factor * 3];
+    let ow = width * factor;
+    for y in 0..height * factor {
+        for x in 0..ow {
+            let sy = y / factor;
+            let sx = x / factor;
+            for c in 0..3 {
+                out[(y * ow + x) * 3 + c] = pixels[(sy * width + sx) * 3 + c];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_mapping() {
+        assert_eq!(to_u8(-1.0), 0);
+        assert_eq!(to_u8(1.0), 255);
+        assert_eq!(to_u8(0.0), 128);
+        assert_eq!(to_u8(5.0), 255); // clamped
+        assert_eq!(to_u8(-5.0), 0);
+    }
+
+    #[test]
+    fn writes_valid_header() {
+        let dir = std::env::temp_dir().join("agd_ppm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ppm");
+        let img = vec![0.0f32; 4 * 2 * 3];
+        write_ppm(&path, &img, 4, 2).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        assert!(data.starts_with(b"P6\n4 2\n255\n"));
+        assert_eq!(data.len(), 11 + 4 * 2 * 3);
+    }
+
+    #[test]
+    fn row_concat_layout() {
+        let a = vec![1.0f32; 2 * 2 * 3];   // white
+        let b = vec![-1.0f32; 2 * 2 * 3];  // black
+        let dir = std::env::temp_dir().join("agd_ppm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("row.ppm");
+        write_ppm_row(&path, &[&a, &b], 2, 2).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        // header "P6\n4 2\n255\n" then row: 2 white px, 2 black px
+        let body = &data[11..];
+        assert_eq!(&body[0..6], &[255, 255, 255, 255, 255, 255]);
+        assert_eq!(&body[6..12], &[0, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn upscale_doubles() {
+        let img = vec![0.5f32; 2 * 2 * 3];
+        let up = upscale(&img, 2, 2, 3);
+        assert_eq!(up.len(), 6 * 6 * 3);
+        assert!(up.iter().all(|&v| v == 0.5));
+    }
+}

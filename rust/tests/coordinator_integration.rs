@@ -1,0 +1,265 @@
+//! Coordinator integration + property tests on the analytic GMM backend —
+//! no artifacts required. These pin the *semantics* of the serving engine:
+//! policy NFE accounting, AG replication guarantees, batching invariants,
+//! LINEARAG end-to-end, and scheduler behaviour under mixed traffic.
+
+use std::sync::Arc;
+
+use adaptive_guidance::backend::GmmBackend;
+use adaptive_guidance::coordinator::engine::Engine;
+use adaptive_guidance::coordinator::policy::{GuidancePolicy, StepChoice};
+use adaptive_guidance::coordinator::request::Request;
+use adaptive_guidance::ols;
+use adaptive_guidance::quality::ssim::ssim_rgb;
+use adaptive_guidance::sim::gmm::Gmm;
+use adaptive_guidance::testing::{forall, gen};
+
+fn engine(dim: usize) -> Engine<GmmBackend> {
+    Engine::new(GmmBackend::new(Gmm::axes(dim, 6, 3.0, 0.05)))
+}
+
+fn req(id: u64, seed: u64, steps: usize, policy: GuidancePolicy) -> Request {
+    Request::new(id, "gmm", vec![1 + (id % 6) as i32, 0, 0, 0], seed, steps, policy)
+}
+
+// ---------------------------------------------------------------------------
+// AG semantics
+// ---------------------------------------------------------------------------
+
+/// Property: for any seed/steps, AG's trajectory equals CFG's exactly up to
+/// the truncation point, and saves NFEs when it truncates.
+#[test]
+fn prop_ag_prefix_replication() {
+    forall(0xA6, 15, |rng| {
+        let seed = rng.next_u64();
+        let steps = gen::usize_in(rng, 6, 24);
+        let mut e = engine(12);
+        let mut cfg_r = req(0, seed, steps, GuidancePolicy::Cfg { s: 2.0 });
+        let mut ag_r = req(1, seed, steps, GuidancePolicy::Ag { s: 2.0, gamma_bar: 0.999 });
+        cfg_r.tokens = vec![2, 0, 0, 0];
+        ag_r.tokens = vec![2, 0, 0, 0];
+        let out = e.run(vec![cfg_r, ag_r]).unwrap();
+        let (cfg, ag) = (&out[0], &out[1]);
+        assert!(ag.nfes <= cfg.nfes);
+        if let Some(k) = ag.truncated_at {
+            assert_eq!(ag.nfes, cfg.nfes - (steps - 1 - k), "NFE accounting");
+            for i in 0..=k {
+                assert!(
+                    (ag.gammas[i] - cfg.gammas[i]).abs() < 1e-12,
+                    "gamma prefix diverged at {i}"
+                );
+            }
+        } else {
+            assert_eq!(ag.image, cfg.image, "no truncation → exact replication");
+        }
+    });
+}
+
+/// Monotonicity: a lower gamma-bar can only truncate earlier (or equally),
+/// and therefore costs at most as many NFEs.
+#[test]
+fn prop_ag_threshold_monotonicity() {
+    forall(0xB7, 10, |rng| {
+        let seed = rng.next_u64();
+        let mut e = engine(12);
+        let mk = |id, g| {
+            let mut r = req(id, seed, 16, GuidancePolicy::Ag { s: 2.0, gamma_bar: g });
+            r.tokens = vec![3, 0, 0, 0];
+            r
+        };
+        let out = e.run(vec![mk(0, 0.9), mk(1, 0.99), mk(2, 0.9999)]).unwrap();
+        assert!(out[0].nfes <= out[1].nfes);
+        assert!(out[1].nfes <= out[2].nfes);
+        let t = |c: &adaptive_guidance::Completion| c.truncated_at.unwrap_or(usize::MAX);
+        assert!(t(&out[0]) <= t(&out[1]));
+        assert!(t(&out[1]) <= t(&out[2]));
+    });
+}
+
+/// AG must still transport to the conditioned mode (quality preserved).
+#[test]
+fn ag_lands_on_the_conditioned_mode() {
+    let mut e = engine(8);
+    let gmm = e.backend.gmm.clone();
+    let out = e
+        .run(vec![req(2, 41, 20, GuidancePolicy::Ag { s: 2.0, gamma_bar: 0.995 })])
+        .unwrap();
+    let img = &out[0].image;
+    let target = &gmm.means[2];
+    let dist: f64 = img
+        .iter()
+        .zip(target)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    assert!(dist < 1.5, "AG sample {dist} from conditioned mode");
+    assert!(out[0].truncated_at.is_some(), "expected truncation");
+}
+
+// ---------------------------------------------------------------------------
+// Batching invariants
+// ---------------------------------------------------------------------------
+
+/// Property: results are independent of co-scheduled traffic — a request
+/// produces bit-identical output alone or in a full batch.
+#[test]
+fn prop_batching_does_not_change_results() {
+    forall(0xC1, 8, |rng| {
+        let seed = rng.next_u64();
+        let steps = gen::usize_in(rng, 4, 12);
+        let solo = {
+            let mut e = engine(12);
+            e.run(vec![req(0, seed, steps, GuidancePolicy::Cfg { s: 2.0 })])
+                .unwrap()
+        };
+        let crowded = {
+            let mut e = engine(12);
+            let mut reqs = vec![req(0, seed, steps, GuidancePolicy::Cfg { s: 2.0 })];
+            for i in 1..9 {
+                reqs.push(req(i, rng.next_u64(), steps, GuidancePolicy::Ag {
+                    s: 2.0,
+                    gamma_bar: 0.99,
+                }));
+            }
+            e.run(reqs).unwrap()
+        };
+        assert_eq!(solo[0].image, crowded[0].image);
+        assert_eq!(solo[0].nfes, crowded[0].nfes);
+    });
+}
+
+/// Items executed must exactly equal the sum of per-request NFEs — the
+/// batcher neither drops nor duplicates work.
+#[test]
+fn prop_work_conservation() {
+    forall(0xD2, 8, |rng| {
+        let n = gen::usize_in(rng, 1, 12);
+        let mut e = engine(12);
+        let reqs: Vec<_> = (0..n)
+            .map(|i| {
+                let policy = match i % 3 {
+                    0 => GuidancePolicy::Cfg { s: 2.0 },
+                    1 => GuidancePolicy::Ag { s: 2.0, gamma_bar: 0.995 },
+                    _ => GuidancePolicy::CondOnly,
+                };
+                req(i as u64, rng.next_u64(), 10, policy)
+            })
+            .collect();
+        let out = e.run(reqs).unwrap();
+        let total: usize = out.iter().map(|c| c.nfes).sum();
+        assert_eq!(e.backend.items_executed, total);
+        assert_eq!(e.stats.items, total);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Searched policies + LINEARAG end-to-end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn searched_policy_runs_with_expected_cost() {
+    let choices = vec![
+        StepChoice::Cfg { s: 2.0 },
+        StepChoice::Cfg { s: 2.0 },
+        StepChoice::Cond,
+        StepChoice::Uncond,
+        StepChoice::Cond,
+    ];
+    let mut e = engine(8);
+    let out = e
+        .run(vec![req(0, 5, 5, GuidancePolicy::Searched { choices })])
+        .unwrap();
+    assert_eq!(out[0].nfes, 2 + 2 + 1 + 1 + 1);
+}
+
+/// Full LINEARAG loop: record CFG trajectories, fit OLS, run the LinearAg
+/// policy, and check it (a) costs the Eq. 11 budget and (b) lands near the
+/// CFG result.
+#[test]
+fn linear_ag_end_to_end_on_gmm() {
+    let steps = 10;
+    // collect training trajectories
+    let mut e = engine(8);
+    let reqs: Vec<_> = (0..40)
+        .map(|i| {
+            let mut r = req(i, 1000 + i, steps, GuidancePolicy::Cfg { s: 2.0 });
+            r.record_trajectory = true;
+            r
+        })
+        .collect();
+    let trajs: Vec<_> = e
+        .run(reqs)
+        .unwrap()
+        .into_iter()
+        .map(|c| c.trajectory.unwrap())
+        .collect();
+    let coeffs = Arc::new(ols::fit(&trajs, 1e-6));
+
+    // run LINEARAG vs CFG on fresh seeds
+    let mut e2 = engine(8);
+    let out = e2
+        .run(vec![
+            req(0, 7777, steps, GuidancePolicy::Cfg { s: 2.0 }),
+            {
+                let mut r = req(1, 7777, steps, GuidancePolicy::LinearAg {
+                    s: 2.0,
+                    coeffs: coeffs.clone(),
+                });
+                r.tokens = vec![1, 0, 0, 0];
+                r
+            },
+        ])
+        .unwrap();
+    let (cfg, lin) = (&out[0], &out[1]);
+    // Eq. 11 budget at T=10: 3 guided steps (0,2,4) ·2 + 7 LR steps ·1 = 13
+    assert_eq!(lin.nfes, 13);
+    assert!(lin.nfes < cfg.nfes);
+    // quality: close to the CFG endpoint in L2 (the paper accepts deviation)
+    let dist: f64 = cfg
+        .image
+        .iter()
+        .zip(&lin.image)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    let norm: f64 = cfg.image.iter().map(|&a| (a as f64).powi(2)).sum::<f64>().sqrt();
+    assert!(dist / norm < 0.35, "LINEARAG drifted {:.3} rel", dist / norm);
+}
+
+// ---------------------------------------------------------------------------
+// Negative prompts + SSIM sanity on GMM "images"
+// ---------------------------------------------------------------------------
+
+#[test]
+fn negative_prompt_changes_the_uncond_stream_only() {
+    // with a negative prompt the guided result differs from plain CFG,
+    // but conditional-only generations are unaffected.
+    let mut e = engine(8);
+    let mk = |id, policy| {
+        let mut r = req(id, 9, 10, policy);
+        r.tokens = vec![2, 0, 0, 0]; // identical condition for all four
+        r
+    };
+    let mut with_neg = mk(0, GuidancePolicy::Cfg { s: 2.0 });
+    with_neg.neg_tokens = Some(vec![4, 0, 0, 0]);
+    let plain = mk(1, GuidancePolicy::Cfg { s: 2.0 });
+    let mut cond_a = mk(2, GuidancePolicy::CondOnly);
+    cond_a.neg_tokens = Some(vec![4, 0, 0, 0]);
+    let cond_b = mk(3, GuidancePolicy::CondOnly);
+    let out = e.run(vec![with_neg, plain, cond_a, cond_b]).unwrap();
+    assert_ne!(out[0].image, out[1].image, "negative prompt must matter");
+    assert_eq!(out[2].image, out[3].image, "cond-only ignores negatives");
+}
+
+#[test]
+fn ssim_of_replicated_trajectories_is_one() {
+    // engine determinism feeds the quality metric: same request twice → SSIM 1.
+    let run = || {
+        let mut e = Engine::new(GmmBackend::new(Gmm::axes(768, 4, 3.0, 0.05)));
+        e.run(vec![req(0, 3, 8, GuidancePolicy::Cfg { s: 2.0 })]).unwrap()
+    };
+    let a = run();
+    let b = run();
+    let s = ssim_rgb(&a[0].image, &b[0].image, 16, 16);
+    assert!((s - 1.0).abs() < 1e-12);
+}

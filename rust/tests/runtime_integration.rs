@@ -1,0 +1,263 @@
+//! Runtime integration tests: the PJRT path against the real artifacts.
+//!
+//! These tests need `make artifacts` to have run; they skip (with a note)
+//! when `artifacts/manifest.json` is absent so `cargo test` stays green on a
+//! fresh checkout.
+//!
+//! The key assertions are *parity* with the python reference (parity.json,
+//! produced by aot.py from the same checkpoint): the Rust engine must
+//! reproduce the L2 sampler's images and gamma signals through the AOT'd
+//! denoiser + host combine/solver within f32 tolerance.
+
+use std::path::PathBuf;
+
+use adaptive_guidance::backend::{Backend, EvalInput};
+use adaptive_guidance::coordinator::engine::Engine;
+use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::request::Request;
+use adaptive_guidance::quality::ssim::ssim_rgb;
+use adaptive_guidance::runtime::PjrtBackend;
+use adaptive_guidance::util::json::{self, Value};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn load_parity(dir: &PathBuf) -> Option<Value> {
+    let path = dir.join("parity.json");
+    if !path.exists() {
+        eprintln!("skipping: parity.json missing");
+        return None;
+    }
+    Some(json::parse(&std::fs::read_to_string(path).unwrap()).unwrap())
+}
+
+fn f32s(v: &Value) -> Vec<f32> {
+    v.as_f64_vec().unwrap().into_iter().map(|x| x as f32).collect()
+}
+
+#[test]
+fn manifest_loads_and_validates() {
+    let Some(dir) = artifacts_dir() else { return };
+    let be = PjrtBackend::load(&dir).unwrap();
+    assert!(be.manifest.models.contains_key("dit_s"));
+    assert!(be.manifest.models.contains_key("dit_b"));
+    assert_eq!(be.manifest.flat_dim, 768);
+    assert_eq!(be.buckets(), &[1, 2, 4, 8, 16]);
+}
+
+#[test]
+fn denoiser_matches_python_reference_eval() {
+    let Some(dir) = artifacts_dir() else { return };
+    let Some(par) = load_parity(&dir) else { return };
+    let mut be = PjrtBackend::load(&dir).unwrap();
+    let model = par.req("model").as_str().unwrap().to_owned();
+    let x = f32s(par.req("x_init"));
+    let t = par.req("denoiser_t").as_f64().unwrap() as f32;
+    let tokens: Vec<i32> = par
+        .req("tokens")
+        .as_f64_vec()
+        .unwrap()
+        .into_iter()
+        .map(|v| v as i32)
+        .collect();
+    let want = f32s(par.req("denoiser_eps"));
+    let got = be
+        .denoise(&model, &[EvalInput { x, t, tokens }])
+        .unwrap()
+        .remove(0);
+    assert_eq!(got.len(), want.len());
+    let max_err = got
+        .iter()
+        .zip(&want)
+        .map(|(&a, &b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-4, "denoiser parity max err {max_err}");
+}
+
+#[test]
+fn engine_cfg_run_matches_python_sampler() {
+    let Some(dir) = artifacts_dir() else { return };
+    let Some(par) = load_parity(&dir) else { return };
+    let mut engine = Engine::new(PjrtBackend::load(&dir).unwrap());
+    let model = par.req("model").as_str().unwrap().to_owned();
+    let tokens: Vec<i32> = par
+        .req("tokens")
+        .as_f64_vec()
+        .unwrap()
+        .into_iter()
+        .map(|v| v as i32)
+        .collect();
+    let refrun = par.req("sample_cfg");
+    let mut req = Request::new(0, &model, tokens, 0, 20, GuidancePolicy::Cfg { s: 7.5 });
+    req.init_noise = Some(f32s(par.req("x_init")));
+    let out = engine.run(vec![req]).unwrap().remove(0);
+    assert_eq!(out.nfes as f64, refrun.req("nfes").as_f64().unwrap());
+
+    let want_img = f32s(refrun.req("image"));
+    let max_err = out
+        .image
+        .iter()
+        .zip(&want_img)
+        .map(|(&a, &b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 5e-3, "image parity max err {max_err}");
+
+    let want_gammas = refrun.req("gammas").as_f64_vec().unwrap();
+    for (i, (a, b)) in out.gammas.iter().zip(&want_gammas).enumerate() {
+        assert!((a - b).abs() < 1e-4, "gamma[{i}] {a} vs {b}");
+    }
+}
+
+#[test]
+fn engine_ag_run_matches_python_sampler() {
+    let Some(dir) = artifacts_dir() else { return };
+    let Some(par) = load_parity(&dir) else { return };
+    let mut engine = Engine::new(PjrtBackend::load(&dir).unwrap());
+    let model = par.req("model").as_str().unwrap().to_owned();
+    let tokens: Vec<i32> = par
+        .req("tokens")
+        .as_f64_vec()
+        .unwrap()
+        .into_iter()
+        .map(|v| v as i32)
+        .collect();
+    let refrun = par.req("sample_ag");
+    let gamma_bar = refrun.req("gamma_bar").as_f64().unwrap();
+    let mut req = Request::new(
+        0,
+        &model,
+        tokens,
+        0,
+        20,
+        GuidancePolicy::Ag { s: 7.5, gamma_bar },
+    );
+    req.init_noise = Some(f32s(par.req("x_init")));
+    let out = engine.run(vec![req]).unwrap().remove(0);
+    assert_eq!(
+        out.nfes as f64,
+        refrun.req("nfes").as_f64().unwrap(),
+        "AG NFE accounting must match python (truncated_at {:?})",
+        out.truncated_at
+    );
+    let want_img = f32s(refrun.req("image"));
+    let max_err = out
+        .image
+        .iter()
+        .zip(&want_img)
+        .map(|(&a, &b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 5e-3, "AG image parity max err {max_err}");
+}
+
+#[test]
+fn buckets_give_identical_results() {
+    // the same item executed via the b1 and (padded) b4 executables must
+    // produce the same scores — padding lanes cannot leak.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut be = PjrtBackend::load(&dir).unwrap();
+    let Some(par) = load_parity(&dir) else { return };
+    let item = EvalInput {
+        x: f32s(par.req("x_init")),
+        t: 0.37,
+        tokens: vec![2, 1, 4, 2],
+    };
+    let solo = be.denoise("dit_s", &[item.clone()]).unwrap().remove(0);
+    let many: Vec<EvalInput> = vec![item.clone(), item.clone(), item.clone()];
+    let batched = be.denoise("dit_s", &many).unwrap();
+    for out in &batched {
+        let max_err = out
+            .iter()
+            .zip(&solo)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 1e-5, "bucket mismatch {max_err}");
+    }
+}
+
+#[test]
+fn device_guide_and_solver_match_host_math() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut be = PjrtBackend::load(&dir).unwrap();
+    let m = be.manifest.flat_dim;
+    let mut rng = adaptive_guidance::util::rng::Rng::new(3);
+    let eps_c = rng.normal_vec(m);
+    let eps_u = rng.normal_vec(m);
+
+    // guide: device vs host (tensor::cfg_combine + cosine)
+    let (dev_eps, dev_gamma) = be.run_guide(&eps_c, &eps_u, &[7.5]).unwrap();
+    let tc = adaptive_guidance::tensor::Tensor::new(vec![m], eps_c.clone());
+    let tu = adaptive_guidance::tensor::Tensor::new(vec![m], eps_u.clone());
+    let host_eps = adaptive_guidance::tensor::Tensor::cfg_combine(&tc, &tu, 7.5);
+    let host_gamma = tc.cosine(&tu);
+    let max_err = dev_eps
+        .iter()
+        .zip(&host_eps.data)
+        .map(|(&a, &b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-3, "guide parity {max_err}");
+    assert!((dev_gamma[0] as f64 - host_gamma).abs() < 1e-4);
+
+    // solver: device vs host apply_step
+    let coefs = adaptive_guidance::coordinator::solver::fold_coefs(0.6, 0.55, Some(0.65));
+    let x = rng.normal_vec(m);
+    let x0_prev = rng.normal_vec(m);
+    let carr = coefs.as_array().map(|v| v as f32);
+    let (dev_x, dev_x0) = be.run_solver(&x, &eps_c, &x0_prev, &carr).unwrap();
+    let (host_x, host_x0) =
+        adaptive_guidance::coordinator::solver::apply_step(&x, &eps_c, &x0_prev, &coefs);
+    for (d, h) in dev_x.iter().zip(&host_x).chain(dev_x0.iter().zip(&host_x0)) {
+        assert!((d - h).abs() < 1e-4, "solver parity {d} vs {h}");
+    }
+}
+
+#[test]
+fn ag_saves_nfes_and_preserves_ssim_on_trained_model() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(PjrtBackend::load(&dir).unwrap());
+    let tokens = vec![1, 3, 1, 2];
+    let mk = |id, policy| {
+        let mut r = Request::new(id, "dit_s", tokens.clone(), 99, 20, policy);
+        r.record_trajectory = false;
+        r
+    };
+    let out = engine
+        .run(vec![
+            mk(0, GuidancePolicy::Cfg { s: 7.5 }),
+            mk(1, GuidancePolicy::Ag { s: 7.5, gamma_bar: 0.9988 }),
+        ])
+        .unwrap();
+    let (cfg, ag) = (&out[0], &out[1]);
+    assert!(ag.nfes < cfg.nfes, "AG saved nothing: {} vs {}", ag.nfes, cfg.nfes);
+    let s = ssim_rgb(&ag.image, &cfg.image, 16, 16);
+    assert!(s > 0.8, "AG-vs-CFG SSIM {s}");
+}
+
+#[test]
+fn edit_model_triple_eval_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let be = PjrtBackend::load(&dir).unwrap();
+    if !be.manifest.models.contains_key("dit_edit") {
+        eprintln!("skipping: dit_edit not in manifest");
+        return;
+    }
+    let mut engine = Engine::new(be);
+    let mut req = Request::new(
+        0,
+        "dit_edit",
+        vec![0, 2, 0, 0], // "make it green"
+        5,
+        10,
+        GuidancePolicy::Pix2Pix { s_text: 7.5, s_img: 1.5, gamma_bar: None, full_prefix: None },
+    );
+    req.src_image = Some(vec![0.1; 768]);
+    let out = engine.run(vec![req]).unwrap().remove(0);
+    assert_eq!(out.nfes, 30, "Eq. 9 costs 3 NFEs/step");
+    assert_eq!(out.image.len(), 768);
+}
