@@ -10,7 +10,7 @@
 use std::sync::Arc;
 
 use adaptive_guidance::coordinator::engine::Engine;
-use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::policy::{cfg, linear_ag};
 use adaptive_guidance::eval::harness::{mean_std, run_policy, ssim_series, RunSpec};
 use adaptive_guidance::ols;
 use adaptive_guidance::prompts;
@@ -23,9 +23,9 @@ fn main() -> anyhow::Result<()> {
     let img = be.manifest.img;
     let n_train = args.usize("train", 160);
     let steps = args.usize("steps", 20);
-    let s = args.f64("guidance", 7.5) as f32;
+    let s = args.f32("guidance", 7.5);
     let model = args.get_or("model", "dit_b").to_owned();
-    let mut engine = Engine::new(be);
+    let mut engine = Engine::new(be)?;
 
     // 1) record trajectories (the paper: 200 paths, fit in < 20 minutes)
     println!("recording {n_train} CFG trajectories on {model}…");
@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     spec.seed_base = 77_000;
     let train_ps = prompts::eval_set(n_train, 3);
     let t0 = std::time::Instant::now();
-    let rec = run_policy(&mut engine, &train_ps, &spec, GuidancePolicy::Cfg { s })?;
+    let rec = run_policy(&mut engine, &train_ps, &spec, cfg(s))?;
     let trajs: Vec<_> = rec
         .completions
         .into_iter()
@@ -62,10 +62,9 @@ fn main() -> anyhow::Result<()> {
     // 3) serve fresh prompts under ζ_LINEARAG vs CFG
     let eval_ps = prompts::eval_set(32, 42);
     let eval_spec = RunSpec::new(&model, steps);
-    let baseline = run_policy(&mut engine, &eval_ps, &eval_spec,
-                              GuidancePolicy::Cfg { s })?;
+    let baseline = run_policy(&mut engine, &eval_ps, &eval_spec, cfg(s))?;
     let linear = run_policy(&mut engine, &eval_ps, &eval_spec,
-                            GuidancePolicy::LinearAg { s, coeffs: Arc::new(coeffs) })?;
+                            linear_ag(s, Arc::new(coeffs)))?;
     let (sm, ss) = mean_std(&ssim_series(&linear, &baseline, img));
     println!(
         "\nLINEARAG: {:.1} NFEs/img vs CFG {:.1} ({:.0}% guidance-NFE saving), \

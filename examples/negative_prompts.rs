@@ -7,7 +7,7 @@
 //! ```
 
 use adaptive_guidance::coordinator::engine::Engine;
-use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::policy::{ag, cfg};
 use adaptive_guidance::coordinator::request::Request;
 use adaptive_guidance::eval::probe::color_dominance;
 use adaptive_guidance::prompts::{self, Prompt};
@@ -17,7 +17,7 @@ use adaptive_guidance::util::ppm;
 fn main() -> anyhow::Result<()> {
     let Some(be) = runtime::try_load_default() else { return Ok(()) };
     let img = be.manifest.img;
-    let mut engine = Engine::new(be);
+    let mut engine = Engine::new(be)?;
 
     let prompt = Prompt::parse("a large red square at the center").unwrap();
     let neg = prompts::negative_tokens(1, 1); // negative: "red"
@@ -31,9 +31,9 @@ fn main() -> anyhow::Result<()> {
         r
     };
     let out = engine.run(vec![
-        mk(0, GuidancePolicy::Cfg { s: 7.5 }, false),
-        mk(1, GuidancePolicy::Cfg { s: 7.5 }, true),
-        mk(2, GuidancePolicy::Ag { s: 7.5, gamma_bar: 0.9988 }, true),
+        mk(0, cfg(7.5), false),
+        mk(1, cfg(7.5), true),
+        mk(2, ag(7.5, 0.9988), true),
     ])?;
 
     std::fs::create_dir_all("out")?;

@@ -7,7 +7,7 @@
 //! ```
 
 use adaptive_guidance::coordinator::engine::Engine;
-use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::policy::{Cfg, Policy};
 use adaptive_guidance::eval::harness::{mean_std, run_policy, ssim_series, RunSpec};
 use adaptive_guidance::prompts::{self, Prompt};
 use adaptive_guidance::runtime;
@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
         batch: meta.batch,
         latent_len: be.manifest.flat_dim,
         iters: args.usize("iters", 40),
-        lr: args.f64("lr", 0.02) as f32,
+        lr: args.f32("lr", 0.02),
         seed: args.u64("seed", 0),
     };
     println!(
@@ -57,12 +57,12 @@ fn main() -> anyhow::Result<()> {
     // run the extracted policy vs the CFG baseline
     let policy = res.extract_policy(meta.s_base as f32);
     let Some(be2) = runtime::try_load_default() else { return Ok(()) };
-    let mut engine = Engine::new(be2);
+    let mut engine = Engine::new(be2)?;
     let ps = prompts::eval_set(32, 42);
     let spec = RunSpec::new("dit_s", meta.steps);
     let baseline = run_policy(&mut engine, &ps, &spec,
-                              GuidancePolicy::Cfg { s: meta.s_base as f32 })?;
-    let searched = run_policy(&mut engine, &ps, &spec, policy)?;
+                              Cfg { s: meta.s_base as f32 }.into_ref())?;
+    let searched = run_policy(&mut engine, &ps, &spec, policy.into_ref())?;
     let (sm, ss) = mean_std(&ssim_series(&searched, &baseline, img));
     println!(
         "\nextracted policy: {:.1} NFEs/img (CFG: {:.1}), SSIM vs baseline {:.3}±{:.3}",

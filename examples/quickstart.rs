@@ -6,7 +6,7 @@
 //! ```
 
 use adaptive_guidance::coordinator::engine::Engine;
-use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::policy::{ag, cfg};
 use adaptive_guidance::coordinator::request::Request;
 use adaptive_guidance::prompts::Prompt;
 use adaptive_guidance::runtime;
@@ -15,17 +15,16 @@ use adaptive_guidance::util::ppm;
 fn main() -> anyhow::Result<()> {
     let Some(be) = runtime::try_load_default() else { return Ok(()) };
     let img = be.manifest.img;
-    let mut engine = Engine::new(be);
+    let mut engine = Engine::new(be)?;
 
     let prompt = Prompt::parse("a large red circle at the center").unwrap();
     println!("prompt: \"{}\" (tokens {:?})\n", prompt.text(), prompt.tokens());
 
     // Same seed, two policies: CFG (the baseline) and Adaptive Guidance.
-    let cfg = Request::new(0, "dit_b", prompt.tokens(), 7, 20,
-                           GuidancePolicy::Cfg { s: 7.5 });
-    let ag = Request::new(1, "dit_b", prompt.tokens(), 7, 20,
-                          GuidancePolicy::Ag { s: 7.5, gamma_bar: 0.9988 });
-    let out = engine.run(vec![cfg, ag])?;
+    let cfg_req = Request::new(0, "dit_b", prompt.tokens(), 7, 20, cfg(7.5));
+    let ag_req = Request::new(1, "dit_b", prompt.tokens(), 7, 20,
+                              ag(7.5, 0.9988));
+    let out = engine.run(vec![cfg_req, ag_req])?;
 
     std::fs::create_dir_all("out")?;
     for (c, name) in out.iter().zip(["cfg", "ag"]) {

@@ -1,23 +1,29 @@
 //! **End-to-end serving driver** (the required E2E validation): load the
 //! trained model artifacts and serve batched generation requests under an
 //! open-loop Poisson arrival process, reporting latency percentiles,
-//! throughput, NFE totals, and batch occupancy — once with CFG traffic and
-//! once with AG traffic on the same workload.
+//! throughput, NFE totals, and batch occupancy — once per traffic policy on
+//! the same workload.
+//!
+//! Traffic policies are built by name through the `PolicySpec` registry, so
+//! any registered policy (including plugins) can be load-tested:
 //!
 //! ```sh
-//! cargo run --release --example serve_throughput -- --requests 48 --rate 4
+//! cargo run --release --example serve_throughput -- --requests 48 --rate 4 \
+//!     --policies cfg,ag,cond,compressed-cfg
 //! ```
 
 use std::time::{Duration, Instant};
 
 use adaptive_guidance::coordinator::engine::Engine;
-use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::policy::PolicyRef;
 use adaptive_guidance::coordinator::request::Request;
+use adaptive_guidance::coordinator::spec::{PolicyRegistry, PolicySpec};
 use adaptive_guidance::eval::harness::print_table;
 use adaptive_guidance::metrics::{LatencyRecorder, Throughput};
 use adaptive_guidance::prompts;
 use adaptive_guidance::runtime;
 use adaptive_guidance::util::cli::Args;
+use adaptive_guidance::util::json;
 use adaptive_guidance::util::rng::Rng;
 
 struct LoadResult {
@@ -29,12 +35,12 @@ struct LoadResult {
     occupancy: f64,
 }
 
-fn drive(policy: GuidancePolicy, name: &str, requests: usize, rate: f64,
+fn drive(policy: PolicyRef, name: &str, requests: usize, rate: f64,
          steps: usize, model: &str) -> Option<LoadResult> {
     // fresh backend per run so executable caches/compile time don't leak
     let mut be = runtime::try_load_default()?;
     be.warmup(model).ok()?;
-    let mut engine = Engine::new(be);
+    let mut engine = Engine::new(be).ok()?;
 
     // Poisson arrivals, same seed for every policy → identical workload
     let mut rng = Rng::new(4242);
@@ -96,19 +102,41 @@ fn main() {
     let steps = args.usize("steps", 20);
     let model = args.get_or("model", "dit_b").to_owned();
     let gamma_bar = args.f64("gamma-bar", 0.9988);
+    let policies = args.get_or("policies", "cfg,ag,cond").to_owned();
 
     println!(
         "# E2E serving: {requests} requests, Poisson rate {rate}/s, model {model}, T={steps}\n"
     );
 
-    let runs: Vec<LoadResult> = [
-        ("CFG", GuidancePolicy::Cfg { s: 7.5 }),
-        ("AG", GuidancePolicy::Ag { s: 7.5, gamma_bar }),
-        ("GD proxy", GuidancePolicy::CondOnly),
-    ]
-    .into_iter()
-    .filter_map(|(name, p)| drive(p, name, requests, rate, steps, &model))
-    .collect();
+    // every traffic row goes through the PolicySpec registry, so any
+    // registered policy name works here (the list is comma-split, so use
+    // bare names; per-policy parameters come from the shared flags).
+    let registry = PolicyRegistry::builtin();
+    let runs: Vec<LoadResult> = policies
+        .split(',')
+        .filter_map(|name| {
+            let mut spec = match PolicySpec::parse(name.trim()) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("skipping `{name}`: {e}");
+                    return None;
+                }
+            };
+            spec.set_default("s", json::num(args.f64("guidance", 7.5)));
+            if spec.canonical_kind() == "ag" {
+                spec.set_default("gamma_bar", json::num(gamma_bar));
+            }
+            let policy = match registry.build(&spec) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("skipping `{name}`: {e}");
+                    return None;
+                }
+            };
+            let label = policy.name();
+            drive(policy, &label, requests, rate, steps, &model)
+        })
+        .collect();
     if runs.is_empty() {
         return;
     }
@@ -134,8 +162,10 @@ fn main() {
     );
     if runs.len() >= 2 {
         println!(
-            "\nAG vs CFG: {:.1}% lower mean latency, {:.2}x throughput \
+            "\n{} vs {}: {:.1}% lower mean latency, {:.2}x throughput \
              (NFE saving flows straight to serving capacity).",
+            runs[1].name,
+            runs[0].name,
             100.0 * (1.0 - runs[1].lat.mean() / runs[0].lat.mean()),
             (runs[1].completed as f64 / runs[1].wall.as_secs_f64())
                 / (runs[0].completed as f64 / runs[0].wall.as_secs_f64())

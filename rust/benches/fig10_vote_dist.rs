@@ -5,7 +5,7 @@
 //! Run: `cargo bench --bench fig10_vote_dist -- --n 200`
 
 use adaptive_guidance::coordinator::engine::Engine;
-use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::policy::{Ag, Cfg, Policy};
 use adaptive_guidance::eval::annotators::{run_study, Panel};
 use adaptive_guidance::eval::harness::{run_policy, RunSpec};
 use adaptive_guidance::prompts;
@@ -27,9 +27,9 @@ fn main() {
 
     let ps = prompts::eval_set(n, 42);
     let spec = RunSpec::new(model, steps);
-    let mut engine = Engine::new(be);
-    let cfg = run_policy(&mut engine, &ps, &spec, GuidancePolicy::Cfg { s }).unwrap();
-    let ag = run_policy(&mut engine, &ps, &spec, GuidancePolicy::Ag { s, gamma_bar }).unwrap();
+    let mut engine = Engine::new(be).expect("engine");
+    let cfg = run_policy(&mut engine, &ps, &spec, Cfg { s }.into_ref()).unwrap();
+    let ag = run_policy(&mut engine, &ps, &spec, Ag { s, gamma_bar }.into_ref()).unwrap();
     let pairs: Vec<(Vec<f32>, Vec<f32>)> = ag
         .completions
         .iter()

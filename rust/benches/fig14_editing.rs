@@ -7,7 +7,7 @@
 //! Run: `cargo bench --bench fig14_editing -- --n 32`
 
 use adaptive_guidance::coordinator::engine::Engine;
-use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::policy::{Pix2Pix, Policy, PolicyRef};
 use adaptive_guidance::coordinator::request::Request;
 use adaptive_guidance::eval::harness::{mean_std, print_table};
 use adaptive_guidance::eval::probe::color_dominance;
@@ -47,8 +47,8 @@ fn main() {
         cases.push((i as u64, render::render(&src_prompt), instr, new_color));
     }
 
-    let mut engine = Engine::new(be);
-    let run = |engine: &mut Engine<_>, policy: GuidancePolicy| {
+    let mut engine = Engine::new(be).expect("engine");
+    let run = |engine: &mut Engine<_>, policy: PolicyRef| {
         let reqs: Vec<Request> = cases
             .iter()
             .map(|(id, src, instr, _)| {
@@ -63,20 +63,20 @@ fn main() {
         (out, t0.elapsed())
     };
 
-    let (full, full_wall) = run(&mut engine, GuidancePolicy::Pix2Pix {
+    let (full, full_wall) = run(&mut engine, Pix2Pix {
         s_text,
         s_img,
         gamma_bar: None,
         full_prefix: None,
-    });
+    }.into_ref());
     // App. B protocol: AG-edit uses the full Eq. 9 triple-eval for the
     // first T/2 steps, then the (c, I) stream only → 33.3% NFE saving.
-    let (ag, ag_wall) = run(&mut engine, GuidancePolicy::Pix2Pix {
+    let (ag, ag_wall) = run(&mut engine, Pix2Pix {
         s_text,
         s_img,
         gamma_bar: Some(gamma_bar),
         full_prefix: Some(steps / 2),
-    });
+    }.into_ref());
 
     // metrics: NFEs, SSIM(AG-edit, CFG-edit), edit success = new-color dominance
     let ssim: Vec<f64> = full

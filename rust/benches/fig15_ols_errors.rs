@@ -6,7 +6,7 @@
 //! Run: `cargo bench --bench fig15_ols_errors -- --train 200 --test 100`
 
 use adaptive_guidance::coordinator::engine::Engine;
-use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::policy::{Cfg, Policy};
 use adaptive_guidance::eval::harness::{print_table, run_policy, RunSpec};
 use adaptive_guidance::ols;
 use adaptive_guidance::prompts;
@@ -27,13 +27,13 @@ fn main() {
         n_train, n_test
     );
 
-    let mut engine = Engine::new(be);
+    let mut engine = Engine::new(be).expect("engine");
     let mut spec = RunSpec::new(&model, steps);
     spec.record_trajectory = true;
     spec.seed_base = 10_000;
     let ps = prompts::eval_set(n_train + n_test, 11);
     eprintln!("generating {} recorded trajectories…", n_train + n_test);
-    let run = run_policy(&mut engine, &ps, &spec, GuidancePolicy::Cfg { s }).unwrap();
+    let run = run_policy(&mut engine, &ps, &spec, Cfg { s }.into_ref()).unwrap();
     let trajs: Vec<_> = run
         .completions
         .into_iter()

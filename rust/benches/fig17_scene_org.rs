@@ -6,7 +6,7 @@
 //! Run: `cargo bench --bench fig17_scene_org -- --n 16 [--dump-images out/]`
 
 use adaptive_guidance::coordinator::engine::Engine;
-use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::policy::{Cfg, Policy};
 use adaptive_guidance::eval::harness::{print_table, run_policy, RunSpec};
 use adaptive_guidance::eval::scene_org;
 use adaptive_guidance::prompts;
@@ -29,8 +29,8 @@ fn main() {
     let ps = prompts::eval_set(n, 42);
     let mut spec = RunSpec::new(model, steps);
     spec.record_iterates = true;
-    let mut engine = Engine::new(be);
-    let run = run_policy(&mut engine, &ps, &spec, GuidancePolicy::Cfg { s }).unwrap();
+    let mut engine = Engine::new(be).expect("engine");
+    let run = run_policy(&mut engine, &ps, &spec, Cfg { s }.into_ref()).unwrap();
 
     // aggregate the per-step rows across prompts
     let mut rows = Vec::new();

@@ -5,13 +5,19 @@
 //!   * AG beats the naive step-reduction at matched NFEs.
 //!
 //! Run: `cargo bench --bench fig1_headline -- --n 64 --gamma-bar 0.9995`
+//!
+//! `--extra POLICY` adds one more comparison row, built by name (or inline
+//! `{"kind": ..}` JSON) through the PolicySpec registry — any registered
+//! policy, including plugins, joins the headline table.
 
 use adaptive_guidance::coordinator::engine::Engine;
-use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::policy::{Ag, Cfg, CondOnly, Policy};
+use adaptive_guidance::coordinator::spec::{PolicyRegistry, PolicySpec};
 use adaptive_guidance::eval::harness::{mean_std, print_table, run_policy, ssim_series, RunSpec};
 use adaptive_guidance::prompts;
 use adaptive_guidance::runtime;
 use adaptive_guidance::util::cli::Args;
+use adaptive_guidance::util::json;
 
 fn main() {
     let args = Args::from_env();
@@ -27,23 +33,37 @@ fn main() {
 
     let ps = prompts::eval_set(n, 42);
     let spec = RunSpec::new(model, steps);
-    let mut engine = Engine::new(be);
+    let mut engine = Engine::new(be).expect("engine");
 
-    let cfg = run_policy(&mut engine, &ps, &spec, GuidancePolicy::Cfg { s }).unwrap();
-    let ag = run_policy(&mut engine, &ps, &spec, GuidancePolicy::Ag { s, gamma_bar }).unwrap();
-    let gd = run_policy(&mut engine, &ps, &spec, GuidancePolicy::CondOnly).unwrap();
+    let cfg = run_policy(&mut engine, &ps, &spec, Cfg { s }.into_ref()).unwrap();
+    let ag = run_policy(&mut engine, &ps, &spec, Ag { s, gamma_bar }.into_ref()).unwrap();
+    let gd = run_policy(&mut engine, &ps, &spec, CondOnly.into_ref()).unwrap();
     // naive reduction: CFG with fewer steps so total NFEs ≈ AG's
     let naive_steps = ((ag.mean_nfes() / 2.0).round() as usize).clamp(2, steps);
     let naive_spec = RunSpec::new(model, naive_steps);
-    let naive = run_policy(&mut engine, &ps, &naive_spec, GuidancePolicy::Cfg { s }).unwrap();
+    let naive = run_policy(&mut engine, &ps, &naive_spec, Cfg { s }.into_ref()).unwrap();
+    // optional extra row: any registered policy, via the PolicySpec registry
+    let extra = args.get("extra").map(|text| {
+        let mut pspec = PolicySpec::parse(text).expect("--extra policy spec");
+        pspec.set_default("s", json::num(s as f64));
+        let policy = PolicyRegistry::builtin().build(&pspec).expect("--extra policy");
+        let name = policy.name();
+        (name, run_policy(&mut engine, &ps, &spec, policy).unwrap())
+    });
 
-    let rows: Vec<Vec<String>> = [
+    let ag_label = format!("AG γ̄={gamma_bar}");
+    let naive_label = format!("naive CFG T={naive_steps}");
+    let mut named: Vec<(&str, &adaptive_guidance::eval::harness::PolicyRun)> = vec![
         ("CFG (baseline)", &cfg),
-        (&format!("AG γ̄={gamma_bar}") as &str, &ag),
+        (ag_label.as_str(), &ag),
         ("GD proxy (cond-only)", &gd),
-        (&format!("naive CFG T={naive_steps}"), &naive),
-    ]
-    .iter()
+        (naive_label.as_str(), &naive),
+    ];
+    if let Some((name, run)) = &extra {
+        named.push((name.as_str(), run));
+    }
+    let rows: Vec<Vec<String>> = named
+        .iter()
     .map(|(name, run)| {
         let (sm, ss) = mean_std(&ssim_series(run, &cfg, img));
         vec![

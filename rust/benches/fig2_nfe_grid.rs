@@ -7,7 +7,7 @@
 //! Run: `cargo bench --bench fig2_nfe_grid -- --n 64 [--model dit_b]`
 
 use adaptive_guidance::coordinator::engine::Engine;
-use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::policy::{Ag, Cfg, Policy};
 use adaptive_guidance::eval::harness::{mean_std, print_table, run_policy, ssim_series, RunSpec};
 use adaptive_guidance::prompts;
 use adaptive_guidance::runtime;
@@ -27,14 +27,14 @@ fn main() {
 
     let ps = prompts::eval_set(n, 42);
     let spec = RunSpec::new(model, steps);
-    let mut engine = Engine::new(be);
-    let baseline = run_policy(&mut engine, &ps, &spec, GuidancePolicy::Cfg { s }).unwrap();
+    let mut engine = Engine::new(be).expect("engine");
+    let baseline = run_policy(&mut engine, &ps, &spec, Cfg { s }.into_ref()).unwrap();
 
     // AG row: sweep γ̄ downward → fewer NFEs (same iteration count)
     let mut rows = Vec::new();
     for &gamma_bar in &[1.0001, 0.99995, 0.9999, 0.9995, 0.999, 0.998, 0.995, 0.99] {
         let run = run_policy(&mut engine, &ps, &spec,
-                             GuidancePolicy::Ag { s, gamma_bar }).unwrap();
+                             Ag { s, gamma_bar }.into_ref()).unwrap();
         let (sm, ss) = mean_std(&ssim_series(&run, &baseline, img));
         rows.push(vec![
             format!("AG γ̄={gamma_bar}"),
@@ -45,7 +45,7 @@ fn main() {
     // CFG row: reduce steps → matched NFE budgets
     for &t in &[20usize, 18, 16, 14, 12, 11] {
         let run = run_policy(&mut engine, &ps, &RunSpec::new(model, t),
-                             GuidancePolicy::Cfg { s }).unwrap();
+                             Cfg { s }.into_ref()).unwrap();
         let (sm, ss) = mean_std(&ssim_series(&run, &baseline, img));
         rows.push(vec![
             format!("CFG T={t}"),

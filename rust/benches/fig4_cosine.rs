@@ -7,7 +7,7 @@
 //! Run: `cargo bench --bench fig4_cosine -- --n 64`
 
 use adaptive_guidance::coordinator::engine::Engine;
-use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::policy::{Cfg, Policy};
 use adaptive_guidance::eval::harness::{print_table, run_policy, RunSpec};
 use adaptive_guidance::prompts;
 use adaptive_guidance::runtime;
@@ -24,7 +24,7 @@ fn main() {
     println!("# Fig. 4 — γ_t (Eq. 7) over the trajectory, mean [99% CI], {n} prompts\n");
 
     let ps = prompts::eval_set(n, 42);
-    let mut engine = Engine::new(be);
+    let mut engine = Engine::new(be).expect("engine");
     let mut table: Vec<Vec<String>> = (0..steps)
         .map(|t| vec![format!("{t}")])
         .collect();
@@ -32,7 +32,7 @@ fn main() {
 
     for model in ["dit_s", "dit_b"] {
         let spec = RunSpec::new(model, steps);
-        let run = run_policy(&mut engine, &ps, &spec, GuidancePolicy::Cfg { s }).unwrap();
+        let run = run_policy(&mut engine, &ps, &spec, Cfg { s }.into_ref()).unwrap();
         headers.push(format!("{model} γ(x0) mean [99% CI]"));
         headers.push(format!("{model} γ(ε)"));
         for t in 0..steps {

@@ -7,7 +7,7 @@
 //! Run: `cargo bench --bench fig5_frontier -- --model dit_s --n 64`
 
 use adaptive_guidance::coordinator::engine::Engine;
-use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::policy::{Ag, AgFixedPrefix, Cfg, Policy};
 use adaptive_guidance::eval::harness::{mean_std, print_table, run_policy, ssim_series, RunSpec};
 use adaptive_guidance::prompts;
 use adaptive_guidance::runtime;
@@ -27,8 +27,8 @@ fn main() {
 
     let ps = prompts::eval_set(n, 42);
     let spec = RunSpec::new(&model, steps);
-    let mut engine = Engine::new(be);
-    let baseline = run_policy(&mut engine, &ps, &spec, GuidancePolicy::Cfg { s }).unwrap();
+    let mut engine = Engine::new(be).expect("engine");
+    let baseline = run_policy(&mut engine, &ps, &spec, Cfg { s }.into_ref()).unwrap();
 
     let mut rows = Vec::new();
     let mut eval = |series: &str, name: String, run: &adaptive_guidance::eval::harness::PolicyRun| {
@@ -43,18 +43,18 @@ fn main() {
 
     for &gamma_bar in &[0.99995, 0.9999, 0.9995, 0.999, 0.998, 0.995, 0.99, 0.98] {
         let run = run_policy(&mut engine, &ps, &spec,
-                             GuidancePolicy::Ag { s, gamma_bar }).unwrap();
+                             Ag { s, gamma_bar }.into_ref()).unwrap();
         eval("AG (dashed)", format!("γ̄={gamma_bar}"), &run);
     }
     for &t in &[20usize, 18, 16, 14, 12, 11] {
         let run = run_policy(&mut engine, &ps, &RunSpec::new(&model, t),
-                             GuidancePolicy::Cfg { s }).unwrap();
+                             Cfg { s }.into_ref()).unwrap();
         eval("CFG (solid)", format!("T={t}"), &run);
     }
     // "searched policy" dots: deterministic prefix policies of varying budget
     for &k in &[16usize, 12, 10, 8, 6, 4] {
         let run = run_policy(&mut engine, &ps, &spec,
-                             GuidancePolicy::AgFixedPrefix { s, cfg_steps: k }).unwrap();
+                             AgFixedPrefix { s, cfg_steps: k }.into_ref()).unwrap();
         eval("policy (dot)", format!("prefix k={k}"), &run);
     }
     print_table(&["series", "point", "NFEs/img", "SSIM vs baseline"], &rows);

@@ -8,7 +8,7 @@
 //! Run: `cargo bench --bench fig7_negative -- --n 40`
 
 use adaptive_guidance::coordinator::engine::Engine;
-use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::policy::{Ag, Cfg, CondOnly, Policy};
 use adaptive_guidance::eval::harness::{mean_std, print_table, run_policy, ssim_series, RunSpec};
 use adaptive_guidance::eval::probe::color_dominance;
 use adaptive_guidance::prompts::{self, Prompt};
@@ -39,17 +39,17 @@ fn main() {
 
     println!("# Fig. 7 — negative prompts (\"red\" suppressed), model={model}, {n} prompts\n");
 
-    let mut engine = Engine::new(be);
+    let mut engine = Engine::new(be).expect("engine");
     let mut spec = RunSpec::new(&model, steps);
 
     // without negative prompt (control: red prompts come out red)
-    let control = run_policy(&mut engine, &ps, &spec, GuidancePolicy::Cfg { s }).unwrap();
+    let control = run_policy(&mut engine, &ps, &spec, Cfg { s }.into_ref()).unwrap();
 
     spec.neg_tokens = Some(prompts::negative_tokens(neg_color_slot, neg_color));
-    let cfg_neg = run_policy(&mut engine, &ps, &spec, GuidancePolicy::Cfg { s }).unwrap();
+    let cfg_neg = run_policy(&mut engine, &ps, &spec, Cfg { s }.into_ref()).unwrap();
     let ag_neg = run_policy(&mut engine, &ps, &spec,
-                            GuidancePolicy::Ag { s, gamma_bar }).unwrap();
-    let gd_neg = run_policy(&mut engine, &ps, &spec, GuidancePolicy::CondOnly).unwrap();
+                            Ag { s, gamma_bar }.into_ref()).unwrap();
+    let gd_neg = run_policy(&mut engine, &ps, &spec, CondOnly.into_ref()).unwrap();
 
     let red = |run: &adaptive_guidance::eval::harness::PolicyRun| {
         let v: Vec<f64> = run

@@ -11,7 +11,7 @@
 use std::sync::Arc;
 
 use adaptive_guidance::coordinator::engine::Engine;
-use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::policy::{AgFixedPrefix, AlternatingCfg, Cfg, LinearAg, Policy};
 use adaptive_guidance::eval::harness::{mean_std, print_table, run_policy, ssim_series, RunSpec};
 use adaptive_guidance::ols;
 use adaptive_guidance::prompts;
@@ -31,7 +31,7 @@ fn main() {
 
     println!("# Fig. 8 — first-half guidance replacement (model={model}, {n} prompts)\n");
 
-    let mut engine = Engine::new(be);
+    let mut engine = Engine::new(be).expect("engine");
 
     // 1) fit OLS on recorded CFG trajectories (App. C: 200 paths, <20 min)
     eprintln!("collecting {n_train} training trajectories for OLS…");
@@ -40,7 +40,7 @@ fn main() {
     train_spec.record_trajectory = true;
     let train_ps = prompts::eval_set(n_train, 7);
     let train_run = run_policy(&mut engine, &train_ps, &train_spec,
-                               GuidancePolicy::Cfg { s }).unwrap();
+                               Cfg { s }.into_ref()).unwrap();
     let trajs: Vec<_> = train_run
         .completions
         .into_iter()
@@ -51,7 +51,7 @@ fn main() {
     // 2) evaluate the three strategies against the full-CFG baseline
     let ps = prompts::eval_set(n, 42);
     let spec = RunSpec::new(&model, steps);
-    let baseline = run_policy(&mut engine, &ps, &spec, GuidancePolicy::Cfg { s }).unwrap();
+    let baseline = run_policy(&mut engine, &ps, &spec, Cfg { s }.into_ref()).unwrap();
     let base_hf: Vec<f64> = baseline
         .completions
         .iter()
@@ -61,11 +61,11 @@ fn main() {
 
     let policies = vec![
         ("AG low γ̄ (5 CFG + 15 cond)",
-         GuidancePolicy::AgFixedPrefix { s, cfg_steps: 5 }),
+         AgFixedPrefix { s, cfg_steps: 5 }.into_ref()),
         ("alternating CFG/cond",
-         GuidancePolicy::AlternatingCfg { s }),
+         AlternatingCfg { s }.into_ref()),
         ("LINEARAG (Eq. 11)",
-         GuidancePolicy::LinearAg { s, coeffs: coeffs.clone() }),
+         LinearAg { s, coeffs: coeffs.clone() }.into_ref()),
     ];
     let mut rows = Vec::new();
     for (name, policy) in policies {

@@ -11,7 +11,7 @@
 
 use adaptive_guidance::backend::{Backend, EvalInput, GmmBackend};
 use adaptive_guidance::coordinator::engine::Engine;
-use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::policy::{Cfg, Policy};
 use adaptive_guidance::coordinator::request::Request;
 use adaptive_guidance::coordinator::solver;
 use adaptive_guidance::perfstat::{bench, print_summaries};
@@ -29,14 +29,14 @@ fn main() {
     // ---- L3 scheduler overhead: GMM backend is ~free, so the per-item time
     // is almost pure engine bookkeeping.
     {
-        let mut engine = Engine::new(GmmBackend::new(Gmm::axes(768, 4, 3.0, 0.05)));
+        let mut engine = Engine::new(GmmBackend::new(Gmm::axes(768, 4, 3.0, 0.05))).expect("engine");
         let mut id = 0u64;
         let s = bench("L3 engine loop (16 req x 10 steps, gmm)", 2, iters, || {
             let reqs: Vec<Request> = (0..16)
                 .map(|i| {
                     id += 1;
                     Request::new(id, "gmm", vec![1 + (i % 4) as i32, 0, 0, 0],
-                                 id, 10, GuidancePolicy::Cfg { s: 2.0 })
+                                 id, 10, Cfg { s: 2.0 }.into_ref())
                 })
                 .collect();
             engine.run(reqs).unwrap();

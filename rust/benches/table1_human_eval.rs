@@ -10,7 +10,7 @@
 //!       [--model dit_b] [--dump-images out/]`
 
 use adaptive_guidance::coordinator::engine::Engine;
-use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::policy::{Ag, Cfg, Policy};
 use adaptive_guidance::eval::annotators::{run_study, Panel};
 use adaptive_guidance::eval::harness::{mean_std, print_table, run_policy, ssim_series, RunSpec};
 use adaptive_guidance::prompts;
@@ -33,9 +33,9 @@ fn main() {
 
     let ps = prompts::eval_set(n, 42);
     let spec = RunSpec::new(model, steps);
-    let mut engine = Engine::new(be);
-    let cfg = run_policy(&mut engine, &ps, &spec, GuidancePolicy::Cfg { s }).unwrap();
-    let ag = run_policy(&mut engine, &ps, &spec, GuidancePolicy::Ag { s, gamma_bar }).unwrap();
+    let mut engine = Engine::new(be).expect("engine");
+    let cfg = run_policy(&mut engine, &ps, &spec, Cfg { s }.into_ref()).unwrap();
+    let ag = run_policy(&mut engine, &ps, &spec, Ag { s, gamma_bar }.into_ref()).unwrap();
 
     let ssim = ssim_series(&ag, &cfg, img);
     let (ssim_m, ssim_s) = mean_std(&ssim);

@@ -65,15 +65,23 @@ pub struct Engine<B: Backend> {
 }
 
 impl<B: Backend> Engine<B> {
-    pub fn new(backend: B) -> Engine<B> {
-        let max_bucket = *backend.buckets().last().expect("backend has no buckets");
-        Engine {
+    /// Construct an engine over a backend. Fails (rather than panicking)
+    /// when the backend reports no batch buckets — a misbuilt artifact set
+    /// must surface as an error the server/CLI can report.
+    pub fn new(backend: B) -> Result<Engine<B>> {
+        let Some(&max_bucket) = backend.buckets().last() else {
+            anyhow::bail!(
+                "backend reports no batch buckets; cannot size batches \
+                 (rebuild the artifacts or fix the backend's bucket list)"
+            );
+        };
+        Ok(Engine {
             backend,
             states: Vec::new(),
             queue: VecDeque::new(),
             active: 0,
             stats: BatchStats::new(max_bucket),
-        }
+        })
     }
 
     /// Number of requests still in flight.
@@ -195,28 +203,58 @@ impl<B: Backend> Engine<B> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::GmmBackend;
-    use crate::coordinator::policy::GuidancePolicy;
+    use crate::backend::{Backend, EvalInput, GmmBackend};
+    use crate::coordinator::policy::{ag, cfg, cond_only, PolicyRef};
     use crate::sim::gmm::Gmm;
 
     fn engine() -> Engine<GmmBackend> {
-        Engine::new(GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05)))
+        Engine::new(GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05))).unwrap()
     }
 
-    fn req(id: u64, comp: i32, policy: GuidancePolicy) -> Request {
+    fn req(id: u64, comp: i32, policy: PolicyRef) -> Request {
         Request::new(id, "gmm", vec![comp, 0, 0, 0], 100 + id, 10, policy)
     }
 
     /// Same request but with a *shared* seed — policy-comparison tests need
     /// identical starting noise (the paper's same-seed-sequence protocol).
-    fn req_seeded(id: u64, comp: i32, policy: GuidancePolicy) -> Request {
+    fn req_seeded(id: u64, comp: i32, policy: PolicyRef) -> Request {
         Request::new(id, "gmm", vec![comp, 0, 0, 0], 777, 10, policy)
+    }
+
+    /// A backend with an empty bucket list (misbuilt artifacts).
+    struct NoBucketBackend;
+
+    impl Backend for NoBucketBackend {
+        fn flat_in(&self, _: &str) -> usize {
+            4
+        }
+        fn flat_out(&self, _: &str) -> usize {
+            4
+        }
+        fn buckets(&self) -> &[usize] {
+            &[]
+        }
+        fn denoise(&mut self, _: &str, _: &[EvalInput]) -> Result<Vec<Vec<f32>>> {
+            Ok(Vec::new())
+        }
+        fn models(&self) -> Vec<String> {
+            Vec::new()
+        }
+    }
+
+    #[test]
+    fn empty_bucket_list_is_an_error_not_a_panic() {
+        let err = match Engine::new(NoBucketBackend) {
+            Ok(_) => panic!("expected an error"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("bucket"), "{err}");
     }
 
     #[test]
     fn single_cfg_request_runs_to_completion() {
         let mut e = engine();
-        let out = e.run(vec![req(0, 1, GuidancePolicy::Cfg { s: 2.0 })]).unwrap();
+        let out = e.run(vec![req(0, 1, cfg(2.0))]).unwrap();
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].nfes, 20);
         assert_eq!(out[0].cfg_steps, 10);
@@ -228,8 +266,8 @@ mod tests {
         let mut e = engine();
         let out = e
             .run(vec![
-                req_seeded(0, 1, GuidancePolicy::Cfg { s: 2.0 }),
-                req_seeded(1, 1, GuidancePolicy::Ag { s: 2.0, gamma_bar: 0.995 }),
+                req_seeded(0, 1, cfg(2.0)),
+                req_seeded(1, 1, ag(2.0, 0.995)),
             ])
             .unwrap();
         let cfg = &out[0];
@@ -249,8 +287,8 @@ mod tests {
         let mut e = engine();
         let out = e
             .run(vec![
-                req_seeded(0, 2, GuidancePolicy::Cfg { s: 2.0 }),
-                req_seeded(1, 2, GuidancePolicy::Ag { s: 2.0, gamma_bar: 1.01 }),
+                req_seeded(0, 2, cfg(2.0)),
+                req_seeded(1, 2, ag(2.0, 1.01)),
             ])
             .unwrap();
         assert_eq!(out[0].image, out[1].image);
@@ -261,7 +299,7 @@ mod tests {
     fn batching_packs_items_across_requests() {
         let mut e = engine();
         let reqs: Vec<_> = (0..8)
-            .map(|i| req(i, 1 + (i % 4) as i32, GuidancePolicy::Cfg { s: 2.0 }))
+            .map(|i| req(i, 1 + (i % 4) as i32, cfg(2.0)))
             .collect();
         let out = e.run(reqs).unwrap();
         assert_eq!(out.len(), 8);
@@ -278,7 +316,7 @@ mod tests {
         // conditional items together (occupancy stays above 8 = #requests).
         let mut e = engine();
         let reqs: Vec<_> = (0..8)
-            .map(|i| req(i, 1, GuidancePolicy::Ag { s: 2.0, gamma_bar: 0.99 }))
+            .map(|i| req(i, 1, ag(2.0, 0.99)))
             .collect();
         let out = e.run(reqs).unwrap();
         let total: usize = out.iter().map(|c| c.nfes).sum();
@@ -290,14 +328,14 @@ mod tests {
     #[test]
     fn incremental_submission_between_pumps() {
         let mut e = engine();
-        e.submit(req(0, 1, GuidancePolicy::Cfg { s: 2.0 }));
+        e.submit(req(0, 1, cfg(2.0)));
         let mut done = Vec::new();
         let mut pumped = 0;
         while !e.idle() {
             done.extend(e.pump().unwrap());
             pumped += 1;
             if pumped == 3 {
-                e.submit(req(1, 2, GuidancePolicy::Cfg { s: 2.0 }));
+                e.submit(req(1, 2, cfg(2.0)));
             }
         }
         assert_eq!(done.len(), 2);
@@ -307,7 +345,7 @@ mod tests {
     fn seeds_make_runs_reproducible() {
         let run = || {
             let mut e = engine();
-            e.run(vec![req(0, 3, GuidancePolicy::Cfg { s: 2.0 })]).unwrap()
+            e.run(vec![req(0, 3, cfg(2.0))]).unwrap()
         };
         let a = run();
         let b = run();
@@ -318,10 +356,7 @@ mod tests {
     fn cond_only_is_half_the_cost_of_cfg() {
         let mut e = engine();
         let out = e
-            .run(vec![
-                req(0, 1, GuidancePolicy::Cfg { s: 2.0 }),
-                req(1, 1, GuidancePolicy::CondOnly),
-            ])
+            .run(vec![req(0, 1, cfg(2.0)), req(1, 1, cond_only())])
             .unwrap();
         assert_eq!(out[0].nfes, 2 * out[1].nfes);
     }

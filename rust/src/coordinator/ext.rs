@@ -1,0 +1,216 @@
+//! Follow-up-literature guidance policies, implemented *purely as plugins*
+//! against the open [`Policy`](crate::coordinator::policy::Policy) API:
+//! nothing in `engine.rs` or `request.rs` knows these exist — they are
+//! ordinary trait impls wired in through the
+//! [`PolicyRegistry`](crate::coordinator::spec::PolicyRegistry).
+//!
+//!  * [`CompressedCfg`] — periodic guidance compression (Dinh et al.,
+//!    *Compress Guidance in Conditional Diffusion Sampling*): run the full
+//!    guidance pair on every k-th step only, conditional in between.
+//!  * [`AdaptiveScale`] — step-adaptive guidance scale (Zhang et al., *How
+//!    Much To Guide*): decay the scale as the convergence signal gamma_t
+//!    rises, and drop guidance entirely once it saturates. Uses the
+//!    per-request gamma history in
+//!    [`PolicyState`](crate::coordinator::policy::PolicyState) — state no
+//!    single shared boolean could carry.
+
+use crate::coordinator::policy::{Policy, PolicyState, StepObservation, StepPlan};
+use crate::coordinator::spec::{PolicyRegistry, PolicySpec};
+use crate::util::json;
+
+/// Guided step every `period` steps (step 0, period, 2·period, …),
+/// conditional-only in between. `period = 1` degenerates to plain CFG.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressedCfg {
+    pub s: f32,
+    pub period: usize,
+}
+
+impl Policy for CompressedCfg {
+    fn name(&self) -> String {
+        format!("compressed-cfg(k={})", self.period)
+    }
+
+    fn plan(&self, step: usize, _total: usize, _state: &PolicyState) -> StepPlan {
+        // `.max(1)` guards direct construction with period 0 (the registry
+        // builder rejects it, but the struct and helper are public).
+        if step % self.period.max(1) == 0 {
+            StepPlan::Guided { s: self.s }
+        } else {
+            StepPlan::CondOnly
+        }
+    }
+
+    fn spec(&self) -> PolicySpec {
+        PolicySpec::new("compressed-cfg")
+            .with("s", json::num(self.s as f64))
+            .with("period", json::num(self.period as f64))
+    }
+}
+
+/// Guidance scale ramped from `s_max` down to `s_min` as the observed
+/// gamma_t rises across `[gamma_lo, gamma_hi]`; once gamma_t reaches
+/// `gamma_hi` the scale has pinned at `s_min` and the unconditional stream
+/// is dropped entirely (guidance no longer buys anything — the policy's own
+/// truncation rule, expressed without engine support).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptiveScale {
+    pub s_max: f32,
+    pub s_min: f32,
+    pub gamma_lo: f64,
+    pub gamma_hi: f64,
+}
+
+impl AdaptiveScale {
+    /// The scale for the next step given the last observed gamma.
+    fn scale(&self, state: &PolicyState) -> f32 {
+        match state.last_gamma() {
+            Some(g) => {
+                let span = (self.gamma_hi - self.gamma_lo).max(f64::EPSILON);
+                let frac = ((g - self.gamma_lo) / span).clamp(0.0, 1.0) as f32;
+                self.s_max + (self.s_min - self.s_max) * frac
+            }
+            // no observation yet: full strength
+            None => self.s_max,
+        }
+    }
+}
+
+impl Policy for AdaptiveScale {
+    fn name(&self) -> String {
+        format!("adaptive-scale({}→{})", self.s_max, self.s_min)
+    }
+
+    fn plan(&self, _step: usize, _total: usize, state: &PolicyState) -> StepPlan {
+        if state.truncated {
+            StepPlan::CondOnly
+        } else {
+            StepPlan::Guided {
+                s: self.scale(state),
+            }
+        }
+    }
+
+    fn observe(&self, state: &mut PolicyState, obs: &StepObservation) {
+        // NaN gamma (single-stream step) never saturates the ramp.
+        if !state.truncated && obs.gamma >= self.gamma_hi {
+            state.truncated = true;
+            state.truncated_at = Some(obs.step);
+        }
+    }
+
+    fn spec(&self) -> PolicySpec {
+        PolicySpec::new("adaptive-scale")
+            .with("s_max", json::num(self.s_max as f64))
+            .with("s_min", json::num(self.s_min as f64))
+            .with("gamma_lo", json::num(self.gamma_lo))
+            .with("gamma_hi", json::num(self.gamma_hi))
+    }
+}
+
+/// Register the plugin policies (called by
+/// [`PolicyRegistry::builtin`]; external policy crates follow the same
+/// pattern).
+pub fn register(reg: &mut PolicyRegistry) {
+    reg.register("compressed-cfg", |spec| {
+        let period = spec.usize_or("period", 4)?;
+        if period == 0 {
+            return Err(spec.bad("period", "must be >= 1"));
+        }
+        Ok(CompressedCfg {
+            s: spec.f32_or("s", 7.5)?,
+            period,
+        }
+        .into_ref())
+    });
+    reg.register("adaptive-scale", |spec| {
+        let gamma_lo = spec.f64_or("gamma_lo", 0.9)?;
+        let gamma_hi = spec.f64_or("gamma_hi", 0.9995)?;
+        if gamma_hi <= gamma_lo {
+            return Err(spec.bad("gamma_hi", "must be > gamma_lo"));
+        }
+        Ok(AdaptiveScale {
+            s_max: spec.f32_or("s_max", 7.5)?,
+            s_min: spec.f32_or("s_min", 1.5)?,
+            gamma_lo,
+            gamma_hi,
+        }
+        .into_ref())
+    });
+}
+
+/// Constructor helpers matching `policy.rs`'s short form.
+pub fn compressed_cfg(s: f32, period: usize) -> crate::coordinator::policy::PolicyRef {
+    CompressedCfg { s, period }.into_ref()
+}
+
+pub fn adaptive_scale(
+    s_max: f32,
+    s_min: f32,
+    gamma_lo: f64,
+    gamma_hi: f64,
+) -> crate::coordinator::policy::PolicyRef {
+    AdaptiveScale {
+        s_max,
+        s_min,
+        gamma_lo,
+        gamma_hi,
+    }
+    .into_ref()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compressed_cfg_guides_every_kth_step() {
+        let p = CompressedCfg { s: 2.0, period: 4 };
+        let st = PolicyState::new();
+        let guided: Vec<usize> = (0..12).filter(|&i| p.plan(i, 12, &st).guided()).collect();
+        assert_eq!(guided, vec![0, 4, 8]);
+        // 3 guided * 2 + 9 cond = 15
+        assert_eq!(p.max_nfes(12), 15);
+        // period 1 ≡ CFG; period 0 (direct construction) degrades to 1
+        // instead of panicking on the modulo
+        assert_eq!(CompressedCfg { s: 2.0, period: 1 }.max_nfes(10), 20);
+        assert_eq!(CompressedCfg { s: 2.0, period: 0 }.max_nfes(10), 20);
+    }
+
+    #[test]
+    fn adaptive_scale_decays_with_gamma_and_truncates() {
+        let p = AdaptiveScale {
+            s_max: 8.0,
+            s_min: 2.0,
+            gamma_lo: 0.5,
+            gamma_hi: 0.9,
+        };
+        let mut st = PolicyState::new();
+        // no observation yet: full strength
+        assert_eq!(p.plan(0, 10, &st), StepPlan::Guided { s: 8.0 });
+        // halfway up the ramp: s = 8 + (2-8)*0.5 = 5
+        st.gammas.push(0.7);
+        assert_eq!(p.plan(1, 10, &st), StepPlan::Guided { s: 5.0 });
+        // below the ramp: clamped to s_max
+        st.gammas.push(0.2);
+        assert_eq!(p.plan(2, 10, &st), StepPlan::Guided { s: 8.0 });
+        // saturation: observe() truncates, plan drops the pair
+        st.gammas.push(0.95);
+        p.observe(
+            &mut st,
+            &StepObservation {
+                step: 3,
+                total: 10,
+                gamma: 0.95,
+                gamma_eps: 0.95,
+                nfes: 2,
+                guided: true,
+            },
+        );
+        assert!(st.truncated);
+        assert_eq!(st.truncated_at, Some(3));
+        assert_eq!(p.plan(4, 10, &st), StepPlan::CondOnly);
+        // worst case (fresh state) is still 2 NFEs/step
+        assert_eq!(p.max_nfes(10), 20);
+    }
+}

@@ -1,11 +1,19 @@
 //! L3 coordinator: the paper's system contribution.
 //!
-//! * [`policy`] — guidance policies (CFG / AG / LINEARAG / searched / pix2pix)
+//! * [`policy`] — the open guidance-policy API: the [`policy::Policy`]
+//!   trait, per-request [`policy::PolicyState`], and the built-in policies
+//!   (CFG / AG / LINEARAG / searched / pix2pix / …)
+//! * [`spec`] — the `PolicySpec` wire/config format and the
+//!   [`spec::PolicyRegistry`] that constructs policies by name
+//! * [`ext`] — follow-up-literature policies plugged in through the trait
+//!   API (no engine changes)
 //! * [`solver`] — cosine-VP schedule + DPM-Solver++(2M) coefficient folding
-//! * [`request`] — per-request state machine (combine, truncation, history)
+//! * [`request`] — per-request state machine (combine, policy state, history)
 //! * [`engine`] — continuation batching of NFE work items over a [`crate::Backend`]
 
 pub mod engine;
+pub mod ext;
 pub mod policy;
 pub mod request;
 pub mod solver;
+pub mod spec;

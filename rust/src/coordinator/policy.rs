@@ -1,31 +1,60 @@
-//! Guidance policies — the paper's contribution surface.
+//! The open guidance-policy API — the paper's contribution surface.
 //!
-//! A policy maps `(step index, total steps, AG-truncation state)` to a
-//! [`StepPlan`] describing which network evaluations the step needs and how
-//! they are combined. The engine executes plans, feeds back the cosine
-//! signal gamma_t (Eq. 7), and the policy's truncation rule decides when the
-//! unconditional stream can be dropped.
+//! A [`Policy`] decides, per denoising step, which network evaluations the
+//! step needs and how they are combined ([`StepPlan`]). The engine executes
+//! plans and feeds back a [`StepObservation`] (the cosine signal gamma_t of
+//! Eq. 7 among other accounting); the policy reacts by updating its
+//! per-request [`PolicyState`] — e.g. the AG truncation rule drops the
+//! unconditional stream once gamma_t crosses the threshold.
 //!
-//! Implemented policies (paper reference in parens):
-//!  * [`GuidancePolicy::Cfg`] — classic classifier-free guidance (Eq. 3).
-//!  * [`GuidancePolicy::CondOnly`] — conditional-only; the cost model of a
+//! The API is *open*: policies are trait objects constructed by name through
+//! [`crate::coordinator::spec::PolicyRegistry`], and new policies plug in
+//! without touching the engine or the request state machine (see
+//! [`crate::coordinator::ext`] for two follow-up-literature policies built
+//! exactly that way).
+//!
+//! # Adding a policy
+//!
+//! 1. Define a struct with the policy's *configuration* (scales, thresholds).
+//!    Per-request *state* does not live here — it lives in [`PolicyState`],
+//!    which the engine owns per request.
+//! 2. `impl Policy`: `plan` maps `(step, total, &state)` to a [`StepPlan`];
+//!    `observe` (optional) updates the state from each completed step —
+//!    set `state.truncated` to switch the remaining steps to a cheaper plan.
+//!    `spec` reports the wire format so configs/benches can round-trip it.
+//! 3. Register a builder under a wire name:
+//!    `registry.register("my-policy", |spec| Ok(MyPolicy { .. }.into_ref()))`.
+//!    The server line protocol, the CLI, and the benches all construct
+//!    policies through the registry, so the new name is immediately
+//!    reachable everywhere.
+//!
+//! Built-in policies (paper reference in parens):
+//!  * [`Cfg`] — classic classifier-free guidance (Eq. 3).
+//!  * [`CondOnly`] — conditional-only; the cost model of a
 //!    guidance-distilled network (the GD comparator in Fig. 1).
-//!  * [`GuidancePolicy::Ag`] — Adaptive Guidance (§5): CFG until
-//!    `gamma_t >= gamma_bar`, conditional afterwards.
-//!  * [`GuidancePolicy::AgFixedPrefix`] — first `cfg_steps` guided, rest
-//!    conditional (the "5 CFG + 15 cond" ablation of Fig. 8).
-//!  * [`GuidancePolicy::AlternatingCfg`] — Fig. 8's naive baseline:
-//!    alternate CFG/cond in the first half, cond in the second half.
-//!  * [`GuidancePolicy::LinearAg`] — LINEARAG (§5.1, Eq. 11): alternate CFG
-//!    and OLS-estimated CFG in the first half, OLS-estimated CFG after.
-//!  * [`GuidancePolicy::Searched`] — an explicit per-step choice sequence, as
-//!    produced by the NAS search (§4).
-//!  * [`GuidancePolicy::Pix2Pix`] — image-editing guidance (Eq. 9) with
-//!    optional AG truncation of the two auxiliary streams (App. B).
+//!  * [`Ag`] — Adaptive Guidance (§5): CFG until `gamma_t >= gamma_bar`,
+//!    conditional afterwards.
+//!  * [`AgFixedPrefix`] — first `cfg_steps` guided, rest conditional (the
+//!    "5 CFG + 15 cond" ablation of Fig. 8).
+//!  * [`AlternatingCfg`] — Fig. 8's naive baseline: alternate CFG/cond in
+//!    the guided half, cond in the rest.
+//!  * [`LinearAg`] — LINEARAG (§5.1, Eq. 11): alternate CFG and
+//!    OLS-estimated CFG in the guided half, OLS-estimated CFG after.
+//!  * [`Searched`] — an explicit per-step choice sequence, as produced by
+//!    the NAS search (§4).
+//!  * [`Pix2Pix`] — image-editing guidance (Eq. 9) with optional AG
+//!    truncation of the two auxiliary streams (App. B).
+//!
+//! Plugin policies from the follow-up literature live in
+//! [`crate::coordinator::ext`]: [`crate::coordinator::ext::CompressedCfg`]
+//! and [`crate::coordinator::ext::AdaptiveScale`].
 
+use std::fmt;
 use std::sync::Arc;
 
+use crate::coordinator::spec::PolicySpec;
 use crate::ols::OlsCoeffs;
+use crate::util::json;
 
 /// Per-step option chosen by a searched policy (§4.1's F_t).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -45,7 +74,9 @@ pub enum StepPlan {
     /// Evaluate uncond only (searched policies may select it).
     UncondOnly,
     /// Evaluate cond only; substitute the OLS estimate for eps_u (Eq. 10).
-    LinearGuided { s: f32 },
+    /// The plan carries the estimator so the request state machine needs no
+    /// knowledge of the policy that emitted it.
+    LinearGuided { s: f32, coeffs: Arc<OlsCoeffs> },
     /// Editing triple-eval (Eq. 9): (c, I), (∅, I), (∅, ∅).
     EditGuided { s_text: f32, s_img: f32 },
     /// Editing after AG truncation: (c, I) only.
@@ -62,169 +93,508 @@ impl StepPlan {
             StepPlan::EditCondOnly => 1,
         }
     }
+
+    /// Whether the plan evaluates a guidance pair/triple (counts as a "CFG
+    /// step" in the paper's accounting).
+    pub fn guided(&self) -> bool {
+        matches!(self, StepPlan::Guided { .. } | StepPlan::EditGuided { .. })
+    }
 }
 
-/// A guidance policy (see module docs).
+/// Per-request adaptive state, owned by the request state machine and
+/// threaded through [`Policy::plan`] / mutated by [`Policy::observe`].
+///
+/// The common fields cover the built-in policies (truncation flag + step,
+/// guided-step counter, observed gamma history); `scratch` is free-form
+/// numeric storage for policies with richer state.
+#[derive(Debug, Clone, Default)]
+pub struct PolicyState {
+    /// The policy switched to its cheap phase (AG's truncation rule).
+    pub truncated: bool,
+    /// Step at which truncation fired (effective from the next step).
+    pub truncated_at: Option<usize>,
+    /// Guided (pair/triple) steps executed so far.
+    pub guided_steps: usize,
+    /// Per-step gamma history (Eq. 7 on the x0 predictions), maintained by
+    /// the request state machine: one entry per completed step, NaN for
+    /// steps without both streams.
+    pub gammas: Vec<f64>,
+    /// Policy-defined scratch space (e.g. running estimates).
+    pub scratch: Vec<f64>,
+}
+
+impl PolicyState {
+    pub fn new() -> PolicyState {
+        PolicyState::default()
+    }
+
+    /// Most recent finite gamma observation, if any.
+    pub fn last_gamma(&self) -> Option<f64> {
+        self.gammas.iter().rev().copied().find(|g| g.is_finite())
+    }
+}
+
+/// What the engine reports back to the policy after a completed step.
 #[derive(Debug, Clone)]
-pub enum GuidancePolicy {
-    Cfg { s: f32 },
-    CondOnly,
-    Ag { s: f32, gamma_bar: f64 },
-    AgFixedPrefix { s: f32, cfg_steps: usize },
-    AlternatingCfg { s: f32 },
-    LinearAg { s: f32, coeffs: Arc<OlsCoeffs> },
-    Searched { choices: Vec<StepChoice> },
-    Pix2Pix {
-        s_text: f32,
-        s_img: f32,
-        gamma_bar: Option<f64>,
-        /// fixed guided-prefix length (App. B's protocol: 10 of 20 steps
-        /// use the full Eq. 9 triple-eval, saving 33.3% of NFEs); `None`
-        /// leaves truncation purely to `gamma_bar`
-        full_prefix: Option<usize>,
-    },
+pub struct StepObservation {
+    /// The step that just completed (0-based).
+    pub step: usize,
+    /// Total steps of the request.
+    pub total: usize,
+    /// Eq. 7's cosine on the x0 data predictions (NaN for single-stream
+    /// steps) — the AG convergence signal.
+    pub gamma: f64,
+    /// Eq. 7's cosine on the raw eps predictions.
+    pub gamma_eps: f64,
+    /// Network evaluations the step consumed.
+    pub nfes: usize,
+    /// Whether the step executed a guidance pair/triple.
+    pub guided: bool,
 }
 
-impl GuidancePolicy {
-    /// The plan for step `step` of `total`, given whether AG has truncated.
-    pub fn plan(&self, step: usize, total: usize, truncated: bool) -> StepPlan {
-        match self {
-            GuidancePolicy::Cfg { s } => StepPlan::Guided { s: *s },
-            GuidancePolicy::CondOnly => StepPlan::CondOnly,
-            GuidancePolicy::Ag { s, .. } => {
-                if truncated {
-                    StepPlan::CondOnly
-                } else {
-                    StepPlan::Guided { s: *s }
-                }
-            }
-            GuidancePolicy::AgFixedPrefix { s, cfg_steps } => {
-                if step < *cfg_steps {
-                    StepPlan::Guided { s: *s }
-                } else {
-                    StepPlan::CondOnly
-                }
-            }
-            GuidancePolicy::AlternatingCfg { s } => {
-                if step < total / 2 && step % 2 == 0 {
-                    StepPlan::Guided { s: *s }
-                } else {
-                    StepPlan::CondOnly
-                }
-            }
-            GuidancePolicy::LinearAg { s, .. } => {
-                // Eq. 11: true CFG on even steps of the first half, LR-CFG on
-                // odd first-half steps and the entire second half.
-                if step < total / 2 && step % 2 == 0 {
-                    StepPlan::Guided { s: *s }
-                } else {
-                    StepPlan::LinearGuided { s: *s }
-                }
-            }
-            GuidancePolicy::Searched { choices } => match choices
-                .get(step)
-                .copied()
-                .unwrap_or(StepChoice::Cond)
-            {
-                StepChoice::Uncond => StepPlan::UncondOnly,
-                StepChoice::Cond => StepPlan::CondOnly,
-                StepChoice::Cfg { s } => StepPlan::Guided { s },
-            },
-            GuidancePolicy::Pix2Pix { s_text, s_img, full_prefix, .. } => {
-                let past_prefix = full_prefix.map_or(false, |k| step >= k);
-                if truncated || past_prefix {
-                    StepPlan::EditCondOnly
-                } else {
-                    StepPlan::EditGuided {
-                        s_text: *s_text,
-                        s_img: *s_img,
-                    }
-                }
-            }
-        }
-    }
-
-    /// AG truncation rule: should subsequent steps drop the extra streams?
-    /// Called by the engine after a guided step with the observed gamma.
-    pub fn should_truncate(&self, gamma: f64) -> bool {
-        match self {
-            GuidancePolicy::Ag { gamma_bar, .. } => gamma >= *gamma_bar,
-            GuidancePolicy::Pix2Pix {
-                gamma_bar: Some(g), ..
-            } => gamma >= *g,
-            _ => false,
-        }
-    }
-
-    /// Whether this policy consumes the OLS trajectory history.
-    pub fn needs_history(&self) -> bool {
-        matches!(self, GuidancePolicy::LinearAg { .. })
-    }
-
-    /// Upper bound on total NFEs for a request of `total` steps (exact for
-    /// non-adaptive policies; AG's worst case is no truncation).
-    pub fn max_nfes(&self, total: usize) -> usize {
-        (0..total)
-            .map(|i| self.plan(i, total, false).nfes())
-            .sum()
-    }
-
+/// A guidance policy (see module docs). Implementations are shared,
+/// immutable configuration; all per-request state lives in [`PolicyState`].
+pub trait Policy: fmt::Debug + Send + Sync {
     /// Short display name for reports.
-    pub fn name(&self) -> String {
-        match self {
-            GuidancePolicy::Cfg { s } => format!("cfg(s={s})"),
-            GuidancePolicy::CondOnly => "cond-only".into(),
-            GuidancePolicy::Ag { gamma_bar, .. } => format!("ag(ḡ={gamma_bar})"),
-            GuidancePolicy::AgFixedPrefix { cfg_steps, .. } => {
-                format!("ag-prefix({cfg_steps})")
-            }
-            GuidancePolicy::AlternatingCfg { .. } => "alternating".into(),
-            GuidancePolicy::LinearAg { .. } => "linear-ag".into(),
-            GuidancePolicy::Searched { .. } => "searched".into(),
-            GuidancePolicy::Pix2Pix { gamma_bar, .. } => match gamma_bar {
-                Some(g) => format!("pix2pix-ag(ḡ={g})"),
-                None => "pix2pix".into(),
-            },
+    fn name(&self) -> String;
+
+    /// The plan for step `step` of `total`, given the request's state.
+    fn plan(&self, step: usize, total: usize, state: &PolicyState) -> StepPlan;
+
+    /// React to a completed step (default: stateless). Called once per step
+    /// with the gamma signal; adaptive policies update `state` here — the
+    /// engine never interprets thresholds itself.
+    fn observe(&self, _state: &mut PolicyState, _obs: &StepObservation) {}
+
+    /// Whether this policy consumes the OLS trajectory history. Contract:
+    /// a `true` here obliges `plan` to emit a history-feeding plan
+    /// ([`StepPlan::Guided`] or [`StepPlan::LinearGuided`]) on *every*
+    /// step — single-stream plans record nothing, and a later
+    /// `LinearGuided` step would find the history short and panic inside
+    /// the estimator.
+    fn needs_history(&self) -> bool {
+        false
+    }
+
+    /// Check that this policy can serve a request of `total` steps (e.g.
+    /// that a learned coefficient table covers them). Front-ends call this
+    /// before admitting a request so a bad combination is an error reply,
+    /// not an engine panic. The default accepts everything.
+    fn validate(&self, _total: usize) -> Result<(), String> {
+        Ok(())
+    }
+
+    /// Upper bound on total NFEs for a request of `total` steps: the plan
+    /// sequence under a fresh (never-truncating) state. Exact for
+    /// non-adaptive policies; AG's worst case is no truncation.
+    fn max_nfes(&self, total: usize) -> usize {
+        let state = PolicyState::new();
+        (0..total).map(|i| self.plan(i, total, &state).nfes()).sum()
+    }
+
+    /// The wire/config form of this policy (fully explicit parameters), so
+    /// any constructed policy can be serialized and rebuilt by the registry.
+    fn spec(&self) -> PolicySpec;
+
+    /// Box into the shared handle the engine consumes.
+    fn into_ref(self) -> PolicyRef
+    where
+        Self: Sized + 'static,
+    {
+        Arc::new(self)
+    }
+}
+
+/// Shared policy handle: cheap to clone into every request.
+pub type PolicyRef = Arc<dyn Policy>;
+
+/// Rounding rule for "half-split" policies ([`AlternatingCfg`],
+/// [`LinearAg`]): the guided phase covers the *first* ⌈total/2⌉ steps. For
+/// odd `total` the extra step goes to the guided half — guidance matters
+/// most early in the trajectory (Fig. 4's rising gamma_t), so the split
+/// biases toward it rather than silently shrinking it as `total / 2` did.
+pub fn guided_half(total: usize) -> usize {
+    total - total / 2
+}
+
+// ---------------------------------------------------------------------------
+// Built-in policies
+// ---------------------------------------------------------------------------
+
+/// Classic classifier-free guidance (Eq. 3): every step evaluates both
+/// streams.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cfg {
+    pub s: f32,
+}
+
+impl Policy for Cfg {
+    fn name(&self) -> String {
+        format!("cfg(s={})", self.s)
+    }
+
+    fn plan(&self, _step: usize, _total: usize, _state: &PolicyState) -> StepPlan {
+        StepPlan::Guided { s: self.s }
+    }
+
+    fn spec(&self) -> PolicySpec {
+        PolicySpec::new("cfg").with("s", json::num(self.s as f64))
+    }
+}
+
+/// Conditional-only sampling: the cost model of a guidance-distilled
+/// network (the GD comparator of Fig. 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CondOnly;
+
+impl Policy for CondOnly {
+    fn name(&self) -> String {
+        "cond-only".into()
+    }
+
+    fn plan(&self, _step: usize, _total: usize, _state: &PolicyState) -> StepPlan {
+        StepPlan::CondOnly
+    }
+
+    fn spec(&self) -> PolicySpec {
+        PolicySpec::new("cond")
+    }
+}
+
+/// Adaptive Guidance (§5): CFG until `gamma_t >= gamma_bar`, conditional
+/// afterwards.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ag {
+    pub s: f32,
+    pub gamma_bar: f64,
+}
+
+impl Policy for Ag {
+    fn name(&self) -> String {
+        format!("ag(ḡ={})", self.gamma_bar)
+    }
+
+    fn plan(&self, _step: usize, _total: usize, state: &PolicyState) -> StepPlan {
+        if state.truncated {
+            StepPlan::CondOnly
+        } else {
+            StepPlan::Guided { s: self.s }
         }
     }
+
+    fn observe(&self, state: &mut PolicyState, obs: &StepObservation) {
+        // NaN gamma (single-stream step) never crosses the threshold.
+        if !state.truncated && obs.gamma >= self.gamma_bar {
+            state.truncated = true;
+            state.truncated_at = Some(obs.step);
+        }
+    }
+
+    fn spec(&self) -> PolicySpec {
+        PolicySpec::new("ag")
+            .with("s", json::num(self.s as f64))
+            .with("gamma_bar", json::num(self.gamma_bar))
+    }
+}
+
+/// Fixed guided prefix: first `cfg_steps` guided, rest conditional (the
+/// "5 CFG + 15 cond" ablation of Fig. 8).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgFixedPrefix {
+    pub s: f32,
+    pub cfg_steps: usize,
+}
+
+impl Policy for AgFixedPrefix {
+    fn name(&self) -> String {
+        format!("ag-prefix({})", self.cfg_steps)
+    }
+
+    fn plan(&self, step: usize, _total: usize, _state: &PolicyState) -> StepPlan {
+        if step < self.cfg_steps {
+            StepPlan::Guided { s: self.s }
+        } else {
+            StepPlan::CondOnly
+        }
+    }
+
+    fn spec(&self) -> PolicySpec {
+        PolicySpec::new("ag-prefix")
+            .with("s", json::num(self.s as f64))
+            .with("cfg_steps", json::num(self.cfg_steps as f64))
+    }
+}
+
+/// Fig. 8's naive baseline: alternate CFG/cond in the guided half
+/// ([`guided_half`]), conditional in the rest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlternatingCfg {
+    pub s: f32,
+}
+
+impl Policy for AlternatingCfg {
+    fn name(&self) -> String {
+        "alternating".into()
+    }
+
+    fn plan(&self, step: usize, total: usize, _state: &PolicyState) -> StepPlan {
+        if step < guided_half(total) && step % 2 == 0 {
+            StepPlan::Guided { s: self.s }
+        } else {
+            StepPlan::CondOnly
+        }
+    }
+
+    fn spec(&self) -> PolicySpec {
+        PolicySpec::new("alternating").with("s", json::num(self.s as f64))
+    }
+}
+
+/// LINEARAG (§5.1, Eq. 11): true CFG on even steps of the guided half,
+/// OLS-estimated CFG on odd guided-half steps and the entire rest.
+#[derive(Debug, Clone)]
+pub struct LinearAg {
+    pub s: f32,
+    pub coeffs: Arc<OlsCoeffs>,
+}
+
+impl Policy for LinearAg {
+    fn name(&self) -> String {
+        "linear-ag".into()
+    }
+
+    fn plan(&self, step: usize, total: usize, _state: &PolicyState) -> StepPlan {
+        if step < guided_half(total) && step % 2 == 0 {
+            StepPlan::Guided { s: self.s }
+        } else {
+            StepPlan::LinearGuided {
+                s: self.s,
+                coeffs: self.coeffs.clone(),
+            }
+        }
+    }
+
+    fn needs_history(&self) -> bool {
+        true
+    }
+
+    fn validate(&self, total: usize) -> Result<(), String> {
+        if self.coeffs.steps() < total {
+            return Err(format!(
+                "linear-ag coefficients cover {} steps but the request has {total}",
+                self.coeffs.steps()
+            ));
+        }
+        Ok(())
+    }
+
+    fn spec(&self) -> PolicySpec {
+        PolicySpec::new("linear-ag")
+            .with("s", json::num(self.s as f64))
+            .with("coeffs", self.coeffs.to_json())
+    }
+}
+
+/// An explicit per-step choice sequence, as produced by the NAS search
+/// (§4). Out-of-range steps default to conditional.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Searched {
+    pub choices: Vec<StepChoice>,
+}
+
+impl Policy for Searched {
+    fn name(&self) -> String {
+        "searched".into()
+    }
+
+    fn plan(&self, step: usize, _total: usize, _state: &PolicyState) -> StepPlan {
+        match self.choices.get(step).copied().unwrap_or(StepChoice::Cond) {
+            StepChoice::Uncond => StepPlan::UncondOnly,
+            StepChoice::Cond => StepPlan::CondOnly,
+            StepChoice::Cfg { s } => StepPlan::Guided { s },
+        }
+    }
+
+    fn spec(&self) -> PolicySpec {
+        let choices = self
+            .choices
+            .iter()
+            .map(|c| match c {
+                StepChoice::Uncond => json::s("uncond"),
+                StepChoice::Cond => json::s("cond"),
+                StepChoice::Cfg { s } => json::obj(vec![("cfg", json::num(*s as f64))]),
+            })
+            .collect();
+        PolicySpec::new("searched").with("choices", json::arr(choices))
+    }
+}
+
+/// Image-editing guidance (Eq. 9) with optional AG truncation of the two
+/// auxiliary streams (App. B).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pix2Pix {
+    pub s_text: f32,
+    pub s_img: f32,
+    pub gamma_bar: Option<f64>,
+    /// fixed guided-prefix length (App. B's protocol: 10 of 20 steps use
+    /// the full Eq. 9 triple-eval, saving 33.3% of NFEs); `None` leaves
+    /// truncation purely to `gamma_bar`
+    pub full_prefix: Option<usize>,
+}
+
+impl Policy for Pix2Pix {
+    fn name(&self) -> String {
+        match self.gamma_bar {
+            Some(g) => format!("pix2pix-ag(ḡ={g})"),
+            None => "pix2pix".into(),
+        }
+    }
+
+    fn plan(&self, step: usize, _total: usize, state: &PolicyState) -> StepPlan {
+        let past_prefix = self.full_prefix.map_or(false, |k| step >= k);
+        if state.truncated || past_prefix {
+            StepPlan::EditCondOnly
+        } else {
+            StepPlan::EditGuided {
+                s_text: self.s_text,
+                s_img: self.s_img,
+            }
+        }
+    }
+
+    fn observe(&self, state: &mut PolicyState, obs: &StepObservation) {
+        if let Some(g) = self.gamma_bar {
+            if !state.truncated && obs.gamma >= g {
+                state.truncated = true;
+                state.truncated_at = Some(obs.step);
+            }
+        }
+    }
+
+    fn spec(&self) -> PolicySpec {
+        let mut spec = PolicySpec::new("pix2pix")
+            .with("s_text", json::num(self.s_text as f64))
+            .with("s_img", json::num(self.s_img as f64));
+        if let Some(g) = self.gamma_bar {
+            spec = spec.with("gamma_bar", json::num(g));
+        }
+        if let Some(k) = self.full_prefix {
+            spec = spec.with("full_prefix", json::num(k as f64));
+        }
+        spec
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Constructor helpers: the short form used by benches, examples and tests.
+// ---------------------------------------------------------------------------
+
+pub fn cfg(s: f32) -> PolicyRef {
+    Cfg { s }.into_ref()
+}
+
+pub fn cond_only() -> PolicyRef {
+    CondOnly.into_ref()
+}
+
+pub fn ag(s: f32, gamma_bar: f64) -> PolicyRef {
+    Ag { s, gamma_bar }.into_ref()
+}
+
+pub fn ag_prefix(s: f32, cfg_steps: usize) -> PolicyRef {
+    AgFixedPrefix { s, cfg_steps }.into_ref()
+}
+
+pub fn alternating(s: f32) -> PolicyRef {
+    AlternatingCfg { s }.into_ref()
+}
+
+pub fn linear_ag(s: f32, coeffs: Arc<OlsCoeffs>) -> PolicyRef {
+    LinearAg { s, coeffs }.into_ref()
+}
+
+pub fn searched(choices: Vec<StepChoice>) -> PolicyRef {
+    Searched { choices }.into_ref()
+}
+
+pub fn pix2pix(
+    s_text: f32,
+    s_img: f32,
+    gamma_bar: Option<f64>,
+    full_prefix: Option<usize>,
+) -> PolicyRef {
+    Pix2Pix {
+        s_text,
+        s_img,
+        gamma_bar,
+        full_prefix,
+    }
+    .into_ref()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn cfg_always_guided() {
-        let p = GuidancePolicy::Cfg { s: 7.5 };
-        for i in 0..20 {
-            assert_eq!(p.plan(i, 20, false), StepPlan::Guided { s: 7.5 });
-        }
-        assert_eq!(p.max_nfes(20), 40);
-        assert!(!p.should_truncate(1.0));
+    fn fresh() -> PolicyState {
+        PolicyState::new()
+    }
+
+    /// Drive `observe` the way the engine does for a guided step.
+    fn observe_gamma(p: &dyn Policy, state: &mut PolicyState, step: usize, gamma: f64) {
+        state.gammas.push(gamma);
+        p.observe(
+            state,
+            &StepObservation {
+                step,
+                total: 20,
+                gamma,
+                gamma_eps: gamma,
+                nfes: 2,
+                guided: true,
+            },
+        );
     }
 
     #[test]
-    fn ag_switches_on_truncation_flag() {
-        let p = GuidancePolicy::Ag {
+    fn cfg_always_guided() {
+        let p = Cfg { s: 7.5 };
+        let st = fresh();
+        for i in 0..20 {
+            assert_eq!(p.plan(i, 20, &st), StepPlan::Guided { s: 7.5 });
+        }
+        assert_eq!(p.max_nfes(20), 40);
+    }
+
+    #[test]
+    fn ag_truncates_through_observe() {
+        let p = Ag {
             s: 7.5,
             gamma_bar: 0.99,
         };
-        assert_eq!(p.plan(3, 20, false), StepPlan::Guided { s: 7.5 });
-        assert_eq!(p.plan(3, 20, true), StepPlan::CondOnly);
-        assert!(p.should_truncate(0.995));
-        assert!(!p.should_truncate(0.98));
+        let mut st = fresh();
+        assert_eq!(p.plan(3, 20, &st), StepPlan::Guided { s: 7.5 });
+        observe_gamma(&p, &mut st, 3, 0.98);
+        assert!(!st.truncated, "below threshold must not truncate");
+        observe_gamma(&p, &mut st, 4, 0.995);
+        assert!(st.truncated);
+        assert_eq!(st.truncated_at, Some(4));
+        assert_eq!(p.plan(5, 20, &st), StepPlan::CondOnly);
+        // NaN gamma (single-stream step) never truncates
+        let mut st2 = fresh();
+        observe_gamma(&p, &mut st2, 0, f64::NAN);
+        assert!(!st2.truncated);
     }
 
     #[test]
     fn ag_prefix_counts() {
-        let p = GuidancePolicy::AgFixedPrefix {
+        let p = AgFixedPrefix {
             s: 7.5,
             cfg_steps: 5,
         };
-        let plans: Vec<_> = (0..20).map(|i| p.plan(i, 20, false)).collect();
-        let guided = plans
-            .iter()
-            .filter(|pl| matches!(pl, StepPlan::Guided { .. }))
+        let st = fresh();
+        let guided = (0..20)
+            .filter(|&i| p.plan(i, 20, &st).guided())
             .count();
         assert_eq!(guided, 5);
         assert_eq!(p.max_nfes(20), 25);
@@ -232,13 +602,40 @@ mod tests {
 
     #[test]
     fn alternating_matches_fig8_description() {
-        // first half: CFG on even steps; second half: all conditional.
-        let p = GuidancePolicy::AlternatingCfg { s: 7.5 };
+        // guided half: CFG on even steps; rest: all conditional.
+        let p = AlternatingCfg { s: 7.5 };
+        let st = fresh();
         let guided: Vec<usize> = (0..20)
-            .filter(|&i| matches!(p.plan(i, 20, false), StepPlan::Guided { .. }))
+            .filter(|&i| p.plan(i, 20, &st).guided())
             .collect();
         assert_eq!(guided, vec![0, 2, 4, 6, 8]);
         assert_eq!(p.max_nfes(20), 25);
+    }
+
+    #[test]
+    fn guided_half_rounds_up_for_odd_totals() {
+        // the shared rounding rule: the guided phase gets the extra step.
+        assert_eq!(guided_half(20), 10);
+        assert_eq!(guided_half(5), 3);
+        assert_eq!(guided_half(7), 4);
+        assert_eq!(guided_half(1), 1);
+        assert_eq!(guided_half(0), 0);
+
+        // T=5: guided phase covers steps 0..3, CFG on its even steps 0, 2.
+        let p = AlternatingCfg { s: 2.0 };
+        let st = fresh();
+        let guided: Vec<usize> = (0..5).filter(|&i| p.plan(i, 5, &st).guided()).collect();
+        assert_eq!(guided, vec![0, 2]);
+        assert_eq!(p.max_nfes(5), 7);
+
+        // LinearAg shares the same rule: T=5 → CFG at 0, 2; LR elsewhere.
+        let lin = LinearAg {
+            s: 2.0,
+            coeffs: Arc::new(OlsCoeffs::identity(5)),
+        };
+        let guided: Vec<usize> = (0..5).filter(|&i| lin.plan(i, 5, &st).guided()).collect();
+        assert_eq!(guided, vec![0, 2]);
+        assert_eq!(lin.max_nfes(5), 7);
     }
 
     #[test]
@@ -247,65 +644,95 @@ mod tests {
             beta_c: vec![vec![]; 20],
             beta_u: vec![vec![]; 20],
         });
-        let p = GuidancePolicy::LinearAg { s: 7.5, coeffs };
+        let p = LinearAg { s: 7.5, coeffs };
+        let st = fresh();
         // T=20: steps 0,2,4,6,8 true CFG; 1,3,5,7,9 LR; 10..19 LR
         for i in 0..20 {
-            let plan = p.plan(i, 20, false);
+            let plan = p.plan(i, 20, &st);
             if i < 10 && i % 2 == 0 {
                 assert_eq!(plan, StepPlan::Guided { s: 7.5 }, "step {i}");
             } else {
-                assert_eq!(plan, StepPlan::LinearGuided { s: 7.5 }, "step {i}");
+                assert!(
+                    matches!(plan, StepPlan::LinearGuided { s, .. } if s == 7.5),
+                    "step {i}"
+                );
             }
         }
         // 5 guided * 2 + 15 LR * 1 = 25 NFEs (the paper's 75% guidance saving
         // relative to CFG's extra 20: only 5 extra evals remain)
         assert_eq!(p.max_nfes(20), 25);
         assert!(p.needs_history());
+        // the coefficient table must cover the request's step count
+        assert!(p.validate(20).is_ok());
+        assert!(p.validate(21).is_err());
     }
 
     #[test]
     fn searched_policy_maps_choices() {
-        let p = GuidancePolicy::Searched {
+        let p = Searched {
             choices: vec![
                 StepChoice::Cfg { s: 7.5 },
                 StepChoice::Cond,
                 StepChoice::Uncond,
             ],
         };
-        assert_eq!(p.plan(0, 3, false), StepPlan::Guided { s: 7.5 });
-        assert_eq!(p.plan(1, 3, false), StepPlan::CondOnly);
-        assert_eq!(p.plan(2, 3, false), StepPlan::UncondOnly);
+        let st = fresh();
+        assert_eq!(p.plan(0, 3, &st), StepPlan::Guided { s: 7.5 });
+        assert_eq!(p.plan(1, 3, &st), StepPlan::CondOnly);
+        assert_eq!(p.plan(2, 3, &st), StepPlan::UncondOnly);
         // out-of-range steps default to conditional
-        assert_eq!(p.plan(7, 3, false), StepPlan::CondOnly);
+        assert_eq!(p.plan(7, 3, &st), StepPlan::CondOnly);
         assert_eq!(p.max_nfes(3), 4);
     }
 
     #[test]
     fn pix2pix_truncation() {
-        let p = GuidancePolicy::Pix2Pix {
+        let p = Pix2Pix {
             s_text: 7.5,
             s_img: 1.5,
             gamma_bar: Some(0.99),
             full_prefix: None,
         };
-        assert_eq!(p.plan(0, 20, false).nfes(), 3);
-        assert_eq!(p.plan(0, 20, true), StepPlan::EditCondOnly);
-        assert!(p.should_truncate(0.995));
+        let mut st = fresh();
+        assert_eq!(p.plan(0, 20, &st).nfes(), 3);
+        observe_gamma(&p, &mut st, 0, 0.995);
+        assert!(st.truncated);
+        assert_eq!(p.plan(1, 20, &st), StepPlan::EditCondOnly);
         // without a threshold it never truncates
-        let p2 = GuidancePolicy::Pix2Pix {
+        let p2 = Pix2Pix {
             s_text: 7.5,
             s_img: 1.5,
             gamma_bar: None,
             full_prefix: None,
         };
-        assert!(!p2.should_truncate(1.0));
+        let mut st2 = fresh();
+        observe_gamma(&p2, &mut st2, 0, 1.0);
+        assert!(!st2.truncated);
         assert_eq!(p2.max_nfes(20), 60);
+        // a fixed prefix caps the triple-eval phase
+        let p3 = Pix2Pix {
+            s_text: 7.5,
+            s_img: 1.5,
+            gamma_bar: None,
+            full_prefix: Some(10),
+        };
+        assert_eq!(p3.max_nfes(20), 40);
     }
 
     #[test]
     fn nfe_summary_matches_paper_fig1() {
         // Fig. 1's cost axis at T=20: CFG=40, GD-proxy=20, AG(no trunc)=40.
-        assert_eq!(GuidancePolicy::Cfg { s: 7.5 }.max_nfes(20), 40);
-        assert_eq!(GuidancePolicy::CondOnly.max_nfes(20), 20);
+        assert_eq!(Cfg { s: 7.5 }.max_nfes(20), 40);
+        assert_eq!(CondOnly.max_nfes(20), 20);
+        assert_eq!(Ag { s: 7.5, gamma_bar: 0.99 }.max_nfes(20), 40);
+    }
+
+    #[test]
+    fn last_gamma_skips_single_stream_steps() {
+        let mut st = fresh();
+        assert_eq!(st.last_gamma(), None);
+        st.gammas.push(0.9);
+        st.gammas.push(f64::NAN);
+        assert_eq!(st.last_gamma(), Some(0.9));
     }
 }

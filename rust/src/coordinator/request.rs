@@ -1,12 +1,13 @@
 //! Generation requests and their per-step state machine.
 //!
-//! A request owns its latent, its policy, its trajectory history and its NFE
-//! accounting. The engine (`engine.rs`) only moves *evaluation results*
-//! between the backend and this state machine; all guidance semantics live
-//! here and in `policy.rs`.
+//! A request owns its latent, its policy handle, its per-request
+//! [`PolicyState`], its trajectory history and its NFE accounting. The
+//! engine (`engine.rs`) only moves *evaluation results* between the backend
+//! and this state machine; all guidance semantics live in the policy trait
+//! (`policy.rs`) — this file never inspects which policy it is running.
 
 use crate::backend::EvalInput;
-use crate::coordinator::policy::{GuidancePolicy, StepPlan};
+use crate::coordinator::policy::{PolicyRef, PolicyState, StepObservation, StepPlan};
 use crate::coordinator::solver::{self, StepCoefs};
 use crate::ols::ScoreTrajectory;
 use crate::tensor::Tensor;
@@ -29,7 +30,7 @@ pub struct Request {
     pub src_image: Option<Vec<f32>>,
     pub seed: u64,
     pub steps: usize,
-    pub policy: GuidancePolicy,
+    pub policy: PolicyRef,
     /// record the (eps_c, eps_u) score trajectory (OLS fitting / Fig. 15)
     pub record_trajectory: bool,
     /// record the per-step data predictions x0_t (Fig. 17's decoded iterates)
@@ -42,7 +43,7 @@ pub struct Request {
 impl Request {
     /// Convenience constructor with the common defaults.
     pub fn new(id: u64, model: &str, tokens: Vec<i32>, seed: u64, steps: usize,
-               policy: GuidancePolicy) -> Request {
+               policy: PolicyRef) -> Request {
         Request {
             id,
             model: model.to_owned(),
@@ -82,7 +83,8 @@ pub struct Completion {
     pub image: Vec<f32>,
     pub nfes: usize,
     pub cfg_steps: usize,
-    /// step at which AG's rule fired (truncation effective from the next step)
+    /// step at which the policy's truncation rule fired (truncation
+    /// effective from the next step)
     pub truncated_at: Option<usize>,
     /// convergence signal per step: Eq. 7's cosine on the x0 data
     /// predictions (NaN for steps without both streams) — the AG signal
@@ -101,11 +103,12 @@ pub struct RequestState {
     pub x: Vec<f32>,
     pub x0_prev: Vec<f32>,
     pub step: usize,
-    pub truncated: bool,
-    pub truncated_at: Option<usize>,
+    /// the policy's per-request adaptive state (truncation, the canonical
+    /// per-step gamma history, counters, scratch) — owned here,
+    /// interpreted only by the policy
+    pub policy_state: PolicyState,
     pub nfes: usize,
     pub cfg_steps: usize,
-    pub gammas: Vec<f64>,
     pub gammas_eps: Vec<f64>,
     /// results for the current step's evals, indexed by plan slot
     pending: Vec<Option<Vec<f32>>>,
@@ -129,18 +132,17 @@ impl RequestState {
             None => Rng::new(req.seed).normal_vec(flat_out),
         };
         let coefs = solver::coef_table(req.steps);
-        let plan = req.policy.plan(0, req.steps, false);
+        let policy_state = PolicyState::new();
+        let plan = req.policy.plan(0, req.steps, &policy_state);
         let slots = Self::evals_for(&plan).len();
         RequestState {
             req,
             x,
             x0_prev: vec![0.0; flat_out],
             step: 0,
-            truncated: false,
-            truncated_at: None,
+            policy_state,
             nfes: 0,
             cfg_steps: 0,
-            gammas: Vec::new(),
             gammas_eps: Vec::new(),
             pending: vec![None; slots],
             pending_left: slots,
@@ -217,8 +219,9 @@ impl RequestState {
         self.pending_left == 0
     }
 
-    /// Combine the step's evals per the plan, advance the solver, and set up
-    /// the next step. Returns `Some(Completion)` when the request finishes.
+    /// Combine the step's evals per the plan, let the policy observe the
+    /// outcome, advance the solver, and set up the next step. Returns
+    /// `Some(Completion)` when the request finishes.
     pub fn complete_step(&mut self) -> Option<Completion> {
         assert_eq!(self.pending_left, 0, "step still has pending evals");
         let results: Vec<Vec<f32>> =
@@ -226,6 +229,8 @@ impl RequestState {
         let dim = self.x.len();
         let record = self.req.record_trajectory || self.req.policy.needs_history();
         let step_coefs = self.coefs[self.step];
+        let plan_nfes = self.plan.nfes();
+        let plan_guided = self.plan.guided();
 
         // Eq. 7's cosine on the x0 data predictions (x0 = j_x x + j_eps eps):
         // an affine re-parameterization of the same network outputs whose
@@ -256,11 +261,6 @@ impl RequestState {
                     self.hist_c.push(c);
                     self.hist_u.push(u);
                 }
-                self.cfg_steps += 1;
-                if !self.truncated && self.req.policy.should_truncate(gamma) {
-                    self.truncated = true;
-                    self.truncated_at = Some(self.step);
-                }
                 (eps, gamma, gamma_eps)
             }
             StepPlan::CondOnly => {
@@ -272,13 +272,9 @@ impl RequestState {
                 (results[0].clone(), f64::NAN, f64::NAN)
             }
             StepPlan::UncondOnly => (results[0].clone(), f64::NAN, f64::NAN),
-            StepPlan::LinearGuided { s } => {
+            StepPlan::LinearGuided { s, coeffs } => {
                 let c = Tensor::new(vec![dim], results[0].clone());
                 self.hist_c.push(c.clone());
-                let coeffs = match &self.req.policy {
-                    GuidancePolicy::LinearAg { coeffs, .. } => coeffs.clone(),
-                    _ => panic!("LinearGuided plan from a non-LinearAg policy"),
-                };
                 let u_hat = coeffs.predict(self.step, &self.hist_c, &self.hist_u);
                 let gamma_eps = c.cosine(&u_hat);
                 let gamma = x0_cosine(&c, &u_hat, &self.x);
@@ -297,24 +293,37 @@ impl RequestState {
                 eps.axpy(*s_img, &img);
                 eps.axpy(-*s_img, &null);
                 let gamma_eps = full.cosine(&img);
-                // For editing, truncation uses the raw-ε cosine of the
-                // instruction pair: both streams share the source-image
+                // For editing, the convergence signal is the raw-ε cosine of
+                // the instruction pair: both streams share the source-image
                 // anchor, so their x0 predictions agree almost immediately
                 // while the instruction-guidance direction (what Eq. 9's
                 // s_text term needs) converges gradually — the paper's
                 // "terms in Eq. 9 converge over time".
                 let gamma = gamma_eps;
-                self.cfg_steps += 1;
-                if !self.truncated && self.req.policy.should_truncate(gamma) {
-                    self.truncated = true;
-                    self.truncated_at = Some(self.step);
-                }
                 (eps.data, gamma, gamma_eps)
             }
             StepPlan::EditCondOnly => (results[0].clone(), f64::NAN, f64::NAN),
         };
-        self.gammas.push(gamma);
         self.gammas_eps.push(gamma_eps);
+
+        // feed the policy's per-request state: the canonical gamma history
+        // (also reported in the Completion) plus whatever the policy's own
+        // observation rule derives (truncation, adaptive scales, …).
+        // Accounting first, then observe.
+        self.policy_state.gammas.push(gamma);
+        if plan_guided {
+            self.cfg_steps += 1;
+            self.policy_state.guided_steps += 1;
+        }
+        let obs = StepObservation {
+            step: self.step,
+            total: self.req.steps,
+            gamma,
+            gamma_eps,
+            nfes: plan_nfes,
+            guided: plan_guided,
+        };
+        self.req.policy.observe(&mut self.policy_state, &obs);
 
         // solver advance
         let c = &step_coefs;
@@ -340,19 +349,19 @@ impl RequestState {
                 image: std::mem::take(&mut self.x0_prev),
                 nfes: self.nfes,
                 cfg_steps: self.cfg_steps,
-                truncated_at: self.truncated_at,
-                gammas: std::mem::take(&mut self.gammas),
+                truncated_at: self.policy_state.truncated_at,
+                gammas: std::mem::take(&mut self.policy_state.gammas),
                 gammas_eps: std::mem::take(&mut self.gammas_eps),
                 trajectory,
                 iterates: std::mem::take(&mut self.iterates),
             });
         }
 
-        // plan the next step
+        // plan the next step against the policy's updated state
         self.plan = self
             .req
             .policy
-            .plan(self.step, self.req.steps, self.truncated);
+            .plan(self.step, self.req.steps, &self.policy_state);
         let slots = Self::evals_for(&self.plan).len();
         self.pending = vec![None; slots];
         self.pending_left = slots;
@@ -363,23 +372,23 @@ impl RequestState {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::policy::GuidancePolicy;
+    use crate::coordinator::policy::{ag, cfg, cond_only, pix2pix, PolicyRef};
 
-    fn mk_state(policy: GuidancePolicy) -> RequestState {
+    fn mk_state(policy: PolicyRef) -> RequestState {
         let req = Request::new(1, "gmm", vec![1, 0, 0, 0], 42, 4, policy);
         RequestState::new(req, 8)
     }
 
     #[test]
     fn seeded_init_is_deterministic() {
-        let a = mk_state(GuidancePolicy::Cfg { s: 2.0 });
-        let b = mk_state(GuidancePolicy::Cfg { s: 2.0 });
+        let a = mk_state(cfg(2.0));
+        let b = mk_state(cfg(2.0));
         assert_eq!(a.x, b.x);
     }
 
     #[test]
     fn cfg_step_lifecycle_and_nfe_count() {
-        let mut st = mk_state(GuidancePolicy::Cfg { s: 2.0 });
+        let mut st = mk_state(cfg(2.0));
         for step in 0..4 {
             let evals = st.current_evals();
             assert_eq!(evals, vec![EvalKind::Cond, EvalKind::Uncond]);
@@ -392,7 +401,7 @@ mod tests {
 
     #[test]
     fn completion_reports_accounting() {
-        let mut st = mk_state(GuidancePolicy::Cfg { s: 2.0 });
+        let mut st = mk_state(cfg(2.0));
         let mut out = None;
         for _ in 0..4 {
             st.deliver(0, vec![0.1; 8]);
@@ -409,14 +418,11 @@ mod tests {
     #[test]
     fn ag_truncates_on_identical_streams() {
         // identical cond/uncond → gamma = 1 → truncate after step 0.
-        let mut st = mk_state(GuidancePolicy::Ag {
-            s: 2.0,
-            gamma_bar: 0.999,
-        });
+        let mut st = mk_state(ag(2.0, 0.999));
         st.deliver(0, vec![0.5; 8]);
         st.deliver(1, vec![0.5; 8]);
         assert!(st.complete_step().is_none());
-        assert_eq!(st.truncated_at, Some(0));
+        assert_eq!(st.policy_state.truncated_at, Some(0));
         // subsequent steps are conditional-only
         assert_eq!(st.current_evals(), vec![EvalKind::Cond]);
         st.deliver(0, vec![0.4; 8]);
@@ -425,9 +431,25 @@ mod tests {
     }
 
     #[test]
+    fn policy_state_tracks_gammas_and_guided_steps() {
+        let mut st = mk_state(cfg(2.0));
+        st.deliver(0, vec![0.5; 8]);
+        st.deliver(1, vec![0.5; 8]);
+        st.complete_step();
+        assert_eq!(st.policy_state.guided_steps, 1);
+        assert_eq!(st.policy_state.gammas.len(), 1);
+        assert!((st.policy_state.gammas[0] - 1.0).abs() < 1e-12);
+
+        let mut st = mk_state(cond_only());
+        st.deliver(0, vec![0.5; 8]);
+        st.complete_step();
+        assert_eq!(st.policy_state.guided_steps, 0);
+        assert!(st.policy_state.gammas[0].is_nan());
+    }
+
+    #[test]
     fn negative_prompt_replaces_uncond_tokens() {
-        let mut req = Request::new(1, "m", vec![1, 2, 0, 0], 0, 2,
-                                   GuidancePolicy::Cfg { s: 2.0 });
+        let mut req = Request::new(1, "m", vec![1, 2, 0, 0], 0, 2, cfg(2.0));
         req.neg_tokens = Some(vec![0, 3, 0, 0]);
         let st = RequestState::new(req, 8);
         let inp = st.eval_input(EvalKind::Uncond);
@@ -439,12 +461,7 @@ mod tests {
     #[test]
     fn edit_inputs_concatenate_source() {
         let mut req = Request::new(1, "dit_edit", vec![0, 2, 0, 0], 0, 2,
-                                   GuidancePolicy::Pix2Pix {
-                                       s_text: 7.5,
-                                       s_img: 1.5,
-                                       gamma_bar: None,
-                                       full_prefix: None,
-                                   });
+                                   pix2pix(7.5, 1.5, None, None));
         req.src_image = Some(vec![0.7; 8]);
         let st = RequestState::new(req, 8);
         let full = st.eval_input(EvalKind::EditFull);
@@ -459,8 +476,7 @@ mod tests {
 
     #[test]
     fn trajectory_recorded_when_requested() {
-        let mut req = Request::new(1, "m", vec![1, 0, 0, 0], 7, 3,
-                                   GuidancePolicy::Cfg { s: 2.0 });
+        let mut req = Request::new(1, "m", vec![1, 0, 0, 0], 7, 3, cfg(2.0));
         req.record_trajectory = true;
         let mut st = RequestState::new(req, 8);
         let mut out = None;
@@ -478,14 +494,14 @@ mod tests {
     #[test]
     #[should_panic(expected = "duplicate delivery")]
     fn duplicate_delivery_panics() {
-        let mut st = mk_state(GuidancePolicy::Cfg { s: 2.0 });
+        let mut st = mk_state(cfg(2.0));
         st.deliver(0, vec![0.0; 8]);
         st.deliver(0, vec![0.0; 8]);
     }
 
     #[test]
     fn times_decrease_over_steps() {
-        let mut st = mk_state(GuidancePolicy::CondOnly);
+        let mut st = mk_state(cond_only());
         let t0 = st.current_t();
         st.deliver(0, vec![0.0; 8]);
         st.complete_step();

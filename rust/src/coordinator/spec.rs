@@ -1,0 +1,627 @@
+//! `PolicySpec` — the serde-free wire/config form of a guidance policy —
+//! and the registry that constructs policies from it.
+//!
+//! A spec is a policy *kind* (wire name) plus a flat parameter map of
+//! [`json::Value`]s:
+//!
+//! ```text
+//! "ag"                                          (bare name, defaults)
+//! {"kind": "ag", "s": 7.5, "gamma_bar": 0.9988}
+//! {"kind": "searched", "choices": ["cond", 2.5, "uncond", {"cfg": 3.0}]}
+//! ```
+//!
+//! The same format is accepted by the server line protocol (`"policy"`
+//! field), the `agd` CLI (`--policy`, plus per-parameter flags), and config
+//! files; [`Policy::spec`] emits it back, so any constructed policy
+//! round-trips through JSON.
+//!
+//! [`PolicyRegistry`] maps kind → builder. [`PolicyRegistry::builtin`]
+//! registers the eight paper policies plus the [`crate::coordinator::ext`]
+//! plugins; callers can [`PolicyRegistry::register`] additional policies
+//! without touching anything else — the registry is the single point where
+//! a new policy becomes reachable from every front-end.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::Arc;
+
+use crate::coordinator::policy::{
+    Ag, AgFixedPrefix, AlternatingCfg, Cfg, CondOnly, LinearAg, Pix2Pix, Policy, PolicyRef,
+    Searched, StepChoice,
+};
+use crate::ols::OlsCoeffs;
+use crate::util::cli::Args;
+use crate::util::json::{self, Value};
+
+/// Wire/config form of a policy: kind + parameters (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicySpec {
+    pub kind: String,
+    pub params: BTreeMap<String, Value>,
+}
+
+impl PolicySpec {
+    pub fn new(kind: &str) -> PolicySpec {
+        PolicySpec {
+            kind: kind.to_owned(),
+            params: BTreeMap::new(),
+        }
+    }
+
+    /// Builder-style parameter setter (`"kind"` is reserved for the kind).
+    pub fn with(mut self, key: &str, value: Value) -> PolicySpec {
+        self.params.insert(key.to_owned(), value);
+        self
+    }
+
+    /// Insert a parameter only if absent — how front-ends inject their
+    /// configured defaults without overriding explicit client values.
+    pub fn set_default(&mut self, key: &str, value: Value) {
+        self.params.entry(key.to_owned()).or_insert(value);
+    }
+
+    /// The kind with aliases resolved (e.g. `distilled` → `cond`).
+    pub fn canonical_kind(&self) -> &str {
+        canonical(&self.kind)
+    }
+
+    /// Parse from a JSON value: a bare string kind, or an object with a
+    /// `"kind"` field whose remaining fields become parameters.
+    pub fn from_json(v: &Value) -> Result<PolicySpec, SpecError> {
+        match v {
+            Value::Str(name) => Ok(PolicySpec::new(name)),
+            Value::Obj(m) => {
+                let kind = m
+                    .get("kind")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| SpecError::BadSpec {
+                        msg: "policy object needs a string `kind` field".into(),
+                    })?
+                    .to_owned();
+                let params = m
+                    .iter()
+                    .filter(|(k, _)| k.as_str() != "kind")
+                    .map(|(k, v)| (k.clone(), v.clone()))
+                    .collect();
+                Ok(PolicySpec { kind, params })
+            }
+            _ => Err(SpecError::BadSpec {
+                msg: "policy must be a string name or an object".into(),
+            }),
+        }
+    }
+
+    /// Serialize to the JSON object form (inverse of [`Self::from_json`]).
+    pub fn to_json(&self) -> Value {
+        let mut m: BTreeMap<String, Value> = self.params.clone();
+        m.insert("kind".to_owned(), Value::Str(self.kind.clone()));
+        Value::Obj(m)
+    }
+
+    /// Parse from text: a bare kind name, or inline JSON (`{...}`).
+    pub fn parse(text: &str) -> Result<PolicySpec, SpecError> {
+        let text = text.trim();
+        if text.starts_with('{') {
+            let v = json::parse(text).map_err(|e| SpecError::BadSpec {
+                msg: format!("inline policy json: {e}"),
+            })?;
+            PolicySpec::from_json(&v)
+        } else if text.is_empty() {
+            Err(SpecError::BadSpec {
+                msg: "empty policy name".into(),
+            })
+        } else {
+            Ok(PolicySpec::new(text))
+        }
+    }
+
+    /// Build a spec from CLI arguments: `--policy NAME|JSON` plus the
+    /// per-parameter flags (`--guidance`, `--gamma-bar`, `--cfg-steps`,
+    /// `--period`, `--coeffs FILE`, `--choices LIST`, …), which override
+    /// any value carried in the `--policy` JSON.
+    pub fn from_cli(args: &Args) -> Result<PolicySpec, SpecError> {
+        let mut spec = PolicySpec::parse(args.get_or("policy", "ag"))?;
+        const NUM_FLAGS: &[(&str, &str)] = &[
+            ("s", "guidance"),
+            ("gamma_bar", "gamma-bar"),
+            ("cfg_steps", "cfg-steps"),
+            ("period", "period"),
+            ("full_prefix", "full-prefix"),
+            ("s_text", "s-text"),
+            ("s_img", "s-img"),
+            ("s_max", "s-max"),
+            ("s_min", "s-min"),
+            ("gamma_lo", "gamma-lo"),
+            ("gamma_hi", "gamma-hi"),
+        ];
+        for &(key, flag) in NUM_FLAGS {
+            if let Some(raw) = args.get(flag) {
+                let v: f64 = raw.parse().map_err(|_| SpecError::BadField {
+                    kind: spec.kind.clone(),
+                    field: key,
+                    msg: format!("--{flag}: expected a number, got `{raw}`"),
+                })?;
+                spec.params.insert(key.to_owned(), Value::Num(v));
+            }
+        }
+        if let Some(path) = args.get("coeffs") {
+            let text = std::fs::read_to_string(path).map_err(|e| SpecError::BadField {
+                kind: spec.kind.clone(),
+                field: "coeffs",
+                msg: format!("--coeffs {path}: {e}"),
+            })?;
+            let v = json::parse(&text).map_err(|e| SpecError::BadField {
+                kind: spec.kind.clone(),
+                field: "coeffs",
+                msg: format!("--coeffs {path}: {e}"),
+            })?;
+            spec.params.insert("coeffs".to_owned(), v);
+        }
+        if let Some(list) = args.get("choices") {
+            let arr: Vec<Value> = list
+                .split(',')
+                .map(|tok| {
+                    let tok = tok.trim();
+                    match tok.parse::<f64>() {
+                        Ok(n) => Value::Num(n),
+                        Err(_) => json::s(tok),
+                    }
+                })
+                .collect();
+            spec.params.insert("choices".to_owned(), Value::Arr(arr));
+        }
+        Ok(spec)
+    }
+
+    // -- typed parameter accessors (absent or null → default) ---------------
+
+    /// Error constructor for builders — public so external plugins can
+    /// report parameter problems uniformly.
+    pub fn bad(&self, field: &'static str, msg: impl Into<String>) -> SpecError {
+        SpecError::BadField {
+            kind: self.kind.clone(),
+            field,
+            msg: msg.into(),
+        }
+    }
+
+    pub fn missing(&self, field: &'static str) -> SpecError {
+        SpecError::MissingField {
+            kind: self.kind.clone(),
+            field,
+        }
+    }
+
+    pub fn get(&self, field: &str) -> Option<&Value> {
+        match self.params.get(field) {
+            Some(Value::Null) | None => None,
+            Some(v) => Some(v),
+        }
+    }
+
+    pub fn f64_or(&self, field: &'static str, default: f64) -> Result<f64, SpecError> {
+        match self.get(field) {
+            None => Ok(default),
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| self.bad(field, "expected a number")),
+        }
+    }
+
+    pub fn f32_or(&self, field: &'static str, default: f32) -> Result<f32, SpecError> {
+        self.f64_or(field, default as f64).map(|v| v as f32)
+    }
+
+    pub fn usize_or(&self, field: &'static str, default: usize) -> Result<usize, SpecError> {
+        match self.get(field) {
+            None => Ok(default),
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| self.bad(field, "expected a non-negative integer")),
+        }
+    }
+
+    pub fn opt_f64(&self, field: &'static str) -> Result<Option<f64>, SpecError> {
+        match self.get(field) {
+            None => Ok(None),
+            Some(v) => v
+                .as_f64()
+                .map(Some)
+                .ok_or_else(|| self.bad(field, "expected a number")),
+        }
+    }
+
+    pub fn opt_usize(&self, field: &'static str) -> Result<Option<usize>, SpecError> {
+        match self.get(field) {
+            None => Ok(None),
+            Some(v) => v
+                .as_usize()
+                .map(Some)
+                .ok_or_else(|| self.bad(field, "expected a non-negative integer")),
+        }
+    }
+}
+
+/// Errors from spec parsing and policy construction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SpecError {
+    /// No builder registered under the requested kind; carries the
+    /// registered names so front-ends can report them to the client.
+    UnknownPolicy { kind: String, known: Vec<String> },
+    BadSpec { msg: String },
+    MissingField { kind: String, field: &'static str },
+    BadField {
+        kind: String,
+        field: &'static str,
+        msg: String,
+    },
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::UnknownPolicy { kind, known } => {
+                write!(f, "unknown policy `{kind}` (registered: {})", known.join(", "))
+            }
+            SpecError::BadSpec { msg } => write!(f, "bad policy spec: {msg}"),
+            SpecError::MissingField { kind, field } => {
+                write!(f, "policy `{kind}`: missing required `{field}`")
+            }
+            SpecError::BadField { kind, field, msg } => {
+                write!(f, "policy `{kind}`: bad `{field}`: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// Resolve kind aliases to the canonical registered name.
+fn canonical(kind: &str) -> &str {
+    match kind {
+        "cond-only" | "distilled" => "cond",
+        other => other,
+    }
+}
+
+type Builder = Box<dyn Fn(&PolicySpec) -> Result<PolicyRef, SpecError> + Send + Sync>;
+
+/// Constructs policies by wire name. See module docs.
+pub struct PolicyRegistry {
+    builders: BTreeMap<String, Builder>,
+}
+
+impl fmt::Debug for PolicyRegistry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("PolicyRegistry")
+            .field("names", &self.names())
+            .finish()
+    }
+}
+
+impl PolicyRegistry {
+    /// An empty registry (for fully custom policy sets).
+    pub fn new() -> PolicyRegistry {
+        PolicyRegistry {
+            builders: BTreeMap::new(),
+        }
+    }
+
+    /// The built-in set: the eight paper policies plus the
+    /// [`crate::coordinator::ext`] plugins.
+    pub fn builtin() -> PolicyRegistry {
+        let mut reg = PolicyRegistry::new();
+        reg.register("cfg", |spec| {
+            Ok(Cfg {
+                s: spec.f32_or("s", 7.5)?,
+            }
+            .into_ref())
+        });
+        reg.register("cond", |_spec| Ok(CondOnly.into_ref()));
+        reg.register("ag", |spec| {
+            Ok(Ag {
+                s: spec.f32_or("s", 7.5)?,
+                gamma_bar: spec.f64_or("gamma_bar", 0.9988)?,
+            }
+            .into_ref())
+        });
+        reg.register("ag-prefix", |spec| {
+            Ok(AgFixedPrefix {
+                s: spec.f32_or("s", 7.5)?,
+                cfg_steps: spec.usize_or("cfg_steps", 5)?,
+            }
+            .into_ref())
+        });
+        reg.register("alternating", |spec| {
+            Ok(AlternatingCfg {
+                s: spec.f32_or("s", 7.5)?,
+            }
+            .into_ref())
+        });
+        reg.register("linear-ag", |spec| {
+            let v = spec.get("coeffs").ok_or_else(|| spec.missing("coeffs"))?;
+            let coeffs = OlsCoeffs::from_json(v)
+                .ok_or_else(|| spec.bad("coeffs", "expected {beta_c, beta_u} arrays"))?;
+            Ok(LinearAg {
+                s: spec.f32_or("s", 7.5)?,
+                coeffs: Arc::new(coeffs),
+            }
+            .into_ref())
+        });
+        reg.register("searched", |spec| {
+            let default_s = spec.f32_or("s", 7.5)?;
+            let arr = spec
+                .get("choices")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| spec.missing("choices"))?;
+            let choices = arr
+                .iter()
+                .map(|v| choice_from_json(spec, v, default_s))
+                .collect::<Result<Vec<StepChoice>, SpecError>>()?;
+            Ok(Searched { choices }.into_ref())
+        });
+        reg.register("pix2pix", |spec| {
+            Ok(Pix2Pix {
+                s_text: spec.f32_or("s_text", 7.5)?,
+                s_img: spec.f32_or("s_img", 1.5)?,
+                gamma_bar: spec.opt_f64("gamma_bar")?,
+                full_prefix: spec.opt_usize("full_prefix")?,
+            }
+            .into_ref())
+        });
+        crate::coordinator::ext::register(&mut reg);
+        reg
+    }
+
+    /// Register (or replace) a builder under a wire name.
+    pub fn register<F>(&mut self, name: &str, builder: F)
+    where
+        F: Fn(&PolicySpec) -> Result<PolicyRef, SpecError> + Send + Sync + 'static,
+    {
+        self.builders.insert(name.to_owned(), Box::new(builder));
+    }
+
+    /// Registered wire names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.builders.keys().cloned().collect()
+    }
+
+    /// Construct the policy a spec describes.
+    pub fn build(&self, spec: &PolicySpec) -> Result<PolicyRef, SpecError> {
+        match self.builders.get(canonical(&spec.kind)) {
+            Some(b) => b(spec),
+            None => Err(SpecError::UnknownPolicy {
+                kind: spec.kind.clone(),
+                known: self.names(),
+            }),
+        }
+    }
+}
+
+impl Default for PolicyRegistry {
+    fn default() -> PolicyRegistry {
+        PolicyRegistry::builtin()
+    }
+}
+
+/// One searched-policy step choice from its wire form:
+/// `"uncond" | "cond" | "cfg" | <number> | {"cfg": s}`.
+fn choice_from_json(
+    spec: &PolicySpec,
+    v: &Value,
+    default_s: f32,
+) -> Result<StepChoice, SpecError> {
+    match v {
+        Value::Str(t) if t == "uncond" => Ok(StepChoice::Uncond),
+        Value::Str(t) if t == "cond" => Ok(StepChoice::Cond),
+        Value::Str(t) if t == "cfg" => Ok(StepChoice::Cfg { s: default_s }),
+        Value::Num(n) => Ok(StepChoice::Cfg { s: *n as f32 }),
+        Value::Obj(_) => v
+            .get("cfg")
+            .and_then(Value::as_f64)
+            .map(|s| StepChoice::Cfg { s: s as f32 })
+            .ok_or_else(|| spec.bad("choices", "object entries must be {\"cfg\": s}")),
+        _ => Err(spec.bad(
+            "choices",
+            "entries must be \"uncond\" | \"cond\" | \"cfg\" | number | {\"cfg\": s}",
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::PolicyState;
+
+    /// One fully-parameterized spec per registered policy.
+    fn example_specs() -> Vec<PolicySpec> {
+        vec![
+            PolicySpec::new("cfg").with("s", json::num(2.0)),
+            PolicySpec::new("cond"),
+            PolicySpec::new("ag")
+                .with("s", json::num(2.0))
+                .with("gamma_bar", json::num(0.99)),
+            PolicySpec::new("ag-prefix")
+                .with("s", json::num(2.0))
+                .with("cfg_steps", json::num(3.0)),
+            PolicySpec::new("alternating").with("s", json::num(2.0)),
+            PolicySpec::new("linear-ag")
+                .with("s", json::num(2.0))
+                .with("coeffs", OlsCoeffs::identity(8).to_json()),
+            PolicySpec::new("searched").with(
+                "choices",
+                json::arr(vec![
+                    json::s("cond"),
+                    json::num(2.5),
+                    json::s("uncond"),
+                    json::obj(vec![("cfg", json::num(3.0))]),
+                ]),
+            ),
+            PolicySpec::new("pix2pix")
+                .with("s_text", json::num(2.0))
+                .with("s_img", json::num(1.0))
+                .with("gamma_bar", json::num(0.99))
+                .with("full_prefix", json::num(3.0)),
+            PolicySpec::new("compressed-cfg")
+                .with("s", json::num(2.0))
+                .with("period", json::num(3.0)),
+            PolicySpec::new("adaptive-scale")
+                .with("s_max", json::num(3.0))
+                .with("s_min", json::num(1.0))
+                .with("gamma_lo", json::num(0.5))
+                .with("gamma_hi", json::num(0.99)),
+        ]
+    }
+
+    #[test]
+    fn every_registered_policy_round_trips_through_json() {
+        let reg = PolicyRegistry::builtin();
+        let specs = example_specs();
+        // the example list covers the whole registry
+        let mut covered: Vec<String> =
+            specs.iter().map(|s| s.canonical_kind().to_owned()).collect();
+        covered.sort();
+        assert_eq!(covered, reg.names(), "add a round-trip example for new policies");
+
+        for spec in specs {
+            let p1 = reg.build(&spec).unwrap_or_else(|e| panic!("{e}"));
+            // serialize the fully-explicit spec and re-parse it
+            let text = json::to_string(&p1.spec().to_json());
+            let spec2 = PolicySpec::from_json(&json::parse(&text).unwrap()).unwrap();
+            assert_eq!(spec2, p1.spec(), "{text}");
+            let p2 = reg.build(&spec2).unwrap();
+            assert_eq!(p1.name(), p2.name());
+            // identical plan sequences under a fresh state
+            let st = PolicyState::new();
+            for i in 0..8 {
+                assert_eq!(p1.plan(i, 8, &st), p2.plan(i, 8, &st), "step {i} of {text}");
+            }
+            assert_eq!(p1.max_nfes(8), p2.max_nfes(8));
+        }
+    }
+
+    #[test]
+    fn unknown_policy_error_lists_registered_names() {
+        let reg = PolicyRegistry::builtin();
+        let err = reg.build(&PolicySpec::new("warp")).unwrap_err();
+        match &err {
+            SpecError::UnknownPolicy { kind, known } => {
+                assert_eq!(kind, "warp");
+                assert!(known.contains(&"ag".to_owned()));
+                assert!(known.contains(&"compressed-cfg".to_owned()));
+                assert!(known.contains(&"adaptive-scale".to_owned()));
+            }
+            other => panic!("expected UnknownPolicy, got {other:?}"),
+        }
+        assert!(err.to_string().contains("registered:"));
+    }
+
+    #[test]
+    fn kind_aliases_resolve() {
+        let reg = PolicyRegistry::builtin();
+        for name in ["cond", "cond-only", "distilled"] {
+            let p = reg.build(&PolicySpec::new(name)).unwrap();
+            assert_eq!(p.name(), "cond-only");
+        }
+    }
+
+    #[test]
+    fn bare_names_and_inline_json_parse() {
+        let spec = PolicySpec::parse("ag").unwrap();
+        assert_eq!(spec.kind, "ag");
+        assert!(spec.params.is_empty());
+        let spec = PolicySpec::parse(r#"{"kind": "cfg", "s": 3.5}"#).unwrap();
+        assert_eq!(spec.kind, "cfg");
+        assert_eq!(spec.f64_or("s", 0.0).unwrap(), 3.5);
+        assert!(PolicySpec::parse("").is_err());
+        assert!(PolicySpec::parse("{not json").is_err());
+    }
+
+    #[test]
+    fn defaults_do_not_override_explicit_params() {
+        let mut spec = PolicySpec::new("ag").with("gamma_bar", json::num(0.5));
+        spec.set_default("gamma_bar", json::num(0.9988));
+        spec.set_default("s", json::num(7.5));
+        assert_eq!(spec.f64_or("gamma_bar", 0.0).unwrap(), 0.5);
+        assert_eq!(spec.f64_or("s", 0.0).unwrap(), 7.5);
+    }
+
+    #[test]
+    fn bad_and_missing_fields_are_reported() {
+        let reg = PolicyRegistry::builtin();
+        // wrong type
+        let err = reg
+            .build(&PolicySpec::new("cfg").with("s", json::s("seven")))
+            .unwrap_err();
+        assert!(matches!(err, SpecError::BadField { field: "s", .. }), "{err}");
+        // linear-ag without coefficients
+        let err = reg.build(&PolicySpec::new("linear-ag")).unwrap_err();
+        assert!(
+            matches!(err, SpecError::MissingField { field: "coeffs", .. }),
+            "{err}"
+        );
+        // searched without choices
+        let err = reg.build(&PolicySpec::new("searched")).unwrap_err();
+        assert!(
+            matches!(err, SpecError::MissingField { field: "choices", .. }),
+            "{err}"
+        );
+        // null counts as absent
+        let p = reg
+            .build(&PolicySpec::new("pix2pix").with("gamma_bar", Value::Null))
+            .unwrap();
+        assert_eq!(p.name(), "pix2pix");
+    }
+
+    #[test]
+    fn from_cli_builds_any_policy() {
+        let args = |s: &str| Args::parse(s.split_whitespace().map(str::to_owned));
+        let reg = PolicyRegistry::builtin();
+
+        let spec = PolicySpec::from_cli(&args("--policy ag --guidance 2 --gamma-bar 0.9")).unwrap();
+        let p = reg.build(&spec).unwrap();
+        assert_eq!(p.name(), "ag(ḡ=0.9)");
+
+        let spec =
+            PolicySpec::from_cli(&args("--policy compressed-cfg --period 5 --guidance 2")).unwrap();
+        assert_eq!(reg.build(&spec).unwrap().max_nfes(10), 12);
+
+        let spec = PolicySpec::from_cli(&args("--policy searched --choices cfg,cond,2.5")).unwrap();
+        let p = reg.build(&spec).unwrap();
+        assert_eq!(p.max_nfes(3), 5);
+
+        // inline JSON with a flag override
+        let spec = PolicySpec::from_cli(&args(
+            "--policy {\"kind\":\"ag-prefix\",\"cfg_steps\":2} --guidance 3",
+        ))
+        .unwrap();
+        let p = reg.build(&spec).unwrap();
+        assert_eq!(p.max_nfes(10), 12);
+
+        assert!(PolicySpec::from_cli(&args("--policy ag --guidance abc")).is_err());
+    }
+
+    #[test]
+    fn every_registered_name_is_reachable_from_the_cli() {
+        let args = |s: &str| Args::parse(s.split_whitespace().map(str::to_owned));
+        let reg = PolicyRegistry::builtin();
+        for name in reg.names() {
+            // policies with required structured params get them via flags
+            let extra = match name.as_str() {
+                "searched" => " --choices cfg,cond",
+                _ => "",
+            };
+            let line = format!("--policy {name}{extra}");
+            let mut spec = PolicySpec::from_cli(&args(&line)).unwrap();
+            if name == "linear-ag" {
+                // --coeffs takes a file path; inject the value directly here
+                spec.params
+                    .insert("coeffs".into(), OlsCoeffs::identity(4).to_json());
+            }
+            let p = reg
+                .build(&spec)
+                .unwrap_or_else(|e| panic!("--policy {name}: {e}"));
+            assert!(p.max_nfes(4) >= 4, "{name}");
+        }
+    }
+}

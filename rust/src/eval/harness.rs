@@ -8,7 +8,7 @@ use anyhow::Result;
 
 use crate::backend::Backend;
 use crate::coordinator::engine::Engine;
-use crate::coordinator::policy::GuidancePolicy;
+use crate::coordinator::policy::PolicyRef;
 use crate::coordinator::request::{Completion, Request};
 use crate::prompts::Prompt;
 use crate::quality::ssim::ssim_rgb;
@@ -72,7 +72,7 @@ pub fn run_policy<B: Backend>(
     engine: &mut Engine<B>,
     prompts: &[Prompt],
     spec: &RunSpec,
-    policy: GuidancePolicy,
+    policy: PolicyRef,
 ) -> Result<PolicyRun> {
     let batches_before = engine.stats.batches;
     let items_before = engine.stats.items;
@@ -156,13 +156,13 @@ mod tests {
 
     #[test]
     fn run_policy_uses_shared_seeds() {
+        use crate::coordinator::policy::{ag, cfg};
         let ps = crate::prompts::eval_set(4, 0);
         let spec = RunSpec::new("gmm", 8);
-        let mut e1 = Engine::new(GmmBackend::new(Gmm::axes(8, 6, 3.0, 0.05)));
-        let a = run_policy(&mut e1, &ps, &spec, GuidancePolicy::Cfg { s: 2.0 }).unwrap();
-        let mut e2 = Engine::new(GmmBackend::new(Gmm::axes(8, 6, 3.0, 0.05)));
-        let b = run_policy(&mut e2, &ps, &spec,
-                           GuidancePolicy::Ag { s: 2.0, gamma_bar: 2.0 }).unwrap();
+        let mut e1 = Engine::new(GmmBackend::new(Gmm::axes(8, 6, 3.0, 0.05))).unwrap();
+        let a = run_policy(&mut e1, &ps, &spec, cfg(2.0)).unwrap();
+        let mut e2 = Engine::new(GmmBackend::new(Gmm::axes(8, 6, 3.0, 0.05))).unwrap();
+        let b = run_policy(&mut e2, &ps, &spec, ag(2.0, 2.0)).unwrap();
         // unreachable threshold → identical trajectories per prompt
         for (x, y) in a.completions.iter().zip(&b.completions) {
             assert_eq!(x.image, y.image);

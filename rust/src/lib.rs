@@ -5,15 +5,37 @@
 //! three-layer Rust + JAX + Pallas serving stack:
 //!
 //! * **L3 (this crate)** — the serving coordinator: continuation batching of
-//!   NFE work items, the guidance policy engine (CFG / AG / LINEARAG /
-//!   searched / pix2pix), OLS fitting, the NAS search driver, metrics,
-//!   quality + statistics substrates, and the CLI/server.
+//!   NFE work items, the open guidance-policy API, OLS fitting, the NAS
+//!   search driver, metrics, quality + statistics substrates, and the
+//!   CLI/server.
 //! * **L2/L1 (`python/compile/`)** — the DiT denoiser and Pallas kernels,
 //!   AOT-lowered once to HLO text and executed here via the PJRT C API
 //!   (`runtime`). Python never runs on the request path.
 //!
-//! Start with [`coordinator::engine::Engine`] and
-//! [`coordinator::policy::GuidancePolicy`]; see `examples/quickstart.rs`.
+//! ## The policy API
+//!
+//! Guidance policies implement the [`Policy`] trait
+//! ([`coordinator::policy`]): `plan(step, total, &state)` chooses the
+//! network evaluations for a step, `observe(&mut state, obs)` reacts to the
+//! gamma convergence signal, and all per-request adaptive state lives in a
+//! [`PolicyState`] owned by the request — so policies can carry gamma
+//! histories, counters, or adaptive scales without engine support.
+//!
+//! Policies are constructed by name through [`PolicyRegistry`] from the
+//! [`PolicySpec`] wire format ([`coordinator::spec`]), which the server
+//! line protocol, the `agd` CLI, and the benches all share:
+//!
+//! ```text
+//! {"prompt": "red circle", "policy": "compressed-cfg", "period": 4}
+//! agd generate --policy adaptive-scale --s-max 7.5 --s-min 1.5
+//! ```
+//!
+//! [`coordinator::ext`] shows the extension path: two follow-up-literature
+//! policies implemented purely as plugins.
+//!
+//! Start with [`coordinator::engine::Engine`] and the constructor helpers
+//! in [`coordinator::policy`] (`cfg`, `ag`, …); see
+//! `examples/quickstart.rs`.
 
 pub mod backend;
 pub mod coordinator;
@@ -35,5 +57,6 @@ pub mod util;
 
 pub use backend::{Backend, EvalInput, GmmBackend};
 pub use coordinator::engine::Engine;
-pub use coordinator::policy::GuidancePolicy;
+pub use coordinator::policy::{Policy, PolicyRef, PolicyState, StepObservation, StepPlan};
 pub use coordinator::request::{Completion, Request};
+pub use coordinator::spec::{PolicyRegistry, PolicySpec, SpecError};

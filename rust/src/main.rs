@@ -14,8 +14,9 @@ use std::path::PathBuf;
 use anyhow::{anyhow, Result};
 
 use adaptive_guidance::coordinator::engine::Engine;
-use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::policy::{cfg as cfg_policy, PolicyRef};
 use adaptive_guidance::coordinator::request::Request;
+use adaptive_guidance::coordinator::spec::{PolicyRegistry, PolicySpec};
 use adaptive_guidance::ols;
 use adaptive_guidance::prompts::{self, Prompt};
 use adaptive_guidance::runtime::PjrtBackend;
@@ -47,14 +48,20 @@ fn main() {
 }
 
 fn print_help() {
+    let names = PolicyRegistry::builtin().names().join("|");
     eprintln!(
         "agd — Adaptive Guidance diffusion serving\n\n\
          USAGE: agd <info|generate|serve|search|fit-ols> [options]\n\n\
          common options:\n\
            --artifacts DIR     artifacts directory (default: artifacts)\n\
            --model NAME        dit_s | dit_b (default: dit_b)\n\n\
-         generate: --prompt TEXT --negative TEXT --policy cfg|ag|cond\n\
-           --gamma-bar F --guidance F --steps N --seed N --n N --out DIR\n\
+         policies (--policy NAME or inline JSON {{\"kind\": ..}}):\n\
+           {names}\n\
+           parameters: --guidance F --gamma-bar F --cfg-steps N --period N\n\
+           --coeffs FILE --choices LIST --s-text F --s-img F --full-prefix N\n\
+           --s-max F --s-min F --gamma-lo F --gamma-hi F\n\n\
+         generate: --prompt TEXT --negative TEXT --policy P\n\
+           --steps N --seed N --n N --out DIR\n\
          serve:    --addr HOST:PORT\n\
          search:   --iters N --lr F --seed N --out FILE\n\
          fit-ols:  --train N --test N --steps N --out FILE"
@@ -69,15 +76,11 @@ fn backend(args: &Args) -> Result<PjrtBackend> {
     PjrtBackend::load(&artifacts_dir(args))
 }
 
-fn policy_from_args(args: &Args) -> Result<GuidancePolicy> {
-    let s = args.f64("guidance", 7.5) as f32;
-    let gamma_bar = args.f64("gamma-bar", 0.9988);
-    Ok(match args.get_or("policy", "ag") {
-        "cfg" => GuidancePolicy::Cfg { s },
-        "cond" | "distilled" => GuidancePolicy::CondOnly,
-        "ag" => GuidancePolicy::Ag { s, gamma_bar },
-        other => return Err(anyhow!("unknown policy `{other}`")),
-    })
+/// Build the requested policy through the PolicySpec wire format — every
+/// registered policy (built-ins and plugins) is reachable from the CLI.
+fn policy_from_args(args: &Args) -> Result<PolicyRef> {
+    let spec = PolicySpec::from_cli(args)?;
+    Ok(PolicyRegistry::builtin().build(&spec)?)
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -116,10 +119,13 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let n = args.usize("n", 4);
     let seed = args.u64("seed", 0);
     let policy = policy_from_args(args)?;
+    policy
+        .validate(steps)
+        .map_err(|e| anyhow!("policy `{}`: {e}", policy.name()))?;
     let out_dir = PathBuf::from(args.get_or("out", "out"));
     std::fs::create_dir_all(&out_dir)?;
 
-    let mut engine = Engine::new(be);
+    let mut engine = Engine::new(be)?;
     let prompt_list: Vec<Prompt> = match args.get("prompt") {
         Some(text) => vec![Prompt::parse(text).ok_or_else(|| anyhow!("bad prompt"))?],
         None => prompts::eval_set(n, seed),
@@ -196,7 +202,7 @@ fn cmd_search(args: &Args) -> Result<()> {
         batch: meta.batch,
         latent_len,
         iters: args.usize("iters", 60),
-        lr: args.f64("lr", 0.02) as f32,
+        lr: args.f32("lr", 0.02),
         seed: args.u64("seed", 0),
     };
     eprintln!(
@@ -241,11 +247,11 @@ fn cmd_fit_ols(args: &Args) -> Result<()> {
     let steps = args.usize("steps", 20);
     let n_train = args.usize("train", 200);
     let n_test = args.usize("test", 100);
-    let s = args.f64("guidance", 7.5) as f32;
+    let s = args.f32("guidance", 7.5);
     let seed = args.u64("seed", 0);
     let out = args.get_or("out", "artifacts/ols_coeffs.json").to_owned();
 
-    let mut engine = Engine::new(be);
+    let mut engine = Engine::new(be)?;
     let trajs = collect_trajectories(&mut engine, &model, n_train + n_test, steps, s, seed)?;
     let (train, test) = trajs.split_at(n_train);
     eprintln!("fitting OLS on {} trajectories ({} held out)", train.len(), test.len());
@@ -277,7 +283,7 @@ pub fn collect_trajectories(
         .enumerate()
         .map(|(i, p)| {
             let mut r = Request::new(i as u64, model, p.tokens(), seed + i as u64,
-                                     steps, GuidancePolicy::Cfg { s });
+                                     steps, cfg_policy(s));
             r.record_trajectory = true;
             r
         })

@@ -41,6 +41,23 @@ impl OlsCoeffs {
         self.beta_c.len()
     }
 
+    /// The trivial estimator ε̂(x_t, ∅) = ε(x_t, c): a `beta_c` of all zeros
+    /// except 1.0 on the current conditional score. Useful as a baseline
+    /// (LINEARAG degenerates to conditional-only guidance under it) and as
+    /// a fit-free stand-in for tests and wire-format examples.
+    pub fn identity(steps: usize) -> OlsCoeffs {
+        OlsCoeffs {
+            beta_c: (0..steps)
+                .map(|t| {
+                    let mut b = vec![0.0; t + 1];
+                    b[t] = 1.0;
+                    b
+                })
+                .collect(),
+            beta_u: (0..steps).map(|t| vec![0.0; t]).collect(),
+        }
+    }
+
     /// Predict ε̂(x_t, ∅) for step `t` given the history so far. `eps_u_hist`
     /// may contain earlier *estimates* when running autoregressively (the
     /// LINEARAG policy substitutes its own predictions).
@@ -228,6 +245,23 @@ mod tests {
         let trajs: Vec<_> = (0..5).map(|_| random_traj(&mut rng, 7, 8)).collect();
         let coeffs = fit(&trajs, 1e-6);
         for t in 0..7 {
+            assert_eq!(coeffs.beta_c[t].len(), t + 1);
+            assert_eq!(coeffs.beta_u[t].len(), t);
+        }
+    }
+
+    #[test]
+    fn identity_coefficients_predict_the_conditional_score() {
+        let coeffs = OlsCoeffs::identity(4);
+        assert_eq!(coeffs.steps(), 4);
+        let mut rng = Rng::new(6);
+        let tr = random_traj(&mut rng, 4, 8);
+        for t in 0..4 {
+            let pred = coeffs.predict(t, &tr.eps_c, &tr.eps_u);
+            assert_eq!(pred.data, tr.eps_c[t].data, "step {t}");
+        }
+        // shape contract matches Eq. 8
+        for t in 0..4 {
             assert_eq!(coeffs.beta_c[t].len(), t + 1);
             assert_eq!(coeffs.beta_u[t].len(), t);
         }

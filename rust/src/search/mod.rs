@@ -8,7 +8,7 @@
 
 pub mod lion;
 
-use crate::coordinator::policy::{GuidancePolicy, StepChoice};
+use crate::coordinator::policy::{Searched, StepChoice};
 use crate::util::rng::Rng;
 
 pub use lion::Lion;
@@ -86,8 +86,10 @@ impl SearchResult {
     }
 
     /// Extract the argmax (discrete) policy. Option order is the search
-    /// space of §4.1: [uncond, cond, cfg(s/2), cfg(s), cfg(2s)].
-    pub fn extract_policy(&self, s_base: f32) -> GuidancePolicy {
+    /// space of §4.1: [uncond, cond, cfg(s/2), cfg(s), cfg(2s)]. Returns
+    /// the concrete [`Searched`] policy so callers can inspect the choices
+    /// (use `.into_ref()` to submit it to the engine).
+    pub fn extract_policy(&self, s_base: f32) -> Searched {
         let choices = self
             .scores()
             .iter()
@@ -107,7 +109,7 @@ impl SearchResult {
                 }
             })
             .collect();
-        GuidancePolicy::Searched { choices }
+        Searched { choices }
     }
 }
 
@@ -206,12 +208,9 @@ mod tests {
         // loss decreased
         assert!(res.trace.loss.last().unwrap() < &res.trace.loss[0]);
         // extracted policy mirrors the targets
-        if let GuidancePolicy::Searched { choices } = res.extract_policy(7.5) {
-            assert_eq!(choices[0], StepChoice::Cfg { s: 7.5 });
-            assert_eq!(choices[5], StepChoice::Cond);
-        } else {
-            panic!("expected searched policy");
-        }
+        let policy = res.extract_policy(7.5);
+        assert_eq!(policy.choices[0], StepChoice::Cfg { s: 7.5 });
+        assert_eq!(policy.choices[5], StepChoice::Cond);
     }
 
     #[test]

@@ -8,6 +8,16 @@
 //!           "negative": "green", "image": false}
 //! response {"id": 3, "nfes": 31, "cfg_steps": 11, "truncated_at": 10,
 //!           "ms": 128.4, "image": [...]?}
+//! error    {"error": "...", "registered": ["ag", "cfg", ...]?}
+//!
+//! The `"policy"` field is a [`PolicySpec`]: either a bare registered name
+//! (`"linear-ag"`, `"compressed-cfg"`, …) or an object
+//! `{"kind": "searched", "choices": [...]}`. Top-level convenience fields
+//! (`guidance` → `s`, `gamma_bar`, `cfg_steps`, `period`, `choices`,
+//! `coeffs`, …) fill parameters the policy object leaves unset, so simple
+//! clients never need the nested form. Unknown policy names produce a
+//! structured JSON error listing the registered policies instead of a
+//! dropped connection.
 //!
 //! The engine runs on a dedicated thread (it owns the PJRT client);
 //! connection handlers forward requests through an mpsc channel and block on
@@ -18,14 +28,15 @@ use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::backend::Backend;
 use crate::coordinator::engine::Engine;
-use crate::coordinator::policy::GuidancePolicy;
 use crate::coordinator::request::{Completion, Request};
+use crate::coordinator::spec::{PolicyRegistry, PolicySpec, SpecError};
 use crate::prompts::Prompt;
 use crate::util::json::{self, Value};
 
@@ -51,9 +62,18 @@ impl Default for ServerConfig {
     }
 }
 
+/// Top-level request fields that are *not* policy parameters.
+const ENVELOPE_KEYS: &[&str] = &[
+    "prompt", "policy", "steps", "seed", "negative", "image", "model", "src_image", "guidance",
+];
+
 /// Parse one protocol line into a [`Request`] (without an id — the engine
 /// thread assigns ids).
-pub fn parse_request_line(line: &str, cfg: &ServerConfig) -> Result<(Request, bool)> {
+pub fn parse_request_line(
+    line: &str,
+    cfg: &ServerConfig,
+    registry: &PolicyRegistry,
+) -> Result<(Request, bool)> {
     let v = json::parse(line).map_err(|e| anyhow!("bad request json: {e}"))?;
     let prompt_text = v
         .get("prompt")
@@ -64,20 +84,34 @@ pub fn parse_request_line(line: &str, cfg: &ServerConfig) -> Result<(Request, bo
         .get("steps")
         .and_then(Value::as_usize)
         .unwrap_or(cfg.default_steps);
-    let s = v
-        .get("guidance")
-        .and_then(Value::as_f64)
-        .unwrap_or(cfg.default_guidance) as f32;
-    let gamma_bar = v
-        .get("gamma_bar")
-        .and_then(Value::as_f64)
-        .unwrap_or(cfg.default_gamma_bar);
-    let policy = match v.get("policy").and_then(Value::as_str).unwrap_or("ag") {
-        "cfg" => GuidancePolicy::Cfg { s },
-        "cond" | "distilled" => GuidancePolicy::CondOnly,
-        "ag" => GuidancePolicy::Ag { s, gamma_bar },
-        other => return Err(anyhow!("unknown policy `{other}`")),
+
+    // policy spec: bare name or object; top-level fields fill the gaps.
+    let mut spec = match v.get("policy") {
+        None => PolicySpec::new("ag"),
+        Some(pv) => PolicySpec::from_json(pv)?,
     };
+    if let Some(obj) = v.as_obj() {
+        for (key, val) in obj {
+            if !ENVELOPE_KEYS.contains(&key.as_str()) {
+                spec.set_default(key, val.clone());
+            }
+        }
+    }
+    if let Some(g) = v.get("guidance").and_then(Value::as_f64) {
+        spec.set_default("s", json::num(g));
+    }
+    // the server's configured defaults fill whatever is still unset
+    spec.set_default("s", json::num(cfg.default_guidance));
+    if spec.canonical_kind() == "ag" {
+        spec.set_default("gamma_bar", json::num(cfg.default_gamma_bar));
+    }
+    let policy = registry.build(&spec)?;
+    // reject bad policy/request combinations here (error reply) rather
+    // than letting them panic the engine thread mid-generation
+    policy
+        .validate(steps)
+        .map_err(|e| anyhow!("policy `{}` rejected the request: {e}", policy.name()))?;
+
     let mut req = Request::new(
         0,
         &v.get("model")
@@ -109,6 +143,12 @@ pub fn parse_request_line(line: &str, cfg: &ServerConfig) -> Result<(Request, bo
         }
         req.neg_tokens = Some(toks);
     }
+    if let Some(src) = v.get("src_image") {
+        let vals = src
+            .as_f64_vec()
+            .ok_or_else(|| anyhow!("`src_image` must be an array of numbers"))?;
+        req.src_image = Some(vals.into_iter().map(|f| f as f32).collect());
+    }
     let want_image = v.get("image").and_then(Value::as_bool).unwrap_or(false);
     Ok((req, want_image))
 }
@@ -133,6 +173,19 @@ pub fn completion_to_line(c: &Completion, ms: f64, with_image: bool) -> String {
         ));
     }
     json::to_string(&obj(fields))
+}
+
+/// Encode an error as a structured protocol line (proper JSON escaping;
+/// unknown-policy errors carry the registered names).
+pub fn error_to_line(e: &anyhow::Error) -> String {
+    let mut fields = vec![("error", json::s(&format!("{e:#}")))];
+    if let Some(SpecError::UnknownPolicy { known, .. }) = e.downcast_ref::<SpecError>() {
+        fields.push((
+            "registered",
+            json::arr(known.iter().map(|n| json::s(n)).collect()),
+        ));
+    }
+    json::to_string(&json::obj(fields))
 }
 
 struct Job {
@@ -178,8 +231,9 @@ fn engine_loop<B: Backend>(mut engine: Engine<B>, rx: Receiver<Job>) {
             }
             Err(e) => {
                 log::error!("engine pump failed: {e:#}");
+                let line = error_to_line(&e);
                 for (_, job) in jobs.drain() {
-                    let _ = job.reply.send(format!("{{\"error\":\"{e}\"}}"));
+                    let _ = job.reply.send(line.clone());
                 }
                 return;
             }
@@ -199,7 +253,12 @@ fn admit<B: Backend>(
     jobs.insert(job.req.id, job);
 }
 
-fn handle_conn(stream: TcpStream, tx: Sender<Job>, cfg: ServerConfig) {
+fn handle_conn(
+    stream: TcpStream,
+    tx: Sender<Job>,
+    cfg: ServerConfig,
+    registry: Arc<PolicyRegistry>,
+) {
     let peer = stream
         .peer_addr()
         .map(|a| a.to_string())
@@ -211,7 +270,7 @@ fn handle_conn(stream: TcpStream, tx: Sender<Job>, cfg: ServerConfig) {
         if line.trim().is_empty() {
             continue;
         }
-        let reply_line = match parse_request_line(&line, &cfg) {
+        let reply_line = match parse_request_line(&line, &cfg, &registry) {
             Ok((req, want_image)) => {
                 let (rtx, rrx) = channel();
                 let job = Job {
@@ -228,7 +287,7 @@ fn handle_conn(stream: TcpStream, tx: Sender<Job>, cfg: ServerConfig) {
                     Err(_) => break,
                 }
             }
-            Err(e) => format!("{{\"error\":\"{e}\"}}"),
+            Err(e) => error_to_line(&e),
         };
         if writer.write_all(reply_line.as_bytes()).is_err()
             || writer.write_all(b"\n").is_err()
@@ -239,11 +298,25 @@ fn handle_conn(stream: TcpStream, tx: Sender<Job>, cfg: ServerConfig) {
     log::info!("connection {peer} closed");
 }
 
-/// Serve forever (or until the listener errors).
+/// Serve forever with the built-in policy registry.
+pub fn serve<B, F>(factory: F, cfg: ServerConfig) -> Result<()>
+where
+    B: Backend + 'static,
+    F: FnOnce() -> Result<B> + Send + 'static,
+{
+    serve_with_registry(factory, cfg, Arc::new(PolicyRegistry::builtin()))
+}
+
+/// Serve forever (or until the listener errors) with a caller-supplied
+/// registry — the hook for deployments that register custom policies.
 ///
 /// `factory` constructs the backend *inside* the engine thread — the PJRT
 /// client is thread-affine (not `Send`), so it must be born where it runs.
-pub fn serve<B, F>(factory: F, cfg: ServerConfig) -> Result<()>
+pub fn serve_with_registry<B, F>(
+    factory: F,
+    cfg: ServerConfig,
+    registry: Arc<PolicyRegistry>,
+) -> Result<()>
 where
     B: Backend + 'static,
     F: FnOnce() -> Result<B> + Send + 'static,
@@ -251,15 +324,16 @@ where
     let (tx, rx) = channel::<Job>();
     let listener = TcpListener::bind(&cfg.addr)?;
     eprintln!("agd serving on {} (model {})", cfg.addr, cfg.model);
-    std::thread::spawn(move || match factory() {
-        Ok(backend) => engine_loop(Engine::new(backend), rx),
+    std::thread::spawn(move || match factory().and_then(Engine::new) {
+        Ok(engine) => engine_loop(engine, rx),
         Err(e) => log::error!("backend construction failed: {e:#}"),
     });
     for stream in listener.incoming() {
         let stream = stream?;
         let tx = tx.clone();
         let cfg = cfg.clone();
-        std::thread::spawn(move || handle_conn(stream, tx, cfg));
+        let registry = registry.clone();
+        std::thread::spawn(move || handle_conn(stream, tx, cfg, registry));
     }
     Ok(())
 }
@@ -268,6 +342,7 @@ where
 mod tests {
     use super::*;
     use crate::backend::GmmBackend;
+    use crate::ols::OlsCoeffs;
     use crate::sim::gmm::Gmm;
 
     fn cfg() -> ServerConfig {
@@ -277,14 +352,23 @@ mod tests {
         }
     }
 
+    fn reg() -> PolicyRegistry {
+        PolicyRegistry::builtin()
+    }
+
+    fn parse(line: &str) -> Result<(Request, bool)> {
+        parse_request_line(line, &cfg(), &reg())
+    }
+
     #[test]
     fn parses_minimal_request() {
-        let (req, img) =
-            parse_request_line(r#"{"prompt": "red circle"}"#, &cfg()).unwrap();
+        let (req, img) = parse(r#"{"prompt": "red circle"}"#).unwrap();
         assert_eq!(req.tokens, vec![1, 1, 1, 1]);
         assert_eq!(req.steps, 20);
         assert!(!img);
-        assert!(matches!(req.policy, GuidancePolicy::Ag { .. }));
+        assert!(req.policy.name().starts_with("ag("));
+        // the configured default gamma-bar flows into the default policy
+        assert!(req.policy.name().contains("0.9988"));
     }
 
     #[test]
@@ -292,21 +376,74 @@ mod tests {
         let line = r#"{"prompt": "a large blue square at the top-left",
             "policy": "cfg", "steps": 10, "guidance": 5.0, "seed": 9,
             "negative": "red", "image": true}"#;
-        let (req, img) = parse_request_line(line, &cfg()).unwrap();
+        let (req, img) = parse(line).unwrap();
         assert_eq!(req.steps, 10);
         assert!(img);
-        assert!(matches!(req.policy, GuidancePolicy::Cfg { s } if s == 5.0));
+        assert_eq!(req.policy.name(), "cfg(s=5)");
         assert_eq!(req.neg_tokens, Some(vec![0, 1, 0, 0])); // red = color 1
         assert_eq!(req.seed, 9);
     }
 
     #[test]
-    fn rejects_bad_input() {
-        assert!(parse_request_line("not json", &cfg()).is_err());
-        assert!(parse_request_line(r#"{"no_prompt": 1}"#, &cfg()).is_err());
-        assert!(
-            parse_request_line(r#"{"prompt": "x", "policy": "warp"}"#, &cfg()).is_err()
+    fn parses_every_registered_policy_kind() {
+        // server parity: policies that used to be CLI/bench-only are now
+        // reachable through the line protocol via PolicySpec.
+        let coeffs = json::to_string(&OlsCoeffs::identity(8).to_json());
+        let lines = [
+            format!(r#"{{"prompt": "x", "policy": "linear-ag", "steps": 8, "coeffs": {coeffs}}}"#),
+            r#"{"prompt": "x", "policy": "ag-prefix", "cfg_steps": 3}"#.to_owned(),
+            r#"{"prompt": "x", "policy": "alternating"}"#.to_owned(),
+            r#"{"prompt": "x", "policy": "searched", "choices": ["cfg", "cond", "uncond", 2.5]}"#
+                .to_owned(),
+            r#"{"prompt": "x", "policy": "pix2pix", "src_image": [0.0, 0.5]}"#.to_owned(),
+            r#"{"prompt": "x", "policy": "compressed-cfg", "period": 5}"#.to_owned(),
+            r#"{"prompt": "x", "policy": "adaptive-scale", "s_max": 6.0, "s_min": 1.0}"#.to_owned(),
+            r#"{"prompt": "x", "policy": {"kind": "ag-prefix", "cfg_steps": 2, "s": 3.0}}"#
+                .to_owned(),
+        ];
+        for line in &lines {
+            let (req, _) = parse(line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert!(req.policy.max_nfes(req.steps) >= req.steps, "{line}");
+        }
+        // a coefficient table shorter than the request is an error reply,
+        // not an engine-thread panic
+        let short = format!(
+            r#"{{"prompt": "x", "policy": "linear-ag", "steps": 20, "coeffs": {coeffs}}}"#
         );
+        let err = parse(&short).unwrap_err();
+        assert!(err.to_string().contains("cover"), "{err}");
+
+        // spot-check parameters actually reached the policies
+        let (req, _) = parse(&lines[1]).unwrap();
+        assert_eq!(req.policy.max_nfes(20), 23); // 3 guided + 17 cond
+        let (req, _) = parse(&lines[4]).unwrap();
+        assert_eq!(req.src_image.as_deref(), Some(&[0.0f32, 0.5][..]));
+        let (req, _) = parse(&lines[7]).unwrap();
+        assert_eq!(req.policy.max_nfes(20), 22); // nested object form
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(parse("not json").is_err());
+        assert!(parse(r#"{"no_prompt": 1}"#).is_err());
+        assert!(parse(r#"{"prompt": "x", "policy": "warp"}"#).is_err());
+    }
+
+    #[test]
+    fn unknown_policy_yields_structured_error_listing_registered() {
+        let err = parse(r#"{"prompt": "x", "policy": "warp"}"#).unwrap_err();
+        let line = error_to_line(&err);
+        let v = json::parse(&line).unwrap_or_else(|e| panic!("error line not json: {line} ({e})"));
+        assert!(v.req("error").as_str().unwrap().contains("warp"));
+        let registered = v.req("registered").as_str_vec().unwrap();
+        assert!(registered.contains(&"ag".to_owned()));
+        assert!(registered.contains(&"compressed-cfg".to_owned()));
+        assert!(registered.contains(&"adaptive-scale".to_owned()));
+
+        // non-spec errors still produce valid JSON (escaping included)
+        let err = parse(r#"{"prompt": 42}"#).unwrap_err();
+        let line = error_to_line(&err);
+        assert!(json::parse(&line).is_ok(), "{line}");
     }
 
     #[test]
@@ -345,15 +482,19 @@ mod tests {
         let (tx, rx) = channel::<Job>();
         std::thread::spawn(move || {
             let backend = GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05));
-            engine_loop(Engine::new(backend), rx)
+            engine_loop(Engine::new(backend).unwrap(), rx)
         });
         {
             let scfg = scfg.clone();
+            let registry = Arc::new(PolicyRegistry::builtin());
             std::thread::spawn(move || {
                 for stream in listener.incoming() {
                     let tx = tx.clone();
                     let scfg = scfg.clone();
-                    std::thread::spawn(move || handle_conn(stream.unwrap(), tx, scfg));
+                    let registry = registry.clone();
+                    std::thread::spawn(move || {
+                        handle_conn(stream.unwrap(), tx, scfg, registry)
+                    });
                 }
             });
         }
@@ -369,5 +510,31 @@ mod tests {
         let v = json::parse(line.trim()).unwrap();
         assert!(v.get("error").is_none(), "{line}");
         assert!(v.req("nfes").as_f64().unwrap() <= 16.0);
+
+        // a plugin policy over the same connection: compressed-cfg at
+        // period 4 over 8 steps costs exactly 2·2 + 6 = 10 NFEs.
+        let mut conn = reader.into_inner();
+        conn.write_all(
+            br#"{"prompt": "red circle", "policy": "compressed-cfg", "period": 4, "steps": 8, "guidance": 2.0}"#,
+        )
+        .unwrap();
+        conn.write_all(b"\n").unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = json::parse(line.trim()).unwrap();
+        assert_eq!(v.req("nfes").as_f64(), Some(10.0), "{line}");
+
+        // unknown policy: structured error, connection stays usable
+        let mut conn = reader.into_inner();
+        conn.write_all(br#"{"prompt": "red circle", "policy": "warp"}"#)
+            .unwrap();
+        conn.write_all(b"\n").unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = json::parse(line.trim()).unwrap();
+        assert!(v.get("error").is_some(), "{line}");
+        assert!(v.req("registered").as_str_vec().unwrap().len() >= 10);
     }
 }

@@ -84,6 +84,11 @@ impl Args {
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name}: expected float, got `{v}`")))
             .unwrap_or(default)
     }
+
+    /// `f64` narrowed to the f32 guidance scales the policy API uses.
+    pub fn f32(&self, name: &str, default: f32) -> f32 {
+        self.f64(name, default as f64) as f32
+    }
 }
 
 #[cfg(test)]
@@ -129,6 +134,7 @@ mod tests {
         let a = args("");
         assert_eq!(a.usize("n", 7), 7);
         assert_eq!(a.f64("x", 0.5), 0.5);
+        assert_eq!(a.f32("y", 1.5), 1.5);
         assert_eq!(a.get_or("m", "d"), "d");
     }
 

@@ -7,7 +7,11 @@ use std::sync::Arc;
 
 use adaptive_guidance::backend::GmmBackend;
 use adaptive_guidance::coordinator::engine::Engine;
-use adaptive_guidance::coordinator::policy::{GuidancePolicy, StepChoice};
+use adaptive_guidance::coordinator::ext::{adaptive_scale, compressed_cfg};
+use adaptive_guidance::coordinator::policy::{
+    ag, ag_prefix, alternating, cfg, cond_only, linear_ag, pix2pix, searched, PolicyRef,
+    StepChoice,
+};
 use adaptive_guidance::coordinator::request::Request;
 use adaptive_guidance::ols;
 use adaptive_guidance::quality::ssim::ssim_rgb;
@@ -15,10 +19,10 @@ use adaptive_guidance::sim::gmm::Gmm;
 use adaptive_guidance::testing::{forall, gen};
 
 fn engine(dim: usize) -> Engine<GmmBackend> {
-    Engine::new(GmmBackend::new(Gmm::axes(dim, 6, 3.0, 0.05)))
+    Engine::new(GmmBackend::new(Gmm::axes(dim, 6, 3.0, 0.05))).unwrap()
 }
 
-fn req(id: u64, seed: u64, steps: usize, policy: GuidancePolicy) -> Request {
+fn req(id: u64, seed: u64, steps: usize, policy: PolicyRef) -> Request {
     Request::new(id, "gmm", vec![1 + (id % 6) as i32, 0, 0, 0], seed, steps, policy)
 }
 
@@ -34,8 +38,8 @@ fn prop_ag_prefix_replication() {
         let seed = rng.next_u64();
         let steps = gen::usize_in(rng, 6, 24);
         let mut e = engine(12);
-        let mut cfg_r = req(0, seed, steps, GuidancePolicy::Cfg { s: 2.0 });
-        let mut ag_r = req(1, seed, steps, GuidancePolicy::Ag { s: 2.0, gamma_bar: 0.999 });
+        let mut cfg_r = req(0, seed, steps, cfg(2.0));
+        let mut ag_r = req(1, seed, steps, ag(2.0, 0.999));
         cfg_r.tokens = vec![2, 0, 0, 0];
         ag_r.tokens = vec![2, 0, 0, 0];
         let out = e.run(vec![cfg_r, ag_r]).unwrap();
@@ -63,7 +67,7 @@ fn prop_ag_threshold_monotonicity() {
         let seed = rng.next_u64();
         let mut e = engine(12);
         let mk = |id, g| {
-            let mut r = req(id, seed, 16, GuidancePolicy::Ag { s: 2.0, gamma_bar: g });
+            let mut r = req(id, seed, 16, ag(2.0, g));
             r.tokens = vec![3, 0, 0, 0];
             r
         };
@@ -82,7 +86,7 @@ fn ag_lands_on_the_conditioned_mode() {
     let mut e = engine(8);
     let gmm = e.backend.gmm.clone();
     let out = e
-        .run(vec![req(2, 41, 20, GuidancePolicy::Ag { s: 2.0, gamma_bar: 0.995 })])
+        .run(vec![req(2, 41, 20, ag(2.0, 0.995))])
         .unwrap();
     let img = &out[0].image;
     let target = &gmm.means[2];
@@ -109,17 +113,14 @@ fn prop_batching_does_not_change_results() {
         let steps = gen::usize_in(rng, 4, 12);
         let solo = {
             let mut e = engine(12);
-            e.run(vec![req(0, seed, steps, GuidancePolicy::Cfg { s: 2.0 })])
+            e.run(vec![req(0, seed, steps, cfg(2.0))])
                 .unwrap()
         };
         let crowded = {
             let mut e = engine(12);
-            let mut reqs = vec![req(0, seed, steps, GuidancePolicy::Cfg { s: 2.0 })];
+            let mut reqs = vec![req(0, seed, steps, cfg(2.0))];
             for i in 1..9 {
-                reqs.push(req(i, rng.next_u64(), steps, GuidancePolicy::Ag {
-                    s: 2.0,
-                    gamma_bar: 0.99,
-                }));
+                reqs.push(req(i, rng.next_u64(), steps, ag(2.0, 0.99)));
             }
             e.run(reqs).unwrap()
         };
@@ -138,9 +139,9 @@ fn prop_work_conservation() {
         let reqs: Vec<_> = (0..n)
             .map(|i| {
                 let policy = match i % 3 {
-                    0 => GuidancePolicy::Cfg { s: 2.0 },
-                    1 => GuidancePolicy::Ag { s: 2.0, gamma_bar: 0.995 },
-                    _ => GuidancePolicy::CondOnly,
+                    0 => cfg(2.0),
+                    1 => ag(2.0, 0.995),
+                    _ => cond_only(),
                 };
                 req(i as u64, rng.next_u64(), 10, policy)
             })
@@ -167,7 +168,7 @@ fn searched_policy_runs_with_expected_cost() {
     ];
     let mut e = engine(8);
     let out = e
-        .run(vec![req(0, 5, 5, GuidancePolicy::Searched { choices })])
+        .run(vec![req(0, 5, 5, searched(choices))])
         .unwrap();
     assert_eq!(out[0].nfes, 2 + 2 + 1 + 1 + 1);
 }
@@ -182,7 +183,7 @@ fn linear_ag_end_to_end_on_gmm() {
     let mut e = engine(8);
     let reqs: Vec<_> = (0..40)
         .map(|i| {
-            let mut r = req(i, 1000 + i, steps, GuidancePolicy::Cfg { s: 2.0 });
+            let mut r = req(i, 1000 + i, steps, cfg(2.0));
             r.record_trajectory = true;
             r
         })
@@ -199,12 +200,9 @@ fn linear_ag_end_to_end_on_gmm() {
     let mut e2 = engine(8);
     let out = e2
         .run(vec![
-            req(0, 7777, steps, GuidancePolicy::Cfg { s: 2.0 }),
+            req(0, 7777, steps, cfg(2.0)),
             {
-                let mut r = req(1, 7777, steps, GuidancePolicy::LinearAg {
-                    s: 2.0,
-                    coeffs: coeffs.clone(),
-                });
+                let mut r = req(1, 7777, steps, linear_ag(2.0, coeffs.clone()));
                 r.tokens = vec![1, 0, 0, 0];
                 r
             },
@@ -240,12 +238,12 @@ fn negative_prompt_changes_the_uncond_stream_only() {
         r.tokens = vec![2, 0, 0, 0]; // identical condition for all four
         r
     };
-    let mut with_neg = mk(0, GuidancePolicy::Cfg { s: 2.0 });
+    let mut with_neg = mk(0, cfg(2.0));
     with_neg.neg_tokens = Some(vec![4, 0, 0, 0]);
-    let plain = mk(1, GuidancePolicy::Cfg { s: 2.0 });
-    let mut cond_a = mk(2, GuidancePolicy::CondOnly);
+    let plain = mk(1, cfg(2.0));
+    let mut cond_a = mk(2, cond_only());
     cond_a.neg_tokens = Some(vec![4, 0, 0, 0]);
-    let cond_b = mk(3, GuidancePolicy::CondOnly);
+    let cond_b = mk(3, cond_only());
     let out = e.run(vec![with_neg, plain, cond_a, cond_b]).unwrap();
     assert_ne!(out[0].image, out[1].image, "negative prompt must matter");
     assert_eq!(out[2].image, out[3].image, "cond-only ignores negatives");
@@ -255,11 +253,141 @@ fn negative_prompt_changes_the_uncond_stream_only() {
 fn ssim_of_replicated_trajectories_is_one() {
     // engine determinism feeds the quality metric: same request twice → SSIM 1.
     let run = || {
-        let mut e = Engine::new(GmmBackend::new(Gmm::axes(768, 4, 3.0, 0.05)));
-        e.run(vec![req(0, 3, 8, GuidancePolicy::Cfg { s: 2.0 })]).unwrap()
+        let mut e = Engine::new(GmmBackend::new(Gmm::axes(768, 4, 3.0, 0.05))).unwrap();
+        e.run(vec![req(0, 3, 8, cfg(2.0))]).unwrap()
     };
     let a = run();
     let b = run();
     let s = ssim_rgb(&a[0].image, &b[0].image, 16, 16);
     assert!((s - 1.0).abs() < 1e-12);
+}
+
+// ---------------------------------------------------------------------------
+// Open-policy API: mixed fleets, plugins, and the shared half-split rule
+// ---------------------------------------------------------------------------
+
+/// Every policy — the eight built-ins plus the two ext.rs plugins — batched
+/// through the *same* pump loop, with per-request NFE accounting checked
+/// against each policy's own worst-case bound and exact counts for the
+/// deterministic ones. The engine never learns which policy is which.
+#[test]
+fn mixed_policy_fleet_accounts_nfes_per_request() {
+    let steps = 12;
+    let coeffs = Arc::new(ols::OlsCoeffs::identity(steps));
+    let policies: Vec<(PolicyRef, Option<usize>)> = vec![
+        (cfg(2.0), Some(24)),
+        (cond_only(), Some(12)),
+        (ag(2.0, 0.995), None), // adaptive: bound-checked only
+        (ag_prefix(2.0, 4), Some(16)),
+        (alternating(2.0), Some(15)), // guided half = 6 → CFG at 0, 2, 4
+        (linear_ag(2.0, coeffs), Some(15)),
+        (
+            searched(vec![
+                StepChoice::Cfg { s: 2.0 },
+                StepChoice::Cond,
+                StepChoice::Uncond,
+            ]),
+            Some(13), // 2 + 1 + 1, then 9 default-cond steps
+        ),
+        (pix2pix(2.0, 1.5, None, Some(6)), Some(24)), // 6·3 + 6·1
+        (compressed_cfg(2.0, 4), Some(15)),           // guided at 0, 4, 8
+        (adaptive_scale(3.0, 1.0, 0.9, 2.0), Some(24)), // γ̄_hi unreachable
+    ];
+    let mut e = engine(8);
+    let reqs: Vec<Request> = policies
+        .iter()
+        .enumerate()
+        .map(|(i, (p, _))| req(i as u64, 4000 + i as u64, steps, p.clone()))
+        .collect();
+    let out = e.run(reqs).unwrap();
+    assert_eq!(out.len(), policies.len());
+
+    let total: usize = out.iter().map(|c| c.nfes).sum();
+    assert_eq!(e.stats.items, total, "batcher dropped or duplicated work");
+    assert_eq!(e.backend.items_executed, total);
+    // the fleet actually batched across policies (occupancy ≫ 1)
+    assert!(e.stats.mean_occupancy() > 4.0, "{}", e.stats.mean_occupancy());
+
+    for (c, (p, expect)) in out.iter().zip(&policies) {
+        assert!(
+            c.nfes <= p.max_nfes(steps),
+            "{}: {} NFEs exceeds its own bound {}",
+            p.name(),
+            c.nfes,
+            p.max_nfes(steps)
+        );
+        if let Some(n) = expect {
+            assert_eq!(c.nfes, *n, "{}", p.name());
+        }
+    }
+}
+
+/// The AdaptiveScale plugin truncates through its own observe() rule — no
+/// engine involvement. A threshold below any possible cosine fires after
+/// the first guided step: 2 + (T-1) NFEs, deterministically.
+#[test]
+fn adaptive_scale_truncates_via_policy_state() {
+    let mut e = engine(8);
+    let out = e
+        .run(vec![req(0, 11, 10, adaptive_scale(2.0, 0.5, -2.0, -1.5))])
+        .unwrap();
+    assert_eq!(out[0].truncated_at, Some(0));
+    assert_eq!(out[0].nfes, 11);
+}
+
+/// With unreachable gamma thresholds the AdaptiveScale ramp never leaves
+/// s_max, so it replicates plain CFG at the same scale bit-for-bit.
+#[test]
+fn adaptive_scale_with_unreachable_ramp_replicates_cfg() {
+    let mut e = engine(8);
+    let mk = |id, p| {
+        let mut r = req(id, 777, 10, p);
+        r.tokens = vec![2, 0, 0, 0];
+        r
+    };
+    let out = e
+        .run(vec![
+            mk(0, cfg(2.0)),
+            mk(1, adaptive_scale(2.0, 0.5, 2.0, 3.0)),
+        ])
+        .unwrap();
+    assert_eq!(out[0].image, out[1].image);
+    assert_eq!(out[0].nfes, out[1].nfes);
+}
+
+/// CompressedCfg with period 1 is plain CFG; larger periods guide every
+/// k-th step only.
+#[test]
+fn compressed_cfg_period_one_replicates_cfg() {
+    let mut e = engine(8);
+    let mk = |id, p| {
+        let mut r = req(id, 31, 10, p);
+        r.tokens = vec![3, 0, 0, 0];
+        r
+    };
+    let out = e
+        .run(vec![mk(0, cfg(2.0)), mk(1, compressed_cfg(2.0, 1)), mk(2, compressed_cfg(2.0, 5))])
+        .unwrap();
+    assert_eq!(out[0].image, out[1].image);
+    assert_eq!(out[0].nfes, out[1].nfes);
+    assert_eq!(out[2].nfes, 2 * 2 + 8); // guided at steps 0 and 5
+}
+
+/// Odd totals: the shared ⌈T/2⌉ rule gives the guided half the extra step
+/// for both half-split policies (exact NFE counts, end-to-end).
+#[test]
+fn odd_total_half_split_is_guided_biased() {
+    let steps = 5; // guided half = 3 → CFG at steps 0 and 2
+    let coeffs = Arc::new(ols::OlsCoeffs::identity(steps));
+    let mut e = engine(8);
+    let out = e
+        .run(vec![
+            req(0, 9, steps, alternating(2.0)),
+            req(1, 9, steps, linear_ag(2.0, coeffs)),
+        ])
+        .unwrap();
+    assert_eq!(out[0].nfes, 2 * 2 + 3, "alternating: 2 guided + 3 cond");
+    assert_eq!(out[1].nfes, 2 * 2 + 3, "linear-ag: 2 guided + 3 LR");
+    assert_eq!(out[0].cfg_steps, 2);
+    assert_eq!(out[1].cfg_steps, 2);
 }

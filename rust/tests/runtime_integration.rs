@@ -13,7 +13,7 @@ use std::path::PathBuf;
 
 use adaptive_guidance::backend::{Backend, EvalInput};
 use adaptive_guidance::coordinator::engine::Engine;
-use adaptive_guidance::coordinator::policy::GuidancePolicy;
+use adaptive_guidance::coordinator::policy::{ag, cfg, pix2pix};
 use adaptive_guidance::coordinator::request::Request;
 use adaptive_guidance::quality::ssim::ssim_rgb;
 use adaptive_guidance::runtime::PjrtBackend;
@@ -85,7 +85,7 @@ fn denoiser_matches_python_reference_eval() {
 fn engine_cfg_run_matches_python_sampler() {
     let Some(dir) = artifacts_dir() else { return };
     let Some(par) = load_parity(&dir) else { return };
-    let mut engine = Engine::new(PjrtBackend::load(&dir).unwrap());
+    let mut engine = Engine::new(PjrtBackend::load(&dir).unwrap()).unwrap();
     let model = par.req("model").as_str().unwrap().to_owned();
     let tokens: Vec<i32> = par
         .req("tokens")
@@ -95,7 +95,7 @@ fn engine_cfg_run_matches_python_sampler() {
         .map(|v| v as i32)
         .collect();
     let refrun = par.req("sample_cfg");
-    let mut req = Request::new(0, &model, tokens, 0, 20, GuidancePolicy::Cfg { s: 7.5 });
+    let mut req = Request::new(0, &model, tokens, 0, 20, cfg(7.5));
     req.init_noise = Some(f32s(par.req("x_init")));
     let out = engine.run(vec![req]).unwrap().remove(0);
     assert_eq!(out.nfes as f64, refrun.req("nfes").as_f64().unwrap());
@@ -119,7 +119,7 @@ fn engine_cfg_run_matches_python_sampler() {
 fn engine_ag_run_matches_python_sampler() {
     let Some(dir) = artifacts_dir() else { return };
     let Some(par) = load_parity(&dir) else { return };
-    let mut engine = Engine::new(PjrtBackend::load(&dir).unwrap());
+    let mut engine = Engine::new(PjrtBackend::load(&dir).unwrap()).unwrap();
     let model = par.req("model").as_str().unwrap().to_owned();
     let tokens: Vec<i32> = par
         .req("tokens")
@@ -130,14 +130,7 @@ fn engine_ag_run_matches_python_sampler() {
         .collect();
     let refrun = par.req("sample_ag");
     let gamma_bar = refrun.req("gamma_bar").as_f64().unwrap();
-    let mut req = Request::new(
-        0,
-        &model,
-        tokens,
-        0,
-        20,
-        GuidancePolicy::Ag { s: 7.5, gamma_bar },
-    );
+    let mut req = Request::new(0, &model, tokens, 0, 20, ag(7.5, gamma_bar));
     req.init_noise = Some(f32s(par.req("x_init")));
     let out = engine.run(vec![req]).unwrap().remove(0);
     assert_eq!(
@@ -220,7 +213,7 @@ fn device_guide_and_solver_match_host_math() {
 #[test]
 fn ag_saves_nfes_and_preserves_ssim_on_trained_model() {
     let Some(dir) = artifacts_dir() else { return };
-    let mut engine = Engine::new(PjrtBackend::load(&dir).unwrap());
+    let mut engine = Engine::new(PjrtBackend::load(&dir).unwrap()).unwrap();
     let tokens = vec![1, 3, 1, 2];
     let mk = |id, policy| {
         let mut r = Request::new(id, "dit_s", tokens.clone(), 99, 20, policy);
@@ -229,8 +222,8 @@ fn ag_saves_nfes_and_preserves_ssim_on_trained_model() {
     };
     let out = engine
         .run(vec![
-            mk(0, GuidancePolicy::Cfg { s: 7.5 }),
-            mk(1, GuidancePolicy::Ag { s: 7.5, gamma_bar: 0.9988 }),
+            mk(0, cfg(7.5)),
+            mk(1, ag(7.5, 0.9988)),
         ])
         .unwrap();
     let (cfg, ag) = (&out[0], &out[1]);
@@ -247,14 +240,14 @@ fn edit_model_triple_eval_runs() {
         eprintln!("skipping: dit_edit not in manifest");
         return;
     }
-    let mut engine = Engine::new(be);
+    let mut engine = Engine::new(be).unwrap();
     let mut req = Request::new(
         0,
         "dit_edit",
         vec![0, 2, 0, 0], // "make it green"
         5,
         10,
-        GuidancePolicy::Pix2Pix { s_text: 7.5, s_img: 1.5, gamma_bar: None, full_prefix: None },
+        pix2pix(7.5, 1.5, None, None),
     );
     req.src_image = Some(vec![0.1; 768]);
     let out = engine.run(vec![req]).unwrap().remove(0);

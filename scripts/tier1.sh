@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the gate every PR must keep green.
+#
+#   scripts/tier1.sh            build + tests + formatting
+#   scripts/tier1.sh --no-fmt   skip the formatting check (CI images
+#                               without rustfmt)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
+
+if [[ "${1:-}" != "--no-fmt" ]]; then
+    if cargo fmt --version >/dev/null 2>&1; then
+        cargo fmt --check
+    else
+        echo "tier1: rustfmt unavailable, skipping format check" >&2
+    fi
+fi
+
+echo "tier1: OK"
