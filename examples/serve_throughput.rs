@@ -9,8 +9,12 @@
 //!
 //! ```sh
 //! cargo run --release --example serve_throughput -- --requests 48 --rate 4 \
-//!     --policies cfg,ag,cond,compressed-cfg
+//!     --policies cfg,ag,cond,compressed-cfg --scheduler cost-aware
 //! ```
+//!
+//! `--scheduler fifo|cost-aware|deadline|fair-share` selects the engine's
+//! scheduling discipline (see `rust/benches/sched_tail_latency.rs` for the
+//! controlled comparison).
 
 use std::time::{Duration, Instant};
 
@@ -22,6 +26,7 @@ use adaptive_guidance::eval::harness::print_table;
 use adaptive_guidance::metrics::{LatencyRecorder, Throughput};
 use adaptive_guidance::prompts;
 use adaptive_guidance::runtime;
+use adaptive_guidance::sched::{Admission, SchedulerKind};
 use adaptive_guidance::util::cli::Args;
 use adaptive_guidance::util::json;
 use adaptive_guidance::util::rng::Rng;
@@ -36,11 +41,12 @@ struct LoadResult {
 }
 
 fn drive(policy: PolicyRef, name: &str, requests: usize, rate: f64,
-         steps: usize, model: &str) -> Option<LoadResult> {
+         steps: usize, model: &str, scheduler: SchedulerKind) -> Option<LoadResult> {
     // fresh backend per run so executable caches/compile time don't leak
     let mut be = runtime::try_load_default()?;
     be.warmup(model).ok()?;
-    let mut engine = Engine::new(be).ok()?;
+    let mut engine =
+        Engine::with_scheduler(be, scheduler.build(), Admission::unlimited()).ok()?;
 
     // Poisson arrivals, same seed for every policy → identical workload
     let mut rng = Rng::new(4242);
@@ -90,7 +96,7 @@ fn drive(policy: PolicyRef, name: &str, requests: usize, rate: f64,
         wall: start.elapsed(),
         completed: thr.completed,
         nfes: thr.nfes,
-        occupancy: engine.stats.mean_occupancy(),
+        occupancy: engine.mean_occupancy(),
         lat,
     })
 }
@@ -103,9 +109,13 @@ fn main() {
     let model = args.get_or("model", "dit_b").to_owned();
     let gamma_bar = args.f64("gamma-bar", 0.9988);
     let policies = args.get_or("policies", "cfg,ag,cond").to_owned();
+    let scheduler = SchedulerKind::parse(args.get_or("scheduler", "fifo"))
+        .unwrap_or_else(|e| panic!("--scheduler: {e}"));
 
     println!(
-        "# E2E serving: {requests} requests, Poisson rate {rate}/s, model {model}, T={steps}\n"
+        "# E2E serving: {requests} requests, Poisson rate {rate}/s, model {model}, \
+         T={steps}, scheduler {}\n",
+        scheduler.name()
     );
 
     // every traffic row goes through the PolicySpec registry, so any
@@ -134,7 +144,7 @@ fn main() {
                 }
             };
             let label = policy.name();
-            drive(policy, &label, requests, rate, steps, &model)
+            drive(policy, &label, requests, rate, steps, &model, scheduler)
         })
         .collect();
     if runs.is_empty() {
@@ -146,7 +156,7 @@ fn main() {
         .map(|r| {
             vec![
                 r.name.clone(),
-                format!("{}", r.completed),
+                r.completed.to_string(),
                 format!("{:.1}", r.completed as f64 / r.wall.as_secs_f64()),
                 format!("{:.0}", r.nfes as f64 / r.wall.as_secs_f64()),
                 format!("{:.0}", r.lat.mean()),

@@ -44,7 +44,7 @@ fn main() {
         let d_corr: Vec<f64> = analyses.iter().map(|a| a[t].delta_corr).collect();
         let rms: Vec<f64> = analyses.iter().map(|a| a[t].delta_rms).collect();
         rows.push(vec![
-            format!("{}", t + 1),
+            (t + 1).to_string(),
             format!("{:.3}", stats::mean(&rms)),
             format!("{:.3}", stats::mean(&it_corr)),
             format!("{:.3}", stats::mean(&d_corr)),

@@ -55,15 +55,15 @@ fn main() {
             vec![
                 "CFG".into(),
                 format!("{:.2}±{:.2}", ssim_m, ssim_s),
-                format!("{}", outcome.wins_a),
-                format!("{}", outcome.wins_b),
-                format!("{}", cfg.mean_nfes()),
+                outcome.wins_a.to_string(),
+                outcome.wins_b.to_string(),
+                cfg.mean_nfes().to_string(),
             ],
             vec![
                 format!("AG γ̄={gamma_bar}"),
                 String::from("—"),
-                format!("{}", outcome.wins_b),
-                format!("{}", outcome.wins_a),
+                outcome.wins_b.to_string(),
+                outcome.wins_a.to_string(),
                 format!("{:.1}±{:.1}", ag.mean_nfes(), ag.nfe_std()),
             ],
         ],

@@ -7,68 +7,94 @@
 //! requests at different steps* into fixed-batch executions, exactly the
 //! continuation-batching idea of Orca/vLLM applied to diffusion guidance.
 //!
-//! Single-threaded and deterministic: `submit()` adds requests (possible at
-//! any time, enabling open-loop arrival processes), `pump()` executes one
-//! batch and advances whatever completed, `run()` drains to completion.
+//! Which items go into the next batch is owned by a pluggable
+//! [`Scheduler`] ([`crate::sched`]): [`Fifo`] (the default) preserves
+//! strict arrival order bit-for-bit, while `CostAware`/`Deadline`/
+//! `FairShare` exploit the live per-request cost estimate
+//! ([`crate::coordinator::request::RequestState::remaining_nfes`]) that
+//! policy truncation keeps tightening. An [`Admission`] budget bounds the
+//! queue (in-flight requests and queued NFEs) and a [`Telemetry`] registry
+//! tracks occupancy, queue depth, per-policy NFE totals/savings, and
+//! per-request queue-wait vs execute time.
+//!
+//! Single-threaded and deterministic: `submit()`/`try_submit()` add
+//! requests (possible at any time, enabling open-loop arrival processes),
+//! `pump()` executes one batch and advances whatever completed, `run()`
+//! drains to completion. Scheduling reorders *work*, never *results*: a
+//! request's completion is bit-identical under every scheduler.
 
-use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::backend::Backend;
 use crate::coordinator::request::{Completion, Request, RequestState};
-use crate::stats::hist::Histogram;
+use crate::sched::{Admission, AdmitError, Fifo, RequestMeta, Scheduler, Telemetry, WorkItem};
 
-/// One pending network evaluation.
+/// Queue-wait / execute-time histograms: 0..10 s in 100 ms bins.
+const LATENCY_HIST: (f64, f64, usize) = (0.0, 10_000.0, 100);
+
+/// Engine-side per-request bookkeeping: scheduling labels, the live
+/// remaining-cost estimate, and queue-wait/execute timing.
 #[derive(Debug)]
-struct WorkItem {
-    state_idx: usize,
-    slot: usize,
-    model: String,
-}
-
-/// Batching statistics (§Perf: occupancy is the quantity to keep high).
-#[derive(Debug)]
-pub struct BatchStats {
-    pub batches: usize,
-    pub items: usize,
-    /// batch-occupancy histogram: items per executed batch
-    pub occupancy: Histogram,
-}
-
-impl BatchStats {
-    fn new(max_bucket: usize) -> BatchStats {
-        BatchStats {
-            batches: 0,
-            items: 0,
-            occupancy: Histogram::new(0.5, max_bucket as f64 + 0.5, max_bucket),
-        }
-    }
-
-    pub fn mean_occupancy(&self) -> f64 {
-        if self.batches == 0 {
-            0.0
-        } else {
-            self.items as f64 / self.batches as f64
-        }
-    }
+struct Meta {
+    id: u64,
+    client: Arc<str>,
+    /// canonical policy kind — the `policy=` telemetry label
+    policy: String,
+    priority: i32,
+    /// absolute deadline on the engine clock (ms since engine start),
+    /// anchored from the request's arrival-relative `deadline_ms`
+    deadline_ms: Option<u64>,
+    /// current remaining-NFE estimate, kept in lock-step with deliveries
+    cost: usize,
+    /// worst-case total at admission (for the NFEs-saved counter)
+    max_nfes: usize,
+    submitted: Instant,
+    first_exec: Option<Instant>,
 }
 
 /// The engine. Generic over the backend so coordinator tests run on the
 /// analytic GMM oracle and production runs on PJRT artifacts.
 pub struct Engine<B: Backend> {
     pub backend: B,
+    sched: Box<dyn Scheduler>,
+    admission: Admission,
     states: Vec<Option<RequestState>>,
-    queue: VecDeque<WorkItem>,
+    metas: Vec<Option<Meta>>,
+    /// completed slots available for reuse, so a long-running server does
+    /// not grow `states` monotonically
+    free: Vec<usize>,
     active: usize,
-    pub stats: BatchStats,
+    /// total remaining-NFE estimate across all in-flight requests
+    queued_nfes: usize,
+    batches: usize,
+    items: usize,
+    max_bucket: usize,
+    /// clock origin for anchoring arrival-relative deadlines: EDF needs
+    /// every deadline on ONE clock, and client clocks are not it
+    epoch: Instant,
+    telemetry: Telemetry,
 }
 
 impl<B: Backend> Engine<B> {
-    /// Construct an engine over a backend. Fails (rather than panicking)
+    /// Construct an engine over a backend with the default [`Fifo`]
+    /// scheduler and no admission budget. Fails (rather than panicking)
     /// when the backend reports no batch buckets — a misbuilt artifact set
     /// must surface as an error the server/CLI can report.
     pub fn new(backend: B) -> Result<Engine<B>> {
+        Engine::with_scheduler(backend, Box::new(Fifo::default()), Admission::unlimited())
+    }
+
+    /// Construct with an explicit scheduling discipline and admission
+    /// budget — the serving front-end's entry point
+    /// (`agd serve --scheduler .. --max-queued-nfes ..`).
+    pub fn with_scheduler(
+        backend: B,
+        sched: Box<dyn Scheduler>,
+        admission: Admission,
+    ) -> Result<Engine<B>> {
         let Some(&max_bucket) = backend.buckets().last() else {
             anyhow::bail!(
                 "backend reports no batch buckets; cannot size batches \
@@ -77,10 +103,18 @@ impl<B: Backend> Engine<B> {
         };
         Ok(Engine {
             backend,
+            sched,
+            admission,
             states: Vec::new(),
-            queue: VecDeque::new(),
+            metas: Vec::new(),
+            free: Vec::new(),
             active: 0,
-            stats: BatchStats::new(max_bucket),
+            queued_nfes: 0,
+            batches: 0,
+            items: 0,
+            max_bucket,
+            epoch: Instant::now(),
+            telemetry: Telemetry::new(),
         })
     }
 
@@ -93,48 +127,223 @@ impl<B: Backend> Engine<B> {
         self.active == 0
     }
 
-    /// Admit a request; its first step's evals enter the work queue.
+    /// Pending work items in the scheduler.
+    pub fn queue_len(&self) -> usize {
+        self.sched.len()
+    }
+
+    /// Total remaining-NFE estimate across in-flight requests — the
+    /// quantity the admission budget bounds.
+    pub fn queued_nfes(&self) -> usize {
+        self.queued_nfes
+    }
+
+    /// Batches executed so far.
+    pub fn batches(&self) -> usize {
+        self.batches
+    }
+
+    /// Work items executed so far.
+    pub fn items(&self) -> usize {
+        self.items
+    }
+
+    /// Mean items per executed batch (§Perf: the quantity to keep high).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.items as f64 / self.batches as f64
+        }
+    }
+
+    /// Wire name of the active scheduling discipline.
+    pub fn scheduler_name(&self) -> &'static str {
+        self.sched.name()
+    }
+
+    /// The metrics registry.
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
+    }
+
+    /// Request slots ever allocated (tests pin the free-list reuse).
+    pub fn state_slots(&self) -> usize {
+        self.states.len()
+    }
+
+    /// One-line stats snapshot for the server's `{"cmd": "stats"}`:
+    /// scheduler, live queue gauges, batch counters, and the full
+    /// telemetry registry.
+    pub fn stats_json(&self) -> crate::util::json::Value {
+        use crate::util::json::{num, obj, s};
+        obj(vec![
+            ("scheduler", s(self.sched.name())),
+            ("active", num(self.active as f64)),
+            ("queue_depth", num(self.sched.len() as f64)),
+            ("queued_nfes", num(self.queued_nfes as f64)),
+            ("batches", num(self.batches as f64)),
+            ("items", num(self.items as f64)),
+            ("mean_occupancy", num(self.mean_occupancy())),
+            ("telemetry", self.telemetry.to_json()),
+        ])
+    }
+
+    /// Admit a request against the admission budget; on rejection the
+    /// request is dropped and the caller replies `queue_full`. In-flight
+    /// requests are never affected by a rejection.
+    pub fn try_submit(&mut self, req: Request) -> Result<(), AdmitError> {
+        let cost = req.policy.max_nfes(req.steps);
+        if let Err(e) = self.admission.check(self.active, self.queued_nfes, cost) {
+            self.telemetry.inc("requests_rejected_total", &[], 1);
+            return Err(e);
+        }
+        self.submit_costed(req, cost);
+        Ok(())
+    }
+
+    /// Admit a request unconditionally; its first step's evals enter the
+    /// work queue. (Drain-mode benches pre-load entire workloads through
+    /// this path on purpose; serving front-ends go through
+    /// [`Self::try_submit`].)
     pub fn submit(&mut self, req: Request) {
+        let cost = req.policy.max_nfes(req.steps);
+        self.submit_costed(req, cost);
+    }
+
+    /// Shared admission tail: the `cost` the caller checked/charged is the
+    /// single value used for the queued-NFE accounting, so the admission
+    /// budget and the bookkeeping cannot drift.
+    fn submit_costed(&mut self, req: Request, cost: usize) {
         let flat_out = self.backend.flat_out(&req.model);
         let state = RequestState::new(req, flat_out);
-        let idx = self.states.len();
+        // `max_nfes` (plan cost over a fresh state) and the state machine's
+        // own estimate agree for every StepPlan variant today; catch any
+        // future divergence in tests rather than drifting silently
+        debug_assert_eq!(cost, state.remaining_nfes());
+        let submitted = Instant::now();
+        // anchor the arrival-relative deadline to the engine clock so EDF
+        // compares like with like regardless of client clocks
+        let arrival_ms = submitted.saturating_duration_since(self.epoch).as_millis() as u64;
+        let meta = Meta {
+            id: state.req.id,
+            client: state
+                .req
+                .client_id
+                .clone()
+                .unwrap_or_else(|| Arc::from("")),
+            policy: state.req.policy.kind(),
+            priority: state.req.priority,
+            deadline_ms: state
+                .req
+                .deadline_ms
+                .map(|rel| rel.saturating_add(arrival_ms)),
+            cost,
+            max_nfes: cost,
+            submitted,
+            first_exec: None,
+        };
+        let idx = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.states.push(None);
+                self.metas.push(None);
+                self.states.len() - 1
+            }
+        };
+        self.metas[idx] = Some(meta);
         self.enqueue_step(&state, idx);
-        self.states.push(Some(state));
+        self.states[idx] = Some(state);
         self.active += 1;
+        self.queued_nfes += cost;
+        self.telemetry.inc("requests_admitted_total", &[], 1);
+        self.update_gauges();
     }
 
     fn enqueue_step(&mut self, state: &RequestState, idx: usize) {
+        let meta = self.metas[idx].as_ref().expect("meta for live request");
+        let rmeta = RequestMeta {
+            id: meta.id,
+            client: meta.client.clone(),
+            priority: meta.priority,
+            deadline_ms: meta.deadline_ms,
+            remaining_nfes: meta.cost,
+        };
         for (slot, _kind) in state.current_evals().iter().enumerate() {
-            self.queue.push_back(WorkItem {
-                state_idx: idx,
-                slot,
-                model: state.req.model.clone(),
-            });
+            self.sched.push(
+                WorkItem {
+                    state_idx: idx,
+                    slot,
+                    model: state.req.model.clone(),
+                },
+                &rmeta,
+            );
+        }
+    }
+
+    fn update_gauges(&mut self) {
+        self.telemetry
+            .set_gauge("active_requests", &[], self.active as f64);
+        self.telemetry
+            .set_gauge("queue_depth", &[], self.sched.len() as f64);
+        self.telemetry
+            .set_gauge("queued_nfes", &[], self.queued_nfes as f64);
+    }
+
+    fn observe_completion(&mut self, meta: &Meta, done: &Completion, at: Instant) {
+        let policy = meta.policy.as_str();
+        // label cardinality is bounded inside Telemetry (LABEL_VALUE_CAP),
+        // so the raw client id is safe to pass through
+        let client: &str = &meta.client;
+        self.telemetry
+            .inc("nfes_total", &[("policy", policy)], done.nfes as u64);
+        self.telemetry.inc(
+            "nfes_saved_total",
+            &[("policy", policy)],
+            meta.max_nfes.saturating_sub(done.nfes) as u64,
+        );
+        self.telemetry.inc(
+            "requests_completed_total",
+            &[("policy", policy), ("client", client)],
+            1,
+        );
+        if let Some(first) = meta.first_exec {
+            let wait = first.saturating_duration_since(meta.submitted).as_secs_f64() * 1e3;
+            let exec = at.saturating_duration_since(first).as_secs_f64() * 1e3;
+            let (lo, hi, bins) = LATENCY_HIST;
+            self.telemetry
+                .observe("queue_wait_ms", &[("policy", policy)], wait, lo, hi, bins);
+            self.telemetry
+                .observe("execute_ms", &[("policy", policy)], exec, lo, hi, bins);
         }
     }
 
     /// Execute one batch of work items (same model, up to the largest
-    /// bucket) and advance all requests whose step completed. Returns the
-    /// completions this round produced.
+    /// bucket), as chosen by the scheduler, and advance all requests whose
+    /// step completed. Returns the completions this round produced.
     pub fn pump(&mut self) -> Result<Vec<Completion>> {
-        let Some(front) = self.queue.front() else {
+        let Some(model) = self.sched.peek_model() else {
             return Ok(Vec::new());
         };
-        let model = front.model.clone();
         let max_bucket = self.backend.max_batch(&model);
+        let batch_items = self.sched.take_batch(&model, max_bucket);
+        // a scheduler that peeks a model but hands back nothing would spin
+        // `drain` forever — surface the bug as an error instead
+        anyhow::ensure!(
+            !batch_items.is_empty(),
+            "scheduler `{}` peeked model `{model}` but returned an empty batch",
+            self.sched.name()
+        );
 
-        // take up to max_bucket items for this model, preserving FIFO order
-        // for the rest.
-        let mut batch_items = Vec::new();
-        let mut rest = VecDeque::new();
-        while let Some(item) = self.queue.pop_front() {
-            if item.model == model && batch_items.len() < max_bucket {
-                batch_items.push(item);
-            } else {
-                rest.push_back(item);
+        // queue-wait accounting: a request starts executing at its first
+        // batched item
+        let exec_start = Instant::now();
+        for it in &batch_items {
+            let meta = self.metas[it.state_idx].as_mut().expect("meta for queued item");
+            if meta.first_exec.is_none() {
+                meta.first_exec = Some(exec_start);
             }
         }
-        self.queue = rest;
 
         // build inputs
         let inputs: Vec<_> = batch_items
@@ -147,9 +356,16 @@ impl<B: Backend> Engine<B> {
             .collect();
 
         let outputs = self.backend.denoise(&model, &inputs)?;
-        self.stats.batches += 1;
-        self.stats.items += inputs.len();
-        self.stats.occupancy.add(inputs.len() as f64);
+        self.batches += 1;
+        self.items += inputs.len();
+        self.telemetry.observe(
+            "batch_occupancy",
+            &[],
+            inputs.len() as f64,
+            0.5,
+            self.max_bucket as f64 + 0.5,
+            self.max_bucket,
+        );
 
         // deliver results; collect which states finished their step
         let mut ready = Vec::new();
@@ -158,23 +374,40 @@ impl<B: Backend> Engine<B> {
             if st.deliver(item.slot, eps) {
                 ready.push(item.state_idx);
             }
+            let meta = self.metas[item.state_idx].as_mut().unwrap();
+            meta.cost = meta.cost.saturating_sub(1);
+            self.queued_nfes = self.queued_nfes.saturating_sub(1);
         }
 
         // advance completed steps (a state can appear once — all its slots
         // deliver before `deliver` returns true exactly once).
         let mut completions = Vec::new();
+        let done_at = Instant::now();
         for idx in ready {
             let st = self.states[idx].as_mut().unwrap();
             if let Some(done) = st.complete_step() {
                 self.states[idx] = None;
                 self.active -= 1;
+                self.sched.forget(idx);
+                self.free.push(idx);
+                let meta = self.metas[idx].take().expect("meta for completed request");
+                self.queued_nfes = self.queued_nfes.saturating_sub(meta.cost);
+                self.observe_completion(&meta, &done, done_at);
                 completions.push(done);
             } else {
                 let st = self.states[idx].take().unwrap();
+                // re-estimate before re-queueing: this is where a policy
+                // truncation reaches the scheduler's cost signal
+                let meta = self.metas[idx].as_mut().unwrap();
+                let old_cost = meta.cost;
+                let new_cost = st.remaining_nfes();
+                meta.cost = new_cost;
+                self.queued_nfes = self.queued_nfes.saturating_sub(old_cost) + new_cost;
                 self.enqueue_step(&st, idx);
                 self.states[idx] = Some(st);
             }
         }
+        self.update_gauges();
         Ok(completions)
     }
 
@@ -205,6 +438,7 @@ mod tests {
     use super::*;
     use crate::backend::{Backend, EvalInput, GmmBackend};
     use crate::coordinator::policy::{ag, cfg, cond_only, PolicyRef};
+    use crate::sched::SchedulerKind;
     use crate::sim::gmm::Gmm;
 
     fn engine() -> Engine<GmmBackend> {
@@ -259,6 +493,7 @@ mod tests {
         assert_eq!(out[0].nfes, 20);
         assert_eq!(out[0].cfg_steps, 10);
         assert_eq!(out[0].image.len(), 8);
+        assert!(out[0].policy.starts_with("cfg("), "{}", out[0].policy);
     }
 
     #[test]
@@ -305,8 +540,8 @@ mod tests {
         assert_eq!(out.len(), 8);
         // 8 requests * 2 evals = 16 items per step → exactly one max-bucket
         // batch per step round.
-        assert!(e.stats.mean_occupancy() > 15.9, "{}", e.stats.mean_occupancy());
-        assert_eq!(e.stats.items, 8 * 10 * 2);
+        assert!(e.mean_occupancy() > 15.9, "{}", e.mean_occupancy());
+        assert_eq!(e.items(), 8 * 10 * 2);
     }
 
     #[test]
@@ -321,8 +556,8 @@ mod tests {
         let out = e.run(reqs).unwrap();
         let total: usize = out.iter().map(|c| c.nfes).sum();
         assert!(total < 8 * 20, "AG saved nothing: {total}");
-        assert_eq!(e.stats.items, total);
-        assert!(e.stats.mean_occupancy() >= 8.0);
+        assert_eq!(e.items(), total);
+        assert!(e.mean_occupancy() >= 8.0);
     }
 
     #[test]
@@ -366,5 +601,94 @@ mod tests {
         let mut e = engine();
         assert!(e.run(vec![]).unwrap().is_empty());
         assert!(e.pump().unwrap().is_empty());
+    }
+
+    #[test]
+    fn admission_budget_sheds_load_but_in_flight_completes() {
+        let be = GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05));
+        let adm = Admission {
+            max_in_flight: Some(1),
+            max_queued_nfes: Some(40),
+        };
+        let mut e = Engine::with_scheduler(be, SchedulerKind::Fifo.build(), adm).unwrap();
+        e.try_submit(req(0, 1, cfg(2.0))).unwrap(); // cost 20 ≤ 40
+        let err = e.try_submit(req(1, 2, cfg(2.0))).unwrap_err();
+        assert!(err.to_string().contains("queue full"), "{err}");
+        // the in-flight request is unaffected and completes
+        let done = e.drain().unwrap();
+        assert_eq!(done.len(), 1);
+        // capacity freed → admissible again
+        e.try_submit(req(2, 2, cfg(2.0))).unwrap();
+        assert_eq!(e.drain().unwrap().len(), 1);
+        assert_eq!(e.telemetry().counter("requests_rejected_total", &[]), 1);
+        assert_eq!(e.telemetry().counter("requests_admitted_total", &[]), 2);
+    }
+
+    #[test]
+    fn completed_slots_are_reused() {
+        let mut e = engine();
+        for i in 0..3 {
+            let out = e.run(vec![req(i, 1, cfg(2.0))]).unwrap();
+            assert_eq!(out[0].id, i);
+        }
+        assert_eq!(e.state_slots(), 1, "completed slot must be recycled");
+        assert_eq!(e.queued_nfes(), 0);
+    }
+
+    #[test]
+    fn client_label_cardinality_is_capped() {
+        use crate::sched::telemetry::LABEL_VALUE_CAP;
+        let mut e = engine();
+        let n = LABEL_VALUE_CAP as u64 + 8;
+        for i in 0..n {
+            let mut r = Request::new(i, "gmm", vec![1, 0, 0, 0], i, 2, cond_only());
+            r.client_id = Some(Arc::from(format!("client-{i:04}")));
+            e.submit(r);
+        }
+        assert_eq!(e.drain().unwrap().len() as u64, n);
+        let t = e.telemetry();
+        // fifo completes in id order: the first CAP clients keep their own
+        // label, the 8 beyond the cap collapse into `other`
+        assert_eq!(
+            t.counter("requests_completed_total", &[("policy", "cond"), ("client", "other")]),
+            8
+        );
+        assert_eq!(
+            t.counter(
+                "requests_completed_total",
+                &[("policy", "cond"), ("client", "client-0000")]
+            ),
+            1
+        );
+    }
+
+    #[test]
+    fn telemetry_tracks_per_policy_nfes_and_latency() {
+        let mut e = engine();
+        e.run(vec![
+            req_seeded(0, 1, cfg(2.0)),
+            req_seeded(1, 1, ag(2.0, 0.995)),
+        ])
+        .unwrap();
+        let t = e.telemetry();
+        assert_eq!(t.counter("nfes_total", &[("policy", "cfg")]), 20);
+        let ag_nfes = t.counter("nfes_total", &[("policy", "ag")]);
+        assert!(ag_nfes < 20, "{ag_nfes}");
+        assert_eq!(t.counter_sum("nfes_total") as usize, e.items());
+        assert_eq!(t.counter("nfes_saved_total", &[("policy", "ag")]), 20 - ag_nfes);
+        assert_eq!(t.counter("nfes_saved_total", &[("policy", "cfg")]), 0);
+        assert_eq!(
+            t.counter("requests_completed_total", &[("policy", "ag"), ("client", "")]),
+            1
+        );
+        assert_eq!(t.hist_count("queue_wait_ms", &[("policy", "ag")]), 1);
+        assert_eq!(t.hist_count("execute_ms", &[("policy", "cfg")]), 1);
+        // gauges settle back to empty
+        assert_eq!(t.gauge("active_requests", &[]), Some(0.0));
+        assert_eq!(t.gauge("queued_nfes", &[]), Some(0.0));
+        // the stats snapshot is valid JSON
+        let text = crate::util::json::to_string(&e.stats_json());
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(v.req("scheduler").as_str(), Some("fifo"));
     }
 }

@@ -9,7 +9,9 @@
 //!   API (no engine changes)
 //! * [`solver`] — cosine-VP schedule + DPM-Solver++(2M) coefficient folding
 //! * [`request`] — per-request state machine (combine, policy state, history)
-//! * [`engine`] — continuation batching of NFE work items over a [`crate::Backend`]
+//! * [`engine`] — continuation batching of NFE work items over a
+//!   [`crate::Backend`], ordered by a pluggable [`crate::sched::Scheduler`]
+//!   with admission control and telemetry ([`crate::sched`])
 
 pub mod engine;
 pub mod ext;

@@ -196,6 +196,15 @@ pub trait Policy: fmt::Debug + Send + Sync {
     /// any constructed policy can be serialized and rebuilt by the registry.
     fn spec(&self) -> PolicySpec;
 
+    /// The wire kind alone (`spec().kind`) — the per-request telemetry
+    /// label, taken on every admission. The default derives it from
+    /// [`Self::spec`]; policies whose spec carries heavyweight parameters
+    /// (e.g. LINEARAG's coefficient matrix) override it to skip the
+    /// serialization.
+    fn kind(&self) -> String {
+        self.spec().kind
+    }
+
     /// Box into the shared handle the engine consumes.
     fn into_ref(self) -> PolicyRef
     where
@@ -393,6 +402,12 @@ impl Policy for LinearAg {
             .with("s", json::num(self.s as f64))
             .with("coeffs", self.coeffs.to_json())
     }
+
+    fn kind(&self) -> String {
+        // spec() serializes the whole coefficient matrix — far too heavy
+        // for a per-admission label
+        "linear-ag".into()
+    }
 }
 
 /// An explicit per-step choice sequence, as produced by the NAS search
@@ -426,6 +441,10 @@ impl Policy for Searched {
             })
             .collect();
         PolicySpec::new("searched").with("choices", json::arr(choices))
+    }
+
+    fn kind(&self) -> String {
+        "searched".into()
     }
 }
 

@@ -6,6 +6,8 @@
 //! and this state machine; all guidance semantics live in the policy trait
 //! (`policy.rs`) — this file never inspects which policy it is running.
 
+use std::sync::Arc;
+
 use crate::backend::EvalInput;
 use crate::coordinator::policy::{PolicyRef, PolicyState, StepObservation, StepPlan};
 use crate::coordinator::solver::{self, StepCoefs};
@@ -17,8 +19,9 @@ use crate::util::rng::Rng;
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
-    /// backend model name (e.g. "dit_b", "dit_edit", "gmm")
-    pub model: String,
+    /// backend model name (e.g. "dit_b", "dit_edit", "gmm") — interned so
+    /// per-step work items share it by refcount instead of re-allocating
+    pub model: Arc<str>,
     /// condition tokens
     pub tokens: Vec<i32>,
     /// negative prompt: used in place of the null tokens for the
@@ -38,6 +41,15 @@ pub struct Request {
     /// explicit starting noise (overrides the seed-derived x_T); used by the
     /// python-parity integration tests and replication experiments
     pub init_noise: Option<Vec<f32>>,
+    /// client/connection identity for fair-share scheduling and the
+    /// `client=` telemetry label (None = anonymous shared lane)
+    pub client_id: Option<Arc<str>>,
+    /// scheduling priority (larger = more important; `deadline` tie-break)
+    pub priority: i32,
+    /// optional deadline for the EDF scheduler, in milliseconds *from
+    /// arrival* — the engine anchors it to its own clock at admission, so
+    /// client clocks never enter the ordering
+    pub deadline_ms: Option<u64>,
 }
 
 impl Request {
@@ -46,7 +58,7 @@ impl Request {
                policy: PolicyRef) -> Request {
         Request {
             id,
-            model: model.to_owned(),
+            model: Arc::from(model),
             tokens,
             neg_tokens: None,
             src_image: None,
@@ -56,6 +68,9 @@ impl Request {
             record_trajectory: false,
             record_iterates: false,
             init_noise: None,
+            client_id: None,
+            priority: 0,
+            deadline_ms: None,
         }
     }
 }
@@ -79,6 +94,9 @@ pub enum EvalKind {
 #[derive(Debug, Clone)]
 pub struct Completion {
     pub id: u64,
+    /// display name of the policy that served the request (echoed by the
+    /// server so clients can attribute per-policy costs)
+    pub policy: String,
     /// final data prediction x0 (flat)
     pub image: Vec<f32>,
     pub nfes: usize,
@@ -169,6 +187,18 @@ impl RequestState {
     /// Evals required for the current step, in slot order.
     pub fn current_evals(&self) -> Vec<EvalKind> {
         Self::evals_for(&self.plan)
+    }
+
+    /// The engine's cost signal: evaluations still owed by the current
+    /// step plus the plan-sequence cost of every future step under the
+    /// *live* policy state. Exact for deterministic policies; for adaptive
+    /// ones it is the no-further-truncation upper bound, which tightens
+    /// the moment `observe` truncates — cost-aware scheduling keys off it.
+    pub fn remaining_nfes(&self) -> usize {
+        self.pending_left
+            + (self.step + 1..self.req.steps)
+                .map(|i| self.req.policy.plan(i, self.req.steps, &self.policy_state).nfes())
+                .sum::<usize>()
     }
 
     /// Current continuous time for the step.
@@ -346,6 +376,7 @@ impl RequestState {
             };
             return Some(Completion {
                 id: self.req.id,
+                policy: self.req.policy.name(),
                 image: std::mem::take(&mut self.x0_prev),
                 nfes: self.nfes,
                 cfg_steps: self.cfg_steps,
@@ -445,6 +476,26 @@ mod tests {
         st.complete_step();
         assert_eq!(st.policy_state.guided_steps, 0);
         assert!(st.policy_state.gammas[0].is_nan());
+    }
+
+    #[test]
+    fn remaining_nfes_tracks_deliveries_and_truncation() {
+        // fresh CFG state: the estimate equals the policy's worst case
+        let mut st = mk_state(cfg(2.0)); // 4 steps → 8 evals
+        assert_eq!(st.remaining_nfes(), 8);
+        st.deliver(0, vec![0.1; 8]);
+        assert_eq!(st.remaining_nfes(), 7);
+        st.deliver(1, vec![0.2; 8]);
+        st.complete_step();
+        assert_eq!(st.remaining_nfes(), 6);
+
+        // AG truncation halves the per-step cost of the remaining steps
+        let mut st = mk_state(ag(2.0, 0.999));
+        assert_eq!(st.remaining_nfes(), 8);
+        st.deliver(0, vec![0.5; 8]);
+        st.deliver(1, vec![0.5; 8]);
+        st.complete_step(); // identical streams → gamma = 1 → truncates
+        assert_eq!(st.remaining_nfes(), 3, "steps 1..3 conditional-only");
     }
 
     #[test]

@@ -20,6 +20,20 @@
 //! plugins; callers can [`PolicyRegistry::register`] additional policies
 //! without touching anything else — the registry is the single point where
 //! a new policy becomes reachable from every front-end.
+//!
+//! The registry can also be extended at startup with named *aliases* —
+//! presets that expand to a full spec. `agd serve --policy-file FILE`
+//! loads them from a JSON object mapping alias → spec:
+//!
+//! ```text
+//! {"fast-ag": {"kind": "ag", "gamma_bar": 0.997, "s": 5.0},
+//!  "bulk": "cond"}
+//! ```
+//!
+//! Aliases are validated at load time (unknown kind / bad parameters fail
+//! at startup, not on first request) and resolve before server defaults
+//! apply, so a request's explicit parameters override the preset's and the
+//! preset's override the server's.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -289,6 +303,8 @@ type Builder = Box<dyn Fn(&PolicySpec) -> Result<PolicyRef, SpecError> + Send + 
 /// Constructs policies by wire name. See module docs.
 pub struct PolicyRegistry {
     builders: BTreeMap<String, Builder>,
+    /// Named presets: alias → the spec it expands to (see module docs).
+    aliases: BTreeMap<String, PolicySpec>,
 }
 
 impl fmt::Debug for PolicyRegistry {
@@ -304,6 +320,7 @@ impl PolicyRegistry {
     pub fn new() -> PolicyRegistry {
         PolicyRegistry {
             builders: BTreeMap::new(),
+            aliases: BTreeMap::new(),
         }
     }
 
@@ -381,15 +398,153 @@ impl PolicyRegistry {
         self.builders.insert(name.to_owned(), Box::new(builder));
     }
 
-    /// Registered wire names, sorted.
-    pub fn names(&self) -> Vec<String> {
-        self.builders.keys().cloned().collect()
+    /// Register a named alias: a preset spec the alias expands to. The
+    /// target is validated *now* — an unknown kind or bad parameters are a
+    /// registration error, so a typo fails at registration rather than on
+    /// the first request. Alias names must not shadow a registered
+    /// builder, and an alias referencing another alias must be registered
+    /// *after* its target (use [`Self::load_alias_file`] for
+    /// order-independent bulk loading).
+    pub fn register_alias(&mut self, name: &str, target: PolicySpec) -> Result<(), SpecError> {
+        if self.builders.contains_key(canonical(name)) {
+            return Err(SpecError::BadSpec {
+                msg: format!("alias `{name}` shadows a registered policy"),
+            });
+        }
+        // full dry-run build so every parameter is checked
+        let resolved = self.resolve(&target)?;
+        match self.builders.get(canonical(&resolved.kind)) {
+            Some(b) => b(&resolved).map(|_| ())?,
+            None => {
+                return Err(SpecError::UnknownPolicy {
+                    kind: resolved.kind.clone(),
+                    known: self.names(),
+                })
+            }
+        }
+        self.aliases.insert(name.to_owned(), target);
+        Ok(())
     }
 
-    /// Construct the policy a spec describes.
+    /// Extend the registry with aliases from a JSON file mapping alias →
+    /// spec (object or bare-name string; see module docs). Returns how
+    /// many aliases were loaded; any unreadable file, non-object document,
+    /// or invalid spec is an error.
+    ///
+    /// Loading is two-pass — every name is registered before any target is
+    /// validated — so aliases may reference each other regardless of their
+    /// order in the file (unlike [`Self::register_alias`], which validates
+    /// eagerly and therefore needs dependency order). On any error the
+    /// registry is left exactly as it was.
+    pub fn load_alias_file(&mut self, path: &str) -> Result<usize, SpecError> {
+        let text = std::fs::read_to_string(path).map_err(|e| SpecError::BadSpec {
+            msg: format!("policy file `{path}`: {e}"),
+        })?;
+        let v = json::parse(&text).map_err(|e| SpecError::BadSpec {
+            msg: format!("policy file `{path}`: {e}"),
+        })?;
+        let Some(entries) = v.as_obj() else {
+            return Err(SpecError::BadSpec {
+                msg: format!("policy file `{path}`: expected an object of alias → spec"),
+            });
+        };
+        // pass 1: parse + insert every alias name, remembering what each
+        // insertion displaced so an error can restore the exact prior state
+        let mut added: Vec<(String, Option<PolicySpec>)> = Vec::new();
+        let mut first_err: Option<SpecError> = None;
+        for (alias, spec_json) in entries {
+            if self.builders.contains_key(canonical(alias)) {
+                first_err = Some(SpecError::BadSpec {
+                    msg: format!(
+                        "policy file `{path}`, alias `{alias}`: shadows a registered policy"
+                    ),
+                });
+                break;
+            }
+            match PolicySpec::from_json(spec_json) {
+                Ok(target) => {
+                    let prev = self.aliases.insert(alias.clone(), target);
+                    added.push((alias.clone(), prev));
+                }
+                Err(e) => {
+                    first_err = Some(SpecError::BadSpec {
+                        msg: format!("policy file `{path}`, alias `{alias}`: {e}"),
+                    });
+                    break;
+                }
+            }
+        }
+        // pass 2: validate each alias by a dry-run build (resolves chains
+        // and trips the cycle guard)
+        if first_err.is_none() {
+            for (alias, _) in &added {
+                if let Err(e) = self.build(&PolicySpec::new(alias)) {
+                    first_err = Some(SpecError::BadSpec {
+                        msg: format!("policy file `{path}`, alias `{alias}`: {e}"),
+                    });
+                    break;
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            // unwind newest-first so re-inserted entries win over removals
+            for (alias, prev) in added.into_iter().rev() {
+                match prev {
+                    Some(spec) => {
+                        self.aliases.insert(alias, spec);
+                    }
+                    None => {
+                        self.aliases.remove(&alias);
+                    }
+                }
+            }
+            return Err(e);
+        }
+        Ok(added.len())
+    }
+
+    /// Expand aliases: while the spec's kind names an alias, merge the
+    /// spec's parameters *over* the alias target's (explicit request
+    /// values beat preset values) and continue with the target's kind.
+    /// Non-alias kinds pass through untouched; [`Self::build`] reports
+    /// unknown ones. Front-ends that inject their own defaults (the
+    /// server) resolve first so presets beat server defaults.
+    pub fn resolve(&self, spec: &PolicySpec) -> Result<PolicySpec, SpecError> {
+        let mut cur = spec.clone();
+        let mut hops = 0;
+        while let Some(target) = self.aliases.get(canonical(&cur.kind)) {
+            hops += 1;
+            if hops > 8 {
+                return Err(SpecError::BadSpec {
+                    msg: format!("policy alias cycle at `{}`", cur.kind),
+                });
+            }
+            let mut merged = target.clone();
+            for (k, v) in cur.params {
+                merged.params.insert(k, v);
+            }
+            cur = merged;
+        }
+        Ok(cur)
+    }
+
+    /// Registered wire names (builders and aliases), sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .builders
+            .keys()
+            .chain(self.aliases.keys())
+            .cloned()
+            .collect();
+        names.sort();
+        names
+    }
+
+    /// Construct the policy a spec describes (aliases resolve first).
     pub fn build(&self, spec: &PolicySpec) -> Result<PolicyRef, SpecError> {
+        let spec = self.resolve(spec)?;
         match self.builders.get(canonical(&spec.kind)) {
-            Some(b) => b(spec),
+            Some(b) => b(&spec),
             None => Err(SpecError::UnknownPolicy {
                 kind: spec.kind.clone(),
                 known: self.names(),
@@ -491,6 +646,8 @@ mod tests {
             assert_eq!(spec2, p1.spec(), "{text}");
             let p2 = reg.build(&spec2).unwrap();
             assert_eq!(p1.name(), p2.name());
+            // the cheap label accessor must agree with the full spec
+            assert_eq!(p1.kind(), p1.spec().kind);
             // identical plan sequences under a fresh state
             let st = PolicyState::new();
             for i in 0..8 {
@@ -571,6 +728,131 @@ mod tests {
             .build(&PolicySpec::new("pix2pix").with("gamma_bar", Value::Null))
             .unwrap();
         assert_eq!(p.name(), "pix2pix");
+    }
+
+    #[test]
+    fn aliases_expand_with_request_params_winning() {
+        let mut reg = PolicyRegistry::builtin();
+        reg.register_alias(
+            "fast-ag",
+            PolicySpec::new("ag")
+                .with("gamma_bar", json::num(0.5))
+                .with("s", json::num(3.0)),
+        )
+        .unwrap();
+        assert!(reg.names().contains(&"fast-ag".to_owned()));
+        // bare use: the preset's parameters apply
+        let p = reg.build(&PolicySpec::new("fast-ag")).unwrap();
+        assert_eq!(p.name(), "ag(ḡ=0.5)");
+        // explicit request params override the preset
+        let p = reg
+            .build(&PolicySpec::new("fast-ag").with("gamma_bar", json::num(0.9)))
+            .unwrap();
+        assert_eq!(p.name(), "ag(ḡ=0.9)");
+        // resolve() exposes the merged spec so front-ends can layer their
+        // defaults *under* the preset
+        let spec = reg.resolve(&PolicySpec::new("fast-ag")).unwrap();
+        assert_eq!(spec.canonical_kind(), "ag");
+        assert_eq!(spec.f64_or("s", 0.0).unwrap(), 3.0);
+        // unknown kinds pass through resolve and fail at build with the
+        // full name list (aliases included)
+        let err = reg.build(&PolicySpec::new("warp")).unwrap_err();
+        match err {
+            SpecError::UnknownPolicy { known, .. } => {
+                assert!(known.contains(&"fast-ag".to_owned()));
+            }
+            other => panic!("expected UnknownPolicy, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_aliases_fail_at_registration() {
+        let mut reg = PolicyRegistry::builtin();
+        // unknown target kind
+        assert!(reg.register_alias("x", PolicySpec::new("warp")).is_err());
+        // bad parameter type
+        assert!(reg
+            .register_alias("y", PolicySpec::new("cfg").with("s", json::s("seven")))
+            .is_err());
+        // missing required field
+        assert!(reg.register_alias("z", PolicySpec::new("searched")).is_err());
+        // shadowing a builtin
+        assert!(reg.register_alias("cfg", PolicySpec::new("ag")).is_err());
+        // nothing leaked into the name list
+        assert_eq!(reg.names(), PolicyRegistry::builtin().names());
+    }
+
+    #[test]
+    fn alias_file_round_trip() {
+        let path = std::env::temp_dir().join("agd_policy_aliases_test.json");
+        std::fs::write(
+            &path,
+            r#"{"bulk": "cond",
+                "fast-ag": {"kind": "ag", "gamma_bar": 0.9, "s": 2.0}}"#,
+        )
+        .unwrap();
+        let mut reg = PolicyRegistry::builtin();
+        let n = reg.load_alias_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(reg.build(&PolicySpec::new("bulk")).unwrap().name(), "cond-only");
+        assert_eq!(
+            reg.build(&PolicySpec::new("fast-ag")).unwrap().name(),
+            "ag(ḡ=0.9)"
+        );
+        std::fs::remove_file(&path).ok();
+        // unreadable file / bad document are startup errors
+        assert!(reg.load_alias_file("/nonexistent/aliases.json").is_err());
+        let bad = std::env::temp_dir().join("agd_policy_aliases_bad.json");
+        std::fs::write(&bad, "[1, 2]").unwrap();
+        assert!(reg.load_alias_file(bad.to_str().unwrap()).is_err());
+        std::fs::remove_file(&bad).ok();
+    }
+
+    #[test]
+    fn alias_file_chains_load_regardless_of_order() {
+        // "a-fast" references "base" but sorts before it — two-pass
+        // loading must still accept the file.
+        let path = std::env::temp_dir().join("agd_policy_aliases_chain.json");
+        std::fs::write(
+            &path,
+            r#"{"a-fast": {"kind": "base", "s": 3.0},
+                "base": {"kind": "ag", "gamma_bar": 0.9}}"#,
+        )
+        .unwrap();
+        let mut reg = PolicyRegistry::builtin();
+        assert_eq!(reg.load_alias_file(path.to_str().unwrap()).unwrap(), 2);
+        let p = reg.build(&PolicySpec::new("a-fast")).unwrap();
+        assert_eq!(p.name(), "ag(ḡ=0.9)");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_alias_file_leaves_the_registry_untouched() {
+        let path = std::env::temp_dir().join("agd_policy_aliases_partial.json");
+        // "good" is fine on its own, but "missing" targets an unknown kind
+        std::fs::write(
+            &path,
+            r#"{"good": "cond", "missing": {"kind": "warp"}}"#,
+        )
+        .unwrap();
+        let mut reg = PolicyRegistry::builtin();
+        // a pre-existing alias that the failing file tries to redefine
+        reg.register_alias("good", PolicySpec::new("cfg").with("s", json::num(9.0)))
+            .unwrap();
+        assert!(reg.load_alias_file(path.to_str().unwrap()).is_err());
+        // the failed load restored the *prior* definition, not deleted it
+        assert_eq!(reg.build(&PolicySpec::new("good")).unwrap().name(), "cfg(s=9)");
+        assert!(reg.build(&PolicySpec::new("missing")).is_err());
+        std::fs::remove_file(&path).ok();
+
+        // alias-to-alias cycles are caught at load, not first request
+        let before = reg.names();
+        let cyc = std::env::temp_dir().join("agd_policy_aliases_cycle.json");
+        std::fs::write(&cyc, r#"{"ping": "pong", "pong": "ping"}"#).unwrap();
+        let err = reg.load_alias_file(cyc.to_str().unwrap()).unwrap_err();
+        assert!(err.to_string().contains("cycle"), "{err}");
+        assert_eq!(reg.names(), before);
+        std::fs::remove_file(&cyc).ok();
     }
 
     #[test]

@@ -74,8 +74,8 @@ pub fn run_policy<B: Backend>(
     spec: &RunSpec,
     policy: PolicyRef,
 ) -> Result<PolicyRun> {
-    let batches_before = engine.stats.batches;
-    let items_before = engine.stats.items;
+    let batches_before = engine.batches();
+    let items_before = engine.items();
     let reqs: Vec<Request> = prompts
         .iter()
         .enumerate()
@@ -97,8 +97,8 @@ pub fn run_policy<B: Backend>(
     let started = Instant::now();
     let completions = engine.run(reqs)?;
     let wall = started.elapsed();
-    let batches = engine.stats.batches - batches_before;
-    let items = engine.stats.items - items_before;
+    let batches = engine.batches() - batches_before;
+    let items = engine.items() - items_before;
     Ok(PolicyRun {
         name: policy.name(),
         completions,

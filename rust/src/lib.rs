@@ -33,6 +33,23 @@
 //! [`coordinator::ext`] shows the extension path: two follow-up-literature
 //! policies implemented purely as plugins.
 //!
+//! ## The scheduling layer
+//!
+//! Because policies make per-request cost dynamic, the engine schedules
+//! work through a pluggable [`Scheduler`] ([`sched`]): `fifo` (default,
+//! bit-identical to strict arrival order), `cost-aware`
+//! (shortest-remaining-NFE-first on the live per-request estimate),
+//! `deadline` (EDF) and `fair-share` (round-robin client lanes). An
+//! [`Admission`] budget sheds load past the queued-NFE limit with a
+//! structured `queue_full` error, and a [`Telemetry`] registry
+//! (`{"cmd": "stats"}` over the wire) tracks occupancy, queue depth and
+//! per-policy NFE savings:
+//!
+//! ```text
+//! agd serve --scheduler cost-aware --max-queued-nfes 4000 \
+//!     --policy-file presets.json
+//! ```
+//!
 //! Start with [`coordinator::engine::Engine`] and the constructor helpers
 //! in [`coordinator::policy`] (`cfg`, `ag`, …); see
 //! `examples/quickstart.rs`.
@@ -47,6 +64,7 @@ pub mod prompts;
 pub mod quality;
 pub mod render;
 pub mod runtime;
+pub mod sched;
 pub mod search;
 pub mod server;
 pub mod sim;
@@ -60,3 +78,4 @@ pub use coordinator::engine::Engine;
 pub use coordinator::policy::{Policy, PolicyRef, PolicyState, StepObservation, StepPlan};
 pub use coordinator::request::{Completion, Request};
 pub use coordinator::spec::{PolicyRegistry, PolicySpec, SpecError};
+pub use sched::{Admission, AdmitError, Scheduler, SchedulerKind, Telemetry};

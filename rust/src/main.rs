@@ -20,8 +20,9 @@ use adaptive_guidance::coordinator::spec::{PolicyRegistry, PolicySpec};
 use adaptive_guidance::ols;
 use adaptive_guidance::prompts::{self, Prompt};
 use adaptive_guidance::runtime::PjrtBackend;
+use adaptive_guidance::sched::{Admission, SchedulerKind};
 use adaptive_guidance::search;
-use adaptive_guidance::server::{serve, ServerConfig};
+use adaptive_guidance::server::{serve_with_registry, ServerConfig};
 use adaptive_guidance::util::cli::Args;
 use adaptive_guidance::util::json;
 use adaptive_guidance::util::ppm;
@@ -36,7 +37,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "search" => cmd_search(&args),
         "fit-ols" => cmd_fit_ols(&args),
-        "help" | _ => {
+        _ => {
             print_help();
             Ok(())
         }
@@ -63,6 +64,10 @@ fn print_help() {
          generate: --prompt TEXT --negative TEXT --policy P\n\
            --steps N --seed N --n N --out DIR\n\
          serve:    --addr HOST:PORT\n\
+           --scheduler fifo|cost-aware|deadline|fair-share (default fifo)\n\
+           --max-queued-nfes N  shed with queue_full past N queued evals (0 = off)\n\
+           --max-in-flight N    cap concurrent requests (0 = off)\n\
+           --policy-file FILE   register policy aliases from JSON at startup\n\
          search:   --iters N --lr F --seed N --out FILE\n\
          fit-ols:  --train N --test N --steps N --out FILE"
     );
@@ -166,7 +171,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         total_nfes,
         total_nfes as f64 / completions.len() as f64,
         elapsed,
-        engine.stats.mean_occupancy()
+        engine.mean_occupancy()
     );
     Ok(())
 }
@@ -174,21 +179,41 @@ fn cmd_generate(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let model = args.get_or("model", "dit_b").to_owned();
     let dir = artifacts_dir(args);
+    let scheduler = SchedulerKind::parse(args.get_or("scheduler", "fifo"))
+        .map_err(|e| anyhow!("--scheduler: {e}"))?;
+    // 0 = unlimited, matching the historical unbounded queue
+    let nonzero = |n: usize| if n == 0 { None } else { Some(n) };
+    let admission = Admission {
+        max_in_flight: nonzero(args.usize("max-in-flight", 0)),
+        max_queued_nfes: nonzero(args.usize("max-queued-nfes", 0)),
+    };
     let cfg = ServerConfig {
         addr: args.get_or("addr", "127.0.0.1:7458").to_owned(),
         model: model.clone(),
         default_steps: args.usize("steps", 20),
         default_guidance: args.f64("guidance", 7.5),
         default_gamma_bar: args.f64("gamma-bar", 0.9988),
+        scheduler,
+        admission,
     };
+    // named policy presets extend the registry before the first request —
+    // a bad file is a startup error, not a first-request surprise
+    let mut registry = PolicyRegistry::builtin();
+    if let Some(path) = args.get("policy-file") {
+        let n = registry
+            .load_alias_file(path)
+            .map_err(|e| anyhow!("--policy-file: {e}"))?;
+        eprintln!("loaded {n} policy aliases from {path}");
+    }
     // the PJRT client is thread-affine: construct it inside the engine thread
-    serve(
+    serve_with_registry(
         move || {
             let mut be = PjrtBackend::load(&dir)?;
             be.warmup(&model)?;
             Ok(be)
         },
         cfg,
+        std::sync::Arc::new(registry),
     )
 }
 

@@ -19,7 +19,7 @@ impl Summary {
     pub fn row(&self) -> Vec<String> {
         vec![
             self.name.clone(),
-            format!("{}", self.iters),
+            self.iters.to_string(),
             format!("{:.3}", self.mean_ms),
             format!("{:.3}", self.p50_ms),
             format!("{:.3}", self.p95_ms),

@@ -1,0 +1,148 @@
+//! Admission control: bounded queues instead of unbounded buffering.
+//!
+//! The engine's work queue used to grow without limit — under the heavy
+//! open-loop traffic of the ROADMAP's north star that means unbounded
+//! memory *and* unbounded queue-wait. [`Admission`] caps the queue on two
+//! axes: requests in flight and total queued NFEs (the honest unit of
+//! pending work, since policies make per-request cost dynamic — a CFG
+//! request queues 2·T evals, a truncated AG request far fewer). A request
+//! that would exceed either budget is rejected with a typed
+//! [`AdmitError`], which the server surfaces as a structured `queue_full`
+//! JSON error; in-flight requests are never affected.
+
+use std::fmt;
+
+/// Queue budgets. `None` on an axis means unlimited (the default — engine
+/// embedders like the drain-mode benches pre-load thousands of requests on
+/// purpose).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Admission {
+    /// Maximum requests in flight (queued or executing).
+    pub max_in_flight: Option<usize>,
+    /// Maximum total queued NFEs, counting the candidate's worst case.
+    pub max_queued_nfes: Option<usize>,
+}
+
+impl Admission {
+    /// No budgets: everything is admitted.
+    pub fn unlimited() -> Admission {
+        Admission::default()
+    }
+
+    /// Budget check for one candidate request costing up to `request_nfes`
+    /// evaluations, against the engine's current load.
+    pub fn check(
+        &self,
+        in_flight: usize,
+        queued_nfes: usize,
+        request_nfes: usize,
+    ) -> Result<(), AdmitError> {
+        if let Some(max) = self.max_in_flight {
+            if in_flight >= max {
+                return Err(AdmitError::InFlightFull { in_flight, max });
+            }
+        }
+        if let Some(max) = self.max_queued_nfes {
+            if queued_nfes + request_nfes > max {
+                return Err(AdmitError::NfeBudgetFull {
+                    queued_nfes,
+                    request_nfes,
+                    max,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Why a request was shed. The server maps any variant to a `queue_full`
+/// error line carrying these numbers, so clients can back off proportionally.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitError {
+    InFlightFull {
+        in_flight: usize,
+        max: usize,
+    },
+    NfeBudgetFull {
+        queued_nfes: usize,
+        request_nfes: usize,
+        max: usize,
+    },
+}
+
+impl fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmitError::InFlightFull { in_flight, max } => write!(
+                f,
+                "queue full: {in_flight} requests in flight (limit {max})"
+            ),
+            AdmitError::NfeBudgetFull {
+                queued_nfes,
+                request_nfes,
+                max,
+            } => write!(
+                f,
+                "queue full: {queued_nfes} NFEs queued + {request_nfes} requested \
+                 exceeds the {max} budget"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlimited_admits_everything() {
+        let a = Admission::unlimited();
+        assert!(a.check(1_000_000, usize::MAX / 2, 1000).is_ok());
+    }
+
+    #[test]
+    fn in_flight_budget() {
+        let a = Admission {
+            max_in_flight: Some(2),
+            max_queued_nfes: None,
+        };
+        assert!(a.check(1, 0, 40).is_ok());
+        assert_eq!(
+            a.check(2, 0, 40),
+            Err(AdmitError::InFlightFull { in_flight: 2, max: 2 })
+        );
+    }
+
+    #[test]
+    fn nfe_budget_counts_the_candidate() {
+        let a = Admission {
+            max_in_flight: None,
+            max_queued_nfes: Some(100),
+        };
+        assert!(a.check(5, 60, 40).is_ok()); // exactly at budget
+        assert_eq!(
+            a.check(5, 61, 40),
+            Err(AdmitError::NfeBudgetFull {
+                queued_nfes: 61,
+                request_nfes: 40,
+                max: 100
+            })
+        );
+        // a single oversized request is shed even on an empty queue
+        assert!(a.check(0, 0, 101).is_err());
+    }
+
+    #[test]
+    fn errors_render_the_numbers() {
+        let e = AdmitError::NfeBudgetFull {
+            queued_nfes: 90,
+            request_nfes: 40,
+            max: 100,
+        };
+        let text = e.to_string();
+        assert!(text.contains("90") && text.contains("40") && text.contains("100"), "{text}");
+        assert!(text.contains("queue full"));
+    }
+}

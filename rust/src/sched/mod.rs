@@ -1,0 +1,60 @@
+//! Cost-aware scheduling, admission control and serving telemetry.
+//!
+//! The paper's policies make per-request cost *dynamic*: AG truncates the
+//! unconditional stream mid-request, LINEARAG replaces whole evaluations
+//! with an affine extrapolation, Compress-Guidance-style plugins widen the
+//! spread further. Two requests with the same step count can therefore
+//! differ 2× in remaining work — and a FIFO batcher lets cheap truncated
+//! requests queue behind expensive full-CFG ones, exploding tail latency
+//! under open-loop traffic. This module gives the engine the three serving
+//! controls that exploit the cost signal instead of ignoring it:
+//!
+//!  * [`Scheduler`] ([`scheduler`]) — the ordering discipline over pending
+//!    work items, with four built-ins: [`Fifo`] (default; bit-for-bit the
+//!    historical behaviour), [`CostAware`] (shortest-remaining-NFE-first,
+//!    fed by the live per-request cost estimate), [`Deadline`] (EDF over
+//!    the optional request deadline/priority) and [`FairShare`]
+//!    (round-robin across client lanes).
+//!  * [`Admission`] ([`admission`]) — in-flight and queued-NFE budgets
+//!    that shed load with a structured `queue_full` error instead of
+//!    buffering unboundedly.
+//!  * [`Telemetry`] ([`telemetry`]) — a labelled counter/gauge/histogram
+//!    registry (`policy=`, `client=`) tracking occupancy, queue depth,
+//!    per-policy NFEs saved, and per-request queue-wait vs execute time;
+//!    dumped over the wire by the server's `{"cmd": "stats"}` line.
+//!
+//! `agd serve --scheduler cost-aware --max-queued-nfes 4000` selects the
+//! discipline and budget; `rust/benches/sched_tail_latency.rs` compares
+//! the disciplines under mixed cfg/ag/linear-ag traffic.
+//!
+//! # Adding a scheduler
+//!
+//! Mirrors the adding-a-policy guide in [`crate::coordinator::policy`]:
+//!
+//! 1. Define a struct holding the discipline's queue structure. Per-request
+//!    facts arrive as [`RequestMeta`] snapshots at push time — do not cache
+//!    engine state beyond what `push` hands you.
+//! 2. `impl Scheduler`: `push` enqueues one [`WorkItem`] (a step's slots
+//!    arrive back-to-back, in slot order — keep them adjacent so a step
+//!    completes in as few batches as possible); `peek_model` names the
+//!    model of the batch you would run next; `take_batch(model, cap)`
+//!    removes and returns up to `cap` items of that model in your order;
+//!    `forget` drops per-request bookkeeping. Be deterministic: break ties
+//!    by `RequestMeta::id`, never by map iteration order.
+//! 3. Wire a name into [`SchedulerKind`] (parse/build/ALL) and it becomes
+//!    reachable from `agd serve --scheduler`, the bench harness, and
+//!    [`crate::Engine::with_scheduler`] callers.
+//! 4. Pin behaviour in tests: scheduler-level ordering unit tests here,
+//!    plus an engine-level test in `rust/tests/sched_integration.rs`
+//!    proving end-results stay bit-identical to [`Fifo`] (scheduling must
+//!    reorder *work*, never change *results*).
+
+pub mod admission;
+pub mod scheduler;
+pub mod telemetry;
+
+pub use admission::{Admission, AdmitError};
+pub use scheduler::{
+    CostAware, Deadline, FairShare, Fifo, RequestMeta, Scheduler, SchedulerKind, WorkItem,
+};
+pub use telemetry::Telemetry;

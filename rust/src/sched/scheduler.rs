@@ -1,0 +1,585 @@
+//! The [`Scheduler`] trait and the four built-in scheduling disciplines.
+//!
+//! A scheduler owns the ordering of pending [`WorkItem`]s — single network
+//! evaluations — and decides which request's work the engine packs into the
+//! next batch. The engine is the only caller: it `push`es the items of a
+//! request's current step (all slots, back-to-back, in slot order) together
+//! with a fresh [`RequestMeta`] snapshot, asks `peek_model` which model the
+//! next batch should run, and `take_batch`es up to the backend's bucket
+//! capacity. When a request completes, `forget` drops any per-request
+//! bookkeeping.
+//!
+//! The cost signal: `RequestMeta::remaining_nfes` is the engine's *current*
+//! estimate of the evaluations the request still needs — the policy's plan
+//! sequence under its live [`PolicyState`](crate::PolicyState). Because the
+//! engine re-pushes with a fresh snapshot every step, an AG truncation
+//! (which halves the per-step cost) reaches the scheduler the step after
+//! `observe` fires, exactly when the remaining work actually shrinks.
+//!
+//! Disciplines:
+//!  * [`Fifo`] — strict arrival order; bit-for-bit the engine's historical
+//!    behaviour, and the default.
+//!  * [`CostAware`] — shortest-remaining-NFE-first (SRPT on the cost
+//!    estimate). Under mixed cfg/ag traffic this keeps cheap truncated
+//!    requests from queueing behind expensive full-CFG ones, which is where
+//!    FIFO's tail latency comes from.
+//!  * [`Deadline`] — earliest-deadline-first over the optional per-request
+//!    `deadline_ms`, ties broken by higher `priority`, then arrival id.
+//!    Requests without a deadline sort last.
+//!  * [`FairShare`] — round-robin across `client_id` lanes so one bulk
+//!    client cannot starve interactive ones; within a lane, FIFO.
+
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+use std::sync::Arc;
+
+/// One pending network evaluation: a slot of some request's current step.
+#[derive(Debug, Clone)]
+pub struct WorkItem {
+    /// Engine slot index of the owning request's state.
+    pub state_idx: usize,
+    /// Eval slot within the step's plan.
+    pub slot: usize,
+    /// Backend model the eval runs on (interned — clones are refcounts).
+    pub model: Arc<str>,
+}
+
+/// Per-request scheduling facts, snapshotted by the engine at push time.
+#[derive(Debug, Clone)]
+pub struct RequestMeta {
+    /// Request id (arrival order under a serving front-end) — the ultimate
+    /// deterministic tie-breaker.
+    pub id: u64,
+    /// Client/connection identity for fair-share lanes ("" = anonymous).
+    pub client: Arc<str>,
+    /// Larger = more important; ties under [`Deadline`].
+    pub priority: i32,
+    /// Optional absolute deadline in engine-clock milliseconds (the
+    /// engine anchors the request's arrival-relative deadline at
+    /// admission, so values from different requests are comparable).
+    pub deadline_ms: Option<u64>,
+    /// Current estimate of evaluations this request still needs (see
+    /// module docs).
+    pub remaining_nfes: usize,
+}
+
+/// Ordering discipline over pending work items (see module docs).
+///
+/// Contract: `push` is called with every item of a step before the engine
+/// pumps again; `take_batch(model, cap)` must only return items whose
+/// `model` matches and at most `cap` of them; `forget` is called once per
+/// completed request, after all its items have been taken.
+pub trait Scheduler: fmt::Debug + Send {
+    /// Wire name (matches [`SchedulerKind::parse`]).
+    fn name(&self) -> &'static str;
+
+    /// Enqueue one work item with a fresh snapshot of its request's meta.
+    fn push(&mut self, item: WorkItem, meta: &RequestMeta);
+
+    /// Model of the batch this scheduler would execute next (None = empty).
+    fn peek_model(&self) -> Option<Arc<str>>;
+
+    /// Remove and return up to `cap` items of `model`, in scheduling order.
+    fn take_batch(&mut self, model: &str, cap: usize) -> Vec<WorkItem>;
+
+    /// Drop per-request bookkeeping after the request completes.
+    fn forget(&mut self, _state_idx: usize) {}
+
+    /// Pending item count.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Scheduler selection for configs/CLI (`--scheduler` on `agd serve`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    Fifo,
+    CostAware,
+    Deadline,
+    FairShare,
+}
+
+impl SchedulerKind {
+    /// Every selectable kind, in display order.
+    pub const ALL: [SchedulerKind; 4] = [
+        SchedulerKind::Fifo,
+        SchedulerKind::CostAware,
+        SchedulerKind::Deadline,
+        SchedulerKind::FairShare,
+    ];
+
+    /// Wire name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulerKind::Fifo => "fifo",
+            SchedulerKind::CostAware => "cost-aware",
+            SchedulerKind::Deadline => "deadline",
+            SchedulerKind::FairShare => "fair-share",
+        }
+    }
+
+    /// Parse a wire name; the error lists the valid names.
+    pub fn parse(text: &str) -> Result<SchedulerKind, String> {
+        SchedulerKind::ALL
+            .into_iter()
+            .find(|k| k.name() == text)
+            .ok_or_else(|| {
+                let names: Vec<&str> = SchedulerKind::ALL.iter().map(|k| k.name()).collect();
+                format!("unknown scheduler `{text}` (valid: {})", names.join(", "))
+            })
+    }
+
+    /// Construct a fresh scheduler of this kind.
+    pub fn build(self) -> Box<dyn Scheduler> {
+        match self {
+            SchedulerKind::Fifo => Box::new(Fifo::default()),
+            SchedulerKind::CostAware => Box::new(CostAware::default()),
+            SchedulerKind::Deadline => Box::new(Deadline::default()),
+            SchedulerKind::FairShare => Box::new(FairShare::default()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fifo
+// ---------------------------------------------------------------------------
+
+/// Strict arrival order — the engine's historical behaviour and the
+/// default. With it, completions are byte-identical to the pre-scheduler
+/// engine (the determinism tests pin this).
+#[derive(Debug, Default)]
+pub struct Fifo {
+    queue: VecDeque<WorkItem>,
+}
+
+impl Scheduler for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn push(&mut self, item: WorkItem, _meta: &RequestMeta) {
+        self.queue.push_back(item);
+    }
+
+    fn peek_model(&self) -> Option<Arc<str>> {
+        self.queue.front().map(|it| it.model.clone())
+    }
+
+    fn take_batch(&mut self, model: &str, cap: usize) -> Vec<WorkItem> {
+        // remove the first `cap` items of `model`, preserving the relative
+        // order of everything left behind
+        let mut batch = Vec::new();
+        let mut rest = VecDeque::with_capacity(self.queue.len());
+        while let Some(it) = self.queue.pop_front() {
+            if batch.len() < cap && &*it.model == model {
+                batch.push(it);
+            } else {
+                rest.push_back(it);
+            }
+        }
+        self.queue = rest;
+        batch
+    }
+
+    fn len(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ranked: shared core of CostAware and Deadline
+// ---------------------------------------------------------------------------
+
+/// Items in push order plus one orderable key per request; batches are the
+/// `cap` matching items with the smallest keys (stable — push order breaks
+/// ties, which keeps a step's slots adjacent). O(n log n) per batch, which
+/// is ample at serving queue depths.
+#[derive(Debug, Default)]
+struct Ranked<K: Ord + Copy + fmt::Debug> {
+    items: Vec<WorkItem>,
+    keys: HashMap<usize, K>,
+}
+
+impl<K: Ord + Copy + fmt::Debug> Ranked<K> {
+    fn push(&mut self, item: WorkItem, key: K) {
+        self.keys.insert(item.state_idx, key);
+        self.items.push(item);
+    }
+
+    fn key_of(&self, it: &WorkItem) -> K {
+        *self
+            .keys
+            .get(&it.state_idx)
+            .expect("scheduler invariant: every queued item has a key")
+    }
+
+    fn peek_model(&self) -> Option<Arc<str>> {
+        let mut best: Option<(K, &WorkItem)> = None;
+        for it in &self.items {
+            let k = self.key_of(it);
+            // strict `<` keeps the first occurrence (push order) on ties
+            if best.map_or(true, |(bk, _)| k < bk) {
+                best = Some((k, it));
+            }
+        }
+        best.map(|(_, it)| it.model.clone())
+    }
+
+    fn take_batch(&mut self, model: &str, cap: usize) -> Vec<WorkItem> {
+        let mut idxs: Vec<usize> = (0..self.items.len())
+            .filter(|&i| &*self.items[i].model == model)
+            .collect();
+        idxs.sort_by_key(|&i| self.key_of(&self.items[i]));
+        idxs.truncate(cap);
+        let mut rank_of: HashMap<usize, usize> = HashMap::with_capacity(idxs.len());
+        for (rank, &i) in idxs.iter().enumerate() {
+            rank_of.insert(i, rank);
+        }
+        let mut batch: Vec<Option<WorkItem>> = idxs.iter().map(|_| None).collect();
+        let mut keep = Vec::with_capacity(self.items.len().saturating_sub(idxs.len()));
+        for (i, it) in std::mem::take(&mut self.items).into_iter().enumerate() {
+            match rank_of.get(&i) {
+                Some(&rank) => batch[rank] = Some(it),
+                None => keep.push(it),
+            }
+        }
+        self.items = keep;
+        batch.into_iter().flatten().collect()
+    }
+
+    fn forget(&mut self, state_idx: usize) {
+        self.keys.remove(&state_idx);
+    }
+
+    fn len(&self) -> usize {
+        self.items.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CostAware
+// ---------------------------------------------------------------------------
+
+/// Shortest-remaining-NFE-first: order requests by the engine's live
+/// remaining-cost estimate, arrival id on ties. The estimate tightens the
+/// moment a policy's `observe` truncates a request (see module docs), so
+/// AG-truncated requests jump ahead of full-CFG ones mid-flight.
+#[derive(Debug, Default)]
+pub struct CostAware {
+    inner: Ranked<(usize, u64)>,
+}
+
+impl Scheduler for CostAware {
+    fn name(&self) -> &'static str {
+        "cost-aware"
+    }
+
+    fn push(&mut self, item: WorkItem, meta: &RequestMeta) {
+        self.inner.push(item, (meta.remaining_nfes, meta.id));
+    }
+
+    fn peek_model(&self) -> Option<Arc<str>> {
+        self.inner.peek_model()
+    }
+
+    fn take_batch(&mut self, model: &str, cap: usize) -> Vec<WorkItem> {
+        self.inner.take_batch(model, cap)
+    }
+
+    fn forget(&mut self, state_idx: usize) {
+        self.inner.forget(state_idx);
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deadline
+// ---------------------------------------------------------------------------
+
+/// Earliest-deadline-first. Requests without a deadline sort after every
+/// dated one; ties go to the higher `priority`, then the earlier arrival.
+#[derive(Debug, Default)]
+pub struct Deadline {
+    inner: Ranked<(u64, std::cmp::Reverse<i32>, u64)>,
+}
+
+impl Scheduler for Deadline {
+    fn name(&self) -> &'static str {
+        "deadline"
+    }
+
+    fn push(&mut self, item: WorkItem, meta: &RequestMeta) {
+        let key = (
+            meta.deadline_ms.unwrap_or(u64::MAX),
+            std::cmp::Reverse(meta.priority),
+            meta.id,
+        );
+        self.inner.push(item, key);
+    }
+
+    fn peek_model(&self) -> Option<Arc<str>> {
+        self.inner.peek_model()
+    }
+
+    fn take_batch(&mut self, model: &str, cap: usize) -> Vec<WorkItem> {
+        self.inner.take_batch(model, cap)
+    }
+
+    fn forget(&mut self, state_idx: usize) {
+        self.inner.forget(state_idx);
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FairShare
+// ---------------------------------------------------------------------------
+
+/// Round-robin across client lanes: each batch slot goes to the next lane
+/// in rotation whose front item matches the batch model, so a client's
+/// share of a full batch is at most ⌈cap / active clients⌉ while others
+/// have work queued. Lanes are FIFO internally and pruned when drained.
+#[derive(Debug, Default)]
+pub struct FairShare {
+    /// (client, lane) in first-seen order — the rotation order.
+    lanes: Vec<(Arc<str>, VecDeque<WorkItem>)>,
+    /// Rotation position: the lane the next batch starts taking from.
+    cursor: usize,
+}
+
+impl Scheduler for FairShare {
+    fn name(&self) -> &'static str {
+        "fair-share"
+    }
+
+    fn push(&mut self, item: WorkItem, meta: &RequestMeta) {
+        match self.lanes.iter_mut().find(|(c, _)| *c == meta.client) {
+            Some((_, lane)) => lane.push_back(item),
+            None => {
+                let mut lane = VecDeque::new();
+                lane.push_back(item);
+                self.lanes.push((meta.client.clone(), lane));
+            }
+        }
+    }
+
+    fn peek_model(&self) -> Option<Arc<str>> {
+        let n = self.lanes.len();
+        (0..n)
+            .map(|i| &self.lanes[(self.cursor + i) % n].1)
+            .find_map(|lane| lane.front().map(|it| it.model.clone()))
+    }
+
+    fn take_batch(&mut self, model: &str, cap: usize) -> Vec<WorkItem> {
+        let n = self.lanes.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut batch = Vec::new();
+        let mut pos = self.cursor;
+        let mut barren = 0; // consecutive lanes that contributed nothing
+        while batch.len() < cap && barren < n {
+            let lane = &mut self.lanes[pos % n].1;
+            if lane.front().map_or(false, |it| &*it.model == model) {
+                batch.push(lane.pop_front().expect("front just checked"));
+                barren = 0;
+            } else {
+                barren += 1;
+            }
+            pos += 1;
+        }
+        // prune drained lanes, keeping the rotation position pointed at the
+        // same surviving lane
+        let cursor_lane = pos % n;
+        let mut new_cursor = 0;
+        let mut kept = Vec::with_capacity(n);
+        for (i, lane) in std::mem::take(&mut self.lanes).into_iter().enumerate() {
+            if !lane.1.is_empty() {
+                if i < cursor_lane {
+                    new_cursor += 1;
+                }
+                kept.push(lane);
+            }
+        }
+        self.lanes = kept;
+        self.cursor = if self.lanes.is_empty() {
+            0
+        } else {
+            new_cursor % self.lanes.len()
+        };
+        batch
+    }
+
+    fn len(&self) -> usize {
+        self.lanes.iter().map(|(_, lane)| lane.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(state_idx: usize, slot: usize, model: &str) -> WorkItem {
+        WorkItem {
+            state_idx,
+            slot,
+            model: Arc::from(model),
+        }
+    }
+
+    fn meta(id: u64, client: &str, remaining: usize) -> RequestMeta {
+        RequestMeta {
+            id,
+            client: Arc::from(client),
+            priority: 0,
+            deadline_ms: None,
+            remaining_nfes: remaining,
+        }
+    }
+
+    /// Push a two-slot step for one request.
+    fn push_step(s: &mut dyn Scheduler, idx: usize, m: &RequestMeta) {
+        s.push(item(idx, 0, "gmm"), m);
+        s.push(item(idx, 1, "gmm"), m);
+    }
+
+    #[test]
+    fn kind_parse_round_trips() {
+        for k in SchedulerKind::ALL {
+            assert_eq!(SchedulerKind::parse(k.name()), Ok(k));
+            assert_eq!(k.build().name(), k.name());
+        }
+        let err = SchedulerKind::parse("lifo").unwrap_err();
+        assert!(err.contains("fifo") && err.contains("cost-aware"), "{err}");
+    }
+
+    #[test]
+    fn fifo_preserves_arrival_order_and_model_affinity() {
+        let mut s = Fifo::default();
+        s.push(item(0, 0, "a"), &meta(0, "", 2));
+        s.push(item(1, 0, "b"), &meta(1, "", 2));
+        s.push(item(2, 0, "a"), &meta(2, "", 2));
+        assert_eq!(&*s.peek_model().unwrap(), "a");
+        let batch = s.take_batch("a", 8);
+        assert_eq!(batch.len(), 2);
+        assert_eq!((batch[0].state_idx, batch[1].state_idx), (0, 2));
+        // the non-matching item stays, in order
+        assert_eq!(s.len(), 1);
+        assert_eq!(&*s.peek_model().unwrap(), "b");
+    }
+
+    #[test]
+    fn fifo_cap_leaves_overflow_in_order() {
+        let mut s = Fifo::default();
+        for i in 0..5 {
+            s.push(item(i, 0, "m"), &meta(i as u64, "", 1));
+        }
+        let batch = s.take_batch("m", 3);
+        assert_eq!(batch.iter().map(|it| it.state_idx).collect::<Vec<_>>(), vec![0, 1, 2]);
+        let batch = s.take_batch("m", 3);
+        assert_eq!(batch.iter().map(|it| it.state_idx).collect::<Vec<_>>(), vec![3, 4]);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn cost_aware_orders_by_remaining_then_id() {
+        let mut s = CostAware::default();
+        push_step(&mut s, 0, &meta(0, "", 40)); // expensive
+        push_step(&mut s, 1, &meta(1, "", 12)); // cheap
+        push_step(&mut s, 2, &meta(2, "", 12)); // cheap, later id
+        let batch = s.take_batch("gmm", 4);
+        let order: Vec<usize> = batch.iter().map(|it| it.state_idx).collect();
+        assert_eq!(order, vec![1, 1, 2, 2], "cheapest first, id breaks ties");
+        // slots of one request stay adjacent and in slot order
+        assert_eq!((batch[0].slot, batch[1].slot), (0, 1));
+    }
+
+    #[test]
+    fn cost_aware_repush_updates_the_estimate() {
+        let mut s = CostAware::default();
+        push_step(&mut s, 0, &meta(0, "", 40));
+        push_step(&mut s, 1, &meta(1, "", 30));
+        // request 0 truncated: its next step is pushed with a lower estimate
+        assert_eq!(s.take_batch("gmm", 4).len(), 4);
+        s.push(item(0, 0, "gmm"), &meta(0, "", 8));
+        push_step(&mut s, 1, &meta(1, "", 28));
+        let batch = s.take_batch("gmm", 1);
+        assert_eq!(batch[0].state_idx, 0, "truncated request now schedules first");
+        s.forget(0);
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn deadline_is_edf_with_priority_ties() {
+        let mut s = Deadline::default();
+        let mut m0 = meta(0, "", 2);
+        m0.deadline_ms = None; // undated → last
+        let mut m1 = meta(1, "", 2);
+        m1.deadline_ms = Some(500);
+        let mut m2 = meta(2, "", 2);
+        m2.deadline_ms = Some(100);
+        let mut m3 = meta(3, "", 2);
+        m3.deadline_ms = Some(100);
+        m3.priority = 5; // same deadline, more important
+        for (i, m) in [(0usize, &m0), (1, &m1), (2, &m2), (3, &m3)] {
+            s.push(item(i, 0, "gmm"), m);
+        }
+        let order: Vec<usize> = s.take_batch("gmm", 8).iter().map(|it| it.state_idx).collect();
+        assert_eq!(order, vec![3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn fair_share_round_robins_across_clients() {
+        let mut s = FairShare::default();
+        // bulk floods 6 items before interactive's 2 arrive
+        for i in 0..6 {
+            s.push(item(i, 0, "gmm"), &meta(i as u64, "bulk", 2));
+        }
+        for i in 6..8 {
+            s.push(item(i, 0, "gmm"), &meta(i as u64, "live", 2));
+        }
+        let batch = s.take_batch("gmm", 4);
+        let order: Vec<usize> = batch.iter().map(|it| it.state_idx).collect();
+        // alternating lanes: bulk, live, bulk, live
+        assert_eq!(order, vec![0, 6, 1, 7]);
+        // live lane drained → the rest is all bulk
+        let batch = s.take_batch("gmm", 8);
+        let order: Vec<usize> = batch.iter().map(|it| it.state_idx).collect();
+        assert_eq!(order, vec![2, 3, 4, 5]);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn fair_share_bounds_a_client_share_per_batch() {
+        let mut s = FairShare::default();
+        for i in 0..16 {
+            s.push(item(i, 0, "gmm"), &meta(i as u64, "bulk", 2));
+        }
+        for i in 16..20 {
+            s.push(item(i, 0, "gmm"), &meta(i as u64, "live", 2));
+        }
+        let batch = s.take_batch("gmm", 8);
+        let live = batch.iter().filter(|it| it.state_idx >= 16).count();
+        assert_eq!(live, 4, "live client gets a full interleaved share");
+    }
+
+    #[test]
+    fn empty_schedulers_are_quiet() {
+        for kind in SchedulerKind::ALL {
+            let mut s = kind.build();
+            assert!(s.peek_model().is_none(), "{}", s.name());
+            assert!(s.take_batch("gmm", 4).is_empty());
+            assert_eq!(s.len(), 0);
+            s.forget(3); // unknown request: no-op, no panic
+        }
+    }
+}

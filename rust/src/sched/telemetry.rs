@@ -1,0 +1,325 @@
+//! Labelled serving telemetry: counters, gauges and fixed-bin histograms.
+//!
+//! Replaces the engine's ad-hoc `BatchStats` with a registry the whole
+//! serving stack shares. Metrics are keyed by name plus a small sorted
+//! label set (`policy=`, `client=`, …), so per-policy NFE totals and
+//! per-client completion counts fall out of the same three primitives. The
+//! server's `{"cmd": "stats"}` line dumps the registry as JSON.
+//!
+//! Histograms are fixed-bin (`stats::hist::Histogram`) with an exact
+//! running sum — memory stays constant under open-ended traffic (unlike
+//! the sample-vector `LatencyRecorder`, which is for bounded bench runs),
+//! at the price of bin-resolution quantiles. Label *values* are also
+//! bounded: each label key (e.g. `client`) keeps at most
+//! [`LABEL_VALUE_CAP`] distinct values, and later values collapse into
+//! `other` — an open-ended client-id stream cannot grow the registry.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::stats::hist::Histogram;
+use crate::util::json::{self, Value};
+
+/// Most distinct values one label key may hold; the overflow shares the
+/// `other` value. Applies to every metric written through the registry.
+pub const LABEL_VALUE_CAP: usize = 64;
+
+/// Registry key: metric name + sorted `(label, value)` pairs.
+type Key = (String, Vec<(String, String)>);
+
+/// Raw key for *reads*: no cardinality bookkeeping (a capped-out series
+/// simply does not exist under its raw value — its data lives in `other`).
+fn key(name: &str, labels: &[(&str, &str)]) -> Key {
+    let mut ls: Vec<(String, String)> = labels
+        .iter()
+        .map(|(k, v)| ((*k).to_owned(), (*v).to_owned()))
+        .collect();
+    ls.sort();
+    (name.to_owned(), ls)
+}
+
+/// Flat display form: `name` or `name{k=v,k=v}` — the JSON dump's keys.
+fn flat(k: &Key) -> String {
+    if k.1.is_empty() {
+        k.0.clone()
+    } else {
+        let labels: Vec<String> = k.1.iter().map(|(l, v)| format!("{l}={v}")).collect();
+        format!("{}{{{}}}", k.0, labels.join(","))
+    }
+}
+
+/// Fixed-bin histogram cell with an exact running sum for the mean (the
+/// sample count lives in `hist.total`).
+#[derive(Debug)]
+struct HistCell {
+    hist: Histogram,
+    sum: f64,
+}
+
+impl HistCell {
+    fn observe(&mut self, v: f64) {
+        self.hist.add(v);
+        self.sum += v;
+    }
+
+    fn mean(&self) -> f64 {
+        if self.hist.total == 0 {
+            0.0
+        } else {
+            self.sum / self.hist.total as f64
+        }
+    }
+
+    /// Quantile at bin-center resolution via the cumulative bin counts.
+    fn quantile(&self, q: f64) -> f64 {
+        if self.hist.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.hist.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, &c) in self.hist.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return self.hist.bin_center(i);
+            }
+        }
+        self.hist.bin_center(self.hist.counts.len() - 1)
+    }
+}
+
+/// The metrics registry (see module docs). Single-threaded like the engine
+/// that owns it; front-ends read it through the engine's stats snapshot.
+#[derive(Debug, Default)]
+pub struct Telemetry {
+    counters: BTreeMap<Key, u64>,
+    gauges: BTreeMap<Key, f64>,
+    hists: BTreeMap<Key, HistCell>,
+    /// distinct values seen per label key, for the [`LABEL_VALUE_CAP`]
+    /// bound on write paths
+    label_values: BTreeMap<String, BTreeSet<String>>,
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry::default()
+    }
+
+    /// Write-path key: like [`key`], but each label value is admitted
+    /// against the per-label-key cardinality cap; past the cap it becomes
+    /// `other`.
+    fn canonical_key(&mut self, name: &str, labels: &[(&str, &str)]) -> Key {
+        let mut ls: Vec<(String, String)> = labels
+            .iter()
+            .map(|(k, v)| {
+                let values = self.label_values.entry((*k).to_owned()).or_default();
+                let v = if values.contains(*v) {
+                    (*v).to_owned()
+                } else if values.len() < LABEL_VALUE_CAP {
+                    values.insert((*v).to_owned());
+                    (*v).to_owned()
+                } else {
+                    "other".to_owned()
+                };
+                ((*k).to_owned(), v)
+            })
+            .collect();
+        ls.sort();
+        (name.to_owned(), ls)
+    }
+
+    /// Increment a counter.
+    pub fn inc(&mut self, name: &str, labels: &[(&str, &str)], by: u64) {
+        let k = self.canonical_key(name, labels);
+        *self.counters.entry(k).or_insert(0) += by;
+    }
+
+    /// Set a gauge to its current value.
+    pub fn set_gauge(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        let k = self.canonical_key(name, labels);
+        self.gauges.insert(k, v);
+    }
+
+    /// Record one histogram sample. `lo`/`hi`/`bins` size the histogram on
+    /// first use of the (name, labels) series; out-of-range samples clamp
+    /// into the edge bins (the count/sum stay exact).
+    pub fn observe(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        v: f64,
+        lo: f64,
+        hi: f64,
+        bins: usize,
+    ) {
+        let k = self.canonical_key(name, labels);
+        self.hists
+            .entry(k)
+            .or_insert_with(|| HistCell {
+                hist: Histogram::new(lo, hi, bins),
+                sum: 0.0,
+            })
+            .observe(v);
+    }
+
+    /// Current counter value (0 if never incremented).
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> u64 {
+        self.counters.get(&key(name, labels)).copied().unwrap_or(0)
+    }
+
+    /// Current gauge value.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.gauges.get(&key(name, labels)).copied()
+    }
+
+    /// Sample count of a histogram series (0 if absent).
+    pub fn hist_count(&self, name: &str, labels: &[(&str, &str)]) -> u64 {
+        self.hists.get(&key(name, labels)).map_or(0, |h| h.hist.total)
+    }
+
+    /// Mean of a histogram series (exact, from the running sum).
+    pub fn hist_mean(&self, name: &str, labels: &[(&str, &str)]) -> f64 {
+        self.hists.get(&key(name, labels)).map_or(0.0, HistCell::mean)
+    }
+
+    /// Sum all counters sharing `name` (across label sets) — e.g. total
+    /// NFEs over every `policy=` label.
+    pub fn counter_sum(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .filter(|((n, _), _)| n == name)
+            .map(|(_, v)| *v)
+            .sum()
+    }
+
+    /// Dump the registry:
+    /// `{"counters": {...}, "gauges": {...}, "histograms": {"name{l=v}":
+    /// {"count": n, "mean": m, "p50": ..., "p99": ...}}}`.
+    pub fn to_json(&self) -> Value {
+        let counters = Value::Obj(
+            self.counters
+                .iter()
+                .map(|(k, &v)| (flat(k), json::num(v as f64)))
+                .collect(),
+        );
+        let gauges = Value::Obj(
+            self.gauges
+                .iter()
+                .map(|(k, &v)| (flat(k), json::num(v)))
+                .collect(),
+        );
+        let hists = Value::Obj(
+            self.hists
+                .iter()
+                .map(|(k, h)| {
+                    let cell = json::obj(vec![
+                        ("count", json::num(h.hist.total as f64)),
+                        ("mean", json::num(h.mean())),
+                        ("p50", json::num(h.quantile(0.50))),
+                        ("p99", json::num(h.quantile(0.99))),
+                    ]);
+                    (flat(k), cell)
+                })
+                .collect(),
+        );
+        json::obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", hists),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_per_label_set() {
+        let mut t = Telemetry::new();
+        t.inc("nfes_total", &[("policy", "ag")], 30);
+        t.inc("nfes_total", &[("policy", "ag")], 10);
+        t.inc("nfes_total", &[("policy", "cfg")], 40);
+        assert_eq!(t.counter("nfes_total", &[("policy", "ag")]), 40);
+        assert_eq!(t.counter("nfes_total", &[("policy", "cfg")]), 40);
+        assert_eq!(t.counter("nfes_total", &[("policy", "cond")]), 0);
+        assert_eq!(t.counter_sum("nfes_total"), 80);
+    }
+
+    #[test]
+    fn label_order_does_not_matter() {
+        let mut t = Telemetry::new();
+        t.inc("done", &[("policy", "ag"), ("client", "web")], 1);
+        t.inc("done", &[("client", "web"), ("policy", "ag")], 1);
+        assert_eq!(t.counter("done", &[("policy", "ag"), ("client", "web")]), 2);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let mut t = Telemetry::new();
+        t.set_gauge("queue_depth", &[], 5.0);
+        t.set_gauge("queue_depth", &[], 2.0);
+        assert_eq!(t.gauge("queue_depth", &[]), Some(2.0));
+        assert_eq!(t.gauge("missing", &[]), None);
+    }
+
+    #[test]
+    fn histogram_mean_and_quantiles() {
+        let mut t = Telemetry::new();
+        for i in 1..=100 {
+            t.observe("wait_ms", &[], i as f64, 0.0, 100.0, 100);
+        }
+        assert_eq!(t.hist_count("wait_ms", &[]), 100);
+        assert!((t.hist_mean("wait_ms", &[]) - 50.5).abs() < 1e-9);
+        // bin-center resolution: p50 lands in the middle, p99 near the top
+        let json = t.to_json();
+        let h = json.req("histograms").req("wait_ms");
+        let p50 = h.req("p50").as_f64().unwrap();
+        let p99 = h.req("p99").as_f64().unwrap();
+        assert!((p50 - 50.0).abs() <= 1.0, "{p50}");
+        assert!(p99 >= 98.0, "{p99}");
+    }
+
+    #[test]
+    fn json_dump_flattens_labels() {
+        let mut t = Telemetry::new();
+        t.inc("nfes_total", &[("policy", "ag")], 12);
+        t.set_gauge("active", &[], 3.0);
+        t.observe("exec_ms", &[("policy", "ag")], 4.0, 0.0, 10.0, 10);
+        let v = t.to_json();
+        assert_eq!(
+            v.req("counters").req("nfes_total{policy=ag}").as_f64(),
+            Some(12.0)
+        );
+        assert_eq!(v.req("gauges").req("active").as_f64(), Some(3.0));
+        assert_eq!(
+            v.req("histograms").req("exec_ms{policy=ag}").req("count").as_f64(),
+            Some(1.0)
+        );
+        // the dump is valid JSON end-to-end
+        let text = json::to_string(&v);
+        assert!(json::parse(&text).is_ok(), "{text}");
+    }
+
+    #[test]
+    fn label_values_are_capped_per_key() {
+        let mut t = Telemetry::new();
+        for i in 0..(LABEL_VALUE_CAP + 5) {
+            let v = format!("c{i}");
+            t.inc("done", &[("client", v.as_str())], 1);
+        }
+        // the first CAP values keep their own series, the rest pool up
+        assert_eq!(t.counter("done", &[("client", "c0")]), 1);
+        assert_eq!(t.counter("done", &[("client", "other")]), 5);
+        assert_eq!(t.counter_sum("done"), (LABEL_VALUE_CAP + 5) as u64);
+        // a different label key has its own budget
+        t.inc("done", &[("policy", "ag")], 1);
+        assert_eq!(t.counter("done", &[("policy", "ag")]), 1);
+    }
+
+    #[test]
+    fn empty_registry_dumps_cleanly() {
+        let t = Telemetry::new();
+        let text = json::to_string(&t.to_json());
+        assert!(json::parse(&text).is_ok());
+        assert_eq!(t.hist_mean("none", &[]), 0.0);
+    }
+}

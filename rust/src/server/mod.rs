@@ -5,19 +5,35 @@
 //!
 //! request  {"prompt": "a large red circle at the center", "policy": "ag",
 //!           "gamma_bar": 0.991, "steps": 20, "guidance": 7.5, "seed": 1,
-//!           "negative": "green", "image": false}
-//! response {"id": 3, "nfes": 31, "cfg_steps": 11, "truncated_at": 10,
-//!           "ms": 128.4, "image": [...]?}
+//!           "negative": "green", "image": false,
+//!           "client_id": "web", "priority": 1, "deadline_ms": 2500}
+//! response {"id": 3, "policy": "ag(ḡ=0.991)", "nfes": 31, "cfg_steps": 11,
+//!           "truncated_at": 10, "ms": 128.4, "image": [...]?}
 //! error    {"error": "...", "registered": ["ag", "cfg", ...]?}
+//! shed     {"error": "queue full: ...", "code": "queue_full", ...}
+//! command  {"cmd": "stats"}
+//!          → {"scheduler": "cost-aware", "active": 3, "queue_depth": 9,
+//!             "queued_nfes": 118, ..., "telemetry": {"counters": {...},
+//!             "gauges": {...}, "histograms": {...}}}
 //!
 //! The `"policy"` field is a [`PolicySpec`]: either a bare registered name
-//! (`"linear-ag"`, `"compressed-cfg"`, …) or an object
-//! `{"kind": "searched", "choices": [...]}`. Top-level convenience fields
-//! (`guidance` → `s`, `gamma_bar`, `cfg_steps`, `period`, `choices`,
-//! `coeffs`, …) fill parameters the policy object leaves unset, so simple
-//! clients never need the nested form. Unknown policy names produce a
-//! structured JSON error listing the registered policies instead of a
-//! dropped connection.
+//! (`"linear-ag"`, `"compressed-cfg"`, a `--policy-file` alias, …) or an
+//! object `{"kind": "searched", "choices": [...]}`. Top-level convenience
+//! fields (`guidance` → `s`, `gamma_bar`, `cfg_steps`, `period`,
+//! `choices`, `coeffs`, …) fill parameters the policy object leaves unset,
+//! so simple clients never need the nested form. Unknown policy names
+//! produce a structured JSON error listing the registered policies instead
+//! of a dropped connection.
+//!
+//! Scheduling envelope fields are optional: `client_id` names the
+//! fair-share lane (and the `client=` telemetry label), `priority` and
+//! `deadline_ms` feed the `deadline` scheduler. `deadline_ms` counts
+//! *from the request's arrival* (the engine anchors it to its own clock,
+//! so client clock skew cannot invert the EDF order). The discipline itself is
+//! server-side (`agd serve --scheduler fifo|cost-aware|deadline|
+//! fair-share`), as are the admission budgets (`--max-queued-nfes`,
+//! `--max-in-flight`) — a request past a budget is shed with a
+//! `queue_full` error while in-flight requests run to completion.
 //!
 //! The engine runs on a dedicated thread (it owns the PJRT client);
 //! connection handlers forward requests through an mpsc channel and block on
@@ -38,6 +54,7 @@ use crate::coordinator::engine::Engine;
 use crate::coordinator::request::{Completion, Request};
 use crate::coordinator::spec::{PolicyRegistry, PolicySpec, SpecError};
 use crate::prompts::Prompt;
+use crate::sched::{Admission, AdmitError, SchedulerKind};
 use crate::util::json::{self, Value};
 
 /// Server configuration.
@@ -48,6 +65,10 @@ pub struct ServerConfig {
     pub default_steps: usize,
     pub default_guidance: f64,
     pub default_gamma_bar: f64,
+    /// Scheduling discipline the engine runs (`--scheduler`).
+    pub scheduler: SchedulerKind,
+    /// Admission budgets (`--max-in-flight` / `--max-queued-nfes`).
+    pub admission: Admission,
 }
 
 impl Default for ServerConfig {
@@ -58,6 +79,8 @@ impl Default for ServerConfig {
             default_steps: 20,
             default_guidance: 7.5,
             default_gamma_bar: 0.9988,
+            scheduler: SchedulerKind::Fifo,
+            admission: Admission::unlimited(),
         }
     }
 }
@@ -65,6 +88,7 @@ impl Default for ServerConfig {
 /// Top-level request fields that are *not* policy parameters.
 const ENVELOPE_KEYS: &[&str] = &[
     "prompt", "policy", "steps", "seed", "negative", "image", "model", "src_image", "guidance",
+    "client_id", "priority", "deadline_ms",
 ];
 
 /// Parse one protocol line into a [`Request`] (without an id — the engine
@@ -75,6 +99,16 @@ pub fn parse_request_line(
     registry: &PolicyRegistry,
 ) -> Result<(Request, bool)> {
     let v = json::parse(line).map_err(|e| anyhow!("bad request json: {e}"))?;
+    parse_request_value(&v, cfg, registry)
+}
+
+/// Build a [`Request`] from an already-parsed protocol object — the
+/// serving path parses each line exactly once (`dispatch_line`).
+pub fn parse_request_value(
+    v: &Value,
+    cfg: &ServerConfig,
+    registry: &PolicyRegistry,
+) -> Result<(Request, bool)> {
     let prompt_text = v
         .get("prompt")
         .and_then(Value::as_str)
@@ -100,6 +134,9 @@ pub fn parse_request_line(
     if let Some(g) = v.get("guidance").and_then(Value::as_f64) {
         spec.set_default("s", json::num(g));
     }
+    // expand `--policy-file` aliases now, so the server defaults below fill
+    // only what neither the client nor the preset set
+    let mut spec = registry.resolve(&spec)?;
     // the server's configured defaults fill whatever is still unset
     spec.set_default("s", json::num(cfg.default_guidance));
     if spec.canonical_kind() == "ag" {
@@ -149,15 +186,27 @@ pub fn parse_request_line(
             .ok_or_else(|| anyhow!("`src_image` must be an array of numbers"))?;
         req.src_image = Some(vals.into_iter().map(|f| f as f32).collect());
     }
+    // scheduling envelope: fair-share lane, EDF deadline, priority
+    if let Some(client) = v.get("client_id").and_then(Value::as_str) {
+        req.client_id = Some(Arc::from(client));
+    }
+    if let Some(p) = v.get("priority").and_then(Value::as_f64) {
+        req.priority = p as i32;
+    }
+    if let Some(d) = v.get("deadline_ms").and_then(Value::as_f64) {
+        req.deadline_ms = Some(d as u64);
+    }
     let want_image = v.get("image").and_then(Value::as_bool).unwrap_or(false);
     Ok((req, want_image))
 }
 
-/// Encode a completion as a protocol line.
+/// Encode a completion as a protocol line (the serving policy's display
+/// name is echoed so clients can attribute per-policy cost).
 pub fn completion_to_line(c: &Completion, ms: f64, with_image: bool) -> String {
-    use json::{arr, num, obj};
+    use json::{arr, num, obj, s};
     let mut fields = vec![
         ("id", num(c.id as f64)),
+        ("policy", s(&c.policy)),
         ("nfes", num(c.nfes as f64)),
         ("cfg_steps", num(c.cfg_steps as f64)),
         ("ms", num((ms * 100.0).round() / 100.0)),
@@ -175,8 +224,10 @@ pub fn completion_to_line(c: &Completion, ms: f64, with_image: bool) -> String {
     json::to_string(&obj(fields))
 }
 
-/// Encode an error as a structured protocol line (proper JSON escaping;
-/// unknown-policy errors carry the registered names).
+/// Encode an error as a structured protocol line (proper JSON escaping).
+/// Unknown-policy errors carry the registered names; admission rejections
+/// carry `"code": "queue_full"` plus the budget numbers so clients can
+/// back off proportionally.
 pub fn error_to_line(e: &anyhow::Error) -> String {
     let mut fields = vec![("error", json::s(&format!("{e:#}")))];
     if let Some(SpecError::UnknownPolicy { known, .. }) = e.downcast_ref::<SpecError>() {
@@ -184,6 +235,24 @@ pub fn error_to_line(e: &anyhow::Error) -> String {
             "registered",
             json::arr(known.iter().map(|n| json::s(n)).collect()),
         ));
+    }
+    if let Some(shed) = e.downcast_ref::<AdmitError>() {
+        fields.push(("code", json::s("queue_full")));
+        match *shed {
+            AdmitError::InFlightFull { in_flight, max } => {
+                fields.push(("in_flight", json::num(in_flight as f64)));
+                fields.push(("max_in_flight", json::num(max as f64)));
+            }
+            AdmitError::NfeBudgetFull {
+                queued_nfes,
+                request_nfes,
+                max,
+            } => {
+                fields.push(("queued_nfes", json::num(queued_nfes as f64)));
+                fields.push(("request_nfes", json::num(request_nfes as f64)));
+                fields.push(("max_queued_nfes", json::num(max as f64)));
+            }
+        }
     }
     json::to_string(&json::obj(fields))
 }
@@ -195,21 +264,28 @@ struct Job {
     reply: Sender<String>,
 }
 
+/// What connection handlers send to the engine thread.
+enum Msg {
+    Job(Job),
+    /// `{"cmd": "stats"}`: reply with the engine's stats snapshot.
+    Stats(Sender<String>),
+}
+
 /// Engine thread: batch whatever is queued, reply per request.
-fn engine_loop<B: Backend>(mut engine: Engine<B>, rx: Receiver<Job>) {
+fn engine_loop<B: Backend>(mut engine: Engine<B>, rx: Receiver<Msg>) {
     let mut next_id: u64 = 0;
     let mut jobs: HashMap<u64, Job> = HashMap::new();
     loop {
         // admit new work; block when fully idle (no busy spin)
         if engine.idle() {
             match rx.recv() {
-                Ok(job) => admit(&mut engine, &mut jobs, &mut next_id, job),
+                Ok(msg) => handle_msg(&mut engine, &mut jobs, &mut next_id, msg),
                 Err(_) => return, // all senders gone → shut down
             }
         }
         loop {
             match rx.try_recv() {
-                Ok(job) => admit(&mut engine, &mut jobs, &mut next_id, job),
+                Ok(msg) => handle_msg(&mut engine, &mut jobs, &mut next_id, msg),
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
                     if engine.idle() {
@@ -241,6 +317,22 @@ fn engine_loop<B: Backend>(mut engine: Engine<B>, rx: Receiver<Job>) {
     }
 }
 
+fn handle_msg<B: Backend>(
+    engine: &mut Engine<B>,
+    jobs: &mut HashMap<u64, Job>,
+    next_id: &mut u64,
+    msg: Msg,
+) {
+    match msg {
+        Msg::Job(job) => admit(engine, jobs, next_id, job),
+        Msg::Stats(reply) => {
+            let _ = reply.send(json::to_string(&engine.stats_json()));
+        }
+    }
+}
+
+/// Assign an id and admit against the budget; a shed request gets its
+/// `queue_full` reply immediately and never touches the queue.
 fn admit<B: Backend>(
     engine: &mut Engine<B>,
     jobs: &mut HashMap<u64, Job>,
@@ -249,13 +341,62 @@ fn admit<B: Backend>(
 ) {
     job.req.id = *next_id;
     *next_id += 1;
-    engine.submit(job.req.clone());
-    jobs.insert(job.req.id, job);
+    match engine.try_submit(job.req.clone()) {
+        Ok(()) => {
+            jobs.insert(job.req.id, job);
+        }
+        Err(e) => {
+            let _ = job.reply.send(error_to_line(&anyhow::Error::new(e)));
+        }
+    }
+}
+
+/// Dispatch one protocol line: a `{"cmd": ..}` control line or a
+/// generation request. Returns the reply line, or None when the engine
+/// thread is gone and the connection should close.
+fn dispatch_line(
+    line: &str,
+    tx: &Sender<Msg>,
+    cfg: &ServerConfig,
+    registry: &PolicyRegistry,
+) -> Option<String> {
+    let v = match json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return Some(error_to_line(&anyhow!("bad request json: {e}"))),
+    };
+    if let Some(cmd) = v.get("cmd").and_then(Value::as_str) {
+        if cmd == "stats" {
+            let (rtx, rrx) = channel();
+            if tx.send(Msg::Stats(rtx)).is_err() {
+                return None;
+            }
+            return rrx.recv().ok();
+        }
+        return Some(error_to_line(&anyhow!(
+            "unknown cmd `{cmd}` (supported: stats)"
+        )));
+    }
+    match parse_request_value(&v, cfg, registry) {
+        Ok((req, want_image)) => {
+            let (rtx, rrx) = channel();
+            let job = Job {
+                req,
+                want_image,
+                started: Instant::now(),
+                reply: rtx,
+            };
+            if tx.send(Msg::Job(job)).is_err() {
+                return None;
+            }
+            rrx.recv().ok()
+        }
+        Err(e) => Some(error_to_line(&e)),
+    }
 }
 
 fn handle_conn(
     stream: TcpStream,
-    tx: Sender<Job>,
+    tx: Sender<Msg>,
     cfg: ServerConfig,
     registry: Arc<PolicyRegistry>,
 ) {
@@ -270,24 +411,8 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        let reply_line = match parse_request_line(&line, &cfg, &registry) {
-            Ok((req, want_image)) => {
-                let (rtx, rrx) = channel();
-                let job = Job {
-                    req,
-                    want_image,
-                    started: Instant::now(),
-                    reply: rtx,
-                };
-                if tx.send(job).is_err() {
-                    break;
-                }
-                match rrx.recv() {
-                    Ok(l) => l,
-                    Err(_) => break,
-                }
-            }
-            Err(e) => error_to_line(&e),
+        let Some(reply_line) = dispatch_line(&line, &tx, &cfg, &registry) else {
+            break;
         };
         if writer.write_all(reply_line.as_bytes()).is_err()
             || writer.write_all(b"\n").is_err()
@@ -321,12 +446,22 @@ where
     B: Backend + 'static,
     F: FnOnce() -> Result<B> + Send + 'static,
 {
-    let (tx, rx) = channel::<Job>();
+    let (tx, rx) = channel::<Msg>();
     let listener = TcpListener::bind(&cfg.addr)?;
-    eprintln!("agd serving on {} (model {})", cfg.addr, cfg.model);
-    std::thread::spawn(move || match factory().and_then(Engine::new) {
-        Ok(engine) => engine_loop(engine, rx),
-        Err(e) => log::error!("backend construction failed: {e:#}"),
+    eprintln!(
+        "agd serving on {} (model {}, scheduler {})",
+        cfg.addr,
+        cfg.model,
+        cfg.scheduler.name()
+    );
+    let (scheduler, admission) = (cfg.scheduler, cfg.admission);
+    std::thread::spawn(move || {
+        let engine =
+            factory().and_then(|be| Engine::with_scheduler(be, scheduler.build(), admission));
+        match engine {
+            Ok(engine) => engine_loop(engine, rx),
+            Err(e) => log::error!("backend construction failed: {e:#}"),
+        }
     });
     for stream in listener.incoming() {
         let stream = stream?;
@@ -450,6 +585,7 @@ mod tests {
     fn completion_roundtrip_line() {
         let c = Completion {
             id: 7,
+            policy: "ag(ḡ=0.991)".into(),
             image: vec![0.5, -0.5],
             nfes: 31,
             cfg_steps: 11,
@@ -463,9 +599,111 @@ mod tests {
         let v = json::parse(&line).unwrap();
         assert_eq!(v.req("nfes").as_f64(), Some(31.0));
         assert_eq!(v.req("truncated_at").as_f64(), Some(10.0));
+        assert_eq!(v.req("policy").as_str(), Some("ag(ḡ=0.991)"));
         assert_eq!(v.req("image").as_arr().unwrap().len(), 2);
         let line2 = completion_to_line(&c, 1.0, false);
         assert!(json::parse(&line2).unwrap().get("image").is_none());
+    }
+
+    #[test]
+    fn scheduling_envelope_fields_parse() {
+        let line = r#"{"prompt": "red circle", "client_id": "web-42",
+            "priority": 3, "deadline_ms": 2500}"#;
+        let (req, _) = parse(line).unwrap();
+        assert_eq!(req.client_id.as_deref(), Some("web-42"));
+        assert_eq!(req.priority, 3);
+        assert_eq!(req.deadline_ms, Some(2500));
+        // none of them leak into policy parameters
+        assert!(req.policy.name().starts_with("ag("));
+        // and they stay optional
+        let (req, _) = parse(r#"{"prompt": "red circle"}"#).unwrap();
+        assert_eq!(req.client_id, None);
+        assert_eq!(req.priority, 0);
+        assert_eq!(req.deadline_ms, None);
+    }
+
+    #[test]
+    fn alias_presets_resolve_under_server_defaults() {
+        let mut reg = PolicyRegistry::builtin();
+        reg.register_alias(
+            "fast-ag",
+            PolicySpec::new("ag").with("gamma_bar", json::num(0.5)),
+        )
+        .unwrap();
+        // the preset's gamma_bar beats the server default, while the
+        // server's guidance default still fills the unset `s`
+        let (req, _) = parse_request_line(
+            r#"{"prompt": "red circle", "policy": "fast-ag"}"#,
+            &cfg(),
+            &reg,
+        )
+        .unwrap();
+        assert_eq!(req.policy.name(), "ag(ḡ=0.5)");
+        // an explicit client value beats the preset
+        let (req, _) = parse_request_line(
+            r#"{"prompt": "red circle", "policy": "fast-ag", "gamma_bar": 0.7}"#,
+            &cfg(),
+            &reg,
+        )
+        .unwrap();
+        assert_eq!(req.policy.name(), "ag(ḡ=0.7)");
+    }
+
+    #[test]
+    fn queue_full_errors_are_structured() {
+        let e = anyhow::Error::new(AdmitError::NfeBudgetFull {
+            queued_nfes: 90,
+            request_nfes: 40,
+            max: 100,
+        });
+        let line = error_to_line(&e);
+        let v = json::parse(&line).unwrap_or_else(|err| panic!("{line}: {err}"));
+        assert_eq!(v.req("code").as_str(), Some("queue_full"));
+        assert_eq!(v.req("queued_nfes").as_f64(), Some(90.0));
+        assert_eq!(v.req("max_queued_nfes").as_f64(), Some(100.0));
+        assert!(v.req("error").as_str().unwrap().contains("queue full"));
+    }
+
+    /// Spin up a listener + engine thread on the GMM backend; returns the
+    /// address to connect to.
+    fn spawn_test_server(scheduler: SchedulerKind, admission: Admission) -> std::net::SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let scfg = ServerConfig {
+            addr: addr.to_string(),
+            model: "gmm".into(),
+            scheduler,
+            admission,
+            ..Default::default()
+        };
+        let (tx, rx) = channel::<Msg>();
+        std::thread::spawn(move || {
+            let backend = GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05));
+            let engine =
+                Engine::with_scheduler(backend, scheduler.build(), admission).unwrap();
+            engine_loop(engine, rx)
+        });
+        let registry = Arc::new(PolicyRegistry::builtin());
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let tx = tx.clone();
+                let scfg = scfg.clone();
+                let registry = registry.clone();
+                std::thread::spawn(move || handle_conn(stream.unwrap(), tx, scfg, registry));
+            }
+        });
+        addr
+    }
+
+    /// One request/reply exchange on an open connection.
+    fn roundtrip(conn: &mut TcpStream, line: &str) -> Value {
+        use std::io::{BufRead, BufReader, Write};
+        conn.write_all(line.as_bytes()).unwrap();
+        conn.write_all(b"\n").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        json::parse(reply.trim()).unwrap_or_else(|e| panic!("{reply}: {e}"))
     }
 
     /// Full TCP round trip against the GMM backend.
@@ -479,7 +717,7 @@ mod tests {
             model: "gmm".into(),
             ..Default::default()
         };
-        let (tx, rx) = channel::<Job>();
+        let (tx, rx) = channel::<Msg>();
         std::thread::spawn(move || {
             let backend = GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05));
             engine_loop(Engine::new(backend).unwrap(), rx)
@@ -510,6 +748,10 @@ mod tests {
         let v = json::parse(line.trim()).unwrap();
         assert!(v.get("error").is_none(), "{line}");
         assert!(v.req("nfes").as_f64().unwrap() <= 16.0);
+        assert!(
+            v.req("policy").as_str().unwrap().starts_with("ag("),
+            "{line}"
+        );
 
         // a plugin policy over the same connection: compressed-cfg at
         // period 4 over 8 steps costs exactly 2·2 + 6 = 10 NFEs.
@@ -536,5 +778,64 @@ mod tests {
         let v = json::parse(line.trim()).unwrap();
         assert!(v.get("error").is_some(), "{line}");
         assert!(v.req("registered").as_str_vec().unwrap().len() >= 10);
+    }
+
+    /// Admission over the wire: a request past the queued-NFE budget gets
+    /// a structured `queue_full` reply, nothing panics, and the connection
+    /// keeps serving admissible requests.
+    #[test]
+    fn tcp_queue_full_shed_and_recovery() {
+        // budget below one 8-step CFG request (16 NFEs) but enough for a
+        // 4-step one (8 NFEs)
+        let admission = Admission {
+            max_in_flight: None,
+            max_queued_nfes: Some(10),
+        };
+        let addr = spawn_test_server(SchedulerKind::CostAware, admission);
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let v = roundtrip(
+            &mut conn,
+            r#"{"prompt": "red circle", "policy": "cfg", "steps": 8, "guidance": 2.0}"#,
+        );
+        assert_eq!(v.req("code").as_str(), Some("queue_full"));
+        assert_eq!(v.req("max_queued_nfes").as_f64(), Some(10.0));
+        assert_eq!(v.req("request_nfes").as_f64(), Some(16.0));
+        assert!(v.req("error").as_str().unwrap().contains("queue full"));
+        let v = roundtrip(
+            &mut conn,
+            r#"{"prompt": "red circle", "policy": "cfg", "steps": 4, "guidance": 2.0}"#,
+        );
+        assert!(v.get("error").is_none(), "in-budget request must complete");
+        assert_eq!(v.req("nfes").as_f64(), Some(8.0));
+    }
+
+    /// `{"cmd": "stats"}` dumps the scheduler name and the telemetry
+    /// registry, with per-policy and per-client labels.
+    #[test]
+    fn tcp_stats_command_dumps_telemetry() {
+        let addr = spawn_test_server(SchedulerKind::FairShare, Admission::unlimited());
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let v = roundtrip(
+            &mut conn,
+            r#"{"prompt": "red circle", "policy": "ag", "steps": 8, "guidance": 2.0, "client_id": "cli-a"}"#,
+        );
+        assert!(v.get("error").is_none(), "{v:?}");
+        let nfes = v.req("nfes").as_f64().unwrap();
+        let stats = roundtrip(&mut conn, r#"{"cmd": "stats"}"#);
+        assert_eq!(stats.req("scheduler").as_str(), Some("fair-share"));
+        assert_eq!(stats.req("active").as_f64(), Some(0.0));
+        let counters = stats.req("telemetry").req("counters");
+        assert_eq!(counters.req("nfes_total{policy=ag}").as_f64(), Some(nfes));
+        assert_eq!(
+            counters
+                .req("requests_completed_total{client=cli-a,policy=ag}")
+                .as_f64(),
+            Some(1.0)
+        );
+        // unknown cmd: structured error, connection stays usable
+        let v = roundtrip(&mut conn, r#"{"cmd": "reboot"}"#);
+        assert!(v.req("error").as_str().unwrap().contains("reboot"));
+        let stats = roundtrip(&mut conn, r#"{"cmd": "stats"}"#);
+        assert!(stats.get("scheduler").is_some());
     }
 }

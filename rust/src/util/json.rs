@@ -293,7 +293,7 @@ fn write_value(v: &Value, out: &mut String) {
         Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
         Value::Num(n) => {
             if n.fract() == 0.0 && n.abs() < 1e15 {
-                out.push_str(&format!("{}", *n as i64));
+                out.push_str(&(*n as i64).to_string());
             } else {
                 out.push_str(&format!("{n}"));
             }

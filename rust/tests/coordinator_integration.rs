@@ -149,7 +149,7 @@ fn prop_work_conservation() {
         let out = e.run(reqs).unwrap();
         let total: usize = out.iter().map(|c| c.nfes).sum();
         assert_eq!(e.backend.items_executed, total);
-        assert_eq!(e.stats.items, total);
+        assert_eq!(e.items(), total);
     });
 }
 
@@ -303,10 +303,10 @@ fn mixed_policy_fleet_accounts_nfes_per_request() {
     assert_eq!(out.len(), policies.len());
 
     let total: usize = out.iter().map(|c| c.nfes).sum();
-    assert_eq!(e.stats.items, total, "batcher dropped or duplicated work");
+    assert_eq!(e.items(), total, "batcher dropped or duplicated work");
     assert_eq!(e.backend.items_executed, total);
     // the fleet actually batched across policies (occupancy ≫ 1)
-    assert!(e.stats.mean_occupancy() > 4.0, "{}", e.stats.mean_occupancy());
+    assert!(e.mean_occupancy() > 4.0, "{}", e.mean_occupancy());
 
     for (c, (p, expect)) in out.iter().zip(&policies) {
         assert!(

@@ -1,0 +1,283 @@
+//! Scheduler/admission integration tests on the analytic GMM backend — no
+//! artifacts required. These pin the scheduling subsystem's contract:
+//! disciplines reorder *work*, never *results*; `fifo` reproduces the
+//! engine's historical completions exactly; `fair-share` bounds a bulk
+//! client's share; `cost-aware` drains cheap requests first; admission
+//! sheds load without touching in-flight requests.
+
+use std::sync::Arc;
+
+use adaptive_guidance::backend::GmmBackend;
+use adaptive_guidance::coordinator::engine::Engine;
+use adaptive_guidance::coordinator::policy::{ag, cfg, cond_only, linear_ag, PolicyRef};
+use adaptive_guidance::coordinator::request::Request;
+use adaptive_guidance::ols::OlsCoeffs;
+use adaptive_guidance::sched::{Admission, SchedulerKind};
+use adaptive_guidance::sim::gmm::Gmm;
+
+fn backend(dim: usize) -> GmmBackend {
+    GmmBackend::new(Gmm::axes(dim, 6, 3.0, 0.05))
+}
+
+fn engine_with(kind: SchedulerKind) -> Engine<GmmBackend> {
+    Engine::with_scheduler(backend(12), kind.build(), Admission::unlimited()).unwrap()
+}
+
+fn req(id: u64, seed: u64, steps: usize, policy: PolicyRef) -> Request {
+    Request::new(id, "gmm", vec![1 + (id % 6) as i32, 0, 0, 0], seed, steps, policy)
+}
+
+/// A mixed cfg/ag/linear-ag workload with dynamic per-request cost.
+fn mixed_workload(n: usize, steps: usize) -> Vec<Request> {
+    let coeffs = Arc::new(OlsCoeffs::identity(steps));
+    (0..n)
+        .map(|i| {
+            let policy = match i % 3 {
+                0 => cfg(2.0),
+                1 => ag(2.0, 0.99),
+                _ => linear_ag(2.0, coeffs.clone()),
+            };
+            req(i as u64, 5000 + i as u64, steps, policy)
+        })
+        .collect()
+}
+
+/// The acceptance pin: with the `fifo` scheduler the engine's completions
+/// — images, NFEs, batch/item counts — are byte-identical run-to-run and
+/// identical between `Engine::new` (the default) and an explicit `fifo`.
+#[test]
+fn fifo_reproduces_default_engine_completions_exactly() {
+    let run = |mut e: Engine<GmmBackend>| {
+        let out = e.run(mixed_workload(10, 12)).unwrap();
+        (out, e.batches(), e.items())
+    };
+    let (a, a_batches, a_items) =
+        run(Engine::new(backend(12)).unwrap());
+    let (b, b_batches, b_items) =
+        run(Engine::new(backend(12)).unwrap());
+    let (c, c_batches, c_items) = run(engine_with(SchedulerKind::Fifo));
+    assert_eq!(a_batches, b_batches);
+    assert_eq!(a_items, b_items);
+    assert_eq!(a_batches, c_batches);
+    assert_eq!(a_items, c_items);
+    assert_eq!(a.len(), b.len());
+    for ((x, y), z) in a.iter().zip(&b).zip(&c) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.image, y.image, "request {}", x.id);
+        assert_eq!(x.nfes, y.nfes);
+        assert_eq!(x.truncated_at, y.truncated_at);
+        assert_eq!(x.image, z.image, "explicit fifo diverged on {}", x.id);
+        assert_eq!(x.nfes, z.nfes);
+    }
+}
+
+/// Scheduling must reorder work, never change results: every discipline
+/// produces bit-identical per-request completions on the same workload.
+#[test]
+fn every_scheduler_produces_identical_results() {
+    let baseline = {
+        let mut e = engine_with(SchedulerKind::Fifo);
+        e.run(mixed_workload(12, 10)).unwrap()
+    };
+    let total: usize = baseline.iter().map(|c| c.nfes).sum();
+    for kind in SchedulerKind::ALL {
+        let mut e = engine_with(kind);
+        let out = e.run(mixed_workload(12, 10)).unwrap();
+        assert_eq!(out.len(), baseline.len(), "{}", kind.name());
+        for (x, y) in out.iter().zip(&baseline) {
+            assert_eq!(x.id, y.id, "{}", kind.name());
+            assert_eq!(x.image, y.image, "{}: request {}", kind.name(), x.id);
+            assert_eq!(x.nfes, y.nfes, "{}: request {}", kind.name(), x.id);
+            assert_eq!(x.truncated_at, y.truncated_at, "{}", kind.name());
+        }
+        // work conservation: same items executed under every discipline
+        assert_eq!(e.items(), total, "{}", kind.name());
+        assert_eq!(e.backend.items_executed, total, "{}", kind.name());
+    }
+}
+
+/// Starvation test: a bulk client floods 12 requests before an interactive
+/// client's 2 arrive. Fair-share gives the interactive lane an equal slot
+/// share per batch, so it finishes long before the bulk backlog — under
+/// fifo both lanes advance in lockstep and interactive finishes last.
+#[test]
+fn fair_share_bounds_a_bulk_client() {
+    let steps = 6;
+    let run = |kind: SchedulerKind| {
+        let mut e = engine_with(kind);
+        for i in 0..12 {
+            let mut r = req(i, 100 + i, steps, cfg(2.0));
+            r.client_id = Some(Arc::from("bulk"));
+            e.submit(r);
+        }
+        for i in 12..14 {
+            let mut r = req(i, 100 + i, steps, cfg(2.0));
+            r.client_id = Some(Arc::from("live"));
+            e.submit(r);
+        }
+        // how many bulk requests completed before the live client was done?
+        let (mut bulk_done, mut live_done) = (0usize, 0usize);
+        let mut bulk_done_at_live_finish = None;
+        while !e.idle() {
+            for c in e.pump().unwrap() {
+                if c.id < 12 {
+                    bulk_done += 1;
+                } else {
+                    live_done += 1;
+                    if live_done == 2 {
+                        bulk_done_at_live_finish = Some(bulk_done);
+                    }
+                }
+            }
+        }
+        assert_eq!(bulk_done + live_done, 14);
+        bulk_done_at_live_finish.unwrap()
+    };
+    let fair = run(SchedulerKind::FairShare);
+    assert!(
+        fair <= 4,
+        "fair-share let the bulk client starve the interactive one: \
+         {fair}/12 bulk requests finished first"
+    );
+    let fifo = run(SchedulerKind::Fifo);
+    assert!(
+        fair < fifo,
+        "fair-share ({fair} bulk first) must beat fifo ({fifo} bulk first)"
+    );
+}
+
+/// Cost-aware scheduling drains cheap requests ahead of expensive ones
+/// under contention (small batch bucket), without changing any output.
+#[test]
+fn cost_aware_finishes_cheap_requests_first() {
+    let mk_engine = |kind: SchedulerKind| {
+        let be = GmmBackend::new(Gmm::axes(12, 6, 3.0, 0.05)).with_buckets(vec![1, 2, 4]);
+        Engine::with_scheduler(be, kind.build(), Admission::unlimited()).unwrap()
+    };
+    let workload = || {
+        let mut reqs: Vec<Request> = (0..6).map(|i| req(i, 300 + i, 10, cfg(2.0))).collect();
+        // the cheap requests arrive *last* — fifo would serve them last
+        reqs.push(req(6, 306, 10, cond_only()));
+        reqs.push(req(7, 307, 10, cond_only()));
+        reqs
+    };
+
+    let mut e = mk_engine(SchedulerKind::CostAware);
+    for r in workload() {
+        e.submit(r);
+    }
+    let mut order = Vec::new();
+    while !e.idle() {
+        for c in e.pump().unwrap() {
+            order.push(c.id);
+        }
+    }
+    let cheap_pos: Vec<usize> = order
+        .iter()
+        .enumerate()
+        .filter(|(_, &id)| id >= 6)
+        .map(|(pos, _)| pos)
+        .collect();
+    assert!(
+        cheap_pos.iter().all(|&p| p <= 1),
+        "cheap requests must complete first under cost-aware: order {order:?}"
+    );
+
+    // and the outputs still match fifo bit-for-bit
+    let mut fifo = mk_engine(SchedulerKind::Fifo);
+    let fifo_out = fifo.run(workload()).unwrap();
+    let mut ca = mk_engine(SchedulerKind::CostAware);
+    let ca_out = ca.run(workload()).unwrap();
+    for (x, y) in fifo_out.iter().zip(&ca_out) {
+        assert_eq!(x.image, y.image, "request {}", x.id);
+        assert_eq!(x.nfes, y.nfes);
+    }
+}
+
+/// The cost signal updates mid-flight: once AG truncates, the request's
+/// remaining estimate halves and cost-aware pulls it ahead of untruncated
+/// CFG traffic — its completion must not trail the whole CFG pack.
+#[test]
+fn cost_aware_reacts_to_truncation() {
+    let be = GmmBackend::new(Gmm::axes(12, 6, 3.0, 0.05)).with_buckets(vec![1, 2, 4]);
+    let mut e = Engine::with_scheduler(
+        be,
+        SchedulerKind::CostAware.build(),
+        Admission::unlimited(),
+    )
+    .unwrap();
+    // 5 expensive CFG requests, then one AG request that truncates early
+    for i in 0..5 {
+        e.submit(req(i, 400 + i, 12, cfg(2.0)));
+    }
+    e.submit(req(5, 405, 12, ag(2.0, 0.99)));
+    let mut order = Vec::new();
+    while !e.idle() {
+        for c in e.pump().unwrap() {
+            order.push((c.id, c.truncated_at));
+        }
+    }
+    let ag_pos = order.iter().position(|&(id, _)| id == 5).unwrap();
+    assert!(order[ag_pos].1.is_some(), "AG must truncate on the oracle");
+    assert!(
+        ag_pos < order.len() - 1,
+        "truncated AG request finished dead last under cost-aware: {order:?}"
+    );
+}
+
+/// EDF: a late-arriving request with the earliest deadline overtakes the
+/// queue; undeadlined traffic runs after every dated request.
+#[test]
+fn deadline_scheduler_prefers_urgent_requests() {
+    let be = GmmBackend::new(Gmm::axes(12, 6, 3.0, 0.05)).with_buckets(vec![1, 2, 4]);
+    let mut e = Engine::with_scheduler(
+        be,
+        SchedulerKind::Deadline.build(),
+        Admission::unlimited(),
+    )
+    .unwrap();
+    for i in 0..4 {
+        let mut r = req(i, 500 + i, 8, cfg(2.0));
+        r.deadline_ms = Some(10_000 + i * 1000);
+        e.submit(r);
+    }
+    // last to arrive, first to be due
+    let mut urgent = req(4, 504, 8, cfg(2.0));
+    urgent.deadline_ms = Some(100);
+    e.submit(urgent);
+    let mut order = Vec::new();
+    while !e.idle() {
+        for c in e.pump().unwrap() {
+            order.push(c.id);
+        }
+    }
+    assert_eq!(order[0], 4, "urgent request must finish first: {order:?}");
+}
+
+/// Admission budgets shed load without touching in-flight work, and
+/// capacity recovers as requests complete.
+#[test]
+fn admission_sheds_and_recovers_under_load() {
+    let adm = Admission {
+        max_in_flight: Some(4),
+        max_queued_nfes: Some(200),
+    };
+    let mut e =
+        Engine::with_scheduler(backend(12), SchedulerKind::CostAware.build(), adm).unwrap();
+    let mut admitted = 0;
+    let mut shed = 0;
+    for i in 0..8 {
+        match e.try_submit(req(i, 600 + i, 10, cfg(2.0))) {
+            Ok(()) => admitted += 1,
+            Err(_) => shed += 1,
+        }
+    }
+    assert_eq!(admitted, 4, "in-flight cap");
+    assert_eq!(shed, 4);
+    let done = e.drain().unwrap();
+    assert_eq!(done.len(), 4, "admitted requests complete despite shedding");
+    // queue drained → new work admits again
+    e.try_submit(req(20, 620, 10, cfg(2.0))).unwrap();
+    assert_eq!(e.drain().unwrap().len(), 1);
+    assert_eq!(e.telemetry().counter("requests_rejected_total", &[]), 4);
+}

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 verify: the gate every PR must keep green.
 #
-#   scripts/tier1.sh            build + tests + formatting
+#   scripts/tier1.sh            build + tests + lint + formatting
 #   scripts/tier1.sh --no-fmt   skip the formatting check (CI images
 #                               without rustfmt)
 set -euo pipefail
@@ -9,6 +9,12 @@ cd "$(dirname "$0")/.."
 
 cargo build --release
 cargo test -q
+
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "tier1: clippy unavailable, skipping lint" >&2
+fi
 
 if [[ "${1:-}" != "--no-fmt" ]]; then
     if cargo fmt --version >/dev/null 2>&1; then
