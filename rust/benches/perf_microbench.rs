@@ -1,63 +1,161 @@
 //! §Perf microbenchmarks (not a paper figure): the quantities the
 //! optimization pass iterates on.
 //!
-//!  * denoiser executable latency per batch bucket (L2 hot path),
-//!  * amortized per-item cost vs bucket (batching payoff),
-//!  * L3 scheduler overhead: engine loop on a near-zero-cost backend,
+//!  * L3 scheduler overhead: engine loop on a near-zero-cost backend, in
+//!    two flavours — the packed zero-allocation path (current) and a
+//!    legacy adapter emulating the seed path's per-item clones, so every
+//!    run carries its own before/after pair,
 //!  * host combine+solve vs the device guide/solver executables (ablation:
-//!    where should the tiny per-step math live?).
+//!    where should the tiny per-step math live?), fused and unfused,
+//!  * denoiser executable latency per batch bucket (L2 hot path),
+//!  * amortized per-item cost vs bucket (batching payoff).
 //!
-//! Run: `cargo bench --bench perf_microbench`
+//! Run: `cargo bench --bench perf_microbench -- --out BENCH_perf.json`
+//! The `--out` dump (`perfstat::summaries_to_json`) is the machine-readable
+//! perf trajectory: commit a baseline before an optimization PR and the
+//! after-numbers with it.
 
-use adaptive_guidance::backend::{Backend, EvalInput, GmmBackend};
+use adaptive_guidance::backend::{Backend, BatchBuf, BatchOut, EvalInput, GmmBackend};
 use adaptive_guidance::coordinator::engine::Engine;
 use adaptive_guidance::coordinator::policy::{Cfg, Policy};
 use adaptive_guidance::coordinator::request::Request;
 use adaptive_guidance::coordinator::solver;
-use adaptive_guidance::perfstat::{bench, print_summaries};
+use adaptive_guidance::perfstat::{bench, print_summaries, write_json, Summary};
 use adaptive_guidance::runtime;
 use adaptive_guidance::sim::gmm::Gmm;
-use adaptive_guidance::tensor::Tensor;
+use adaptive_guidance::tensor::{self, Tensor};
 use adaptive_guidance::util::cli::Args;
 use adaptive_guidance::util::rng::Rng;
+use anyhow::Result;
+
+/// Emulates the seed path's *backend-side* per-item traffic on top of the
+/// packed interface: every eval row is cloned into owned input vectors,
+/// every score is computed through the allocating `Gmm::eps`, and the
+/// results pass through an intermediate `Vec<Vec<f32>>` like the old
+/// `denoise(&[EvalInput])` return shape. Note this is a **lower bound** on
+/// the true pre-refactor cost — the seed coordinator's own per-step
+/// allocations (latent clones in `eval_input`, three-pass unfused
+/// combine/cosine math, out-of-place solver) still run in their new
+/// zero-alloc form here, so the packed-vs-legacy gap understates the full
+/// improvement.
+struct LegacyVecGmm {
+    gmm: Gmm,
+    buckets: Vec<usize>,
+}
+
+impl Backend for LegacyVecGmm {
+    fn flat_in(&self, _: &str) -> usize {
+        self.gmm.dim
+    }
+    fn flat_out(&self, _: &str) -> usize {
+        self.gmm.dim
+    }
+    fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+    fn denoise_into(&mut self, _: &str, batch: &BatchBuf, out: &mut BatchOut) -> Result<()> {
+        // per-item input clones + allocating eps + Vec<Vec<f32>> results,
+        // like the seed backend path
+        let results: Vec<Vec<f32>> = (0..batch.len())
+            .map(|i| {
+                let x = batch.x_row(i).to_vec();
+                let toks = batch.token_row(i).to_vec();
+                let cond = if toks[0] == 0 {
+                    None
+                } else {
+                    Some((toks[0] - 1) as usize)
+                };
+                self.gmm.eps(&x, batch.t(i) as f64, cond)
+            })
+            .collect();
+        out.reset(self.gmm.dim, batch.len());
+        for (i, eps) in results.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(eps);
+        }
+        Ok(())
+    }
+    fn models(&self) -> Vec<String> {
+        vec!["gmm".to_owned()]
+    }
+}
+
+/// One engine-loop measurement: 16 requests × 10 steps of CFG over a
+/// near-free analytic backend, so the time is almost pure L3 bookkeeping.
+fn engine_loop_row<B: Backend>(name: &str, backend: B, iters: usize) -> (Summary, f64) {
+    let mut engine = Engine::new(backend).expect("engine");
+    let mut id = 0u64;
+    let s = bench(name, 2, iters, || {
+        let reqs: Vec<Request> = (0..16)
+            .map(|i| {
+                id += 1;
+                Request::new(id, "gmm", vec![1 + (i % 4) as i32, 0, 0, 0],
+                             id, 10, Cfg { s: 2.0 }.into_ref())
+            })
+            .collect();
+        engine.run(reqs).unwrap();
+    });
+    let per_nfe_us = s.p50_ms * 1e3 / (16.0 * 10.0 * 2.0);
+    (s, per_nfe_us)
+}
 
 fn main() {
     let args = Args::from_env();
     let iters = args.usize("iters", 30);
     let mut rows = Vec::new();
+    let mut derived: Vec<(&str, f64)> = Vec::new();
 
-    // ---- L3 scheduler overhead: GMM backend is ~free, so the per-item time
-    // is almost pure engine bookkeeping.
+    // ---- L3 scheduler overhead, packed (current) vs legacy per-item
+    // emulation: the engine-loop row this PR's refactor targets.
     {
-        let mut engine = Engine::new(GmmBackend::new(Gmm::axes(768, 4, 3.0, 0.05))).expect("engine");
-        let mut id = 0u64;
-        let s = bench("L3 engine loop (16 req x 10 steps, gmm)", 2, iters, || {
-            let reqs: Vec<Request> = (0..16)
-                .map(|i| {
-                    id += 1;
-                    Request::new(id, "gmm", vec![1 + (i % 4) as i32, 0, 0, 0],
-                                 id, 10, Cfg { s: 2.0 }.into_ref())
-                })
-                .collect();
-            engine.run(reqs).unwrap();
-        });
-        let per_item_us = s.p50_ms * 1e3 / (16.0 * 10.0 * 2.0);
+        let (s, per_nfe) = engine_loop_row(
+            "L3 engine loop packed (16 req x 10 steps, gmm)",
+            GmmBackend::new(Gmm::axes(768, 4, 3.0, 0.05)),
+            iters,
+        );
         rows.push(s);
-        println!("scheduler overhead: ~{per_item_us:.1} us per NFE item (incl. gmm math)\n");
+        derived.push(("engine_loop_packed_per_nfe_us", per_nfe));
+        println!("scheduler overhead (packed): ~{per_nfe:.1} us per NFE item (incl. gmm math)");
+
+        let (s, per_nfe) = engine_loop_row(
+            "L3 engine loop legacy per-item (16 req x 10 steps, gmm)",
+            LegacyVecGmm {
+                gmm: Gmm::axes(768, 4, 3.0, 0.05),
+                buckets: vec![1, 2, 4, 8, 16],
+            },
+            iters,
+        );
+        rows.push(s);
+        derived.push(("engine_loop_legacy_per_nfe_us", per_nfe));
+        println!(
+            "scheduler overhead (legacy backend emulation, lower bound on the \
+             seed cost): ~{per_nfe:.1} us per NFE item\n"
+        );
     }
 
-    // ---- host combine + solve (the per-step non-NFE math)
+    // ---- host combine + solve (the per-step non-NFE math), unfused (seed
+    // sequence) vs the fused single-pass kernel
     {
         let mut rng = Rng::new(1);
         let c = Tensor::new(vec![768], rng.normal_vec(768));
         let u = Tensor::new(vec![768], rng.normal_vec(768));
         let x = rng.normal_vec(768);
-        let x0p = rng.normal_vec(768);
+        let mut x0p = rng.normal_vec(768);
         let coefs = solver::fold_coefs(0.6, 0.55, Some(0.65));
-        rows.push(bench("host combine+cosine+solve (768d)", 10, iters * 10, || {
+        rows.push(bench("host combine+cosine+solve unfused (768d)", 10, iters * 10, || {
             let eps = Tensor::cfg_combine(&c, &u, 7.5);
             std::hint::black_box(c.cosine(&u));
             std::hint::black_box(solver::apply_step(&x, &eps.data, &x0p, &coefs));
+        }));
+        let mut eps = vec![0.0f32; 768];
+        let mut x_ip = x.clone();
+        rows.push(bench("host combine+gamma+solve fused in-place (768d)", 10, iters * 10, || {
+            let g = tensor::combine_and_gamma(
+                &c.data, &u.data, 7.5, &x_ip,
+                coefs.j_x as f32, coefs.j_eps as f32, &mut eps,
+            );
+            std::hint::black_box(g);
+            solver::apply_step_in_place(&mut x_ip, &eps, &mut x0p, &coefs);
+            std::hint::black_box(x_ip[0]);
         }));
     }
 
@@ -102,9 +200,15 @@ fn main() {
     println!();
     print_summaries(&rows);
     println!(
-        "\nreading: per-NFE cost should fall with bucket size (batching pays);\n\
-         host combine+solve should be far below one denoiser NFE (it is the\n\
-         right place for the per-step math — the device round-trip dominates\n\
-         the device guide/solver numbers)."
+        "\nreading: the packed engine-loop row is the per-NFE L3 overhead this\n\
+         repo optimizes; it should sit below the legacy per-item row. Per-NFE\n\
+         cost should fall with bucket size (batching pays); host combine+solve\n\
+         should be far below one denoiser NFE (it is the right place for the\n\
+         per-step math — the device round-trip dominates the device\n\
+         guide/solver numbers)."
     );
+
+    if let Some(path) = args.get("out") {
+        write_json(path, &rows, &derived);
+    }
 }

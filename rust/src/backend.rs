@@ -7,12 +7,24 @@
 //!  * [`GmmBackend`] — the analytic Gaussian-mixture oracle
 //!    ([`sim::gmm`](crate::sim::gmm)): exact scores, no artifacts needed.
 //!    Coordinator unit/property tests and scheduler stress tests run on it.
+//!
+//! # Packed batches (§Perf)
+//!
+//! The primary execution form is [`Backend::denoise_into`] over a
+//! [`BatchBuf`]/[`BatchOut`] pair: one contiguous row-major `batch ×
+//! flat_in` latent buffer with parallel time/token tables in, one
+//! contiguous `batch × flat_out` score buffer out. Both buffers are
+//! engine-owned and reused across calls (`reset` keeps capacity), so a
+//! steady-state serving loop executes batches without touching the heap.
+//! The per-item [`Backend::denoise`] form survives as a default-method
+//! compatibility wrapper for external backends and offline callers.
 
 use anyhow::Result;
 
-use crate::sim::gmm::Gmm;
+use crate::sim::gmm::{Gmm, GmmScratch};
 
-/// One denoiser evaluation request: a single NFE's inputs.
+/// One denoiser evaluation request: a single NFE's inputs. Compatibility
+/// form — the engine's hot path packs rows into a [`BatchBuf`] instead.
 #[derive(Debug, Clone)]
 pub struct EvalInput {
     /// flattened latent (length = `flat_in(model)`)
@@ -21,6 +33,153 @@ pub struct EvalInput {
     pub t: f32,
     /// condition tokens (all-zero = unconditional)
     pub tokens: Vec<i32>,
+}
+
+/// A packed batch of denoiser inputs: a contiguous row-major
+/// `len × flat_in` latent buffer plus parallel per-row time and token
+/// tables. Reusable — [`BatchBuf::reset`] clears rows but keeps capacity,
+/// so the engine fills the same allocation every pump.
+#[derive(Debug, Default)]
+pub struct BatchBuf {
+    xs: Vec<f32>,
+    ts: Vec<f32>,
+    tokens: Vec<i32>,
+    flat_in: usize,
+    tok_width: usize,
+    len: usize,
+}
+
+impl BatchBuf {
+    pub fn new(flat_in: usize, tok_width: usize) -> BatchBuf {
+        let mut b = BatchBuf::default();
+        b.reset(flat_in, tok_width);
+        b
+    }
+
+    /// Drop all rows and set the row geometry; capacity is retained.
+    pub fn reset(&mut self, flat_in: usize, tok_width: usize) {
+        self.xs.clear();
+        self.ts.clear();
+        self.tokens.clear();
+        self.flat_in = flat_in;
+        self.tok_width = tok_width;
+        self.len = 0;
+    }
+
+    /// Append one zeroed row at time `t`; returns mutable views of its
+    /// latent and token slots for the caller to fill in place.
+    pub fn push_row(&mut self, t: f32) -> (&mut [f32], &mut [i32]) {
+        let x0 = self.xs.len();
+        self.xs.resize(x0 + self.flat_in, 0.0);
+        let k0 = self.tokens.len();
+        self.tokens.resize(k0 + self.tok_width, 0);
+        self.ts.push(t);
+        self.len += 1;
+        (&mut self.xs[x0..], &mut self.tokens[k0..])
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Row-major latent length per row.
+    pub fn flat_in(&self) -> usize {
+        self.flat_in
+    }
+
+    /// Token slots per row.
+    pub fn tok_width(&self) -> usize {
+        self.tok_width
+    }
+
+    /// Latent row `i`.
+    pub fn x_row(&self, i: usize) -> &[f32] {
+        &self.xs[i * self.flat_in..(i + 1) * self.flat_in]
+    }
+
+    /// Time of row `i`.
+    pub fn t(&self, i: usize) -> f32 {
+        self.ts[i]
+    }
+
+    /// Token row `i`.
+    pub fn token_row(&self, i: usize) -> &[i32] {
+        &self.tokens[i * self.tok_width..(i + 1) * self.tok_width]
+    }
+
+    /// The whole packed latent buffer (`len * flat_in`).
+    pub fn xs(&self) -> &[f32] {
+        &self.xs
+    }
+
+    /// The packed time table (`len`).
+    pub fn ts(&self) -> &[f32] {
+        &self.ts
+    }
+
+    /// The packed token table (`len * tok_width`).
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+}
+
+/// A packed batch of denoiser outputs: one contiguous row-major
+/// `len × flat_out` score buffer, reused across calls like [`BatchBuf`].
+#[derive(Debug, Default)]
+pub struct BatchOut {
+    data: Vec<f32>,
+    flat_out: usize,
+    len: usize,
+}
+
+impl BatchOut {
+    /// Size for `len` rows of `flat_out` zeros; capacity is retained.
+    /// Rows are deliberately zeroed (one linear pass, trivial next to a
+    /// denoiser NFE) so a backend that under-writes can never leak a stale
+    /// row from a previous, larger batch.
+    pub fn reset(&mut self, flat_out: usize, len: usize) {
+        self.flat_out = flat_out;
+        self.len = len;
+        self.data.clear();
+        self.data.resize(flat_out * len, 0.0);
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn flat_out(&self) -> usize {
+        self.flat_out
+    }
+
+    /// Score row `i`.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.flat_out..(i + 1) * self.flat_out]
+    }
+
+    /// Mutable score row `i` (backends write results here).
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.flat_out..(i + 1) * self.flat_out]
+    }
+
+    /// The whole packed buffer (`len * flat_out`).
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable view of the whole packed buffer.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
 }
 
 /// Batched denoiser execution.
@@ -46,9 +205,46 @@ pub trait Backend {
         *self.buckets().last().expect("backend has no buckets")
     }
 
-    /// Execute one batch of evaluations (`items.len() <= max bucket`);
-    /// returns one flat score vector per item, in order.
-    fn denoise(&mut self, model: &str, items: &[EvalInput]) -> Result<Vec<Vec<f32>>>;
+    /// Validate one request's token row for `model` before admission.
+    /// Backends with a fixed vocabulary or token width override this so
+    /// the serving front door can refuse requests that would
+    /// deterministically fail mid-batch (the engine maps the reason to a
+    /// structured `invalid_request` rejection). The default accepts
+    /// everything.
+    fn validate_tokens(&self, _model: &str, _tokens: &[i32]) -> Result<(), &'static str> {
+        Ok(())
+    }
+
+    /// Execute one packed batch (`batch.len() <= max bucket`): size `out`
+    /// to `batch.len()` rows of `flat_out(model)` and write one score row
+    /// per input row. The caller owns and reuses both buffers across calls;
+    /// implementations must not retain references into them.
+    fn denoise_into(&mut self, model: &str, batch: &BatchBuf, out: &mut BatchOut) -> Result<()>;
+
+    /// Per-item compatibility wrapper over [`Backend::denoise_into`]:
+    /// packs `items` into a fresh [`BatchBuf`] (token rows sized by the
+    /// widest item; narrower rows zero-pad their tail, the all-zero =
+    /// unconditional convention) and splits the result rows back into
+    /// owned vectors. Allocates per call — offline tools and external
+    /// backends only; the engine never takes this path.
+    fn denoise(&mut self, model: &str, items: &[EvalInput]) -> Result<Vec<Vec<f32>>> {
+        let flat_in = self.flat_in(model);
+        let tok_width = items.iter().map(|it| it.tokens.len()).max().unwrap_or(0);
+        let mut batch = BatchBuf::new(flat_in, tok_width);
+        for it in items {
+            anyhow::ensure!(
+                it.x.len() == flat_in,
+                "item latent length {} != flat_in {flat_in} for model {model}",
+                it.x.len()
+            );
+            let (x, toks) = batch.push_row(it.t);
+            x.copy_from_slice(&it.x);
+            toks[..it.tokens.len()].copy_from_slice(&it.tokens);
+        }
+        let mut out = BatchOut::default();
+        self.denoise_into(model, &batch, &mut out)?;
+        Ok((0..batch.len()).map(|i| out.row(i).to_vec()).collect())
+    }
 
     /// Available model names.
     fn models(&self) -> Vec<String>;
@@ -59,10 +255,12 @@ pub trait Backend {
 pub struct GmmBackend {
     pub gmm: Gmm,
     buckets: Vec<usize>,
-    /// number of denoise() calls (lets tests assert batching behaviour)
+    /// number of batch executions (lets tests assert batching behaviour)
     pub calls: usize,
     /// total items executed
     pub items_executed: usize,
+    /// responsibility scratch reused across every mixture-score row
+    scratch: GmmScratch,
 }
 
 impl GmmBackend {
@@ -72,6 +270,7 @@ impl GmmBackend {
             buckets: vec![1, 2, 4, 8, 16],
             calls: 0,
             items_executed: 0,
+            scratch: GmmScratch::default(),
         }
     }
 
@@ -79,6 +278,28 @@ impl GmmBackend {
         assert!(!buckets.is_empty());
         self.buckets = buckets;
         self
+    }
+
+    /// Decode a token row into the mixture condition, rejecting malformed
+    /// rows (empty, or component index out of range) as structured errors
+    /// rather than panicking mid-batch.
+    fn cond_of(gmm: &Gmm, tokens: &[i32]) -> Result<Option<usize>> {
+        let Some(&tok) = tokens.first() else {
+            anyhow::bail!(
+                "empty token row: the GMM backend reads token slot 0 as the \
+                 mixture component (1-based; 0 = unconditional)"
+            );
+        };
+        if tok == 0 {
+            return Ok(None);
+        }
+        anyhow::ensure!(
+            tok >= 1 && (tok as usize) <= gmm.components(),
+            "condition token {tok} out of range: mixture has {} components \
+             (tokens are 1-based; 0 = unconditional)",
+            gmm.components()
+        );
+        Ok(Some((tok - 1) as usize))
     }
 }
 
@@ -95,26 +316,43 @@ impl Backend for GmmBackend {
         &self.buckets
     }
 
-    fn denoise(&mut self, _model: &str, items: &[EvalInput]) -> Result<Vec<Vec<f32>>> {
+    fn validate_tokens(&self, _model: &str, tokens: &[i32]) -> Result<(), &'static str> {
+        let Some(&tok) = tokens.first() else {
+            return Err("tokens must be non-empty (slot 0 selects the mixture component)");
+        };
+        if tok != 0 && !(tok >= 1 && (tok as usize) <= self.gmm.components()) {
+            return Err("condition token out of range for this model's component vocabulary");
+        }
+        Ok(())
+    }
+
+    fn denoise_into(&mut self, _model: &str, batch: &BatchBuf, out: &mut BatchOut) -> Result<()> {
         let max = *self.buckets.last().unwrap();
         anyhow::ensure!(
-            items.len() <= max,
+            batch.len() <= max,
             "batch {} exceeds max bucket {max}",
-            items.len()
+            batch.len()
+        );
+        anyhow::ensure!(
+            batch.flat_in() == self.gmm.dim,
+            "packed row length {} != gmm dim {}",
+            batch.flat_in(),
+            self.gmm.dim
         );
         self.calls += 1;
-        self.items_executed += items.len();
-        Ok(items
-            .iter()
-            .map(|it| {
-                let cond = if it.tokens[0] == 0 {
-                    None
-                } else {
-                    Some((it.tokens[0] - 1) as usize)
-                };
-                self.gmm.eps(&it.x, it.t as f64, cond)
-            })
-            .collect())
+        self.items_executed += batch.len();
+        out.reset(self.gmm.dim, batch.len());
+        for i in 0..batch.len() {
+            let cond = Self::cond_of(&self.gmm, batch.token_row(i))?;
+            self.gmm.eps_into(
+                batch.x_row(i),
+                batch.t(i) as f64,
+                cond,
+                out.row_mut(i),
+                &mut self.scratch,
+            );
+        }
+        Ok(())
     }
 
     fn models(&self) -> Vec<String> {
@@ -157,5 +395,97 @@ mod tests {
             })
             .collect();
         assert!(be.denoise("gmm", &items).is_err());
+    }
+
+    #[test]
+    fn gmm_backend_rejects_empty_tokens_with_an_error() {
+        let mut be = GmmBackend::new(Gmm::axes(4, 2, 2.0, 0.1));
+        let item = EvalInput {
+            x: vec![0.0; 4],
+            t: 0.5,
+            tokens: Vec::new(),
+        };
+        let err = be.denoise("gmm", &[item]).unwrap_err();
+        assert!(err.to_string().contains("empty token row"), "{err}");
+    }
+
+    #[test]
+    fn gmm_backend_rejects_out_of_range_component() {
+        let mut be = GmmBackend::new(Gmm::axes(4, 2, 2.0, 0.1));
+        let mk = |tok: i32| EvalInput {
+            x: vec![0.0; 4],
+            t: 0.5,
+            tokens: vec![tok, 0, 0, 0],
+        };
+        let err = be.denoise("gmm", &[mk(3)]).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        assert!(be.denoise("gmm", &[mk(-1)]).is_err());
+    }
+
+    #[test]
+    fn packed_and_per_item_paths_agree_bitwise() {
+        let gmm = Gmm::axes(6, 3, 2.5, 0.1);
+        let mut be = GmmBackend::new(gmm.clone());
+        let items: Vec<EvalInput> = (0..3)
+            .map(|i| EvalInput {
+                x: (0..6).map(|j| (i * 6 + j) as f32 * 0.1 - 0.7).collect(),
+                t: 0.4 + 0.1 * i as f32,
+                tokens: vec![i as i32, 0, 0, 0],
+            })
+            .collect();
+        let via_compat = be.denoise("gmm", &items).unwrap();
+        // direct packed path
+        let mut batch = BatchBuf::new(6, 4);
+        for it in &items {
+            let (x, toks) = batch.push_row(it.t);
+            x.copy_from_slice(&it.x);
+            toks.copy_from_slice(&it.tokens);
+        }
+        let mut out = BatchOut::default();
+        be.denoise_into("gmm", &batch, &mut out).unwrap();
+        for (i, row) in via_compat.iter().enumerate() {
+            assert_eq!(&row[..], out.row(i), "row {i}");
+        }
+        // and both agree with the allocating oracle call
+        for (i, it) in items.iter().enumerate() {
+            let cond = if it.tokens[0] == 0 {
+                None
+            } else {
+                Some((it.tokens[0] - 1) as usize)
+            };
+            assert_eq!(via_compat[i], gmm.eps(&it.x, it.t as f64, cond));
+        }
+    }
+
+    #[test]
+    fn batch_buf_reset_keeps_capacity_and_geometry() {
+        let mut b = BatchBuf::new(4, 2);
+        for i in 0..3 {
+            let (x, toks) = b.push_row(i as f32);
+            x.fill(i as f32);
+            toks.fill(i);
+        }
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.x_row(1), &[1.0; 4]);
+        assert_eq!(b.token_row(2), &[2, 2]);
+        assert_eq!(b.t(0), 0.0);
+        let cap = b.xs.capacity();
+        b.reset(4, 2);
+        assert!(b.is_empty());
+        assert_eq!(b.xs.capacity(), cap, "reset must keep capacity");
+        let (x, _) = b.push_row(9.0);
+        assert_eq!(x, &[0.0; 4], "fresh rows are zeroed");
+    }
+
+    #[test]
+    fn batch_out_rows_are_contiguous() {
+        let mut o = BatchOut::default();
+        o.reset(3, 2);
+        o.row_mut(0).copy_from_slice(&[1.0, 2.0, 3.0]);
+        o.row_mut(1).copy_from_slice(&[4.0, 5.0, 6.0]);
+        assert_eq!(o.data(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(o.row(1), &[4.0, 5.0, 6.0]);
+        o.reset(2, 1);
+        assert_eq!(o.data(), &[0.0, 0.0], "reset zeroes the active rows");
     }
 }

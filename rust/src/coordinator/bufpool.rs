@@ -1,0 +1,118 @@
+//! A length-keyed pool of reusable `f32` buffers (§Perf: buffer ownership).
+//!
+//! The engine owns one [`BufPool`] and threads it through the whole
+//! per-step path: score rows copied out of a batch, the combined epsilon of
+//! every solver step, and any other fixed-length scratch the request state
+//! machine needs. Buffers circulate — `take` hands out a recycled buffer of
+//! the exact length when one is free, `put` returns it — so after a short
+//! warmup a steady-state serving loop performs **zero heap allocations**
+//! per pump (pinned by `rust/tests/zero_alloc.rs`).
+//!
+//! Contents of a taken buffer are unspecified: callers must fully overwrite
+//! it (every consumer in the engine does a full `copy_from_slice` or a full
+//! write pass). Free lists are capped per length class so a shifting
+//! workload cannot grow the pool without bound.
+
+use std::collections::HashMap;
+
+/// Most free buffers retained per length class; returns beyond the cap are
+/// dropped. High enough that any realistic batch×steps working set recycles
+/// fully, low enough to bound memory when request shapes change.
+const PER_LEN_CAP: usize = 1024;
+
+/// Length-keyed free lists of `Vec<f32>` buffers. See the module docs for
+/// the ownership story.
+#[derive(Debug, Default)]
+pub struct BufPool {
+    free: HashMap<usize, Vec<Vec<f32>>>,
+    allocs: u64,
+    reuses: u64,
+}
+
+impl BufPool {
+    pub fn new() -> BufPool {
+        BufPool::default()
+    }
+
+    /// Take a buffer of exactly `len` elements. Contents are unspecified —
+    /// the caller must fully overwrite them before reading.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        match self.free.get_mut(&len).and_then(Vec::pop) {
+            Some(buf) => {
+                self.reuses += 1;
+                buf
+            }
+            None => {
+                self.allocs += 1;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// Return a buffer for reuse, keyed by its current length.
+    pub fn put(&mut self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let list = self.free.entry(buf.len()).or_default();
+        if list.len() < PER_LEN_CAP {
+            list.push(buf);
+        }
+    }
+
+    /// Fresh allocations performed by `take` (misses).
+    pub fn allocs(&self) -> u64 {
+        self.allocs
+    }
+
+    /// `take` calls served from the free lists (hits).
+    pub fn reuses(&self) -> u64 {
+        self.reuses
+    }
+
+    /// Buffers currently sitting in the free lists.
+    pub fn pooled(&self) -> usize {
+        self.free.values().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_take_recycles_by_length() {
+        let mut p = BufPool::new();
+        let a = p.take(8);
+        let b = p.take(4);
+        assert_eq!((a.len(), b.len()), (8, 4));
+        assert_eq!(p.allocs(), 2);
+        p.put(a);
+        p.put(b);
+        assert_eq!(p.pooled(), 2);
+        let a2 = p.take(8);
+        assert_eq!(a2.len(), 8);
+        assert_eq!(p.reuses(), 1);
+        assert_eq!(p.allocs(), 2, "the 8-length take must be a pool hit");
+        // a length with no free buffer allocates
+        let c = p.take(16);
+        assert_eq!(c.len(), 16);
+        assert_eq!(p.allocs(), 3);
+    }
+
+    #[test]
+    fn zero_length_buffers_are_not_pooled() {
+        let mut p = BufPool::new();
+        p.put(Vec::new());
+        assert_eq!(p.pooled(), 0);
+    }
+
+    #[test]
+    fn free_lists_are_capped() {
+        let mut p = BufPool::new();
+        for _ in 0..(PER_LEN_CAP + 10) {
+            p.put(vec![0.0; 4]);
+        }
+        assert_eq!(p.pooled(), PER_LEN_CAP);
+    }
+}

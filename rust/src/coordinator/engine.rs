@@ -14,26 +14,55 @@
 //! ([`crate::coordinator::request::RequestState::remaining_nfes`]) that
 //! policy truncation keeps tightening. An [`Admission`] budget bounds the
 //! queue (in-flight requests and queued NFEs) and a [`Telemetry`] registry
-//! tracks occupancy, queue depth, per-policy NFE totals/savings, and
-//! per-request queue-wait vs execute time.
+//! tracks occupancy, queue depth, per-policy NFE totals/savings,
+//! per-request queue-wait vs execute time, and per-policy deadline misses.
 //!
 //! Single-threaded and deterministic: `submit()`/`try_submit()` add
 //! requests (possible at any time, enabling open-loop arrival processes),
 //! `pump()` executes one batch and advances whatever completed, `run()`
 //! drains to completion. Scheduling reorders *work*, never *results*: a
 //! request's completion is bit-identical under every scheduler.
+//!
+//! # §Perf: buffer ownership
+//!
+//! The per-step path is allocation-free at steady state (pinned by
+//! `rust/tests/zero_alloc.rs`). Ownership flows one way:
+//!
+//! * the **engine** owns the reusable [`BatchBuf`]/[`BatchOut`] pair (one
+//!   packed `batch × flat` buffer each, capacity retained across pumps),
+//!   the scheduler's pop buffer, and the [`BufPool`];
+//! * the **pool** lends fixed-length score buffers: `pump` copies each
+//!   result row into a pooled buffer and hands it to the request;
+//! * the **request state** holds those buffers only within a step —
+//!   [`RequestState::complete_step`] fuses combine+gamma, advances the
+//!   solver in place, and returns every non-recorded buffer to the pool.
+//!
+//! New policies/schedulers must not reintroduce per-step allocations:
+//! request inputs are written via `fill_eval_input` (never cloned), hot
+//! telemetry goes through pre-computed [`MetricKey`]s, and anything that
+//! must outlive a step (history, completions) is the only thing allowed to
+//! allocate.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::backend::Backend;
-use crate::coordinator::request::{Completion, Request, RequestState};
-use crate::sched::{Admission, AdmitError, Fifo, RequestMeta, Scheduler, Telemetry, WorkItem};
+use crate::backend::{Backend, BatchBuf, BatchOut};
+use crate::coordinator::bufpool::BufPool;
+use crate::coordinator::policy::PolicyState;
+use crate::coordinator::request::{Completion, EvalKind, Request, RequestState};
+use crate::sched::{
+    Admission, AdmitError, Fifo, MetricKey, RequestMeta, Scheduler, Telemetry, WorkItem,
+};
 
 /// Queue-wait / execute-time histograms: 0..10 s in 100 ms bins.
 const LATENCY_HIST: (f64, f64, usize) = (0.0, 10_000.0, 100);
+
+/// Largest step count accepted through the validated front door
+/// ([`Engine::try_submit`]); the unvalidated [`Engine::submit`] preload
+/// path is not capped.
+pub const MAX_STEPS: usize = 100_000;
 
 /// Engine-side per-request bookkeeping: scheduling labels, the live
 /// remaining-cost estimate, and queue-wait/execute timing.
@@ -76,6 +105,18 @@ pub struct Engine<B: Backend> {
     /// every deadline on ONE clock, and client clocks are not it
     epoch: Instant,
     telemetry: Telemetry,
+    /// §Perf: the reusable per-pump buffers (see module docs)
+    pool: BufPool,
+    batch: BatchBuf,
+    out: BatchOut,
+    batch_items: Vec<WorkItem>,
+    ready: Vec<usize>,
+    /// pre-computed keys for the per-pump metrics (no label allocation on
+    /// the hot path)
+    k_batch_occupancy: MetricKey,
+    k_active: MetricKey,
+    k_queue_depth: MetricKey,
+    k_queued_nfes: MetricKey,
 }
 
 impl<B: Backend> Engine<B> {
@@ -101,6 +142,11 @@ impl<B: Backend> Engine<B> {
                  (rebuild the artifacts or fix the backend's bucket list)"
             );
         };
+        let mut telemetry = Telemetry::new();
+        let k_batch_occupancy = telemetry.metric_key("batch_occupancy", &[]);
+        let k_active = telemetry.metric_key("active_requests", &[]);
+        let k_queue_depth = telemetry.metric_key("queue_depth", &[]);
+        let k_queued_nfes = telemetry.metric_key("queued_nfes", &[]);
         Ok(Engine {
             backend,
             sched,
@@ -114,7 +160,16 @@ impl<B: Backend> Engine<B> {
             items: 0,
             max_bucket,
             epoch: Instant::now(),
-            telemetry: Telemetry::new(),
+            telemetry,
+            pool: BufPool::new(),
+            batch: BatchBuf::default(),
+            out: BatchOut::default(),
+            batch_items: Vec::new(),
+            ready: Vec::new(),
+            k_batch_occupancy,
+            k_active,
+            k_queue_depth,
+            k_queued_nfes,
         })
     }
 
@@ -167,6 +222,11 @@ impl<B: Backend> Engine<B> {
         &self.telemetry
     }
 
+    /// The engine's buffer pool (tests pin its recycling behaviour).
+    pub fn pool(&self) -> &BufPool {
+        &self.pool
+    }
+
     /// Request slots ever allocated (tests pin the free-list reuse).
     pub fn state_slots(&self) -> usize {
         self.states.len()
@@ -189,10 +249,96 @@ impl<B: Backend> Engine<B> {
         ])
     }
 
-    /// Admit a request against the admission budget; on rejection the
-    /// request is dropped and the caller replies `queue_full`. In-flight
-    /// requests are never affected by a rejection.
+    /// Malformed-request checks shared by the serving front door: a bad
+    /// request must be refused here with a typed error — once admitted it
+    /// would either trip a state-machine assert or poison a whole batch
+    /// mid-pump (which the server treats as fatal). Shape coverage: every
+    /// eval the policy plans under a fresh state (a superset of any
+    /// later, truncated state's kinds for the built-in policies) must fit
+    /// the model's flat input exactly.
+    fn validate(&self, req: &Request) -> Result<(), AdmitError> {
+        if req.steps == 0 {
+            return Err(AdmitError::Invalid {
+                reason: "steps must be at least 1",
+            });
+        }
+        // bound the admission-path work (this plan scan and `max_nfes` are
+        // both O(steps)) against absurd client-controlled step counts;
+        // generous — the paper's protocols use 20..1000 steps
+        if req.steps > MAX_STEPS {
+            return Err(AdmitError::Invalid {
+                reason: "steps exceeds the supported maximum",
+            });
+        }
+        if req.tokens.is_empty() {
+            return Err(AdmitError::Invalid {
+                reason: "tokens must be non-empty (all-zero = unconditional)",
+            });
+        }
+        if let Err(reason) = self.backend.validate_tokens(&req.model, &req.tokens) {
+            return Err(AdmitError::Invalid { reason });
+        }
+        if let Some(neg) = &req.neg_tokens {
+            if neg.len() != req.tokens.len() {
+                return Err(AdmitError::Invalid {
+                    reason: "neg_tokens width must match tokens width",
+                });
+            }
+            if let Err(reason) = self.backend.validate_tokens(&req.model, neg) {
+                return Err(AdmitError::Invalid { reason });
+            }
+        }
+        let flat_out = self.backend.flat_out(&req.model);
+        let flat_in = self.backend.flat_in(&req.model);
+        if let Some(src) = &req.src_image {
+            if src.len() != flat_out {
+                return Err(AdmitError::Invalid {
+                    reason: "src_image length must equal the model's flat output length",
+                });
+            }
+        }
+        if let Some(noise) = &req.init_noise {
+            if noise.len() != flat_out {
+                return Err(AdmitError::Invalid {
+                    reason: "init_noise length must equal the model's flat output length",
+                });
+            }
+        }
+        let state = PolicyState::new();
+        for step in 0..req.steps {
+            let plan = req.policy.plan(step, req.steps, &state);
+            for &kind in RequestState::evals_for(&plan) {
+                let edit = req.src_image.is_some()
+                    && matches!(
+                        kind,
+                        EvalKind::EditFull | EvalKind::EditImg | EvalKind::EditNull
+                    );
+                let need = if edit {
+                    flat_out + req.src_image.as_ref().unwrap().len()
+                } else {
+                    flat_out
+                };
+                if need != flat_in {
+                    return Err(AdmitError::Invalid {
+                        reason: "policy/model shape mismatch: a planned eval's input \
+                                 length does not match the model's flat input \
+                                 (editing policies need an editing model and vice versa)",
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Admit a request against the shape checks and the admission budget;
+    /// on rejection the request is dropped and the caller replies
+    /// `invalid_request`/`queue_full`. In-flight requests are never
+    /// affected by a rejection.
     pub fn try_submit(&mut self, req: Request) -> Result<(), AdmitError> {
+        if let Err(e) = self.validate(&req) {
+            self.telemetry.inc("requests_rejected_total", &[], 1);
+            return Err(e);
+        }
         let cost = req.policy.max_nfes(req.steps);
         if let Err(e) = self.admission.check(self.active, self.queued_nfes, cost) {
             self.telemetry.inc("requests_rejected_total", &[], 1);
@@ -281,13 +427,35 @@ impl<B: Backend> Engine<B> {
         }
     }
 
+    /// Error-path rollback: hand the taken-but-unexecuted work items back
+    /// to the scheduler. Nothing was delivered, so no other engine state
+    /// needs unwinding; within a FairShare lane the re-pushed items land
+    /// behind any untaken ones (an ordering wobble confined to the error
+    /// path). A deterministic failure will surface again on the next
+    /// pump — as an error, never as a hang or a leak.
+    fn requeue_failed_batch(&mut self) {
+        for it in self.batch_items.drain(..) {
+            let meta = self.metas[it.state_idx].as_ref().expect("meta for queued item");
+            let rmeta = RequestMeta {
+                id: meta.id,
+                client: meta.client.clone(),
+                priority: meta.priority,
+                deadline_ms: meta.deadline_ms,
+                remaining_nfes: meta.cost,
+            };
+            self.sched.push(it, &rmeta);
+        }
+    }
+
     fn update_gauges(&mut self) {
-        self.telemetry
-            .set_gauge("active_requests", &[], self.active as f64);
-        self.telemetry
-            .set_gauge("queue_depth", &[], self.sched.len() as f64);
-        self.telemetry
-            .set_gauge("queued_nfes", &[], self.queued_nfes as f64);
+        let (active, depth, nfes) = (
+            self.active as f64,
+            self.sched.len() as f64,
+            self.queued_nfes as f64,
+        );
+        self.telemetry.set_gauge_key(&self.k_active, active);
+        self.telemetry.set_gauge_key(&self.k_queue_depth, depth);
+        self.telemetry.set_gauge_key(&self.k_queued_nfes, nfes);
     }
 
     fn observe_completion(&mut self, meta: &Meta, done: &Completion, at: Instant) {
@@ -307,6 +475,13 @@ impl<B: Backend> Engine<B> {
             &[("policy", policy), ("client", client)],
             1,
         );
+        if let Some(deadline) = meta.deadline_ms {
+            let done_ms = at.saturating_duration_since(self.epoch).as_millis() as u64;
+            if done_ms > deadline {
+                self.telemetry
+                    .inc("deadline_missed_total", &[("policy", policy)], 1);
+            }
+        }
         if let Some(first) = meta.first_exec {
             let wait = first.saturating_duration_since(meta.submitted).as_secs_f64() * 1e3;
             let exec = at.saturating_duration_since(first).as_secs_f64() * 1e3;
@@ -321,60 +496,108 @@ impl<B: Backend> Engine<B> {
     /// Execute one batch of work items (same model, up to the largest
     /// bucket), as chosen by the scheduler, and advance all requests whose
     /// step completed. Returns the completions this round produced.
+    ///
+    /// §Perf: at steady state (no admissions, no completions in the round)
+    /// this performs zero heap allocations — inputs pack into the reused
+    /// [`BatchBuf`], outputs land in the reused [`BatchOut`], and per-slot
+    /// result buffers cycle through the [`BufPool`].
     pub fn pump(&mut self) -> Result<Vec<Completion>> {
         let Some(model) = self.sched.peek_model() else {
             return Ok(Vec::new());
         };
         let max_bucket = self.backend.max_batch(&model);
-        let batch_items = self.sched.take_batch(&model, max_bucket);
+        self.batch_items.clear();
+        self.sched.take_batch(&model, max_bucket, &mut self.batch_items);
         // a scheduler that peeks a model but hands back nothing would spin
         // `drain` forever — surface the bug as an error instead
         anyhow::ensure!(
-            !batch_items.is_empty(),
+            !self.batch_items.is_empty(),
             "scheduler `{}` peeked model `{model}` but returned an empty batch",
             self.sched.name()
         );
 
+        let exec_start = Instant::now();
+        let flat_in = self.backend.flat_in(&model);
+        let flat_out = self.backend.flat_out(&model);
+
+        // pack + execute, fallibly: on any error the un-executed items go
+        // back to the scheduler (`requeue_failed_batch`), so accounting
+        // (`active`/`queued_nfes`/pending slots) stays consistent and the
+        // engine remains usable — the caller just sees the error.
+        let staged: Result<()> = (|| {
+            // the token table is as wide as the widest request in the
+            // batch; narrower rows zero-fill their tail
+            // (`fill_eval_input`), matching the backends' all-zero =
+            // unconditional convention
+            let tok_width = self
+                .batch_items
+                .iter()
+                .map(|it| {
+                    let st = self.states[it.state_idx].as_ref().expect("state for queued item");
+                    st.req.tokens.len()
+                })
+                .max()
+                .unwrap_or(0);
+            self.batch.reset(flat_in, tok_width);
+            for it in &self.batch_items {
+                let st = self.states[it.state_idx].as_ref().expect("state for queued item");
+                let kind = st.current_evals()[it.slot];
+                anyhow::ensure!(
+                    st.eval_input_len(kind) == flat_in,
+                    "request {} input length {} != flat_in {flat_in} for model {model}",
+                    st.req.id,
+                    st.eval_input_len(kind)
+                );
+                let (x_row, tok_row) = self.batch.push_row(st.current_t() as f32);
+                st.fill_eval_input(kind, x_row, tok_row);
+            }
+            self.backend.denoise_into(&model, &self.batch, &mut self.out)?;
+            anyhow::ensure!(
+                self.out.len() == self.batch.len() && self.out.flat_out() == flat_out,
+                "backend sized the output {}x{} for a {}x{flat_out} batch",
+                self.out.len(),
+                self.out.flat_out(),
+                self.batch.len()
+            );
+            Ok(())
+        })();
+        if let Err(e) = staged {
+            self.requeue_failed_batch();
+            self.telemetry.inc("pump_errors_total", &[], 1);
+            return Err(e);
+        }
+
         // queue-wait accounting: a request starts executing at its first
         // batched item
-        let exec_start = Instant::now();
-        for it in &batch_items {
+        for it in &self.batch_items {
             let meta = self.metas[it.state_idx].as_mut().expect("meta for queued item");
             if meta.first_exec.is_none() {
                 meta.first_exec = Some(exec_start);
             }
         }
-
-        // build inputs
-        let inputs: Vec<_> = batch_items
-            .iter()
-            .map(|it| {
-                let st = self.states[it.state_idx].as_ref().unwrap();
-                let kind = st.current_evals()[it.slot];
-                st.eval_input(kind)
-            })
-            .collect();
-
-        let outputs = self.backend.denoise(&model, &inputs)?;
         self.batches += 1;
-        self.items += inputs.len();
-        self.telemetry.observe(
-            "batch_occupancy",
-            &[],
-            inputs.len() as f64,
+        self.items += self.batch.len();
+        let occupancy = self.batch.len() as f64;
+        self.telemetry.observe_key(
+            &self.k_batch_occupancy,
+            occupancy,
             0.5,
             self.max_bucket as f64 + 0.5,
             self.max_bucket,
         );
 
-        // deliver results; collect which states finished their step
-        let mut ready = Vec::new();
-        for (item, eps) in batch_items.into_iter().zip(outputs) {
-            let st = self.states[item.state_idx].as_mut().unwrap();
-            if st.deliver(item.slot, eps) {
-                ready.push(item.state_idx);
+        // deliver results: copy each score row into a pooled buffer owned
+        // by the request until its step completes
+        let mut ready = std::mem::take(&mut self.ready);
+        ready.clear();
+        for (row, it) in self.batch_items.iter().enumerate() {
+            let st = self.states[it.state_idx].as_mut().expect("state for queued item");
+            let mut buf = self.pool.take(flat_out);
+            buf.copy_from_slice(self.out.row(row));
+            if st.deliver(it.slot, buf) {
+                ready.push(it.state_idx);
             }
-            let meta = self.metas[item.state_idx].as_mut().unwrap();
+            let meta = self.metas[it.state_idx].as_mut().expect("meta for queued item");
             meta.cost = meta.cost.saturating_sub(1);
             self.queued_nfes = self.queued_nfes.saturating_sub(1);
         }
@@ -383,9 +606,9 @@ impl<B: Backend> Engine<B> {
         // deliver before `deliver` returns true exactly once).
         let mut completions = Vec::new();
         let done_at = Instant::now();
-        for idx in ready {
-            let st = self.states[idx].as_mut().unwrap();
-            if let Some(done) = st.complete_step() {
+        for &idx in &ready {
+            let st = self.states[idx].as_mut().expect("state for ready request");
+            if let Some(done) = st.complete_step(&mut self.pool) {
                 self.states[idx] = None;
                 self.active -= 1;
                 self.sched.forget(idx);
@@ -407,6 +630,7 @@ impl<B: Backend> Engine<B> {
                 self.states[idx] = Some(st);
             }
         }
+        self.ready = ready;
         self.update_gauges();
         Ok(completions)
     }
@@ -436,7 +660,7 @@ impl<B: Backend> Engine<B> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::{Backend, EvalInput, GmmBackend};
+    use crate::backend::{Backend, BatchBuf, BatchOut, GmmBackend};
     use crate::coordinator::policy::{ag, cfg, cond_only, PolicyRef};
     use crate::sched::SchedulerKind;
     use crate::sim::gmm::Gmm;
@@ -468,8 +692,8 @@ mod tests {
         fn buckets(&self) -> &[usize] {
             &[]
         }
-        fn denoise(&mut self, _: &str, _: &[EvalInput]) -> Result<Vec<Vec<f32>>> {
-            Ok(Vec::new())
+        fn denoise_into(&mut self, _: &str, _: &BatchBuf, _: &mut BatchOut) -> Result<()> {
+            Ok(())
         }
         fn models(&self) -> Vec<String> {
             Vec::new()
@@ -633,6 +857,133 @@ mod tests {
         }
         assert_eq!(e.state_slots(), 1, "completed slot must be recycled");
         assert_eq!(e.queued_nfes(), 0);
+    }
+
+    #[test]
+    fn pump_errors_roll_back_the_batch() {
+        // try_submit would refuse token 99 (out of the 4-component
+        // vocabulary), but the unvalidated `submit` preload path can still
+        // inject it: the backend then errors mid-batch and pump must fail
+        // cleanly without leaking engine state
+        let mut e = engine();
+        e.submit(req(0, 99, cfg(2.0)));
+        let before = (e.active(), e.queued_nfes(), e.queue_len());
+        let err = e.pump().unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        assert_eq!(
+            (e.active(), e.queued_nfes(), e.queue_len()),
+            before,
+            "a failed pump must not leak accounting or work items"
+        );
+        // the failure is deterministic: pumping again errors again (never
+        // hangs), and the engine's bookkeeping stays intact
+        assert!(e.pump().is_err());
+        assert_eq!(e.queue_len(), before.2);
+        assert_eq!(e.telemetry().counter("pump_errors_total", &[]), 2);
+    }
+
+    #[test]
+    fn editing_shape_mismatches_are_rejected_at_admission() {
+        use crate::coordinator::policy::pix2pix;
+        let mut e = engine();
+        // pix2pix plans triple evals of x ‖ src, but the gmm model's input
+        // is flat_out-sized — refuse at the door, don't poison a batch
+        let mut r = req(0, 1, pix2pix(7.5, 1.5, None, None));
+        r.src_image = Some(vec![0.5; 8]);
+        let err = e.try_submit(r).unwrap_err();
+        assert!(err.to_string().contains("shape mismatch"), "{err}");
+        // wrong-length src_image is refused even before the plan check
+        let mut r = req(1, 1, pix2pix(7.5, 1.5, None, None));
+        r.src_image = Some(vec![0.5; 3]);
+        assert!(e.try_submit(r).unwrap_err().to_string().contains("src_image"));
+        // wrong-length init_noise would trip a state-machine assert
+        let mut r = req(2, 1, cfg(2.0));
+        r.init_noise = Some(vec![0.0; 5]);
+        assert!(e.try_submit(r).unwrap_err().to_string().contains("init_noise"));
+        assert!(e.idle());
+    }
+
+    #[test]
+    fn malformed_requests_are_rejected_at_admission() {
+        let mut e = engine();
+        let err = e
+            .try_submit(Request::new(0, "gmm", vec![], 1, 4, cfg(2.0)))
+            .unwrap_err();
+        assert!(err.to_string().contains("invalid request"), "{err}");
+        let mut bad_neg = req(1, 1, cfg(2.0));
+        bad_neg.neg_tokens = Some(vec![1, 2]);
+        assert!(e.try_submit(bad_neg).unwrap_err().to_string().contains("neg_tokens"));
+        let mut bad_steps = req(2, 1, cfg(2.0));
+        bad_steps.steps = 0;
+        assert!(e.try_submit(bad_steps).is_err());
+        // out-of-vocabulary condition token: refused by the backend hook
+        let err = e.try_submit(req(3, 99, cfg(2.0))).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        // absurd step counts are capped before any O(steps) admission work
+        let mut huge = req(4, 1, cfg(2.0));
+        huge.steps = MAX_STEPS + 1;
+        assert!(e.try_submit(huge).unwrap_err().to_string().contains("steps"));
+        // nothing was admitted, nothing panicked, the engine stays usable
+        assert!(e.idle());
+        assert_eq!(e.telemetry().counter("requests_rejected_total", &[]), 5);
+        e.try_submit(req(5, 1, cfg(2.0))).unwrap();
+        assert_eq!(e.drain().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn mixed_token_widths_pack_with_zero_padding() {
+        // a batch may mix requests with different token widths; narrower
+        // rows zero-pad (all-zero = unconditional convention), so results
+        // match the explicitly padded form bit-for-bit
+        let mut e = engine();
+        let out = e
+            .run(vec![
+                Request::new(0, "gmm", vec![1, 0, 0, 0], 100, 4, cfg(2.0)),
+                Request::new(1, "gmm", vec![2], 101, 4, cfg(2.0)),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let mut solo = engine();
+        let wide = solo
+            .run(vec![Request::new(1, "gmm", vec![2, 0, 0, 0], 101, 4, cfg(2.0))])
+            .unwrap();
+        assert_eq!(out[1].image, wide[0].image);
+    }
+
+    #[test]
+    fn buffer_pool_recycles_across_steps_and_requests() {
+        let mut e = engine();
+        e.run(vec![req(0, 1, cfg(2.0))]).unwrap();
+        let allocs_first = e.pool().allocs();
+        assert!(allocs_first > 0, "the warmup request must populate the pool");
+        e.run(vec![req(1, 2, cfg(2.0))]).unwrap();
+        assert_eq!(
+            e.pool().allocs(),
+            allocs_first,
+            "an identically-shaped follow-up request must be served \
+             entirely from recycled buffers"
+        );
+        assert!(e.pool().reuses() > 0);
+    }
+
+    #[test]
+    fn deadline_misses_are_counted_per_policy() {
+        let mut e = engine();
+        let mut missed = req(0, 1, cfg(2.0));
+        missed.deadline_ms = Some(0); // due immediately → must be missed
+        e.submit(missed);
+        let mut easy = req(1, 2, cfg(2.0));
+        easy.deadline_ms = Some(3_600_000); // an hour of slack → never missed
+        e.submit(easy);
+        // a request without a deadline never counts as a miss
+        e.submit(req(2, 3, cond_only()));
+        // make sure the wall clock has advanced past the 0 ms deadline
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let done = e.drain().unwrap();
+        assert_eq!(done.len(), 3);
+        let t = e.telemetry();
+        assert_eq!(t.counter("deadline_missed_total", &[("policy", "cfg")]), 1);
+        assert_eq!(t.counter("deadline_missed_total", &[("policy", "cond")]), 0);
     }
 
     #[test]

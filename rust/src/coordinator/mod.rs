@@ -9,10 +9,13 @@
 //!   API (no engine changes)
 //! * [`solver`] — cosine-VP schedule + DPM-Solver++(2M) coefficient folding
 //! * [`request`] — per-request state machine (combine, policy state, history)
+//! * [`bufpool`] — the length-keyed buffer pool behind the zero-allocation
+//!   steady-state hot path (§Perf: buffer ownership)
 //! * [`engine`] — continuation batching of NFE work items over a
 //!   [`crate::Backend`], ordered by a pluggable [`crate::sched::Scheduler`]
 //!   with admission control and telemetry ([`crate::sched`])
 
+pub mod bufpool;
 pub mod engine;
 pub mod ext;
 pub mod policy;

@@ -5,14 +5,27 @@
 //! engine (`engine.rs`) only moves *evaluation results* between the backend
 //! and this state machine; all guidance semantics live in the policy trait
 //! (`policy.rs`) — this file never inspects which policy it is running.
+//!
+//! # §Perf: buffer ownership
+//!
+//! The steady-state step path is allocation-free. Backend inputs are
+//! written in place into packed batch rows ([`RequestState::fill_eval_input`]
+//! — no latent/token clones), score results arrive in buffers drawn from
+//! the engine's [`BufPool`] and are returned to it by
+//! [`RequestState::complete_step`], which runs the fused combine+gamma
+//! kernel ([`crate::tensor::combine_and_gamma`]) and the in-place solver
+//! update ([`solver::apply_step_in_place`]). The per-step paths that *do*
+//! allocate are the ones that must retain data: trajectory/history
+//! recording (LINEARAG, `record_trajectory`) and the final `Completion`.
 
 use std::sync::Arc;
 
 use crate::backend::EvalInput;
+use crate::coordinator::bufpool::BufPool;
 use crate::coordinator::policy::{PolicyRef, PolicyState, StepObservation, StepPlan};
 use crate::coordinator::solver::{self, StepCoefs};
 use crate::ols::ScoreTrajectory;
-use crate::tensor::Tensor;
+use crate::tensor::{self, Tensor};
 use crate::util::rng::Rng;
 
 /// An inference request as submitted by a client.
@@ -128,20 +141,36 @@ pub struct RequestState {
     pub nfes: usize,
     pub cfg_steps: usize,
     pub gammas_eps: Vec<f64>,
-    /// results for the current step's evals, indexed by plan slot
+    /// results for the current step's evals, indexed by plan slot; the
+    /// buffers come from the engine's pool and go back to it in
+    /// [`Self::complete_step`]
     pending: Vec<Option<Vec<f32>>>,
     pending_left: usize,
     plan: StepPlan,
     hist_c: Vec<Tensor>,
     hist_u: Vec<Tensor>,
+    /// per-request precomputed solver coefficients, folded once at
+    /// admission ([`solver::coef_table`]) — steps never refold
     coefs: Vec<StepCoefs>,
     iterates: Vec<Vec<f32>>,
 }
+
+/// Largest slot count any [`StepPlan`] variant needs (the editing triple).
+const MAX_SLOTS: usize = 3;
 
 impl RequestState {
     /// Initialize: draw x_T ~ N(0, I) from the request seed and plan step 0.
     pub fn new(req: Request, flat_out: usize) -> RequestState {
         assert!(req.steps >= 1, "request needs at least one step");
+        if let Some(neg) = &req.neg_tokens {
+            // packed token rows are sized by `tokens`; a wider negative
+            // prompt would be silently truncated, so reject it loudly here
+            assert_eq!(
+                neg.len(),
+                req.tokens.len(),
+                "neg_tokens width must match tokens width"
+            );
+        }
         let x = match &req.init_noise {
             Some(noise) => {
                 assert_eq!(noise.len(), flat_out, "init_noise length mismatch");
@@ -150,9 +179,15 @@ impl RequestState {
             None => Rng::new(req.seed).normal_vec(flat_out),
         };
         let coefs = solver::coef_table(req.steps);
-        let policy_state = PolicyState::new();
+        let mut policy_state = PolicyState::new();
+        // reserve the full gamma histories up front so per-step pushes
+        // never reallocate mid-flight (the zero-alloc steady-state pin)
+        policy_state.gammas.reserve(req.steps);
+        let gammas_eps = Vec::with_capacity(req.steps);
         let plan = req.policy.plan(0, req.steps, &policy_state);
         let slots = Self::evals_for(&plan).len();
+        let mut pending = Vec::with_capacity(MAX_SLOTS);
+        pending.resize_with(slots, || None);
         RequestState {
             req,
             x,
@@ -161,8 +196,8 @@ impl RequestState {
             policy_state,
             nfes: 0,
             cfg_steps: 0,
-            gammas_eps: Vec::new(),
-            pending: vec![None; slots],
+            gammas_eps,
+            pending,
             pending_left: slots,
             plan,
             hist_c: Vec::new(),
@@ -172,20 +207,20 @@ impl RequestState {
         }
     }
 
-    fn evals_for(plan: &StepPlan) -> Vec<EvalKind> {
+    pub(crate) fn evals_for(plan: &StepPlan) -> &'static [EvalKind] {
         match plan {
-            StepPlan::Guided { .. } => vec![EvalKind::Cond, EvalKind::Uncond],
-            StepPlan::CondOnly | StepPlan::LinearGuided { .. } => vec![EvalKind::Cond],
-            StepPlan::UncondOnly => vec![EvalKind::Uncond],
+            StepPlan::Guided { .. } => &[EvalKind::Cond, EvalKind::Uncond],
+            StepPlan::CondOnly | StepPlan::LinearGuided { .. } => &[EvalKind::Cond],
+            StepPlan::UncondOnly => &[EvalKind::Uncond],
             StepPlan::EditGuided { .. } => {
-                vec![EvalKind::EditFull, EvalKind::EditImg, EvalKind::EditNull]
+                &[EvalKind::EditFull, EvalKind::EditImg, EvalKind::EditNull]
             }
-            StepPlan::EditCondOnly => vec![EvalKind::EditFull],
+            StepPlan::EditCondOnly => &[EvalKind::EditFull],
         }
     }
 
     /// Evals required for the current step, in slot order.
-    pub fn current_evals(&self) -> Vec<EvalKind> {
+    pub fn current_evals(&self) -> &'static [EvalKind] {
         Self::evals_for(&self.plan)
     }
 
@@ -203,40 +238,84 @@ impl RequestState {
 
     /// Current continuous time for the step.
     pub fn current_t(&self) -> f64 {
-        solver::timesteps(self.req.steps)[self.step]
+        solver::timestep(self.step, self.req.steps)
     }
 
-    /// Build the backend input for one eval slot.
-    pub fn eval_input(&self, kind: EvalKind) -> EvalInput {
-        let t = self.current_t() as f32;
-        let null = vec![0i32; self.req.tokens.len()];
-        let uncond_tokens = self.req.neg_tokens.clone().unwrap_or(null.clone());
-        let (tokens, with_src) = match kind {
-            EvalKind::Cond => (self.req.tokens.clone(), false),
-            EvalKind::Uncond => (uncond_tokens, false),
-            EvalKind::EditFull => (self.req.tokens.clone(), true),
-            EvalKind::EditImg => (uncond_tokens, true),
-            EvalKind::EditNull => (null, false),
-        };
-        let x = if self.req.src_image.is_some()
+    /// Flattened input length one eval of `kind` writes — what the packed
+    /// batch row must hold. The engine checks this against the backend's
+    /// `flat_in` so a request/model shape mismatch is a structured error,
+    /// not a slice panic.
+    pub fn eval_input_len(&self, kind: EvalKind) -> usize {
+        match (&self.req.src_image, kind) {
+            (Some(src), EvalKind::EditFull | EvalKind::EditImg | EvalKind::EditNull) => {
+                self.x.len() + src.len()
+            }
+            _ => self.x.len(),
+        }
+    }
+
+    /// Write one eval's backend inputs in place: `x_out` is a
+    /// `flat_in`-length packed batch row, `tokens_out` a token row of the
+    /// request's token width. Every slot is written (token tails and
+    /// absent stream halves are zero-filled), so rows need no
+    /// pre-initialization beyond their length.
+    pub fn fill_eval_input(&self, kind: EvalKind, x_out: &mut [f32], tokens_out: &mut [i32]) {
+        fn write_tokens(dst: &mut [i32], src: &[i32]) {
+            let n = src.len().min(dst.len());
+            dst[..n].copy_from_slice(&src[..n]);
+            dst[n..].fill(0);
+        }
+        match kind {
+            EvalKind::Cond | EvalKind::EditFull => write_tokens(tokens_out, &self.req.tokens),
+            EvalKind::Uncond | EvalKind::EditImg => match &self.req.neg_tokens {
+                Some(neg) => write_tokens(tokens_out, neg),
+                None => tokens_out.fill(0),
+            },
+            EvalKind::EditNull => tokens_out.fill(0),
+        }
+        let d = self.x.len();
+        let edit = self.req.src_image.is_some()
             && matches!(
                 kind,
                 EvalKind::EditFull | EvalKind::EditImg | EvalKind::EditNull
-            ) {
+            );
+        if edit {
             // editing model input is x ‖ src (or x ‖ 0 for the null-image eval)
             let src = self.req.src_image.as_ref().unwrap();
-            let mut v = Vec::with_capacity(self.x.len() * 2);
-            v.extend_from_slice(&self.x);
-            if with_src {
-                v.extend_from_slice(src);
+            x_out[..d].copy_from_slice(&self.x);
+            if matches!(kind, EvalKind::EditFull | EvalKind::EditImg) {
+                x_out[d..d + src.len()].copy_from_slice(src);
             } else {
-                v.extend(std::iter::repeat(0.0f32).take(src.len()));
+                x_out[d..d + src.len()].fill(0.0);
             }
-            v
         } else {
-            self.x.clone()
+            x_out[..d].copy_from_slice(&self.x);
+        }
+    }
+
+    /// Build the backend input for one eval slot as owned vectors — the
+    /// compatibility/testing form of [`Self::fill_eval_input`] (the engine
+    /// fills packed rows instead of allocating these).
+    pub fn eval_input(&self, kind: EvalKind) -> EvalInput {
+        let d = self.x.len();
+        let edit = self.req.src_image.is_some()
+            && matches!(
+                kind,
+                EvalKind::EditFull | EvalKind::EditImg | EvalKind::EditNull
+            );
+        let xlen = if edit {
+            d + self.req.src_image.as_ref().unwrap().len()
+        } else {
+            d
         };
-        EvalInput { x, t, tokens }
+        let mut x = vec![0.0f32; xlen];
+        let mut tokens = vec![0i32; self.req.tokens.len()];
+        self.fill_eval_input(kind, &mut x, &mut tokens);
+        EvalInput {
+            x,
+            t: self.current_t() as f32,
+            tokens,
+        }
     }
 
     /// Record one eval result (by slot index). Returns true when the step
@@ -250,89 +329,86 @@ impl RequestState {
     }
 
     /// Combine the step's evals per the plan, let the policy observe the
-    /// outcome, advance the solver, and set up the next step. Returns
-    /// `Some(Completion)` when the request finishes.
-    pub fn complete_step(&mut self) -> Option<Completion> {
+    /// outcome, advance the solver in place, and set up the next step.
+    /// Slot/epsilon buffers are recycled through `pool` (except the ones
+    /// history recording must keep). Returns `Some(Completion)` when the
+    /// request finishes.
+    pub fn complete_step(&mut self, pool: &mut BufPool) -> Option<Completion> {
         assert_eq!(self.pending_left, 0, "step still has pending evals");
-        let results: Vec<Vec<f32>> =
-            self.pending.drain(..).map(Option::unwrap).collect();
         let dim = self.x.len();
         let record = self.req.record_trajectory || self.req.policy.needs_history();
         let step_coefs = self.coefs[self.step];
+        // Eq. 7's gamma is probed on the x0 data predictions
+        // (x0 = j_x x + j_eps eps): an affine re-parameterization of the
+        // same network outputs whose cond/uncond difference shrinks with
+        // sigma/alpha, making the AG signal robust on small models
+        // (DESIGN.md §Hardware-Adaptation).
+        let (jx, je) = (step_coefs.j_x as f32, step_coefs.j_eps as f32);
         let plan_nfes = self.plan.nfes();
         let plan_guided = self.plan.guided();
 
-        // Eq. 7's cosine on the x0 data predictions (x0 = j_x x + j_eps eps):
-        // an affine re-parameterization of the same network outputs whose
-        // cond/uncond difference shrinks with sigma/alpha, making the AG
-        // signal robust on small models (DESIGN.md §Hardware-Adaptation).
-        let x0_cosine = |a: &Tensor, b: &Tensor, x: &[f32]| -> f64 {
-            let jx = step_coefs.j_x as f32;
-            let je = step_coefs.j_eps as f32;
-            let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
-            for i in 0..x.len() {
-                let xa = (jx * x[i] + je * a.data[i]) as f64;
-                let xb = (jx * x[i] + je * b.data[i]) as f64;
-                dot += xa * xb;
-                na += xa * xa;
-                nb += xb * xb;
-            }
-            dot / (na.sqrt() * nb.sqrt()).max(1e-12)
-        };
-
         let (eps, gamma, gamma_eps) = match &self.plan {
             StepPlan::Guided { s } => {
-                let c = Tensor::new(vec![dim], results[0].clone());
-                let u = Tensor::new(vec![dim], results[1].clone());
-                let gamma_eps = c.cosine(&u);
-                let gamma = x0_cosine(&c, &u, &self.x);
-                let eps = Tensor::cfg_combine(&c, &u, *s).data;
+                let c = self.pending[0].take().expect("slot 0 delivered");
+                let u = self.pending[1].take().expect("slot 1 delivered");
+                let mut eps = pool.take(dim);
+                let g = tensor::combine_and_gamma(&c, &u, *s, &self.x, jx, je, &mut eps);
                 if record {
-                    self.hist_c.push(c);
-                    self.hist_u.push(u);
+                    self.hist_c.push(Tensor::new(vec![dim], c));
+                    self.hist_u.push(Tensor::new(vec![dim], u));
+                } else {
+                    pool.put(c);
+                    pool.put(u);
                 }
-                (eps, gamma, gamma_eps)
+                (eps, g.gamma_x0, g.gamma_eps)
             }
             StepPlan::CondOnly => {
-                if record {
-                    // conditional-only steps have no unconditional stream;
-                    // history-consuming policies never emit this plan.
-                    debug_assert!(!self.req.policy.needs_history());
-                }
-                (results[0].clone(), f64::NAN, f64::NAN)
+                // conditional-only steps have no unconditional stream;
+                // history-consuming policies never emit this plan.
+                debug_assert!(!record || !self.req.policy.needs_history());
+                let eps = self.pending[0].take().expect("slot 0 delivered");
+                (eps, f64::NAN, f64::NAN)
             }
-            StepPlan::UncondOnly => (results[0].clone(), f64::NAN, f64::NAN),
+            StepPlan::UncondOnly => {
+                let eps = self.pending[0].take().expect("slot 0 delivered");
+                (eps, f64::NAN, f64::NAN)
+            }
             StepPlan::LinearGuided { s, coeffs } => {
-                let c = Tensor::new(vec![dim], results[0].clone());
-                self.hist_c.push(c.clone());
+                let c_buf = self.pending[0].take().expect("slot 0 delivered");
+                self.hist_c.push(Tensor::new(vec![dim], c_buf));
                 let u_hat = coeffs.predict(self.step, &self.hist_c, &self.hist_u);
-                let gamma_eps = c.cosine(&u_hat);
-                let gamma = x0_cosine(&c, &u_hat, &self.x);
-                let eps = Tensor::cfg_combine(&c, &u_hat, *s).data;
+                let c = self.hist_c.last().expect("just pushed");
+                let mut eps = pool.take(dim);
+                let g = tensor::combine_and_gamma(
+                    &c.data, &u_hat.data, *s, &self.x, jx, je, &mut eps,
+                );
                 self.hist_u.push(u_hat);
-                (eps, gamma, gamma_eps)
+                (eps, g.gamma_x0, g.gamma_eps)
             }
             StepPlan::EditGuided { s_text, s_img } => {
-                let full = Tensor::new(vec![dim], results[0].clone());
-                let img = Tensor::new(vec![dim], results[1].clone());
-                let null = Tensor::new(vec![dim], results[2].clone());
-                // Eq. 9: null + s_text (full - img) + s_img (img - null)
-                let mut eps = null.clone();
-                eps.axpy(*s_text, &full);
-                eps.axpy(-*s_text, &img);
-                eps.axpy(*s_img, &img);
-                eps.axpy(-*s_img, &null);
-                let gamma_eps = full.cosine(&img);
+                let full = self.pending[0].take().expect("slot 0 delivered");
+                let img = self.pending[1].take().expect("slot 1 delivered");
+                let null = self.pending[2].take().expect("slot 2 delivered");
+                let mut eps = pool.take(dim);
+                // Eq. 9: null + s_text (full - img) + s_img (img - null).
                 // For editing, the convergence signal is the raw-ε cosine of
                 // the instruction pair: both streams share the source-image
                 // anchor, so their x0 predictions agree almost immediately
                 // while the instruction-guidance direction (what Eq. 9's
                 // s_text term needs) converges gradually — the paper's
                 // "terms in Eq. 9 converge over time".
-                let gamma = gamma_eps;
-                (eps.data, gamma, gamma_eps)
+                let gamma_eps = tensor::edit_combine_and_gamma(
+                    &full, &img, &null, *s_text, *s_img, &mut eps,
+                );
+                pool.put(full);
+                pool.put(img);
+                pool.put(null);
+                (eps, gamma_eps, gamma_eps)
             }
-            StepPlan::EditCondOnly => (results[0].clone(), f64::NAN, f64::NAN),
+            StepPlan::EditCondOnly => {
+                let eps = self.pending[0].take().expect("slot 0 delivered");
+                (eps, f64::NAN, f64::NAN)
+            }
         };
         self.gammas_eps.push(gamma_eps);
 
@@ -355,11 +431,10 @@ impl RequestState {
         };
         self.req.policy.observe(&mut self.policy_state, &obs);
 
-        // solver advance
-        let c = &step_coefs;
-        let (x_next, x0) = solver::apply_step(&self.x, &eps, &self.x0_prev, c);
-        self.x = x_next;
-        self.x0_prev = x0;
+        // solver advance, fully in place; the combined epsilon goes back
+        // to the pool
+        solver::apply_step_in_place(&mut self.x, &eps, &mut self.x0_prev, &step_coefs);
+        pool.put(eps);
         if self.req.record_iterates {
             self.iterates.push(self.x0_prev.clone());
         }
@@ -394,7 +469,8 @@ impl RequestState {
             .policy
             .plan(self.step, self.req.steps, &self.policy_state);
         let slots = Self::evals_for(&self.plan).len();
-        self.pending = vec![None; slots];
+        self.pending.clear();
+        self.pending.resize_with(slots, || None);
         self.pending_left = slots;
         None
     }
@@ -410,6 +486,10 @@ mod tests {
         RequestState::new(req, 8)
     }
 
+    fn pool() -> BufPool {
+        BufPool::new()
+    }
+
     #[test]
     fn seeded_init_is_deterministic() {
         let a = mk_state(cfg(2.0));
@@ -419,25 +499,30 @@ mod tests {
 
     #[test]
     fn cfg_step_lifecycle_and_nfe_count() {
+        let mut p = pool();
         let mut st = mk_state(cfg(2.0));
         for step in 0..4 {
             let evals = st.current_evals();
-            assert_eq!(evals, vec![EvalKind::Cond, EvalKind::Uncond]);
+            assert_eq!(evals, &[EvalKind::Cond, EvalKind::Uncond][..]);
             assert!(!st.deliver(0, vec![0.1; 8]));
             assert!(st.deliver(1, vec![0.2; 8]));
-            let done = st.complete_step();
+            let done = st.complete_step(&mut p);
             assert_eq!(done.is_some(), step == 3);
         }
+        // every pooled buffer came back: 2 slot buffers + 1 eps in flight
+        // at a time, all recycled across the 4 steps
+        assert!(p.pooled() >= 1, "step buffers must return to the pool");
     }
 
     #[test]
     fn completion_reports_accounting() {
+        let mut p = pool();
         let mut st = mk_state(cfg(2.0));
         let mut out = None;
         for _ in 0..4 {
             st.deliver(0, vec![0.1; 8]);
             st.deliver(1, vec![0.1; 8]);
-            out = st.complete_step();
+            out = st.complete_step(&mut p);
         }
         let c = out.unwrap();
         assert_eq!(c.nfes, 8);
@@ -449,44 +534,47 @@ mod tests {
     #[test]
     fn ag_truncates_on_identical_streams() {
         // identical cond/uncond → gamma = 1 → truncate after step 0.
+        let mut p = pool();
         let mut st = mk_state(ag(2.0, 0.999));
         st.deliver(0, vec![0.5; 8]);
         st.deliver(1, vec![0.5; 8]);
-        assert!(st.complete_step().is_none());
+        assert!(st.complete_step(&mut p).is_none());
         assert_eq!(st.policy_state.truncated_at, Some(0));
         // subsequent steps are conditional-only
-        assert_eq!(st.current_evals(), vec![EvalKind::Cond]);
+        assert_eq!(st.current_evals(), &[EvalKind::Cond][..]);
         st.deliver(0, vec![0.4; 8]);
-        st.complete_step();
-        assert_eq!(st.current_evals(), vec![EvalKind::Cond]);
+        st.complete_step(&mut p);
+        assert_eq!(st.current_evals(), &[EvalKind::Cond][..]);
     }
 
     #[test]
     fn policy_state_tracks_gammas_and_guided_steps() {
+        let mut p = pool();
         let mut st = mk_state(cfg(2.0));
         st.deliver(0, vec![0.5; 8]);
         st.deliver(1, vec![0.5; 8]);
-        st.complete_step();
+        st.complete_step(&mut p);
         assert_eq!(st.policy_state.guided_steps, 1);
         assert_eq!(st.policy_state.gammas.len(), 1);
         assert!((st.policy_state.gammas[0] - 1.0).abs() < 1e-12);
 
         let mut st = mk_state(cond_only());
         st.deliver(0, vec![0.5; 8]);
-        st.complete_step();
+        st.complete_step(&mut p);
         assert_eq!(st.policy_state.guided_steps, 0);
         assert!(st.policy_state.gammas[0].is_nan());
     }
 
     #[test]
     fn remaining_nfes_tracks_deliveries_and_truncation() {
+        let mut p = pool();
         // fresh CFG state: the estimate equals the policy's worst case
         let mut st = mk_state(cfg(2.0)); // 4 steps → 8 evals
         assert_eq!(st.remaining_nfes(), 8);
         st.deliver(0, vec![0.1; 8]);
         assert_eq!(st.remaining_nfes(), 7);
         st.deliver(1, vec![0.2; 8]);
-        st.complete_step();
+        st.complete_step(&mut p);
         assert_eq!(st.remaining_nfes(), 6);
 
         // AG truncation halves the per-step cost of the remaining steps
@@ -494,7 +582,7 @@ mod tests {
         assert_eq!(st.remaining_nfes(), 8);
         st.deliver(0, vec![0.5; 8]);
         st.deliver(1, vec![0.5; 8]);
-        st.complete_step(); // identical streams → gamma = 1 → truncates
+        st.complete_step(&mut p); // identical streams → gamma = 1 → truncates
         assert_eq!(st.remaining_nfes(), 3, "steps 1..3 conditional-only");
     }
 
@@ -507,6 +595,27 @@ mod tests {
         assert_eq!(inp.tokens, vec![0, 3, 0, 0]);
         let inp = st.eval_input(EvalKind::Cond);
         assert_eq!(inp.tokens, vec![1, 2, 0, 0]);
+    }
+
+    #[test]
+    fn fill_eval_input_matches_eval_input() {
+        let mut req = Request::new(1, "dit_edit", vec![1, 2, 0, 0], 3, 2,
+                                   pix2pix(7.5, 1.5, None, None));
+        req.neg_tokens = Some(vec![0, 9, 0, 0]);
+        req.src_image = Some(vec![0.7; 8]);
+        let st = RequestState::new(req, 8);
+        for kind in [
+            EvalKind::EditFull,
+            EvalKind::EditImg,
+            EvalKind::EditNull,
+        ] {
+            let owned = st.eval_input(kind);
+            let mut x = vec![9.9f32; owned.x.len()];
+            let mut toks = vec![7i32; owned.tokens.len()];
+            st.fill_eval_input(kind, &mut x, &mut toks);
+            assert_eq!(x, owned.x, "{kind:?}");
+            assert_eq!(toks, owned.tokens, "{kind:?}");
+        }
     }
 
     #[test]
@@ -527,6 +636,7 @@ mod tests {
 
     #[test]
     fn trajectory_recorded_when_requested() {
+        let mut p = pool();
         let mut req = Request::new(1, "m", vec![1, 0, 0, 0], 7, 3, cfg(2.0));
         req.record_trajectory = true;
         let mut st = RequestState::new(req, 8);
@@ -534,12 +644,17 @@ mod tests {
         for i in 0..3 {
             st.deliver(0, vec![i as f32 + 0.5; 8]);
             st.deliver(1, vec![i as f32; 8]);
-            out = st.complete_step();
+            out = st.complete_step(&mut p);
         }
         let tr = out.unwrap().trajectory.unwrap();
         assert_eq!(tr.eps_c.len(), 3);
         assert_eq!(tr.eps_u.len(), 3);
         assert_eq!(tr.eps_c[1].data, vec![1.5; 8]);
+        // recorded slot buffers must NOT be recycled into the pool; only
+        // the single combined-eps buffer cycles (1 alloc, then reuses)
+        assert_eq!(p.pooled(), 1);
+        assert_eq!(p.allocs(), 1);
+        assert_eq!(p.reuses(), 2);
     }
 
     #[test]
@@ -552,10 +667,11 @@ mod tests {
 
     #[test]
     fn times_decrease_over_steps() {
+        let mut p = pool();
         let mut st = mk_state(cond_only());
         let t0 = st.current_t();
         st.deliver(0, vec![0.0; 8]);
-        st.complete_step();
+        st.complete_step(&mut p);
         assert!(st.current_t() < t0);
     }
 }

@@ -30,12 +30,17 @@ pub fn lambda(t: f64) -> f64 {
     (a / s).ln()
 }
 
+/// The `i`-th point of the [`timesteps`] grid without materializing the
+/// table — the per-eval hot path asks for one point at a time, and the
+/// closed form is bit-identical to indexing the table.
+pub fn timestep(i: usize, num_steps: usize) -> f64 {
+    assert!(num_steps >= 1 && i <= num_steps);
+    T_MAX + (T_MIN - T_MAX) * i as f64 / num_steps as f64
+}
+
 /// Uniform time grid from `T_MAX` down to `T_MIN`, `num_steps + 1` points.
 pub fn timesteps(num_steps: usize) -> Vec<f64> {
-    assert!(num_steps >= 1);
-    (0..=num_steps)
-        .map(|i| T_MAX + (T_MIN - T_MAX) * i as f64 / num_steps as f64)
-        .collect()
+    (0..=num_steps).map(|i| timestep(i, num_steps)).collect()
 }
 
 /// The five folded DPM++(2M) coefficients for one step (see
@@ -93,8 +98,45 @@ pub fn coef_table(num_steps: usize) -> Vec<StepCoefs> {
 }
 
 /// Host-side solver update (f32, matching the device kernel's arithmetic):
-/// returns `(x_next, x0)`.
+/// returns `(x_next, x0)`. Allocating wrapper over [`apply_step_into`].
 pub fn apply_step(x: &[f32], eps: &[f32], x0_prev: &[f32], c: &StepCoefs) -> (Vec<f32>, Vec<f32>) {
+    let mut x_next = vec![0.0f32; x.len()];
+    let mut x0 = vec![0.0f32; x.len()];
+    apply_step_into(x, eps, x0_prev, c, &mut x_next, &mut x0);
+    (x_next, x0)
+}
+
+/// Solver update into caller-provided output buffers (no allocation).
+pub fn apply_step_into(
+    x: &[f32],
+    eps: &[f32],
+    x0_prev: &[f32],
+    c: &StepCoefs,
+    x_next: &mut [f32],
+    x0: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), eps.len());
+    debug_assert_eq!(x.len(), x0_prev.len());
+    debug_assert_eq!(x.len(), x_next.len());
+    debug_assert_eq!(x.len(), x0.len());
+    let (kx, ke, kp, jx, je) = (
+        c.k_x as f32,
+        c.k_eps as f32,
+        c.k_prev as f32,
+        c.j_x as f32,
+        c.j_eps as f32,
+    );
+    for i in 0..x.len() {
+        x_next[i] = kx * x[i] + ke * eps[i] + kp * x0_prev[i];
+        x0[i] = jx * x[i] + je * eps[i];
+    }
+}
+
+/// Fully in-place solver update: advances `x` to `x_next` and `x0_prev` to
+/// the fresh data prediction in their own storage (each element is read
+/// before it is written, so no scratch is needed). Bit-identical to
+/// [`apply_step`] — the engine's zero-allocation step path.
+pub fn apply_step_in_place(x: &mut [f32], eps: &[f32], x0_prev: &mut [f32], c: &StepCoefs) {
     debug_assert_eq!(x.len(), eps.len());
     debug_assert_eq!(x.len(), x0_prev.len());
     let (kx, ke, kp, jx, je) = (
@@ -104,13 +146,12 @@ pub fn apply_step(x: &[f32], eps: &[f32], x0_prev: &[f32], c: &StepCoefs) -> (Ve
         c.j_x as f32,
         c.j_eps as f32,
     );
-    let mut x_next = Vec::with_capacity(x.len());
-    let mut x0 = Vec::with_capacity(x.len());
     for i in 0..x.len() {
-        x_next.push(kx * x[i] + ke * eps[i] + kp * x0_prev[i]);
-        x0.push(jx * x[i] + je * eps[i]);
+        let x_next = kx * x[i] + ke * eps[i] + kp * x0_prev[i];
+        let x0 = jx * x[i] + je * eps[i];
+        x[i] = x_next;
+        x0_prev[i] = x0;
     }
-    (x_next, x0)
 }
 
 #[cfg(test)]
@@ -208,6 +249,38 @@ mod tests {
             .map(|(&a, &b)| (a - b).abs())
             .fold(0f32, f32::max);
         assert!(err / max_ref < 1e-2, "rel err {}", err / max_ref);
+    }
+
+    #[test]
+    fn timestep_point_matches_table() {
+        for steps in [1usize, 7, 20, 50] {
+            let ts = timesteps(steps);
+            for (i, &t) in ts.iter().enumerate() {
+                assert_eq!(t, timestep(i, steps), "steps {steps} point {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn in_place_variants_match_apply_step_bitwise() {
+        let mut rng = crate::util::rng::Rng::new(42);
+        let x = rng.normal_vec(64);
+        let eps = rng.normal_vec(64);
+        let x0_prev = rng.normal_vec(64);
+        let c = fold_coefs(0.6, 0.55, Some(0.65));
+        let (xn, x0) = apply_step(&x, &eps, &x0_prev, &c);
+
+        let mut xn2 = vec![0.0f32; 64];
+        let mut x02 = vec![0.0f32; 64];
+        apply_step_into(&x, &eps, &x0_prev, &c, &mut xn2, &mut x02);
+        assert_eq!(xn, xn2);
+        assert_eq!(x0, x02);
+
+        let mut x_ip = x.clone();
+        let mut x0p_ip = x0_prev.clone();
+        apply_step_in_place(&mut x_ip, &eps, &mut x0p_ip, &c);
+        assert_eq!(xn, x_ip, "in-place x_next diverged");
+        assert_eq!(x0, x0p_ip, "in-place x0 diverged");
     }
 
     #[test]

@@ -50,6 +50,16 @@
 //!     --policy-file presets.json
 //! ```
 //!
+//! ## The zero-allocation hot path (§Perf)
+//!
+//! Backends execute packed batches — [`Backend::denoise_into`] over a
+//! reusable [`BatchBuf`]/[`BatchOut`] pair — and the engine threads a
+//! length-keyed [`BufPool`] through the per-step path (in-place input
+//! fills, fused combine+gamma, in-place solver), so `pump()` performs no
+//! heap allocation at steady state (`rust/tests/zero_alloc.rs` pins this
+//! with a counting allocator). See `coordinator::engine`'s
+//! "§Perf: buffer ownership" notes before touching the step path.
+//!
 //! Start with [`coordinator::engine::Engine`] and the constructor helpers
 //! in [`coordinator::policy`] (`cfg`, `ag`, …); see
 //! `examples/quickstart.rs`.
@@ -73,7 +83,8 @@ pub mod tensor;
 pub mod testing;
 pub mod util;
 
-pub use backend::{Backend, EvalInput, GmmBackend};
+pub use backend::{Backend, BatchBuf, BatchOut, EvalInput, GmmBackend};
+pub use coordinator::bufpool::BufPool;
 pub use coordinator::engine::Engine;
 pub use coordinator::policy::{Policy, PolicyRef, PolicyState, StepObservation, StepPlan};
 pub use coordinator::request::{Completion, Request};

@@ -16,6 +16,20 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// JSON form of one row — the unit of the machine-readable perf
+    /// trajectory (`--out` on the bench harnesses).
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::{num, obj, s};
+        obj(vec![
+            ("name", s(&self.name)),
+            ("iters", num(self.iters as f64)),
+            ("mean_ms", num(self.mean_ms)),
+            ("p50_ms", num(self.p50_ms)),
+            ("p95_ms", num(self.p95_ms)),
+            ("min_ms", num(self.min_ms)),
+        ])
+    }
+
     pub fn row(&self) -> Vec<String> {
         vec![
             self.name.clone(),
@@ -59,9 +73,51 @@ pub fn print_summaries(rows: &[Summary]) {
     );
 }
 
+/// Bundle a bench run for a `--out <path>` dump: every [`Summary`] row plus
+/// free-form derived scalars (e.g. per-NFE overheads) keyed by name.
+pub fn summaries_to_json(
+    rows: &[Summary],
+    derived: &[(&str, f64)],
+) -> crate::util::json::Value {
+    use crate::util::json::{arr, num, obj, Value};
+    let derived = Value::Obj(
+        derived
+            .iter()
+            .map(|&(k, v)| (k.to_owned(), num(v)))
+            .collect(),
+    );
+    obj(vec![
+        ("benchmarks", arr(rows.iter().map(Summary::to_json).collect())),
+        ("derived", derived),
+    ])
+}
+
+/// Write a [`summaries_to_json`] dump to `path`.
+pub fn write_json(path: &str, rows: &[Summary], derived: &[(&str, f64)]) {
+    let text = crate::util::json::to_string(&summaries_to_json(rows, derived));
+    std::fs::write(path, text).unwrap_or_else(|e| panic!("writing --out {path}: {e}"));
+    eprintln!("perf rows written to {path}");
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn summaries_round_trip_through_json() {
+        let s = bench("spin", 1, 5, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        let v = summaries_to_json(&[s], &[("per_nfe_us", 1.25)]);
+        let text = crate::util::json::to_string(&v);
+        let back = crate::util::json::parse(&text).unwrap();
+        let rows = back.req("benchmarks").as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].req("name").as_str(), Some("spin"));
+        assert_eq!(rows[0].req("iters").as_usize(), Some(5));
+        assert!(rows[0].req("p50_ms").as_f64().unwrap() >= 0.0);
+        assert_eq!(back.req("derived").req("per_nfe_us").as_f64(), Some(1.25));
+    }
 
     #[test]
     fn bench_reports_sane_numbers() {

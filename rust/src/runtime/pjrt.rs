@@ -11,7 +11,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
-use crate::backend::{Backend, EvalInput};
+use crate::backend::{Backend, BatchBuf, BatchOut};
 use crate::runtime::manifest::Manifest;
 
 pub struct PjrtBackend {
@@ -21,6 +21,12 @@ pub struct PjrtBackend {
     /// compile + execute counters (perf accounting)
     pub compiles: usize,
     pub executions: usize,
+    /// staging buffers for bucket padding, reused across `denoise_into`
+    /// calls (the packed batch is contiguous already; padding lanes replay
+    /// row 0 on top of it)
+    stage_x: Vec<f32>,
+    stage_t: Vec<f32>,
+    stage_tok: Vec<i32>,
 }
 
 fn f32_literal(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
@@ -51,6 +57,9 @@ impl PjrtBackend {
             execs: HashMap::new(),
             compiles: 0,
             executions: 0,
+            stage_x: Vec::new(),
+            stage_t: Vec::new(),
+            stage_tok: Vec::new(),
         })
     }
 
@@ -243,51 +252,74 @@ impl Backend for PjrtBackend {
             .unwrap_or_else(|| *self.manifest.buckets.last().unwrap())
     }
 
-    fn denoise(&mut self, model: &str, items: &[EvalInput]) -> Result<Vec<Vec<f32>>> {
-        anyhow::ensure!(!items.is_empty(), "empty batch");
+    fn validate_tokens(&self, _model: &str, tokens: &[i32]) -> Result<(), &'static str> {
+        // the DiT artifacts are lowered with 4 token slots per item
+        if tokens.len() != 4 {
+            return Err("this backend's artifacts take exactly 4 token slots");
+        }
+        Ok(())
+    }
+
+    fn denoise_into(&mut self, model: &str, batch: &BatchBuf, out: &mut BatchOut) -> Result<()> {
+        anyhow::ensure!(!batch.is_empty(), "empty batch");
         let meta = self
             .manifest
             .models
             .get(model)
             .ok_or_else(|| anyhow!("unknown model {model}"))?
             .clone();
-        let b = Self::bucket_for(&meta.buckets, items.len())?;
+        let b = Self::bucket_for(&meta.buckets, batch.len())?;
         let file = meta.denoisers[&b].clone();
         let img = self.manifest.img;
         let ch = meta.in_channels;
         let flat_in = img * img * ch;
         let flat_out = self.manifest.flat_dim;
+        anyhow::ensure!(
+            batch.flat_in() == flat_in,
+            "packed row length {} != {flat_in} for model {model}",
+            batch.flat_in()
+        );
+        // the DiT artifacts are lowered with 4 token slots per item
+        anyhow::ensure!(
+            batch.tok_width() == 4,
+            "model {model} artifacts take 4 token slots per item, got rows of {}",
+            batch.tok_width()
+        );
 
-        let mut xs = Vec::with_capacity(b * flat_in);
-        let mut ts = Vec::with_capacity(b);
-        let mut toks = Vec::with_capacity(b * 4);
-        for i in 0..b {
-            let it = &items[i.min(items.len() - 1)]; // pad lanes replay item 0..
-            anyhow::ensure!(
-                it.x.len() == flat_in,
-                "item {} input length {} != {flat_in} for model {model}",
-                i.min(items.len() - 1),
-                it.x.len()
-            );
-            xs.extend_from_slice(&it.x);
-            ts.push(it.t);
-            toks.extend_from_slice(&it.tokens);
-        }
-        let out = self.run_tuple(
-            &file,
-            &[
-                f32_literal(&[b, img, img, ch], &xs)?,
-                f32_literal(&[b], &ts)?,
-                i32_literal(&[b, 4], &toks)?,
-            ],
-        )?;
-        let eps: Vec<f32> = out[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        // the packed batch is already contiguous: lower it straight into
+        // the literals when it fills the bucket, and only stage (padding
+        // lanes replay row 0; their outputs are dropped) when it does not
+        let inputs = if batch.len() == b {
+            [
+                f32_literal(&[b, img, img, ch], batch.xs())?,
+                f32_literal(&[b], batch.ts())?,
+                i32_literal(&[b, 4], batch.tokens())?,
+            ]
+        } else {
+            self.stage_x.clear();
+            self.stage_t.clear();
+            self.stage_tok.clear();
+            self.stage_x.extend_from_slice(batch.xs());
+            self.stage_t.extend_from_slice(batch.ts());
+            self.stage_tok.extend_from_slice(batch.tokens());
+            for _ in batch.len()..b {
+                self.stage_x.extend_from_slice(batch.x_row(0));
+                self.stage_t.push(batch.t(0));
+                self.stage_tok.extend_from_slice(batch.token_row(0));
+            }
+            [
+                f32_literal(&[b, img, img, ch], &self.stage_x)?,
+                f32_literal(&[b], &self.stage_t)?,
+                i32_literal(&[b, 4], &self.stage_tok)?,
+            ]
+        };
+        let result = self.run_tuple(&file, &inputs)?;
+        let eps: Vec<f32> = result[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
         anyhow::ensure!(eps.len() == b * flat_out, "unexpected output length");
-        Ok(items
-            .iter()
-            .enumerate()
-            .map(|(i, _)| eps[i * flat_out..(i + 1) * flat_out].to_vec())
-            .collect())
+        out.reset(flat_out, batch.len());
+        out.data_mut()
+            .copy_from_slice(&eps[..batch.len() * flat_out]);
+        Ok(())
     }
 
     fn models(&self) -> Vec<String> {

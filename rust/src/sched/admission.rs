@@ -55,8 +55,11 @@ impl Admission {
     }
 }
 
-/// Why a request was shed. The server maps any variant to a `queue_full`
-/// error line carrying these numbers, so clients can back off proportionally.
+/// Why a request was refused at admission. The server maps the two shed
+/// variants to a `queue_full` error line carrying these numbers (so
+/// clients can back off proportionally) and [`AdmitError::Invalid`] to an
+/// `invalid_request` line — a malformed request must be rejected at the
+/// door, never panic or poison a batch mid-flight.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AdmitError {
     InFlightFull {
@@ -68,6 +71,10 @@ pub enum AdmitError {
         request_nfes: usize,
         max: usize,
     },
+    /// The request itself is malformed (`Engine::try_submit`'s up-front
+    /// shape checks: empty tokens, mismatched negative-prompt width, zero
+    /// steps).
+    Invalid { reason: &'static str },
 }
 
 impl fmt::Display for AdmitError {
@@ -86,6 +93,7 @@ impl fmt::Display for AdmitError {
                 "queue full: {queued_nfes} NFEs queued + {request_nfes} requested \
                  exceeds the {max} budget"
             ),
+            AdmitError::Invalid { reason } => write!(f, "invalid request: {reason}"),
         }
     }
 }
@@ -144,5 +152,15 @@ mod tests {
         let text = e.to_string();
         assert!(text.contains("90") && text.contains("40") && text.contains("100"), "{text}");
         assert!(text.contains("queue full"));
+    }
+
+    #[test]
+    fn invalid_requests_render_the_reason() {
+        let e = AdmitError::Invalid {
+            reason: "tokens must be non-empty",
+        };
+        let text = e.to_string();
+        assert!(text.starts_with("invalid request:"), "{text}");
+        assert!(text.contains("tokens"), "{text}");
     }
 }

@@ -37,10 +37,13 @@
 //! 2. `impl Scheduler`: `push` enqueues one [`WorkItem`] (a step's slots
 //!    arrive back-to-back, in slot order — keep them adjacent so a step
 //!    completes in as few batches as possible); `peek_model` names the
-//!    model of the batch you would run next; `take_batch(model, cap)`
-//!    removes and returns up to `cap` items of that model in your order;
-//!    `forget` drops per-request bookkeeping. Be deterministic: break ties
-//!    by `RequestMeta::id`, never by map iteration order.
+//!    model of the batch you would run next; `take_batch(model, cap, out)`
+//!    removes up to `cap` items of that model, appending them to the
+//!    caller's buffer in your order — keep any selection scratch on the
+//!    struct so steady-state pops allocate nothing (`tests/zero_alloc.rs`
+//!    pins this for the built-ins); `forget` drops per-request
+//!    bookkeeping. Be deterministic: break ties by `RequestMeta::id`,
+//!    never by map iteration order.
 //! 3. Wire a name into [`SchedulerKind`] (parse/build/ALL) and it becomes
 //!    reachable from `agd serve --scheduler`, the bench harness, and
 //!    [`crate::Engine::with_scheduler`] callers.
@@ -57,4 +60,4 @@ pub use admission::{Admission, AdmitError};
 pub use scheduler::{
     CostAware, Deadline, FairShare, Fifo, RequestMeta, Scheduler, SchedulerKind, WorkItem,
 };
-pub use telemetry::Telemetry;
+pub use telemetry::{MetricKey, Telemetry};

@@ -66,9 +66,14 @@ pub struct RequestMeta {
 /// Ordering discipline over pending work items (see module docs).
 ///
 /// Contract: `push` is called with every item of a step before the engine
-/// pumps again; `take_batch(model, cap)` must only return items whose
+/// pumps again; `take_batch(model, cap, out)` must only append items whose
 /// `model` matches and at most `cap` of them; `forget` is called once per
 /// completed request, after all its items have been taken.
+///
+/// §Perf: `take_batch` appends into a caller-owned buffer (the engine
+/// reuses one across pumps) and implementations keep their own scratch, so
+/// a steady-state batch pop performs no heap allocation — pinned by
+/// `rust/tests/zero_alloc.rs` for all four built-ins.
 pub trait Scheduler: fmt::Debug + Send {
     /// Wire name (matches [`SchedulerKind::parse`]).
     fn name(&self) -> &'static str;
@@ -79,8 +84,9 @@ pub trait Scheduler: fmt::Debug + Send {
     /// Model of the batch this scheduler would execute next (None = empty).
     fn peek_model(&self) -> Option<Arc<str>>;
 
-    /// Remove and return up to `cap` items of `model`, in scheduling order.
-    fn take_batch(&mut self, model: &str, cap: usize) -> Vec<WorkItem>;
+    /// Remove up to `cap` items of `model`, appending them to `out` in
+    /// scheduling order (the caller clears `out` beforehand).
+    fn take_batch(&mut self, model: &str, cap: usize, out: &mut Vec<WorkItem>);
 
     /// Drop per-request bookkeeping after the request completes.
     fn forget(&mut self, _state_idx: usize) {}
@@ -168,20 +174,19 @@ impl Scheduler for Fifo {
         self.queue.front().map(|it| it.model.clone())
     }
 
-    fn take_batch(&mut self, model: &str, cap: usize) -> Vec<WorkItem> {
-        // remove the first `cap` items of `model`, preserving the relative
-        // order of everything left behind
-        let mut batch = Vec::new();
-        let mut rest = VecDeque::with_capacity(self.queue.len());
-        while let Some(it) = self.queue.pop_front() {
-            if batch.len() < cap && &*it.model == model {
-                batch.push(it);
+    fn take_batch(&mut self, model: &str, cap: usize, out: &mut Vec<WorkItem>) {
+        // remove the first `cap` items of `model` in place, preserving the
+        // relative order of everything left behind (clone = one Arc bump)
+        let mut taken = 0usize;
+        self.queue.retain(|it| {
+            if taken < cap && &*it.model == model {
+                out.push(it.clone());
+                taken += 1;
+                false
             } else {
-                rest.push_back(it);
+                true
             }
-        }
-        self.queue = rest;
-        batch
+        });
     }
 
     fn len(&self) -> usize {
@@ -194,13 +199,16 @@ impl Scheduler for Fifo {
 // ---------------------------------------------------------------------------
 
 /// Items in push order plus one orderable key per request; batches are the
-/// `cap` matching items with the smallest keys (stable — push order breaks
-/// ties, which keeps a step's slots adjacent). O(n log n) per batch, which
-/// is ample at serving queue depths.
+/// `cap` matching items with the smallest keys (ties break by push order,
+/// which keeps a step's slots adjacent). O(n log n) per batch, which is
+/// ample at serving queue depths. Selection runs on a reusable index
+/// scratch and compacts `items` in place — no allocation at steady state.
 #[derive(Debug, Default)]
 struct Ranked<K: Ord + Copy + fmt::Debug> {
     items: Vec<WorkItem>,
     keys: HashMap<usize, K>,
+    /// selected-index scratch reused across `take_batch` calls
+    scratch: Vec<usize>,
 }
 
 impl<K: Ord + Copy + fmt::Debug> Ranked<K> {
@@ -228,26 +236,37 @@ impl<K: Ord + Copy + fmt::Debug> Ranked<K> {
         best.map(|(_, it)| it.model.clone())
     }
 
-    fn take_batch(&mut self, model: &str, cap: usize) -> Vec<WorkItem> {
-        let mut idxs: Vec<usize> = (0..self.items.len())
-            .filter(|&i| &*self.items[i].model == model)
-            .collect();
-        idxs.sort_by_key(|&i| self.key_of(&self.items[i]));
-        idxs.truncate(cap);
-        let mut rank_of: HashMap<usize, usize> = HashMap::with_capacity(idxs.len());
-        for (rank, &i) in idxs.iter().enumerate() {
-            rank_of.insert(i, rank);
+    fn take_batch(&mut self, model: &str, cap: usize, out: &mut Vec<WorkItem>) {
+        let items = &self.items;
+        let keys = &self.keys;
+        self.scratch.clear();
+        self.scratch
+            .extend((0..items.len()).filter(|&i| &*items[i].model == model));
+        // the item index is the final sort component, so the unstable sort
+        // reproduces a stable sort on the key alone (push order on ties)
+        self.scratch.sort_unstable_by_key(|&i| {
+            let k = *keys
+                .get(&items[i].state_idx)
+                .expect("scheduler invariant: every queued item has a key");
+            (k, i)
+        });
+        self.scratch.truncate(cap);
+        for &i in &self.scratch {
+            out.push(self.items[i].clone());
         }
-        let mut batch: Vec<Option<WorkItem>> = idxs.iter().map(|_| None).collect();
-        let mut keep = Vec::with_capacity(self.items.len().saturating_sub(idxs.len()));
-        for (i, it) in std::mem::take(&mut self.items).into_iter().enumerate() {
-            match rank_of.get(&i) {
-                Some(&rank) => batch[rank] = Some(it),
-                None => keep.push(it),
+        // compact `items` in place, dropping the taken indices
+        self.scratch.sort_unstable();
+        let mut next_taken = 0usize;
+        let mut write = 0usize;
+        for read in 0..self.items.len() {
+            if next_taken < self.scratch.len() && self.scratch[next_taken] == read {
+                next_taken += 1;
+                continue;
             }
+            self.items.swap(write, read);
+            write += 1;
         }
-        self.items = keep;
-        batch.into_iter().flatten().collect()
+        self.items.truncate(write);
     }
 
     fn forget(&mut self, state_idx: usize) {
@@ -285,8 +304,8 @@ impl Scheduler for CostAware {
         self.inner.peek_model()
     }
 
-    fn take_batch(&mut self, model: &str, cap: usize) -> Vec<WorkItem> {
-        self.inner.take_batch(model, cap)
+    fn take_batch(&mut self, model: &str, cap: usize, out: &mut Vec<WorkItem>) {
+        self.inner.take_batch(model, cap, out)
     }
 
     fn forget(&mut self, state_idx: usize) {
@@ -327,8 +346,8 @@ impl Scheduler for Deadline {
         self.inner.peek_model()
     }
 
-    fn take_batch(&mut self, model: &str, cap: usize) -> Vec<WorkItem> {
-        self.inner.take_batch(model, cap)
+    fn take_batch(&mut self, model: &str, cap: usize, out: &mut Vec<WorkItem>) {
+        self.inner.take_batch(model, cap, out)
     }
 
     fn forget(&mut self, state_idx: usize) {
@@ -344,10 +363,18 @@ impl Scheduler for Deadline {
 // FairShare
 // ---------------------------------------------------------------------------
 
+/// Most client lanes retained after draining. A drained lane is kept (its
+/// deque capacity ready for the client's next step — the steady-state
+/// zero-alloc path) until the lane count exceeds this cap, at which point
+/// drained lanes are pruned so an open-ended client-id stream cannot grow
+/// the scheduler without bound. Mirrors telemetry's `LABEL_VALUE_CAP`.
+const LANE_CAP: usize = 64;
+
 /// Round-robin across client lanes: each batch slot goes to the next lane
 /// in rotation whose front item matches the batch model, so a client's
 /// share of a full batch is at most ⌈cap / active clients⌉ while others
-/// have work queued. Lanes are FIFO internally and pruned when drained.
+/// have work queued. Lanes are FIFO internally; drained lanes are kept for
+/// reuse up to [`LANE_CAP`] and pruned beyond it.
 #[derive(Debug, Default)]
 pub struct FairShare {
     /// (client, lane) in first-seen order — the rotation order.
@@ -379,44 +406,47 @@ impl Scheduler for FairShare {
             .find_map(|lane| lane.front().map(|it| it.model.clone()))
     }
 
-    fn take_batch(&mut self, model: &str, cap: usize) -> Vec<WorkItem> {
+    fn take_batch(&mut self, model: &str, cap: usize, out: &mut Vec<WorkItem>) {
         let n = self.lanes.len();
         if n == 0 {
-            return Vec::new();
+            return;
         }
-        let mut batch = Vec::new();
+        let mut taken = 0usize;
         let mut pos = self.cursor;
         let mut barren = 0; // consecutive lanes that contributed nothing
-        while batch.len() < cap && barren < n {
+        while taken < cap && barren < n {
             let lane = &mut self.lanes[pos % n].1;
             if lane.front().map_or(false, |it| &*it.model == model) {
-                batch.push(lane.pop_front().expect("front just checked"));
+                out.push(lane.pop_front().expect("front just checked"));
+                taken += 1;
                 barren = 0;
             } else {
                 barren += 1;
             }
             pos += 1;
         }
-        // prune drained lanes, keeping the rotation position pointed at the
-        // same surviving lane
-        let cursor_lane = pos % n;
-        let mut new_cursor = 0;
-        let mut kept = Vec::with_capacity(n);
-        for (i, lane) in std::mem::take(&mut self.lanes).into_iter().enumerate() {
-            if !lane.1.is_empty() {
-                if i < cursor_lane {
-                    new_cursor += 1;
+        self.cursor = pos % n;
+        // drained lanes stay for reuse (the rotation skips them) until the
+        // lane count exceeds the cap; past it, prune and remap the cursor
+        if self.lanes.len() > LANE_CAP {
+            let cursor_lane = self.cursor;
+            let mut new_cursor = 0;
+            let mut kept = Vec::with_capacity(n);
+            for (i, lane) in std::mem::take(&mut self.lanes).into_iter().enumerate() {
+                if !lane.1.is_empty() {
+                    if i < cursor_lane {
+                        new_cursor += 1;
+                    }
+                    kept.push(lane);
                 }
-                kept.push(lane);
             }
+            self.lanes = kept;
+            self.cursor = if self.lanes.is_empty() {
+                0
+            } else {
+                new_cursor % self.lanes.len()
+            };
         }
-        self.lanes = kept;
-        self.cursor = if self.lanes.is_empty() {
-            0
-        } else {
-            new_cursor % self.lanes.len()
-        };
-        batch
     }
 
     fn len(&self) -> usize {
@@ -452,6 +482,13 @@ mod tests {
         s.push(item(idx, 1, "gmm"), m);
     }
 
+    /// Owned-vec convenience over the out-buffer `take_batch` form.
+    fn take(s: &mut dyn Scheduler, model: &str, cap: usize) -> Vec<WorkItem> {
+        let mut out = Vec::new();
+        s.take_batch(model, cap, &mut out);
+        out
+    }
+
     #[test]
     fn kind_parse_round_trips() {
         for k in SchedulerKind::ALL {
@@ -469,7 +506,7 @@ mod tests {
         s.push(item(1, 0, "b"), &meta(1, "", 2));
         s.push(item(2, 0, "a"), &meta(2, "", 2));
         assert_eq!(&*s.peek_model().unwrap(), "a");
-        let batch = s.take_batch("a", 8);
+        let batch = take(&mut s, "a", 8);
         assert_eq!(batch.len(), 2);
         assert_eq!((batch[0].state_idx, batch[1].state_idx), (0, 2));
         // the non-matching item stays, in order
@@ -483,9 +520,9 @@ mod tests {
         for i in 0..5 {
             s.push(item(i, 0, "m"), &meta(i as u64, "", 1));
         }
-        let batch = s.take_batch("m", 3);
+        let batch = take(&mut s, "m", 3);
         assert_eq!(batch.iter().map(|it| it.state_idx).collect::<Vec<_>>(), vec![0, 1, 2]);
-        let batch = s.take_batch("m", 3);
+        let batch = take(&mut s, "m", 3);
         assert_eq!(batch.iter().map(|it| it.state_idx).collect::<Vec<_>>(), vec![3, 4]);
         assert!(s.is_empty());
     }
@@ -496,7 +533,7 @@ mod tests {
         push_step(&mut s, 0, &meta(0, "", 40)); // expensive
         push_step(&mut s, 1, &meta(1, "", 12)); // cheap
         push_step(&mut s, 2, &meta(2, "", 12)); // cheap, later id
-        let batch = s.take_batch("gmm", 4);
+        let batch = take(&mut s, "gmm", 4);
         let order: Vec<usize> = batch.iter().map(|it| it.state_idx).collect();
         assert_eq!(order, vec![1, 1, 2, 2], "cheapest first, id breaks ties");
         // slots of one request stay adjacent and in slot order
@@ -509,10 +546,10 @@ mod tests {
         push_step(&mut s, 0, &meta(0, "", 40));
         push_step(&mut s, 1, &meta(1, "", 30));
         // request 0 truncated: its next step is pushed with a lower estimate
-        assert_eq!(s.take_batch("gmm", 4).len(), 4);
+        assert_eq!(take(&mut s, "gmm", 4).len(), 4);
         s.push(item(0, 0, "gmm"), &meta(0, "", 8));
         push_step(&mut s, 1, &meta(1, "", 28));
-        let batch = s.take_batch("gmm", 1);
+        let batch = take(&mut s, "gmm", 1);
         assert_eq!(batch[0].state_idx, 0, "truncated request now schedules first");
         s.forget(0);
         assert_eq!(s.len(), 2);
@@ -533,7 +570,7 @@ mod tests {
         for (i, m) in [(0usize, &m0), (1, &m1), (2, &m2), (3, &m3)] {
             s.push(item(i, 0, "gmm"), m);
         }
-        let order: Vec<usize> = s.take_batch("gmm", 8).iter().map(|it| it.state_idx).collect();
+        let order: Vec<usize> = take(&mut s, "gmm", 8).iter().map(|it| it.state_idx).collect();
         assert_eq!(order, vec![3, 2, 1, 0]);
     }
 
@@ -547,12 +584,12 @@ mod tests {
         for i in 6..8 {
             s.push(item(i, 0, "gmm"), &meta(i as u64, "live", 2));
         }
-        let batch = s.take_batch("gmm", 4);
+        let batch = take(&mut s, "gmm", 4);
         let order: Vec<usize> = batch.iter().map(|it| it.state_idx).collect();
         // alternating lanes: bulk, live, bulk, live
         assert_eq!(order, vec![0, 6, 1, 7]);
         // live lane drained → the rest is all bulk
-        let batch = s.take_batch("gmm", 8);
+        let batch = take(&mut s, "gmm", 8);
         let order: Vec<usize> = batch.iter().map(|it| it.state_idx).collect();
         assert_eq!(order, vec![2, 3, 4, 5]);
         assert!(s.is_empty());
@@ -567,7 +604,7 @@ mod tests {
         for i in 16..20 {
             s.push(item(i, 0, "gmm"), &meta(i as u64, "live", 2));
         }
-        let batch = s.take_batch("gmm", 8);
+        let batch = take(&mut s, "gmm", 8);
         let live = batch.iter().filter(|it| it.state_idx >= 16).count();
         assert_eq!(live, 4, "live client gets a full interleaved share");
     }
@@ -577,7 +614,7 @@ mod tests {
         for kind in SchedulerKind::ALL {
             let mut s = kind.build();
             assert!(s.peek_model().is_none(), "{}", s.name());
-            assert!(s.take_batch("gmm", 4).is_empty());
+            assert!(take(&mut s, "gmm", 4).is_empty());
             assert_eq!(s.len(), 0);
             s.forget(3); // unknown request: no-op, no panic
         }

@@ -26,6 +26,14 @@ pub const LABEL_VALUE_CAP: usize = 64;
 /// Registry key: metric name + sorted `(label, value)` pairs.
 type Key = (String, Vec<(String, String)>);
 
+/// A pre-computed registry key for hot-path metrics: build once with
+/// [`Telemetry::metric_key`], then write through [`Telemetry::inc_key`] /
+/// [`Telemetry::set_gauge_key`] / [`Telemetry::observe_key`]. After the
+/// series exists, key-based writes touch no heap — the engine's per-pump
+/// gauges and occupancy histogram go through these (§Perf).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct MetricKey(Key);
+
 /// Raw key for *reads*: no cardinality bookkeeping (a capped-out series
 /// simply does not exist under its raw value — its data lives in `other`).
 fn key(name: &str, labels: &[(&str, &str)]) -> Key {
@@ -158,6 +166,49 @@ impl Telemetry {
                 sum: 0.0,
             })
             .observe(v);
+    }
+
+    /// Build a reusable write key. Label values pass through the same
+    /// cardinality cap as the string write path.
+    pub fn metric_key(&mut self, name: &str, labels: &[(&str, &str)]) -> MetricKey {
+        MetricKey(self.canonical_key(name, labels))
+    }
+
+    /// [`Self::inc`] through a pre-computed key (allocation-free once the
+    /// series exists).
+    pub fn inc_key(&mut self, k: &MetricKey, by: u64) {
+        match self.counters.get_mut(&k.0) {
+            Some(v) => *v += by,
+            None => {
+                self.counters.insert(k.0.clone(), by);
+            }
+        }
+    }
+
+    /// [`Self::set_gauge`] through a pre-computed key.
+    pub fn set_gauge_key(&mut self, k: &MetricKey, v: f64) {
+        match self.gauges.get_mut(&k.0) {
+            Some(slot) => *slot = v,
+            None => {
+                self.gauges.insert(k.0.clone(), v);
+            }
+        }
+    }
+
+    /// [`Self::observe`] through a pre-computed key; `lo`/`hi`/`bins` size
+    /// the histogram on first use only.
+    pub fn observe_key(&mut self, k: &MetricKey, v: f64, lo: f64, hi: f64, bins: usize) {
+        match self.hists.get_mut(&k.0) {
+            Some(cell) => cell.observe(v),
+            None => {
+                let mut cell = HistCell {
+                    hist: Histogram::new(lo, hi, bins),
+                    sum: 0.0,
+                };
+                cell.observe(v);
+                self.hists.insert(k.0.clone(), cell);
+            }
+        }
     }
 
     /// Current counter value (0 if never incremented).
@@ -313,6 +364,26 @@ mod tests {
         // a different label key has its own budget
         t.inc("done", &[("policy", "ag")], 1);
         assert_eq!(t.counter("done", &[("policy", "ag")]), 1);
+    }
+
+    #[test]
+    fn precomputed_keys_share_series_with_string_writes() {
+        let mut t = Telemetry::new();
+        let k = t.metric_key("nfes_total", &[("policy", "ag")]);
+        t.inc_key(&k, 2);
+        t.inc("nfes_total", &[("policy", "ag")], 3);
+        assert_eq!(t.counter("nfes_total", &[("policy", "ag")]), 5);
+
+        let g = t.metric_key("active", &[]);
+        t.set_gauge_key(&g, 4.0);
+        t.set_gauge_key(&g, 2.5);
+        assert_eq!(t.gauge("active", &[]), Some(2.5));
+
+        let h = t.metric_key("occ", &[]);
+        t.observe_key(&h, 1.0, 0.0, 10.0, 10);
+        t.observe_key(&h, 3.0, 0.0, 10.0, 10);
+        assert_eq!(t.hist_count("occ", &[]), 2);
+        assert!((t.hist_mean("occ", &[]) - 2.0).abs() < 1e-12);
     }
 
     #[test]

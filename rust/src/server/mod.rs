@@ -225,9 +225,10 @@ pub fn completion_to_line(c: &Completion, ms: f64, with_image: bool) -> String {
 }
 
 /// Encode an error as a structured protocol line (proper JSON escaping).
-/// Unknown-policy errors carry the registered names; admission rejections
-/// carry `"code": "queue_full"` plus the budget numbers so clients can
-/// back off proportionally.
+/// Unknown-policy errors carry the registered names; admission shedding
+/// carries `"code": "queue_full"` plus the budget numbers so clients can
+/// back off proportionally; malformed requests refused at the door carry
+/// `"code": "invalid_request"`.
 pub fn error_to_line(e: &anyhow::Error) -> String {
     let mut fields = vec![("error", json::s(&format!("{e:#}")))];
     if let Some(SpecError::UnknownPolicy { known, .. }) = e.downcast_ref::<SpecError>() {
@@ -236,10 +237,10 @@ pub fn error_to_line(e: &anyhow::Error) -> String {
             json::arr(known.iter().map(|n| json::s(n)).collect()),
         ));
     }
-    if let Some(shed) = e.downcast_ref::<AdmitError>() {
-        fields.push(("code", json::s("queue_full")));
-        match *shed {
+    if let Some(refused) = e.downcast_ref::<AdmitError>() {
+        match *refused {
             AdmitError::InFlightFull { in_flight, max } => {
+                fields.push(("code", json::s("queue_full")));
                 fields.push(("in_flight", json::num(in_flight as f64)));
                 fields.push(("max_in_flight", json::num(max as f64)));
             }
@@ -248,9 +249,14 @@ pub fn error_to_line(e: &anyhow::Error) -> String {
                 request_nfes,
                 max,
             } => {
+                fields.push(("code", json::s("queue_full")));
                 fields.push(("queued_nfes", json::num(queued_nfes as f64)));
                 fields.push(("request_nfes", json::num(request_nfes as f64)));
                 fields.push(("max_queued_nfes", json::num(max as f64)));
+            }
+            AdmitError::Invalid { reason } => {
+                fields.push(("code", json::s("invalid_request")));
+                fields.push(("reason", json::s(reason)));
             }
         }
     }
@@ -662,6 +668,18 @@ mod tests {
         assert_eq!(v.req("queued_nfes").as_f64(), Some(90.0));
         assert_eq!(v.req("max_queued_nfes").as_f64(), Some(100.0));
         assert!(v.req("error").as_str().unwrap().contains("queue full"));
+    }
+
+    #[test]
+    fn invalid_request_errors_are_structured() {
+        let e = anyhow::Error::new(AdmitError::Invalid {
+            reason: "tokens must be non-empty (all-zero = unconditional)",
+        });
+        let line = error_to_line(&e);
+        let v = json::parse(&line).unwrap_or_else(|err| panic!("{line}: {err}"));
+        assert_eq!(v.req("code").as_str(), Some("invalid_request"));
+        assert!(v.req("reason").as_str().unwrap().contains("tokens"));
+        assert!(v.req("error").as_str().unwrap().contains("invalid request"));
     }
 
     /// Spin up a listener + engine thread on the GMM backend; returns the

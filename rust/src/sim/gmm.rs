@@ -23,6 +23,15 @@
 
 use crate::coordinator::solver;
 
+/// Reusable responsibility scratch for [`Gmm::eps_into`]: holds the
+/// per-component logits/softmax weights so the mixture score evaluates
+/// without allocating. One scratch serves any number of sequential calls;
+/// capacity settles at the component count after the first use.
+#[derive(Debug, Clone, Default)]
+pub struct GmmScratch {
+    weights: Vec<f64>,
+}
+
 /// Conditional Gaussian-mixture score model.
 #[derive(Debug, Clone)]
 pub struct Gmm {
@@ -57,53 +66,79 @@ impl Gmm {
     }
 
     /// Exact noise prediction. `cond = Some(k)` conditions on component `k`;
-    /// `None` is the unconditional (uniform-mixture) score.
+    /// `None` is the unconditional (uniform-mixture) score. Allocating
+    /// convenience form of [`Self::eps_into`].
     pub fn eps(&self, x: &[f32], t: f64, cond: Option<usize>) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim];
+        self.eps_into(x, t, cond, &mut out, &mut GmmScratch::default());
+        out
+    }
+
+    /// Exact noise prediction written into `out` (length `dim`) using the
+    /// caller's [`GmmScratch`] — the allocation-free form the serving hot
+    /// path runs on. Bit-identical to [`Self::eps`].
+    pub fn eps_into(
+        &self,
+        x: &[f32],
+        t: f64,
+        cond: Option<usize>,
+        out: &mut [f32],
+        scratch: &mut GmmScratch,
+    ) {
         assert_eq!(x.len(), self.dim);
+        assert_eq!(out.len(), self.dim);
         let (a, s) = solver::alpha_sigma(t);
         let tau = a * a * self.var + s * s; // marginal component variance
         match cond {
-            Some(k) => self.eps_single(x, a, s, tau, k),
-            None => self.eps_mixture(x, a, s, tau),
+            Some(k) => self.eps_single_into(x, a, s, tau, k, out),
+            None => self.eps_mixture_into(x, a, s, tau, out, scratch),
         }
     }
 
-    fn eps_single(&self, x: &[f32], a: f64, s: f64, tau: f64, k: usize) -> Vec<f32> {
+    fn eps_single_into(&self, x: &[f32], a: f64, s: f64, tau: f64, k: usize, out: &mut [f32]) {
         let mu = &self.means[k];
-        x.iter()
-            .zip(mu)
-            .map(|(&xi, &mi)| ((xi as f64 - a * mi as f64) * s / tau) as f32)
-            .collect()
+        for i in 0..self.dim {
+            out[i] = ((x[i] as f64 - a * mu[i] as f64) * s / tau) as f32;
+        }
     }
 
-    fn eps_mixture(&self, x: &[f32], a: f64, s: f64, tau: f64) -> Vec<f32> {
-        // responsibilities via log-sum-exp of -|x - a mu_k|^2 / (2 tau)
-        let logits: Vec<f64> = self
-            .means
-            .iter()
-            .map(|mu| {
-                let d2: f64 = x
-                    .iter()
-                    .zip(mu)
-                    .map(|(&xi, &mi)| {
-                        let d = xi as f64 - a * mi as f64;
-                        d * d
-                    })
-                    .sum();
-                -d2 / (2.0 * tau)
-            })
-            .collect();
-        let max = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        let weights: Vec<f64> = logits.iter().map(|l| (l - max).exp()).collect();
-        let z: f64 = weights.iter().sum();
-        let mut out = vec![0.0f32; self.dim];
+    fn eps_mixture_into(
+        &self,
+        x: &[f32],
+        a: f64,
+        s: f64,
+        tau: f64,
+        out: &mut [f32],
+        scratch: &mut GmmScratch,
+    ) {
+        // responsibilities via log-sum-exp of -|x - a mu_k|^2 / (2 tau);
+        // the logits are exponentiated in place, so one scratch buffer
+        // serves both roles.
+        let w = &mut scratch.weights;
+        w.clear();
+        for mu in &self.means {
+            let d2: f64 = x
+                .iter()
+                .zip(mu)
+                .map(|(&xi, &mi)| {
+                    let d = xi as f64 - a * mi as f64;
+                    d * d
+                })
+                .sum();
+            w.push(-d2 / (2.0 * tau));
+        }
+        let max = w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        for l in w.iter_mut() {
+            *l = (*l - max).exp();
+        }
+        let z: f64 = w.iter().sum();
+        out.fill(0.0);
         for (k, mu) in self.means.iter().enumerate() {
-            let r = weights[k] / z;
+            let r = w[k] / z;
             for i in 0..self.dim {
                 out[i] += (r * (x[i] as f64 - a * mu[i] as f64) * s / tau) as f32;
             }
         }
-        out
     }
 }
 
@@ -132,6 +167,27 @@ mod tests {
         let e2 = g.eps(&x2, 0.5, Some(0));
         for (v1, v2) in e1.iter().zip(&e2) {
             assert!((2.0 * v1 - v2).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn scratch_api_matches_allocating_eps_bitwise() {
+        // one reused scratch across interleaved cond/uncond calls at
+        // different times must reproduce the allocating path exactly
+        let g = toy();
+        let mut scratch = GmmScratch::default();
+        let mut out = vec![0.0f32; 8];
+        let mut rng = Rng::new(11);
+        for i in 0..12 {
+            let x = rng.normal_vec(8);
+            let t = 0.05 + 0.9 * (i as f64 / 12.0);
+            let cond = match i % 3 {
+                0 => None,
+                1 => Some(0),
+                _ => Some(3),
+            };
+            g.eps_into(&x, t, cond, &mut out, &mut scratch);
+            assert_eq!(out, g.eps(&x, t, cond), "call {i}");
         }
     }
 

@@ -108,6 +108,90 @@ impl Tensor {
     }
 }
 
+/// Both gamma probes of one guided step, as produced by
+/// [`combine_and_gamma`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CombineGamma {
+    /// Eq. 7's cosine on the x0 data predictions (the AG signal; see
+    /// `request.rs` for why the re-parameterization is used).
+    pub gamma_x0: f64,
+    /// Eq. 7's cosine on the raw eps predictions (the paper's printed form).
+    pub gamma_eps: f64,
+}
+
+/// Fused CFG combine (Eq. 3) + both gamma probes in **one pass** over the
+/// two score buffers: `eps_out[i] = u + s (c - u)`, the raw-eps cosine, and
+/// the x0-re-parameterized cosine (`x0 = j_x x + j_eps eps`). The seed path
+/// traversed `c`/`u` three times ([`Tensor::cfg_combine`], [`Tensor::cosine`]
+/// and the x0 probe); this keeps every accumulator's per-index operation
+/// order identical, so the results are bit-identical to the unfused path
+/// (pinned by `fused_combine_matches_unfused_path`).
+pub fn combine_and_gamma(
+    cond: &[f32],
+    uncond: &[f32],
+    s: f32,
+    x: &[f32],
+    j_x: f32,
+    j_eps: f32,
+    eps_out: &mut [f32],
+) -> CombineGamma {
+    assert_eq!(cond.len(), uncond.len());
+    assert_eq!(cond.len(), x.len());
+    assert_eq!(cond.len(), eps_out.len());
+    let (mut dot_e, mut na_e, mut nb_e) = (0f64, 0f64, 0f64);
+    let (mut dot_x, mut na_x, mut nb_x) = (0f64, 0f64, 0f64);
+    for i in 0..cond.len() {
+        let c = cond[i];
+        let u = uncond[i];
+        eps_out[i] = u + s * (c - u);
+        dot_e += c as f64 * u as f64;
+        na_e += c as f64 * c as f64;
+        nb_e += u as f64 * u as f64;
+        let xa = (j_x * x[i] + j_eps * c) as f64;
+        let xb = (j_x * x[i] + j_eps * u) as f64;
+        dot_x += xa * xb;
+        na_x += xa * xa;
+        nb_x += xb * xb;
+    }
+    CombineGamma {
+        gamma_x0: dot_x / (na_x.sqrt() * nb_x.sqrt()).max(1e-12),
+        gamma_eps: dot_e / (na_e.sqrt() * nb_e.sqrt()).max(1e-12),
+    }
+}
+
+/// Fused editing combine (Eq. 9) + the instruction-pair gamma in one pass:
+/// `eps_out = null + s_text (full - img) + s_img (img - null)` accumulated
+/// in exactly the seed path's axpy order (term by term, so the f32 sums are
+/// bit-identical), returning `cosine(full, img)`.
+pub fn edit_combine_and_gamma(
+    full: &[f32],
+    img: &[f32],
+    null: &[f32],
+    s_text: f32,
+    s_img: f32,
+    eps_out: &mut [f32],
+) -> f64 {
+    assert_eq!(full.len(), img.len());
+    assert_eq!(full.len(), null.len());
+    assert_eq!(full.len(), eps_out.len());
+    let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
+    for i in 0..full.len() {
+        let f = full[i];
+        let g = img[i];
+        let n = null[i];
+        let mut v = n;
+        v += s_text * f;
+        v += -s_text * g;
+        v += s_img * g;
+        v += -s_img * n;
+        eps_out[i] = v;
+        dot += f as f64 * g as f64;
+        na += f as f64 * f as f64;
+        nb += g as f64 * g as f64;
+    }
+    dot / (na.sqrt() * nb.sqrt()).max(1e-12)
+}
+
 /// Dense row-major i32 tensor (token inputs).
 #[derive(Clone, PartialEq)]
 pub struct TensorI32 {
@@ -160,6 +244,56 @@ mod tests {
         assert_eq!(Tensor::cfg_combine(&c, &u, 1.0).data, c.data);
         // s = 0 → unconditional
         assert_eq!(Tensor::cfg_combine(&c, &u, 0.0).data, u.data);
+    }
+
+    #[test]
+    fn fused_combine_matches_unfused_path() {
+        // the fused kernel must be bit-identical to the seed sequence:
+        // cfg_combine + cosine + the x0-re-parameterized cosine
+        let mut rng = crate::util::rng::Rng::new(5);
+        let dim = 96;
+        let c = Tensor::new(vec![dim], rng.normal_vec(dim));
+        let u = Tensor::new(vec![dim], rng.normal_vec(dim));
+        let x = rng.normal_vec(dim);
+        let (s, jx, je) = (7.5f32, 1.3f32, -0.8f32);
+
+        let eps_ref = Tensor::cfg_combine(&c, &u, s);
+        let gamma_eps_ref = c.cosine(&u);
+        let xa: Vec<f32> = (0..dim).map(|i| jx * x[i] + je * c.data[i]).collect();
+        let xb: Vec<f32> = (0..dim).map(|i| jx * x[i] + je * u.data[i]).collect();
+        let gamma_x0_ref =
+            Tensor::new(vec![dim], xa).cosine(&Tensor::new(vec![dim], xb));
+
+        let mut eps = vec![0.0f32; dim];
+        let g = combine_and_gamma(&c.data, &u.data, s, &x, jx, je, &mut eps);
+        assert_eq!(eps, eps_ref.data);
+        assert_eq!(g.gamma_eps, gamma_eps_ref);
+        assert_eq!(g.gamma_x0, gamma_x0_ref);
+    }
+
+    #[test]
+    fn fused_edit_combine_matches_axpy_sequence() {
+        let mut rng = crate::util::rng::Rng::new(6);
+        let dim = 64;
+        let full = Tensor::new(vec![dim], rng.normal_vec(dim));
+        let img = Tensor::new(vec![dim], rng.normal_vec(dim));
+        let null = Tensor::new(vec![dim], rng.normal_vec(dim));
+        let (s_text, s_img) = (7.5f32, 1.5f32);
+
+        // the seed path's exact Eq. 9 accumulation
+        let mut eps_ref = null.clone();
+        eps_ref.axpy(s_text, &full);
+        eps_ref.axpy(-s_text, &img);
+        eps_ref.axpy(s_img, &img);
+        eps_ref.axpy(-s_img, &null);
+        let gamma_ref = full.cosine(&img);
+
+        let mut eps = vec![0.0f32; dim];
+        let gamma = edit_combine_and_gamma(
+            &full.data, &img.data, &null.data, s_text, s_img, &mut eps,
+        );
+        assert_eq!(eps, eps_ref.data);
+        assert_eq!(gamma, gamma_ref);
     }
 
     #[test]

@@ -11,9 +11,12 @@ use adaptive_guidance::backend::GmmBackend;
 use adaptive_guidance::coordinator::engine::Engine;
 use adaptive_guidance::coordinator::policy::{ag, cfg, cond_only, linear_ag, PolicyRef};
 use adaptive_guidance::coordinator::request::Request;
+use adaptive_guidance::coordinator::solver;
 use adaptive_guidance::ols::OlsCoeffs;
 use adaptive_guidance::sched::{Admission, SchedulerKind};
 use adaptive_guidance::sim::gmm::Gmm;
+use adaptive_guidance::tensor::Tensor;
+use adaptive_guidance::util::rng::Rng;
 
 fn backend(dim: usize) -> GmmBackend {
     GmmBackend::new(Gmm::axes(dim, 6, 3.0, 0.05))
@@ -252,6 +255,105 @@ fn deadline_scheduler_prefers_urgent_requests() {
         }
     }
     assert_eq!(order[0], 4, "urgent request must finish first: {order:?}");
+}
+
+/// Golden reference for the packed-buffer refactor: re-run one request's
+/// trajectory with the *seed-era unfused primitives* — per-item `Gmm::eps`
+/// (allocating), `Tensor::cfg_combine` + `Tensor::cosine` as separate
+/// passes, out-of-place `solver::apply_step` — replicating the engine's
+/// exact arithmetic (including the f64→f32→f64 round-trip of the eval
+/// time). Completions must match bit-for-bit.
+fn reference_sample(
+    gmm: &Gmm,
+    comp: usize,
+    seed: u64,
+    steps: usize,
+    s: f32,
+    gamma_bar: Option<f64>,
+) -> (Vec<f32>, Vec<f64>) {
+    let dim = gmm.dim;
+    let mut x = Rng::new(seed).normal_vec(dim);
+    let mut x0_prev = vec![0.0f32; dim];
+    let ts = solver::timesteps(steps);
+    let mut truncated = false;
+    let mut gammas = Vec::new();
+    for i in 0..steps {
+        let t_r = if i > 0 { Some(ts[i - 1]) } else { None };
+        let c = solver::fold_coefs(ts[i], ts[i + 1], t_r);
+        // the engine hands the backend an f32 time; mirror the rounding
+        let t_eval = ts[i] as f32 as f64;
+        let eps = if truncated {
+            gammas.push(f64::NAN);
+            gmm.eps(&x, t_eval, Some(comp))
+        } else {
+            let ec = Tensor::new(vec![dim], gmm.eps(&x, t_eval, Some(comp)));
+            let eu = Tensor::new(vec![dim], gmm.eps(&x, t_eval, None));
+            // the AG signal: Eq. 7's cosine on the x0 re-parameterization
+            let (jx, je) = (c.j_x as f32, c.j_eps as f32);
+            let xa: Vec<f32> = (0..dim).map(|k| jx * x[k] + je * ec.data[k]).collect();
+            let xb: Vec<f32> = (0..dim).map(|k| jx * x[k] + je * eu.data[k]).collect();
+            let gamma = Tensor::new(vec![dim], xa).cosine(&Tensor::new(vec![dim], xb));
+            gammas.push(gamma);
+            if let Some(bar) = gamma_bar {
+                if gamma >= bar {
+                    truncated = true; // effective from the next step
+                }
+            }
+            Tensor::cfg_combine(&ec, &eu, s).data
+        };
+        let (xn, x0) = solver::apply_step(&x, &eps, &x0_prev, &c);
+        x = xn;
+        x0_prev = x0;
+    }
+    (x0_prev, gammas)
+}
+
+/// The packed/pooled/fused execution path must be bit-identical to the
+/// unfused reference sampler, for plain CFG and for truncating AG, and the
+/// agreement must hold under every scheduler. (The linear-ag leg of the
+/// invariance story rides on `every_scheduler_produces_identical_results`.)
+#[test]
+fn packed_execution_matches_unfused_reference_sampler() {
+    let gmm = Gmm::axes(12, 6, 3.0, 0.05);
+    let steps = 9;
+    let expect = |id: u64, gamma_bar: Option<f64>| {
+        let comp = (id % 6) as usize; // req() conditions on token 1 + id%6
+        reference_sample(&gmm, comp, 7000 + id, steps, 2.0, gamma_bar)
+    };
+    for kind in SchedulerKind::ALL {
+        let be = GmmBackend::new(gmm.clone());
+        let mut e =
+            Engine::with_scheduler(be, kind.build(), Admission::unlimited()).unwrap();
+        let out = e
+            .run(vec![
+                req(0, 7000, steps, cfg(2.0)),
+                req(1, 7001, steps, ag(2.0, 0.99)),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 2, "{}", kind.name());
+        for c in &out {
+            let gamma_bar = if c.id == 1 { Some(0.99) } else { None };
+            let (image, gammas) = expect(c.id, gamma_bar);
+            assert_eq!(
+                c.image,
+                image,
+                "{}: request {} image diverged from the unfused reference",
+                kind.name(),
+                c.id
+            );
+            assert_eq!(c.gammas.len(), gammas.len(), "{}", kind.name());
+            for (i, (a, b)) in c.gammas.iter().zip(&gammas).enumerate() {
+                assert!(
+                    (a.is_nan() && b.is_nan()) || a == b,
+                    "{}: request {} gamma[{i}]: engine {a} vs reference {b}",
+                    kind.name(),
+                    c.id
+                );
+            }
+        }
+        // the AG request must actually have exercised the truncated path
+        assert!(out[1].truncated_at.is_some(), "{}", kind.name());
+    }
 }
 
 /// Admission budgets shed load without touching in-flight work, and

@@ -1,0 +1,128 @@
+//! The §Perf acceptance pin: at steady state (after warmup, mid-flight —
+//! no admissions, no completions) `Engine::pump()` on the GMM backend
+//! performs **zero heap allocations**, under every scheduling discipline.
+//!
+//! A counting global allocator wraps `System`; the file contains exactly
+//! one `#[test]` so no concurrent test can allocate inside the measurement
+//! window. Warmup pumps let every reusable buffer reach capacity — the
+//! packed [`BatchBuf`]/[`BatchOut`] pair, the scheduler's pop buffer and
+//! selection scratch, the engine's [`BufPool`], the GMM responsibility
+//! scratch, and the per-request gamma reserves — after which the per-step
+//! path must never touch the allocator again. AG truncation is allowed to
+//! fire inside the window: plan changes reuse existing capacity.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use adaptive_guidance::backend::GmmBackend;
+use adaptive_guidance::coordinator::engine::Engine;
+use adaptive_guidance::coordinator::policy::{ag, cfg};
+use adaptive_guidance::coordinator::request::Request;
+use adaptive_guidance::sched::{Admission, SchedulerKind};
+use adaptive_guidance::sim::gmm::Gmm;
+
+struct CountingAlloc;
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// 8 mixed cfg/ag requests, long enough that warmup + the measurement
+/// window finish well before the first completion.
+const STEPS: usize = 48;
+const WARMUP_PUMPS: usize = 16;
+const MEASURED_PUMPS: usize = 16;
+
+#[test]
+fn pump_is_allocation_free_at_steady_state_under_every_scheduler() {
+    for kind in SchedulerKind::ALL {
+        let be = GmmBackend::new(Gmm::axes(16, 4, 3.0, 0.05));
+        let mut e = Engine::with_scheduler(be, kind.build(), Admission::unlimited())
+            .expect("engine over the GMM oracle");
+        for i in 0..8u64 {
+            let policy = if i % 2 == 0 { cfg(2.0) } else { ag(2.0, 0.99) };
+            let mut r = Request::new(
+                i,
+                "gmm",
+                vec![1 + (i % 4) as i32, 0, 0, 0],
+                900 + i,
+                STEPS,
+                policy,
+            );
+            // exercise the fair-share lanes and the deadline keys too
+            r.client_id = Some(Arc::from(if i % 2 == 0 { "bulk" } else { "live" }));
+            r.deadline_ms = Some(60_000 + i);
+            e.submit(r);
+        }
+
+        // warmup: pools, packed buffers and scheduler scratch reach capacity
+        let mut done = 0usize;
+        for _ in 0..WARMUP_PUMPS {
+            done += e.pump().expect("warmup pump").len();
+        }
+        assert_eq!(done, 0, "warmup completed requests under {}", kind.name());
+
+        ALLOCS.store(0, Ordering::SeqCst);
+        COUNTING.store(true, Ordering::SeqCst);
+        let mut completed = 0usize;
+        for _ in 0..MEASURED_PUMPS {
+            completed += e.pump().expect("steady-state pump").len();
+        }
+        COUNTING.store(false, Ordering::SeqCst);
+        let allocs = ALLOCS.load(Ordering::SeqCst);
+
+        assert_eq!(
+            completed,
+            0,
+            "measurement window must stay mid-flight under {}",
+            kind.name()
+        );
+        assert_eq!(
+            allocs,
+            0,
+            "pump() allocated {allocs} time(s) at steady state under `{}` — \
+             a per-step allocation crept back into the hot path (see \
+             engine.rs §Perf: buffer ownership)",
+            kind.name()
+        );
+
+        // the workload still drains to correct completions afterwards
+        let out = e.drain().expect("drain");
+        assert_eq!(out.len(), 8, "{}", kind.name());
+        assert!(
+            out.iter().filter(|c| c.truncated_at.is_some()).count() >= 1,
+            "AG requests should truncate on the oracle ({})",
+            kind.name()
+        );
+    }
+}

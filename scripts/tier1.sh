@@ -8,6 +8,10 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo build --release
+# bench targets are not covered by `cargo build`/`cargo test`; compile them
+# explicitly so they cannot rot on CI images without clippy (which would
+# otherwise be the only thing building --all-targets)
+cargo build --release --benches
 cargo test -q
 
 if cargo clippy --version >/dev/null 2>&1; then
