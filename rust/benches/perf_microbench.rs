@@ -81,8 +81,15 @@ impl Backend for LegacyVecGmm {
 
 /// One engine-loop measurement: 16 requests × 10 steps of CFG over a
 /// near-free analytic backend, so the time is almost pure L3 bookkeeping.
-fn engine_loop_row<B: Backend>(name: &str, backend: B, iters: usize) -> (Summary, f64) {
+/// `workers` sizes the engine's ExecPool (1 = the serial engine).
+fn engine_loop_row<B: Backend>(
+    name: &str,
+    backend: B,
+    iters: usize,
+    workers: usize,
+) -> (Summary, f64) {
     let mut engine = Engine::new(backend).expect("engine");
+    engine.set_workers(workers);
     let mut id = 0u64;
     let s = bench(name, 2, iters, || {
         let reqs: Vec<Request> = (0..16)
@@ -106,14 +113,18 @@ fn main() {
 
     // ---- L3 scheduler overhead, packed (current) vs legacy per-item
     // emulation: the engine-loop row this PR's refactor targets.
+    // (the packed workers=1 row doubles as the scaling sweep's baseline)
+    let packed_base_per_nfe;
     {
         let (s, per_nfe) = engine_loop_row(
             "L3 engine loop packed (16 req x 10 steps, gmm)",
             GmmBackend::new(Gmm::axes(768, 4, 3.0, 0.05)),
             iters,
+            1,
         );
         rows.push(s);
         derived.push(("engine_loop_packed_per_nfe_us", per_nfe));
+        packed_base_per_nfe = per_nfe;
         println!("scheduler overhead (packed): ~{per_nfe:.1} us per NFE item (incl. gmm math)");
 
         let (s, per_nfe) = engine_loop_row(
@@ -123,6 +134,7 @@ fn main() {
                 buckets: vec![1, 2, 4, 8, 16],
             },
             iters,
+            1,
         );
         rows.push(s);
         derived.push(("engine_loop_legacy_per_nfe_us", per_nfe));
@@ -130,6 +142,49 @@ fn main() {
             "scheduler overhead (legacy backend emulation, lower bound on the \
              seed cost): ~{per_nfe:.1} us per NFE item\n"
         );
+    }
+
+    // ---- worker-pool scaling sweep (§Perf: parallel execution): the
+    // same batch-16 GMM workload sharded over 1/2/4/8 lanes. The per-NFE
+    // numbers land in the --out JSON as the multi-core perf trajectory;
+    // expect ≥2x at 4 workers on a 4-core host (results are bit-identical
+    // at every width — only throughput moves).
+    {
+        // workers=1 is exactly the packed row above — reuse it as the
+        // baseline instead of re-timing the same configuration
+        let base = packed_base_per_nfe;
+        let mut per_nfe_by_workers: Vec<(usize, f64)> = vec![(1, base)];
+        derived.push(("engine_loop_workers1_per_nfe_us", base));
+        for &w in &[2usize, 4, 8] {
+            let (s, per_nfe) = engine_loop_row(
+                &format!("L3 engine loop packed workers={w} (16 req x 10 steps, gmm)"),
+                GmmBackend::new(Gmm::axes(768, 4, 3.0, 0.05)),
+                iters,
+                w,
+            );
+            rows.push(s);
+            let key = match w {
+                2 => "engine_loop_workers2_per_nfe_us",
+                4 => "engine_loop_workers4_per_nfe_us",
+                _ => "engine_loop_workers8_per_nfe_us",
+            };
+            derived.push((key, per_nfe));
+            per_nfe_by_workers.push((w, per_nfe));
+        }
+        println!("worker scaling (per-NFE engine loop, gmm 768d):");
+        for &(w, v) in &per_nfe_by_workers {
+            println!("  workers={w}: {v:.2} us/NFE  ({:.2}x vs workers=1)", base / v);
+            let key = match w {
+                2 => Some("engine_loop_workers2_speedup"),
+                4 => Some("engine_loop_workers4_speedup"),
+                8 => Some("engine_loop_workers8_speedup"),
+                _ => None,
+            };
+            if let Some(key) = key {
+                derived.push((key, base / v));
+            }
+        }
+        println!();
     }
 
     // ---- host combine + solve (the per-step non-NFE math), unfused (seed

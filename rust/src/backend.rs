@@ -21,6 +21,7 @@
 
 use anyhow::Result;
 
+use crate::exec::{ExecPool, RowShards, RunStats, SliceShards};
 use crate::sim::gmm::{Gmm, GmmScratch};
 
 /// One denoiser evaluation request: a single NFE's inputs. Compatibility
@@ -221,6 +222,27 @@ pub trait Backend {
     /// implementations must not retain references into them.
     fn denoise_into(&mut self, model: &str, batch: &BatchBuf, out: &mut BatchOut) -> Result<()>;
 
+    /// [`Self::denoise_into`] with an [`ExecPool`] offered for sharding
+    /// the batch rows across worker lanes — the engine's execution entry
+    /// point. The default ignores the pool and runs the serial path,
+    /// which is the right behaviour for thread-affine backends (the PJRT
+    /// client is not `Send` and must stay on the engine thread); it
+    /// reports `None` so the engine's worker gauges fall back to its own
+    /// parallel regions. Host-math backends that do override it must keep
+    /// per-row results bit-identical to the serial path for any lane
+    /// count: shard strictly *across* rows, never the math *within* one.
+    fn denoise_into_par(
+        &mut self,
+        model: &str,
+        batch: &BatchBuf,
+        out: &mut BatchOut,
+        exec: &ExecPool,
+    ) -> Result<Option<RunStats>> {
+        let _ = exec;
+        self.denoise_into(model, batch, out)?;
+        Ok(None)
+    }
+
     /// Per-item compatibility wrapper over [`Backend::denoise_into`]:
     /// packs `items` into a fresh [`BatchBuf`] (token rows sized by the
     /// widest item; narrower rows zero-pad their tail, the all-zero =
@@ -261,6 +283,12 @@ pub struct GmmBackend {
     pub items_executed: usize,
     /// responsibility scratch reused across every mixture-score row
     scratch: GmmScratch,
+    /// one responsibility scratch per worker lane for the sharded path;
+    /// grown (once) to the pool's lane count, then reused forever
+    lane_scratch: Vec<GmmScratch>,
+    /// per-row decoded conditions, staged serially before a sharded
+    /// execution so token errors surface in row order (capacity retained)
+    conds: Vec<Option<usize>>,
 }
 
 impl GmmBackend {
@@ -271,6 +299,8 @@ impl GmmBackend {
             calls: 0,
             items_executed: 0,
             scratch: GmmScratch::default(),
+            lane_scratch: Vec::new(),
+            conds: Vec::new(),
         }
     }
 
@@ -301,6 +331,29 @@ impl GmmBackend {
         );
         Ok(Some((tok - 1) as usize))
     }
+
+    /// Shared entry for both execution paths: bucket/geometry validation,
+    /// call/item accounting, output sizing. Keeping this in one place
+    /// guarantees the serial and sharded paths stay identical up to the
+    /// row loop.
+    fn stage_batch(&mut self, batch: &BatchBuf, out: &mut BatchOut) -> Result<()> {
+        let max = *self.buckets.last().unwrap();
+        anyhow::ensure!(
+            batch.len() <= max,
+            "batch {} exceeds max bucket {max}",
+            batch.len()
+        );
+        anyhow::ensure!(
+            batch.flat_in() == self.gmm.dim,
+            "packed row length {} != gmm dim {}",
+            batch.flat_in(),
+            self.gmm.dim
+        );
+        self.calls += 1;
+        self.items_executed += batch.len();
+        out.reset(self.gmm.dim, batch.len());
+        Ok(())
+    }
 }
 
 impl Backend for GmmBackend {
@@ -327,21 +380,7 @@ impl Backend for GmmBackend {
     }
 
     fn denoise_into(&mut self, _model: &str, batch: &BatchBuf, out: &mut BatchOut) -> Result<()> {
-        let max = *self.buckets.last().unwrap();
-        anyhow::ensure!(
-            batch.len() <= max,
-            "batch {} exceeds max bucket {max}",
-            batch.len()
-        );
-        anyhow::ensure!(
-            batch.flat_in() == self.gmm.dim,
-            "packed row length {} != gmm dim {}",
-            batch.flat_in(),
-            self.gmm.dim
-        );
-        self.calls += 1;
-        self.items_executed += batch.len();
-        out.reset(self.gmm.dim, batch.len());
+        self.stage_batch(batch, out)?;
         for i in 0..batch.len() {
             let cond = Self::cond_of(&self.gmm, batch.token_row(i))?;
             self.gmm.eps_into(
@@ -353,6 +392,50 @@ impl Backend for GmmBackend {
             );
         }
         Ok(())
+    }
+
+    /// §Perf: shard the packed rows across the pool's lanes. Each row is
+    /// an independent mixture-score evaluation writing its own disjoint
+    /// output row with its own lane-local [`GmmScratch`], and the per-row
+    /// math is exactly [`Gmm::eps_into`] — so results are bit-identical
+    /// to the serial path for any lane count. Token decoding stays serial
+    /// (it is O(1) per row) so malformed rows error in row order, same as
+    /// the serial path.
+    fn denoise_into_par(
+        &mut self,
+        model: &str,
+        batch: &BatchBuf,
+        out: &mut BatchOut,
+        exec: &ExecPool,
+    ) -> Result<Option<RunStats>> {
+        if exec.lanes() <= 1 || batch.len() <= 1 {
+            self.denoise_into(model, batch, out)?;
+            return Ok(None);
+        }
+        self.stage_batch(batch, out)?;
+        self.conds.clear();
+        for i in 0..batch.len() {
+            let cond = Self::cond_of(&self.gmm, batch.token_row(i))?;
+            self.conds.push(cond);
+        }
+        while self.lane_scratch.len() < exec.lanes() {
+            let mut scratch = GmmScratch::default();
+            // warmed so a lane's first mixture row never allocates
+            scratch.warm(self.gmm.components());
+            self.lane_scratch.push(scratch);
+        }
+        let gmm = &self.gmm;
+        let conds = &self.conds;
+        let rows = RowShards::new(out.data_mut(), gmm.dim);
+        let scratches = SliceShards::new(&mut self.lane_scratch);
+        let stats = exec.run(batch.len(), |lane, i| {
+            // Safety: the pool claims each row index exactly once, and
+            // `lane` is distinct per concurrently-running invocation.
+            let row = unsafe { rows.row(i) };
+            let scratch = unsafe { scratches.slot(lane) };
+            gmm.eps_into(batch.x_row(i), batch.t(i) as f64, conds[i], row, scratch);
+        });
+        Ok(Some(stats))
     }
 
     fn models(&self) -> Vec<String> {
@@ -455,6 +538,42 @@ mod tests {
             };
             assert_eq!(via_compat[i], gmm.eps(&it.x, it.t as f64, cond));
         }
+    }
+
+    #[test]
+    fn sharded_execution_matches_serial_bitwise() {
+        let gmm = Gmm::axes(6, 3, 2.5, 0.1);
+        let mut batch = BatchBuf::new(6, 4);
+        for i in 0..12 {
+            let (x, toks) = batch.push_row(0.15 + 0.06 * i as f32);
+            for (j, v) in x.iter_mut().enumerate() {
+                *v = ((i * 6 + j) as f32).sin();
+            }
+            toks[0] = (i % 4) as i32; // mixes unconditional and all components
+        }
+        let mut serial_out = BatchOut::default();
+        GmmBackend::new(gmm.clone())
+            .denoise_into("gmm", &batch, &mut serial_out)
+            .unwrap();
+        for lanes in [1usize, 2, 4, 8] {
+            let pool = crate::exec::ExecPool::new(lanes);
+            let mut be = GmmBackend::new(gmm.clone());
+            let mut out = BatchOut::default();
+            be.denoise_into_par("gmm", &batch, &mut out, &pool).unwrap();
+            assert_eq!(out.data(), serial_out.data(), "lanes {lanes}");
+            assert_eq!((be.calls, be.items_executed), (1, 12), "lanes {lanes}");
+        }
+        // malformed rows error before any sharded work, like the serial path
+        let mut bad = BatchBuf::new(6, 4);
+        for tok in [1, 99] {
+            let (_, toks) = bad.push_row(0.5);
+            toks[0] = tok;
+        }
+        let pool = crate::exec::ExecPool::new(4);
+        let mut be = GmmBackend::new(gmm);
+        let mut out = BatchOut::default();
+        let err = be.denoise_into_par("gmm", &bad, &mut out, &pool).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
     }
 
     #[test]

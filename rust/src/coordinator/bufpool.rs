@@ -12,6 +12,17 @@
 //! it (every consumer in the engine does a full `copy_from_slice` or a full
 //! write pass). Free lists are capped per length class so a shifting
 //! workload cannot grow the pool without bound.
+//!
+//! # Parallel step completion (§Perf: parallel execution)
+//!
+//! The pool is **single-owner**: only the engine thread touches it. When
+//! step completions run on the worker pool, each parallel slot gets a
+//! [`StepBufs`] — a spare buffer pre-staged by the engine plus a small
+//! return queue — and the request state machine draws from/returns to it
+//! through the [`BufSource`] trait instead of the pool directly. After
+//! the parallel region the engine drains every `StepBufs` back into the
+//! pool in slot order, so lend/return stays a single-threaded pool
+//! conversation no matter how many workers completed steps.
 
 use std::collections::HashMap;
 
@@ -76,6 +87,81 @@ impl BufPool {
     }
 }
 
+/// Where the per-step state machine draws and returns fixed-length score
+/// buffers. Implemented by [`BufPool`] itself (the serial path) and by
+/// [`StepBufs`] (the staged form a parallel step completion runs
+/// against, so workers never touch the engine's single-owner pool).
+pub trait BufSource {
+    /// Take a buffer of exactly `len` elements; contents unspecified.
+    fn take(&mut self, len: usize) -> Vec<f32>;
+    /// Hand back a buffer the step is done with.
+    fn put(&mut self, buf: Vec<f32>);
+}
+
+impl BufSource for BufPool {
+    fn take(&mut self, len: usize) -> Vec<f32> {
+        BufPool::take(self, len)
+    }
+
+    fn put(&mut self, buf: Vec<f32>) {
+        BufPool::put(self, buf)
+    }
+}
+
+/// Most buffers one step completion can return: the editing triple plus
+/// the combined epsilon. [`StepBufs::new`] reserves this up front so the
+/// return queue never reallocates on the hot path.
+const MAX_STEP_RETURNS: usize = 4;
+
+/// Per-slot buffer staging for a parallel step completion. The engine
+/// pre-takes `spare` from the pool (when the slot's plan combines
+/// streams), the worker-side state machine consumes it via
+/// [`BufSource::take`] and queues its finished buffers via
+/// [`BufSource::put`], and the engine drains `returned` back into the
+/// pool afterwards — see the module docs.
+#[derive(Debug, Default)]
+pub struct StepBufs {
+    /// The one buffer a combining plan may take mid-step.
+    pub spare: Option<Vec<f32>>,
+    /// Buffers the step finished with, awaiting the engine's pool drain.
+    pub returned: Vec<Vec<f32>>,
+}
+
+impl StepBufs {
+    pub fn new() -> StepBufs {
+        StepBufs {
+            spare: None,
+            returned: Vec::with_capacity(MAX_STEP_RETURNS),
+        }
+    }
+
+    /// Drop any leftover staging (the engine calls this after draining;
+    /// capacity is retained).
+    pub fn reset(&mut self) {
+        self.spare = None;
+        self.returned.clear();
+    }
+}
+
+impl BufSource for StepBufs {
+    fn take(&mut self, len: usize) -> Vec<f32> {
+        let buf = self
+            .spare
+            .take()
+            .expect("StepBufs: combining plan ran without a pre-staged spare buffer");
+        debug_assert_eq!(buf.len(), len, "pre-staged spare has the wrong length");
+        buf
+    }
+
+    fn put(&mut self, buf: Vec<f32>) {
+        debug_assert!(
+            self.returned.len() < MAX_STEP_RETURNS,
+            "a step returned more buffers than any plan produces"
+        );
+        self.returned.push(buf);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,5 +200,118 @@ mod tests {
             p.put(vec![0.0; 4]);
         }
         assert_eq!(p.pooled(), PER_LEN_CAP);
+    }
+
+    #[test]
+    fn step_bufs_stage_and_queue_without_touching_a_pool() {
+        let mut pool = BufPool::new();
+        let mut sb = StepBufs::new();
+        sb.spare = Some(pool.take(8));
+        // the state machine side: one take, several puts
+        let eps = BufSource::take(&mut sb, 8);
+        assert_eq!(eps.len(), 8);
+        BufSource::put(&mut sb, vec![0.0; 8]);
+        BufSource::put(&mut sb, vec![0.0; 8]);
+        BufSource::put(&mut sb, eps);
+        assert_eq!(sb.returned.len(), 3);
+        assert!(sb.spare.is_none());
+        // the engine side: drain everything back
+        for buf in sb.returned.drain(..) {
+            pool.put(buf);
+        }
+        assert_eq!(pool.pooled(), 3);
+        sb.reset();
+        assert!(sb.returned.is_empty());
+    }
+
+    /// Property-style pin for the parallel completion pattern: many
+    /// interleaved lend/return rounds — pre-staged spares, per-slot
+    /// return queues in arbitrary slot order, mixed length classes like a
+    /// fleet of editing + standard models — must never lose a buffer,
+    /// never hand the same allocation out twice, and keep the pool's
+    /// conservation law `allocs == outstanding + pooled` (below the free
+    /// list cap) through every round.
+    #[test]
+    fn interleaved_parallel_rounds_conserve_buffers() {
+        use crate::util::rng::Rng;
+
+        const LENS: [usize; 3] = [8, 16, 24];
+        let mut pool = BufPool::new();
+        let mut rng = Rng::new(0xB0F);
+        // identity of every buffer currently lent out, by data pointer
+        let mut outstanding: Vec<Vec<f32>> = Vec::new();
+        let live_ptrs = |bufs: &[Vec<f32>]| -> Vec<usize> {
+            bufs.iter().map(|b| b.as_ptr() as usize).collect()
+        };
+
+        // buffers that entered the pool from outside (emulated
+        // delivered-slot buffers the pool never allocated) inflate
+        // `pooled()` relative to `allocs()`; count them so the
+        // conservation law stays exact
+        let mut seeded = 0usize;
+
+        for round in 0..400 {
+            // phase 1: the engine pre-stages spares for a ready batch
+            let slots = 1 + rng.below(12);
+            let mut staged: Vec<StepBufs> = Vec::new();
+            for s in 0..slots {
+                let mut sb = StepBufs::new();
+                let len = LENS[rng.below(LENS.len())];
+                let buf = pool.take(len);
+                let ptr = buf.as_ptr() as usize;
+                assert!(
+                    !live_ptrs(&outstanding).contains(&ptr),
+                    "round {round} slot {s}: pool handed out a live buffer"
+                );
+                assert_eq!(buf.len(), len);
+                sb.spare = Some(buf);
+                // the worker side consumes the spare and queues returns
+                // of assorted length classes
+                let eps = BufSource::take(&mut sb, len);
+                BufSource::put(&mut sb, eps);
+                for _ in 0..rng.below(3) {
+                    // emulate slot buffers previously delivered to the
+                    // request (they entered from outside the pool)
+                    BufSource::put(&mut sb, vec![0.0; LENS[rng.below(LENS.len())]]);
+                    seeded += 1;
+                }
+                staged.push(sb);
+            }
+            // phase 2: slots complete in arbitrary order; the engine
+            // drains them back in that order
+            while !staged.is_empty() {
+                let k = rng.below(staged.len());
+                let mut sb = staged.swap_remove(k);
+                if let Some(sp) = sb.spare.take() {
+                    pool.put(sp);
+                }
+                for buf in sb.returned.drain(..) {
+                    pool.put(buf);
+                }
+            }
+            // some rounds keep buffers lent across rounds (recorded
+            // histories), some give them back later
+            if rng.below(3) == 0 {
+                outstanding.push(pool.take(LENS[rng.below(LENS.len())]));
+            } else if !outstanding.is_empty() && rng.below(2) == 0 {
+                let k = rng.below(outstanding.len());
+                pool.put(outstanding.swap_remove(k));
+            }
+            // conservation: nothing lost, nothing duplicated. Every take
+            // was served by a fresh alloc, a recycled pool buffer, or a
+            // seeded outside buffer, so (under the per-class cap)
+            // allocs + seeded == live + free.
+            assert_eq!(
+                pool.allocs() as usize + seeded,
+                outstanding.len() + pool.pooled(),
+                "round {round}: pool lost or duplicated a buffer"
+            );
+            let ptrs = live_ptrs(&outstanding);
+            let mut dedup = ptrs.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), ptrs.len(), "round {round}: duplicate live buffer");
+        }
+        assert!(pool.reuses() > 0, "the pattern must actually recycle");
     }
 }

@@ -23,10 +23,12 @@
 //! drains to completion. Scheduling reorders *work*, never *results*: a
 //! request's completion is bit-identical under every scheduler.
 //!
-//! # §Perf: buffer ownership
+//! # §Perf: buffer ownership & parallel execution
 //!
 //! The per-step path is allocation-free at steady state (pinned by
-//! `rust/tests/zero_alloc.rs`). Ownership flows one way:
+//! `rust/tests/zero_alloc.rs` for the serial engine and
+//! `rust/tests/par_zero_alloc.rs` for the sharded one). Ownership flows
+//! one way:
 //!
 //! * the **engine** owns the reusable [`BatchBuf`]/[`BatchOut`] pair (one
 //!   packed `batch × flat` buffer each, capacity retained across pumps),
@@ -42,16 +44,42 @@
 //! telemetry goes through pre-computed [`MetricKey`]s, and anything that
 //! must outlive a step (history, completions) is the only thing allowed to
 //! allocate.
+//!
+//! ## The row/slot sharding rule
+//!
+//! [`Engine::set_workers`] attaches an [`ExecPool`] and the two
+//! embarrassingly parallel hot loops shard across it:
+//!
+//! 1. **Batch rows** — `pump` executes through
+//!    [`Backend::denoise_into_par`], and a host-math backend (the GMM
+//!    oracle) computes each packed row on a worker lane, writing its
+//!    disjoint [`BatchOut`] row with a lane-local scratch.
+//! 2. **Step completions** — every request whose step finished runs
+//!    `complete_step` on a lane, against a pre-staged
+//!    [`StepBufs`](crate::coordinator::bufpool::StepBufs): the engine
+//!    thread takes the one spare buffer a combining plan needs *before*
+//!    the region and drains every returned buffer back into the pool
+//!    *after* it, so the [`BufPool`] stays single-owner.
+//!
+//! Parallelism is strictly *across* rows/slots: the float-op order within
+//! a row or a request's step is byte-for-byte the serial code's, so
+//! completions are bit-identical for every `--workers` value (pinned by
+//! `rust/tests/sched_integration.rs`). Everything stateful — scheduler
+//! pops, admission, pool take/put, telemetry, and the not-`Send` PJRT
+//! client — stays on the engine thread; see the [`crate::exec`] docs for
+//! the pool's own contract.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::backend::{Backend, BatchBuf, BatchOut};
-use crate::coordinator::bufpool::BufPool;
+use crate::coordinator::bufpool::{BufPool, StepBufs};
 use crate::coordinator::policy::PolicyState;
 use crate::coordinator::request::{Completion, EvalKind, Request, RequestState};
+use crate::exec::{ExecPool, SliceShards};
 use crate::sched::{
     Admission, AdmitError, Fifo, MetricKey, RequestMeta, Scheduler, Telemetry, WorkItem,
 };
@@ -111,12 +139,29 @@ pub struct Engine<B: Backend> {
     out: BatchOut,
     batch_items: Vec<WorkItem>,
     ready: Vec<usize>,
+    /// §Perf: the worker pool the hot loops shard across (serial by
+    /// default; [`Engine::set_workers`])
+    exec: ExecPool,
+    /// per-ready-slot buffer staging for parallel step completion
+    /// (capacity grows to the high-water ready count, then stable)
+    step_bufs: Vec<StepBufs>,
+    /// per-ready-slot completion results from the parallel region
+    ready_done: Vec<Option<Completion>>,
+    /// live requests per client id, for the per-client admission quota
+    /// (`""` = anonymous)
+    clients_in_flight: HashMap<Arc<str>, usize>,
+    /// interned anonymous client id (avoids an Arc allocation per
+    /// anonymous admission)
+    anon_client: Arc<str>,
     /// pre-computed keys for the per-pump metrics (no label allocation on
     /// the hot path)
     k_batch_occupancy: MetricKey,
     k_active: MetricKey,
     k_queue_depth: MetricKey,
     k_queued_nfes: MetricKey,
+    k_worker_lanes: MetricKey,
+    k_worker_occupancy: MetricKey,
+    k_parallel_efficiency: MetricKey,
 }
 
 impl<B: Backend> Engine<B> {
@@ -147,6 +192,9 @@ impl<B: Backend> Engine<B> {
         let k_active = telemetry.metric_key("active_requests", &[]);
         let k_queue_depth = telemetry.metric_key("queue_depth", &[]);
         let k_queued_nfes = telemetry.metric_key("queued_nfes", &[]);
+        let k_worker_lanes = telemetry.metric_key("worker_lanes", &[]);
+        let k_worker_occupancy = telemetry.metric_key("worker_occupancy", &[]);
+        let k_parallel_efficiency = telemetry.metric_key("parallel_efficiency", &[]);
         Ok(Engine {
             backend,
             sched,
@@ -166,11 +214,37 @@ impl<B: Backend> Engine<B> {
             out: BatchOut::default(),
             batch_items: Vec::new(),
             ready: Vec::new(),
+            exec: ExecPool::serial(),
+            step_bufs: Vec::new(),
+            ready_done: Vec::new(),
+            clients_in_flight: HashMap::new(),
+            anon_client: Arc::from(""),
             k_batch_occupancy,
             k_active,
             k_queue_depth,
             k_queued_nfes,
+            k_worker_lanes,
+            k_worker_occupancy,
+            k_parallel_efficiency,
         })
+    }
+
+    /// Attach a worker pool with `workers` total compute lanes (§Perf:
+    /// parallel execution; `agd serve --workers N`). `1` (the
+    /// construction default) is the serial engine — no threads, the exact
+    /// historical code path. Completions are bit-identical for every
+    /// value; only throughput changes. Spawns the pool immediately, once.
+    pub fn set_workers(&mut self, workers: usize) {
+        if workers.max(1) != self.exec.lanes() {
+            self.exec = ExecPool::new(workers);
+        }
+        let lanes = self.exec.lanes() as f64;
+        self.telemetry.set_gauge_key(&self.k_worker_lanes, lanes);
+    }
+
+    /// Compute lanes the engine executes on (1 = serial).
+    pub fn workers(&self) -> usize {
+        self.exec.lanes()
     }
 
     /// Number of requests still in flight.
@@ -344,6 +418,20 @@ impl<B: Backend> Engine<B> {
             self.telemetry.inc("requests_rejected_total", &[], 1);
             return Err(e);
         }
+        // per-client quota: one client cannot consume the whole global
+        // budget (anonymous requests share the "" lane, like fair-share)
+        let client = req
+            .client_id
+            .clone()
+            .unwrap_or_else(|| self.anon_client.clone());
+        let in_flight = self.clients_in_flight.get(&client).copied().unwrap_or(0);
+        if let Err(e) = self.admission.check_client(&client, in_flight) {
+            self.telemetry.inc("requests_rejected_total", &[], 1);
+            let name: &str = &client;
+            self.telemetry
+                .inc("client_quota_rejected_total", &[("client", name)], 1);
+            return Err(e);
+        }
         self.submit_costed(req, cost);
         Ok(())
     }
@@ -377,7 +465,7 @@ impl<B: Backend> Engine<B> {
                 .req
                 .client_id
                 .clone()
-                .unwrap_or_else(|| Arc::from("")),
+                .unwrap_or_else(|| self.anon_client.clone()),
             policy: state.req.policy.kind(),
             priority: state.req.priority,
             deadline_ms: state
@@ -389,6 +477,12 @@ impl<B: Backend> Engine<B> {
             submitted,
             first_exec: None,
         };
+        // per-client live count for the admission quota; unwound when the
+        // request completes
+        *self
+            .clients_in_flight
+            .entry(meta.client.clone())
+            .or_insert(0) += 1;
         let idx = match self.free.pop() {
             Some(i) => i,
             None => {
@@ -524,6 +618,7 @@ impl<B: Backend> Engine<B> {
         // back to the scheduler (`requeue_failed_batch`), so accounting
         // (`active`/`queued_nfes`/pending slots) stays consistent and the
         // engine remains usable — the caller just sees the error.
+        let mut exec_stats: Option<crate::exec::RunStats> = None;
         let staged: Result<()> = (|| {
             // the token table is as wide as the widest request in the
             // batch; narrower rows zero-fill their tail
@@ -551,7 +646,9 @@ impl<B: Backend> Engine<B> {
                 let (x_row, tok_row) = self.batch.push_row(st.current_t() as f32);
                 st.fill_eval_input(kind, x_row, tok_row);
             }
-            self.backend.denoise_into(&model, &self.batch, &mut self.out)?;
+            exec_stats =
+                self.backend
+                    .denoise_into_par(&model, &self.batch, &mut self.out, &self.exec)?;
             anyhow::ensure!(
                 self.out.len() == self.batch.len() && self.out.flat_out() == flat_out,
                 "backend sized the output {}x{} for a {}x{flat_out} batch",
@@ -603,18 +700,81 @@ impl<B: Backend> Engine<B> {
         }
 
         // advance completed steps (a state can appear once — all its slots
-        // deliver before `deliver` returns true exactly once).
+        // deliver before `deliver` returns true exactly once). §Perf: the
+        // per-slot combine+gamma+solver math shards across the worker
+        // pool; everything stateful stays on this thread:
+        //   phase A (engine thread): pre-stage each slot's StepBufs — the
+        //     one pool buffer a combining plan takes mid-step;
+        //   phase B (worker lanes): complete_step_buffered per slot —
+        //     pure per-request math on disjoint states;
+        //   phase C (engine thread): drain returned buffers into the
+        //     single-owner pool and run scheduler/telemetry bookkeeping
+        //     in ready order, exactly like the serial engine.
+        let n_ready = ready.len();
+        if n_ready > 0 {
+            while self.step_bufs.len() < n_ready {
+                self.step_bufs.push(StepBufs::new());
+            }
+            while self.ready_done.len() < n_ready {
+                self.ready_done.push(None);
+            }
+            for (j, &idx) in ready.iter().enumerate() {
+                let st = self.states[idx].as_ref().expect("state for ready request");
+                let sb = &mut self.step_bufs[j];
+                sb.reset();
+                if st.needs_combine_buf() {
+                    sb.spare = Some(self.pool.take(flat_out));
+                }
+            }
+            let comp_stats = {
+                let exec = &self.exec;
+                let states = SliceShards::new(&mut self.states);
+                let bufs = SliceShards::new(&mut self.step_bufs[..n_ready]);
+                let dones = SliceShards::new(&mut self.ready_done[..n_ready]);
+                let ready_idx: &[usize] = &ready;
+                exec.run(n_ready, |_lane, j| {
+                    // Safety: `ready` holds distinct state indices and the
+                    // pool claims each j exactly once, so every state,
+                    // StepBufs and done slot is touched by one lane only.
+                    let idx = ready_idx[j];
+                    let st = unsafe { states.slot(idx) }
+                        .as_mut()
+                        .expect("state for ready request");
+                    let sb = unsafe { bufs.slot(j) };
+                    let done = st.complete_step_buffered(sb);
+                    *unsafe { dones.slot(j) } = done;
+                })
+            };
+            // thread-affine backends execute serially (no denoise stats);
+            // the completion region is then the pump's parallel phase
+            if exec_stats.is_none() {
+                exec_stats = Some(comp_stats);
+            }
+        }
         let mut completions = Vec::new();
         let done_at = Instant::now();
-        for &idx in &ready {
-            let st = self.states[idx].as_mut().expect("state for ready request");
-            if let Some(done) = st.complete_step(&mut self.pool) {
+        for (j, &idx) in ready.iter().enumerate() {
+            let sb = &mut self.step_bufs[j];
+            if let Some(spare) = sb.spare.take() {
+                self.pool.put(spare);
+            }
+            for buf in sb.returned.drain(..) {
+                self.pool.put(buf);
+            }
+            if let Some(done) = self.ready_done[j].take() {
                 self.states[idx] = None;
                 self.active -= 1;
                 self.sched.forget(idx);
                 self.free.push(idx);
                 let meta = self.metas[idx].take().expect("meta for completed request");
                 self.queued_nfes = self.queued_nfes.saturating_sub(meta.cost);
+                // unwind the per-client quota count
+                match self.clients_in_flight.get_mut(&meta.client) {
+                    Some(n) if *n > 1 => *n -= 1,
+                    _ => {
+                        self.clients_in_flight.remove(&meta.client);
+                    }
+                }
                 self.observe_completion(&meta, &done, done_at);
                 completions.push(done);
             } else {
@@ -631,6 +791,14 @@ impl<B: Backend> Engine<B> {
             }
         }
         self.ready = ready;
+        if let Some(stats) = exec_stats {
+            // worker-load gauges: the denoise region when the backend
+            // shards (the dominant phase), else the completion region
+            self.telemetry
+                .set_gauge_key(&self.k_worker_occupancy, stats.occupancy());
+            self.telemetry
+                .set_gauge_key(&self.k_parallel_efficiency, stats.efficiency());
+        }
         self.update_gauges();
         Ok(completions)
     }
@@ -833,6 +1001,7 @@ mod tests {
         let adm = Admission {
             max_in_flight: Some(1),
             max_queued_nfes: Some(40),
+            ..Admission::unlimited()
         };
         let mut e = Engine::with_scheduler(be, SchedulerKind::Fifo.build(), adm).unwrap();
         e.try_submit(req(0, 1, cfg(2.0))).unwrap(); // cost 20 ≤ 40
@@ -846,6 +1015,100 @@ mod tests {
         assert_eq!(e.drain().unwrap().len(), 1);
         assert_eq!(e.telemetry().counter("requests_rejected_total", &[]), 1);
         assert_eq!(e.telemetry().counter("requests_admitted_total", &[]), 2);
+    }
+
+    #[test]
+    fn per_client_quota_sheds_only_the_greedy_client() {
+        let be = GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05));
+        let adm = Admission {
+            max_in_flight_per_client: Some(2),
+            ..Admission::unlimited()
+        };
+        let mut e = Engine::with_scheduler(be, SchedulerKind::Fifo.build(), adm).unwrap();
+        let with_client = |id: u64, name: &str| {
+            let mut r = req(id, 1, cfg(2.0));
+            r.client_id = Some(Arc::from(name));
+            r
+        };
+        e.try_submit(with_client(0, "bulk")).unwrap();
+        e.try_submit(with_client(1, "bulk")).unwrap();
+        // third bulk request trips the quota; the error names the limit
+        let err = e.try_submit(with_client(2, "bulk")).unwrap_err();
+        assert!(matches!(err, AdmitError::ClientBusy { .. }), "{err}");
+        assert!(err.to_string().contains("per-client limit 2"), "{err}");
+        // other clients (and the anonymous lane) are unaffected
+        e.try_submit(with_client(3, "live")).unwrap();
+        e.try_submit(req(4, 2, cfg(2.0))).unwrap();
+        assert_eq!(e.drain().unwrap().len(), 4);
+        // completion released the quota: bulk admits again
+        e.try_submit(with_client(5, "bulk")).unwrap();
+        assert_eq!(e.drain().unwrap().len(), 1);
+        let t = e.telemetry();
+        assert_eq!(
+            t.counter("client_quota_rejected_total", &[("client", "bulk")]),
+            1
+        );
+        assert_eq!(t.counter("requests_rejected_total", &[]), 1);
+    }
+
+    #[test]
+    fn anonymous_requests_share_one_quota_lane() {
+        let be = GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05));
+        let adm = Admission {
+            max_in_flight_per_client: Some(1),
+            ..Admission::unlimited()
+        };
+        let mut e = Engine::with_scheduler(be, SchedulerKind::Fifo.build(), adm).unwrap();
+        e.try_submit(req(0, 1, cfg(2.0))).unwrap();
+        let err = e.try_submit(req(1, 2, cfg(2.0))).unwrap_err();
+        assert!(err.to_string().contains("<anonymous>"), "{err}");
+        assert_eq!(e.drain().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn worker_pool_changes_throughput_not_results() {
+        // identical workloads on the serial engine and on 2/4-lane pools
+        // must produce byte-identical completions and the same batch and
+        // pool accounting — parallelism is across rows/slots only
+        let run = |workers: usize| {
+            let mut e = engine();
+            e.set_workers(workers);
+            assert_eq!(e.workers(), workers.max(1));
+            let reqs: Vec<_> = (0..8)
+                .map(|i| {
+                    let policy = if i % 2 == 0 { cfg(2.0) } else { ag(2.0, 0.99) };
+                    req_seeded(i, 1 + (i % 4) as i32, policy)
+                })
+                .collect();
+            let out = e.run(reqs).unwrap();
+            (out, e.batches(), e.items())
+        };
+        let (base, base_batches, base_items) = run(1);
+        for workers in [2usize, 4] {
+            let (out, batches, items) = run(workers);
+            assert_eq!(batches, base_batches, "workers {workers}");
+            assert_eq!(items, base_items, "workers {workers}");
+            for (a, b) in out.iter().zip(&base) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.image, b.image, "workers {workers}: request {}", a.id);
+                assert_eq!(a.nfes, b.nfes, "workers {workers}");
+                assert_eq!(a.truncated_at, b.truncated_at, "workers {workers}");
+                assert_eq!(a.gammas.len(), b.gammas.len());
+                for (x, y) in a.gammas.iter().zip(&b.gammas) {
+                    assert!((x.is_nan() && y.is_nan()) || x == y, "workers {workers}");
+                }
+            }
+        }
+        // the parallel engine reports its worker-load gauges
+        let mut e = engine();
+        e.set_workers(4);
+        e.run(vec![req(0, 1, cfg(2.0)), req(1, 2, cfg(2.0))]).unwrap();
+        let t = e.telemetry();
+        assert_eq!(t.gauge("worker_lanes", &[]), Some(4.0));
+        let occ = t.gauge("worker_occupancy", &[]).unwrap();
+        assert!(occ > 0.0 && occ <= 1.0, "{occ}");
+        let eff = t.gauge("parallel_efficiency", &[]).unwrap();
+        assert!(eff > 0.0 && eff <= 1.0, "{eff}");
     }
 
     #[test]

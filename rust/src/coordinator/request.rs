@@ -21,7 +21,7 @@
 use std::sync::Arc;
 
 use crate::backend::EvalInput;
-use crate::coordinator::bufpool::BufPool;
+use crate::coordinator::bufpool::{BufPool, BufSource, StepBufs};
 use crate::coordinator::policy::{PolicyRef, PolicyState, StepObservation, StepPlan};
 use crate::coordinator::solver::{self, StepCoefs};
 use crate::ols::ScoreTrajectory;
@@ -328,12 +328,39 @@ impl RequestState {
         self.pending_left == 0
     }
 
+    /// Whether the current plan combines streams and therefore needs one
+    /// spare buffer from the pool mid-step. The engine pre-stages exactly
+    /// this buffer into a [`StepBufs`] before a parallel completion.
+    pub fn needs_combine_buf(&self) -> bool {
+        matches!(
+            self.plan,
+            StepPlan::Guided { .. } | StepPlan::LinearGuided { .. } | StepPlan::EditGuided { .. }
+        )
+    }
+
     /// Combine the step's evals per the plan, let the policy observe the
     /// outcome, advance the solver in place, and set up the next step.
     /// Slot/epsilon buffers are recycled through `pool` (except the ones
     /// history recording must keep). Returns `Some(Completion)` when the
     /// request finishes.
     pub fn complete_step(&mut self, pool: &mut BufPool) -> Option<Completion> {
+        self.complete_step_core(pool)
+    }
+
+    /// [`Self::complete_step`] against pre-staged per-slot buffers — the
+    /// form the engine runs on worker lanes (§Perf: parallel execution).
+    /// The engine stages `bufs.spare` beforehand (iff
+    /// [`Self::needs_combine_buf`]) and drains `bufs.returned` into the
+    /// pool afterwards, so this method touches no shared state beyond the
+    /// request's own. Bit-identical to the pool form.
+    pub fn complete_step_buffered(&mut self, bufs: &mut StepBufs) -> Option<Completion> {
+        self.complete_step_core(bufs)
+    }
+
+    /// Shared implementation of the two `complete_step` forms: identical
+    /// math and buffer discipline, differing only in where buffers come
+    /// from and go ([`BufSource`]).
+    fn complete_step_core<S: BufSource>(&mut self, pool: &mut S) -> Option<Completion> {
         assert_eq!(self.pending_left, 0, "step still has pending evals");
         let dim = self.x.len();
         let record = self.req.record_trajectory || self.req.policy.needs_history();

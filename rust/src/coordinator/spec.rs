@@ -34,6 +34,25 @@
 //! at startup, not on first request) and resolve before server defaults
 //! apply, so a request's explicit parameters override the preset's and the
 //! preset's override the server's.
+//!
+//! # Persisted OLS coefficients (`coeffs_file`)
+//!
+//! A `linear-ag` spec can reference server-side coefficients instead of
+//! inlining the (large) OLS JSON over the wire:
+//!
+//! ```text
+//! {"kind": "linear-ag", "coeffs_file": "dit_b_20step.json"}
+//! ```
+//!
+//! When the registry has a coefficients directory
+//! ([`PolicyRegistry::set_coeffs_dir`]; `agd serve --coeffs-dir DIR`),
+//! [`PolicyRegistry::build`] resolves `coeffs_file` against it at build
+//! time — loading the file's JSON into the `coeffs` parameter before the
+//! builder runs. The name must be a plain relative path (no `..`, no
+//! absolute paths): clients name files, the server owns the directory.
+//! Inline `coeffs` win when both are present, and aliases referencing a
+//! `coeffs_file` are dry-run built at registration, so a missing file
+//! fails at startup rather than on the first request.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -305,6 +324,16 @@ pub struct PolicyRegistry {
     builders: BTreeMap<String, Builder>,
     /// Named presets: alias → the spec it expands to (see module docs).
     aliases: BTreeMap<String, PolicySpec>,
+    /// Server-side directory `coeffs_file` parameters resolve against
+    /// (None = the parameter is refused; see module docs).
+    coeffs_dir: Option<std::path::PathBuf>,
+    /// Parsed coefficient tables memoized by resolved path: each file is
+    /// read and parsed once per process, so per-request builds of a
+    /// persisted-OLS policy are served from memory (a changed file on
+    /// disk is picked up on restart — deliberate, so in-flight traffic
+    /// never sees a half-written table). Mutex (not RefCell) because the
+    /// registry is shared across connection threads.
+    coeffs_cache: std::sync::Mutex<BTreeMap<std::path::PathBuf, Value>>,
 }
 
 impl fmt::Debug for PolicyRegistry {
@@ -321,7 +350,16 @@ impl PolicyRegistry {
         PolicyRegistry {
             builders: BTreeMap::new(),
             aliases: BTreeMap::new(),
+            coeffs_dir: None,
+            coeffs_cache: std::sync::Mutex::new(BTreeMap::new()),
         }
+    }
+
+    /// Configure the server-side directory that `coeffs_file` parameters
+    /// resolve against (`agd serve --coeffs-dir DIR`). Without it, specs
+    /// naming a `coeffs_file` are refused with a pointer to the flag.
+    pub fn set_coeffs_dir(&mut self, dir: impl Into<std::path::PathBuf>) {
+        self.coeffs_dir = Some(dir.into());
     }
 
     /// The built-in set: the eight paper policies plus the
@@ -411,8 +449,10 @@ impl PolicyRegistry {
                 msg: format!("alias `{name}` shadows a registered policy"),
             });
         }
-        // full dry-run build so every parameter is checked
-        let resolved = self.resolve(&target)?;
+        // full dry-run build so every parameter is checked (including any
+        // coeffs_file reference — a missing file fails at registration)
+        let mut resolved = self.resolve(&target)?;
+        self.load_coeffs_file(&mut resolved)?;
         match self.builders.get(canonical(&resolved.kind)) {
             Some(b) => b(&resolved).map(|_| ())?,
             None => {
@@ -540,9 +580,70 @@ impl PolicyRegistry {
         names
     }
 
-    /// Construct the policy a spec describes (aliases resolve first).
+    /// Resolve a `coeffs_file` parameter (if any) into inline `coeffs` by
+    /// reading the named file from the configured coefficients directory.
+    /// Policy-agnostic on purpose: any builder that reads `coeffs` gains
+    /// the persisted path for free. Explicit inline `coeffs` win.
+    fn load_coeffs_file(&self, spec: &mut PolicySpec) -> Result<(), SpecError> {
+        let Some(v) = spec.get("coeffs_file") else {
+            return Ok(());
+        };
+        let Some(name) = v.as_str().map(str::to_owned) else {
+            return Err(spec.bad("coeffs_file", "expected a file name string"));
+        };
+        if spec.get("coeffs").is_some() {
+            // an explicit inline table beats the server-side reference
+            spec.params.remove("coeffs_file");
+            return Ok(());
+        }
+        let Some(dir) = &self.coeffs_dir else {
+            return Err(spec.bad(
+                "coeffs_file",
+                "no server-side coefficients directory configured \
+                 (start with --coeffs-dir DIR, or inline `coeffs`)",
+            ));
+        };
+        // clients name files, the server owns the directory: only plain
+        // relative paths, no `..`/absolute escape hatches
+        let rel = std::path::Path::new(&name);
+        let plain = !rel.as_os_str().is_empty()
+            && rel
+                .components()
+                .all(|c| matches!(c, std::path::Component::Normal(_)));
+        if !plain {
+            return Err(spec.bad(
+                "coeffs_file",
+                format!("`{name}` must be a plain relative path inside the coefficients directory"),
+            ));
+        }
+        let path = dir.join(rel);
+        let mut cache = self
+            .coeffs_cache
+            .lock()
+            .expect("coeffs cache lock poisoned");
+        let coeffs = match cache.get(&path) {
+            Some(v) => v.clone(),
+            None => {
+                let text = std::fs::read_to_string(&path)
+                    .map_err(|e| spec.bad("coeffs_file", format!("`{name}`: {e}")))?;
+                let v = json::parse(&text).map_err(|e| {
+                    spec.bad("coeffs_file", format!("`{name}`: not valid JSON: {e}"))
+                })?;
+                cache.insert(path, v.clone());
+                v
+            }
+        };
+        drop(cache);
+        spec.params.remove("coeffs_file");
+        spec.params.insert("coeffs".to_owned(), coeffs);
+        Ok(())
+    }
+
+    /// Construct the policy a spec describes (aliases resolve first, then
+    /// any `coeffs_file` reference loads from the coefficients directory).
     pub fn build(&self, spec: &PolicySpec) -> Result<PolicyRef, SpecError> {
-        let spec = self.resolve(spec)?;
+        let mut spec = self.resolve(spec)?;
+        self.load_coeffs_file(&mut spec)?;
         match self.builders.get(canonical(&spec.kind)) {
             Some(b) => b(&spec),
             None => Err(SpecError::UnknownPolicy {
@@ -853,6 +954,69 @@ mod tests {
         assert!(err.to_string().contains("cycle"), "{err}");
         assert_eq!(reg.names(), before);
         std::fs::remove_file(&cyc).ok();
+    }
+
+    #[test]
+    fn coeffs_file_resolves_against_the_server_directory() {
+        let dir = std::env::temp_dir().join("agd_coeffs_dir_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("id8.json"),
+            json::to_string(&OlsCoeffs::identity(8).to_json()),
+        )
+        .unwrap();
+
+        // without a configured directory the parameter is refused
+        let mut reg = PolicyRegistry::builtin();
+        let spec = PolicySpec::new("linear-ag").with("coeffs_file", json::s("id8.json"));
+        let err = reg.build(&spec).unwrap_err();
+        assert!(err.to_string().contains("--coeffs-dir"), "{err}");
+
+        reg.set_coeffs_dir(&dir);
+        let p = reg.build(&spec).unwrap();
+        assert!(p.name().starts_with("linear-ag"), "{}", p.name());
+        // the built policy carries the loaded table, not the file name
+        assert!(p.spec().get("coeffs").is_some());
+        assert!(p.spec().get("coeffs_file").is_none());
+
+        // inline coeffs win over the file reference
+        let both = PolicySpec::new("linear-ag")
+            .with("coeffs_file", json::s("missing.json"))
+            .with("coeffs", OlsCoeffs::identity(4).to_json());
+        assert!(reg.build(&both).is_ok(), "inline coeffs must short-circuit the file");
+
+        // traversal and absolute paths are refused, named files must exist
+        for bad in ["../secrets.json", "/etc/passwd", ""] {
+            let spec = PolicySpec::new("linear-ag").with("coeffs_file", json::s(bad));
+            let err = reg.build(&spec).unwrap_err();
+            assert!(
+                err.to_string().contains("plain relative path"),
+                "{bad}: {err}"
+            );
+        }
+        let spec = PolicySpec::new("linear-ag").with("coeffs_file", json::s("nope.json"));
+        assert!(reg.build(&spec).is_err());
+        // non-JSON content is a structured error
+        std::fs::write(dir.join("garbage.json"), "not json").unwrap();
+        let spec = PolicySpec::new("linear-ag").with("coeffs_file", json::s("garbage.json"));
+        let err = reg.build(&spec).unwrap_err();
+        assert!(err.to_string().contains("not valid JSON"), "{err}");
+
+        // aliases referencing a coeffs_file are validated at registration
+        reg.register_alias(
+            "persisted",
+            PolicySpec::new("linear-ag").with("coeffs_file", json::s("id8.json")),
+        )
+        .unwrap();
+        assert!(reg.build(&PolicySpec::new("persisted")).is_ok());
+        assert!(reg
+            .register_alias(
+                "broken",
+                PolicySpec::new("linear-ag").with("coeffs_file", json::s("nope.json")),
+            )
+            .is_err());
+
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,42 @@
+//! Multi-core execution layer (§Perf: parallel execution).
+//!
+//! The engine's two hot loops are embarrassingly parallel *across* rows
+//! and slots: every packed batch row of a
+//! [`denoise_into`](crate::Backend::denoise_into) call is an independent
+//! evaluation, and every completed step's combine+gamma+solver update
+//! touches only its own request's buffers. This module supplies the
+//! dependency-free machinery that shards them over the machine's cores:
+//!
+//! * [`ExecPool`] ([`pool`]) — a persistent `std::thread` + `Condvar`
+//!   worker pool, spawned once at engine construction
+//!   (`agd serve --workers N`, default = available parallelism), with an
+//!   allocation-free `run(n, f)` parallel-for.
+//! * [`RowShards`] / [`SliceShards`] ([`shard`]) — disjoint-access views
+//!   that let the region closure write its own output row / per-lane
+//!   scratch without locks.
+//!
+//! # The sharding rule
+//!
+//! Parallelism is strictly *across* rows and slots — the float-op order
+//! *within* a row/slot is exactly the serial code's — so completions are
+//! bit-identical for every `--workers` value (pinned by
+//! `rust/tests/sched_integration.rs`). Anything that is not a pure
+//! per-row computation (scheduler pops, [`BufPool`](crate::BufPool)
+//! take/put, telemetry, PJRT execution) stays on the engine thread; see
+//! `coordinator::engine`'s "§Perf: buffer ownership & parallel
+//! execution" notes.
+//!
+//! # The not-`Send` boundary
+//!
+//! The PJRT client wraps thread-affine host state, so
+//! [`PjrtBackend`](crate::runtime::PjrtBackend) never runs on a worker:
+//! it keeps the default serial `denoise_into_par` (which just calls its
+//! single-threaded `denoise_into`) and executes on the engine thread.
+//! Only host-math backends (the GMM oracle) and the engine's own
+//! post-eval phase shard onto the pool.
+
+pub mod pool;
+pub mod shard;
+
+pub use pool::{default_workers, ExecPool, RunStats};
+pub use shard::{RowShards, SliceShards};

@@ -1,0 +1,456 @@
+//! The persistent worker pool behind the engine's multi-core execution
+//! layer (§Perf: parallel execution).
+//!
+//! [`ExecPool`] is a dependency-free `std::thread` + `Mutex`/`Condvar`
+//! parallel-for: `lanes` compute lanes total, `lanes - 1` worker threads
+//! spawned once at construction plus the calling thread, which always
+//! participates as lane 0. [`ExecPool::run`]`(n, f)` invokes `f(lane, i)`
+//! exactly once for every `i in 0..n`, distributing indices dynamically
+//! over the lanes (a shared atomic cursor, so heterogeneous per-item cost
+//! balances itself), and returns only after every index has completed and
+//! every worker has left the region.
+//!
+//! Guarantees the engine's determinism and zero-allocation stories rely
+//! on:
+//!
+//! * **Exactly-once, unordered**: each index runs once, on some lane.
+//!   Callers must make per-index work independent (disjoint output rows /
+//!   slots) and *identical regardless of which lane runs it* — then
+//!   results are bit-identical for any lane count, which is how the engine
+//!   keeps `--workers N` out of the numerics.
+//! * **Allocation-free dispatch**: after construction, `run` touches no
+//!   heap — the job descriptor is two raw pointers published under the
+//!   mutex, workers park on a `Condvar`, and the closure is borrowed, not
+//!   boxed. The steady-state pin lives in `rust/tests/par_zero_alloc.rs`.
+//! * **Quiesced return**: `run` waits until all workers have exited the
+//!   region (not merely until all items completed) before returning, so
+//!   the borrowed closure and everything it captures are provably
+//!   unobserved afterwards — this is what makes lending stack references
+//!   to the workers sound.
+//!
+//! A pool built with `workers <= 1` spawns nothing and runs inline on the
+//! caller; the engine's default is this serial pool, so single-worker
+//! behaviour is byte-for-byte the pre-pool code path.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Per-run load report: how the last [`ExecPool::run`] spread its items.
+/// Feeds the engine's `worker_occupancy` / `parallel_efficiency` gauges.
+#[derive(Debug, Clone, Copy)]
+pub struct RunStats {
+    /// Total compute lanes (caller + workers).
+    pub lanes: usize,
+    /// Lanes that processed at least one item this run.
+    pub active_lanes: usize,
+    /// Items processed by the busiest lane.
+    pub max_lane_items: usize,
+    /// Items processed in total (= the `n` passed to `run`).
+    pub items: usize,
+}
+
+impl RunStats {
+    /// Occupancy in [0, 1]: fraction of lanes that did any work.
+    pub fn occupancy(&self) -> f64 {
+        if self.lanes == 0 {
+            0.0
+        } else {
+            self.active_lanes as f64 / self.lanes as f64
+        }
+    }
+
+    /// Load-balance efficiency in (0, 1]: 1.0 when every lane processed
+    /// the same item count; `items / (lanes * max_lane_items)` otherwise
+    /// (the busiest lane bounds the region's wall-clock).
+    pub fn efficiency(&self) -> f64 {
+        if self.items == 0 || self.max_lane_items == 0 {
+            1.0
+        } else {
+            self.items as f64 / (self.lanes * self.max_lane_items) as f64
+        }
+    }
+}
+
+/// Type-erased job descriptor published to the workers. The `data`
+/// pointer borrows the caller's closure for the duration of one `run`;
+/// soundness comes from `run`'s quiesce-before-return contract.
+#[derive(Clone, Copy)]
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize, usize),
+    n: usize,
+}
+
+// Safety: `data` points at an `F: Sync` closure that outlives the region
+// (workers quiesce before `run` returns), and `call` only ever invokes it
+// through a shared reference.
+unsafe impl Send for Job {}
+
+unsafe fn call_thunk<F: Fn(usize, usize) + Sync>(data: *const (), lane: usize, idx: usize) {
+    (*(data as *const F))(lane, idx)
+}
+
+/// Condvar-protected pool state. The atomics (cursor/remaining/lane
+/// counters) live outside the mutex so the per-item fast path never takes
+/// the lock; the mutex guards only job publication and quiescing.
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for a new epoch (or shutdown).
+    go: Condvar,
+    /// The caller waits here for remaining == 0 && active == 0.
+    done: Condvar,
+    /// Next item index to claim (monotone within a region; reset under
+    /// the state lock at publish, so a parked worker can never observe a
+    /// fresh cursor with a stale job).
+    cursor: AtomicUsize,
+    /// Items not yet completed in the current region.
+    remaining: AtomicUsize,
+    /// Set when a closure panicked on any lane; `run` re-panics after
+    /// quiescing so the failure is not silently swallowed.
+    panicked: AtomicBool,
+    /// Items processed per lane this region (gauge fodder).
+    lane_items: Vec<AtomicUsize>,
+}
+
+struct PoolState {
+    /// Region counter; a bump (with `job` set) is the start signal.
+    epoch: u64,
+    job: Option<Job>,
+    /// Workers currently inside the region's claim loop. `run` returns
+    /// only once this is back to 0 — the quiesce contract.
+    active: usize,
+    shutdown: bool,
+}
+
+/// The worker pool. See the module docs for the execution contract.
+pub struct ExecPool {
+    /// None = serial pool: no threads, `run` loops inline on the caller.
+    shared: Option<Arc<Shared>>,
+    lanes: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for ExecPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ExecPool").field("lanes", &self.lanes).finish()
+    }
+}
+
+/// Default lane count for `--workers 0`/unset: what the OS reports as
+/// available parallelism (1 when unknown).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(std::num::NonZeroUsize::get)
+        .unwrap_or(1)
+}
+
+impl ExecPool {
+    /// A pool with `workers` total compute lanes: the calling thread plus
+    /// `workers - 1` spawned threads. `workers <= 1` builds the serial
+    /// pool (no threads at all).
+    pub fn new(workers: usize) -> ExecPool {
+        let lanes = workers.max(1);
+        if lanes == 1 {
+            return ExecPool::serial();
+        }
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                active: 0,
+                shutdown: false,
+            }),
+            go: Condvar::new(),
+            done: Condvar::new(),
+            cursor: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            lane_items: (0..lanes).map(|_| AtomicUsize::new(0)).collect(),
+        });
+        let handles = (1..lanes)
+            .map(|lane| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("agd-exec-{lane}"))
+                    .spawn(move || worker_main(&shared, lane))
+                    .expect("spawn exec worker")
+            })
+            .collect();
+        ExecPool {
+            shared: Some(shared),
+            lanes,
+            handles,
+        }
+    }
+
+    /// The no-thread pool: `run` executes inline on the caller (lane 0).
+    pub fn serial() -> ExecPool {
+        ExecPool {
+            shared: None,
+            lanes: 1,
+            handles: Vec::new(),
+        }
+    }
+
+    /// Total compute lanes (1 for the serial pool).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Run `f(lane, i)` exactly once for every `i in 0..n`, in parallel
+    /// across the lanes, and return once all items are done and the
+    /// workers have quiesced. `lane` is in `0..lanes()` and distinct per
+    /// concurrently-running invocation — callers key per-lane scratch off
+    /// it. Panics (after quiescing) if `f` panicked on any lane.
+    pub fn run<F: Fn(usize, usize) + Sync>(&self, n: usize, f: F) -> RunStats {
+        let lanes = self.lanes;
+        let serial = |count: usize| {
+            for i in 0..count {
+                f(0, i);
+            }
+            // a deliberately-serial region reports itself as one lane so
+            // the occupancy/efficiency gauges read 1.0, not 1/pool-size
+            RunStats {
+                lanes: 1,
+                active_lanes: usize::from(count > 0),
+                max_lane_items: count,
+                items: count,
+            }
+        };
+        let Some(shared) = &self.shared else {
+            return serial(n);
+        };
+        if n <= 1 {
+            // dispatch latency would dwarf a single item's work
+            return serial(n);
+        }
+
+        // publish: counters reset *before* the epoch bump, all under the
+        // state lock, so a waking worker always pairs the new epoch with
+        // the new job/counters
+        {
+            let mut st = shared.state.lock().expect("exec pool state");
+            shared.cursor.store(0, Ordering::SeqCst);
+            shared.remaining.store(n, Ordering::SeqCst);
+            for li in &shared.lane_items {
+                li.store(0, Ordering::SeqCst);
+            }
+            st.job = Some(Job {
+                data: &f as *const F as *const (),
+                call: call_thunk::<F>,
+                n,
+            });
+            st.epoch = st.epoch.wrapping_add(1);
+            shared.go.notify_all();
+        }
+
+        // the caller is lane 0
+        claim_loop(shared, 0, n, &f);
+
+        // quiesce: all items done AND no worker still inside the region —
+        // only then is it sound to let `f` (stack-borrowed) die
+        {
+            let mut st = shared.state.lock().expect("exec pool state");
+            while shared.remaining.load(Ordering::SeqCst) != 0 || st.active != 0 {
+                st = shared.done.wait(st).expect("exec pool done wait");
+            }
+            st.job = None;
+        }
+        if shared.panicked.swap(false, Ordering::SeqCst) {
+            panic!("ExecPool::run: a parallel region panicked on a worker lane");
+        }
+
+        let mut active_lanes = 0usize;
+        let mut max_lane = 0usize;
+        for li in &shared.lane_items {
+            let c = li.load(Ordering::SeqCst);
+            if c > 0 {
+                active_lanes += 1;
+            }
+            max_lane = max_lane.max(c);
+        }
+        RunStats {
+            lanes,
+            active_lanes,
+            max_lane_items: max_lane,
+            items: n,
+        }
+    }
+}
+
+/// Claim items off the shared cursor until the region is exhausted.
+/// Panics in `call` are caught and recorded so `remaining` always reaches
+/// zero — a panicking item must never deadlock the pool.
+fn claim_loop(shared: &Shared, lane: usize, n: usize, call: impl Fn(usize, usize)) {
+    loop {
+        let i = shared.cursor.fetch_add(1, Ordering::SeqCst);
+        if i >= n {
+            return;
+        }
+        if catch_unwind(AssertUnwindSafe(|| call(lane, i))).is_err() {
+            shared.panicked.store(true, Ordering::SeqCst);
+        }
+        shared.lane_items[lane].fetch_add(1, Ordering::SeqCst);
+        if shared.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // last item: wake the caller under the lock so the wakeup
+            // cannot race its predicate check
+            let _st = shared.state.lock().expect("exec pool state");
+            shared.done.notify_all();
+        }
+    }
+}
+
+fn worker_main(shared: &Shared, lane: usize) {
+    let mut seen_epoch = 0u64;
+    loop {
+        // wait for a new region (or shutdown), entering it under the lock
+        let job = {
+            let mut st = shared.state.lock().expect("exec pool state");
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen_epoch {
+                    seen_epoch = st.epoch;
+                    if let Some(job) = st.job {
+                        st.active += 1;
+                        break job;
+                    }
+                    // region already finished before we woke: resync only
+                }
+                st = shared.go.wait(st).expect("exec pool go wait");
+            }
+        };
+        claim_loop(shared, lane, job.n, |lane, i| unsafe {
+            (job.call)(job.data, lane, i)
+        });
+        let mut st = shared.state.lock().expect("exec pool state");
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+impl Drop for ExecPool {
+    fn drop(&mut self) {
+        if let Some(shared) = &self.shared {
+            let mut st = shared.state.lock().expect("exec pool state");
+            st.shutdown = true;
+            shared.go.notify_all();
+            drop(st);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = ExecPool::serial();
+        assert_eq!(pool.lanes(), 1);
+        let mut out = vec![0usize; 8];
+        {
+            let cell = crate::exec::shard::SliceShards::new(&mut out);
+            let stats = pool.run(8, |lane, i| {
+                assert_eq!(lane, 0);
+                // Safety: each index visited exactly once
+                *unsafe { cell.slot(i) } = i * 3;
+            });
+            assert_eq!(stats.items, 8);
+            assert_eq!(stats.lanes, 1);
+            assert_eq!(stats.active_lanes, 1);
+        }
+        assert_eq!(out, vec![0, 3, 6, 9, 12, 15, 18, 21]);
+    }
+
+    #[test]
+    fn parallel_pool_visits_every_index_exactly_once() {
+        let pool = ExecPool::new(4);
+        assert_eq!(pool.lanes(), 4);
+        // run many regions back-to-back to shake out publish/quiesce races
+        for round in 0..200usize {
+            let n = 1 + (round % 37);
+            let visits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            let stats = pool.run(n, |lane, i| {
+                assert!(lane < 4);
+                visits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(stats.items, n);
+            for (i, v) in visits.iter().enumerate() {
+                assert_eq!(v.load(Ordering::SeqCst), 1, "round {round} index {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn results_are_identical_for_any_lane_count() {
+        let work = |pool: &ExecPool, n: usize| -> Vec<f32> {
+            let mut out = vec![0.0f32; n];
+            let rows = crate::exec::shard::SliceShards::new(&mut out);
+            pool.run(n, |_lane, i| {
+                // per-index math independent of lane/order
+                let mut acc = 0.0f32;
+                for k in 0..64 {
+                    acc += ((i * 31 + k) as f32).sin();
+                }
+                *unsafe { rows.slot(i) } = acc;
+            });
+            out
+        };
+        let serial = work(&ExecPool::serial(), 33);
+        for lanes in [2, 3, 4, 8] {
+            let pool = ExecPool::new(lanes);
+            assert_eq!(work(&pool, 33), serial, "lanes {lanes}");
+        }
+    }
+
+    #[test]
+    fn stats_report_load_spread() {
+        let pool = ExecPool::new(2);
+        let stats = pool.run(64, |_lane, _i| {
+            std::hint::black_box((0..500).sum::<u64>());
+        });
+        assert_eq!(stats.items, 64);
+        assert!(stats.active_lanes >= 1 && stats.active_lanes <= 2);
+        assert!(stats.max_lane_items <= 64);
+        assert!(stats.occupancy() > 0.0 && stats.occupancy() <= 1.0);
+        assert!(stats.efficiency() > 0.0 && stats.efficiency() <= 1.0);
+        // empty regions are free and report cleanly
+        let empty = pool.run(0, |_, _| unreachable!("no items"));
+        assert_eq!(empty.items, 0);
+        assert_eq!(empty.efficiency(), 1.0);
+    }
+
+    #[test]
+    fn worker_panic_propagates_after_quiescing() {
+        let pool = ExecPool::new(3);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(16, |_lane, i| {
+                if i == 7 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic in a region must propagate to the caller");
+        // the pool survives a panicked region
+        let ok = pool.run(8, |_lane, _i| {});
+        assert_eq!(ok.items, 8);
+    }
+
+    #[test]
+    fn zero_worker_request_degrades_to_serial() {
+        let pool = ExecPool::new(0);
+        assert_eq!(pool.lanes(), 1);
+        assert_eq!(pool.run(3, |_, _| {}).items, 3);
+        assert!(default_workers() >= 1);
+    }
+}

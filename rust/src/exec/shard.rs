@@ -1,0 +1,156 @@
+//! Disjoint-access views for parallel regions.
+//!
+//! [`ExecPool::run`](crate::exec::ExecPool::run) invokes the region
+//! closure through a shared reference from several threads at once, so
+//! anything the closure must *mutate* needs a view that hands each index
+//! its own disjoint piece. Two shapes cover the engine:
+//!
+//! * [`RowShards`] — a packed row-major `rows × stride` `f32` buffer
+//!   (a [`BatchOut`](crate::backend::BatchOut)'s data); index `i` owns
+//!   row `i`.
+//! * [`SliceShards`] — any `&mut [T]`; index `i` owns element `i` (used
+//!   for per-lane scratch tables and per-ready-slot state).
+//!
+//! # Safety contract
+//!
+//! Both types hand out `&mut` aliases through `&self`, which is sound
+//! only under the pool's execution contract: **every index is claimed by
+//! exactly one lane per region**, so no two live `&mut`s ever point at
+//! the same row/slot. The unsafe accessors are `unsafe fn`s to keep that
+//! obligation visible at every call site; callers must only pass indices
+//! they received from the pool (or otherwise own exclusively), and must
+//! not hold a returned reference across items. `T: Send` (and `f32` rows)
+//! is required because the references cross threads.
+
+use std::marker::PhantomData;
+
+/// Disjoint mutable rows of a packed row-major `f32` buffer.
+pub struct RowShards<'a> {
+    ptr: *mut f32,
+    stride: usize,
+    rows: usize,
+    _borrow: PhantomData<&'a mut [f32]>,
+}
+
+// Safety: see the module docs — each row is accessed by exactly one lane,
+// and f32 is Send.
+unsafe impl Sync for RowShards<'_> {}
+unsafe impl Send for RowShards<'_> {}
+
+impl<'a> RowShards<'a> {
+    /// View `data` (length `rows * stride`) as `rows` disjoint rows.
+    pub fn new(data: &'a mut [f32], stride: usize) -> RowShards<'a> {
+        assert!(stride > 0, "RowShards needs a positive stride");
+        assert_eq!(data.len() % stride, 0, "buffer is not a whole number of rows");
+        RowShards {
+            ptr: data.as_mut_ptr(),
+            stride,
+            rows: data.len() / stride,
+            _borrow: PhantomData,
+        }
+    }
+
+    /// Number of rows in the view.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Mutable row `i`.
+    ///
+    /// # Safety
+    /// `i` must be in range and claimed by exactly one lane for the
+    /// duration of the region (the pool's exactly-once contract); the
+    /// returned slice must not outlive the item's processing.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn row(&self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows, "row index out of range");
+        std::slice::from_raw_parts_mut(self.ptr.add(i * self.stride), self.stride)
+    }
+}
+
+/// Disjoint mutable elements of a slice: index `i` owns `slice[i]`.
+pub struct SliceShards<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _borrow: PhantomData<&'a mut [T]>,
+}
+
+// Safety: see the module docs — disjoint per-index access, `T: Send`
+// because the `&mut T` handed out crosses threads.
+unsafe impl<T: Send> Sync for SliceShards<'_, T> {}
+unsafe impl<T: Send> Send for SliceShards<'_, T> {}
+
+impl<'a, T> SliceShards<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> SliceShards<'a, T> {
+        SliceShards {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _borrow: PhantomData,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable element `i`.
+    ///
+    /// # Safety
+    /// Same contract as [`RowShards::row`]: exactly one lane touches `i`
+    /// per region, and the reference does not outlive the item.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slot(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len, "slot index out of range");
+        &mut *self.ptr.add(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_shards_split_a_packed_buffer() {
+        let mut buf = vec![0.0f32; 12];
+        {
+            let rows = RowShards::new(&mut buf, 4);
+            assert_eq!(rows.rows(), 3);
+            for i in 0..3 {
+                // Safety: unit test visits each row once
+                let r = unsafe { rows.row(i) };
+                assert_eq!(r.len(), 4);
+                r.fill(i as f32 + 1.0);
+            }
+        }
+        assert_eq!(
+            buf,
+            vec![1.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 2.0, 3.0, 3.0, 3.0, 3.0]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "whole number of rows")]
+    fn ragged_buffer_is_rejected() {
+        let mut buf = vec![0.0f32; 10];
+        RowShards::new(&mut buf, 4);
+    }
+
+    #[test]
+    fn slice_shards_split_elements() {
+        let mut v = vec![0usize; 5];
+        {
+            let slots = SliceShards::new(&mut v);
+            assert_eq!(slots.len(), 5);
+            assert!(!slots.is_empty());
+            for i in 0..5 {
+                // Safety: unit test visits each slot once
+                *unsafe { slots.slot(i) } = i * i;
+            }
+        }
+        assert_eq!(v, vec![0, 1, 4, 9, 16]);
+    }
+}

@@ -58,7 +58,17 @@
 //! fills, fused combine+gamma, in-place solver), so `pump()` performs no
 //! heap allocation at steady state (`rust/tests/zero_alloc.rs` pins this
 //! with a counting allocator). See `coordinator::engine`'s
-//! "§Perf: buffer ownership" notes before touching the step path.
+//! "§Perf: buffer ownership & parallel execution" notes before touching
+//! the step path.
+//!
+//! ## The multi-core execution layer (§Perf)
+//!
+//! The two embarrassingly parallel hot loops — packed batch rows inside
+//! [`Backend::denoise_into`] and per-slot step completion — shard across
+//! an [`exec::ExecPool`] (`agd serve --workers N`, default = available
+//! parallelism). Parallelism is strictly across rows/slots, so results
+//! are bit-identical for any worker count; the PJRT client is not `Send`
+//! and always stays on the engine thread ([`exec`] module docs).
 //!
 //! Start with [`coordinator::engine::Engine`] and the constructor helpers
 //! in [`coordinator::policy`] (`cfg`, `ag`, …); see
@@ -67,6 +77,7 @@
 pub mod backend;
 pub mod coordinator;
 pub mod eval;
+pub mod exec;
 pub mod metrics;
 pub mod ols;
 pub mod perfstat;
@@ -85,6 +96,7 @@ pub mod util;
 
 pub use backend::{Backend, BatchBuf, BatchOut, EvalInput, GmmBackend};
 pub use coordinator::bufpool::BufPool;
+pub use exec::ExecPool;
 pub use coordinator::engine::Engine;
 pub use coordinator::policy::{Policy, PolicyRef, PolicyState, StepObservation, StepPlan};
 pub use coordinator::request::{Completion, Request};

@@ -63,11 +63,15 @@ fn print_help() {
            --s-max F --s-min F --gamma-lo F --gamma-hi F\n\n\
          generate: --prompt TEXT --negative TEXT --policy P\n\
            --steps N --seed N --n N --out DIR\n\
+           --workers N         engine worker lanes (0 = all cores)\n\
          serve:    --addr HOST:PORT\n\
            --scheduler fifo|cost-aware|deadline|fair-share (default fifo)\n\
            --max-queued-nfes N  shed with queue_full past N queued evals (0 = off)\n\
            --max-in-flight N    cap concurrent requests (0 = off)\n\
+           --max-in-flight-per-client N  per-client_id cap (0 = off)\n\
+           --workers N          engine worker lanes (0 = all cores, the default)\n\
            --policy-file FILE   register policy aliases from JSON at startup\n\
+           --coeffs-dir DIR     server-side dir for linear-ag \"coeffs_file\"\n\
          search:   --iters N --lr F --seed N --out FILE\n\
          fit-ols:  --train N --test N --steps N --out FILE"
     );
@@ -131,6 +135,10 @@ fn cmd_generate(args: &Args) -> Result<()> {
     std::fs::create_dir_all(&out_dir)?;
 
     let mut engine = Engine::new(be)?;
+    engine.set_workers(match args.usize("workers", 0) {
+        0 => adaptive_guidance::exec::default_workers(),
+        n => n,
+    });
     let prompt_list: Vec<Prompt> = match args.get("prompt") {
         Some(text) => vec![Prompt::parse(text).ok_or_else(|| anyhow!("bad prompt"))?],
         None => prompts::eval_set(n, seed),
@@ -186,6 +194,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let admission = Admission {
         max_in_flight: nonzero(args.usize("max-in-flight", 0)),
         max_queued_nfes: nonzero(args.usize("max-queued-nfes", 0)),
+        max_in_flight_per_client: nonzero(args.usize("max-in-flight-per-client", 0)),
     };
     let cfg = ServerConfig {
         addr: args.get_or("addr", "127.0.0.1:7458").to_owned(),
@@ -195,10 +204,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         default_gamma_bar: args.f64("gamma-bar", 0.9988),
         scheduler,
         admission,
+        // 0 = available parallelism, resolved inside serve
+        workers: args.usize("workers", 0),
     };
     // named policy presets extend the registry before the first request —
     // a bad file is a startup error, not a first-request surprise
     let mut registry = PolicyRegistry::builtin();
+    if let Some(dir) = args.get("coeffs-dir") {
+        registry.set_coeffs_dir(dir);
+    }
     if let Some(path) = args.get("policy-file") {
         let n = registry
             .load_alias_file(path)

@@ -9,8 +9,17 @@
 //! that would exceed either budget is rejected with a typed
 //! [`AdmitError`], which the server surfaces as a structured `queue_full`
 //! JSON error; in-flight requests are never affected.
+//!
+//! The global budgets are complemented by a *per-client* in-flight quota
+//! (`--max-in-flight-per-client`): without it one client can consume the
+//! entire global budget and starve everyone at the admission door (the
+//! fair-share scheduler only helps requests that were admitted). The
+//! engine tracks live requests per `client_id` (anonymous requests share
+//! the `""` lane, mirroring fair-share) and sheds past-quota requests
+//! with [`AdmitError::ClientBusy`], which names the per-client limit.
 
 use std::fmt;
+use std::sync::Arc;
 
 /// Queue budgets. `None` on an axis means unlimited (the default — engine
 /// embedders like the drain-mode benches pre-load thousands of requests on
@@ -21,6 +30,9 @@ pub struct Admission {
     pub max_in_flight: Option<usize>,
     /// Maximum total queued NFEs, counting the candidate's worst case.
     pub max_queued_nfes: Option<usize>,
+    /// Maximum requests in flight per `client_id` (anonymous requests
+    /// count against the shared `""` client).
+    pub max_in_flight_per_client: Option<usize>,
 }
 
 impl Admission {
@@ -53,14 +65,34 @@ impl Admission {
         }
         Ok(())
     }
+
+    /// Per-client quota check: `client_in_flight` is the engine's live
+    /// request count for `client`. Checked alongside (after) the global
+    /// budgets, so the error a client sees names the binding constraint.
+    pub fn check_client(
+        &self,
+        client: &Arc<str>,
+        client_in_flight: usize,
+    ) -> Result<(), AdmitError> {
+        if let Some(max) = self.max_in_flight_per_client {
+            if client_in_flight >= max {
+                return Err(AdmitError::ClientBusy {
+                    client: client.clone(),
+                    in_flight: client_in_flight,
+                    max,
+                });
+            }
+        }
+        Ok(())
+    }
 }
 
-/// Why a request was refused at admission. The server maps the two shed
+/// Why a request was refused at admission. The server maps the shed
 /// variants to a `queue_full` error line carrying these numbers (so
 /// clients can back off proportionally) and [`AdmitError::Invalid`] to an
 /// `invalid_request` line — a malformed request must be rejected at the
 /// door, never panic or poison a batch mid-flight.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum AdmitError {
     InFlightFull {
         in_flight: usize,
@@ -69,6 +101,13 @@ pub enum AdmitError {
     NfeBudgetFull {
         queued_nfes: usize,
         request_nfes: usize,
+        max: usize,
+    },
+    /// The client is over its per-client in-flight quota
+    /// (`--max-in-flight-per-client`); other clients are unaffected.
+    ClientBusy {
+        client: Arc<str>,
+        in_flight: usize,
         max: usize,
     },
     /// The request itself is malformed (`Engine::try_submit`'s up-front
@@ -93,6 +132,19 @@ impl fmt::Display for AdmitError {
                 "queue full: {queued_nfes} NFEs queued + {request_nfes} requested \
                  exceeds the {max} budget"
             ),
+            AdmitError::ClientBusy {
+                client,
+                in_flight,
+                max,
+            } => {
+                let who: &str = client;
+                let who = if who.is_empty() { "<anonymous>" } else { who };
+                write!(
+                    f,
+                    "queue full: client `{who}` has {in_flight} requests in flight \
+                     (per-client limit {max})"
+                )
+            }
             AdmitError::Invalid { reason } => write!(f, "invalid request: {reason}"),
         }
     }
@@ -114,7 +166,7 @@ mod tests {
     fn in_flight_budget() {
         let a = Admission {
             max_in_flight: Some(2),
-            max_queued_nfes: None,
+            ..Admission::unlimited()
         };
         assert!(a.check(1, 0, 40).is_ok());
         assert_eq!(
@@ -124,10 +176,39 @@ mod tests {
     }
 
     #[test]
+    fn per_client_quota_caps_one_client_only() {
+        let a = Admission {
+            max_in_flight_per_client: Some(2),
+            ..Admission::unlimited()
+        };
+        let web: Arc<str> = Arc::from("web");
+        assert!(a.check_client(&web, 0).is_ok());
+        assert!(a.check_client(&web, 1).is_ok());
+        let err = a.check_client(&web, 2).unwrap_err();
+        assert_eq!(
+            err,
+            AdmitError::ClientBusy {
+                client: web.clone(),
+                in_flight: 2,
+                max: 2
+            }
+        );
+        let text = err.to_string();
+        assert!(text.contains("per-client limit 2"), "{text}");
+        assert!(text.contains("web"), "{text}");
+        // the anonymous lane renders readably
+        let anon: Arc<str> = Arc::from("");
+        let text = a.check_client(&anon, 5).unwrap_err().to_string();
+        assert!(text.contains("<anonymous>"), "{text}");
+        // no quota configured → everything passes
+        assert!(Admission::unlimited().check_client(&web, 10_000).is_ok());
+    }
+
+    #[test]
     fn nfe_budget_counts_the_candidate() {
         let a = Admission {
-            max_in_flight: None,
             max_queued_nfes: Some(100),
+            ..Admission::unlimited()
         };
         assert!(a.check(5, 60, 40).is_ok()); // exactly at budget
         assert_eq!(

@@ -13,6 +13,12 @@
 //! bounded: each label key (e.g. `client`) keeps at most
 //! [`LABEL_VALUE_CAP`] distinct values, and later values collapse into
 //! `other` — an open-ended client-id stream cannot grow the registry.
+//!
+//! Two wire forms share the registry: the JSON dump ([`Telemetry::to_json`],
+//! the server's `{"cmd": "stats"}`) and the Prometheus text exposition
+//! ([`Telemetry::to_prometheus`], the server's `{"cmd": "metrics"}`) —
+//! `# TYPE`-annotated counter/gauge/histogram samples, with histogram bins
+//! rendered as cumulative `_bucket{le=...}` series plus `_sum`/`_count`.
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -277,6 +283,93 @@ impl Telemetry {
             ("histograms", hists),
         ])
     }
+
+    /// Render the registry as Prometheus text exposition (format 0.0.4):
+    /// one `# TYPE` line per metric name, then one sample per label set.
+    /// Counter and gauge names pass through unchanged; each histogram
+    /// series becomes cumulative `name_bucket{...,le="<edge>"}` samples
+    /// over its fixed bins (the top edge is `+Inf` — out-of-range samples
+    /// clamp into the edge bins, so interior bucket boundaries are
+    /// approximate at the extremes while `_sum`/`_count` stay exact).
+    /// Keys sort by (name, labels), so `# TYPE` grouping falls out of the
+    /// `BTreeMap` order.
+    pub fn to_prometheus(&self) -> String {
+        fn labels_block(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+            let mut parts: Vec<String> = labels
+                .iter()
+                .map(|(k, v)| format!("{k}=\"{}\"", prom_escape(v)))
+                .collect();
+            if let Some((k, v)) = extra {
+                parts.push(format!("{k}=\"{v}\""));
+            }
+            if parts.is_empty() {
+                String::new()
+            } else {
+                format!("{{{}}}", parts.join(","))
+            }
+        }
+
+        let mut out = String::new();
+        let mut last_type: Option<(String, &str)> = None;
+        let mut type_line = |out: &mut String, name: &str, kind: &'static str| {
+            if last_type.as_ref().map(|(n, k)| (n.as_str(), *k)) != Some((name, kind)) {
+                out.push_str(&format!("# TYPE {name} {kind}\n"));
+                last_type = Some((name.to_owned(), kind));
+            }
+        };
+
+        for ((name, labels), v) in &self.counters {
+            type_line(&mut out, name, "counter");
+            out.push_str(&format!("{name}{} {v}\n", labels_block(labels, None)));
+        }
+        for ((name, labels), v) in &self.gauges {
+            type_line(&mut out, name, "gauge");
+            out.push_str(&format!("{name}{} {v}\n", labels_block(labels, None)));
+        }
+        for ((name, labels), cell) in &self.hists {
+            type_line(&mut out, name, "histogram");
+            let h = &cell.hist;
+            let width = (h.hi - h.lo) / h.counts.len() as f64;
+            let mut cum = 0u64;
+            for (i, &c) in h.counts.iter().enumerate() {
+                cum += c;
+                let le = if i + 1 == h.counts.len() {
+                    "+Inf".to_owned()
+                } else {
+                    format!("{}", h.lo + (i as f64 + 1.0) * width)
+                };
+                out.push_str(&format!(
+                    "{name}_bucket{} {cum}\n",
+                    labels_block(labels, Some(("le", le.as_str())))
+                ));
+            }
+            out.push_str(&format!(
+                "{name}_sum{} {}\n",
+                labels_block(labels, None),
+                cell.sum
+            ));
+            out.push_str(&format!(
+                "{name}_count{} {}\n",
+                labels_block(labels, None),
+                h.total
+            ));
+        }
+        out
+    }
+}
+
+/// Escape a Prometheus label value: backslash, double quote, newline.
+fn prom_escape(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for ch in v.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            other => out.push(other),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -392,5 +485,52 @@ mod tests {
         let text = json::to_string(&t.to_json());
         assert!(json::parse(&text).is_ok());
         assert_eq!(t.hist_mean("none", &[]), 0.0);
+        assert_eq!(t.to_prometheus(), "");
+    }
+
+    #[test]
+    fn prometheus_exposition_types_and_samples() {
+        let mut t = Telemetry::new();
+        t.inc("nfes_total", &[("policy", "ag")], 31);
+        t.inc("nfes_total", &[("policy", "cfg")], 40);
+        t.inc("requests_completed_total", &[("policy", "ag"), ("client", "web")], 2);
+        t.set_gauge("active_requests", &[], 3.0);
+        for v in [1.0, 15.0, 25.0] {
+            t.observe("exec_ms", &[("policy", "ag")], v, 0.0, 30.0, 3);
+        }
+        let text = t.to_prometheus();
+        // every metric name gets exactly one TYPE line
+        assert_eq!(text.matches("# TYPE nfes_total counter").count(), 1);
+        assert_eq!(text.matches("# TYPE active_requests gauge").count(), 1);
+        assert_eq!(text.matches("# TYPE exec_ms histogram").count(), 1);
+        // samples carry quoted labels (sorted: client before policy)
+        assert!(text.contains("nfes_total{policy=\"ag\"} 31\n"), "{text}");
+        assert!(text.contains("nfes_total{policy=\"cfg\"} 40\n"), "{text}");
+        assert!(
+            text.contains("requests_completed_total{client=\"web\",policy=\"ag\"} 2\n"),
+            "{text}"
+        );
+        assert!(text.contains("active_requests 3\n"), "{text}");
+        // histogram: cumulative buckets, +Inf top edge, exact sum/count
+        assert!(text.contains("exec_ms_bucket{policy=\"ag\",le=\"10\"} 1\n"), "{text}");
+        assert!(text.contains("exec_ms_bucket{policy=\"ag\",le=\"20\"} 2\n"), "{text}");
+        assert!(text.contains("exec_ms_bucket{policy=\"ag\",le=\"+Inf\"} 3\n"), "{text}");
+        assert!(text.contains("exec_ms_sum{policy=\"ag\"} 41\n"), "{text}");
+        assert!(text.contains("exec_ms_count{policy=\"ag\"} 3\n"), "{text}");
+        // TYPE line precedes the samples of its metric
+        let type_pos = text.find("# TYPE nfes_total counter").unwrap();
+        let sample_pos = text.find("nfes_total{policy=\"ag\"}").unwrap();
+        assert!(type_pos < sample_pos);
+    }
+
+    #[test]
+    fn prometheus_label_values_are_escaped() {
+        let mut t = Telemetry::new();
+        t.inc("done", &[("client", "we\"b\\x\nline")], 1);
+        let text = t.to_prometheus();
+        assert!(
+            text.contains("done{client=\"we\\\"b\\\\x\\nline\"} 1\n"),
+            "{text}"
+        );
     }
 }

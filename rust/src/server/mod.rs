@@ -15,6 +15,13 @@
 //!          → {"scheduler": "cost-aware", "active": 3, "queue_depth": 9,
 //!             "queued_nfes": 118, ..., "telemetry": {"counters": {...},
 //!             "gauges": {...}, "histograms": {...}}}
+//! command  {"cmd": "metrics"}
+//!          → Prometheus text exposition of the same telemetry registry
+//!            (`# TYPE`-annotated counter/gauge/histogram samples). This
+//!            is the one multi-line reply in the protocol: it is
+//!            terminated by a blank line, so scrapers read until the
+//!            first empty line (everything else stays one line per
+//!            reply).
 //!
 //! The `"policy"` field is a [`PolicySpec`]: either a bare registered name
 //! (`"linear-ag"`, `"compressed-cfg"`, a `--policy-file` alias, …) or an
@@ -32,8 +39,11 @@
 //! so client clock skew cannot invert the EDF order). The discipline itself is
 //! server-side (`agd serve --scheduler fifo|cost-aware|deadline|
 //! fair-share`), as are the admission budgets (`--max-queued-nfes`,
-//! `--max-in-flight`) — a request past a budget is shed with a
-//! `queue_full` error while in-flight requests run to completion.
+//! `--max-in-flight`, and the per-client `--max-in-flight-per-client`) —
+//! a request past a budget is shed with a `queue_full` error while
+//! in-flight requests run to completion. `--workers N` sizes the engine's
+//! worker pool (default: available parallelism); it changes throughput
+//! only, never results.
 //!
 //! The engine runs on a dedicated thread (it owns the PJRT client);
 //! connection handlers forward requests through an mpsc channel and block on
@@ -67,8 +77,12 @@ pub struct ServerConfig {
     pub default_gamma_bar: f64,
     /// Scheduling discipline the engine runs (`--scheduler`).
     pub scheduler: SchedulerKind,
-    /// Admission budgets (`--max-in-flight` / `--max-queued-nfes`).
+    /// Admission budgets (`--max-in-flight` / `--max-queued-nfes` /
+    /// `--max-in-flight-per-client`).
     pub admission: Admission,
+    /// Worker lanes for the engine's parallel hot loops (`--workers`);
+    /// 0 = available parallelism (§Perf: parallel execution).
+    pub workers: usize,
 }
 
 impl Default for ServerConfig {
@@ -81,6 +95,7 @@ impl Default for ServerConfig {
             default_gamma_bar: 0.9988,
             scheduler: SchedulerKind::Fifo,
             admission: Admission::unlimited(),
+            workers: 0,
         }
     }
 }
@@ -238,11 +253,11 @@ pub fn error_to_line(e: &anyhow::Error) -> String {
         ));
     }
     if let Some(refused) = e.downcast_ref::<AdmitError>() {
-        match *refused {
+        match refused {
             AdmitError::InFlightFull { in_flight, max } => {
                 fields.push(("code", json::s("queue_full")));
-                fields.push(("in_flight", json::num(in_flight as f64)));
-                fields.push(("max_in_flight", json::num(max as f64)));
+                fields.push(("in_flight", json::num(*in_flight as f64)));
+                fields.push(("max_in_flight", json::num(*max as f64)));
             }
             AdmitError::NfeBudgetFull {
                 queued_nfes,
@@ -250,9 +265,19 @@ pub fn error_to_line(e: &anyhow::Error) -> String {
                 max,
             } => {
                 fields.push(("code", json::s("queue_full")));
-                fields.push(("queued_nfes", json::num(queued_nfes as f64)));
-                fields.push(("request_nfes", json::num(request_nfes as f64)));
-                fields.push(("max_queued_nfes", json::num(max as f64)));
+                fields.push(("queued_nfes", json::num(*queued_nfes as f64)));
+                fields.push(("request_nfes", json::num(*request_nfes as f64)));
+                fields.push(("max_queued_nfes", json::num(*max as f64)));
+            }
+            AdmitError::ClientBusy {
+                client,
+                in_flight,
+                max,
+            } => {
+                fields.push(("code", json::s("queue_full")));
+                fields.push(("client", json::s(client)));
+                fields.push(("in_flight", json::num(*in_flight as f64)));
+                fields.push(("max_in_flight_per_client", json::num(*max as f64)));
             }
             AdmitError::Invalid { reason } => {
                 fields.push(("code", json::s("invalid_request")));
@@ -275,6 +300,9 @@ enum Msg {
     Job(Job),
     /// `{"cmd": "stats"}`: reply with the engine's stats snapshot.
     Stats(Sender<String>),
+    /// `{"cmd": "metrics"}`: reply with the Prometheus text exposition of
+    /// the telemetry registry.
+    Metrics(Sender<String>),
 }
 
 /// Engine thread: batch whatever is queued, reply per request.
@@ -334,6 +362,9 @@ fn handle_msg<B: Backend>(
         Msg::Stats(reply) => {
             let _ = reply.send(json::to_string(&engine.stats_json()));
         }
+        Msg::Metrics(reply) => {
+            let _ = reply.send(engine.telemetry().to_prometheus());
+        }
     }
 }
 
@@ -378,8 +409,18 @@ fn dispatch_line(
             }
             return rrx.recv().ok();
         }
+        if cmd == "metrics" {
+            let (rtx, rrx) = channel();
+            if tx.send(Msg::Metrics(rtx)).is_err() {
+                return None;
+            }
+            // the exposition is multi-line; the connection handler's
+            // closing "\n" turns the trailing newline into the blank-line
+            // terminator the protocol docs promise
+            return rrx.recv().ok();
+        }
         return Some(error_to_line(&anyhow!(
-            "unknown cmd `{cmd}` (supported: stats)"
+            "unknown cmd `{cmd}` (supported: stats, metrics)"
         )));
     }
     match parse_request_value(&v, cfg, registry) {
@@ -461,11 +502,21 @@ where
         cfg.scheduler.name()
     );
     let (scheduler, admission) = (cfg.scheduler, cfg.admission);
+    let workers = if cfg.workers == 0 {
+        crate::exec::default_workers()
+    } else {
+        cfg.workers
+    };
     std::thread::spawn(move || {
         let engine =
             factory().and_then(|be| Engine::with_scheduler(be, scheduler.build(), admission));
         match engine {
-            Ok(engine) => engine_loop(engine, rx),
+            Ok(mut engine) => {
+                // the worker pool spawns once, here, inside the engine
+                // thread (§Perf: parallel execution)
+                engine.set_workers(workers);
+                engine_loop(engine, rx)
+            }
             Err(e) => log::error!("backend construction failed: {e:#}"),
         }
     });
@@ -671,6 +722,22 @@ mod tests {
     }
 
     #[test]
+    fn per_client_queue_full_errors_name_the_limit() {
+        let e = anyhow::Error::new(AdmitError::ClientBusy {
+            client: Arc::from("web-1"),
+            in_flight: 3,
+            max: 3,
+        });
+        let line = error_to_line(&e);
+        let v = json::parse(&line).unwrap_or_else(|err| panic!("{line}: {err}"));
+        assert_eq!(v.req("code").as_str(), Some("queue_full"));
+        assert_eq!(v.req("client").as_str(), Some("web-1"));
+        assert_eq!(v.req("in_flight").as_f64(), Some(3.0));
+        assert_eq!(v.req("max_in_flight_per_client").as_f64(), Some(3.0));
+        assert!(v.req("error").as_str().unwrap().contains("per-client limit"));
+    }
+
+    #[test]
     fn invalid_request_errors_are_structured() {
         let e = anyhow::Error::new(AdmitError::Invalid {
             reason: "tokens must be non-empty (all-zero = unconditional)",
@@ -697,8 +764,10 @@ mod tests {
         let (tx, rx) = channel::<Msg>();
         std::thread::spawn(move || {
             let backend = GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05));
-            let engine =
+            let mut engine =
                 Engine::with_scheduler(backend, scheduler.build(), admission).unwrap();
+            // exercise the sharded execution path under real TCP traffic
+            engine.set_workers(2);
             engine_loop(engine, rx)
         });
         let registry = Arc::new(PolicyRegistry::builtin());
@@ -806,8 +875,8 @@ mod tests {
         // budget below one 8-step CFG request (16 NFEs) but enough for a
         // 4-step one (8 NFEs)
         let admission = Admission {
-            max_in_flight: None,
             max_queued_nfes: Some(10),
+            ..Admission::unlimited()
         };
         let addr = spawn_test_server(SchedulerKind::CostAware, admission);
         let mut conn = TcpStream::connect(addr).unwrap();
@@ -825,6 +894,74 @@ mod tests {
         );
         assert!(v.get("error").is_none(), "in-budget request must complete");
         assert_eq!(v.req("nfes").as_f64(), Some(8.0));
+    }
+
+    /// Per-client quota over the wire: the same client is shed past its
+    /// in-flight quota with a `queue_full` line naming the per-client
+    /// limit. (Requests on this synchronous test connection complete
+    /// before the next is sent, so the quota is exercised with limit 0 —
+    /// the shed path — while other clients stay unaffected.)
+    #[test]
+    fn tcp_per_client_quota_sheds() {
+        let admission = Admission {
+            max_in_flight_per_client: Some(0),
+            ..Admission::unlimited()
+        };
+        let addr = spawn_test_server(SchedulerKind::Fifo, admission);
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let v = roundtrip(
+            &mut conn,
+            r#"{"prompt": "red circle", "policy": "cfg", "steps": 4, "client_id": "greedy"}"#,
+        );
+        assert_eq!(v.req("code").as_str(), Some("queue_full"));
+        assert_eq!(v.req("client").as_str(), Some("greedy"));
+        assert_eq!(v.req("max_in_flight_per_client").as_f64(), Some(0.0));
+        assert!(v.req("error").as_str().unwrap().contains("per-client limit"));
+    }
+
+    /// `{"cmd": "metrics"}` returns Prometheus exposition text terminated
+    /// by a blank line, generated from the same registry as the JSON
+    /// stats dump.
+    #[test]
+    fn tcp_metrics_command_returns_prometheus_text() {
+        use std::io::{BufRead, BufReader, Write};
+        let addr = spawn_test_server(SchedulerKind::Fifo, Admission::unlimited());
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let v = roundtrip(
+            &mut conn,
+            r#"{"prompt": "red circle", "policy": "ag", "steps": 8, "guidance": 2.0}"#,
+        );
+        assert!(v.get("error").is_none(), "{v:?}");
+        let nfes = v.req("nfes").as_f64().unwrap();
+        conn.write_all(b"{\"cmd\": \"metrics\"}\n").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut exposition = String::new();
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            if line.trim().is_empty() {
+                break;
+            }
+            exposition.push_str(&line);
+        }
+        assert!(
+            exposition.contains("# TYPE nfes_total counter"),
+            "{exposition}"
+        );
+        assert!(
+            exposition.contains(&format!("nfes_total{{policy=\"ag\"}} {nfes}")),
+            "{exposition}"
+        );
+        assert!(exposition.contains("# TYPE active_requests gauge"), "{exposition}");
+        assert!(
+            exposition.contains("# TYPE queue_wait_ms histogram"),
+            "{exposition}"
+        );
+        assert!(exposition.contains("queue_wait_ms_count{policy=\"ag\"} 1"), "{exposition}");
+        // the connection is still usable after the multi-line reply
+        let mut conn = reader.into_inner();
+        let stats = roundtrip(&mut conn, r#"{"cmd": "stats"}"#);
+        assert!(stats.get("scheduler").is_some());
     }
 
     /// `{"cmd": "stats"}` dumps the scheduler name and the telemetry

@@ -32,6 +32,17 @@ pub struct GmmScratch {
     weights: Vec<f64>,
 }
 
+impl GmmScratch {
+    /// Pre-reserve the per-component logit capacity so a scratch's first
+    /// use performs no allocation — the sharded backend warms one scratch
+    /// per worker lane up front, keeping the steady-state parallel path
+    /// allocation-free even for a lane that sees its first mixture row
+    /// late (`rust/tests/par_zero_alloc.rs`).
+    pub fn warm(&mut self, components: usize) {
+        self.weights.reserve(components);
+    }
+}
+
 /// Conditional Gaussian-mixture score model.
 #[derive(Debug, Clone)]
 pub struct Gmm {

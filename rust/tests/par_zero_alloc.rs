@@ -1,0 +1,137 @@
+//! §Perf acceptance pin for the multi-core execution layer: with a
+//! 4-lane worker pool attached, steady-state `Engine::pump()` (after
+//! warmup, mid-flight — no admissions, no completions) performs **zero
+//! heap allocations across every thread**, under every scheduling
+//! discipline.
+//!
+//! This is the parallel sibling of `zero_alloc.rs` (which pins the
+//! serial engine and must keep exactly one `#[test]`; so must this file
+//! — the counting global allocator sees every thread in the process, and
+//! a concurrently-running test would pollute the window). It pins the
+//! pool's dispatch contract: publishing a region, claiming rows,
+//! lane-local GMM scratch, the pre-staged `StepBufs`, and the batched
+//! pool returns all reuse warm capacity — nothing allocates per job.
+//!
+//! Worker threads park on a `Condvar` between regions and the per-item
+//! path is lock-free atomics, so the only allocation candidates are the
+//! ones this test exists to catch.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use adaptive_guidance::backend::GmmBackend;
+use adaptive_guidance::coordinator::engine::Engine;
+use adaptive_guidance::coordinator::policy::{ag, cfg};
+use adaptive_guidance::coordinator::request::Request;
+use adaptive_guidance::sched::{Admission, SchedulerKind};
+use adaptive_guidance::sim::gmm::Gmm;
+
+struct CountingAlloc;
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// 8 mixed cfg/ag requests, long enough that warmup + the measurement
+/// window finish well before the first completion (mirrors zero_alloc.rs).
+const STEPS: usize = 48;
+const WARMUP_PUMPS: usize = 16;
+const MEASURED_PUMPS: usize = 16;
+const WORKERS: usize = 4;
+
+#[test]
+fn parallel_pump_is_allocation_free_at_steady_state() {
+    for kind in SchedulerKind::ALL {
+        let be = GmmBackend::new(Gmm::axes(16, 4, 3.0, 0.05));
+        let mut e = Engine::with_scheduler(be, kind.build(), Admission::unlimited())
+            .expect("engine over the GMM oracle");
+        e.set_workers(WORKERS);
+        for i in 0..8u64 {
+            let policy = if i % 2 == 0 { cfg(2.0) } else { ag(2.0, 0.99) };
+            let mut r = Request::new(
+                i,
+                "gmm",
+                vec![1 + (i % 4) as i32, 0, 0, 0],
+                900 + i,
+                STEPS,
+                policy,
+            );
+            // exercise the fair-share lanes and the deadline keys too
+            r.client_id = Some(Arc::from(if i % 2 == 0 { "bulk" } else { "live" }));
+            r.deadline_ms = Some(60_000 + i);
+            e.submit(r);
+        }
+
+        // warmup: pools, packed buffers, lane scratches, StepBufs staging
+        // and the workers' own lazy thread state all reach capacity
+        let mut done = 0usize;
+        for _ in 0..WARMUP_PUMPS {
+            done += e.pump().expect("warmup pump").len();
+        }
+        assert_eq!(done, 0, "warmup completed requests under {}", kind.name());
+
+        ALLOCS.store(0, Ordering::SeqCst);
+        COUNTING.store(true, Ordering::SeqCst);
+        let mut completed = 0usize;
+        for _ in 0..MEASURED_PUMPS {
+            completed += e.pump().expect("steady-state pump").len();
+        }
+        COUNTING.store(false, Ordering::SeqCst);
+        let allocs = ALLOCS.load(Ordering::SeqCst);
+
+        assert_eq!(
+            completed,
+            0,
+            "measurement window must stay mid-flight under {}",
+            kind.name()
+        );
+        assert_eq!(
+            allocs,
+            0,
+            "parallel pump() allocated {allocs} time(s) at steady state under \
+             `{}` with {WORKERS} workers — the pool's dispatch or the sharded \
+             row/slot path allocates per job (see exec/pool.rs and \
+             engine.rs §Perf)",
+            kind.name()
+        );
+
+        // the workload still drains to correct completions afterwards
+        let out = e.drain().expect("drain");
+        assert_eq!(out.len(), 8, "{}", kind.name());
+        assert!(
+            out.iter().filter(|c| c.truncated_at.is_some()).count() >= 1,
+            "AG requests should truncate on the oracle ({})",
+            kind.name()
+        );
+    }
+}

@@ -356,6 +356,92 @@ fn packed_execution_matches_unfused_reference_sampler() {
     }
 }
 
+/// The multi-core execution layer must never touch the numerics: under
+/// every scheduler, `--workers 4` (and 2) produces byte-identical
+/// completions to `--workers 1`, and both match the *unfused reference
+/// sampler* — the same seed-era golden the packed-path test pins — so the
+/// whole chain (sharded GMM rows + parallel step completion) is anchored
+/// to first-principles math, not just to itself.
+#[test]
+fn worker_counts_are_bit_identical_under_every_scheduler() {
+    let gmm = Gmm::axes(12, 6, 3.0, 0.05);
+    let steps = 9;
+    // batch ≥ 8: 8 requests × ≤2 evals keeps the 16-bucket batches full
+    let workload = || -> Vec<Request> {
+        (0..8)
+            .map(|id| {
+                let policy = if id % 2 == 0 { cfg(2.0) } else { ag(2.0, 0.99) };
+                req(id, 7000 + id, steps, policy)
+            })
+            .collect()
+    };
+    for kind in SchedulerKind::ALL {
+        let run = |workers: usize| {
+            let be = GmmBackend::new(gmm.clone());
+            let mut e =
+                Engine::with_scheduler(be, kind.build(), Admission::unlimited()).unwrap();
+            e.set_workers(workers);
+            let out = e.run(workload()).unwrap();
+            (out, e.batches(), e.items())
+        };
+        let (base, base_batches, base_items) = run(1);
+        for workers in [2usize, 4] {
+            let (out, batches, items) = run(workers);
+            assert_eq!(batches, base_batches, "{} workers={workers}", kind.name());
+            assert_eq!(items, base_items, "{} workers={workers}", kind.name());
+            assert_eq!(out.len(), base.len(), "{}", kind.name());
+            for (a, b) in out.iter().zip(&base) {
+                assert_eq!(a.id, b.id, "{} workers={workers}", kind.name());
+                assert_eq!(
+                    a.image, b.image,
+                    "{} workers={workers}: request {} image diverged",
+                    kind.name(),
+                    a.id
+                );
+                assert_eq!(a.nfes, b.nfes, "{} workers={workers}", kind.name());
+                assert_eq!(a.truncated_at, b.truncated_at, "{}", kind.name());
+                assert_eq!(a.gammas.len(), b.gammas.len(), "{}", kind.name());
+                for (x, y) in a.gammas.iter().zip(&b.gammas) {
+                    assert!(
+                        (x.is_nan() && y.is_nan()) || x == y,
+                        "{} workers={workers}: gamma diverged",
+                        kind.name()
+                    );
+                }
+            }
+        }
+        // anchor the parallel engine to the unfused golden sampler
+        for c in &base {
+            let comp = (c.id % 6) as usize;
+            let gamma_bar = if c.id % 2 == 1 { Some(0.99) } else { None };
+            let (image, gammas) =
+                reference_sample(&gmm, comp, 7000 + c.id, steps, 2.0, gamma_bar);
+            assert_eq!(
+                c.image,
+                image,
+                "{}: request {} diverged from the reference sampler",
+                kind.name(),
+                c.id
+            );
+            for (i, (a, b)) in c.gammas.iter().zip(&gammas).enumerate() {
+                assert!(
+                    (a.is_nan() && b.is_nan()) || a == b,
+                    "{}: request {} gamma[{i}]",
+                    kind.name(),
+                    c.id
+                );
+            }
+        }
+        // AG requests must actually exercise the truncated (mixed-plan)
+        // path inside the parallel completion phase
+        assert!(
+            base.iter().any(|c| c.truncated_at.is_some()),
+            "{}: no AG truncation, the test lost its teeth",
+            kind.name()
+        );
+    }
+}
+
 /// Admission budgets shed load without touching in-flight work, and
 /// capacity recovers as requests complete.
 #[test]
@@ -363,6 +449,7 @@ fn admission_sheds_and_recovers_under_load() {
     let adm = Admission {
         max_in_flight: Some(4),
         max_queued_nfes: Some(200),
+        ..Admission::unlimited()
     };
     let mut e =
         Engine::with_scheduler(backend(12), SchedulerKind::CostAware.build(), adm).unwrap();

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Perf baseline runner: executes the §Perf microbenchmarks and writes the
+# machine-readable trajectory (BENCH_perf.json) that optimization PRs
+# commit their before/after numbers into.
+#
+#   scripts/bench.sh                 -> BENCH_perf.json in the repo root
+#   scripts/bench.sh out.json        -> custom output path
+#   BENCH_ITERS=50 scripts/bench.sh  -> more timed iterations per row
+#
+# The dump includes the packed-vs-legacy engine-loop pair and the
+# workers=1/2/4/8 scaling sweep (expect >=2x per-NFE throughput at 4
+# workers on a 4-core host; results are bit-identical at every width).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+out="${1:-BENCH_perf.json}"
+iters="${BENCH_ITERS:-30}"
+
+cargo bench --bench perf_microbench -- --iters "$iters" --out "$out"
+echo "bench: wrote $out"
