@@ -18,6 +18,14 @@
 //! queue discipline decides the tail.)
 //! JSON: `--out sched_tail_latency.json` writes the table like the other
 //! `fig*` benches' `--out` dumps.
+//!
+//! §Scale: `--shards-sweep 1,2,4` additionally runs the same workload
+//! through an N-engine fleet in virtual time — least-loaded placement by
+//! live queued NFEs, every non-idle shard pumping one batch per time unit
+//! (shards run on parallel threads in the real fleet) — reporting
+//! p50/p99 per shard count. `--merge-into BENCH_perf.json` folds the
+//! sweep into an existing perf dump under `"sched_shard_sweep"`
+//! (`scripts/bench.sh` uses this to keep one perf trajectory file).
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -122,6 +130,63 @@ fn drive(kind: SchedulerKind, arrivals: &[(f64, Request)]) -> Row {
     }
 }
 
+/// Drive the shared workload through an N-shard fleet in virtual time:
+/// arrivals place least-loaded (live queued NFEs, ties by index — the
+/// fleet router's default), and one time unit pumps every non-idle shard
+/// once, because real shards are parallel threads. Latency is
+/// `completion_round − arrival_round`.
+fn drive_shards(shards: usize, arrivals: &[(f64, Request)]) -> Row {
+    let mut engines: Vec<Engine<GmmBackend>> = (0..shards)
+        .map(|_| {
+            Engine::new(GmmBackend::new(Gmm::axes(8, 6, 3.0, 0.05)))
+                .expect("engine over the GMM oracle")
+        })
+        .collect();
+    let mut submit_round: HashMap<u64, usize> = HashMap::new();
+    let mut latencies: Vec<f64> = Vec::with_capacity(arrivals.len());
+    let mut rounds = 0usize;
+    let mut next = 0;
+    while next < arrivals.len() || engines.iter().any(|e| !e.idle()) {
+        while next < arrivals.len() && arrivals[next].0 <= rounds as f64 {
+            let (_, req) = &arrivals[next];
+            let target = (0..shards)
+                .min_by_key(|&i| (engines[i].queued_nfes(), i))
+                .expect("at least one shard");
+            submit_round.insert(req.id, rounds);
+            engines[target].submit(req.clone());
+            next += 1;
+        }
+        if engines.iter().all(|e| e.idle()) {
+            // idle with the next arrival in the future: fast-forward
+            rounds = arrivals[next].0.ceil().max((rounds + 1) as f64) as usize;
+            continue;
+        }
+        let mut done = Vec::new();
+        for e in engines.iter_mut() {
+            if !e.idle() {
+                done.extend(e.pump().expect("pump"));
+            }
+        }
+        rounds += 1;
+        for c in done {
+            let submitted = submit_round.remove(&c.id).expect("submitted");
+            latencies.push((rounds - submitted) as f64);
+        }
+    }
+    let (batches, items): (usize, usize) = engines
+        .iter()
+        .fold((0, 0), |(b, i), e| (b + e.batches(), i + e.items()));
+    Row {
+        name: "least-loaded",
+        p50: stats::percentile(&latencies, 50.0),
+        p99: stats::percentile(&latencies, 99.0),
+        mean: stats::mean(&latencies),
+        batches,
+        items,
+        occupancy: if batches == 0 { 0.0 } else { items as f64 / batches as f64 },
+    }
+}
+
 fn main() {
     let args = Args::from_env();
     let n = args.usize("requests", 240);
@@ -184,8 +249,73 @@ fn main() {
          changing any request's output."
     );
 
+    // §Scale: the shard-scaling sweep — same workload, N-engine fleet
+    let sweep: Vec<(usize, Row)> = match args.get("shards-sweep") {
+        None => Vec::new(),
+        Some(list) => list
+            .split(',')
+            .map(|tok| {
+                let shards: usize = tok
+                    .trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("--shards-sweep: bad count `{tok}`"));
+                (shards, drive_shards(shards.max(1), &arrivals))
+            })
+            .collect(),
+    };
+    if !sweep.is_empty() {
+        println!("\n# Shard scaling (least-loaded placement, fifo shards)\n");
+        let table: Vec<Vec<String>> = sweep
+            .iter()
+            .map(|(shards, r)| {
+                vec![
+                    shards.to_string(),
+                    format!("{:.1}", r.p50),
+                    format!("{:.1}", r.p99),
+                    format!("{:.1}", r.mean),
+                    r.batches.to_string(),
+                    format!("{:.1}", r.occupancy),
+                ]
+            })
+            .collect();
+        print_table(
+            &["shards", "p50 (rounds)", "p99 (rounds)", "mean", "batches", "occupancy"],
+            &table,
+        );
+        // work conservation across topologies: sharding moves work, it
+        // never changes it
+        assert!(
+            sweep.iter().all(|(_, r)| r.items == items),
+            "shard counts must execute identical work"
+        );
+        println!(
+            "\nreading: more shards drain the same backlog in fewer rounds — \
+             placement spreads batches, results stay byte-identical \
+             (rust/tests/fleet_integration.rs pins that)."
+        );
+    }
+
+    let sweep_json = |sweep: &[(usize, Row)]| {
+        json::arr(
+            sweep
+                .iter()
+                .map(|(shards, r)| {
+                    json::obj(vec![
+                        ("shards", json::num(*shards as f64)),
+                        ("p50", json::num(r.p50)),
+                        ("p99", json::num(r.p99)),
+                        ("mean", json::num(r.mean)),
+                        ("batches", json::num(r.batches as f64)),
+                        ("items", json::num(r.items as f64)),
+                        ("occupancy", json::num(r.occupancy)),
+                    ])
+                })
+                .collect(),
+        )
+    };
+
     if let Some(path) = args.get("out") {
-        let v = json::obj(vec![
+        let mut fields = vec![
             ("requests", json::num(n as f64)),
             ("rate", json::num(rate)),
             ("steps", json::num(steps as f64)),
@@ -207,8 +337,46 @@ fn main() {
                         .collect(),
                 ),
             ),
-        ]);
+        ];
+        if !sweep.is_empty() {
+            fields.push(("shard_sweep", sweep_json(&sweep)));
+        }
+        let v = json::obj(fields);
         std::fs::write(path, json::to_string(&v)).expect("write --out");
         eprintln!("results written to {path}");
+    }
+
+    // fold the sweep into an existing perf dump (scripts/bench.sh keeps
+    // one BENCH_perf.json trajectory file). Destroying the existing
+    // trajectory is worse than failing: a present-but-unparseable file is
+    // a hard error, and an empty sweep never overwrites a recorded one.
+    if let Some(path) = args.get("merge-into") {
+        if sweep.is_empty() {
+            eprintln!("--merge-into {path}: nothing to merge (pass --shards-sweep 1,2,4)");
+            return;
+        }
+        let mut map = match std::fs::read_to_string(path) {
+            Ok(text) => match json::parse(&text) {
+                Ok(json::Value::Obj(map)) => map,
+                Ok(_) | Err(_) => panic!(
+                    "--merge-into {path}: existing file is not a JSON object; \
+                     refusing to overwrite it (delete it to start fresh)"
+                ),
+            },
+            // no file yet: start a fresh object
+            Err(_) => Default::default(),
+        };
+        map.insert(
+            "sched_shard_sweep".to_owned(),
+            json::obj(vec![
+                ("requests", json::num(n as f64)),
+                ("rate", json::num(rate)),
+                ("steps", json::num(steps as f64)),
+                ("rows", sweep_json(&sweep)),
+            ]),
+        );
+        std::fs::write(path, json::to_string(&json::Value::Obj(map)))
+            .expect("write --merge-into");
+        eprintln!("shard sweep merged into {path}");
     }
 }

@@ -68,6 +68,30 @@
 //! pops, admission, pool take/put, telemetry, and the not-`Send` PJRT
 //! client — stays on the engine thread; see the [`crate::exec`] docs for
 //! the pool's own contract.
+//!
+//! # §Scale: engine fleet
+//!
+//! One engine is one *shard* of a fleet ([`crate::fleet`]): the serving
+//! front-end runs N replicas, each on its own thread with its own backend
+//! instance, scheduler, worker pool and buffer pool — the unit of scale-out
+//! that preserves the one-thread-per-device PJRT boundary (the multi-client
+//! story is one engine per device). The engine stays single-threaded and
+//! oblivious to the fleet; the fleet-facing surface is just:
+//!
+//! * [`Engine::load`] — the [`EngineLoad`] snapshot (`active`,
+//!   `queued_nfes`, `queue_depth`) the shard thread publishes after every
+//!   message/pump, which the router's least-loaded placement reads;
+//! * [`Engine::drain`] — run the queue to empty, the primitive behind the
+//!   fleet's graceful `{"cmd": "drain"}` quiesce;
+//! * [`Engine::telemetry`]/[`Engine::telemetry_mut`] — the per-shard
+//!   registry the fleet merges under a `shard=` label
+//!   ([`crate::sched::Telemetry::absorb`]).
+//!
+//! Because a request's output depends only on its own seed and policy —
+//! batching packs work but never mixes math across rows — placement
+//! changes *which* engine batches a request, never its bytes: completions
+//! are identical for any shard count/placement (pinned by
+//! `rust/tests/fleet_integration.rs`).
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -91,6 +115,20 @@ const LATENCY_HIST: (f64, f64, usize) = (0.0, 10_000.0, 100);
 /// ([`Engine::try_submit`]); the unvalidated [`Engine::submit`] preload
 /// path is not capped.
 pub const MAX_STEPS: usize = 100_000;
+
+/// Point-in-time load snapshot (§Scale: engine fleet). The shard thread
+/// publishes this after every message/pump; the fleet router's
+/// least-loaded placement and global admission read the published values.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineLoad {
+    /// Requests in flight (queued or executing).
+    pub active: usize,
+    /// Total remaining-NFE estimate across in-flight requests — the
+    /// honest unit of pending work.
+    pub queued_nfes: usize,
+    /// Work items pending in the scheduler.
+    pub queue_depth: usize,
+}
 
 /// Engine-side per-request bookkeeping: scheduling labels, the live
 /// remaining-cost estimate, and queue-wait/execute timing.
@@ -294,6 +332,22 @@ impl<B: Backend> Engine<B> {
     /// The metrics registry.
     pub fn telemetry(&self) -> &Telemetry {
         &self.telemetry
+    }
+
+    /// Mutable access to the metrics registry — for front-end-level
+    /// counters that live outside the engine's own bookkeeping (e.g. the
+    /// fleet's `deadline_shed_total`).
+    pub fn telemetry_mut(&mut self) -> &mut Telemetry {
+        &mut self.telemetry
+    }
+
+    /// Load snapshot for the fleet router (§Scale: engine fleet).
+    pub fn load(&self) -> EngineLoad {
+        EngineLoad {
+            active: self.active,
+            queued_nfes: self.queued_nfes,
+            queue_depth: self.sched.len(),
+        }
     }
 
     /// The engine's buffer pool (tests pin its recycling behaviour).

@@ -1,0 +1,534 @@
+//! §Scale: the engine fleet — N engine replicas behind a load-aware router.
+//!
+//! One engine is one thread is (in production) one device: the PJRT client
+//! is thread-affine, so scaling the serving stack out means *replicating*
+//! the whole engine — backend instance, scheduler, worker pool, buffer
+//! pool — once per shard and routing requests between the replicas. This
+//! module owns that topology:
+//!
+//! ```text
+//!   connections ──► Fleet::submit ──► router (placement + global budget)
+//!                                       │ per-shard mpsc
+//!                      ┌────────────────┼────────────────┐
+//!                  shard 0          shard 1     …     shard N-1
+//!               (engine thread)  (engine thread)   (engine thread)
+//!                  [`replica`]      backend/scheduler/pools per shard
+//! ```
+//!
+//! * **Placement** ([`router`]): `least-loaded` (default; lowest live
+//!   queued-NFE snapshot), `round-robin`, or `client-hash` (cache
+//!   affinity — one client always lands on one shard). Snapshots combine
+//!   the engine-published load with the router's own in-flight
+//!   reservations, so bursts spread correctly.
+//! * **Two-level admission**: the router checks a fleet-global
+//!   [`Admission`] budget against the summed shard loads before placing;
+//!   each shard engine then enforces its own per-shard budget (and the
+//!   per-client quota). Shed lines carry `"scope": "global"|"shard"`
+//!   ([`ScopedShed`]).
+//! * **Telemetry aggregation**: `{"cmd": "stats"}` / `{"cmd": "metrics"}`
+//!   merge every shard's registry ([`Telemetry::absorb`]) — each series
+//!   appears under its `shard=` label and summed into a fleet total.
+//! * **Drain/shutdown**: [`Fleet::drain`] stops admissions (new requests
+//!   get a `draining` error) and blocks until every shard is idle —
+//!   in-flight work always completes; [`Fleet::shutdown`] drains and then
+//!   joins every engine thread.
+//!
+//! The load-bearing invariant: **placement never changes results**. A
+//! request's output depends only on its own seed and policy — batching
+//! packs rows, it never mixes math across them — so completions are
+//! byte-identical for every `--shards` count and every placement
+//! (pinned by `rust/tests/fleet_integration.rs` against the golden
+//! unfused sampler).
+
+pub mod replica;
+pub mod router;
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::backend::Backend;
+use crate::coordinator::engine::{Engine, MAX_STEPS};
+use crate::coordinator::request::Request;
+use crate::sched::{Admission, AdmitError, SchedulerKind, Telemetry};
+use crate::util::json::{self, Value};
+
+pub use replica::{Job, JobReply, ShardStats};
+pub use router::{Placement, Router, ShardLoad};
+
+use replica::ShardMsg;
+
+/// An admission shed tagged with the level that made it: `"global"` (the
+/// router's fleet-wide budget) or `"shard"` (one engine's own budget).
+/// The server surfaces the scope as a `"scope"` field on the shed line.
+#[derive(Debug, Clone)]
+pub struct ScopedShed {
+    pub scope: &'static str,
+    pub inner: AdmitError,
+}
+
+impl fmt::Display for ScopedShed {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)
+    }
+}
+
+impl std::error::Error for ScopedShed {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        Some(&self.inner)
+    }
+}
+
+/// Routing-level refusals that are not admission sheds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteError {
+    /// `{"cmd": "drain"}` has run (or is running): no new admissions.
+    Draining,
+    /// Every shard is gone (all dead, or the fleet was shut down).
+    Closed,
+}
+
+impl fmt::Display for RouteError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RouteError::Draining => {
+                write!(f, "server is draining: not admitting new requests")
+            }
+            RouteError::Closed => write!(f, "engine fleet is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+/// Fleet topology + budgets (`agd serve --shards/--placement/...`).
+#[derive(Debug, Clone, Copy)]
+pub struct FleetConfig {
+    /// Engine replicas (`--shards`; min 1).
+    pub shards: usize,
+    /// Request placement discipline (`--placement`).
+    pub placement: Placement,
+    /// Scheduling discipline inside every shard (`--scheduler`).
+    pub scheduler: SchedulerKind,
+    /// Fleet-global budgets, checked at the router (`--max-in-flight`,
+    /// `--max-queued-nfes`). Its `max_in_flight_per_client` member is
+    /// ignored here — the per-client quota is shard-side.
+    pub global_admission: Admission,
+    /// Per-shard engine budgets (`--shard-max-in-flight`,
+    /// `--shard-max-queued-nfes`), plus the per-client quota.
+    pub shard_admission: Admission,
+    /// Worker lanes per shard (`--workers`); 0 = available parallelism
+    /// divided by the shard count (each shard owns its own pool).
+    pub workers: usize,
+    /// Shed deadline-infeasible requests at shard admission
+    /// (`--shed-infeasible`).
+    pub shed_infeasible: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            shards: 1,
+            placement: Placement::LeastLoaded,
+            scheduler: SchedulerKind::Fifo,
+            global_admission: Admission::unlimited(),
+            shard_admission: Admission::unlimited(),
+            workers: 1,
+            shed_infeasible: false,
+        }
+    }
+}
+
+/// The mutable router half: placement state + the shard channels.
+/// One mutex guards both — placement, reservation and send happen as one
+/// atomic step, which is what makes least-loaded deterministic under
+/// concurrent submitters (and keeps `Fleet: Sync` on toolchains where
+/// `mpsc::Sender` is not).
+struct RouterInner {
+    router: Router,
+    txs: Vec<std::sync::mpsc::Sender<ShardMsg>>,
+}
+
+/// The engine fleet (see module docs). Shared across connection-handler
+/// threads behind an `Arc`; every public method takes `&self`.
+pub struct Fleet {
+    loads: Vec<Arc<ShardLoad>>,
+    joins: Mutex<Vec<JoinHandle<()>>>,
+    router: Mutex<RouterInner>,
+    global: Admission,
+    placement: Placement,
+    scheduler: SchedulerKind,
+    draining: AtomicBool,
+    next_id: AtomicU64,
+}
+
+impl Fleet {
+    /// Spawn `cfg.shards` engine threads, each constructing its own
+    /// backend via `factory(shard_index)` *inside* the thread (the PJRT
+    /// client must be born where it runs; the index is the hook for
+    /// one-device-per-shard deployments). A shard whose construction
+    /// fails is marked dead and skipped by placement — the fleet serves
+    /// on the survivors, and [`Fleet::submit`] errors only when every
+    /// shard is dead.
+    pub fn launch<B, F>(factory: F, cfg: FleetConfig) -> Fleet
+    where
+        B: Backend + 'static,
+        F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+    {
+        let n = cfg.shards.max(1);
+        let workers = if cfg.workers == 0 {
+            (crate::exec::default_workers() / n).max(1)
+        } else {
+            cfg.workers
+        };
+        let factory = Arc::new(factory);
+        let mut txs = Vec::with_capacity(n);
+        let mut loads = Vec::with_capacity(n);
+        let mut joins = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx, rx) = channel::<ShardMsg>();
+            let load = Arc::new(ShardLoad::default());
+            let (f, l) = (factory.clone(), load.clone());
+            let (kind, adm, shed) = (cfg.scheduler, cfg.shard_admission, cfg.shed_infeasible);
+            let join = std::thread::Builder::new()
+                .name(format!("agd-shard-{i}"))
+                .spawn(move || {
+                    let engine =
+                        f(i).and_then(|be| Engine::with_scheduler(be, kind.build(), adm));
+                    match engine {
+                        Ok(mut engine) => {
+                            engine.set_workers(workers);
+                            replica::run_replica(i, engine, rx, l, shed);
+                        }
+                        Err(e) => {
+                            log::error!("shard {i}: backend construction failed: {e:#}");
+                            l.mark_dead();
+                        }
+                    }
+                })
+                .expect("spawn shard thread");
+            txs.push(tx);
+            loads.push(load);
+            joins.push(join);
+        }
+        Fleet {
+            loads,
+            joins: Mutex::new(joins),
+            router: Mutex::new(RouterInner {
+                router: Router::new(cfg.placement),
+                txs,
+            }),
+            global: cfg.global_admission,
+            placement: cfg.placement,
+            scheduler: cfg.scheduler,
+            draining: AtomicBool::new(false),
+            next_id: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.loads.len()
+    }
+
+    pub fn placement(&self) -> Placement {
+        self.placement
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Fleet-wide request count (live shards only; reservations included).
+    fn total_requests(&self) -> usize {
+        self.loads
+            .iter()
+            .filter(|l| !l.is_dead())
+            .map(|l| l.requests())
+            .sum()
+    }
+
+    /// Fleet-wide queued-NFE estimate (live shards only).
+    fn total_nfes(&self) -> usize {
+        self.loads
+            .iter()
+            .filter(|l| !l.is_dead())
+            .map(|l| l.nfes())
+            .sum()
+    }
+
+    /// Route one request: global admission → placement → reservation →
+    /// shard channel. Returns the reply channel the shard will answer on
+    /// ([`JobReply::Done`] with the bit-exact [`Completion`], or
+    /// [`JobReply::Error`] with the protocol line). Errors here are
+    /// router-level: [`RouteError::Draining`]/[`RouteError::Closed`] or a
+    /// global-scope [`ScopedShed`].
+    pub fn submit(&self, mut req: Request) -> Result<Receiver<JobReply>> {
+        // worst-case cost, for the global budget and the reservation; a
+        // step count the engine would refuse anyway reserves nothing (and
+        // skips the O(steps) plan walk on the router thread)
+        let cost = if req.steps >= 1 && req.steps <= MAX_STEPS {
+            req.policy.max_nfes(req.steps)
+        } else {
+            0
+        };
+        let mut guard = self.router.lock().expect("router lock");
+        if self.is_draining() {
+            return Err(anyhow::Error::new(RouteError::Draining));
+        }
+        if let Err(inner) = self
+            .global
+            .check(self.total_requests(), self.total_nfes(), cost)
+        {
+            return Err(anyhow::Error::new(ScopedShed {
+                scope: "global",
+                inner,
+            }));
+        }
+        let Some(idx) = guard.router.place(&self.loads, req.client_id.as_deref()) else {
+            return Err(anyhow::Error::new(RouteError::Closed));
+        };
+        req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let load = &self.loads[idx];
+        load.reserve(cost);
+        let (rtx, rrx) = channel();
+        let job = Job {
+            req,
+            cost,
+            started: Instant::now(),
+            reply: rtx,
+        };
+        if guard.txs[idx].send(ShardMsg::Job(job)).is_err() {
+            load.settle(cost);
+            load.mark_dead();
+            return Err(anyhow::Error::new(RouteError::Closed));
+        }
+        Ok(rrx)
+    }
+
+    /// Clone the shard channels out of the router lock, so slow follow-up
+    /// work (waiting on stats/drain acks) never blocks placement.
+    fn channels(&self) -> Vec<std::sync::mpsc::Sender<ShardMsg>> {
+        self.router.lock().expect("router lock").txs.clone()
+    }
+
+    /// Collect every live shard's stats snapshot.
+    fn collect(&self) -> Result<Vec<ShardStats>> {
+        let mut rxs = Vec::new();
+        for (tx, load) in self.channels().iter().zip(&self.loads) {
+            if load.is_dead() {
+                continue;
+            }
+            let (rtx, rx) = channel();
+            if tx.send(ShardMsg::Stats(rtx)).is_ok() {
+                rxs.push(rx);
+            }
+        }
+        let stats: Vec<ShardStats> = rxs.into_iter().filter_map(|rx| rx.recv().ok()).collect();
+        anyhow::ensure!(!stats.is_empty(), "engine fleet is shut down");
+        Ok(stats)
+    }
+
+    /// Merge shard registries: fleet totals (unlabelled) + per-shard
+    /// series under `shard=` labels, plus the fleet topology gauges.
+    /// Gauges exist only under their `shard=` label (intensive gauges
+    /// have no meaningful sum — see [`Telemetry::absorb`]); the extensive
+    /// fleet totals are published here from the scalar snapshots.
+    fn merged_telemetry(&self, stats: &[ShardStats]) -> Telemetry {
+        let mut merged = Telemetry::new();
+        for st in stats {
+            merged.absorb(&st.telemetry, None);
+        }
+        for st in stats {
+            let shard = st.shard.to_string();
+            merged.absorb(&st.telemetry, Some(("shard", &shard)));
+        }
+        let sum = |f: &dyn Fn(&ShardStats) -> usize| stats.iter().map(f).sum::<usize>() as f64;
+        merged.set_gauge("active_requests", &[], sum(&|t| t.active));
+        merged.set_gauge("queue_depth", &[], sum(&|t| t.queue_depth));
+        merged.set_gauge("queued_nfes", &[], sum(&|t| t.queued_nfes));
+        merged.set_gauge("fleet_shards", &[], self.loads.len() as f64);
+        merged.set_gauge(
+            "fleet_shards_alive",
+            &[],
+            self.loads.iter().filter(|l| !l.is_dead()).count() as f64,
+        );
+        merged
+    }
+
+    /// `{"cmd": "stats"}`: fleet totals, per-shard breakdown, and the
+    /// merged telemetry registry.
+    pub fn stats_json(&self) -> Result<Value> {
+        use crate::util::json::{arr, num, obj, s};
+        let stats = self.collect()?;
+        let sum = |f: &dyn Fn(&ShardStats) -> usize| stats.iter().map(f).sum::<usize>();
+        let (batches, items) = (sum(&|t| t.batches), sum(&|t| t.items));
+        let per_shard: Vec<Value> = stats
+            .iter()
+            .map(|t| {
+                obj(vec![
+                    ("shard", num(t.shard as f64)),
+                    ("active", num(t.active as f64)),
+                    ("queue_depth", num(t.queue_depth as f64)),
+                    ("queued_nfes", num(t.queued_nfes as f64)),
+                    ("batches", num(t.batches as f64)),
+                    ("items", num(t.items as f64)),
+                    ("mean_occupancy", num(t.mean_occupancy)),
+                ])
+            })
+            .collect();
+        let telemetry = self.merged_telemetry(&stats);
+        Ok(obj(vec![
+            ("scheduler", s(self.scheduler.name())),
+            ("shards", num(self.loads.len() as f64)),
+            ("placement", s(self.placement().name())),
+            ("draining", json::Value::Bool(self.is_draining())),
+            ("active", num(sum(&|t| t.active) as f64)),
+            ("queue_depth", num(sum(&|t| t.queue_depth) as f64)),
+            ("queued_nfes", num(sum(&|t| t.queued_nfes) as f64)),
+            ("batches", num(batches as f64)),
+            ("items", num(items as f64)),
+            (
+                "mean_occupancy",
+                num(if batches == 0 {
+                    0.0
+                } else {
+                    items as f64 / batches as f64
+                }),
+            ),
+            ("per_shard", arr(per_shard)),
+            ("telemetry", telemetry.to_json()),
+        ]))
+    }
+
+    /// `{"cmd": "metrics"}`: Prometheus exposition of the merged registry
+    /// (fleet totals + `shard=`-labelled per-shard series).
+    pub fn metrics_prometheus(&self) -> Result<String> {
+        let stats = self.collect()?;
+        Ok(self.merged_telemetry(&stats).to_prometheus())
+    }
+
+    /// Stop admitting (subsequent submits get a `draining` error) and
+    /// block until every shard is idle. In-flight work always completes —
+    /// each shard acknowledges only once its engine has nothing queued or
+    /// executing. Idempotent; returns the shard count.
+    pub fn drain(&self) -> usize {
+        {
+            // serialize with in-progress submits: a request that won the
+            // router lock before us reaches its shard's channel ahead of
+            // the Drain message and is therefore waited for
+            let _guard = self.router.lock().expect("router lock");
+            self.draining.store(true, Ordering::SeqCst);
+        }
+        let mut acks = Vec::new();
+        for tx in self.channels() {
+            let (rtx, rx) = channel();
+            if tx.send(ShardMsg::Drain(rtx)).is_ok() {
+                acks.push(rx);
+            }
+        }
+        for rx in acks {
+            let _ = rx.recv();
+        }
+        self.loads.len()
+    }
+
+    /// Drain, then join every engine thread. The graceful teardown path —
+    /// wired into `{"cmd": "drain"}`-driven shutdown and used by tests to
+    /// close a fleet without leaking threads. Idempotent.
+    pub fn shutdown(&self) -> usize {
+        let n = self.drain();
+        for tx in self.channels() {
+            let _ = tx.send(ShardMsg::Shutdown);
+        }
+        let mut joins = self.joins.lock().expect("joins lock");
+        for j in joins.drain(..) {
+            let _ = j.join();
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::GmmBackend;
+    use crate::coordinator::policy::cfg;
+    use crate::sim::gmm::Gmm;
+
+    fn fleet(n: usize, placement: Placement) -> Fleet {
+        Fleet::launch(
+            |_shard| Ok(GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05))),
+            FleetConfig {
+                shards: n,
+                placement,
+                ..FleetConfig::default()
+            },
+        )
+    }
+
+    fn req(comp: i32, steps: usize) -> Request {
+        // ids are fleet-assigned; the 0 here is overwritten at submit
+        Request::new(0, "gmm", vec![comp, 0, 0, 0], 100 + comp as u64, steps, cfg(2.0))
+    }
+
+    #[test]
+    fn fleet_serves_and_shuts_down() {
+        let fleet = fleet(2, Placement::RoundRobin);
+        let rxs: Vec<_> = (0..4).map(|i| fleet.submit(req(1 + i % 4, 6)).unwrap()).collect();
+        for rx in rxs {
+            match rx.recv().unwrap() {
+                JobReply::Done(c, ms) => {
+                    assert_eq!(c.nfes, 12);
+                    assert!(ms >= 0.0);
+                }
+                JobReply::Error(line) => panic!("unexpected error: {line}"),
+            }
+        }
+        let stats = fleet.stats_json().unwrap();
+        assert_eq!(stats.req("shards").as_f64(), Some(2.0));
+        assert_eq!(stats.req("active").as_f64(), Some(0.0));
+        assert_eq!(stats.req("placement").as_str(), Some("round-robin"));
+        // both shards saw work under round-robin
+        let per = stats.req("per_shard").as_arr().unwrap();
+        assert_eq!(per.len(), 2);
+        assert!(per.iter().all(|s| s.req("items").as_f64().unwrap() > 0.0));
+        // prometheus carries fleet totals and shard-labelled series
+        let prom = fleet.metrics_prometheus().unwrap();
+        assert!(prom.contains("fleet_shards 2"), "{prom}");
+        assert!(prom.contains("shard=\"0\""), "{prom}");
+        assert!(prom.contains("shard=\"1\""), "{prom}");
+
+        assert_eq!(fleet.shutdown(), 2);
+        // post-shutdown: draining error, stats unavailable
+        let err = fleet.submit(req(1, 4)).unwrap_err();
+        assert!(err.downcast_ref::<RouteError>() == Some(&RouteError::Draining), "{err}");
+        assert!(fleet.stats_json().is_err());
+        // idempotent
+        assert_eq!(fleet.shutdown(), 2);
+    }
+
+    #[test]
+    fn drain_blocks_new_work_but_finishes_old() {
+        let fleet = fleet(2, Placement::LeastLoaded);
+        let rx = fleet.submit(req(2, 12)).unwrap();
+        assert_eq!(fleet.drain(), 2);
+        // the in-flight request completed rather than being dropped
+        match rx.recv().unwrap() {
+            JobReply::Done(c, _) => assert_eq!(c.nfes, 24),
+            JobReply::Error(line) => panic!("{line}"),
+        }
+        let err = fleet.submit(req(1, 4)).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<RouteError>(),
+            Some(RouteError::Draining)
+        ));
+        // stats still answer while drained-but-not-joined
+        assert!(fleet.stats_json().unwrap().req("draining").as_bool() == Some(true));
+        fleet.shutdown();
+    }
+}

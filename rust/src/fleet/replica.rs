@@ -1,0 +1,327 @@
+//! The shard engine thread: one engine replica pumping its own queue.
+//!
+//! Each replica owns a full engine stack — backend instance, scheduler,
+//! admission budget, worker pool, buffer pool — constructed *inside* the
+//! thread (the PJRT client is thread-affine). The loop is the fleet's
+//! generalization of the old single-engine server loop: admit jobs, pump,
+//! reply per request; plus the shard-side fleet duties:
+//!
+//! * **load publication** — after every message and pump the thread
+//!   publishes [`Engine::load`] into the shared [`ShardLoad`], and settles
+//!   the router's placement reservation when it picks a job up;
+//! * **deadline-infeasible shedding** (`--shed-infeasible`) — a tracked
+//!   per-NFE service rate ([`ServiceRate`], EWMA-free cumulative
+//!   micros/NFE) prices the queued backlog; a request whose `deadline_ms`
+//!   cannot cover it is refused with `deadline_infeasible` and counted in
+//!   `deadline_shed_total{policy=}`;
+//! * **drain** — a [`ShardMsg::Drain`] waiter is acknowledged as soon as
+//!   the engine is idle (all admitted work completed, nothing dropped);
+//! * **shutdown** — [`ShardMsg::Shutdown`] lets the loop return at the
+//!   next idle point, which is what makes fleet threads joinable.
+//!
+//! A fatal pump error (deterministic backend failure) replies the error to
+//! every in-flight job, marks the shard dead in its [`ShardLoad`] (the
+//! router stops placing onto it) and exits the thread — the rest of the
+//! fleet keeps serving.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::backend::Backend;
+use crate::coordinator::engine::Engine;
+use crate::coordinator::request::{Completion, Request};
+use crate::fleet::router::ShardLoad;
+use crate::fleet::ScopedShed;
+use crate::sched::{AdmitError, Telemetry};
+use crate::server::error_to_line;
+
+/// A placed request travelling router → shard thread.
+pub struct Job {
+    pub req: Request,
+    /// Worst-case NFE cost the router reserved (settled on pickup).
+    pub cost: usize,
+    /// Arrival instant at the front door (latency is measured from here,
+    /// like the single-engine server did).
+    pub started: Instant,
+    pub reply: Sender<JobReply>,
+}
+
+/// What a shard sends back on a job's reply channel. Completions stay
+/// typed (not pre-rendered lines) so embedders — the fleet integration
+/// tests, future front-ends — get bit-exact images; the server renders
+/// the protocol line connection-side where `want_image` is known.
+pub enum JobReply {
+    /// The request completed after `ms` milliseconds in the fleet.
+    Done(Box<Completion>, f64),
+    /// The request was refused or failed; the payload is the protocol
+    /// error line.
+    Error(String),
+}
+
+/// One shard's stats snapshot for `{"cmd": "stats"}` aggregation.
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    pub shard: usize,
+    pub scheduler: &'static str,
+    pub active: usize,
+    pub queue_depth: usize,
+    pub queued_nfes: usize,
+    pub batches: usize,
+    pub items: usize,
+    pub mean_occupancy: f64,
+    pub telemetry: Telemetry,
+}
+
+/// What the fleet sends to a shard thread.
+pub(crate) enum ShardMsg {
+    Job(Job),
+    /// Reply with the shard's stats snapshot (stats/metrics aggregation).
+    Stats(Sender<ShardStats>),
+    /// Acknowledge once the engine is idle (nothing queued or executing).
+    Drain(Sender<()>),
+    /// Finish in-flight work, then exit the thread.
+    Shutdown,
+}
+
+/// Cumulative observed service rate: wall micros per executed NFE. Fed by
+/// every pump; prices the backlog for `--shed-infeasible`. Cumulative
+/// (not windowed) keeps it allocation-free and monotone-stable; the GMM
+/// oracle and a warmed PJRT artifact both have near-constant per-NFE cost.
+#[derive(Debug, Default)]
+pub struct ServiceRate {
+    nfes: u64,
+    micros: u64,
+}
+
+impl ServiceRate {
+    pub fn observe(&mut self, items: usize, elapsed: Duration) {
+        self.nfes += items as u64;
+        self.micros += elapsed.as_micros() as u64;
+    }
+
+    /// Milliseconds per NFE — `None` until at least one timed NFE exists.
+    pub fn per_nfe_ms(&self) -> Option<f64> {
+        if self.nfes == 0 || self.micros == 0 {
+            return None;
+        }
+        Some(self.micros as f64 / self.nfes as f64 / 1000.0)
+    }
+}
+
+/// Per-admitted-job bookkeeping on the shard thread.
+struct Pending {
+    started: Instant,
+    reply: Sender<JobReply>,
+}
+
+/// Run one shard's engine loop until shutdown (or a fatal error).
+pub(crate) fn run_replica<B: Backend>(
+    shard: usize,
+    mut engine: Engine<B>,
+    rx: Receiver<ShardMsg>,
+    load: Arc<ShardLoad>,
+    shed_infeasible: bool,
+) {
+    let mut jobs: HashMap<u64, Pending> = HashMap::new();
+    let mut waiters: Vec<Sender<()>> = Vec::new();
+    let mut rate = ServiceRate::default();
+    let mut shutdown = false;
+    loop {
+        // idle: acknowledge drains, honour shutdown, block for work
+        if engine.idle() {
+            for w in waiters.drain(..) {
+                let _ = w.send(());
+            }
+            if shutdown {
+                return;
+            }
+            match rx.recv() {
+                Ok(msg) => {
+                    handle_msg(
+                        shard, &mut engine, &mut jobs, &mut waiters, &mut shutdown, &load,
+                        &rate, shed_infeasible, msg,
+                    );
+                }
+                Err(_) => return, // fleet dropped → shut down
+            }
+        }
+        // soak up everything already queued before pumping
+        loop {
+            match rx.try_recv() {
+                Ok(msg) => {
+                    handle_msg(
+                        shard, &mut engine, &mut jobs, &mut waiters, &mut shutdown, &load,
+                        &rate, shed_infeasible, msg,
+                    );
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    if engine.idle() {
+                        for w in waiters.drain(..) {
+                            let _ = w.send(());
+                        }
+                        return;
+                    }
+                    break;
+                }
+            }
+        }
+        let t0 = Instant::now();
+        let before = engine.items();
+        match engine.pump() {
+            Ok(completions) => {
+                let executed = engine.items() - before;
+                if executed > 0 {
+                    rate.observe(executed, t0.elapsed());
+                }
+                for c in completions {
+                    if let Some(job) = jobs.remove(&c.id) {
+                        let ms = job.started.elapsed().as_secs_f64() * 1e3;
+                        let _ = job.reply.send(JobReply::Done(Box::new(c), ms));
+                    }
+                }
+                let l = engine.load();
+                load.publish(l.active, l.queued_nfes);
+            }
+            Err(e) => {
+                log::error!("shard {shard}: engine pump failed: {e:#}");
+                let line = error_to_line(&e);
+                for (_, job) in jobs.drain() {
+                    let _ = job.reply.send(JobReply::Error(line.clone()));
+                }
+                load.mark_dead();
+                return;
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_msg<B: Backend>(
+    shard: usize,
+    engine: &mut Engine<B>,
+    jobs: &mut HashMap<u64, Pending>,
+    waiters: &mut Vec<Sender<()>>,
+    shutdown: &mut bool,
+    load: &ShardLoad,
+    rate: &ServiceRate,
+    shed_infeasible: bool,
+    msg: ShardMsg,
+) {
+    match msg {
+        ShardMsg::Job(job) => admit(engine, jobs, load, rate, shed_infeasible, job),
+        ShardMsg::Stats(reply) => {
+            let l = engine.load();
+            let _ = reply.send(ShardStats {
+                shard,
+                scheduler: engine.scheduler_name(),
+                active: l.active,
+                queue_depth: l.queue_depth,
+                queued_nfes: l.queued_nfes,
+                batches: engine.batches(),
+                items: engine.items(),
+                mean_occupancy: engine.mean_occupancy(),
+                telemetry: engine.telemetry().clone(),
+            });
+        }
+        ShardMsg::Drain(reply) => {
+            if engine.idle() {
+                let _ = reply.send(());
+            } else {
+                waiters.push(reply);
+            }
+        }
+        ShardMsg::Shutdown => *shutdown = true,
+    }
+}
+
+/// Shard-side admission: the deadline-feasibility gate, then the engine's
+/// own validation + per-shard budgets. A refusal replies immediately and
+/// never touches the queue; either way the router's reservation settles.
+fn admit<B: Backend>(
+    engine: &mut Engine<B>,
+    jobs: &mut HashMap<u64, Pending>,
+    load: &ShardLoad,
+    rate: &ServiceRate,
+    shed_infeasible: bool,
+    job: Job,
+) {
+    let Job {
+        req,
+        cost,
+        started,
+        reply,
+    } = job;
+    // deadline-aware shedding: refuse work that cannot finish in time
+    // given this shard's backlog and observed service rate. Skipped until
+    // a rate exists — the first requests after a cold start must land.
+    // The estimate prices a FIFO drain of the whole backlog: a
+    // *worst-case* bound. Under the deadline/cost-aware schedulers a
+    // tight-deadline request may actually run far sooner than the bound
+    // says, so on deep queues this gate over-sheds urgent work — pair
+    // `--shed-infeasible` with fifo (its honest regime), or accept that
+    // it trades false rejections for never burning NFEs on a reply that
+    // would arrive late.
+    if shed_infeasible {
+        if let (Some(deadline), Some(per_nfe_ms)) = (req.deadline_ms, rate.per_nfe_ms()) {
+            let backlog = engine.queued_nfes() + cost;
+            let estimated = per_nfe_ms * backlog as f64;
+            if (deadline as f64) < estimated {
+                let policy = req.policy.kind();
+                engine
+                    .telemetry_mut()
+                    .inc("deadline_shed_total", &[("policy", policy.as_str())], 1);
+                let e = anyhow::Error::new(AdmitError::DeadlineInfeasible {
+                    deadline_ms: deadline,
+                    estimated_ms: estimated.ceil() as u64,
+                    queued_nfes: backlog,
+                });
+                let _ = reply.send(JobReply::Error(error_to_line(&e)));
+                load.settle(cost);
+                return;
+            }
+        }
+    }
+    let id = req.id;
+    match engine.try_submit(req) {
+        Ok(()) => {
+            jobs.insert(id, Pending { started, reply });
+        }
+        Err(e @ AdmitError::Invalid { .. }) => {
+            // malformed, not over-budget: no shed scope on the line
+            let _ = reply.send(JobReply::Error(error_to_line(&anyhow::Error::new(e))));
+        }
+        Err(e) => {
+            let scoped = ScopedShed {
+                scope: "shard",
+                inner: e,
+            };
+            let _ = reply.send(JobReply::Error(error_to_line(&anyhow::Error::new(scoped))));
+        }
+    }
+    load.settle(cost);
+    let l = engine.load();
+    load.publish(l.active, l.queued_nfes);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_rate_prices_backlog() {
+        let mut r = ServiceRate::default();
+        assert_eq!(r.per_nfe_ms(), None, "cold start must not shed");
+        r.observe(0, Duration::from_micros(500));
+        assert_eq!(r.per_nfe_ms(), None, "command-only pumps carry no NFEs");
+        r.observe(10, Duration::from_millis(20));
+        let per = r.per_nfe_ms().unwrap();
+        assert!((per - 2.05).abs() < 0.01, "{per}"); // 20.5ms / 10 NFEs
+        // cumulative: more observations refine, never reset
+        r.observe(10, Duration::from_millis(20));
+        let per2 = r.per_nfe_ms().unwrap();
+        assert!(per2 < per && per2 > 1.9, "{per2}");
+    }
+}

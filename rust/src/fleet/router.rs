@@ -1,0 +1,286 @@
+//! Request placement across engine shards.
+//!
+//! The router owns two things: the [`Placement`] discipline and the
+//! per-shard [`ShardLoad`] counters it places against. Loads are shared
+//! atomics maintained *cooperatively* by both sides of the fleet:
+//!
+//! * the router **reserves** a request's worst-case NFE cost on the chosen
+//!   shard at placement time (`pending_*` — placed, not yet seen by the
+//!   shard thread), so a burst of submissions spreads instead of piling
+//!   onto whichever shard last published the lowest number;
+//! * the shard thread **settles** the reservation when it picks the job
+//!   up, and **publishes** its engine's live [`EngineLoad`]
+//!   (`active`/`queued_nfes`) after every message and pump.
+//!
+//! A shard's load is the sum of both halves ([`ShardLoad::nfes`] /
+//! [`ShardLoad::requests`]), which is exactly the quantity the engine's
+//! own queued-NFE accounting converges to once the queue drains — the
+//! same honest cost unit the admission budgets bound.
+//!
+//! Placement is deterministic: `least-loaded` breaks ties by lowest shard
+//! index, `round-robin` cycles a counter over live shards, `client-hash`
+//! is a stable FNV-1a over `client_id` (anonymous requests share the `""`
+//! lane). Dead shards (backend construction failed, or a fatal pump
+//! error) are skipped by every discipline.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// How the fleet router picks a shard for each request
+/// (`agd serve --placement`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Lowest live queued-NFE snapshot (reservations included), ties by
+    /// lowest shard index. The default.
+    LeastLoaded,
+    /// Cycle over live shards in index order.
+    RoundRobin,
+    /// Stable hash of `client_id` — keeps one client's requests on one
+    /// shard (cache affinity; makes the per-client quota fleet-exact).
+    ClientHash,
+}
+
+impl Placement {
+    /// Every selectable placement, in display order.
+    pub const ALL: [Placement; 3] = [
+        Placement::LeastLoaded,
+        Placement::RoundRobin,
+        Placement::ClientHash,
+    ];
+
+    /// Wire name (matches [`Placement::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Placement::LeastLoaded => "least-loaded",
+            Placement::RoundRobin => "round-robin",
+            Placement::ClientHash => "client-hash",
+        }
+    }
+
+    /// Parse a `--placement` value.
+    pub fn parse(s: &str) -> Result<Placement, String> {
+        match s {
+            "least-loaded" => Ok(Placement::LeastLoaded),
+            "round-robin" => Ok(Placement::RoundRobin),
+            "client-hash" => Ok(Placement::ClientHash),
+            other => Err(format!(
+                "unknown placement `{other}` (expected least-loaded|round-robin|client-hash)"
+            )),
+        }
+    }
+}
+
+/// Shared per-shard load counters (see module docs). All reads are
+/// advisory snapshots — exactness is not required for placement, only for
+/// the *direction* of the signal, and every counter is eventually
+/// consistent with the engine's own accounting.
+#[derive(Debug, Default)]
+pub struct ShardLoad {
+    /// Requests placed by the router but not yet picked up by the shard.
+    pending_jobs: AtomicUsize,
+    /// Worst-case NFEs of those pending requests.
+    pending_nfes: AtomicUsize,
+    /// The shard engine's published `active` count.
+    active: AtomicUsize,
+    /// The shard engine's published `queued_nfes`.
+    queued_nfes: AtomicUsize,
+    /// Set when the shard thread died (failed construction or fatal pump
+    /// error); placement skips dead shards.
+    dead: AtomicBool,
+}
+
+impl ShardLoad {
+    /// Router side: reserve a placed request's cost before sending it.
+    pub fn reserve(&self, cost: usize) {
+        self.pending_jobs.fetch_add(1, Ordering::Relaxed);
+        self.pending_nfes.fetch_add(cost, Ordering::Relaxed);
+    }
+
+    /// Shard side (or router, on a failed send): the placed request has
+    /// been picked up (admitted or refused) — the engine's published
+    /// numbers now carry it, if it was admitted.
+    pub fn settle(&self, cost: usize) {
+        self.pending_jobs.fetch_sub(1, Ordering::Relaxed);
+        self.pending_nfes.fetch_sub(cost, Ordering::Relaxed);
+    }
+
+    /// Shard side: publish the engine's live load snapshot.
+    pub fn publish(&self, active: usize, queued_nfes: usize) {
+        self.active.store(active, Ordering::Relaxed);
+        self.queued_nfes.store(queued_nfes, Ordering::Relaxed);
+    }
+
+    /// Mark the shard dead (skipped by placement from now on) and zero its
+    /// published load so fleet totals stop counting it.
+    pub fn mark_dead(&self) {
+        self.dead.store(true, Ordering::Relaxed);
+        self.publish(0, 0);
+    }
+
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Relaxed)
+    }
+
+    /// Live queued-NFE estimate: engine-published + router reservations.
+    pub fn nfes(&self) -> usize {
+        self.queued_nfes.load(Ordering::Relaxed) + self.pending_nfes.load(Ordering::Relaxed)
+    }
+
+    /// Live request estimate: engine-published + router reservations.
+    pub fn requests(&self) -> usize {
+        self.active.load(Ordering::Relaxed) + self.pending_jobs.load(Ordering::Relaxed)
+    }
+}
+
+/// Stable FNV-1a 64 over the client id — placement must not drift across
+/// runs or platforms, so no `DefaultHasher`.
+fn client_hash(client: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in client.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Placement state — one per fleet, behind the fleet's router lock.
+#[derive(Debug)]
+pub struct Router {
+    placement: Placement,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(placement: Placement) -> Router {
+        Router {
+            placement,
+            rr_next: 0,
+        }
+    }
+
+    pub fn placement(&self) -> Placement {
+        self.placement
+    }
+
+    /// Pick a shard for one request; `None` when every shard is dead.
+    /// Deterministic given the same load snapshots and call sequence.
+    pub fn place<L: AsRef<ShardLoad>>(&mut self, loads: &[L], client: Option<&str>) -> Option<usize> {
+        let n = loads.len();
+        let alive = |i: usize| !loads[i].as_ref().is_dead();
+        if !(0..n).any(alive) {
+            return None;
+        }
+        match self.placement {
+            Placement::LeastLoaded => (0..n)
+                .filter(|&i| alive(i))
+                .min_by_key(|&i| (loads[i].as_ref().nfes(), i)),
+            Placement::RoundRobin => {
+                // cycle the counter but never hand out a dead shard
+                for _ in 0..n {
+                    let i = self.rr_next % n;
+                    self.rr_next = self.rr_next.wrapping_add(1);
+                    if alive(i) {
+                        return Some(i);
+                    }
+                }
+                None
+            }
+            Placement::ClientHash => {
+                let h = client_hash(client.unwrap_or(""));
+                let start = (h % n as u64) as usize;
+                // a dead home shard falls through to the next live one, so
+                // affinity degrades gracefully instead of erroring
+                (0..n).map(|k| (start + k) % n).find(|&i| alive(i))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn loads(n: usize) -> Vec<Arc<ShardLoad>> {
+        (0..n).map(|_| Arc::new(ShardLoad::default())).collect()
+    }
+
+    #[test]
+    fn placement_names_round_trip() {
+        for p in Placement::ALL {
+            assert_eq!(Placement::parse(p.name()), Ok(p));
+        }
+        let err = Placement::parse("warp").unwrap_err();
+        assert!(err.contains("least-loaded"), "{err}");
+    }
+
+    /// The satellite pin: least-loaded follows the queued-NFE snapshots —
+    /// both the engine-published half and the router's own reservations.
+    #[test]
+    fn least_loaded_tracks_queued_nfe_snapshots() {
+        let ls = loads(3);
+        let mut r = Router::new(Placement::LeastLoaded);
+        // all empty → lowest index wins
+        assert_eq!(r.place(&ls, None), Some(0));
+        // a reservation on 0 moves placement to 1, and so on
+        ls[0].reserve(40);
+        assert_eq!(r.place(&ls, None), Some(1));
+        ls[1].reserve(40);
+        assert_eq!(r.place(&ls, None), Some(2));
+        ls[2].reserve(60);
+        // 0 and 1 tie at 40 → lowest index
+        assert_eq!(r.place(&ls, None), Some(0));
+        // the shard settling its reservation hands the load to the
+        // engine-published half; the router keeps seeing the same total
+        ls[0].settle(40);
+        ls[0].publish(1, 40);
+        assert_eq!(ls[0].nfes(), 40);
+        assert_eq!(r.place(&ls, None), Some(0));
+        // engine progress (published queued shrinking) re-attracts work
+        ls[2].settle(60);
+        ls[2].publish(1, 4);
+        assert_eq!(r.place(&ls, None), Some(2));
+        // dead shards are skipped even when least loaded
+        ls[2].mark_dead();
+        assert_eq!(ls[2].nfes(), 0);
+        assert_eq!(r.place(&ls, None), Some(0));
+    }
+
+    #[test]
+    fn round_robin_cycles_live_shards() {
+        let ls = loads(3);
+        let mut r = Router::new(Placement::RoundRobin);
+        let seq: Vec<_> = (0..6).map(|_| r.place(&ls, None).unwrap()).collect();
+        assert_eq!(seq, vec![0, 1, 2, 0, 1, 2]);
+        ls[1].mark_dead();
+        let seq: Vec<_> = (0..4).map(|_| r.place(&ls, None).unwrap()).collect();
+        assert_eq!(seq, vec![0, 2, 0, 2]);
+    }
+
+    #[test]
+    fn client_hash_is_sticky_and_survives_dead_shards() {
+        let ls = loads(4);
+        let mut r = Router::new(Placement::ClientHash);
+        let home = r.place(&ls, Some("web-7")).unwrap();
+        for _ in 0..5 {
+            assert_eq!(r.place(&ls, Some("web-7")), Some(home));
+        }
+        // anonymous requests share one lane
+        let anon = r.place(&ls, None).unwrap();
+        assert_eq!(r.place(&ls, Some("")), Some(anon));
+        // a dead home shard falls through deterministically
+        ls[home].mark_dead();
+        let fallback = r.place(&ls, Some("web-7")).unwrap();
+        assert_ne!(fallback, home);
+        assert_eq!(r.place(&ls, Some("web-7")), Some(fallback));
+    }
+
+    #[test]
+    fn all_dead_yields_none() {
+        let ls = loads(2);
+        ls[0].mark_dead();
+        ls[1].mark_dead();
+        for p in Placement::ALL {
+            assert_eq!(Router::new(p).place(&ls, Some("x")), None, "{}", p.name());
+        }
+    }
+}

@@ -70,6 +70,20 @@
 //! are bit-identical for any worker count; the PJRT client is not `Send`
 //! and always stays on the engine thread ([`exec`] module docs).
 //!
+//! ## The engine fleet (§Scale)
+//!
+//! The serving stack scales *out* by replicating whole engines: `agd
+//! serve --shards N` runs N engine replicas (each on its own thread with
+//! its own backend/scheduler/pools — the PJRT one-thread-per-device
+//! boundary) behind a load-aware router ([`fleet`]):
+//! `--placement least-loaded|round-robin|client-hash`, two-level
+//! admission (global budget at the router, per-shard budgets in each
+//! engine), optional deadline-infeasibility shedding
+//! (`--shed-infeasible`), merged `shard=`-labelled telemetry, and a
+//! graceful `{"cmd": "drain"}` quiesce. Placement changes batching, never
+//! per-request math — completions are byte-identical for every shard
+//! count (`rust/tests/fleet_integration.rs`).
+//!
 //! Start with [`coordinator::engine::Engine`] and the constructor helpers
 //! in [`coordinator::policy`] (`cfg`, `ag`, …); see
 //! `examples/quickstart.rs`.
@@ -78,6 +92,7 @@ pub mod backend;
 pub mod coordinator;
 pub mod eval;
 pub mod exec;
+pub mod fleet;
 pub mod metrics;
 pub mod ols;
 pub mod perfstat;
@@ -97,7 +112,8 @@ pub mod util;
 pub use backend::{Backend, BatchBuf, BatchOut, EvalInput, GmmBackend};
 pub use coordinator::bufpool::BufPool;
 pub use exec::ExecPool;
-pub use coordinator::engine::Engine;
+pub use coordinator::engine::{Engine, EngineLoad};
+pub use fleet::{Fleet, FleetConfig, Placement};
 pub use coordinator::policy::{Policy, PolicyRef, PolicyState, StepObservation, StepPlan};
 pub use coordinator::request::{Completion, Request};
 pub use coordinator::spec::{PolicyRegistry, PolicySpec, SpecError};

@@ -17,6 +17,7 @@ use adaptive_guidance::coordinator::engine::Engine;
 use adaptive_guidance::coordinator::policy::{cfg as cfg_policy, PolicyRef};
 use adaptive_guidance::coordinator::request::Request;
 use adaptive_guidance::coordinator::spec::{PolicyRegistry, PolicySpec};
+use adaptive_guidance::fleet::Placement;
 use adaptive_guidance::ols;
 use adaptive_guidance::prompts::{self, Prompt};
 use adaptive_guidance::runtime::PjrtBackend;
@@ -65,11 +66,17 @@ fn print_help() {
            --steps N --seed N --n N --out DIR\n\
            --workers N         engine worker lanes (0 = all cores)\n\
          serve:    --addr HOST:PORT\n\
+           --shards N           engine replicas, one thread/backend each (default 1)\n\
+           --placement least-loaded|round-robin|client-hash (default least-loaded)\n\
            --scheduler fifo|cost-aware|deadline|fair-share (default fifo)\n\
-           --max-queued-nfes N  shed with queue_full past N queued evals (0 = off)\n\
-           --max-in-flight N    cap concurrent requests (0 = off)\n\
-           --max-in-flight-per-client N  per-client_id cap (0 = off)\n\
-           --workers N          engine worker lanes (0 = all cores, the default)\n\
+           --max-queued-nfes N  fleet-wide queue_full budget in queued evals (0 = off)\n\
+           --max-in-flight N    fleet-wide cap on concurrent requests (0 = off)\n\
+           --shard-max-queued-nfes N  per-shard queued-eval budget (0 = off)\n\
+           --shard-max-in-flight N    per-shard concurrent-request cap (0 = off)\n\
+           --max-in-flight-per-client N  per-client_id cap, shard-side (0 = off)\n\
+           --shed-infeasible    refuse requests whose deadline_ms cannot cover\n\
+                                the shard backlog at the observed service rate\n\
+           --workers N          worker lanes per shard (0 = cores/shards, default)\n\
            --policy-file FILE   register policy aliases from JSON at startup\n\
            --coeffs-dir DIR     server-side dir for linear-ag \"coeffs_file\"\n\
          search:   --iters N --lr F --seed N --out FILE\n\
@@ -189,12 +196,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let scheduler = SchedulerKind::parse(args.get_or("scheduler", "fifo"))
         .map_err(|e| anyhow!("--scheduler: {e}"))?;
+    // the fleet topology: N engine replicas behind a load-aware router
+    let placement = Placement::parse(
+        args.choice(
+            "placement",
+            "least-loaded",
+            &["least-loaded", "round-robin", "client-hash"],
+        )
+        .map_err(|e| anyhow!(e))?,
+    )
+    .expect("choice() validated the placement name");
     // 0 = unlimited, matching the historical unbounded queue
     let nonzero = |n: usize| if n == 0 { None } else { Some(n) };
     let admission = Admission {
         max_in_flight: nonzero(args.usize("max-in-flight", 0)),
         max_queued_nfes: nonzero(args.usize("max-queued-nfes", 0)),
         max_in_flight_per_client: nonzero(args.usize("max-in-flight-per-client", 0)),
+    };
+    let shard_admission = Admission {
+        max_in_flight: nonzero(args.usize("shard-max-in-flight", 0)),
+        max_queued_nfes: nonzero(args.usize("shard-max-queued-nfes", 0)),
+        max_in_flight_per_client: None,
     };
     let cfg = ServerConfig {
         addr: args.get_or("addr", "127.0.0.1:7458").to_owned(),
@@ -204,7 +226,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         default_gamma_bar: args.f64("gamma-bar", 0.9988),
         scheduler,
         admission,
-        // 0 = available parallelism, resolved inside serve
+        shard_admission,
+        shards: args.usize("shards", 1).max(1),
+        placement,
+        shed_infeasible: args.flag("shed-infeasible"),
+        // 0 = available parallelism split across shards, resolved by the fleet
         workers: args.usize("workers", 0),
     };
     // named policy presets extend the registry before the first request —
@@ -219,7 +245,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .map_err(|e| anyhow!("--policy-file: {e}"))?;
         eprintln!("loaded {n} policy aliases from {path}");
     }
-    // the PJRT client is thread-affine: construct it inside the engine thread
+    // the PJRT client is thread-affine: the factory is called inside each
+    // shard's engine thread (once per `--shards` replica)
     serve_with_registry(
         move || {
             let mut be = PjrtBackend::load(&dir)?;

@@ -17,6 +17,27 @@
 //! engine tracks live requests per `client_id` (anonymous requests share
 //! the `""` lane, mirroring fair-share) and sheds past-quota requests
 //! with [`AdmitError::ClientBusy`], which names the per-client limit.
+//!
+//! # §Scale: two-level admission
+//!
+//! Under an engine fleet ([`crate::fleet`]) the same [`Admission`] type is
+//! checked at **two levels**: the router holds a *fleet-global* budget
+//! (`--max-in-flight` / `--max-queued-nfes`, checked against the summed
+//! load of every shard before a request is placed) and each shard's engine
+//! holds its own *per-shard* budget (`--shard-max-in-flight` /
+//! `--shard-max-queued-nfes`). A shed error line carries a
+//! `"scope": "global" | "shard"` field
+//! ([`ScopedShed`](crate::fleet::ScopedShed)) naming the level that
+//! tripped. The per-client quota stays shard-side, where the live
+//! per-client counts are; under `client-hash` placement one client always
+//! lands on one shard, which makes it an exact fleet-wide quota.
+//!
+//! A fleet shard can additionally shed *deadline-infeasible* requests at
+//! admission (`agd serve --shed-infeasible`): when the shard's observed
+//! per-NFE service rate says the queued backlog plus the candidate cannot
+//! finish inside the request's `deadline_ms`, the request is refused with
+//! [`AdmitError::DeadlineInfeasible`] (wire code `deadline_infeasible`)
+//! instead of burning NFEs on a reply that would arrive too late.
 
 use std::fmt;
 use std::sync::Arc;
@@ -110,6 +131,15 @@ pub enum AdmitError {
         in_flight: usize,
         max: usize,
     },
+    /// The request's deadline cannot be met given the shard's queued
+    /// backlog and observed per-NFE service rate (`--shed-infeasible`);
+    /// wire code `deadline_infeasible`. `queued_nfes` includes the
+    /// candidate's own cost.
+    DeadlineInfeasible {
+        deadline_ms: u64,
+        estimated_ms: u64,
+        queued_nfes: usize,
+    },
     /// The request itself is malformed (`Engine::try_submit`'s up-front
     /// shape checks: empty tokens, mismatched negative-prompt width, zero
     /// steps).
@@ -145,6 +175,15 @@ impl fmt::Display for AdmitError {
                      (per-client limit {max})"
                 )
             }
+            AdmitError::DeadlineInfeasible {
+                deadline_ms,
+                estimated_ms,
+                queued_nfes,
+            } => write!(
+                f,
+                "deadline infeasible: ~{estimated_ms} ms to drain {queued_nfes} queued \
+                 NFEs exceeds the {deadline_ms} ms deadline"
+            ),
             AdmitError::Invalid { reason } => write!(f, "invalid request: {reason}"),
         }
     }
@@ -233,6 +272,21 @@ mod tests {
         let text = e.to_string();
         assert!(text.contains("90") && text.contains("40") && text.contains("100"), "{text}");
         assert!(text.contains("queue full"));
+    }
+
+    #[test]
+    fn infeasible_deadlines_render_the_estimate() {
+        let e = AdmitError::DeadlineInfeasible {
+            deadline_ms: 50,
+            estimated_ms: 420,
+            queued_nfes: 84,
+        };
+        let text = e.to_string();
+        assert!(text.starts_with("deadline infeasible"), "{text}");
+        assert!(
+            text.contains("420") && text.contains("84") && text.contains("50"),
+            "{text}"
+        );
     }
 
     #[test]

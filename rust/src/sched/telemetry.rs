@@ -19,6 +19,19 @@
 //! ([`Telemetry::to_prometheus`], the server's `{"cmd": "metrics"}`) —
 //! `# TYPE`-annotated counter/gauge/histogram samples, with histogram bins
 //! rendered as cumulative `_bucket{le=...}` series plus `_sum`/`_count`.
+//!
+//! # §Scale: registry merge
+//!
+//! Each engine replica in a fleet owns its own registry (the engine is
+//! single-threaded); the fleet front-end aggregates them on demand with
+//! [`Telemetry::absorb`]: folding a shard's snapshot in once *with* a
+//! `("shard", "N")` label yields the per-shard series, folding it in again
+//! *without* the label yields the fleet totals — counters and histogram
+//! bins add. Gauges only exist under their `shard=` label: intensive
+//! gauges (`parallel_efficiency`, `worker_occupancy`) have no meaningful
+//! sum, so the unlabelled merge skips gauges entirely and the fleet
+//! publishes the extensive totals (`active_requests`, `queue_depth`,
+//! `queued_nfes`) itself from its scalar per-shard snapshots.
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -63,7 +76,7 @@ fn flat(k: &Key) -> String {
 
 /// Fixed-bin histogram cell with an exact running sum for the mean (the
 /// sample count lives in `hist.total`).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 struct HistCell {
     hist: Histogram,
     sum: f64,
@@ -101,8 +114,10 @@ impl HistCell {
 }
 
 /// The metrics registry (see module docs). Single-threaded like the engine
-/// that owns it; front-ends read it through the engine's stats snapshot.
-#[derive(Debug, Default)]
+/// that owns it; front-ends read it through the engine's stats snapshot
+/// (fleet shards ship a `Clone` of the registry to the router thread for
+/// merging — see [`Telemetry::absorb`]).
+#[derive(Debug, Default, Clone)]
 pub struct Telemetry {
     counters: BTreeMap<Key, u64>,
     gauges: BTreeMap<Key, f64>,
@@ -117,27 +132,98 @@ impl Telemetry {
         Telemetry::default()
     }
 
+    /// Admit one label value against the per-label-key cardinality cap;
+    /// past the cap it collapses into `other`.
+    fn cap_value(&mut self, label_key: &str, v: &str) -> String {
+        let values = self.label_values.entry(label_key.to_owned()).or_default();
+        if values.contains(v) {
+            v.to_owned()
+        } else if values.len() < LABEL_VALUE_CAP {
+            values.insert(v.to_owned());
+            v.to_owned()
+        } else {
+            "other".to_owned()
+        }
+    }
+
     /// Write-path key: like [`key`], but each label value is admitted
     /// against the per-label-key cardinality cap; past the cap it becomes
     /// `other`.
     fn canonical_key(&mut self, name: &str, labels: &[(&str, &str)]) -> Key {
-        let mut ls: Vec<(String, String)> = labels
-            .iter()
-            .map(|(k, v)| {
-                let values = self.label_values.entry((*k).to_owned()).or_default();
-                let v = if values.contains(*v) {
-                    (*v).to_owned()
-                } else if values.len() < LABEL_VALUE_CAP {
-                    values.insert((*v).to_owned());
-                    (*v).to_owned()
-                } else {
-                    "other".to_owned()
-                };
-                ((*k).to_owned(), v)
-            })
-            .collect();
+        let mut ls: Vec<(String, String)> = Vec::with_capacity(labels.len());
+        for (k, v) in labels {
+            let v = self.cap_value(k, v);
+            ls.push(((*k).to_owned(), v));
+        }
         ls.sort();
         (name.to_owned(), ls)
+    }
+
+    /// Write-path key over an already-owned label set, optionally extended
+    /// by one more `(key, value)` pair — the merge path ([`Self::absorb`]).
+    fn absorb_key(
+        &mut self,
+        name: &str,
+        labels: &[(String, String)],
+        extra: Option<(&str, &str)>,
+    ) -> Key {
+        let mut ls: Vec<(String, String)> = Vec::with_capacity(labels.len() + 1);
+        for (k, v) in labels {
+            let v = self.cap_value(k, v);
+            ls.push((k.clone(), v));
+        }
+        if let Some((k, v)) = extra {
+            let v = self.cap_value(k, v);
+            ls.push((k.to_owned(), v));
+        }
+        ls.sort();
+        (name.to_owned(), ls)
+    }
+
+    /// Fold another registry into this one (§Scale: registry merge).
+    /// Every series of `part` is re-keyed with `extra` appended to its
+    /// label set (`Some(("shard", "2"))` → the per-shard view) or taken
+    /// as-is (`None` → fleet totals). Counters and histogram bins add.
+    /// Gauges are copied only in *labelled* merges: summing gauges across
+    /// replicas is meaningless for intensive ones (`parallel_efficiency`
+    /// 0.9 + 0.9 = an impossible 1.8), so an unlabelled merge skips them
+    /// and the caller publishes whichever extensive totals it owns (the
+    /// fleet sets `active_requests`/`queue_depth`/`queued_nfes` from its
+    /// scalar snapshots). Histograms only merge into a series of
+    /// identical shape (`lo`/`hi`/bins) — a mismatched shape is dropped
+    /// rather than corrupted, which cannot happen between replicas of
+    /// the same engine.
+    pub fn absorb(&mut self, part: &Telemetry, extra: Option<(&str, &str)>) {
+        for ((name, labels), &v) in &part.counters {
+            let k = self.absorb_key(name, labels, extra);
+            *self.counters.entry(k).or_insert(0) += v;
+        }
+        if extra.is_some() {
+            for ((name, labels), &v) in &part.gauges {
+                let k = self.absorb_key(name, labels, extra);
+                self.gauges.insert(k, v);
+            }
+        }
+        for ((name, labels), cell) in &part.hists {
+            let k = self.absorb_key(name, labels, extra);
+            match self.hists.get_mut(&k) {
+                Some(mine)
+                    if mine.hist.lo == cell.hist.lo
+                        && mine.hist.hi == cell.hist.hi
+                        && mine.hist.counts.len() == cell.hist.counts.len() =>
+                {
+                    for (a, b) in mine.hist.counts.iter_mut().zip(&cell.hist.counts) {
+                        *a += b;
+                    }
+                    mine.hist.total += cell.hist.total;
+                    mine.sum += cell.sum;
+                }
+                Some(_) => {} // shape mismatch: refuse to corrupt the bins
+                None => {
+                    self.hists.insert(k, cell.clone());
+                }
+            }
+        }
     }
 
     /// Increment a counter.
@@ -477,6 +563,71 @@ mod tests {
         t.observe_key(&h, 3.0, 0.0, 10.0, 10);
         assert_eq!(t.hist_count("occ", &[]), 2);
         assert!((t.hist_mean("occ", &[]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn absorb_merges_per_shard_and_total_views() {
+        let mk = |nfes: u64, active: f64, wait: f64| {
+            let mut t = Telemetry::new();
+            t.inc("nfes_total", &[("policy", "ag")], nfes);
+            t.set_gauge("active_requests", &[], active);
+            t.observe("queue_wait_ms", &[("policy", "ag")], wait, 0.0, 100.0, 10);
+            t
+        };
+        let shards = [mk(30, 2.0, 5.0), mk(12, 1.0, 95.0)];
+        let mut merged = Telemetry::new();
+        for (i, part) in shards.iter().enumerate() {
+            merged.absorb(part, None); // fleet totals
+            let shard = format!("{i}");
+            merged.absorb(part, Some(("shard", &shard)));
+        }
+        // totals: counters sum across shards; gauges deliberately do NOT
+        // appear unlabelled (summing intensive gauges is meaningless —
+        // the fleet publishes extensive totals itself)
+        assert_eq!(merged.counter("nfes_total", &[("policy", "ag")]), 42);
+        assert_eq!(merged.gauge("active_requests", &[]), None);
+        assert_eq!(merged.hist_count("queue_wait_ms", &[("policy", "ag")]), 2);
+        assert!((merged.hist_mean("queue_wait_ms", &[("policy", "ag")]) - 50.0).abs() < 1e-9);
+        // per-shard views survive under the shard label
+        assert_eq!(
+            merged.counter("nfes_total", &[("policy", "ag"), ("shard", "0")]),
+            30
+        );
+        assert_eq!(
+            merged.counter("nfes_total", &[("policy", "ag"), ("shard", "1")]),
+            12
+        );
+        assert_eq!(merged.gauge("active_requests", &[("shard", "1")]), Some(1.0));
+        assert_eq!(
+            merged.hist_count("queue_wait_ms", &[("policy", "ag"), ("shard", "0")]),
+            1
+        );
+        // absorbing is additive: a second merge round doubles the counters
+        merged.absorb(&shards[0], None);
+        assert_eq!(merged.counter("nfes_total", &[("policy", "ag")]), 72);
+        // and both wire forms render the merged registry
+        let text = json::to_string(&merged.to_json());
+        assert!(json::parse(&text).is_ok(), "{text}");
+        let prom = merged.to_prometheus();
+        assert!(
+            prom.contains("nfes_total{policy=\"ag\",shard=\"0\"} 30\n"),
+            "{prom}"
+        );
+        assert!(prom.contains("nfes_total{policy=\"ag\"} 72\n"), "{prom}");
+    }
+
+    #[test]
+    fn absorb_respects_the_label_cap() {
+        let mut part = Telemetry::new();
+        part.inc("done", &[], 1);
+        let mut merged = Telemetry::new();
+        for i in 0..(LABEL_VALUE_CAP + 3) {
+            let shard = format!("s{i}");
+            merged.absorb(&part, Some(("shard", &shard)));
+        }
+        assert_eq!(merged.counter("done", &[("shard", "s0")]), 1);
+        assert_eq!(merged.counter("done", &[("shard", "other")]), 3);
+        assert_eq!(merged.counter_sum("done"), (LABEL_VALUE_CAP + 3) as u64);
     }
 
     #[test]

@@ -1,7 +1,30 @@
 //! Line-protocol serving front-end (std::net + mini-JSON; the offline
 //! vendor set has no tokio, so the event loop is threads + channels).
 //!
-//! Protocol: one JSON object per line.
+//! # §Scale: fleet topology
+//!
+//! The server is an **engine fleet** ([`crate::fleet`]): connection
+//! handlers hand each parsed request to a router, which places it on one
+//! of `--shards N` engine replicas — every shard is its own thread owning
+//! its own backend instance, scheduler, worker pool and buffer pool (the
+//! PJRT client is thread-affine, so scale-out replicates whole engines;
+//! with real devices the shard index maps to a device). Placement
+//! (`--placement`) is `least-loaded` by live queued-NFE snapshot
+//! (default), `round-robin`, or `client-hash` for cache affinity.
+//! Placement changes which shard *batches* a request, never its bytes:
+//! per-request results are identical for every shard count.
+//!
+//! Admission is **two-level**: `--max-in-flight`/`--max-queued-nfes`
+//! bound the whole fleet at the router, `--shard-max-in-flight`/
+//! `--shard-max-queued-nfes` bound each shard's engine; a shed line
+//! carries `"scope": "global"|"shard"`. `--shed-infeasible` additionally
+//! refuses requests whose `deadline_ms` cannot cover the placed shard's
+//! backlog at its observed per-NFE service rate (code
+//! `deadline_infeasible`). The per-client quota
+//! (`--max-in-flight-per-client`) is enforced shard-side; under
+//! `client-hash` placement it is exact fleet-wide.
+//!
+//! # Protocol: one JSON object per line
 //!
 //! request  {"prompt": "a large red circle at the center", "policy": "ag",
 //!           "gamma_bar": 0.991, "steps": 20, "guidance": 7.5, "seed": 1,
@@ -10,18 +33,43 @@
 //! response {"id": 3, "policy": "ag(ḡ=0.991)", "nfes": 31, "cfg_steps": 11,
 //!           "truncated_at": 10, "ms": 128.4, "image": [...]?}
 //! error    {"error": "...", "registered": ["ag", "cfg", ...]?}
-//! shed     {"error": "queue full: ...", "code": "queue_full", ...}
+//! shed     {"error": "queue full: ...", "code": "queue_full",
+//!           "scope": "global"|"shard", ...}
+//!          {"error": "deadline infeasible: ...",
+//!           "code": "deadline_infeasible", "deadline_ms": 50,
+//!           "estimated_ms": 420, "queued_nfes": 84}
+//!          {"error": "server is draining: ...", "code": "draining"}
 //! command  {"cmd": "stats"}
-//!          → {"scheduler": "cost-aware", "active": 3, "queue_depth": 9,
-//!             "queued_nfes": 118, ..., "telemetry": {"counters": {...},
-//!             "gauges": {...}, "histograms": {...}}}
+//!          → {"scheduler": "cost-aware", "shards": 4,
+//!             "placement": "least-loaded", "draining": false,
+//!             "active": 3, "queue_depth": 9, "queued_nfes": 118,
+//!             "per_shard": [{"shard": 0, "active": 1, ...}, ...],
+//!             "telemetry": {"counters": {...}, ...}}
+//!            Fleet totals plus a per-shard breakdown; telemetry series
+//!            appear twice — summed (fleet total) and under a `shard=`
+//!            label.
 //! command  {"cmd": "metrics"}
-//!          → Prometheus text exposition of the same telemetry registry
-//!            (`# TYPE`-annotated counter/gauge/histogram samples). This
-//!            is the one multi-line reply in the protocol: it is
-//!            terminated by a blank line, so scrapers read until the
-//!            first empty line (everything else stays one line per
-//!            reply).
+//!          → Prometheus text exposition of the merged fleet registry
+//!            (`# TYPE`-annotated counter/gauge/histogram samples, fleet
+//!            totals + `shard=`-labelled series). This is the one
+//!            multi-line reply in the protocol: it is terminated by a
+//!            blank line, so scrapers read until the first empty line
+//!            (everything else stays one line per reply).
+//! command  {"cmd": "drain"}
+//!          → {"drained": true, "shards": N}, sent only after every shard
+//!            has finished all in-flight work (nothing is dropped) and
+//!            every engine thread has been joined. Drain is terminal:
+//!            from the moment it starts, new requests are refused with
+//!            `"code": "draining"` — it is the graceful-shutdown path.
+//!            ⚠ Drain is an *administrative* command with no
+//!            authentication: anyone who can reach the port can quiesce
+//!            the server. Bind to loopback (the default) or front the
+//!            port with an authenticating proxy on untrusted networks.
+//!
+//! A fleet whose every shard has died (failed backend construction, fatal
+//! pump errors) refuses requests with `"code": "unavailable"` — distinct
+//! from `"draining"` so clients fail over instead of politely waiting out
+//! a shutdown that never announced itself.
 //!
 //! The `"policy"` field is a [`PolicySpec`]: either a bare registered name
 //! (`"linear-ag"`, `"compressed-cfg"`, a `--policy-file` alias, …) or an
@@ -36,35 +84,31 @@
 //! fair-share lane (and the `client=` telemetry label), `priority` and
 //! `deadline_ms` feed the `deadline` scheduler. `deadline_ms` counts
 //! *from the request's arrival* (the engine anchors it to its own clock,
-//! so client clock skew cannot invert the EDF order). The discipline itself is
-//! server-side (`agd serve --scheduler fifo|cost-aware|deadline|
-//! fair-share`), as are the admission budgets (`--max-queued-nfes`,
-//! `--max-in-flight`, and the per-client `--max-in-flight-per-client`) —
-//! a request past a budget is shed with a `queue_full` error while
-//! in-flight requests run to completion. `--workers N` sizes the engine's
-//! worker pool (default: available parallelism); it changes throughput
-//! only, never results.
+//! so client clock skew cannot invert the EDF order). The discipline
+//! itself is server-side (`agd serve --scheduler fifo|cost-aware|
+//! deadline|fair-share`), applied identically inside every shard.
+//! `--workers N` sizes each shard's worker pool (0 = available
+//! parallelism split across shards); it changes throughput only, never
+//! results.
 //!
-//! The engine runs on a dedicated thread (it owns the PJRT client);
-//! connection handlers forward requests through an mpsc channel and block on
-//! a per-request response channel — requests from many connections batch
-//! together inside the engine exactly like the drain-mode benches.
+//! The accept loop classifies listener errors: transient ones (EMFILE,
+//! aborted handshakes, EINTR — see `transient_accept_error`) are logged
+//! and the loop keeps accepting, because one bad accept must not kill a
+//! serving fleet; permanent ones still propagate so a supervisor sees
+//! the crash.
 
-use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::backend::Backend;
-use crate::coordinator::engine::Engine;
 use crate::coordinator::request::{Completion, Request};
 use crate::coordinator::spec::{PolicyRegistry, PolicySpec, SpecError};
+use crate::fleet::{Fleet, FleetConfig, JobReply, Placement, RouteError, ScopedShed};
 use crate::prompts::Prompt;
 use crate::sched::{Admission, AdmitError, SchedulerKind};
+use crate::backend::Backend;
 use crate::util::json::{self, Value};
 
 /// Server configuration.
@@ -75,13 +119,24 @@ pub struct ServerConfig {
     pub default_steps: usize,
     pub default_guidance: f64,
     pub default_gamma_bar: f64,
-    /// Scheduling discipline the engine runs (`--scheduler`).
+    /// Scheduling discipline every shard engine runs (`--scheduler`).
     pub scheduler: SchedulerKind,
-    /// Admission budgets (`--max-in-flight` / `--max-queued-nfes` /
-    /// `--max-in-flight-per-client`).
+    /// Fleet-global admission budgets, checked at the router
+    /// (`--max-in-flight` / `--max-queued-nfes`); its per-client member
+    /// (`--max-in-flight-per-client`) is enforced shard-side.
     pub admission: Admission,
-    /// Worker lanes for the engine's parallel hot loops (`--workers`);
-    /// 0 = available parallelism (§Perf: parallel execution).
+    /// Per-shard engine budgets (`--shard-max-in-flight` /
+    /// `--shard-max-queued-nfes`).
+    pub shard_admission: Admission,
+    /// Engine replicas (`--shards`).
+    pub shards: usize,
+    /// Request placement across shards (`--placement`).
+    pub placement: Placement,
+    /// Shed deadline-infeasible requests at shard admission
+    /// (`--shed-infeasible`).
+    pub shed_infeasible: bool,
+    /// Worker lanes per shard (`--workers`); 0 = available parallelism
+    /// split across the shards (§Perf: parallel execution).
     pub workers: usize,
 }
 
@@ -95,7 +150,35 @@ impl Default for ServerConfig {
             default_gamma_bar: 0.9988,
             scheduler: SchedulerKind::Fifo,
             admission: Admission::unlimited(),
+            shard_admission: Admission::unlimited(),
+            shards: 1,
+            placement: Placement::LeastLoaded,
+            shed_infeasible: false,
             workers: 0,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// The fleet topology this config describes (the per-client quota
+    /// travels with the shard budgets — it is enforced shard-side).
+    fn fleet_config(&self) -> FleetConfig {
+        FleetConfig {
+            shards: self.shards.max(1),
+            placement: self.placement,
+            scheduler: self.scheduler,
+            global_admission: Admission {
+                max_in_flight: self.admission.max_in_flight,
+                max_queued_nfes: self.admission.max_queued_nfes,
+                max_in_flight_per_client: None,
+            },
+            shard_admission: Admission {
+                max_in_flight: self.shard_admission.max_in_flight,
+                max_queued_nfes: self.shard_admission.max_queued_nfes,
+                max_in_flight_per_client: self.admission.max_in_flight_per_client,
+            },
+            workers: self.workers,
+            shed_infeasible: self.shed_infeasible,
         }
     }
 }
@@ -106,8 +189,8 @@ const ENVELOPE_KEYS: &[&str] = &[
     "client_id", "priority", "deadline_ms",
 ];
 
-/// Parse one protocol line into a [`Request`] (without an id — the engine
-/// thread assigns ids).
+/// Parse one protocol line into a [`Request`] (without an id — the fleet
+/// router assigns globally unique ids at placement).
 pub fn parse_request_line(
     line: &str,
     cfg: &ServerConfig,
@@ -159,7 +242,7 @@ pub fn parse_request_value(
     }
     let policy = registry.build(&spec)?;
     // reject bad policy/request combinations here (error reply) rather
-    // than letting them panic the engine thread mid-generation
+    // than letting them panic an engine thread mid-generation
     policy
         .validate(steps)
         .map_err(|e| anyhow!("policy `{}` rejected the request: {e}", policy.name()))?;
@@ -239,11 +322,60 @@ pub fn completion_to_line(c: &Completion, ms: f64, with_image: bool) -> String {
     json::to_string(&obj(fields))
 }
 
+/// Push the structured fields of one admission refusal: the `code` plus
+/// the budget numbers clients back off against.
+fn admit_error_fields(refused: &AdmitError, fields: &mut Vec<(&'static str, Value)>) {
+    match refused {
+        AdmitError::InFlightFull { in_flight, max } => {
+            fields.push(("code", json::s("queue_full")));
+            fields.push(("in_flight", json::num(*in_flight as f64)));
+            fields.push(("max_in_flight", json::num(*max as f64)));
+        }
+        AdmitError::NfeBudgetFull {
+            queued_nfes,
+            request_nfes,
+            max,
+        } => {
+            fields.push(("code", json::s("queue_full")));
+            fields.push(("queued_nfes", json::num(*queued_nfes as f64)));
+            fields.push(("request_nfes", json::num(*request_nfes as f64)));
+            fields.push(("max_queued_nfes", json::num(*max as f64)));
+        }
+        AdmitError::ClientBusy {
+            client,
+            in_flight,
+            max,
+        } => {
+            fields.push(("code", json::s("queue_full")));
+            fields.push(("client", json::s(client)));
+            fields.push(("in_flight", json::num(*in_flight as f64)));
+            fields.push(("max_in_flight_per_client", json::num(*max as f64)));
+        }
+        AdmitError::DeadlineInfeasible {
+            deadline_ms,
+            estimated_ms,
+            queued_nfes,
+        } => {
+            fields.push(("code", json::s("deadline_infeasible")));
+            fields.push(("deadline_ms", json::num(*deadline_ms as f64)));
+            fields.push(("estimated_ms", json::num(*estimated_ms as f64)));
+            fields.push(("queued_nfes", json::num(*queued_nfes as f64)));
+        }
+        AdmitError::Invalid { reason } => {
+            fields.push(("code", json::s("invalid_request")));
+            fields.push(("reason", json::s(reason)));
+        }
+    }
+}
+
 /// Encode an error as a structured protocol line (proper JSON escaping).
 /// Unknown-policy errors carry the registered names; admission shedding
-/// carries `"code": "queue_full"` plus the budget numbers so clients can
-/// back off proportionally; malformed requests refused at the door carry
-/// `"code": "invalid_request"`.
+/// carries `"code": "queue_full"` plus the budget numbers (and, from a
+/// fleet, the `"scope"` that tripped) so clients can back off
+/// proportionally; infeasible deadlines carry `"code":
+/// "deadline_infeasible"`; a draining fleet replies `"code": "draining"`
+/// and an all-shards-dead fleet `"code": "unavailable"`; malformed
+/// requests refused at the door carry `"code": "invalid_request"`.
 pub fn error_to_line(e: &anyhow::Error) -> String {
     let mut fields = vec![("error", json::s(&format!("{e:#}")))];
     if let Some(SpecError::UnknownPolicy { known, .. }) = e.downcast_ref::<SpecError>() {
@@ -252,148 +384,29 @@ pub fn error_to_line(e: &anyhow::Error) -> String {
             json::arr(known.iter().map(|n| json::s(n)).collect()),
         ));
     }
-    if let Some(refused) = e.downcast_ref::<AdmitError>() {
-        match refused {
-            AdmitError::InFlightFull { in_flight, max } => {
-                fields.push(("code", json::s("queue_full")));
-                fields.push(("in_flight", json::num(*in_flight as f64)));
-                fields.push(("max_in_flight", json::num(*max as f64)));
-            }
-            AdmitError::NfeBudgetFull {
-                queued_nfes,
-                request_nfes,
-                max,
-            } => {
-                fields.push(("code", json::s("queue_full")));
-                fields.push(("queued_nfes", json::num(*queued_nfes as f64)));
-                fields.push(("request_nfes", json::num(*request_nfes as f64)));
-                fields.push(("max_queued_nfes", json::num(*max as f64)));
-            }
-            AdmitError::ClientBusy {
-                client,
-                in_flight,
-                max,
-            } => {
-                fields.push(("code", json::s("queue_full")));
-                fields.push(("client", json::s(client)));
-                fields.push(("in_flight", json::num(*in_flight as f64)));
-                fields.push(("max_in_flight_per_client", json::num(*max as f64)));
-            }
-            AdmitError::Invalid { reason } => {
-                fields.push(("code", json::s("invalid_request")));
-                fields.push(("reason", json::s(reason)));
-            }
-        }
+    if let Some(scoped) = e.downcast_ref::<ScopedShed>() {
+        admit_error_fields(&scoped.inner, &mut fields);
+        fields.push(("scope", json::s(scoped.scope)));
+    } else if let Some(refused) = e.downcast_ref::<AdmitError>() {
+        admit_error_fields(refused, &mut fields);
+    }
+    match e.downcast_ref::<RouteError>() {
+        // graceful drain: clients should stop sending and disconnect
+        Some(RouteError::Draining) => fields.push(("code", json::s("draining"))),
+        // every shard is dead (not a drain): clients should fail over,
+        // not politely wait out a shutdown that never announced itself
+        Some(RouteError::Closed) => fields.push(("code", json::s("unavailable"))),
+        None => {}
     }
     json::to_string(&json::obj(fields))
 }
 
-struct Job {
-    req: Request,
-    want_image: bool,
-    started: Instant,
-    reply: Sender<String>,
-}
-
-/// What connection handlers send to the engine thread.
-enum Msg {
-    Job(Job),
-    /// `{"cmd": "stats"}`: reply with the engine's stats snapshot.
-    Stats(Sender<String>),
-    /// `{"cmd": "metrics"}`: reply with the Prometheus text exposition of
-    /// the telemetry registry.
-    Metrics(Sender<String>),
-}
-
-/// Engine thread: batch whatever is queued, reply per request.
-fn engine_loop<B: Backend>(mut engine: Engine<B>, rx: Receiver<Msg>) {
-    let mut next_id: u64 = 0;
-    let mut jobs: HashMap<u64, Job> = HashMap::new();
-    loop {
-        // admit new work; block when fully idle (no busy spin)
-        if engine.idle() {
-            match rx.recv() {
-                Ok(msg) => handle_msg(&mut engine, &mut jobs, &mut next_id, msg),
-                Err(_) => return, // all senders gone → shut down
-            }
-        }
-        loop {
-            match rx.try_recv() {
-                Ok(msg) => handle_msg(&mut engine, &mut jobs, &mut next_id, msg),
-                Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => {
-                    if engine.idle() {
-                        return;
-                    }
-                    break;
-                }
-            }
-        }
-        match engine.pump() {
-            Ok(completions) => {
-                for c in completions {
-                    if let Some(job) = jobs.remove(&c.id) {
-                        let ms = job.started.elapsed().as_secs_f64() * 1e3;
-                        let line = completion_to_line(&c, ms, job.want_image);
-                        let _ = job.reply.send(line);
-                    }
-                }
-            }
-            Err(e) => {
-                log::error!("engine pump failed: {e:#}");
-                let line = error_to_line(&e);
-                for (_, job) in jobs.drain() {
-                    let _ = job.reply.send(line.clone());
-                }
-                return;
-            }
-        }
-    }
-}
-
-fn handle_msg<B: Backend>(
-    engine: &mut Engine<B>,
-    jobs: &mut HashMap<u64, Job>,
-    next_id: &mut u64,
-    msg: Msg,
-) {
-    match msg {
-        Msg::Job(job) => admit(engine, jobs, next_id, job),
-        Msg::Stats(reply) => {
-            let _ = reply.send(json::to_string(&engine.stats_json()));
-        }
-        Msg::Metrics(reply) => {
-            let _ = reply.send(engine.telemetry().to_prometheus());
-        }
-    }
-}
-
-/// Assign an id and admit against the budget; a shed request gets its
-/// `queue_full` reply immediately and never touches the queue.
-fn admit<B: Backend>(
-    engine: &mut Engine<B>,
-    jobs: &mut HashMap<u64, Job>,
-    next_id: &mut u64,
-    mut job: Job,
-) {
-    job.req.id = *next_id;
-    *next_id += 1;
-    match engine.try_submit(job.req.clone()) {
-        Ok(()) => {
-            jobs.insert(job.req.id, job);
-        }
-        Err(e) => {
-            let _ = job.reply.send(error_to_line(&anyhow::Error::new(e)));
-        }
-    }
-}
-
 /// Dispatch one protocol line: a `{"cmd": ..}` control line or a
-/// generation request. Returns the reply line, or None when the engine
-/// thread is gone and the connection should close.
+/// generation request. Returns the reply line, or None when the fleet is
+/// gone mid-request and the connection should close.
 fn dispatch_line(
     line: &str,
-    tx: &Sender<Msg>,
+    fleet: &Fleet,
     cfg: &ServerConfig,
     registry: &PolicyRegistry,
 ) -> Option<String> {
@@ -402,48 +415,48 @@ fn dispatch_line(
         Err(e) => return Some(error_to_line(&anyhow!("bad request json: {e}"))),
     };
     if let Some(cmd) = v.get("cmd").and_then(Value::as_str) {
-        if cmd == "stats" {
-            let (rtx, rrx) = channel();
-            if tx.send(Msg::Stats(rtx)).is_err() {
-                return None;
-            }
-            return rrx.recv().ok();
-        }
-        if cmd == "metrics" {
-            let (rtx, rrx) = channel();
-            if tx.send(Msg::Metrics(rtx)).is_err() {
-                return None;
-            }
+        return Some(match cmd {
+            "stats" => match fleet.stats_json() {
+                Ok(v) => json::to_string(&v),
+                Err(e) => error_to_line(&e),
+            },
             // the exposition is multi-line; the connection handler's
             // closing "\n" turns the trailing newline into the blank-line
             // terminator the protocol docs promise
-            return rrx.recv().ok();
-        }
-        return Some(error_to_line(&anyhow!(
-            "unknown cmd `{cmd}` (supported: stats, metrics)"
-        )));
+            "metrics" => match fleet.metrics_prometheus() {
+                Ok(text) => text,
+                Err(e) => error_to_line(&e),
+            },
+            // graceful quiesce: stop admitting, wait for every shard to go
+            // idle, join the engine threads, then acknowledge
+            "drain" => {
+                let shards = fleet.shutdown();
+                json::to_string(&json::obj(vec![
+                    ("drained", Value::Bool(true)),
+                    ("shards", json::num(shards as f64)),
+                ]))
+            }
+            other => error_to_line(&anyhow!(
+                "unknown cmd `{other}` (supported: stats, metrics, drain)"
+            )),
+        });
     }
     match parse_request_value(&v, cfg, registry) {
-        Ok((req, want_image)) => {
-            let (rtx, rrx) = channel();
-            let job = Job {
-                req,
-                want_image,
-                started: Instant::now(),
-                reply: rtx,
-            };
-            if tx.send(Msg::Job(job)).is_err() {
-                return None;
-            }
-            rrx.recv().ok()
-        }
+        Ok((req, want_image)) => match fleet.submit(req) {
+            Ok(reply) => match reply.recv() {
+                Ok(JobReply::Done(c, ms)) => Some(completion_to_line(&c, ms, want_image)),
+                Ok(JobReply::Error(line)) => Some(line),
+                Err(_) => None, // shard died mid-request
+            },
+            Err(e) => Some(error_to_line(&e)),
+        },
         Err(e) => Some(error_to_line(&e)),
     }
 }
 
 fn handle_conn(
     stream: TcpStream,
-    tx: Sender<Msg>,
+    fleet: Arc<Fleet>,
     cfg: ServerConfig,
     registry: Arc<PolicyRegistry>,
 ) {
@@ -451,14 +464,21 @@ fn handle_conn(
         .peer_addr()
         .map(|a| a.to_string())
         .unwrap_or_default();
-    let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    // a failed clone (fd pressure) closes this connection, not the server
+    let reader = match stream.try_clone() {
+        Ok(clone) => BufReader::new(clone),
+        Err(e) => {
+            log::warn!("connection {peer}: stream clone failed: {e}");
+            return;
+        }
+    };
     let mut writer = stream;
     for line in reader.lines() {
         let Ok(line) = line else { break };
         if line.trim().is_empty() {
             continue;
         }
-        let Some(reply_line) = dispatch_line(&line, &tx, &cfg, &registry) else {
+        let Some(reply_line) = dispatch_line(&line, &fleet, &cfg, &registry) else {
             break;
         };
         if writer.write_all(reply_line.as_bytes()).is_err()
@@ -470,20 +490,57 @@ fn handle_conn(
     log::info!("connection {peer} closed");
 }
 
+/// Accept-loop errors worth surviving: interruptions, handshake races
+/// the peer already abandoned, and resource-pressure conditions that
+/// clear on their own (EMFILE/ENFILE/ENOBUFS/ENOMEM have no stable
+/// `ErrorKind`, so they are matched by raw OS errno). Anything else —
+/// an invalidated listener, a torn-down address — is permanent and must
+/// kill `serve` so a supervisor restarts it.
+fn transient_accept_error(e: &std::io::Error) -> bool {
+    use std::io::ErrorKind;
+    matches!(
+        e.kind(),
+        ErrorKind::Interrupted
+            | ErrorKind::WouldBlock
+            | ErrorKind::ConnectionAborted
+            | ErrorKind::ConnectionReset
+            | ErrorKind::TimedOut
+            | ErrorKind::OutOfMemory
+    ) || matches!(
+        e.raw_os_error(),
+        Some(libc_errno::ENFILE)
+            | Some(libc_errno::EMFILE)
+            | Some(libc_errno::ENOBUFS)
+            | Some(libc_errno::ENOMEM)
+    )
+}
+
+/// The handful of errno values the accept loop classifies (no libc crate
+/// in the offline vendor set; these are the Linux values, which is what
+/// the serving fleet deploys on — on other platforms the `ErrorKind` arm
+/// still catches the common cases).
+mod libc_errno {
+    pub const ENOMEM: i32 = 12;
+    pub const ENFILE: i32 = 23;
+    pub const EMFILE: i32 = 24;
+    pub const ENOBUFS: i32 = 105;
+}
+
 /// Serve forever with the built-in policy registry.
 pub fn serve<B, F>(factory: F, cfg: ServerConfig) -> Result<()>
 where
     B: Backend + 'static,
-    F: FnOnce() -> Result<B> + Send + 'static,
+    F: Fn() -> Result<B> + Send + Sync + 'static,
 {
     serve_with_registry(factory, cfg, Arc::new(PolicyRegistry::builtin()))
 }
 
-/// Serve forever (or until the listener errors) with a caller-supplied
-/// registry — the hook for deployments that register custom policies.
+/// Serve forever with a caller-supplied registry — the hook for
+/// deployments that register custom policies.
 ///
-/// `factory` constructs the backend *inside* the engine thread — the PJRT
-/// client is thread-affine (not `Send`), so it must be born where it runs.
+/// `factory` constructs one backend *inside each* shard's engine thread —
+/// the PJRT client is thread-affine (not `Send`), so it must be born where
+/// it runs; with `--shards N` it is called N times.
 pub fn serve_with_registry<B, F>(
     factory: F,
     cfg: ServerConfig,
@@ -491,41 +548,36 @@ pub fn serve_with_registry<B, F>(
 ) -> Result<()>
 where
     B: Backend + 'static,
-    F: FnOnce() -> Result<B> + Send + 'static,
+    F: Fn() -> Result<B> + Send + Sync + 'static,
 {
-    let (tx, rx) = channel::<Msg>();
     let listener = TcpListener::bind(&cfg.addr)?;
     eprintln!(
-        "agd serving on {} (model {}, scheduler {})",
+        "agd serving on {} (model {}, scheduler {}, {} shard(s), placement {})",
         cfg.addr,
         cfg.model,
-        cfg.scheduler.name()
+        cfg.scheduler.name(),
+        cfg.shards.max(1),
+        cfg.placement.name()
     );
-    let (scheduler, admission) = (cfg.scheduler, cfg.admission);
-    let workers = if cfg.workers == 0 {
-        crate::exec::default_workers()
-    } else {
-        cfg.workers
-    };
-    std::thread::spawn(move || {
-        let engine =
-            factory().and_then(|be| Engine::with_scheduler(be, scheduler.build(), admission));
-        match engine {
-            Ok(mut engine) => {
-                // the worker pool spawns once, here, inside the engine
-                // thread (§Perf: parallel execution)
-                engine.set_workers(workers);
-                engine_loop(engine, rx)
-            }
-            Err(e) => log::error!("backend construction failed: {e:#}"),
-        }
-    });
+    let fleet = Arc::new(Fleet::launch(move |_shard| factory(), cfg.fleet_config()));
     for stream in listener.incoming() {
-        let stream = stream?;
-        let tx = tx.clone();
+        // transient accept failures (EMFILE, aborted handshakes, EINTR)
+        // must not kill the fleet: log, back off a beat, keep accepting.
+        // A *permanent* listener failure still propagates, so supervisors
+        // see the crash instead of a healthy-looking dead service.
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) if transient_accept_error(&e) => {
+                log::warn!("accept failed (transient, continuing): {e}");
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        };
+        let fleet = fleet.clone();
         let cfg = cfg.clone();
         let registry = registry.clone();
-        std::thread::spawn(move || handle_conn(stream, tx, cfg, registry));
+        std::thread::spawn(move || handle_conn(stream, fleet, cfg, registry));
     }
     Ok(())
 }
@@ -719,6 +771,49 @@ mod tests {
         assert_eq!(v.req("queued_nfes").as_f64(), Some(90.0));
         assert_eq!(v.req("max_queued_nfes").as_f64(), Some(100.0));
         assert!(v.req("error").as_str().unwrap().contains("queue full"));
+        // an un-scoped admission error has no scope field…
+        assert!(v.get("scope").is_none());
+        // …while a fleet-scoped shed names the level that tripped
+        let e = anyhow::Error::new(ScopedShed {
+            scope: "global",
+            inner: AdmitError::InFlightFull {
+                in_flight: 8,
+                max: 8,
+            },
+        });
+        let v = json::parse(&error_to_line(&e)).unwrap();
+        assert_eq!(v.req("code").as_str(), Some("queue_full"));
+        assert_eq!(v.req("scope").as_str(), Some("global"));
+        assert_eq!(v.req("max_in_flight").as_f64(), Some(8.0));
+    }
+
+    #[test]
+    fn deadline_infeasible_errors_are_structured() {
+        let e = anyhow::Error::new(AdmitError::DeadlineInfeasible {
+            deadline_ms: 50,
+            estimated_ms: 420,
+            queued_nfes: 84,
+        });
+        let line = error_to_line(&e);
+        let v = json::parse(&line).unwrap_or_else(|err| panic!("{line}: {err}"));
+        assert_eq!(v.req("code").as_str(), Some("deadline_infeasible"));
+        assert_eq!(v.req("deadline_ms").as_f64(), Some(50.0));
+        assert_eq!(v.req("estimated_ms").as_f64(), Some(420.0));
+        assert_eq!(v.req("queued_nfes").as_f64(), Some(84.0));
+        assert!(v.req("error").as_str().unwrap().contains("deadline infeasible"));
+    }
+
+    #[test]
+    fn draining_errors_are_structured() {
+        let e = anyhow::Error::new(RouteError::Draining);
+        let v = json::parse(&error_to_line(&e)).unwrap();
+        assert_eq!(v.req("code").as_str(), Some("draining"));
+        assert!(v.req("error").as_str().unwrap().contains("draining"));
+        // a dead fleet is NOT a graceful drain — clients must fail over,
+        // so the code differs
+        let e = anyhow::Error::new(RouteError::Closed);
+        let v = json::parse(&error_to_line(&e)).unwrap();
+        assert_eq!(v.req("code").as_str(), Some("unavailable"));
     }
 
     #[test]
@@ -749,37 +844,36 @@ mod tests {
         assert!(v.req("error").as_str().unwrap().contains("invalid request"));
     }
 
-    /// Spin up a listener + engine thread on the GMM backend; returns the
-    /// address to connect to.
-    fn spawn_test_server(scheduler: SchedulerKind, admission: Admission) -> std::net::SocketAddr {
+    /// Spin up a listener + fleet on the GMM backend; returns the address
+    /// to connect to (and the fleet, so tests can inspect/drain it).
+    fn spawn_test_server(scfg: ServerConfig) -> (std::net::SocketAddr, Arc<Fleet>) {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let scfg = ServerConfig {
             addr: addr.to_string(),
             model: "gmm".into(),
-            scheduler,
-            admission,
-            ..Default::default()
-        };
-        let (tx, rx) = channel::<Msg>();
-        std::thread::spawn(move || {
-            let backend = GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05));
-            let mut engine =
-                Engine::with_scheduler(backend, scheduler.build(), admission).unwrap();
             // exercise the sharded execution path under real TCP traffic
-            engine.set_workers(2);
-            engine_loop(engine, rx)
-        });
+            workers: 2,
+            ..scfg
+        };
+        let fleet = Arc::new(Fleet::launch(
+            |_shard| Ok(GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05))),
+            scfg.fleet_config(),
+        ));
         let registry = Arc::new(PolicyRegistry::builtin());
-        std::thread::spawn(move || {
-            for stream in listener.incoming() {
-                let tx = tx.clone();
-                let scfg = scfg.clone();
-                let registry = registry.clone();
-                std::thread::spawn(move || handle_conn(stream.unwrap(), tx, scfg, registry));
-            }
-        });
-        addr
+        {
+            let fleet = fleet.clone();
+            std::thread::spawn(move || {
+                for stream in listener.incoming() {
+                    let Ok(stream) = stream else { continue };
+                    let fleet = fleet.clone();
+                    let scfg = scfg.clone();
+                    let registry = registry.clone();
+                    std::thread::spawn(move || handle_conn(stream, fleet, scfg, registry));
+                }
+            });
+        }
+        (addr, fleet)
     }
 
     /// One request/reply exchange on an open connection.
@@ -793,36 +887,14 @@ mod tests {
         json::parse(reply.trim()).unwrap_or_else(|e| panic!("{reply}: {e}"))
     }
 
-    /// Full TCP round trip against the GMM backend.
+    /// Full TCP round trip against a 2-shard GMM fleet.
     #[test]
     fn tcp_end_to_end() {
         use std::io::{BufRead, BufReader, Write};
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let scfg = ServerConfig {
-            addr: addr.to_string(),
-            model: "gmm".into(),
+        let (addr, _fleet) = spawn_test_server(ServerConfig {
+            shards: 2,
             ..Default::default()
-        };
-        let (tx, rx) = channel::<Msg>();
-        std::thread::spawn(move || {
-            let backend = GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05));
-            engine_loop(Engine::new(backend).unwrap(), rx)
         });
-        {
-            let scfg = scfg.clone();
-            let registry = Arc::new(PolicyRegistry::builtin());
-            std::thread::spawn(move || {
-                for stream in listener.incoming() {
-                    let tx = tx.clone();
-                    let scfg = scfg.clone();
-                    let registry = registry.clone();
-                    std::thread::spawn(move || {
-                        handle_conn(stream.unwrap(), tx, scfg, registry)
-                    });
-                }
-            });
-        }
         let mut conn = TcpStream::connect(addr).unwrap();
         conn.write_all(
             br#"{"prompt": "red circle", "policy": "ag", "steps": 8, "guidance": 2.0}"#,
@@ -867,24 +939,29 @@ mod tests {
         assert!(v.req("registered").as_str_vec().unwrap().len() >= 10);
     }
 
-    /// Admission over the wire: a request past the queued-NFE budget gets
-    /// a structured `queue_full` reply, nothing panics, and the connection
-    /// keeps serving admissible requests.
+    /// Admission over the wire: a request past the fleet-global queued-NFE
+    /// budget gets a structured `queue_full` reply with `"scope":
+    /// "global"`, nothing panics, and the connection keeps serving
+    /// admissible requests.
     #[test]
     fn tcp_queue_full_shed_and_recovery() {
         // budget below one 8-step CFG request (16 NFEs) but enough for a
         // 4-step one (8 NFEs)
-        let admission = Admission {
-            max_queued_nfes: Some(10),
-            ..Admission::unlimited()
-        };
-        let addr = spawn_test_server(SchedulerKind::CostAware, admission);
+        let (addr, _fleet) = spawn_test_server(ServerConfig {
+            scheduler: SchedulerKind::CostAware,
+            admission: Admission {
+                max_queued_nfes: Some(10),
+                ..Admission::unlimited()
+            },
+            ..Default::default()
+        });
         let mut conn = TcpStream::connect(addr).unwrap();
         let v = roundtrip(
             &mut conn,
             r#"{"prompt": "red circle", "policy": "cfg", "steps": 8, "guidance": 2.0}"#,
         );
         assert_eq!(v.req("code").as_str(), Some("queue_full"));
+        assert_eq!(v.req("scope").as_str(), Some("global"));
         assert_eq!(v.req("max_queued_nfes").as_f64(), Some(10.0));
         assert_eq!(v.req("request_nfes").as_f64(), Some(16.0));
         assert!(v.req("error").as_str().unwrap().contains("queue full"));
@@ -898,34 +975,41 @@ mod tests {
 
     /// Per-client quota over the wire: the same client is shed past its
     /// in-flight quota with a `queue_full` line naming the per-client
-    /// limit. (Requests on this synchronous test connection complete
-    /// before the next is sent, so the quota is exercised with limit 0 —
-    /// the shed path — while other clients stay unaffected.)
+    /// limit. The quota is enforced shard-side, so the scope says so.
+    /// (Requests on this synchronous test connection complete before the
+    /// next is sent, so the quota is exercised with limit 0 — the shed
+    /// path — while other clients stay unaffected.)
     #[test]
     fn tcp_per_client_quota_sheds() {
-        let admission = Admission {
-            max_in_flight_per_client: Some(0),
-            ..Admission::unlimited()
-        };
-        let addr = spawn_test_server(SchedulerKind::Fifo, admission);
+        let (addr, _fleet) = spawn_test_server(ServerConfig {
+            admission: Admission {
+                max_in_flight_per_client: Some(0),
+                ..Admission::unlimited()
+            },
+            ..Default::default()
+        });
         let mut conn = TcpStream::connect(addr).unwrap();
         let v = roundtrip(
             &mut conn,
             r#"{"prompt": "red circle", "policy": "cfg", "steps": 4, "client_id": "greedy"}"#,
         );
         assert_eq!(v.req("code").as_str(), Some("queue_full"));
+        assert_eq!(v.req("scope").as_str(), Some("shard"));
         assert_eq!(v.req("client").as_str(), Some("greedy"));
         assert_eq!(v.req("max_in_flight_per_client").as_f64(), Some(0.0));
         assert!(v.req("error").as_str().unwrap().contains("per-client limit"));
     }
 
     /// `{"cmd": "metrics"}` returns Prometheus exposition text terminated
-    /// by a blank line, generated from the same registry as the JSON
-    /// stats dump.
+    /// by a blank line, generated from the merged fleet registry — fleet
+    /// totals plus `shard=`-labelled series.
     #[test]
     fn tcp_metrics_command_returns_prometheus_text() {
         use std::io::{BufRead, BufReader, Write};
-        let addr = spawn_test_server(SchedulerKind::Fifo, Admission::unlimited());
+        let (addr, _fleet) = spawn_test_server(ServerConfig {
+            shards: 2,
+            ..Default::default()
+        });
         let mut conn = TcpStream::connect(addr).unwrap();
         let v = roundtrip(
             &mut conn,
@@ -948,10 +1032,17 @@ mod tests {
             exposition.contains("# TYPE nfes_total counter"),
             "{exposition}"
         );
+        // fleet total (unlabelled) and the shard-labelled series both
+        // carry the request's NFEs (least-loaded put it on one shard)
         assert!(
             exposition.contains(&format!("nfes_total{{policy=\"ag\"}} {nfes}")),
             "{exposition}"
         );
+        assert!(
+            exposition.contains(&format!("nfes_total{{policy=\"ag\",shard=\"0\"}} {nfes}")),
+            "{exposition}"
+        );
+        assert!(exposition.contains("fleet_shards 2"), "{exposition}");
         assert!(exposition.contains("# TYPE active_requests gauge"), "{exposition}");
         assert!(
             exposition.contains("# TYPE queue_wait_ms histogram"),
@@ -964,11 +1055,16 @@ mod tests {
         assert!(stats.get("scheduler").is_some());
     }
 
-    /// `{"cmd": "stats"}` dumps the scheduler name and the telemetry
-    /// registry, with per-policy and per-client labels.
+    /// `{"cmd": "stats"}` dumps the fleet topology, totals, per-shard
+    /// breakdown, and the merged telemetry registry with per-policy and
+    /// per-client labels.
     #[test]
     fn tcp_stats_command_dumps_telemetry() {
-        let addr = spawn_test_server(SchedulerKind::FairShare, Admission::unlimited());
+        let (addr, _fleet) = spawn_test_server(ServerConfig {
+            scheduler: SchedulerKind::FairShare,
+            shards: 2,
+            ..Default::default()
+        });
         let mut conn = TcpStream::connect(addr).unwrap();
         let v = roundtrip(
             &mut conn,
@@ -978,7 +1074,11 @@ mod tests {
         let nfes = v.req("nfes").as_f64().unwrap();
         let stats = roundtrip(&mut conn, r#"{"cmd": "stats"}"#);
         assert_eq!(stats.req("scheduler").as_str(), Some("fair-share"));
+        assert_eq!(stats.req("shards").as_f64(), Some(2.0));
+        assert_eq!(stats.req("placement").as_str(), Some("least-loaded"));
+        assert_eq!(stats.req("draining").as_bool(), Some(false));
         assert_eq!(stats.req("active").as_f64(), Some(0.0));
+        assert_eq!(stats.req("per_shard").as_arr().unwrap().len(), 2);
         let counters = stats.req("telemetry").req("counters");
         assert_eq!(counters.req("nfes_total{policy=ag}").as_f64(), Some(nfes));
         assert_eq!(
@@ -992,5 +1092,36 @@ mod tests {
         assert!(v.req("error").as_str().unwrap().contains("reboot"));
         let stats = roundtrip(&mut conn, r#"{"cmd": "stats"}"#);
         assert!(stats.get("scheduler").is_some());
+    }
+
+    /// `{"cmd": "drain"}`: in-flight work completes, every engine thread
+    /// is joined, the ack reports the shard count, and subsequent requests
+    /// are refused with `"code": "draining"`.
+    #[test]
+    fn tcp_drain_command_quiesces_the_fleet() {
+        let (addr, fleet) = spawn_test_server(ServerConfig {
+            shards: 2,
+            ..Default::default()
+        });
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let v = roundtrip(
+            &mut conn,
+            r#"{"prompt": "red circle", "policy": "cfg", "steps": 4, "guidance": 2.0}"#,
+        );
+        assert!(v.get("error").is_none(), "{v:?}");
+        let v = roundtrip(&mut conn, r#"{"cmd": "drain"}"#);
+        assert_eq!(v.req("drained").as_bool(), Some(true));
+        assert_eq!(v.req("shards").as_f64(), Some(2.0));
+        assert!(fleet.is_draining());
+        // the same connection gets a structured refusal for new work
+        let v = roundtrip(
+            &mut conn,
+            r#"{"prompt": "red circle", "policy": "cfg", "steps": 4}"#,
+        );
+        assert_eq!(v.req("code").as_str(), Some("draining"));
+        assert!(v.req("error").as_str().unwrap().contains("draining"));
+        // drain is idempotent over the wire too
+        let v = roundtrip(&mut conn, r#"{"cmd": "drain"}"#);
+        assert_eq!(v.req("drained").as_bool(), Some(true));
     }
 }

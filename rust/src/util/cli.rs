@@ -89,6 +89,27 @@ impl Args {
     pub fn f32(&self, name: &str, default: f32) -> f32 {
         self.f64(name, default as f64) as f32
     }
+
+    /// Option constrained to a fixed value set (`--placement`,
+    /// `--scheduler`, …): returns `default` when absent, or an error
+    /// naming the valid choices — a typo'd enum flag should fail at
+    /// startup with the menu, not deep inside a parse.
+    pub fn choice<'a>(
+        &'a self,
+        name: &str,
+        default: &'a str,
+        options: &[&str],
+    ) -> Result<&'a str, String> {
+        let v = self.get_or(name, default);
+        if options.contains(&v) {
+            Ok(v)
+        } else {
+            Err(format!(
+                "--{name}: unknown value `{v}` (expected {})",
+                options.join("|")
+            ))
+        }
+    }
 }
 
 #[cfg(test)]
@@ -142,5 +163,17 @@ mod tests {
     #[should_panic(expected = "expected integer")]
     fn bad_integer_panics() {
         args("--n abc").usize("n", 0);
+    }
+
+    #[test]
+    fn choice_validates_against_the_menu() {
+        let opts = ["least-loaded", "round-robin", "client-hash"];
+        let a = args("--placement round-robin");
+        assert_eq!(a.choice("placement", "least-loaded", &opts), Ok("round-robin"));
+        // absent → default (the default itself is trusted)
+        assert_eq!(args("").choice("placement", "least-loaded", &opts), Ok("least-loaded"));
+        // a typo fails with the full menu
+        let err = args("--placement sticky").choice("placement", "least-loaded", &opts).unwrap_err();
+        assert!(err.contains("sticky") && err.contains("round-robin"), "{err}");
     }
 }

@@ -1,0 +1,371 @@
+//! Engine-fleet integration tests on the analytic GMM backend — no
+//! artifacts required. These pin the fleet's contract:
+//!
+//! * **placement never changes results** — per-request completions are
+//!   byte-identical across `--shards 1/2/4` × every placement × the
+//!   fifo and cost-aware schedulers, and all of them match the golden
+//!   *unfused reference sampler* (the same seed-era primitives
+//!   `sched_integration.rs` pins), so the whole fleet is anchored to
+//!   first-principles math, not just to itself;
+//! * **two-level admission** — the router's global budget trips before
+//!   any shard budget does, and the shed line says which scope refused;
+//! * **deadline-aware shedding** — an infeasible `deadline_ms` is refused
+//!   with `deadline_infeasible` once a service rate has been observed,
+//!   and counted in `deadline_shed_total{policy=}`;
+//! * **drain** — in-flight work completes, threads join, later submits
+//!   get a `draining` error.
+
+use std::sync::mpsc::Receiver;
+
+use adaptive_guidance::backend::GmmBackend;
+use adaptive_guidance::coordinator::policy::{ag, cfg, PolicyRef};
+use adaptive_guidance::coordinator::request::{Completion, Request};
+use adaptive_guidance::coordinator::solver;
+use adaptive_guidance::fleet::{Fleet, FleetConfig, JobReply, Placement, ScopedShed};
+use adaptive_guidance::sched::{Admission, AdmitError, SchedulerKind};
+use adaptive_guidance::sim::gmm::Gmm;
+use adaptive_guidance::tensor::Tensor;
+use adaptive_guidance::util::json;
+use adaptive_guidance::util::rng::Rng;
+
+fn gmm() -> Gmm {
+    Gmm::axes(12, 6, 3.0, 0.05)
+}
+
+fn launch(shards: usize, placement: Placement, kind: SchedulerKind) -> Fleet {
+    Fleet::launch(
+        move |_shard| Ok(GmmBackend::new(gmm())),
+        FleetConfig {
+            shards,
+            placement,
+            scheduler: kind,
+            ..FleetConfig::default()
+        },
+    )
+}
+
+/// The shared workload: 8 mixed cfg/ag requests with per-request seeds.
+/// Ids are fleet-assigned in submission order, so request `i` always has
+/// id `i` on a fresh fleet.
+fn workload(steps: usize) -> Vec<Request> {
+    (0..8u64)
+        .map(|i| {
+            let policy: PolicyRef = if i % 2 == 0 { cfg(2.0) } else { ag(2.0, 0.99) };
+            let mut r = Request::new(
+                0,
+                "gmm",
+                vec![1 + (i % 6) as i32, 0, 0, 0],
+                7000 + i,
+                steps,
+                policy,
+            );
+            // distinct clients so client-hash placement actually spreads
+            r.client_id = Some(std::sync::Arc::from(format!("client-{}", i % 4).as_str()));
+            r
+        })
+        .collect()
+}
+
+/// Submit a workload and collect its completions in id order.
+fn run_fleet(fleet: &Fleet, reqs: Vec<Request>) -> Vec<Completion> {
+    let rxs: Vec<Receiver<JobReply>> = reqs
+        .into_iter()
+        .map(|r| fleet.submit(r).expect("admitted"))
+        .collect();
+    let mut out: Vec<Completion> = rxs
+        .into_iter()
+        .map(|rx| match rx.recv().expect("shard replied") {
+            JobReply::Done(c, _ms) => *c,
+            JobReply::Error(line) => panic!("unexpected error reply: {line}"),
+        })
+        .collect();
+    out.sort_by_key(|c| c.id);
+    out
+}
+
+/// Golden reference: one request's trajectory with the seed-era unfused
+/// primitives — per-item `Gmm::eps` (allocating), separate
+/// `Tensor::cfg_combine` + `Tensor::cosine` passes, out-of-place
+/// `solver::apply_step` — replicating the engine's exact arithmetic
+/// (including the f64→f32→f64 round-trip of the eval time). Identical to
+/// the pin in `sched_integration.rs`; duplicated here on purpose so the
+/// fleet anchors to first principles even if that file changes.
+fn reference_sample(
+    gmm: &Gmm,
+    comp: usize,
+    seed: u64,
+    steps: usize,
+    s: f32,
+    gamma_bar: Option<f64>,
+) -> (Vec<f32>, Vec<f64>) {
+    let dim = gmm.dim;
+    let mut x = Rng::new(seed).normal_vec(dim);
+    let mut x0_prev = vec![0.0f32; dim];
+    let ts = solver::timesteps(steps);
+    let mut truncated = false;
+    let mut gammas = Vec::new();
+    for i in 0..steps {
+        let t_r = if i > 0 { Some(ts[i - 1]) } else { None };
+        let c = solver::fold_coefs(ts[i], ts[i + 1], t_r);
+        let t_eval = ts[i] as f32 as f64;
+        let eps = if truncated {
+            gammas.push(f64::NAN);
+            gmm.eps(&x, t_eval, Some(comp))
+        } else {
+            let ec = Tensor::new(vec![dim], gmm.eps(&x, t_eval, Some(comp)));
+            let eu = Tensor::new(vec![dim], gmm.eps(&x, t_eval, None));
+            let (jx, je) = (c.j_x as f32, c.j_eps as f32);
+            let xa: Vec<f32> = (0..dim).map(|k| jx * x[k] + je * ec.data[k]).collect();
+            let xb: Vec<f32> = (0..dim).map(|k| jx * x[k] + je * eu.data[k]).collect();
+            let gamma = Tensor::new(vec![dim], xa).cosine(&Tensor::new(vec![dim], xb));
+            gammas.push(gamma);
+            if let Some(bar) = gamma_bar {
+                if gamma >= bar {
+                    truncated = true;
+                }
+            }
+            Tensor::cfg_combine(&ec, &eu, s).data
+        };
+        let (xn, x0) = solver::apply_step(&x, &eps, &x0_prev, &c);
+        x = xn;
+        x0_prev = x0;
+    }
+    (x0_prev, gammas)
+}
+
+/// The tentpole pin: per-request completions are byte-identical across
+/// shards 1/2/4 × all three placements × fifo and cost-aware, all
+/// anchored to the golden unfused sampler, with the same total work
+/// executed by every topology.
+#[test]
+fn shard_counts_and_placements_are_byte_identical() {
+    let steps = 9;
+    let g = gmm();
+    for kind in [SchedulerKind::Fifo, SchedulerKind::CostAware] {
+        for placement in Placement::ALL {
+            let mut base_items: Option<f64> = None;
+            for shards in [1usize, 2, 4] {
+                let ctx = format!(
+                    "{} / {} / shards={shards}",
+                    kind.name(),
+                    placement.name()
+                );
+                let fleet = launch(shards, placement, kind);
+                let out = run_fleet(&fleet, workload(steps));
+                assert_eq!(out.len(), 8, "{ctx}");
+                for c in &out {
+                    let comp = (c.id % 6) as usize;
+                    let gamma_bar = if c.id % 2 == 1 { Some(0.99) } else { None };
+                    let (image, gammas) =
+                        reference_sample(&g, comp, 7000 + c.id, steps, 2.0, gamma_bar);
+                    assert_eq!(
+                        c.image, image,
+                        "{ctx}: request {} diverged from the reference sampler",
+                        c.id
+                    );
+                    assert_eq!(c.gammas.len(), gammas.len(), "{ctx}");
+                    for (i, (a, b)) in c.gammas.iter().zip(&gammas).enumerate() {
+                        assert!(
+                            (a.is_nan() && b.is_nan()) || a == b,
+                            "{ctx}: request {} gamma[{i}]: fleet {a} vs reference {b}",
+                            c.id
+                        );
+                    }
+                }
+                // AG requests must actually exercise truncation, or the
+                // test lost its teeth
+                assert!(
+                    out.iter().any(|c| c.truncated_at.is_some()),
+                    "{ctx}: no AG truncation"
+                );
+                // work conservation: the same total items regardless of
+                // how placement spread them
+                let stats = fleet.stats_json().unwrap();
+                let items = stats.req("items").as_f64().unwrap();
+                match base_items {
+                    None => base_items = Some(items),
+                    Some(b) => assert_eq!(items, b, "{ctx}: total work changed"),
+                }
+                // every live shard's breakdown sums to the fleet total
+                let per: f64 = stats
+                    .req("per_shard")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|s| s.req("items").as_f64().unwrap())
+                    .sum();
+                assert_eq!(per, items, "{ctx}: per-shard items disagree with total");
+                fleet.shutdown();
+            }
+        }
+    }
+}
+
+/// Two-level admission: the router's global NFE budget trips before any
+/// per-shard budget would, and the error names the global scope with the
+/// budget numbers. The shard budgets would have admitted the request —
+/// shard 1 is empty — which is exactly what makes the scope meaningful.
+#[test]
+fn global_budget_trips_before_shard_budgets() {
+    // one 50k-step CFG request costs 100_000 NFEs — big enough that it
+    // cannot complete between two back-to-back submits
+    let fleet = Fleet::launch(
+        |_shard| Ok(GmmBackend::new(gmm())),
+        FleetConfig {
+            shards: 2,
+            placement: Placement::LeastLoaded,
+            scheduler: SchedulerKind::Fifo,
+            global_admission: Admission {
+                max_queued_nfes: Some(150_000),
+                ..Admission::unlimited()
+            },
+            shard_admission: Admission {
+                max_queued_nfes: Some(120_000),
+                ..Admission::unlimited()
+            },
+            ..FleetConfig::default()
+        },
+    );
+    let big = |seed: u64| Request::new(0, "gmm", vec![1, 0, 0, 0], seed, 50_000, cfg(2.0));
+    let rx = fleet.submit(big(1)).expect("first big request admits");
+    let err = fleet.submit(big(2)).expect_err("second must trip the global budget");
+    let shed = err
+        .downcast_ref::<ScopedShed>()
+        .unwrap_or_else(|| panic!("expected a scoped shed, got: {err}"));
+    assert_eq!(shed.scope, "global");
+    match &shed.inner {
+        AdmitError::NfeBudgetFull {
+            queued_nfes,
+            request_nfes,
+            max,
+        } => {
+            assert_eq!(*max, 150_000);
+            assert_eq!(*request_nfes, 100_000);
+            assert!(*queued_nfes > 50_000, "{queued_nfes}");
+        }
+        other => panic!("expected NfeBudgetFull, got {other}"),
+    }
+    // the in-flight request is unaffected and completes
+    match rx.recv().unwrap() {
+        JobReply::Done(c, _) => assert_eq!(c.nfes, 100_000),
+        JobReply::Error(line) => panic!("{line}"),
+    }
+    fleet.shutdown();
+}
+
+/// A per-shard budget shed comes back over the job's reply channel as a
+/// structured line with `"scope": "shard"`.
+#[test]
+fn shard_budget_sheds_with_shard_scope() {
+    let fleet = Fleet::launch(
+        |_shard| Ok(GmmBackend::new(gmm())),
+        FleetConfig {
+            shards: 1,
+            shard_admission: Admission {
+                max_queued_nfes: Some(10),
+                ..Admission::unlimited()
+            },
+            ..FleetConfig::default()
+        },
+    );
+    // cost 16 > 10: placed by the router (global is unlimited), refused
+    // by the shard engine
+    let rx = fleet
+        .submit(Request::new(0, "gmm", vec![1, 0, 0, 0], 5, 8, cfg(2.0)))
+        .expect("router places it");
+    let line = match rx.recv().unwrap() {
+        JobReply::Error(line) => line,
+        JobReply::Done(..) => panic!("must be shed by the shard budget"),
+    };
+    let v = json::parse(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+    assert_eq!(v.req("code").as_str(), Some("queue_full"));
+    assert_eq!(v.req("scope").as_str(), Some("shard"));
+    assert_eq!(v.req("max_queued_nfes").as_f64(), Some(10.0));
+    // an in-budget request still completes on the same fleet
+    let rx = fleet
+        .submit(Request::new(0, "gmm", vec![2, 0, 0, 0], 6, 4, cfg(2.0)))
+        .unwrap();
+    match rx.recv().unwrap() {
+        JobReply::Done(c, _) => assert_eq!(c.nfes, 8),
+        JobReply::Error(line) => panic!("{line}"),
+    }
+    fleet.shutdown();
+}
+
+/// Deadline-aware shedding: once a shard has observed a service rate, a
+/// request whose deadline cannot cover the backlog is refused with
+/// `deadline_infeasible` and counted per policy; feasible deadlines and
+/// deadline-free requests still pass.
+#[test]
+fn infeasible_deadlines_are_shed_at_admission() {
+    let fleet = Fleet::launch(
+        |_shard| Ok(GmmBackend::new(gmm())),
+        FleetConfig {
+            shards: 1,
+            shed_infeasible: true,
+            ..FleetConfig::default()
+        },
+    );
+    // cold start: even a zero deadline is admitted (no observed rate yet)
+    let mut cold = Request::new(0, "gmm", vec![1, 0, 0, 0], 11, 2000, cfg(2.0));
+    cold.deadline_ms = Some(0);
+    let rx = fleet.submit(cold).unwrap();
+    match rx.recv().unwrap() {
+        JobReply::Done(c, _) => assert_eq!(c.nfes, 4000),
+        JobReply::Error(line) => panic!("cold start must admit: {line}"),
+    }
+    // the warmup measured a per-NFE rate; a 4000-NFE request due "now"
+    // is infeasible by construction
+    let mut doomed = Request::new(0, "gmm", vec![2, 0, 0, 0], 12, 2000, cfg(2.0));
+    doomed.deadline_ms = Some(0);
+    let rx = fleet.submit(doomed).unwrap();
+    let line = match rx.recv().unwrap() {
+        JobReply::Error(line) => line,
+        JobReply::Done(..) => panic!("infeasible deadline must be shed"),
+    };
+    let v = json::parse(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+    assert_eq!(v.req("code").as_str(), Some("deadline_infeasible"));
+    assert_eq!(v.req("deadline_ms").as_f64(), Some(0.0));
+    assert!(v.req("estimated_ms").as_f64().unwrap() >= 1.0, "{line}");
+    assert_eq!(v.req("queued_nfes").as_f64(), Some(4000.0));
+    // a generous deadline passes, as does no deadline at all
+    let mut fine = Request::new(0, "gmm", vec![3, 0, 0, 0], 13, 8, cfg(2.0));
+    fine.deadline_ms = Some(3_600_000);
+    let rx = fleet.submit(fine).unwrap();
+    assert!(matches!(rx.recv().unwrap(), JobReply::Done(..)));
+    let rx = fleet
+        .submit(Request::new(0, "gmm", vec![4, 0, 0, 0], 14, 8, cfg(2.0)))
+        .unwrap();
+    assert!(matches!(rx.recv().unwrap(), JobReply::Done(..)));
+    // the shed is visible in the merged telemetry
+    let stats = fleet.stats_json().unwrap();
+    let counters = stats.req("telemetry").req("counters");
+    assert_eq!(
+        counters.req("deadline_shed_total{policy=cfg}").as_f64(),
+        Some(1.0)
+    );
+    fleet.shutdown();
+}
+
+/// Drain during in-flight work: the ack arrives only after the work
+/// completed, nothing is dropped, and the fleet refuses new requests with
+/// a `draining` route error afterwards.
+#[test]
+fn drain_completes_in_flight_work_and_refuses_new() {
+    let fleet = launch(2, Placement::RoundRobin, SchedulerKind::Fifo);
+    let rxs: Vec<_> = workload(12)
+        .into_iter()
+        .map(|r| fleet.submit(r).unwrap())
+        .collect();
+    assert_eq!(fleet.shutdown(), 2);
+    for rx in rxs {
+        match rx.recv().expect("drained fleets answer every in-flight job") {
+            JobReply::Done(c, _) => assert!(c.nfes > 0),
+            JobReply::Error(line) => panic!("{line}"),
+        }
+    }
+    let err = fleet
+        .submit(Request::new(0, "gmm", vec![1, 0, 0, 0], 1, 4, cfg(2.0)))
+        .unwrap_err();
+    assert!(err.to_string().contains("draining"), "{err}");
+}

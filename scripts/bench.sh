@@ -7,9 +7,12 @@
 #   scripts/bench.sh out.json        -> custom output path
 #   BENCH_ITERS=50 scripts/bench.sh  -> more timed iterations per row
 #
-# The dump includes the packed-vs-legacy engine-loop pair and the
+# The dump includes the packed-vs-legacy engine-loop pair, the
 # workers=1/2/4/8 scaling sweep (expect >=2x per-NFE throughput at 4
-# workers on a 4-core host; results are bit-identical at every width).
+# workers on a 4-core host; results are bit-identical at every width),
+# and the fleet shard-scaling sweep (shards=1/2/4 virtual-time p50/p99
+# from sched_tail_latency, merged under "sched_shard_sweep" — expect p99
+# to fall as shards grow at fixed arrival rate).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -17,4 +20,5 @@ out="${1:-BENCH_perf.json}"
 iters="${BENCH_ITERS:-30}"
 
 cargo bench --bench perf_microbench -- --iters "$iters" --out "$out"
+cargo bench --bench sched_tail_latency -- --shards-sweep 1,2,4 --merge-into "$out"
 echo "bench: wrote $out"

@@ -13,6 +13,10 @@ cargo build --release
 # otherwise be the only thing building --all-targets)
 cargo build --release --benches
 cargo test -q
+# the fleet invariant (byte-identical results across shard counts and
+# placements) is the scale-out safety net — run its suite explicitly so a
+# filtered/partial `cargo test` configuration can never silently skip it
+cargo test -q --test fleet_integration
 
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings
