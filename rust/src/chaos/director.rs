@@ -1,0 +1,412 @@
+//! The scripted chaos director (§Robustness): `scenarios/*.txt` →
+//! faults injected against a live listener + fleet.
+//!
+//! A scenario file is one op per line (`#` comments and blank lines
+//! skipped). Connection names are arbitrary identifiers; a connection is
+//! created by `connect` and drops its socket on `disconnect` (or at the
+//! end of the run):
+//!
+//! ```text
+//! connect a                  open TCP connection `a` to the server
+//! send a {"prompt": ...}     write one protocol line (rest of line verbatim)
+//! expect-ok a                read a's next reply; fail if it has `error`
+//! expect-code a queue_full   read a's next reply; fail unless code matches
+//! expect-closed a            fail unless the server closed a's socket
+//! send-raw a bytes…          raw bytes, no newline (\n \r \t \\ \xNN escapes)
+//! send-raw-repeat a 61 8192  one byte (hex) repeated N times, no newline
+//! slowloris a                one byte of an unfinished line, no newline
+//! disconnect a               drop a's socket mid-whatever
+//! kill-shard 0               inject a crash into shard 0 ([`Fleet::kill_shard`])
+//! drain                      fleet drain (graceful quiesce) from inside
+//! sleep 25                   wall-clock pause, ms
+//! ```
+//!
+//! `expect-ok` replies are collected into [`Director::replies`] with the
+//! request line that produced them, so the harness can assert survivor
+//! completions byte-identical to a clean single-shard run
+//! (`rust/tests/chaos_integration.rs`). Raw/slowloris writes ignore
+//! broken-pipe errors — the scenario may legitimately race a server that
+//! already replied and closed.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::fleet::Fleet;
+use crate::util::json::{self, Value};
+
+/// One scenario operation (one line of a `scenarios/*.txt` file).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    Connect(String),
+    Send { conn: String, line: String },
+    ExpectOk(String),
+    ExpectCode { conn: String, code: String },
+    ExpectClosed(String),
+    SendRaw { conn: String, bytes: Vec<u8> },
+    SendRawRepeat { conn: String, byte: u8, count: usize },
+    Slowloris(String),
+    Disconnect(String),
+    KillShard(usize),
+    Drain,
+    Sleep(u64),
+}
+
+/// Decode the `send-raw` escape set: `\n`, `\r`, `\t`, `\\`, `\xNN`.
+fn unescape(text: &str) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(text.len());
+    let mut chars = text.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            let mut buf = [0u8; 4];
+            out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push(b'\n'),
+            Some('r') => out.push(b'\r'),
+            Some('t') => out.push(b'\t'),
+            Some('\\') => out.push(b'\\'),
+            Some('x') => {
+                let hi = chars.next().ok_or_else(|| anyhow!("truncated \\x escape"))?;
+                let lo = chars.next().ok_or_else(|| anyhow!("truncated \\x escape"))?;
+                let byte = u8::from_str_radix(&format!("{hi}{lo}"), 16)
+                    .map_err(|_| anyhow!("bad \\x escape `\\x{hi}{lo}`"))?;
+                out.push(byte);
+            }
+            other => bail!("bad escape `\\{}`", other.map(String::from).unwrap_or_default()),
+        }
+    }
+    Ok(out)
+}
+
+/// Parse a scenario script. Errors name the offending 1-based line.
+pub fn parse_script(text: &str) -> Result<Vec<Op>> {
+    let mut ops = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let op = parse_op(line).map_err(|e| anyhow!("scenario line {}: {e}", idx + 1))?;
+        ops.push(op);
+    }
+    Ok(ops)
+}
+
+fn parse_op(line: &str) -> Result<Op> {
+    let (verb, rest) = line.split_once(char::is_whitespace).unwrap_or((line, ""));
+    let rest = rest.trim();
+    let one_word = |what: &str| -> Result<String> {
+        if rest.is_empty() || rest.contains(char::is_whitespace) {
+            bail!("`{verb}` takes exactly one {what}");
+        }
+        Ok(rest.to_owned())
+    };
+    Ok(match verb {
+        "connect" => Op::Connect(one_word("connection name")?),
+        "send" => {
+            let (conn, payload) = rest
+                .split_once(char::is_whitespace)
+                .ok_or_else(|| anyhow!("`send` needs a connection and a payload"))?;
+            Op::Send {
+                conn: conn.to_owned(),
+                line: payload.trim().to_owned(),
+            }
+        }
+        "expect-ok" => Op::ExpectOk(one_word("connection name")?),
+        "expect-code" => {
+            let (conn, code) = rest
+                .split_once(char::is_whitespace)
+                .ok_or_else(|| anyhow!("`expect-code` needs a connection and a code"))?;
+            Op::ExpectCode {
+                conn: conn.to_owned(),
+                code: code.trim().to_owned(),
+            }
+        }
+        "expect-closed" => Op::ExpectClosed(one_word("connection name")?),
+        "send-raw" => {
+            let (conn, payload) = rest
+                .split_once(char::is_whitespace)
+                .ok_or_else(|| anyhow!("`send-raw` needs a connection and bytes"))?;
+            Op::SendRaw {
+                conn: conn.to_owned(),
+                bytes: unescape(payload.trim())?,
+            }
+        }
+        "send-raw-repeat" => {
+            let parts: Vec<&str> = rest.split_whitespace().collect();
+            let [conn, byte, count] = parts.as_slice() else {
+                bail!("`send-raw-repeat` needs: conn byte-hex count");
+            };
+            Op::SendRawRepeat {
+                conn: (*conn).to_owned(),
+                byte: u8::from_str_radix(byte, 16)
+                    .map_err(|_| anyhow!("bad hex byte `{byte}`"))?,
+                count: count.parse().map_err(|_| anyhow!("bad count `{count}`"))?,
+            }
+        }
+        "slowloris" => Op::Slowloris(one_word("connection name")?),
+        "disconnect" => Op::Disconnect(one_word("connection name")?),
+        "kill-shard" => Op::KillShard(
+            one_word("shard index")?
+                .parse()
+                .map_err(|_| anyhow!("bad shard index `{rest}`"))?,
+        ),
+        "drain" => {
+            if !rest.is_empty() {
+                bail!("`drain` takes no arguments");
+            }
+            Op::Drain
+        }
+        "sleep" => Op::Sleep(
+            one_word("millisecond count")?
+                .parse()
+                .map_err(|_| anyhow!("bad sleep duration `{rest}`"))?,
+        ),
+        other => bail!("unknown op `{other}`"),
+    })
+}
+
+/// An `expect-ok` reply paired with the request line that produced it.
+#[derive(Debug, Clone)]
+pub struct Reply {
+    pub conn: String,
+    pub request_line: String,
+    pub value: Value,
+}
+
+struct Conn {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+    /// Request lines sent but not yet consumed by an expect op, FIFO —
+    /// the line protocol answers in order per connection.
+    pending: VecDeque<String>,
+}
+
+/// Interprets a parsed scenario against a live server + its fleet handle.
+pub struct Director<'a> {
+    fleet: &'a Fleet,
+    addr: SocketAddr,
+    timeout: Duration,
+    conns: HashMap<String, Conn>,
+    /// Every `expect-ok` reply, for golden comparison after the run.
+    pub replies: Vec<Reply>,
+}
+
+impl<'a> Director<'a> {
+    pub fn new(fleet: &'a Fleet, addr: SocketAddr) -> Director<'a> {
+        Director {
+            fleet,
+            addr,
+            // generous: expect ops wait on real generation work
+            timeout: Duration::from_secs(10),
+            conns: HashMap::new(),
+            replies: Vec::new(),
+        }
+    }
+
+    /// Run a scenario script start to finish; the first failed op aborts
+    /// with its line's context.
+    pub fn run(&mut self, script: &str) -> Result<()> {
+        for op in parse_script(script)? {
+            self.step(&op).with_context(|| format!("executing {op:?}"))?;
+        }
+        Ok(())
+    }
+
+    fn conn(&mut self, name: &str) -> Result<&mut Conn> {
+        self.conns
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("connection `{name}` is not open"))
+    }
+
+    /// Write raw bytes, tolerating a peer that already closed: chaos
+    /// scenarios legitimately race the server's hang-up (e.g. an
+    /// oversized frame answered and closed mid-send).
+    fn write_raw(&mut self, name: &str, bytes: &[u8]) -> Result<()> {
+        let conn = self.conn(name)?;
+        match conn.writer.write_all(bytes).and_then(|()| conn.writer.flush()) {
+            Ok(()) => Ok(()),
+            Err(e) if matches!(
+                e.kind(),
+                ErrorKind::BrokenPipe | ErrorKind::ConnectionReset | ErrorKind::ConnectionAborted
+            ) =>
+            {
+                Ok(())
+            }
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    fn read_reply(&mut self, name: &str) -> Result<Value> {
+        let conn = self.conn(name)?;
+        let mut line = String::new();
+        let n = conn
+            .reader
+            .read_line(&mut line)
+            .with_context(|| format!("reading reply on `{name}`"))?;
+        anyhow::ensure!(n > 0, "server closed `{name}` instead of replying");
+        json::parse(line.trim()).map_err(|e| anyhow!("reply on `{name}` is not JSON: {line:?} ({e})"))
+    }
+
+    fn step(&mut self, op: &Op) -> Result<()> {
+        match op {
+            Op::Connect(name) => {
+                let stream = TcpStream::connect_timeout(&self.addr, self.timeout)
+                    .with_context(|| format!("connecting `{name}`"))?;
+                stream.set_read_timeout(Some(self.timeout)).ok();
+                let reader = BufReader::new(stream.try_clone().context("clone stream")?);
+                self.conns.insert(
+                    name.clone(),
+                    Conn {
+                        writer: stream,
+                        reader,
+                        pending: VecDeque::new(),
+                    },
+                );
+            }
+            Op::Send { conn: name, line } => {
+                let payload = format!("{line}\n");
+                self.write_raw(name, payload.as_bytes())?;
+                self.conn(name)?.pending.push_back(line.clone());
+            }
+            Op::ExpectOk(name) => {
+                let v = self.read_reply(name)?;
+                anyhow::ensure!(
+                    v.get("error").is_none(),
+                    "expected a completion on `{name}`, got {}",
+                    json::to_string(&v)
+                );
+                let request_line = self
+                    .conn(name)?
+                    .pending
+                    .pop_front()
+                    .unwrap_or_default();
+                self.replies.push(Reply {
+                    conn: name.clone(),
+                    request_line,
+                    value: v,
+                });
+            }
+            Op::ExpectCode { conn: name, code } => {
+                let v = self.read_reply(name)?;
+                let got = v.get("code").and_then(Value::as_str).unwrap_or("");
+                anyhow::ensure!(
+                    got == code,
+                    "expected code `{code}` on `{name}`, got {}",
+                    json::to_string(&v)
+                );
+                self.conn(name)?.pending.pop_front();
+            }
+            Op::ExpectClosed(name) => {
+                let conn = self.conn(name)?;
+                let mut line = String::new();
+                match conn.reader.read_line(&mut line) {
+                    Ok(0) => {}
+                    // the server closing with unread client bytes in its
+                    // receive buffer surfaces as a reset, not clean EOF
+                    Err(e) if matches!(
+                        e.kind(),
+                        ErrorKind::ConnectionReset | ErrorKind::ConnectionAborted | ErrorKind::BrokenPipe
+                    ) => {}
+                    Ok(_) => bail!("`{name}` still open: got line {line:?}"),
+                    Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                        bail!("`{name}` still open after {:?}", self.timeout)
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+                self.conns.remove(name);
+            }
+            Op::SendRaw { conn, bytes } => self.write_raw(conn, bytes)?,
+            Op::SendRawRepeat { conn, byte, count } => {
+                let chunk = vec![*byte; *count];
+                self.write_raw(conn, &chunk)?;
+            }
+            Op::Slowloris(name) => self.write_raw(name, b"{")?,
+            Op::Disconnect(name) => {
+                self.conns
+                    .remove(name)
+                    .ok_or_else(|| anyhow!("connection `{name}` is not open"))?;
+            }
+            Op::KillShard(i) => {
+                anyhow::ensure!(
+                    self.fleet.kill_shard(*i),
+                    "kill-shard {i}: no such shard or already dead"
+                );
+            }
+            Op::Drain => {
+                self.fleet.drain();
+            }
+            Op::Sleep(ms) => std::thread::sleep(Duration::from_millis(*ms)),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_op_set() {
+        let script = r#"
+            # a comment
+            connect a
+            send a {"prompt": "red circle", "steps": 8}
+            expect-ok a
+            expect-code a queue_full
+            send-raw a not json\n
+            send-raw-repeat a 61 8192
+            slowloris a
+            expect-closed a
+            disconnect a
+            kill-shard 1
+            drain
+            sleep 25
+        "#;
+        let ops = parse_script(script).unwrap();
+        assert_eq!(ops.len(), 12);
+        assert_eq!(ops[0], Op::Connect("a".into()));
+        let Op::Send { conn, line } = &ops[1] else { panic!("{:?}", ops[1]) };
+        assert_eq!(conn, "a");
+        assert_eq!(line, r#"{"prompt": "red circle", "steps": 8}"#);
+        assert_eq!(ops[3], Op::ExpectCode { conn: "a".into(), code: "queue_full".into() });
+        let Op::SendRaw { bytes, .. } = &ops[4] else { panic!() };
+        assert_eq!(bytes, b"not json\n");
+        assert_eq!(
+            ops[5],
+            Op::SendRawRepeat { conn: "a".into(), byte: 0x61, count: 8192 }
+        );
+        assert_eq!(ops[9], Op::KillShard(1));
+        assert_eq!(ops[10], Op::Drain);
+        assert_eq!(ops[11], Op::Sleep(25));
+    }
+
+    #[test]
+    fn escapes_decode_and_bad_ones_fail() {
+        assert_eq!(unescape(r"a\nb\t\\\xff").unwrap(), b"a\nb\t\\\xff");
+        assert_eq!(unescape(r"\x00\x7b").unwrap(), vec![0u8, 0x7b]);
+        assert!(unescape(r"\q").is_err());
+        assert!(unescape(r"\x2").is_err());
+        assert!(unescape(r"\xzz").is_err());
+    }
+
+    #[test]
+    fn parse_errors_name_the_line() {
+        let err = parse_script("connect a\nwarp b\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        assert!(err.to_string().contains("warp"), "{err}");
+        let err = parse_script("send a\n").unwrap_err();
+        assert!(err.to_string().contains("payload"), "{err}");
+        let err = parse_script("kill-shard x\n").unwrap_err();
+        assert!(err.to_string().contains("shard index"), "{err}");
+        let err = parse_script("drain now\n").unwrap_err();
+        assert!(err.to_string().contains("no arguments"), "{err}");
+        let err = parse_script("connect a b\n").unwrap_err();
+        assert!(err.to_string().contains("exactly one"), "{err}");
+    }
+}

@@ -1,0 +1,41 @@
+//! §Robustness: trace-driven load replay + scripted chaos harness.
+//!
+//! Every §Perf and §Scale claim in this repo is pinned by golden-sampler
+//! equivalence, but those proofs run in-process or in virtual time. This
+//! module is the correctness backstop for the *real* socket path: it
+//! records what a live server actually served, replays it against
+//! another server at adjustable speed, and injects scripted faults —
+//! shard crashes, client disconnects, slowloris writers, malformed
+//! frames, drains under load — asserting that survivors stay
+//! byte-identical and failures shed with structured codes.
+//!
+//! Three std-only layers (like [`crate::exec`] and [`crate::fleet`]):
+//!
+//! * [`trace`] — capture (`agd serve --trace-out FILE` appends one JSONL
+//!   record per admitted request: arrival offset, envelope, client id,
+//!   completion digest) and the FNV-1a completion digest computable on
+//!   both ends of the wire.
+//! * [`replay`] — `agd replay --trace FILE --speed X --connections N`:
+//!   open-loop re-issue over real TCP, recording wire-latency
+//!   p50/p95/p99, shed codes, and digest matches into
+//!   `BENCH_replay.json` ([`crate::perfstat`]).
+//! * [`director`] — `scenarios/*.txt` fault scripts interpreted against
+//!   a live listener + [`crate::fleet::Fleet`]
+//!   (`rust/tests/chaos_integration.rs` runs the corpus; see the
+//!   scenario grammar in [`director`]'s docs).
+//!
+//! The invariant under test is the fleet one restated under failure:
+//! **faults change who gets served, never what a survivor is served.**
+//! A kill-shard, a dropped client, or a drain may shed requests (with
+//! `shard_failed` / `draining` / `queue_full` codes), but every
+//! completion that does arrive is byte-identical to a clean
+//! single-shard run — placement, crashes and load never leak into the
+//! math.
+
+pub mod director;
+pub mod replay;
+pub mod trace;
+
+pub use director::{parse_script, Director, Op, Reply};
+pub use replay::{replay, ReplayConfig, ReplayOutcome};
+pub use trace::{completion_digest, read_trace, reply_digest, TraceRecord, TraceSink};

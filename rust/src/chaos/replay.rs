@@ -1,0 +1,421 @@
+//! Open-loop trace replay over real TCP (`agd replay`, §Robustness).
+//!
+//! Replays a captured trace ([`super::trace`]) against a live server:
+//! records are dealt round-robin across `--connections N` real TCP
+//! connections, and each connection re-issues its records *open-loop* —
+//! send time is `epoch + offset_us / speed`, never gated on the previous
+//! reply — so a slow server accumulates backlog exactly like it would
+//! under the original arrival process. Replies are matched FIFO per
+//! connection (the line protocol answers in order on one connection).
+//!
+//! Per request the replayer records wire latency (send → reply line
+//! read), the structured `code` on shed/error replies, and — when the
+//! trace record carries a digest *and* the envelope asked for the image —
+//! whether the served completion is byte-identical to the captured one
+//! ([`super::trace::reply_digest`]). The aggregate lands in
+//! `BENCH_replay.json` via [`crate::perfstat`] (wire-latency
+//! p50/p95/p99 + derived scalars).
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::chaos::trace::{reply_digest, TraceRecord};
+use crate::perfstat::Summary;
+use crate::util::json::{self, Value};
+
+/// Replay parameters (`agd replay --trace F --speed X --connections N`).
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    pub addr: String,
+    /// Time compression: 2.0 replays at twice the captured rate.
+    pub speed: f64,
+    /// Concurrent TCP connections records are dealt across.
+    pub connections: usize,
+    /// Per-reply read timeout; a stalled reply counts as a transport
+    /// error and abandons that connection's remaining records.
+    pub timeout_ms: u64,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> ReplayConfig {
+        ReplayConfig {
+            addr: "127.0.0.1:7458".into(),
+            speed: 1.0,
+            connections: 4,
+            timeout_ms: 30_000,
+        }
+    }
+}
+
+/// Aggregate replay result.
+#[derive(Debug, Clone, Default)]
+pub struct ReplayOutcome {
+    /// Requests written to a socket.
+    pub sent: usize,
+    /// Completion replies (no `error` field).
+    pub completed: usize,
+    /// Structured refusals by `code` (`queue_full`, `draining`, …);
+    /// error replies without a code count under `"error"`.
+    pub shed: BTreeMap<String, usize>,
+    /// Connect/write/read failures and timeouts (requests with no reply).
+    pub transport_errors: usize,
+    /// Completions that carried enough bytes to digest-check.
+    pub digest_checked: usize,
+    /// Digest-checked completions that diverged from the trace.
+    pub digest_mismatches: usize,
+    /// Wire latency (send → reply read) of every reply, ms.
+    pub latencies_ms: Vec<f64>,
+    /// Whole-replay wall time, ms.
+    pub wall_ms: f64,
+}
+
+impl ReplayOutcome {
+    fn merge(&mut self, other: ReplayOutcome) {
+        self.sent += other.sent;
+        self.completed += other.completed;
+        for (code, n) in other.shed {
+            *self.shed.entry(code).or_insert(0) += n;
+        }
+        self.transport_errors += other.transport_errors;
+        self.digest_checked += other.digest_checked;
+        self.digest_mismatches += other.digest_mismatches;
+        self.latencies_ms.extend(other.latencies_ms);
+    }
+
+    pub fn shed_total(&self) -> usize {
+        self.shed.values().sum()
+    }
+}
+
+/// What one connection expects back for one sent request.
+struct Expected {
+    sent_at: Instant,
+    digest: Option<String>,
+}
+
+/// Replay `records` (already offset-sorted — [`super::trace::read_trace`]
+/// guarantees it) against `cfg.addr`. Errors only on setup (no records,
+/// unreachable address on every connection); per-request failures are
+/// counted in the outcome instead.
+pub fn replay(records: &[TraceRecord], cfg: &ReplayConfig) -> Result<ReplayOutcome> {
+    anyhow::ensure!(!records.is_empty(), "trace is empty");
+    anyhow::ensure!(cfg.speed > 0.0, "--speed must be > 0");
+    let conns = cfg.connections.max(1);
+    // deal records round-robin, preserving each connection's time order
+    let mut per_conn: Vec<Vec<TraceRecord>> = vec![Vec::new(); conns];
+    for (i, r) in records.iter().enumerate() {
+        per_conn[i % conns].push(r.clone());
+    }
+    // small lead so the earliest record is not already late at epoch
+    let epoch = Instant::now() + Duration::from_millis(5);
+    let speed = cfg.speed;
+    let timeout = Duration::from_millis(cfg.timeout_ms.max(1));
+    let addr = cfg.addr.clone();
+    let t0 = Instant::now();
+    let handles: Vec<_> = per_conn
+        .into_iter()
+        .filter(|batch| !batch.is_empty())
+        .map(|batch| {
+            let addr = addr.clone();
+            std::thread::spawn(move || run_connection(&addr, batch, epoch, speed, timeout))
+        })
+        .collect();
+    let mut outcome = ReplayOutcome::default();
+    let mut connect_err = None;
+    for h in handles {
+        match h.join().expect("replay connection thread") {
+            Ok(part) => outcome.merge(part),
+            Err(e) => connect_err = Some(e),
+        }
+    }
+    if outcome.sent == 0 {
+        // every connection failed before sending anything — that is a
+        // setup error (bad --addr), not a chaos observation
+        return Err(
+            connect_err.unwrap_or_else(|| anyhow::anyhow!("replay sent nothing"))
+        );
+    }
+    outcome.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    Ok(outcome)
+}
+
+/// One connection: a writer (this thread, pacing the schedule) and a
+/// reader thread matching replies FIFO to what was sent.
+fn run_connection(
+    addr: &str,
+    batch: Vec<TraceRecord>,
+    epoch: Instant,
+    speed: f64,
+    timeout: Duration,
+) -> Result<ReplayOutcome> {
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("replay connect {addr}"))?;
+    stream.set_read_timeout(Some(timeout)).ok();
+    let reader_stream = stream.try_clone().context("replay stream clone")?;
+    let (tx, rx) = channel::<Expected>();
+    let reader = std::thread::spawn(move || {
+        let mut out = ReplayOutcome::default();
+        let mut lines = BufReader::new(reader_stream);
+        for exp in rx {
+            let mut line = String::new();
+            match lines.read_line(&mut line) {
+                Ok(n) if n > 0 => {}
+                // EOF/timeout: this reply — and every reply behind it on
+                // this connection — is gone
+                _ => {
+                    out.transport_errors += 1;
+                    out.transport_errors += rx.try_iter().count();
+                    return out;
+                }
+            }
+            out.latencies_ms
+                .push(exp.sent_at.elapsed().as_secs_f64() * 1e3);
+            let Ok(v) = json::parse(line.trim()) else {
+                out.transport_errors += 1;
+                continue;
+            };
+            if v.get("error").is_some() {
+                let code = v
+                    .get("code")
+                    .and_then(Value::as_str)
+                    .unwrap_or("error")
+                    .to_owned();
+                *out.shed.entry(code).or_insert(0) += 1;
+                continue;
+            }
+            out.completed += 1;
+            if let Some(expected) = exp.digest {
+                if let Some(got) = reply_digest(&v) {
+                    out.digest_checked += 1;
+                    if got != expected {
+                        out.digest_mismatches += 1;
+                    }
+                }
+            }
+        }
+        out
+    });
+    let mut writer = stream;
+    let mut sent = 0usize;
+    let mut write_errors = 0usize;
+    for rec in &batch {
+        let due = epoch + Duration::from_micros((rec.offset_us as f64 / speed) as u64);
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let line = rec.request_line();
+        let sent_at = Instant::now();
+        if writer
+            .write_all(line.as_bytes())
+            .and_then(|()| writer.write_all(b"\n"))
+            .is_err()
+        {
+            // connection is gone; everything left on it is unserved
+            write_errors = batch.len() - sent;
+            break;
+        }
+        sent += 1;
+        let digest = rec
+            .digest
+            .clone()
+            .filter(|_| rec.wants_image());
+        let _ = tx.send(Expected { sent_at, digest });
+    }
+    drop(tx); // reader drains and returns
+    let _ = writer.shutdown(std::net::Shutdown::Write);
+    let mut out = reader.join().expect("replay reader thread");
+    out.sent = sent;
+    out.transport_errors += write_errors;
+    Ok(out)
+}
+
+/// Bundle the outcome into the `BENCH_replay.json` shape: the
+/// wire-latency [`Summary`] row plus derived scalars.
+pub fn report_json(outcome: &ReplayOutcome, cfg: &ReplayConfig) -> Value {
+    let lat = Summary::from_samples_ms("replay_wire_latency", &outcome.latencies_ms);
+    let wall_s = outcome.wall_ms / 1e3;
+    let mut derived: Vec<(String, f64)> = vec![
+        ("sent".into(), outcome.sent as f64),
+        ("completed".into(), outcome.completed as f64),
+        ("shed_total".into(), outcome.shed_total() as f64),
+        ("transport_errors".into(), outcome.transport_errors as f64),
+        ("digest_checked".into(), outcome.digest_checked as f64),
+        (
+            "digest_mismatches".into(),
+            outcome.digest_mismatches as f64,
+        ),
+        ("wall_ms".into(), outcome.wall_ms),
+        (
+            "achieved_rps".into(),
+            if wall_s > 0.0 {
+                outcome.completed as f64 / wall_s
+            } else {
+                0.0
+            },
+        ),
+        ("speed".into(), cfg.speed),
+        ("connections".into(), cfg.connections as f64),
+    ];
+    for (code, n) in &outcome.shed {
+        derived.push((format!("shed_{code}"), *n as f64));
+    }
+    let borrowed: Vec<(&str, f64)> =
+        derived.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    crate::perfstat::summaries_to_json(&[lat], &borrowed)
+}
+
+/// Write [`report_json`] to `path` (the `BENCH_replay.json` artifact).
+pub fn write_report(path: &str, outcome: &ReplayOutcome, cfg: &ReplayConfig) -> Result<()> {
+    let text = json::to_string(&report_json(outcome, cfg));
+    std::fs::write(path, text).with_context(|| format!("writing replay report {path}"))?;
+    eprintln!("replay report written to {path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::TcpListener;
+
+    /// A line server that completes every request as a fixed tiny
+    /// completion (echoing an image when asked) — enough to exercise the
+    /// replay plumbing without a fleet.
+    fn spawn_stub_server(shed_every: usize) -> std::net::SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { continue };
+                std::thread::spawn(move || {
+                    let mut writer = stream.try_clone().unwrap();
+                    let reader = BufReader::new(stream);
+                    for (i, line) in reader.lines().map_while(Result::ok).enumerate() {
+                        let v = json::parse(&line).unwrap();
+                        let reply = if shed_every > 0 && (i + 1) % shed_every == 0 {
+                            r#"{"error": "queue full: stub", "code": "queue_full"}"#
+                                .to_owned()
+                        } else if v.get("image").and_then(Value::as_bool) == Some(true) {
+                            r#"{"id": 0, "nfes": 4, "cfg_steps": 2, "truncated_at": null, "image": [0.5, -0.25]}"#.to_owned()
+                        } else {
+                            r#"{"id": 0, "nfes": 4, "cfg_steps": 2, "truncated_at": null}"#
+                                .to_owned()
+                        };
+                        if writeln!(writer, "{reply}").is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        addr
+    }
+
+    fn record(offset_us: u64, image: bool, digest: Option<&str>) -> TraceRecord {
+        let envelope = json::parse(&format!(
+            r#"{{"prompt": "red circle", "steps": 4, "image": {image}}}"#
+        ))
+        .unwrap();
+        TraceRecord {
+            offset_us,
+            client_id: None,
+            digest: digest.map(str::to_owned),
+            envelope,
+        }
+    }
+
+    /// The digest the stub server's fixed image reply hashes to.
+    fn stub_digest() -> String {
+        crate::chaos::trace::digest_parts(&[0.5, -0.25], 4, 2, None)
+    }
+
+    #[test]
+    fn replays_a_trace_and_checks_digests() {
+        let addr = spawn_stub_server(0);
+        let good = stub_digest();
+        let records = vec![
+            record(0, true, Some(&good)),
+            record(100, true, Some("deadbeefdeadbeef")), // mismatch
+            record(200, false, Some(&good)),             // no image → unverifiable
+            record(300, true, None),                     // no digest → unverifiable
+        ];
+        let cfg = ReplayConfig {
+            addr: addr.to_string(),
+            speed: 100.0,
+            connections: 2,
+            timeout_ms: 5_000,
+        };
+        let out = replay(&records, &cfg).unwrap();
+        assert_eq!(out.sent, 4);
+        assert_eq!(out.completed, 4);
+        assert_eq!(out.transport_errors, 0);
+        assert_eq!(out.digest_checked, 2);
+        assert_eq!(out.digest_mismatches, 1);
+        assert_eq!(out.latencies_ms.len(), 4);
+        assert!(out.wall_ms > 0.0);
+    }
+
+    #[test]
+    fn shed_replies_are_tallied_by_code() {
+        let addr = spawn_stub_server(2); // every 2nd request per conn shed
+        let records: Vec<TraceRecord> =
+            (0..6).map(|i| record(i * 50, false, None)).collect();
+        let cfg = ReplayConfig {
+            addr: addr.to_string(),
+            speed: 50.0,
+            connections: 1,
+            timeout_ms: 5_000,
+        };
+        let out = replay(&records, &cfg).unwrap();
+        assert_eq!(out.sent, 6);
+        assert_eq!(out.completed, 3);
+        assert_eq!(out.shed.get("queue_full"), Some(&3));
+        assert_eq!(out.shed_total(), 3);
+    }
+
+    #[test]
+    fn unreachable_address_is_a_setup_error() {
+        // a bound-then-dropped listener leaves a port nothing accepts on
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let cfg = ReplayConfig {
+            addr: dead.to_string(),
+            ..ReplayConfig::default()
+        };
+        assert!(replay(&[record(0, false, None)], &cfg).is_err());
+        assert!(replay(&[], &ReplayConfig::default()).is_err());
+    }
+
+    #[test]
+    fn report_json_carries_latency_row_and_derived_scalars() {
+        let mut out = ReplayOutcome {
+            sent: 10,
+            completed: 8,
+            transport_errors: 0,
+            digest_checked: 8,
+            digest_mismatches: 0,
+            latencies_ms: (1..=10).map(|i| i as f64).collect(),
+            wall_ms: 2000.0,
+            ..ReplayOutcome::default()
+        };
+        out.shed.insert("queue_full".into(), 2);
+        let cfg = ReplayConfig::default();
+        let v = report_json(&out, &cfg);
+        let rows = v.req("benchmarks").as_arr().unwrap();
+        assert_eq!(rows[0].req("name").as_str(), Some("replay_wire_latency"));
+        assert_eq!(rows[0].req("iters").as_usize(), Some(10));
+        assert!(rows[0].req("p99_ms").as_f64().unwrap() >= rows[0].req("p50_ms").as_f64().unwrap());
+        let d = v.req("derived");
+        assert_eq!(d.req("completed").as_f64(), Some(8.0));
+        assert_eq!(d.req("shed_queue_full").as_f64(), Some(2.0));
+        assert_eq!(d.req("achieved_rps").as_f64(), Some(4.0));
+    }
+}

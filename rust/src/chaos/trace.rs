@@ -1,0 +1,314 @@
+//! Trace capture + the completion digest (§Robustness).
+//!
+//! `agd serve --trace-out FILE` appends one JSONL record per *admitted*
+//! request — the capture hook lives in `server::dispatch_line` and fires
+//! only when the fleet answered with a completion, so a trace is a record
+//! of work the server actually did, replayable as-is:
+//!
+//! ```text
+//! {"offset_us": 18234, "client_id": "web-1",
+//!  "digest": "9f1c0d2a33b41e07",
+//!  "envelope": {"prompt": "red circle", "policy": "cfg", "steps": 8,
+//!               "guidance": 2.0, "seed": 7, "image": true,
+//!               "client_id": "web-1"}}
+//! ```
+//!
+//! * `offset_us` — arrival offset in microseconds from the sink's epoch
+//!   (the instant the sink was created, i.e. server start). Replay
+//!   re-issues requests on this clock, scaled by `--speed`.
+//! * `envelope` — the client's request object verbatim (already parsed
+//!   once by the serving path; re-serialized canonically).
+//! * `digest` — FNV-1a 64 over the completion's image bits + NFE counts
+//!   ([`completion_digest`]). Because the mini-JSON writer round-trips
+//!   every `f32` exactly through `f64`, the same digest is computable
+//!   from a *reply line* on the client side ([`reply_digest`]) — that is
+//!   what lets `agd replay` assert byte-identical completions over the
+//!   wire. Replies without an `"image"` field (the envelope didn't ask
+//!   for one) cannot be digest-checked and count as unverified.
+//!
+//! The sink serializes appends behind a mutex and flushes per record, so
+//! a crashed (or chaos-killed) server still leaves a complete prefix.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::request::Completion;
+use crate::util::json::{self, Value};
+
+/// One captured request: arrival offset, the request envelope verbatim,
+/// and the completion digest the replayer will check against.
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    pub offset_us: u64,
+    pub client_id: Option<String>,
+    /// Completion digest ([`completion_digest`]); absent in hand-written
+    /// traces, which replay without verification.
+    pub digest: Option<String>,
+    /// The request object to re-issue (serialized form of `envelope`).
+    pub envelope: Value,
+}
+
+impl TraceRecord {
+    /// The protocol line this record re-issues on replay.
+    pub fn request_line(&self) -> String {
+        json::to_string(&self.envelope)
+    }
+
+    /// Whether the envelope asks for the image — only those replies carry
+    /// enough bytes to digest-check.
+    pub fn wants_image(&self) -> bool {
+        self.envelope
+            .get("image")
+            .and_then(Value::as_bool)
+            .unwrap_or(false)
+    }
+}
+
+/// Append-only JSONL trace writer (`--trace-out`). Shared across
+/// connection-handler threads behind an `Arc`.
+pub struct TraceSink {
+    epoch: Instant,
+    out: Mutex<BufWriter<File>>,
+}
+
+impl TraceSink {
+    /// Open `path` for appending (created if missing); the epoch for
+    /// `offset_us` is now.
+    pub fn create(path: &str) -> Result<TraceSink> {
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening --trace-out {path}"))?;
+        Ok(TraceSink {
+            epoch: Instant::now(),
+            out: Mutex::new(BufWriter::new(file)),
+        })
+    }
+
+    /// Microseconds since the sink's epoch — sampled at request arrival,
+    /// *before* the fleet runs it, so replay reproduces arrival spacing
+    /// rather than completion spacing.
+    pub fn arrival_offset_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Append one record. IO errors are logged, not propagated — tracing
+    /// must never fail a request that already completed.
+    pub fn record(
+        &self,
+        offset_us: u64,
+        envelope: &Value,
+        client_id: Option<&str>,
+        digest: &str,
+    ) {
+        let rec = json::obj(vec![
+            ("offset_us", json::num(offset_us as f64)),
+            (
+                "client_id",
+                client_id.map(json::s).unwrap_or(Value::Null),
+            ),
+            ("digest", json::s(digest)),
+            ("envelope", envelope.clone()),
+        ]);
+        let line = json::to_string(&rec);
+        let mut out = self.out.lock().expect("trace sink lock");
+        if writeln!(out, "{line}").and_then(|()| out.flush()).is_err() {
+            log::warn!("trace sink: append failed (record dropped)");
+        }
+    }
+}
+
+/// Read a JSONL trace, sorted by `offset_us` (stable, so equal offsets
+/// keep file order). Blank lines are skipped; a malformed line is an
+/// error naming its line number.
+pub fn read_trace(path: &str) -> Result<Vec<TraceRecord>> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
+    let mut records = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = json::parse(line)
+            .map_err(|e| anyhow!("{path}:{}: bad trace record: {e}", idx + 1))?;
+        let envelope = v
+            .get("envelope")
+            .cloned()
+            .ok_or_else(|| anyhow!("{path}:{}: trace record has no `envelope`", idx + 1))?;
+        records.push(TraceRecord {
+            offset_us: v.get("offset_us").and_then(Value::as_f64).unwrap_or(0.0) as u64,
+            client_id: v
+                .get("client_id")
+                .and_then(Value::as_str)
+                .map(str::to_owned),
+            digest: v.get("digest").and_then(Value::as_str).map(str::to_owned),
+            envelope,
+        });
+    }
+    records.sort_by_key(|r| r.offset_us);
+    Ok(records)
+}
+
+/// FNV-1a 64 over the bytes that define a completion's identity: every
+/// image `f32`'s bit pattern, then `nfes`, `cfg_steps`, and
+/// `truncated_at` (`u64::MAX` encodes `None`). Policy *display* names are
+/// deliberately excluded — they echo formatting, not math.
+pub fn digest_parts(
+    image: &[f32],
+    nfes: usize,
+    cfg_steps: usize,
+    truncated_at: Option<usize>,
+) -> String {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    };
+    for &px in image {
+        eat(&px.to_bits().to_le_bytes());
+    }
+    eat(&(nfes as u64).to_le_bytes());
+    eat(&(cfg_steps as u64).to_le_bytes());
+    eat(
+        &truncated_at
+            .map(|t| t as u64)
+            .unwrap_or(u64::MAX)
+            .to_le_bytes(),
+    );
+    format!("{h:016x}")
+}
+
+/// Digest of a server-side [`Completion`].
+pub fn completion_digest(c: &Completion) -> String {
+    digest_parts(&c.image, c.nfes, c.cfg_steps, c.truncated_at)
+}
+
+/// Digest of a *reply line* as a client sees it — `None` unless the reply
+/// carries an image (f64 → f32 narrowing is exact here: every value was
+/// an f32 on the server, and the JSON writer round-trips it losslessly).
+pub fn reply_digest(v: &Value) -> Option<String> {
+    let image: Vec<f32> = v
+        .get("image")?
+        .as_f64_vec()?
+        .into_iter()
+        .map(|f| f as f32)
+        .collect();
+    let nfes = v.get("nfes").and_then(Value::as_usize)?;
+    let cfg_steps = v.get("cfg_steps").and_then(Value::as_usize)?;
+    let truncated_at = v.get("truncated_at").and_then(Value::as_usize);
+    Some(digest_parts(&image, nfes, cfg_steps, truncated_at))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn completion(image: Vec<f32>) -> Completion {
+        Completion {
+            id: 1,
+            policy: "cfg(s=2)".into(),
+            image,
+            nfes: 16,
+            cfg_steps: 8,
+            truncated_at: None,
+            gammas: vec![],
+            gammas_eps: vec![],
+            trajectory: None,
+            iterates: vec![],
+        }
+    }
+
+    #[test]
+    fn digest_matches_between_completion_and_reply_line() {
+        // awkward floats included: the JSON round trip must not move them
+        let c = completion(vec![0.1, -3.5e-8, 1.0 / 3.0, f32::MIN_POSITIVE]);
+        let line = crate::server::completion_to_line(&c, 1.0, true);
+        let v = json::parse(&line).unwrap();
+        assert_eq!(reply_digest(&v).unwrap(), completion_digest(&c));
+    }
+
+    #[test]
+    fn digest_is_sensitive_to_every_part() {
+        let base = completion(vec![0.5, -0.25]);
+        let d0 = completion_digest(&base);
+        let mut c = completion(vec![0.5, -0.250001]);
+        assert_ne!(completion_digest(&c), d0, "image bits");
+        c = completion(vec![0.5, -0.25]);
+        c.nfes = 17;
+        assert_ne!(completion_digest(&c), d0, "nfes");
+        c.nfes = 16;
+        c.truncated_at = Some(3);
+        assert_ne!(completion_digest(&c), d0, "truncated_at");
+        // and stable across calls
+        assert_eq!(completion_digest(&base), d0);
+    }
+
+    #[test]
+    fn reply_without_image_has_no_digest() {
+        let c = completion(vec![0.5]);
+        let line = crate::server::completion_to_line(&c, 1.0, false);
+        assert_eq!(reply_digest(&json::parse(&line).unwrap()), None);
+    }
+
+    #[test]
+    fn sink_roundtrips_through_read_trace() {
+        let path = std::env::temp_dir().join(format!(
+            "agd_trace_test_{}.jsonl",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_owned();
+        let _ = std::fs::remove_file(&path);
+        {
+            let sink = TraceSink::create(&path).unwrap();
+            let env1 = json::parse(
+                r#"{"prompt": "red circle", "steps": 8, "image": true, "client_id": "a"}"#,
+            )
+            .unwrap();
+            let env2 = json::parse(r#"{"prompt": "blue square", "steps": 4}"#).unwrap();
+            // out-of-order offsets: read_trace must sort
+            sink.record(500, &env2, None, "00000000000000ff");
+            sink.record(100, &env1, Some("a"), "00000000000000aa");
+        }
+        let recs = read_trace(&path).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].offset_us, 100);
+        assert_eq!(recs[0].client_id.as_deref(), Some("a"));
+        assert_eq!(recs[0].digest.as_deref(), Some("00000000000000aa"));
+        assert!(recs[0].wants_image());
+        assert!(!recs[1].wants_image());
+        // the request line re-parses to the original envelope
+        let v = json::parse(&recs[0].request_line()).unwrap();
+        assert_eq!(v.req("prompt").as_str(), Some("red circle"));
+        // appending more records accumulates (append mode)
+        {
+            let sink = TraceSink::create(&path).unwrap();
+            let env = json::parse(r#"{"prompt": "red cross"}"#).unwrap();
+            sink.record(50, &env, None, "0000000000000001");
+        }
+        assert_eq!(read_trace(&path).unwrap().len(), 3);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn read_trace_rejects_malformed_lines() {
+        let path = std::env::temp_dir().join(format!(
+            "agd_trace_bad_{}.jsonl",
+            std::process::id()
+        ));
+        std::fs::write(&path, "{\"offset_us\": 1}\n").unwrap();
+        let err = read_trace(path.to_str().unwrap()).unwrap_err();
+        assert!(err.to_string().contains("no `envelope`"), "{err}");
+        std::fs::write(&path, "not json\n").unwrap();
+        assert!(read_trace(path.to_str().unwrap()).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -39,6 +39,15 @@
 //! byte-identical for every `--shards` count and every placement
 //! (pinned by `rust/tests/fleet_integration.rs` against the golden
 //! unfused sampler).
+//!
+//! The invariant holds under *failure* too, and is exercised on purpose:
+//! [`Fleet::kill_shard`] injects a crash into a live shard (the chaos
+//! harness's hook — [`crate::chaos`]), which runs the same fatal path as
+//! a real pump failure: in-flight jobs on the victim are refused with
+//! `"code": "shard_failed"` ([`ShardFailed`]), the shard is marked dead
+//! (visible as `shard_died_total{shard=}` and a dropped
+//! `fleet_shards_alive`), and the survivors keep serving byte-identical
+//! completions (`rust/tests/chaos_integration.rs`).
 
 pub mod replica;
 pub mod router;
@@ -83,6 +92,25 @@ impl std::error::Error for ScopedShed {
         Some(&self.inner)
     }
 }
+
+/// A shard's engine died with work in flight — the jobs it was holding
+/// are refused with this error (`"code": "shard_failed"` on the wire)
+/// rather than silently dropped. Raised by a fatal pump error or an
+/// injected [`Fleet::kill_shard`] crash; the rest of the fleet keeps
+/// serving.
+#[derive(Debug, Clone)]
+pub struct ShardFailed {
+    pub shard: usize,
+    pub reason: String,
+}
+
+impl fmt::Display for ShardFailed {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "shard {} failed: {}", self.shard, self.reason)
+    }
+}
+
+impl std::error::Error for ShardFailed {}
 
 /// Routing-level refusals that are not admission sheds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -165,6 +193,11 @@ pub struct Fleet {
     scheduler: SchedulerKind,
     draining: AtomicBool,
     next_id: AtomicU64,
+    /// Fleet-level counters that belong to no shard engine: connection
+    /// hygiene (`conn_*`, incremented by the server's handlers) and
+    /// chaos injections (`chaos_*`). Merged into `{"cmd": "stats"}` /
+    /// `{"cmd": "metrics"}` alongside the shard registries.
+    telemetry: Mutex<Telemetry>,
 }
 
 impl Fleet {
@@ -228,7 +261,45 @@ impl Fleet {
             scheduler: cfg.scheduler,
             draining: AtomicBool::new(false),
             next_id: AtomicU64::new(0),
+            telemetry: Mutex::new(Telemetry::new()),
         }
+    }
+
+    /// Bump a fleet-level counter (connection hygiene, chaos injections).
+    /// Fleet-level because dead shards are skipped by stats collection —
+    /// a counter living in a dying engine's registry would never be
+    /// scraped again.
+    pub fn count(&self, name: &str, labels: &[(&str, &str)]) {
+        self.telemetry
+            .lock()
+            .expect("fleet telemetry lock")
+            .inc(name, labels, 1);
+    }
+
+    /// Inject a crash into a live shard — the chaos harness's fault hook
+    /// ([`crate::chaos::Director`]'s `kill-shard` op). The shard runs its
+    /// real fatal path between batch steps: in-flight jobs are refused
+    /// with `"code": "shard_failed"` and the shard is marked dead, while
+    /// the rest of the fleet keeps serving. Returns `false` when the
+    /// index is out of range or the shard is already dead. Jobs placed
+    /// before this call are guaranteed to reach the shard first (one
+    /// FIFO channel per shard), so a mid-flight kill always exercises the
+    /// refusal path, never a silent drop.
+    pub fn kill_shard(&self, shard: usize) -> bool {
+        {
+            let guard = self.router.lock().expect("router lock");
+            if shard >= self.loads.len() || self.loads[shard].is_dead() {
+                return false;
+            }
+            if guard.txs[shard].send(ShardMsg::Crash).is_err() {
+                // channel gone without a death mark (shutdown race)
+                self.loads[shard].mark_dead();
+                return false;
+            }
+        }
+        let label = shard.to_string();
+        self.count("chaos_kill_shard_total", &[("shard", &label)]);
+        true
     }
 
     pub fn shards(&self) -> usize {
@@ -346,6 +417,20 @@ impl Fleet {
         for st in stats {
             let shard = st.shard.to_string();
             merged.absorb(&st.telemetry, Some(("shard", &shard)));
+        }
+        // fleet-level counters (conn_*, chaos_*) ride along unlabelled
+        {
+            let own = self.telemetry.lock().expect("fleet telemetry lock");
+            merged.absorb(&own, None);
+        }
+        // dead shards answer no Stats message, so their death is derived
+        // here from the load flag instead of counted in a registry nobody
+        // can scrape: one series per dead shard, pinned at 1
+        for (i, load) in self.loads.iter().enumerate() {
+            if load.is_dead() {
+                let shard = i.to_string();
+                merged.inc("shard_died_total", &[("shard", &shard)], 1);
+            }
         }
         let sum = |f: &dyn Fn(&ShardStats) -> usize| stats.iter().map(f).sum::<usize>() as f64;
         merged.set_gauge("active_requests", &[], sum(&|t| t.active));

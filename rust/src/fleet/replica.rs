@@ -19,10 +19,16 @@
 //! * **shutdown** — [`ShardMsg::Shutdown`] lets the loop return at the
 //!   next idle point, which is what makes fleet threads joinable.
 //!
-//! A fatal pump error (deterministic backend failure) replies the error to
-//! every in-flight job, marks the shard dead in its [`ShardLoad`] (the
-//! router stops placing onto it) and exits the thread — the rest of the
-//! fleet keeps serving.
+//! A fatal pump error (deterministic backend failure) runs the death path
+//! ([`die`]): the error line is logged *first* (so an operator sees why
+//! even if nothing scrapes metrics again), every in-flight job is refused
+//! with `"code": "shard_failed"` ([`ShardFailed`]), and the shard is
+//! marked dead in its [`ShardLoad`] (the router stops placing onto it;
+//! the fleet derives `shard_died_total{shard=}` from the flag) before the
+//! thread exits — the rest of the fleet keeps serving. The chaos
+//! harness's [`ShardMsg::Crash`] injection (`Fleet::kill_shard`, driven
+//! by [`crate::chaos`]) exercises the *same* path between batch steps,
+//! which is what finally runs this code instead of only reading it.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
@@ -33,7 +39,7 @@ use crate::backend::Backend;
 use crate::coordinator::engine::Engine;
 use crate::coordinator::request::{Completion, Request};
 use crate::fleet::router::ShardLoad;
-use crate::fleet::ScopedShed;
+use crate::fleet::{ScopedShed, ShardFailed};
 use crate::sched::{AdmitError, Telemetry};
 use crate::server::error_to_line;
 
@@ -83,6 +89,10 @@ pub(crate) enum ShardMsg {
     Drain(Sender<()>),
     /// Finish in-flight work, then exit the thread.
     Shutdown,
+    /// Chaos injection ([`crate::fleet::Fleet::kill_shard`]): run the
+    /// fatal death path as if the engine pump had failed — between batch
+    /// steps, so a mid-flight kill leaves work genuinely in flight.
+    Crash,
 }
 
 /// Cumulative observed service rate: wall micros per executed NFE. Fed by
@@ -128,9 +138,10 @@ pub(crate) fn run_replica<B: Backend>(
     let mut waiters: Vec<Sender<()>> = Vec::new();
     let mut rate = ServiceRate::default();
     let mut shutdown = false;
+    let mut crashed = false;
     loop {
         // idle: acknowledge drains, honour shutdown, block for work
-        if engine.idle() {
+        if engine.idle() && !crashed {
             for w in waiters.drain(..) {
                 let _ = w.send(());
             }
@@ -140,8 +151,8 @@ pub(crate) fn run_replica<B: Backend>(
             match rx.recv() {
                 Ok(msg) => {
                     handle_msg(
-                        shard, &mut engine, &mut jobs, &mut waiters, &mut shutdown, &load,
-                        &rate, shed_infeasible, msg,
+                        shard, &mut engine, &mut jobs, &mut waiters, &mut shutdown,
+                        &mut crashed, &load, &rate, shed_infeasible, msg,
                     );
                 }
                 Err(_) => return, // fleet dropped → shut down
@@ -152,8 +163,8 @@ pub(crate) fn run_replica<B: Backend>(
             match rx.try_recv() {
                 Ok(msg) => {
                     handle_msg(
-                        shard, &mut engine, &mut jobs, &mut waiters, &mut shutdown, &load,
-                        &rate, shed_infeasible, msg,
+                        shard, &mut engine, &mut jobs, &mut waiters, &mut shutdown,
+                        &mut crashed, &load, &rate, shed_infeasible, msg,
                     );
                 }
                 Err(TryRecvError::Empty) => break,
@@ -167,6 +178,22 @@ pub(crate) fn run_replica<B: Backend>(
                     break;
                 }
             }
+        }
+        // an injected crash lands here — between batch steps, like a real
+        // pump failure would, with any mid-flight work still in `jobs`
+        // (the shard channel is FIFO: jobs placed before the Crash were
+        // already soaked up above)
+        if crashed {
+            die(
+                shard,
+                &mut jobs,
+                &load,
+                anyhow::Error::new(ShardFailed {
+                    shard,
+                    reason: "injected chaos crash (kill-shard)".into(),
+                }),
+            );
+            return;
         }
         let t0 = Instant::now();
         let before = engine.items();
@@ -186,16 +213,43 @@ pub(crate) fn run_replica<B: Backend>(
                 load.publish(l.active, l.queued_nfes);
             }
             Err(e) => {
-                log::error!("shard {shard}: engine pump failed: {e:#}");
-                let line = error_to_line(&e);
-                for (_, job) in jobs.drain() {
-                    let _ = job.reply.send(JobReply::Error(line.clone()));
-                }
-                load.mark_dead();
+                die(
+                    shard,
+                    &mut jobs,
+                    &load,
+                    anyhow::Error::new(ShardFailed {
+                        shard,
+                        reason: format!("engine pump failed: {e:#}"),
+                    }),
+                );
                 return;
             }
         }
     }
+}
+
+/// The shard death path, shared by real pump failures and injected
+/// crashes. Ordering is deliberate: **log the error line first** (a dead
+/// shard's registry is never scraped again, so the log line is the one
+/// artifact guaranteed to survive), then refuse every in-flight job with
+/// the structured `shard_failed` line, then mark the load dead — which
+/// is the signal `{"cmd": "stats"}` turns into
+/// `shard_died_total{shard=}` and a decremented `fleet_shards_alive`.
+fn die(
+    shard: usize,
+    jobs: &mut HashMap<u64, Pending>,
+    load: &ShardLoad,
+    e: anyhow::Error,
+) {
+    let line = error_to_line(&e);
+    log::error!(
+        "shard {shard}: fatal, marking dead ({} in-flight job(s) refused): {line}",
+        jobs.len()
+    );
+    for (_, job) in jobs.drain() {
+        let _ = job.reply.send(JobReply::Error(line.clone()));
+    }
+    load.mark_dead();
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -205,6 +259,7 @@ fn handle_msg<B: Backend>(
     jobs: &mut HashMap<u64, Pending>,
     waiters: &mut Vec<Sender<()>>,
     shutdown: &mut bool,
+    crashed: &mut bool,
     load: &ShardLoad,
     rate: &ServiceRate,
     shed_infeasible: bool,
@@ -234,6 +289,7 @@ fn handle_msg<B: Backend>(
             }
         }
         ShardMsg::Shutdown => *shutdown = true,
+        ShardMsg::Crash => *crashed = true,
     }
 }
 

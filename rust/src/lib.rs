@@ -84,11 +84,24 @@
 //! per-request math — completions are byte-identical for every shard
 //! count (`rust/tests/fleet_integration.rs`).
 //!
+//! ## The chaos harness (§Robustness)
+//!
+//! Because every claim above rests on byte-identical completions, the
+//! serving stack is falsifiable on purpose: [`chaos`] records live
+//! traffic (`agd serve --trace-out`), replays it open-loop over real TCP
+//! (`agd replay --trace F --speed X --connections N`, reporting wire
+//! latency + per-request completion digests into `BENCH_replay.json`),
+//! and drives scripted faults — `kill-shard`, disconnects, slowloris,
+//! malformed frames, drains — from `scenarios/*.txt` against a live
+//! fleet (`rust/tests/chaos_integration.rs`). Faults shed with
+//! structured codes; survivors stay byte-identical to a clean run.
+//!
 //! Start with [`coordinator::engine::Engine`] and the constructor helpers
 //! in [`coordinator::policy`] (`cfg`, `ag`, …); see
 //! `examples/quickstart.rs`.
 
 pub mod backend;
+pub mod chaos;
 pub mod coordinator;
 pub mod eval;
 pub mod exec;

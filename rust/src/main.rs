@@ -4,6 +4,7 @@
 //!   info                         artifact + model inventory
 //!   generate [--prompt ..]       generate images under a policy, write PPMs
 //!   serve [--addr ..]            TCP line-protocol server
+//!   replay [--trace ..]          replay a captured trace against a server
 //!   search [--iters ..]          run the NAS policy search (§4)
 //!   fit-ols [--train ..]         collect trajectories + fit LINEARAG OLS
 //!
@@ -13,6 +14,8 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, Result};
 
+use adaptive_guidance::backend::GmmBackend;
+use adaptive_guidance::chaos;
 use adaptive_guidance::coordinator::engine::Engine;
 use adaptive_guidance::coordinator::policy::{cfg as cfg_policy, PolicyRef};
 use adaptive_guidance::coordinator::request::Request;
@@ -24,6 +27,7 @@ use adaptive_guidance::runtime::PjrtBackend;
 use adaptive_guidance::sched::{Admission, SchedulerKind};
 use adaptive_guidance::search;
 use adaptive_guidance::server::{serve_with_registry, ServerConfig};
+use adaptive_guidance::sim::gmm::Gmm;
 use adaptive_guidance::util::cli::Args;
 use adaptive_guidance::util::json;
 use adaptive_guidance::util::ppm;
@@ -36,6 +40,7 @@ fn main() {
         "info" => cmd_info(&args),
         "generate" => cmd_generate(&args),
         "serve" => cmd_serve(&args),
+        "replay" => cmd_replay(&args),
         "search" => cmd_search(&args),
         "fit-ols" => cmd_fit_ols(&args),
         _ => {
@@ -53,7 +58,7 @@ fn print_help() {
     let names = PolicyRegistry::builtin().names().join("|");
     eprintln!(
         "agd — Adaptive Guidance diffusion serving\n\n\
-         USAGE: agd <info|generate|serve|search|fit-ols> [options]\n\n\
+         USAGE: agd <info|generate|serve|replay|search|fit-ols> [options]\n\n\
          common options:\n\
            --artifacts DIR     artifacts directory (default: artifacts)\n\
            --model NAME        dit_s | dit_b (default: dit_b)\n\n\
@@ -79,6 +84,13 @@ fn print_help() {
            --workers N          worker lanes per shard (0 = cores/shards, default)\n\
            --policy-file FILE   register policy aliases from JSON at startup\n\
            --coeffs-dir DIR     server-side dir for linear-ag \"coeffs_file\"\n\
+           --backend pjrt|gmm   gmm = artifact-free analytic backend (default pjrt)\n\
+           --max-line-bytes N   refuse+close frames past N bytes (default 1 MiB)\n\
+           --read-timeout-ms N  idle/slowloris connection cutoff (default 60000, 0 = off)\n\
+           --trace-out FILE     append one JSONL record per served request\n\
+         replay:   --trace FILE (required; a --trace-out capture)\n\
+           --addr HOST:PORT --speed X --connections N --timeout-ms N\n\
+           --out FILE           wire-latency report (default BENCH_replay.json)\n\
          search:   --iters N --lr F --seed N --out FILE\n\
          fit-ols:  --train N --test N --steps N --out FILE"
     );
@@ -192,7 +204,15 @@ fn cmd_generate(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let model = args.get_or("model", "dit_b").to_owned();
+    // --backend gmm serves the analytic mixture backend — artifact-free,
+    // which is what the chaos/replay harness (`scripts/chaos.sh`) runs
+    // against on machines without the compiled DiT artifacts
+    let backend_kind = args
+        .choice("backend", "pjrt", &["pjrt", "gmm"])
+        .map_err(|e| anyhow!(e))?
+        .to_owned();
+    let default_model = if backend_kind == "gmm" { "gmm" } else { "dit_b" };
+    let model = args.get_or("model", default_model).to_owned();
     let dir = artifacts_dir(args);
     let scheduler = SchedulerKind::parse(args.get_or("scheduler", "fifo"))
         .map_err(|e| anyhow!("--scheduler: {e}"))?;
@@ -232,6 +252,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         shed_infeasible: args.flag("shed-infeasible"),
         // 0 = available parallelism split across shards, resolved by the fleet
         workers: args.usize("workers", 0),
+        // §Robustness: wire hardening + trace capture
+        max_line_bytes: args.usize("max-line-bytes", 1 << 20),
+        read_timeout_ms: args.u64("read-timeout-ms", 60_000),
+        trace_out: args.get("trace-out").map(str::to_owned),
     };
     // named policy presets extend the registry before the first request —
     // a bad file is a startup error, not a first-request surprise
@@ -245,6 +269,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .map_err(|e| anyhow!("--policy-file: {e}"))?;
         eprintln!("loaded {n} policy aliases from {path}");
     }
+    let registry = std::sync::Arc::new(registry);
+    if backend_kind == "gmm" {
+        return serve_with_registry(
+            move || Ok(GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05))),
+            cfg,
+            registry,
+        );
+    }
     // the PJRT client is thread-affine: the factory is called inside each
     // shard's engine thread (once per `--shards` replica)
     serve_with_registry(
@@ -254,8 +286,62 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Ok(be)
         },
         cfg,
-        std::sync::Arc::new(registry),
+        registry,
     )
+}
+
+/// `agd replay`: fire a captured trace (`--trace-out` JSONL) back at a
+/// live server, open-loop at `--speed`× across `--connections` sockets,
+/// digest-checking every completion against the capture and writing the
+/// wire-latency report to `--out` (default `BENCH_replay.json`).
+fn cmd_replay(args: &Args) -> Result<()> {
+    let trace_path = args
+        .get("trace")
+        .ok_or_else(|| anyhow!("replay needs --trace FILE (a --trace-out capture)"))?;
+    let records = chaos::read_trace(trace_path)?;
+    let cfg = chaos::ReplayConfig {
+        addr: args.get_or("addr", "127.0.0.1:7458").to_owned(),
+        speed: args.f64("speed", 1.0),
+        connections: args.usize("connections", 4).max(1),
+        timeout_ms: args.u64("timeout-ms", 30_000),
+    };
+    eprintln!(
+        "replaying {} records from {trace_path} against {} (speed {}x, {} connections)",
+        records.len(),
+        cfg.addr,
+        cfg.speed,
+        cfg.connections
+    );
+    let outcome = chaos::replay(&records, &cfg)?;
+    let shed: Vec<String> = outcome
+        .shed
+        .iter()
+        .map(|(code, n)| format!("{code}={n}"))
+        .collect();
+    println!(
+        "sent {} completed {} shed {} [{}] transport_errors {} wall {:.0}ms",
+        outcome.sent,
+        outcome.completed,
+        outcome.shed_total(),
+        shed.join(","),
+        outcome.transport_errors,
+        outcome.wall_ms
+    );
+    println!(
+        "digests: {} checked, {} mismatched",
+        outcome.digest_checked, outcome.digest_mismatches
+    );
+    let out = args.get_or("out", "BENCH_replay.json");
+    chaos::replay::write_report(out, &outcome, &cfg)?;
+    // a digest divergence means the server did not serve what it served
+    // at capture time — fail loudly so CI catches it
+    anyhow::ensure!(
+        outcome.digest_mismatches == 0,
+        "{} of {} digest-checked completions diverged from the capture",
+        outcome.digest_mismatches,
+        outcome.digest_checked
+    );
+    Ok(())
 }
 
 fn cmd_search(args: &Args) -> Result<()> {

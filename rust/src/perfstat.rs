@@ -12,10 +12,41 @@ pub struct Summary {
     pub mean_ms: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
+    pub p99_ms: f64,
     pub min_ms: f64,
 }
 
 impl Summary {
+    /// Summarize an existing sample set (milliseconds) — the constructor
+    /// for harnesses that collect their own timings (e.g. `agd replay`
+    /// wire latencies) instead of timing a closure via [`bench`]. An
+    /// empty sample set yields an all-zero row rather than an error, so
+    /// a fully-shed replay still produces a report.
+    pub fn from_samples_ms(name: &str, samples_ms: &[f64]) -> Summary {
+        if samples_ms.is_empty() {
+            return Summary {
+                name: name.to_owned(),
+                iters: 0,
+                mean_ms: 0.0,
+                p50_ms: 0.0,
+                p95_ms: 0.0,
+                p99_ms: 0.0,
+                min_ms: 0.0,
+            };
+        }
+        let mut sorted = samples_ms.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            name: name.to_owned(),
+            iters: sorted.len(),
+            mean_ms: sorted.iter().sum::<f64>() / sorted.len() as f64,
+            p50_ms: crate::stats::percentile_sorted(&sorted, 50.0),
+            p95_ms: crate::stats::percentile_sorted(&sorted, 95.0),
+            p99_ms: crate::stats::percentile_sorted(&sorted, 99.0),
+            min_ms: sorted[0],
+        }
+    }
+
     /// JSON form of one row — the unit of the machine-readable perf
     /// trajectory (`--out` on the bench harnesses).
     pub fn to_json(&self) -> crate::util::json::Value {
@@ -26,6 +57,7 @@ impl Summary {
             ("mean_ms", num(self.mean_ms)),
             ("p50_ms", num(self.p50_ms)),
             ("p95_ms", num(self.p95_ms)),
+            ("p99_ms", num(self.p99_ms)),
             ("min_ms", num(self.min_ms)),
         ])
     }
@@ -37,6 +69,7 @@ impl Summary {
             format!("{:.3}", self.mean_ms),
             format!("{:.3}", self.p50_ms),
             format!("{:.3}", self.p95_ms),
+            format!("{:.3}", self.p99_ms),
             format!("{:.3}", self.min_ms),
         ]
     }
@@ -54,21 +87,13 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> S
         f();
         samples.push(t0.elapsed().as_secs_f64() * 1e3);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    Summary {
-        name: name.to_owned(),
-        iters,
-        mean_ms: samples.iter().sum::<f64>() / iters as f64,
-        p50_ms: crate::stats::percentile_sorted(&samples, 50.0),
-        p95_ms: crate::stats::percentile_sorted(&samples, 95.0),
-        min_ms: samples[0],
-    }
+    Summary::from_samples_ms(name, &samples)
 }
 
 /// Print a set of summaries as an aligned table.
 pub fn print_summaries(rows: &[Summary]) {
     crate::eval::harness::print_table(
-        &["benchmark", "iters", "mean ms", "p50 ms", "p95 ms", "min ms"],
+        &["benchmark", "iters", "mean ms", "p50 ms", "p95 ms", "p99 ms", "min ms"],
         &rows.iter().map(Summary::row).collect::<Vec<_>>(),
     );
 }
@@ -127,6 +152,26 @@ mod tests {
         assert_eq!(s.iters, 20);
         assert!(s.min_ms <= s.p50_ms);
         assert!(s.p50_ms <= s.p95_ms + 1e-9);
+        assert!(s.p95_ms <= s.p99_ms + 1e-9);
         assert!(s.mean_ms > 0.0);
+    }
+
+    #[test]
+    fn from_samples_summarizes_external_timings() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::from_samples_ms("wire", &samples);
+        assert_eq!(s.iters, 100);
+        assert_eq!(s.min_ms, 1.0);
+        assert!((s.mean_ms - 50.5).abs() < 1e-9);
+        assert!(s.p50_ms >= 49.0 && s.p50_ms <= 51.0, "{}", s.p50_ms);
+        assert!(s.p99_ms >= 98.0 && s.p99_ms <= 100.0, "{}", s.p99_ms);
+        // order-independence: the constructor sorts
+        let mut shuffled = samples.clone();
+        shuffled.reverse();
+        assert_eq!(Summary::from_samples_ms("wire", &shuffled).p99_ms, s.p99_ms);
+        // an all-shed replay (no samples) still yields a row
+        let empty = Summary::from_samples_ms("none", &[]);
+        assert_eq!(empty.iters, 0);
+        assert_eq!(empty.p99_ms, 0.0);
     }
 }

@@ -32,6 +32,22 @@
 //! sum, so the unlabelled merge skips gauges entirely and the fleet
 //! publishes the extensive totals (`active_requests`, `queue_depth`,
 //! `queued_nfes`) itself from its scalar per-shard snapshots.
+//!
+//! # §Robustness: fleet-level counters
+//!
+//! A dead shard's registry is unreachable (its engine thread is gone), so
+//! robustness events are counted in a registry owned by the fleet
+//! front-end itself and folded into the same merge ([`crate::fleet`]):
+//!
+//! * `shard_died_total{shard=N}` — the shard's engine died (pump failure
+//!   or injected fault); derived from router liveness so it survives the
+//!   shard's own registry.
+//! * `chaos_kill_shard_total{shard=N}` — fault injections delivered via
+//!   `Fleet::kill_shard` (the chaos harness, [`crate::chaos`]).
+//! * `conn_bad_line_total{kind=utf8|oversized}` — refused wire frames
+//!   (server hardening: non-UTF-8 lines, `--max-line-bytes` cap).
+//! * `conn_timeout_total{kind=idle|midline}` — connections cut off at
+//!   `--read-timeout-ms` (idle peers vs slowloris mid-line stalls).
 
 use std::collections::{BTreeMap, BTreeSet};
 

@@ -32,7 +32,8 @@
 //!           "client_id": "web", "priority": 1, "deadline_ms": 2500}
 //! response {"id": 3, "policy": "ag(ḡ=0.991)", "nfes": 31, "cfg_steps": 11,
 //!           "truncated_at": 10, "ms": 128.4, "image": [...]?}
-//! error    {"error": "...", "registered": ["ag", "cfg", ...]?}
+//! error    {"error": "...", "code": "invalid_request",
+//!           "registered": ["ag", "cfg", ...]?}
 //! shed     {"error": "queue full: ...", "code": "queue_full",
 //!           "scope": "global"|"shard", ...}
 //!          {"error": "deadline infeasible: ...",
@@ -69,7 +70,52 @@
 //! A fleet whose every shard has died (failed backend construction, fatal
 //! pump errors) refuses requests with `"code": "unavailable"` — distinct
 //! from `"draining"` so clients fail over instead of politely waiting out
-//! a shutdown that never announced itself.
+//! a shutdown that never announced itself. A request caught on a shard
+//! that dies mid-flight is refused with `"code": "shard_failed"` (plus
+//! the shard index) rather than silently dropped.
+//!
+//! # §Robustness: input hardening
+//!
+//! Every structured refusal carries a `"code"`; the full set is
+//! `invalid_request` · `unknown_cmd` · `queue_full` ·
+//! `deadline_infeasible` · `draining` · `unavailable` · `shard_failed` ·
+//! `timeout`. Beyond bad JSON, two wire-level attacks are handled per
+//! connection:
+//!
+//! * **Oversized frames** — a request line longer than `--max-line-bytes`
+//!   (default 1 MiB) is refused with `"code": "invalid_request"` and the
+//!   connection is closed without buffering the rest; the handler never
+//!   allocates more than the cap per line.
+//! * **Slowloris** — a writer that trickles bytes without ever finishing
+//!   a line is cut off by `--read-timeout-ms` (default 60000; 0
+//!   disables): an idle connection (no partial line) is closed silently,
+//!   a mid-line stall gets `"code": "timeout"` first. Counted as
+//!   `conn_timeout_total{kind="idle"|"midline"}`; malformed frames as
+//!   `conn_bad_line_total{kind="oversized"|"utf8"}`.
+//!
+//! # §Robustness: trace capture, replay, chaos
+//!
+//! `agd serve --trace-out FILE` appends one JSONL record per served
+//! request — arrival-offset µs, the request envelope verbatim, client
+//! id, and the completion digest ([`crate::chaos::trace`]):
+//!
+//! ```text
+//! {"offset_us": 18234, "client_id": "web-1", "digest": "9f1c…",
+//!  "envelope": {"prompt": "red circle", "steps": 8, "image": true}}
+//! ```
+//!
+//! `agd replay --trace FILE --speed X --connections N [--addr H:P]`
+//! re-issues a trace open-loop over real TCP connections and writes wire
+//! latency (p50/p95/p99), shed codes, and digest-match counts to
+//! `BENCH_replay.json` ([`crate::chaos::replay`]). Because the digest is
+//! computable on both ends of the wire, capture → replay round trips
+//! prove served completions byte-identical.
+//!
+//! Fault injection is scripted: `scenarios/*.txt` files (ops: `connect` ·
+//! `send` · `expect-ok` · `expect-code` · `expect-closed` · `send-raw` ·
+//! `send-raw-repeat` · `slowloris` · `disconnect` · `kill-shard` ·
+//! `drain` · `sleep`; grammar in [`crate::chaos::director`]) run against
+//! a live listener via [`serve_on`] in `rust/tests/chaos_integration.rs`.
 //!
 //! The `"policy"` field is a [`PolicySpec`]: either a bare registered name
 //! (`"linear-ag"`, `"compressed-cfg"`, a `--policy-file` alias, …) or an
@@ -97,15 +143,17 @@
 //! serving fleet; permanent ones still propagate so a supervisor sees
 //! the crash.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::chaos::trace::{completion_digest, TraceSink};
 use crate::coordinator::request::{Completion, Request};
 use crate::coordinator::spec::{PolicyRegistry, PolicySpec, SpecError};
-use crate::fleet::{Fleet, FleetConfig, JobReply, Placement, RouteError, ScopedShed};
+use crate::fleet::{Fleet, FleetConfig, JobReply, Placement, RouteError, ScopedShed, ShardFailed};
 use crate::prompts::Prompt;
 use crate::sched::{Admission, AdmitError, SchedulerKind};
 use crate::backend::Backend;
@@ -138,6 +186,19 @@ pub struct ServerConfig {
     /// Worker lanes per shard (`--workers`); 0 = available parallelism
     /// split across the shards (§Perf: parallel execution).
     pub workers: usize,
+    /// Hard cap on one request line (`--max-line-bytes`, default 1 MiB):
+    /// a longer line is refused with `"code": "invalid_request"` and the
+    /// connection closed, without ever buffering more than the cap
+    /// (§Robustness: input hardening).
+    pub max_line_bytes: usize,
+    /// Per-connection read deadline in ms (`--read-timeout-ms`, default
+    /// 60000; 0 = no deadline): idle connections are closed silently, a
+    /// mid-line stall — the slowloris pattern — gets `"code": "timeout"`
+    /// first (§Robustness: input hardening).
+    pub read_timeout_ms: u64,
+    /// Append one JSONL trace record per served request
+    /// (`--trace-out FILE`; [`crate::chaos::trace`]).
+    pub trace_out: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -155,6 +216,9 @@ impl Default for ServerConfig {
             placement: Placement::LeastLoaded,
             shed_infeasible: false,
             workers: 0,
+            max_line_bytes: 1 << 20,
+            read_timeout_ms: 60_000,
+            trace_out: None,
         }
     }
 }
@@ -162,7 +226,10 @@ impl Default for ServerConfig {
 impl ServerConfig {
     /// The fleet topology this config describes (the per-client quota
     /// travels with the shard budgets — it is enforced shard-side).
-    fn fleet_config(&self) -> FleetConfig {
+    /// The fleet topology this config describes — public so harnesses
+    /// that drive [`serve_on`] directly (the chaos integration tests)
+    /// launch their [`Fleet`] with exactly the serving semantics.
+    pub fn fleet_config(&self) -> FleetConfig {
         FleetConfig {
             shards: self.shards.max(1),
             placement: self.placement,
@@ -368,15 +435,9 @@ fn admit_error_fields(refused: &AdmitError, fields: &mut Vec<(&'static str, Valu
     }
 }
 
-/// Encode an error as a structured protocol line (proper JSON escaping).
-/// Unknown-policy errors carry the registered names; admission shedding
-/// carries `"code": "queue_full"` plus the budget numbers (and, from a
-/// fleet, the `"scope"` that tripped) so clients can back off
-/// proportionally; infeasible deadlines carry `"code":
-/// "deadline_infeasible"`; a draining fleet replies `"code": "draining"`
-/// and an all-shards-dead fleet `"code": "unavailable"`; malformed
-/// requests refused at the door carry `"code": "invalid_request"`.
-pub fn error_to_line(e: &anyhow::Error) -> String {
+/// The structured fields an error downcasts to (shared by
+/// [`error_to_line`] and the code-defaulting request path).
+fn error_fields(e: &anyhow::Error) -> Vec<(&'static str, Value)> {
     let mut fields = vec![("error", json::s(&format!("{e:#}")))];
     if let Some(SpecError::UnknownPolicy { known, .. }) = e.downcast_ref::<SpecError>() {
         fields.push((
@@ -390,6 +451,12 @@ pub fn error_to_line(e: &anyhow::Error) -> String {
     } else if let Some(refused) = e.downcast_ref::<AdmitError>() {
         admit_error_fields(refused, &mut fields);
     }
+    // a shard that died mid-flight: not the client's fault, retryable on
+    // the survivors — the code + shard index say so
+    if let Some(failed) = e.downcast_ref::<ShardFailed>() {
+        fields.push(("code", json::s("shard_failed")));
+        fields.push(("shard", json::num(failed.shard as f64)));
+    }
     match e.downcast_ref::<RouteError>() {
         // graceful drain: clients should stop sending and disconnect
         Some(RouteError::Draining) => fields.push(("code", json::s("draining"))),
@@ -398,21 +465,64 @@ pub fn error_to_line(e: &anyhow::Error) -> String {
         Some(RouteError::Closed) => fields.push(("code", json::s("unavailable"))),
         None => {}
     }
+    fields
+}
+
+/// Encode an error as a structured protocol line (proper JSON escaping).
+/// Unknown-policy errors carry the registered names; admission shedding
+/// carries `"code": "queue_full"` plus the budget numbers (and, from a
+/// fleet, the `"scope"` that tripped) so clients can back off
+/// proportionally; infeasible deadlines carry `"code":
+/// "deadline_infeasible"`; a draining fleet replies `"code": "draining"`,
+/// an all-shards-dead fleet `"code": "unavailable"`, and a shard death
+/// mid-flight `"code": "shard_failed"`; malformed requests refused at
+/// the door carry `"code": "invalid_request"`.
+pub fn error_to_line(e: &anyhow::Error) -> String {
+    json::to_string(&json::obj(error_fields(e)))
+}
+
+/// Error line with `code` defaulting to `code` when no downcast set one —
+/// the request path uses this so *every* refusal is machine-readable
+/// (a bad-JSON frame or unknown policy is `"invalid_request"`, an
+/// unrecognized `{"cmd"}` is `"unknown_cmd"`).
+fn error_line_coded(e: &anyhow::Error, code: &str) -> String {
+    let mut fields = error_fields(e);
+    if !fields.iter().any(|(k, _)| *k == "code") {
+        fields.push(("code", json::s(code)));
+    }
     json::to_string(&json::obj(fields))
+}
+
+/// A protocol error line from scratch (no anyhow error to downcast) —
+/// the wire-hardening replies (oversized frame, mid-line timeout).
+fn static_error_line(msg: &str, code: &str) -> String {
+    json::to_string(&json::obj(vec![
+        ("error", json::s(msg)),
+        ("code", json::s(code)),
+    ]))
 }
 
 /// Dispatch one protocol line: a `{"cmd": ..}` control line or a
 /// generation request. Returns the reply line, or None when the fleet is
-/// gone mid-request and the connection should close.
+/// gone mid-request and the connection should close. When a trace sink
+/// is wired (`--trace-out`), every *served* request appends one record —
+/// arrival offset sampled here at entry (so replay reproduces arrival
+/// spacing), digest computed from the completion the client was sent.
 fn dispatch_line(
     line: &str,
     fleet: &Fleet,
     cfg: &ServerConfig,
     registry: &PolicyRegistry,
+    trace: Option<&TraceSink>,
 ) -> Option<String> {
     let v = match json::parse(line) {
         Ok(v) => v,
-        Err(e) => return Some(error_to_line(&anyhow!("bad request json: {e}"))),
+        Err(e) => {
+            return Some(error_line_coded(
+                &anyhow!("bad request json: {e}"),
+                "invalid_request",
+            ))
+        }
     };
     if let Some(cmd) = v.get("cmd").and_then(Value::as_str) {
         return Some(match cmd {
@@ -436,21 +546,104 @@ fn dispatch_line(
                     ("shards", json::num(shards as f64)),
                 ]))
             }
-            other => error_to_line(&anyhow!(
-                "unknown cmd `{other}` (supported: stats, metrics, drain)"
-            )),
+            other => error_line_coded(
+                &anyhow!("unknown cmd `{other}` (supported: stats, metrics, drain)"),
+                "unknown_cmd",
+            ),
         });
     }
+    let arrival_us = trace.map(TraceSink::arrival_offset_us);
     match parse_request_value(&v, cfg, registry) {
-        Ok((req, want_image)) => match fleet.submit(req) {
-            Ok(reply) => match reply.recv() {
-                Ok(JobReply::Done(c, ms)) => Some(completion_to_line(&c, ms, want_image)),
-                Ok(JobReply::Error(line)) => Some(line),
-                Err(_) => None, // shard died mid-request
-            },
-            Err(e) => Some(error_to_line(&e)),
-        },
-        Err(e) => Some(error_to_line(&e)),
+        Ok((req, want_image)) => {
+            let client_id = req.client_id.clone();
+            match fleet.submit(req) {
+                Ok(reply) => match reply.recv() {
+                    Ok(JobReply::Done(c, ms)) => {
+                        if let (Some(sink), Some(at)) = (trace, arrival_us) {
+                            sink.record(at, &v, client_id.as_deref(), &completion_digest(&c));
+                        }
+                        Some(completion_to_line(&c, ms, want_image))
+                    }
+                    Ok(JobReply::Error(line)) => Some(line),
+                    Err(_) => None, // shard died mid-request
+                },
+                Err(e) => Some(error_to_line(&e)),
+            }
+        }
+        Err(e) => Some(error_line_coded(&e, "invalid_request")),
+    }
+}
+
+/// One bounded, deadline-aware line read (§Robustness: input hardening).
+enum LineRead {
+    Line(String),
+    /// Complete line, not UTF-8: refusable without closing.
+    BadUtf8,
+    /// The cap tripped before a newline arrived: refuse + close, and
+    /// never buffer more than the cap.
+    TooLong,
+    /// Deadline passed with no partial line: silent close.
+    IdleTimeout,
+    /// Deadline passed mid-line — the slowloris shape: coded reply + close.
+    MidLineTimeout,
+    /// EOF or a hard IO error.
+    Closed,
+}
+
+/// Read one `\n`-terminated line without ever holding more than `max`
+/// bytes, honouring the socket's read timeout (`deadline`, if any)
+/// *per line*: a writer trickling one byte per `timeout-ε` still trips
+/// the deadline, because it is measured from the line's first byte.
+fn read_line_bounded(
+    reader: &mut BufReader<TcpStream>,
+    max: usize,
+    deadline: Option<Duration>,
+) -> LineRead {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut line_started: Option<Instant> = None;
+    loop {
+        if let (Some(dl), Some(t0)) = (deadline, line_started) {
+            if t0.elapsed() >= dl {
+                return LineRead::MidLineTimeout;
+            }
+        }
+        let chunk = match reader.fill_buf() {
+            Ok([]) => return LineRead::Closed, // EOF (mid-line EOF included)
+            Ok(c) => c,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                // the socket read timeout fired: idle vs slowloris is
+                // whether a line is in progress
+                return if buf.is_empty() {
+                    LineRead::IdleTimeout
+                } else {
+                    LineRead::MidLineTimeout
+                };
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return LineRead::Closed,
+        };
+        if line_started.is_none() {
+            line_started = Some(Instant::now());
+        }
+        if let Some(pos) = chunk.iter().position(|&b| b == b'\n') {
+            if buf.len() + pos > max {
+                reader.consume(pos + 1);
+                return LineRead::TooLong;
+            }
+            buf.extend_from_slice(&chunk[..pos]);
+            reader.consume(pos + 1);
+            return match String::from_utf8(buf) {
+                Ok(s) => LineRead::Line(s),
+                Err(_) => LineRead::BadUtf8,
+            };
+        }
+        let n = chunk.len();
+        if buf.len() + n > max {
+            reader.consume(n);
+            return LineRead::TooLong;
+        }
+        buf.extend_from_slice(chunk);
+        reader.consume(n);
     }
 }
 
@@ -459,13 +652,18 @@ fn handle_conn(
     fleet: Arc<Fleet>,
     cfg: ServerConfig,
     registry: Arc<PolicyRegistry>,
+    trace: Option<Arc<TraceSink>>,
 ) {
     let peer = stream
         .peer_addr()
         .map(|a| a.to_string())
         .unwrap_or_default();
+    let deadline = (cfg.read_timeout_ms > 0).then(|| Duration::from_millis(cfg.read_timeout_ms));
+    if stream.set_read_timeout(deadline).is_err() {
+        log::warn!("connection {peer}: set_read_timeout failed");
+    }
     // a failed clone (fd pressure) closes this connection, not the server
-    let reader = match stream.try_clone() {
+    let mut reader = match stream.try_clone() {
         Ok(clone) => BufReader::new(clone),
         Err(e) => {
             log::warn!("connection {peer}: stream clone failed: {e}");
@@ -473,18 +671,65 @@ fn handle_conn(
         }
     };
     let mut writer = stream;
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let Some(reply_line) = dispatch_line(&line, &fleet, &cfg, &registry) else {
-            break;
-        };
-        if writer.write_all(reply_line.as_bytes()).is_err()
-            || writer.write_all(b"\n").is_err()
-        {
-            break;
+    let mut send = |writer: &mut TcpStream, line: &str| -> bool {
+        writer.write_all(line.as_bytes()).is_ok() && writer.write_all(b"\n").is_ok()
+    };
+    loop {
+        match read_line_bounded(&mut reader, cfg.max_line_bytes, deadline) {
+            LineRead::Line(line) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let Some(reply_line) =
+                    dispatch_line(&line, &fleet, &cfg, &registry, trace.as_deref())
+                else {
+                    break;
+                };
+                if !send(&mut writer, &reply_line) {
+                    break;
+                }
+            }
+            // a complete non-UTF-8 frame is refusable in-band; the
+            // connection survives (framing is intact)
+            LineRead::BadUtf8 => {
+                fleet.count("conn_bad_line_total", &[("kind", "utf8")]);
+                let line =
+                    static_error_line("request line is not valid UTF-8", "invalid_request");
+                if !send(&mut writer, &line) {
+                    break;
+                }
+            }
+            // past the cap the rest of the frame is undelimited garbage:
+            // refuse and close
+            LineRead::TooLong => {
+                fleet.count("conn_bad_line_total", &[("kind", "oversized")]);
+                let line = static_error_line(
+                    &format!(
+                        "request line exceeds --max-line-bytes ({})",
+                        cfg.max_line_bytes
+                    ),
+                    "invalid_request",
+                );
+                let _ = send(&mut writer, &line);
+                break;
+            }
+            LineRead::IdleTimeout => {
+                fleet.count("conn_timeout_total", &[("kind", "idle")]);
+                break;
+            }
+            LineRead::MidLineTimeout => {
+                fleet.count("conn_timeout_total", &[("kind", "midline")]);
+                let line = static_error_line(
+                    &format!(
+                        "no complete request line within --read-timeout-ms ({})",
+                        cfg.read_timeout_ms
+                    ),
+                    "timeout",
+                );
+                let _ = send(&mut writer, &line);
+                break;
+            }
+            LineRead::Closed => break,
         }
     }
     log::info!("connection {peer} closed");
@@ -560,6 +805,25 @@ where
         cfg.placement.name()
     );
     let fleet = Arc::new(Fleet::launch(move |_shard| factory(), cfg.fleet_config()));
+    serve_on(listener, fleet, cfg, registry)
+}
+
+/// The accept loop over an already-bound listener and an already-launched
+/// fleet — the production path of [`serve_with_registry`], public so the
+/// chaos harness (`rust/tests/chaos_integration.rs`) can drive the *real*
+/// serving loop (hardened reads, trace capture, counters and all) on an
+/// ephemeral port while keeping a [`Fleet`] handle to inject faults into.
+/// Blocks until the listener fails permanently.
+pub fn serve_on(
+    listener: TcpListener,
+    fleet: Arc<Fleet>,
+    cfg: ServerConfig,
+    registry: Arc<PolicyRegistry>,
+) -> Result<()> {
+    let trace = match &cfg.trace_out {
+        Some(path) => Some(Arc::new(TraceSink::create(path)?)),
+        None => None,
+    };
     for stream in listener.incoming() {
         // transient accept failures (EMFILE, aborted handshakes, EINTR)
         // must not kill the fleet: log, back off a beat, keep accepting.
@@ -577,7 +841,8 @@ where
         let fleet = fleet.clone();
         let cfg = cfg.clone();
         let registry = registry.clone();
-        std::thread::spawn(move || handle_conn(stream, fleet, cfg, registry));
+        let trace = trace.clone();
+        std::thread::spawn(move || handle_conn(stream, fleet, cfg, registry, trace));
     }
     Ok(())
 }
@@ -844,8 +1109,9 @@ mod tests {
         assert!(v.req("error").as_str().unwrap().contains("invalid request"));
     }
 
-    /// Spin up a listener + fleet on the GMM backend; returns the address
-    /// to connect to (and the fleet, so tests can inspect/drain it).
+    /// Spin up the *real* accept loop ([`serve_on`]) + fleet on the GMM
+    /// backend over an ephemeral port; returns the address to connect to
+    /// (and the fleet, so tests can inspect/drain it).
     fn spawn_test_server(scfg: ServerConfig) -> (std::net::SocketAddr, Arc<Fleet>) {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
@@ -864,13 +1130,7 @@ mod tests {
         {
             let fleet = fleet.clone();
             std::thread::spawn(move || {
-                for stream in listener.incoming() {
-                    let Ok(stream) = stream else { continue };
-                    let fleet = fleet.clone();
-                    let scfg = scfg.clone();
-                    let registry = registry.clone();
-                    std::thread::spawn(move || handle_conn(stream, fleet, scfg, registry));
-                }
+                let _ = serve_on(listener, fleet, scfg, registry);
             });
         }
         (addr, fleet)
@@ -1123,5 +1383,172 @@ mod tests {
         // drain is idempotent over the wire too
         let v = roundtrip(&mut conn, r#"{"cmd": "drain"}"#);
         assert_eq!(v.req("drained").as_bool(), Some(true));
+    }
+
+    /// Structured `shard_failed` lines: a mid-flight shard death
+    /// downcasts to [`ShardFailed`], names the shard, and tells the
+    /// client the request is retryable on the survivors.
+    #[test]
+    fn shard_failed_errors_are_structured() {
+        let e = anyhow::Error::new(ShardFailed {
+            shard: 3,
+            reason: "engine pump failed: boom".into(),
+        });
+        let line = error_to_line(&e);
+        let v = json::parse(&line).unwrap_or_else(|err| panic!("{line}: {err}"));
+        assert_eq!(v.req("code").as_str(), Some("shard_failed"));
+        assert_eq!(v.req("shard").as_f64(), Some(3.0));
+        assert!(v.req("error").as_str().unwrap().contains("boom"));
+        assert!(v.req("error").as_str().unwrap().contains("shard 3"));
+    }
+
+    /// §Robustness: the malformed-frame table. Every complete-but-bad
+    /// frame gets a structured, coded refusal in-band; none of them kill
+    /// the connection (framing stays intact) or the fleet.
+    #[test]
+    fn tcp_malformed_frames_are_refused_in_band() {
+        use std::io::{BufRead, BufReader, Write};
+        let (addr, fleet) = spawn_test_server(ServerConfig::default());
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let table: &[(&[u8], &str)] = &[
+            (br#"{"prompt": "red circle""#, "invalid_request"), // truncated JSON
+            (b"not json at all", "invalid_request"),
+            (br#"{"cmd": "reboot"}"#, "unknown_cmd"),
+            (b"{\"prompt\": \"\xff\xfe broken\"}", "invalid_request"), // non-UTF-8
+        ];
+        for (payload, want_code) in table {
+            conn.write_all(payload).unwrap();
+            conn.write_all(b"\n").unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut reply = String::new();
+            reader.read_line(&mut reply).unwrap();
+            let v = json::parse(reply.trim()).unwrap_or_else(|e| panic!("{reply}: {e}"));
+            assert_eq!(v.req("code").as_str(), Some(*want_code), "{reply}");
+            assert!(v.get("error").is_some(), "{reply}");
+        }
+        // the connection AND the fleet still serve real work afterwards
+        let v = roundtrip(
+            &mut conn,
+            r#"{"prompt": "red circle", "policy": "cfg", "steps": 4, "guidance": 2.0}"#,
+        );
+        assert!(v.get("error").is_none(), "{v:?}");
+        assert_eq!(v.req("nfes").as_f64(), Some(8.0));
+        // and the unframeable refusal was counted by kind
+        let m = fleet.metrics_prometheus().unwrap();
+        assert!(m.contains(r#"conn_bad_line_total{kind="utf8"} 1"#), "{m}");
+    }
+
+    /// §Robustness: the line-length cap. A frame past `--max-line-bytes`
+    /// is refused with `invalid_request` and the connection is closed —
+    /// past the cap the rest of the frame is undelimited garbage — while
+    /// the listener keeps serving fresh connections.
+    #[test]
+    fn tcp_oversized_line_is_refused_and_closed() {
+        use std::io::{BufRead, BufReader, Write};
+        let (addr, fleet) = spawn_test_server(ServerConfig {
+            max_line_bytes: 256,
+            ..Default::default()
+        });
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut big = vec![b'x'; 4096];
+        big.push(b'\n');
+        conn.write_all(&big).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        let v = json::parse(reply.trim()).unwrap_or_else(|e| panic!("{reply}: {e}"));
+        assert_eq!(v.req("code").as_str(), Some("invalid_request"), "{reply}");
+        assert!(v.req("error").as_str().unwrap().contains("max-line-bytes"));
+        // …and the server hangs up: the next read is EOF
+        let mut end = String::new();
+        assert_eq!(reader.read_line(&mut end).unwrap(), 0, "{end}");
+        let m = fleet.metrics_prometheus().unwrap();
+        assert!(
+            m.contains(r#"conn_bad_line_total{kind="oversized"} 1"#),
+            "{m}"
+        );
+        // the listener itself survives: a fresh connection still serves
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let v = roundtrip(
+            &mut conn,
+            r#"{"prompt": "red circle", "policy": "cfg", "steps": 4, "guidance": 2.0}"#,
+        );
+        assert!(v.get("error").is_none(), "{v:?}");
+    }
+
+    /// §Robustness: slowloris cutoff. A connection that starts a frame
+    /// but never finishes it is cut off at `--read-timeout-ms` with a
+    /// coded `timeout` reply; a fully idle connection is closed silently.
+    /// Both cutoffs are counted by kind.
+    #[test]
+    fn tcp_slowloris_and_idle_connections_time_out() {
+        use std::io::{BufRead, BufReader, Write};
+        let (addr, fleet) = spawn_test_server(ServerConfig {
+            read_timeout_ms: 200,
+            ..Default::default()
+        });
+        // slowloris: open a frame, never finish it
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(b"{\"prompt\": ").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        let v = json::parse(reply.trim()).unwrap_or_else(|e| panic!("{reply}: {e}"));
+        assert_eq!(v.req("code").as_str(), Some("timeout"), "{reply}");
+        assert!(v.req("error").as_str().unwrap().contains("read-timeout-ms"));
+        let mut end = String::new();
+        assert_eq!(reader.read_line(&mut end).unwrap(), 0, "{end}");
+        // idle: no bytes at all → silent close
+        let idle = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(idle.try_clone().unwrap());
+        let mut end = String::new();
+        assert_eq!(reader.read_line(&mut end).unwrap(), 0, "{end}");
+        drop(idle);
+        let m = fleet.metrics_prometheus().unwrap();
+        assert!(m.contains(r#"conn_timeout_total{kind="midline"} 1"#), "{m}");
+        assert!(m.contains(r#"conn_timeout_total{kind="idle"} 1"#), "{m}");
+    }
+
+    /// Tentpole hook: `--trace-out` appends one JSONL record per *served*
+    /// request — arrival offset, original envelope, client id, and a
+    /// completion digest that matches what the client computes from the
+    /// reply it actually received. Refused frames are not recorded.
+    #[test]
+    fn tcp_trace_capture_round_trips_digests() {
+        use crate::chaos::{read_trace, reply_digest};
+        let path = std::env::temp_dir().join(format!(
+            "agd_trace_capture_{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let (addr, _fleet) = spawn_test_server(ServerConfig {
+            trace_out: Some(path.to_str().unwrap().to_owned()),
+            ..Default::default()
+        });
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut reply_digests = Vec::new();
+        for (i, policy) in ["cfg", "ag"].iter().enumerate() {
+            let line = format!(
+                r#"{{"prompt": "red circle", "policy": "{policy}", "steps": 6, "guidance": 2.0, "seed": {i}, "image": true, "client_id": "cap-{i}"}}"#
+            );
+            let v = roundtrip(&mut conn, &line);
+            assert!(v.get("error").is_none(), "{v:?}");
+            reply_digests.push(reply_digest(&v).expect("reply has image+nfes+cfg_steps"));
+        }
+        // a refused frame must NOT be recorded
+        let v = roundtrip(&mut conn, "not json");
+        assert_eq!(v.req("code").as_str(), Some("invalid_request"));
+        let records = read_trace(path.to_str().unwrap()).unwrap();
+        assert_eq!(records.len(), 2, "only served requests are recorded");
+        for (i, rec) in records.iter().enumerate() {
+            assert_eq!(rec.client_id.as_deref(), Some(format!("cap-{i}").as_str()));
+            assert_eq!(rec.digest.as_deref(), Some(reply_digests[i].as_str()));
+            assert!(rec.wants_image());
+            // the envelope round-trips as a replayable request line
+            assert!(json::parse(&rec.request_line()).is_ok());
+        }
+        // arrival offsets are monotone (read_trace sorts by arrival)
+        assert!(records[0].offset_us <= records[1].offset_us);
+        let _ = std::fs::remove_file(&path);
     }
 }

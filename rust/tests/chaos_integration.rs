@@ -1,0 +1,281 @@
+//! Chaos + replay integration (§Robustness): every test drives the *real*
+//! serving loop — `serve_on` on an ephemeral port, real TCP connections,
+//! a real [`Fleet`] handle for fault injection — from the scenario corpus
+//! in `scenarios/*.txt`.
+//!
+//! The invariant under test is the one the whole stack is built on:
+//! faults change *who* gets served (structured shed codes, closed
+//! connections), never *what* a survivor is served. Survivor completions
+//! are digest-compared against a fresh, fault-free single-shard run of
+//! the same request line.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use adaptive_guidance::backend::GmmBackend;
+use adaptive_guidance::chaos::{
+    self, completion_digest, read_trace, reply_digest, Director, ReplayConfig,
+};
+use adaptive_guidance::coordinator::spec::PolicyRegistry;
+use adaptive_guidance::fleet::{Fleet, JobReply};
+use adaptive_guidance::server::{parse_request_line, serve_on, ServerConfig};
+use adaptive_guidance::sim::gmm::Gmm;
+use adaptive_guidance::util::json;
+
+/// The chaos backend: deliberately *slow* (dim 64, 6 components) so the
+/// long-step scenario requests are still in flight when faults land.
+fn chaos_gmm() -> Gmm {
+    Gmm::axes(64, 6, 3.0, 0.05)
+}
+
+/// Baseline harness config; scenarios override the knobs they exercise.
+fn base_cfg() -> ServerConfig {
+    ServerConfig {
+        model: "gmm".into(),
+        shards: 2,
+        workers: 2,
+        ..Default::default()
+    }
+}
+
+/// Bind an ephemeral port and run the production accept loop against a
+/// GMM fleet; returns the address plus the fleet handle faults go into.
+fn spawn_chaos_server(mut scfg: ServerConfig) -> (std::net::SocketAddr, Arc<Fleet>, ServerConfig) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    scfg.addr = addr.to_string();
+    let fleet = Arc::new(Fleet::launch(
+        |_shard| Ok(GmmBackend::new(chaos_gmm())),
+        scfg.fleet_config(),
+    ));
+    let registry = Arc::new(PolicyRegistry::builtin());
+    {
+        let fleet = fleet.clone();
+        let scfg = scfg.clone();
+        std::thread::spawn(move || {
+            let _ = serve_on(listener, fleet, scfg, registry);
+        });
+    }
+    (addr, fleet, scfg)
+}
+
+/// Load one scenario from the corpus the harness ships with.
+fn scenario(name: &str) -> String {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("scenarios")
+        .join(name);
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{}: {e}", path.display()))
+}
+
+/// Serve `request_line` on a fresh fault-free single-shard fleet and
+/// return its completion digest — the golden value a chaos survivor must
+/// match byte for byte.
+fn clean_digest(request_line: &str, scfg: &ServerConfig) -> String {
+    let clean = ServerConfig {
+        shards: 1,
+        ..scfg.clone()
+    };
+    let fleet = Fleet::launch(
+        |_shard| Ok(GmmBackend::new(chaos_gmm())),
+        clean.fleet_config(),
+    );
+    let (req, _) = parse_request_line(request_line, &clean, &PolicyRegistry::builtin())
+        .unwrap_or_else(|e| panic!("golden parse of {request_line}: {e}"));
+    let rx = fleet.submit(req).unwrap();
+    match rx.recv().unwrap() {
+        JobReply::Done(c, _) => completion_digest(&c),
+        JobReply::Error(line) => panic!("clean run refused {request_line}: {line}"),
+    }
+}
+
+/// Every `expect-ok` reply that carried an image must digest-match a
+/// clean run of its own request line.
+fn assert_survivors_match_clean(replies: &[chaos::Reply], scfg: &ServerConfig) {
+    let mut checked = 0;
+    for r in replies {
+        let Some(digest) = reply_digest(&r.value) else {
+            continue;
+        };
+        assert_eq!(
+            digest,
+            clean_digest(&r.request_line, scfg),
+            "survivor completion diverged from the clean run: {}",
+            r.request_line
+        );
+        checked += 1;
+    }
+    assert!(checked > 0, "no survivor carried an image to digest-check");
+}
+
+#[test]
+fn scenario_kill_shard_mid_flight() {
+    let (addr, fleet, scfg) = spawn_chaos_server(base_cfg());
+    let mut d = Director::new(&fleet, addr);
+    d.run(&scenario("kill_shard_mid_flight.txt")).unwrap();
+    // the fault is visible in telemetry: the injection, the death, and
+    // the shrunken fleet
+    let m = fleet.metrics_prometheus().unwrap();
+    assert!(m.contains(r#"chaos_kill_shard_total{shard="0"} 1"#), "{m}");
+    assert!(m.contains(r#"shard_died_total{shard="0"} 1"#), "{m}");
+    assert!(m.contains("fleet_shards_alive 1"), "{m}");
+    assert!(m.contains("fleet_shards 2"), "{m}");
+    // a second injection into the same shard is a no-op, reported as such
+    assert!(!fleet.kill_shard(0), "dead shard must not be killable twice");
+    assert_survivors_match_clean(&d.replies, &scfg);
+}
+
+#[test]
+fn scenario_disconnect_mid_request() {
+    let (addr, fleet, scfg) = spawn_chaos_server(base_cfg());
+    let mut d = Director::new(&fleet, addr);
+    d.run(&scenario("disconnect_mid_request.txt")).unwrap();
+    // the vanished client cost nothing: both shards alive, no deaths
+    let m = fleet.metrics_prometheus().unwrap();
+    assert!(m.contains("fleet_shards_alive 2"), "{m}");
+    assert!(!m.contains("shard_died_total"), "{m}");
+    assert_survivors_match_clean(&d.replies, &scfg);
+}
+
+#[test]
+fn scenario_slowloris() {
+    let (addr, fleet, scfg) = spawn_chaos_server(ServerConfig {
+        read_timeout_ms: 300,
+        ..base_cfg()
+    });
+    let mut d = Director::new(&fleet, addr);
+    d.run(&scenario("slowloris.txt")).unwrap();
+    let m = fleet.metrics_prometheus().unwrap();
+    assert!(m.contains(r#"conn_timeout_total{kind="midline"} 1"#), "{m}");
+    assert!(m.contains("fleet_shards_alive 2"), "{m}");
+    assert_survivors_match_clean(&d.replies, &scfg);
+}
+
+#[test]
+fn scenario_malformed_frames() {
+    let (addr, fleet, scfg) = spawn_chaos_server(ServerConfig {
+        max_line_bytes: 4096,
+        ..base_cfg()
+    });
+    let mut d = Director::new(&fleet, addr);
+    d.run(&scenario("malformed_frames.txt")).unwrap();
+    let m = fleet.metrics_prometheus().unwrap();
+    assert!(m.contains(r#"conn_bad_line_total{kind="utf8"} 1"#), "{m}");
+    assert!(m.contains(r#"conn_bad_line_total{kind="oversized"} 1"#), "{m}");
+    assert!(m.contains("fleet_shards_alive 2"), "{m}");
+    assert_survivors_match_clean(&d.replies, &scfg);
+}
+
+#[test]
+fn scenario_drain_under_load() {
+    let (addr, fleet, scfg) = spawn_chaos_server(base_cfg());
+    let mut d = Director::new(&fleet, addr);
+    d.run(&scenario("drain_under_load.txt")).unwrap();
+    assert!(fleet.is_draining());
+    assert_survivors_match_clean(&d.replies, &scfg);
+}
+
+/// The corpus itself stays parseable — a scenario that rots into a
+/// syntax error should fail here, not deep inside a director run.
+#[test]
+fn scenario_corpus_parses() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("scenarios");
+    let mut scripts = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("txt") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let ops = chaos::parse_script(&text)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert!(!ops.is_empty(), "{} is empty", path.display());
+        scripts += 1;
+    }
+    assert!(scripts >= 5, "scenario corpus shrank to {scripts} scripts");
+}
+
+/// Capture → replay round trip over real TCP:
+///
+/// 1. replay the checked-in sample trace against server A, which records
+///    every served request via `--trace-out`;
+/// 2. replay A's capture against a *fresh* server B at a different speed
+///    and connection count;
+/// 3. every digest-checked completion must match the capture — the
+///    replayed traffic is served byte-identically — and the perfstat
+///    report must round-trip through JSON.
+#[test]
+fn capture_then_replay_round_trips_digests() {
+    let capture = std::env::temp_dir().join(format!(
+        "agd_chaos_capture_{}.jsonl",
+        std::process::id()
+    ));
+    let report = std::env::temp_dir().join(format!(
+        "agd_chaos_replay_{}.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&capture);
+
+    // server A records what it serves
+    let (addr_a, _fleet_a, _) = spawn_chaos_server(ServerConfig {
+        trace_out: Some(capture.to_str().unwrap().to_owned()),
+        ..base_cfg()
+    });
+    let sample = read_trace(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("scenarios")
+            .join("sample_trace.jsonl")
+            .to_str()
+            .unwrap(),
+    )
+    .unwrap();
+    assert!(sample.len() >= 10, "sample trace shrank to {}", sample.len());
+    let outcome = chaos::replay(
+        &sample,
+        &ReplayConfig {
+            addr: addr_a.to_string(),
+            speed: 50.0,
+            connections: 8,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(outcome.sent, sample.len());
+    assert_eq!(outcome.completed, sample.len(), "shed: {:?}", outcome.shed);
+    assert_eq!(outcome.transport_errors, 0);
+    // the sample trace carries no digests (it is hand-written, not
+    // captured), so nothing was checkable on this leg
+    assert_eq!(outcome.digest_checked, 0);
+
+    // the capture now holds one digest-bearing record per served request
+    let captured = read_trace(capture.to_str().unwrap()).unwrap();
+    assert_eq!(captured.len(), sample.len());
+    assert!(captured.iter().all(|r| r.digest.is_some()), "capture lacks digests");
+    assert!(captured.iter().all(|r| r.client_id.is_some()));
+
+    // replay the capture against a fresh server B: every completion is
+    // digest-checked and must match
+    let (addr_b, _fleet_b, _) = spawn_chaos_server(base_cfg());
+    let cfg_b = ReplayConfig {
+        addr: addr_b.to_string(),
+        speed: 20.0,
+        connections: 4,
+        ..Default::default()
+    };
+    let outcome = chaos::replay(&captured, &cfg_b).unwrap();
+    assert_eq!(outcome.completed, captured.len(), "shed: {:?}", outcome.shed);
+    assert_eq!(outcome.digest_checked, captured.len());
+    assert_eq!(outcome.digest_mismatches, 0);
+    assert_eq!(outcome.latencies_ms.len(), outcome.completed);
+
+    // the report is the BENCH_replay.json the CLI writes
+    chaos::replay::write_report(report.to_str().unwrap(), &outcome, &cfg_b).unwrap();
+    let v = json::parse(&std::fs::read_to_string(&report).unwrap()).unwrap();
+    let rows = v.req("benchmarks").as_arr().unwrap();
+    assert_eq!(rows[0].req("name").as_str(), Some("replay_wire_latency"));
+    assert!(rows[0].req("p99_ms").as_f64().unwrap() >= 0.0);
+    let derived = v.req("derived");
+    assert_eq!(derived.req("digest_mismatches").as_f64(), Some(0.0));
+    assert_eq!(derived.req("completed").as_f64(), Some(captured.len() as f64));
+    let _ = std::fs::remove_file(&capture);
+    let _ = std::fs::remove_file(&report);
+}

@@ -1,0 +1,53 @@
+#!/usr/bin/env bash
+# Chaos + replay smoke (§Robustness): runs the scenario corpus through
+# the chaos integration suite, then exercises the full CLI loop on
+# localhost — `agd serve --trace-out` capturing a replayed sample trace,
+# then `agd replay` of that capture digest-checking every completion.
+#
+#   scripts/chaos.sh                 -> BENCH_replay.json in the repo root
+#   CHAOS_PORT=7777 scripts/chaos.sh -> custom port (default 7497)
+#
+# Requires the Rust toolchain; scripts/tier1.sh invokes it behind the
+# same availability check it applies to clippy/rustfmt.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+port="${CHAOS_PORT:-7497}"
+addr="127.0.0.1:${port}"
+capture="$(mktemp /tmp/agd_chaos_capture.XXXXXX.jsonl)"
+trap 'rm -f "$capture"; [[ -n "${server_pid:-}" ]] && kill "$server_pid" 2>/dev/null || true' EXIT
+
+# 1. the scenario corpus against a live in-process fleet
+cargo test -q --test chaos_integration
+
+# 2. the CLI loop: a real `agd serve` process on localhost
+cargo build --release --bin agd
+agd=target/release/agd
+
+rm -f "$capture"
+"$agd" serve --backend gmm --shards 2 --addr "$addr" --trace-out "$capture" &
+server_pid=$!
+
+# readiness: probe the TCP port itself rather than parsing the banner
+for _ in $(seq 1 100); do
+    if (exec 3<>"/dev/tcp/127.0.0.1/${port}") 2>/dev/null; then
+        exec 3>&- 3<&-
+        break
+    fi
+    sleep 0.1
+done
+
+# capture leg: replay the checked-in sample trace into the tracing server
+"$agd" replay --trace scenarios/sample_trace.jsonl --addr "$addr" \
+    --speed 50 --connections 8 --out /dev/null
+
+# verify leg: replay the capture back at the same server; every
+# completion is digest-checked against what was served at capture time
+# (agd replay exits non-zero on any mismatch)
+"$agd" replay --trace "$capture" --addr "$addr" \
+    --speed 20 --connections 4 --out BENCH_replay.json
+
+kill "$server_pid" 2>/dev/null || true
+wait "$server_pid" 2>/dev/null || true
+server_pid=""
+echo "chaos: OK (wrote BENCH_replay.json)"

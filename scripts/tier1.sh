@@ -17,6 +17,9 @@ cargo test -q
 # placements) is the scale-out safety net — run its suite explicitly so a
 # filtered/partial `cargo test` configuration can never silently skip it
 cargo test -q --test fleet_integration
+# the robustness invariant (faults change who is served, never what):
+# scenario corpus + capture->replay digest check against a live server
+scripts/chaos.sh
 
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings
