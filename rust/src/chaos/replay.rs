@@ -8,6 +8,14 @@
 //! under the original arrival process. Replies are matched FIFO per
 //! connection (the line protocol answers in order on one connection).
 //!
+//! `--max-in-flight N` switches to **closed-loop** mode (§Observability):
+//! the captured schedule is ignored and each connection instead keeps up
+//! to `N` requests outstanding, sending the next as soon as a reply frees
+//! a slot. Open-loop answers "what does the captured load do to this
+//! server?"; closed-loop answers "how fast can this server go under
+//! bounded concurrency?" — the `achieved_rps` scalar in
+//! `BENCH_replay.json` is the throughput measurement.
+//!
 //! Per request the replayer records wire latency (send → reply line
 //! read), the structured `code` on shed/error replies, and — when the
 //! trace record carries a digest *and* the envelope asked for the image —
@@ -39,6 +47,11 @@ pub struct ReplayConfig {
     /// Per-reply read timeout; a stalled reply counts as a transport
     /// error and abandons that connection's remaining records.
     pub timeout_ms: u64,
+    /// Closed-loop cap on outstanding requests per connection
+    /// (§Observability). `0` keeps the open-loop captured schedule; `N>0`
+    /// ignores record offsets and keeps up to `N` requests in flight,
+    /// sending the next the moment a reply frees a slot.
+    pub max_in_flight: usize,
 }
 
 impl Default for ReplayConfig {
@@ -48,6 +61,7 @@ impl Default for ReplayConfig {
             speed: 1.0,
             connections: 4,
             timeout_ms: 30_000,
+            max_in_flight: 0,
         }
     }
 }
@@ -115,6 +129,7 @@ pub fn replay(records: &[TraceRecord], cfg: &ReplayConfig) -> Result<ReplayOutco
     let epoch = Instant::now() + Duration::from_millis(5);
     let speed = cfg.speed;
     let timeout = Duration::from_millis(cfg.timeout_ms.max(1));
+    let max_in_flight = cfg.max_in_flight;
     let addr = cfg.addr.clone();
     let t0 = Instant::now();
     let handles: Vec<_> = per_conn
@@ -122,7 +137,9 @@ pub fn replay(records: &[TraceRecord], cfg: &ReplayConfig) -> Result<ReplayOutco
         .filter(|batch| !batch.is_empty())
         .map(|batch| {
             let addr = addr.clone();
-            std::thread::spawn(move || run_connection(&addr, batch, epoch, speed, timeout))
+            std::thread::spawn(move || {
+                run_connection(&addr, batch, epoch, speed, timeout, max_in_flight)
+            })
         })
         .collect();
     let mut outcome = ReplayOutcome::default();
@@ -144,20 +161,27 @@ pub fn replay(records: &[TraceRecord], cfg: &ReplayConfig) -> Result<ReplayOutco
     Ok(outcome)
 }
 
-/// One connection: a writer (this thread, pacing the schedule) and a
-/// reader thread matching replies FIFO to what was sent.
+/// One connection: a writer (this thread — pacing the captured schedule
+/// open-loop, or gating on free slots closed-loop) and a reader thread
+/// matching replies FIFO to what was sent.
 fn run_connection(
     addr: &str,
     batch: Vec<TraceRecord>,
     epoch: Instant,
     speed: f64,
     timeout: Duration,
+    max_in_flight: usize,
 ) -> Result<ReplayOutcome> {
     let stream =
         TcpStream::connect(addr).with_context(|| format!("replay connect {addr}"))?;
     stream.set_read_timeout(Some(timeout)).ok();
     let reader_stream = stream.try_clone().context("replay stream clone")?;
     let (tx, rx) = channel::<Expected>();
+    // closed-loop bookkeeping: outstanding-request count + a flag the
+    // reader raises when the connection dies so the writer stops waiting
+    let slots = std::sync::Arc::new((std::sync::Mutex::new(0usize), std::sync::Condvar::new()));
+    let conn_dead = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let (r_slots, r_dead) = (slots.clone(), conn_dead.clone());
     let reader = std::thread::spawn(move || {
         let mut out = ReplayOutcome::default();
         let mut lines = BufReader::new(reader_stream);
@@ -170,8 +194,14 @@ fn run_connection(
                 _ => {
                     out.transport_errors += 1;
                     out.transport_errors += rx.try_iter().count();
+                    r_dead.store(true, std::sync::atomic::Ordering::SeqCst);
+                    r_slots.1.notify_all();
                     return out;
                 }
+            }
+            if max_in_flight > 0 {
+                *r_slots.0.lock().unwrap() -= 1;
+                r_slots.1.notify_one();
             }
             out.latencies_ms
                 .push(exp.sent_at.elapsed().as_secs_f64() * 1e3);
@@ -204,10 +234,33 @@ fn run_connection(
     let mut sent = 0usize;
     let mut write_errors = 0usize;
     for rec in &batch {
-        let due = epoch + Duration::from_micros((rec.offset_us as f64 / speed) as u64);
-        let now = Instant::now();
-        if due > now {
-            std::thread::sleep(due - now);
+        if max_in_flight > 0 {
+            // closed-loop: ignore the captured schedule, wait for a slot
+            let (lock, cv) = &*slots;
+            let mut in_flight = lock.lock().unwrap();
+            while *in_flight >= max_in_flight
+                && !conn_dead.load(std::sync::atomic::Ordering::SeqCst)
+            {
+                let (guard, _) = cv
+                    .wait_timeout(in_flight, Duration::from_millis(100))
+                    .unwrap();
+                in_flight = guard;
+            }
+            if conn_dead.load(std::sync::atomic::Ordering::SeqCst) {
+                // reader already counted the in-flight tail; the rest of
+                // the batch was never sent
+                write_errors = batch.len() - sent;
+                break;
+            }
+            *in_flight += 1;
+        } else {
+            // open-loop: send at the captured (speed-compressed) offset
+            let due =
+                epoch + Duration::from_micros((rec.offset_us as f64 / speed) as u64);
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
         }
         let line = rec.request_line();
         let sent_at = Instant::now();
@@ -261,6 +314,10 @@ pub fn report_json(outcome: &ReplayOutcome, cfg: &ReplayConfig) -> Value {
         ),
         ("speed".into(), cfg.speed),
         ("connections".into(), cfg.connections as f64),
+        // 0 = open-loop (captured schedule); N = closed-loop at N
+        // in-flight per connection, where achieved_rps is the measured
+        // bounded-concurrency throughput
+        ("max_in_flight".into(), cfg.max_in_flight as f64),
     ];
     for (code, n) in &outcome.shed {
         derived.push((format!("shed_{code}"), *n as f64));
@@ -350,6 +407,7 @@ mod tests {
             speed: 100.0,
             connections: 2,
             timeout_ms: 5_000,
+            max_in_flight: 0,
         };
         let out = replay(&records, &cfg).unwrap();
         assert_eq!(out.sent, 4);
@@ -359,6 +417,39 @@ mod tests {
         assert_eq!(out.digest_mismatches, 1);
         assert_eq!(out.latencies_ms.len(), 4);
         assert!(out.wall_ms > 0.0);
+    }
+
+    /// Closed-loop mode ignores the captured offsets: records scheduled
+    /// far in the future still replay immediately, gated only by the
+    /// in-flight cap, and the report carries the cap + achieved rate.
+    #[test]
+    fn closed_loop_ignores_offsets_and_caps_in_flight() {
+        let addr = spawn_stub_server(0);
+        // offsets an hour apart — open-loop at speed 1 would take hours
+        let records: Vec<TraceRecord> = (0..8)
+            .map(|i| record(i * 3_600_000_000, false, None))
+            .collect();
+        let cfg = ReplayConfig {
+            addr: addr.to_string(),
+            speed: 1.0,
+            connections: 2,
+            timeout_ms: 5_000,
+            max_in_flight: 2,
+        };
+        let t0 = Instant::now();
+        let out = replay(&records, &cfg).unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(60),
+            "closed-loop must not honour the captured schedule"
+        );
+        assert_eq!(out.sent, 8);
+        assert_eq!(out.completed, 8);
+        assert_eq!(out.transport_errors, 0);
+        assert_eq!(out.latencies_ms.len(), 8);
+        let v = report_json(&out, &cfg);
+        let d = v.req("derived");
+        assert_eq!(d.req("max_in_flight").as_f64(), Some(2.0));
+        assert!(d.req("achieved_rps").as_f64().unwrap() > 0.0);
     }
 
     #[test]
@@ -371,6 +462,7 @@ mod tests {
             speed: 50.0,
             connections: 1,
             timeout_ms: 5_000,
+            max_in_flight: 0,
         };
         let out = replay(&records, &cfg).unwrap();
         assert_eq!(out.sent, 6);

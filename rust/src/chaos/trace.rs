@@ -224,6 +224,7 @@ mod tests {
             gammas_eps: vec![],
             trajectory: None,
             iterates: vec![],
+            timeline: None,
         }
     }
 

@@ -106,7 +106,9 @@ use crate::coordinator::request::{Completion, EvalKind, Request, RequestState};
 use crate::exec::{ExecPool, SliceShards};
 use crate::sched::{
     Admission, AdmitError, Fifo, MetricKey, RequestMeta, Scheduler, Telemetry, WorkItem,
+    STAGE_HIST,
 };
+use crate::trace::{self, EvalSet, Stage, TraceRecorder};
 
 /// Queue-wait / execute-time histograms: 0..10 s in 100 ms bins.
 const LATENCY_HIST: (f64, f64, usize) = (0.0, 10_000.0, 100);
@@ -148,6 +150,31 @@ struct Meta {
     max_nfes: usize,
     submitted: Instant,
     first_exec: Option<Instant>,
+    /// §Observability: interned policy id for guidance events
+    policy_id: u16,
+    /// §Observability: the request's own span timeline (`Some` iff the
+    /// request opted in with `trace: true`); capacity reserved at
+    /// admission, appended via [`trace::push_capped`] only — never grows
+    /// inside `pump()`
+    timeline: Option<Vec<trace::Event>>,
+}
+
+/// §Observability: what a ready slot's step looked like *before*
+/// `complete_step` replans it — the guidance event must record the plan
+/// that actually executed.
+#[derive(Debug, Clone, Copy)]
+struct StepSnap {
+    step: u32,
+    evals: EvalSet,
+}
+
+impl Default for StepSnap {
+    fn default() -> StepSnap {
+        StepSnap {
+            step: 0,
+            evals: EvalSet::Cond,
+        }
+    }
 }
 
 /// The engine. Generic over the backend so coordinator tests run on the
@@ -185,6 +212,14 @@ pub struct Engine<B: Backend> {
     step_bufs: Vec<StepBufs>,
     /// per-ready-slot completion results from the parallel region
     ready_done: Vec<Option<Completion>>,
+    /// §Observability: per-ready-slot (step, evals) snapshot taken before
+    /// completion replans (capacity tracks `step_bufs`)
+    step_snap: Vec<StepSnap>,
+    /// §Observability: the span ring + policy table + trace clock
+    /// (preallocated here so steady-state recording never allocates)
+    tracer: TraceRecorder,
+    /// §Scale: fleet shard id stamped onto exported span batches
+    shard: usize,
     /// live requests per client id, for the per-client admission quota
     /// (`""` = anonymous)
     clients_in_flight: HashMap<Arc<str>, usize>,
@@ -200,6 +235,9 @@ pub struct Engine<B: Backend> {
     k_worker_lanes: MetricKey,
     k_worker_occupancy: MetricKey,
     k_parallel_efficiency: MetricKey,
+    k_stage_batch: MetricKey,
+    k_stage_denoise: MetricKey,
+    k_stage_combine: MetricKey,
 }
 
 impl<B: Backend> Engine<B> {
@@ -233,6 +271,9 @@ impl<B: Backend> Engine<B> {
         let k_worker_lanes = telemetry.metric_key("worker_lanes", &[]);
         let k_worker_occupancy = telemetry.metric_key("worker_occupancy", &[]);
         let k_parallel_efficiency = telemetry.metric_key("parallel_efficiency", &[]);
+        let k_stage_batch = telemetry.metric_key("stage_ms", &[("stage", "batch")]);
+        let k_stage_denoise = telemetry.metric_key("stage_ms", &[("stage", "denoise")]);
+        let k_stage_combine = telemetry.metric_key("stage_ms", &[("stage", "combine")]);
         Ok(Engine {
             backend,
             sched,
@@ -255,6 +296,9 @@ impl<B: Backend> Engine<B> {
             exec: ExecPool::serial(),
             step_bufs: Vec::new(),
             ready_done: Vec::new(),
+            step_snap: Vec::new(),
+            tracer: TraceRecorder::new(trace::DEFAULT_SPAN_CAP),
+            shard: 0,
             clients_in_flight: HashMap::new(),
             anon_client: Arc::from(""),
             k_batch_occupancy,
@@ -264,7 +308,35 @@ impl<B: Backend> Engine<B> {
             k_worker_lanes,
             k_worker_occupancy,
             k_parallel_efficiency,
+            k_stage_batch,
+            k_stage_denoise,
+            k_stage_combine,
         })
+    }
+
+    /// §Scale: stamp the fleet shard id onto exported span batches (the
+    /// standalone engine is shard 0).
+    pub fn set_shard(&mut self, shard: usize) {
+        self.shard = shard;
+    }
+
+    /// §Observability: snapshot and clear the span ring, stamped with
+    /// this engine's shard id. The dropped total is monotonic across
+    /// drains.
+    pub fn drain_spans(&mut self) -> trace::SpanBatch {
+        let mut batch = self.tracer.drain();
+        batch.shard = self.shard;
+        batch
+    }
+
+    /// Span-ring events overwritten before being drained (monotonic).
+    pub fn spans_dropped(&self) -> u64 {
+        self.tracer.dropped()
+    }
+
+    /// Events currently waiting in the span ring.
+    pub fn spans_pending(&self) -> usize {
+        self.tracer.len()
     }
 
     /// Attach a worker pool with `workers` total compute lanes (§Perf:
@@ -373,6 +445,8 @@ impl<B: Backend> Engine<B> {
             ("batches", num(self.batches as f64)),
             ("items", num(self.items as f64)),
             ("mean_occupancy", num(self.mean_occupancy())),
+            ("spans_pending", num(self.tracer.len() as f64)),
+            ("spans_dropped_total", num(self.tracer.dropped() as f64)),
             ("telemetry", self.telemetry.to_json()),
         ])
     }
@@ -513,6 +587,40 @@ impl<B: Backend> Engine<B> {
         // anchor the arrival-relative deadline to the engine clock so EDF
         // compares like with like regardless of client clocks
         let arrival_ms = submitted.saturating_duration_since(self.epoch).as_millis() as u64;
+        let policy = state.req.policy.kind();
+        let policy_id = self.tracer.intern(&policy);
+        // §Observability: pre-engine lifecycle spans. The front end stamps
+        // *durations* on the request; start times are reconstructed
+        // backwards from "now" on this recorder's clock, so a timeline is
+        // monotonic even though admission/placement ran on another thread.
+        let timeline = if state.req.trace {
+            let now = self.tracer.now_us();
+            let start_q = now.saturating_sub(state.req.span_queue_us);
+            let start_p = start_q.saturating_sub(state.req.span_placement_us);
+            let start_a = start_p.saturating_sub(state.req.span_admission_us);
+            // 4 per-step events (batch/denoise/combine/guidance) + the 3
+            // pre-engine spans + the final complete span, capped so a
+            // MAX_STEPS request cannot reserve an absurd buffer
+            let cap = (4 * state.req.steps + 4).min(trace::DEFAULT_SPAN_CAP);
+            let mut tl = Vec::with_capacity(cap);
+            for (stage, start_us, dur_us) in [
+                (Stage::Admission, start_a, state.req.span_admission_us),
+                (Stage::Placement, start_p, state.req.span_placement_us),
+                (Stage::Queue, start_q, state.req.span_queue_us),
+            ] {
+                let ev = trace::Event::Span {
+                    req: state.req.id,
+                    stage,
+                    start_us,
+                    dur_us,
+                };
+                self.tracer.record(ev);
+                trace::push_capped(&mut tl, ev);
+            }
+            Some(tl)
+        } else {
+            None
+        };
         let meta = Meta {
             id: state.req.id,
             client: state
@@ -520,7 +628,7 @@ impl<B: Backend> Engine<B> {
                 .client_id
                 .clone()
                 .unwrap_or_else(|| self.anon_client.clone()),
-            policy: state.req.policy.kind(),
+            policy,
             priority: state.req.priority,
             deadline_ms: state
                 .req
@@ -530,6 +638,8 @@ impl<B: Backend> Engine<B> {
             max_nfes: cost,
             submitted,
             first_exec: None,
+            policy_id,
+            timeline,
         };
         // per-client live count for the admission quota; unwound when the
         // request completes
@@ -641,6 +751,53 @@ impl<B: Backend> Engine<B> {
         }
     }
 
+    /// §Observability: one combine span (traced requests only) plus the
+    /// step's guidance-decision event (every request). Associated fn so
+    /// callers can hold disjoint borrows of `metas` and `tracer`; all
+    /// writes land in preallocated storage — no allocation.
+    #[allow(clippy::too_many_arguments)]
+    fn record_step_trace(
+        tracer: &mut TraceRecorder,
+        meta: &mut Meta,
+        snap: StepSnap,
+        combine_start: Instant,
+        combine_end: Instant,
+        gamma: f32,
+        nfes: u32,
+        truncated: bool,
+        last: bool,
+    ) {
+        let start_us = tracer.us_since_epoch(combine_start);
+        let end_us = tracer.us_since_epoch(combine_end);
+        if let Some(tl) = meta.timeline.as_mut() {
+            let ev = trace::Event::Span {
+                req: meta.id,
+                stage: Stage::Combine,
+                start_us,
+                dur_us: end_us.saturating_sub(start_us),
+            };
+            tracer.record(ev);
+            trace::push_capped(tl, ev);
+        }
+        let ev = trace::Event::Guidance {
+            req: meta.id,
+            policy: meta.policy_id,
+            at_us: end_us,
+            step: snap.step,
+            evals: snap.evals,
+            gamma,
+            nfes,
+            baseline: 2 * (snap.step + 1),
+            max_nfes: meta.max_nfes as u32,
+            truncated,
+            last,
+        };
+        tracer.record(ev);
+        if let Some(tl) = meta.timeline.as_mut() {
+            trace::push_capped(tl, ev);
+        }
+    }
+
     /// Execute one batch of work items (same model, up to the largest
     /// bucket), as chosen by the scheduler, and advance all requests whose
     /// step completed. Returns the completions this round produced.
@@ -665,6 +822,9 @@ impl<B: Backend> Engine<B> {
         );
 
         let exec_start = Instant::now();
+        // §Observability: batch-assembly stage = exec_start..denoise_start
+        // (set just before the backend call below)
+        let mut denoise_start = exec_start;
         let flat_in = self.backend.flat_in(&model);
         let flat_out = self.backend.flat_out(&model);
 
@@ -700,6 +860,7 @@ impl<B: Backend> Engine<B> {
                 let (x_row, tok_row) = self.batch.push_row(st.current_t() as f32);
                 st.fill_eval_input(kind, x_row, tok_row);
             }
+            denoise_start = Instant::now();
             exec_stats =
                 self.backend
                     .denoise_into_par(&model, &self.batch, &mut self.out, &self.exec)?;
@@ -718,14 +879,49 @@ impl<B: Backend> Engine<B> {
             return Err(e);
         }
 
+        let denoise_end = Instant::now();
         // queue-wait accounting: a request starts executing at its first
-        // batched item
+        // batched item. §Observability: slot 0 appears exactly once per
+        // request per step, so it carries the step's batch/denoise spans
+        // for traced requests (slot writes into preallocated storage).
         for it in &self.batch_items {
             let meta = self.metas[it.state_idx].as_mut().expect("meta for queued item");
             if meta.first_exec.is_none() {
                 meta.first_exec = Some(exec_start);
             }
+            if it.slot != 0 {
+                continue;
+            }
+            if let Some(tl) = meta.timeline.as_mut() {
+                let start_b = self.tracer.us_since_epoch(exec_start);
+                let start_d = self.tracer.us_since_epoch(denoise_start);
+                let end_d = self.tracer.us_since_epoch(denoise_end);
+                for (stage, start_us, dur_us) in [
+                    (Stage::Batch, start_b, start_d.saturating_sub(start_b)),
+                    (Stage::Denoise, start_d, end_d.saturating_sub(start_d)),
+                ] {
+                    let ev = trace::Event::Span {
+                        req: meta.id,
+                        stage,
+                        start_us,
+                        dur_us,
+                    };
+                    self.tracer.record(ev);
+                    trace::push_capped(tl, ev);
+                }
+            }
         }
+        // stage-duration histograms, on the same clock as the spans
+        let (lo, hi, bins) = STAGE_HIST;
+        let batch_ms = denoise_start.saturating_duration_since(exec_start).as_secs_f64() * 1e3;
+        let denoise_ms = denoise_end
+            .saturating_duration_since(denoise_start)
+            .as_secs_f64()
+            * 1e3;
+        self.telemetry
+            .observe_key(&self.k_stage_batch, batch_ms, lo, hi, bins);
+        self.telemetry
+            .observe_key(&self.k_stage_denoise, denoise_ms, lo, hi, bins);
         self.batches += 1;
         self.items += self.batch.len();
         let occupancy = self.batch.len() as f64;
@@ -765,6 +961,8 @@ impl<B: Backend> Engine<B> {
         //     single-owner pool and run scheduler/telemetry bookkeeping
         //     in ready order, exactly like the serial engine.
         let n_ready = ready.len();
+        // §Observability: combine stage start (re-stamped after staging)
+        let mut combine_start = exec_start;
         if n_ready > 0 {
             while self.step_bufs.len() < n_ready {
                 self.step_bufs.push(StepBufs::new());
@@ -772,14 +970,24 @@ impl<B: Backend> Engine<B> {
             while self.ready_done.len() < n_ready {
                 self.ready_done.push(None);
             }
+            while self.step_snap.len() < n_ready {
+                self.step_snap.push(StepSnap::default());
+            }
             for (j, &idx) in ready.iter().enumerate() {
                 let st = self.states[idx].as_ref().expect("state for ready request");
+                // snapshot what this step executed — completion replans,
+                // so the guidance event must read the plan *before* it
+                self.step_snap[j] = StepSnap {
+                    step: st.step as u32,
+                    evals: EvalSet::of(st.current_plan()),
+                };
                 let sb = &mut self.step_bufs[j];
                 sb.reset();
                 if st.needs_combine_buf() {
                     sb.spare = Some(self.pool.take(flat_out));
                 }
             }
+            combine_start = Instant::now();
             let comp_stats = {
                 let exec = &self.exec;
                 let states = SliceShards::new(&mut self.states);
@@ -807,6 +1015,14 @@ impl<B: Backend> Engine<B> {
         }
         let mut completions = Vec::new();
         let done_at = Instant::now();
+        if n_ready > 0 {
+            let combine_ms = done_at
+                .saturating_duration_since(combine_start)
+                .as_secs_f64()
+                * 1e3;
+            self.telemetry
+                .observe_key(&self.k_stage_combine, combine_ms, lo, hi, bins);
+        }
         for (j, &idx) in ready.iter().enumerate() {
             let sb = &mut self.step_bufs[j];
             if let Some(spare) = sb.spare.take() {
@@ -815,12 +1031,12 @@ impl<B: Backend> Engine<B> {
             for buf in sb.returned.drain(..) {
                 self.pool.put(buf);
             }
-            if let Some(done) = self.ready_done[j].take() {
+            if let Some(mut done) = self.ready_done[j].take() {
                 self.states[idx] = None;
                 self.active -= 1;
                 self.sched.forget(idx);
                 self.free.push(idx);
-                let meta = self.metas[idx].take().expect("meta for completed request");
+                let mut meta = self.metas[idx].take().expect("meta for completed request");
                 self.queued_nfes = self.queued_nfes.saturating_sub(meta.cost);
                 // unwind the per-client quota count
                 match self.clients_in_flight.get_mut(&meta.client) {
@@ -829,10 +1045,58 @@ impl<B: Backend> Engine<B> {
                         self.clients_in_flight.remove(&meta.client);
                     }
                 }
+                // §Observability: combine span + the final guidance event
+                let snap = self.step_snap[j];
+                let gamma = done.gammas.last().copied().unwrap_or(f64::NAN) as f32;
+                let truncated = done.truncated_at == Some(snap.step as usize);
+                Self::record_step_trace(
+                    &mut self.tracer,
+                    &mut meta,
+                    snap,
+                    combine_start,
+                    done_at,
+                    gamma,
+                    done.nfes as u32,
+                    truncated,
+                    true,
+                );
+                // the complete span closes the timeline, which serializes
+                // here — at completion, off the steady-state path
+                if let Some(mut tl) = meta.timeline.take() {
+                    let start_us = self.tracer.us_since_epoch(done_at);
+                    let ev = trace::Event::Span {
+                        req: meta.id,
+                        stage: Stage::Complete,
+                        start_us,
+                        dur_us: self.tracer.now_us().saturating_sub(start_us),
+                    };
+                    self.tracer.record(ev);
+                    trace::push_capped(&mut tl, ev);
+                    let rows: Vec<crate::util::json::Value> = tl
+                        .iter()
+                        .map(|ev| trace::event_to_json(ev, self.shard, self.tracer.policies()))
+                        .collect();
+                    done.timeline = Some(crate::util::json::Value::Arr(rows));
+                }
                 self.observe_completion(&meta, &done, done_at);
                 completions.push(done);
             } else {
                 let st = self.states[idx].take().unwrap();
+                // §Observability: combine span + this step's guidance event
+                let snap = self.step_snap[j];
+                let gamma = st.policy_state.gammas.last().copied().unwrap_or(f64::NAN) as f32;
+                let truncated = st.policy_state.truncated_at == Some(snap.step as usize);
+                Self::record_step_trace(
+                    &mut self.tracer,
+                    self.metas[idx].as_mut().unwrap(),
+                    snap,
+                    combine_start,
+                    done_at,
+                    gamma,
+                    st.nfes as u32,
+                    truncated,
+                    false,
+                );
                 // re-estimate before re-queueing: this is where a policy
                 // truncation reaches the scheduler's cost signal
                 let meta = self.metas[idx].as_mut().unwrap();
@@ -1358,5 +1622,102 @@ mod tests {
         let text = crate::util::json::to_string(&e.stats_json());
         let v = crate::util::json::parse(&text).unwrap();
         assert_eq!(v.req("scheduler").as_str(), Some("fifo"));
+    }
+
+    #[test]
+    fn traced_request_timeline_covers_all_stages_monotonically() {
+        let mut e = engine();
+        let mut r = req(0, 1, ag(2.0, 0.995));
+        r.trace = true;
+        // pretend the fleet front end spent time on this request
+        r.span_admission_us = 5;
+        r.span_placement_us = 3;
+        r.span_queue_us = 7;
+        let out = e.run(vec![r]).unwrap();
+        let tl = out[0]
+            .timeline
+            .as_ref()
+            .expect("traced request carries a timeline");
+        let rows = tl.as_arr().unwrap();
+        let mut seen: Vec<String> = Vec::new();
+        let mut last_start = 0u64;
+        for row in rows {
+            if row.req("type").as_str() != Some("span") {
+                continue;
+            }
+            let start = row.req("start_us").as_usize().unwrap() as u64;
+            assert!(start >= last_start, "span starts must be monotonic");
+            last_start = start;
+            seen.push(row.req("stage").as_str().unwrap().to_owned());
+        }
+        for st in crate::trace::Stage::ALL {
+            assert!(
+                seen.iter().any(|s| s == st.name()),
+                "timeline is missing stage `{}`: {seen:?}",
+                st.name()
+            );
+        }
+        // the per-step stages repeat once per denoising step
+        assert_eq!(seen.iter().filter(|s| *s == "denoise").count(), 10);
+        assert_eq!(seen.iter().filter(|s| *s == "combine").count(), 10);
+        // an untraced request gets no timeline (and no lifecycle spans)
+        let out = e.run(vec![req(1, 1, cfg(2.0))]).unwrap();
+        assert!(out[0].timeline.is_none());
+    }
+
+    #[test]
+    fn guidance_events_cover_every_step_and_ledger_matches_counters() {
+        let mut e = engine();
+        e.set_shard(3);
+        e.run(vec![
+            req_seeded(0, 1, cfg(2.0)),
+            req_seeded(1, 1, ag(2.0, 0.995)),
+        ])
+        .unwrap();
+        let batch = e.drain_spans();
+        assert_eq!(batch.shard, 3);
+        assert_eq!(batch.dropped, 0);
+        let events = batch.events_json();
+        // one guidance event per request per step, final step flagged
+        for req_id in [0u64, 1] {
+            let steps: Vec<&crate::util::json::Value> = events
+                .iter()
+                .filter(|v| {
+                    v.req("type").as_str() == Some("guidance")
+                        && v.req("req").as_usize() == Some(req_id as usize)
+                })
+                .collect();
+            assert_eq!(steps.len(), 10, "one decision per step for req {req_id}");
+            assert_eq!(steps[9].req("final").as_bool(), Some(true));
+            assert_eq!(steps[9].req("shard").as_usize(), Some(3));
+            assert_eq!(steps[0].req("final").as_bool(), Some(false));
+            assert_eq!(steps[0].req("baseline_nfes").as_usize(), Some(2));
+        }
+        // the AG request switched from cond+uncond to cond-only evals
+        let ag_evals: Vec<&str> = events
+            .iter()
+            .filter(|v| {
+                v.req("type").as_str() == Some("guidance")
+                    && v.req("req").as_usize() == Some(1)
+            })
+            .map(|v| v.req("evals").as_str().unwrap())
+            .collect();
+        assert_eq!(ag_evals[0], "cond+uncond");
+        assert!(ag_evals.contains(&"cond"), "{ag_evals:?}");
+        // the profile ledger reproduces the engine's own counters exactly
+        let rows = crate::trace::profile::policy_ledger(&events);
+        let saved: u64 = rows.iter().map(|r| r.saved).sum();
+        let nfes: u64 = rows.iter().map(|r| r.nfes).sum();
+        assert_eq!(saved, e.telemetry().counter_sum("nfes_saved_total"));
+        assert_eq!(nfes, e.telemetry().counter_sum("nfes_total"));
+        let ag_row = rows.iter().find(|r| r.policy.starts_with("ag")).unwrap();
+        assert_eq!(ag_row.truncated, 1, "AG truncates under gamma_bar=0.995");
+        // draining cleared the ring; stage histograms were fed per pump
+        assert!(e.drain_spans().events.is_empty());
+        assert!(
+            e.telemetry()
+                .hist_count("stage_ms", &[("stage", "denoise")])
+                > 0
+        );
     }
 }

@@ -63,6 +63,19 @@ pub struct Request {
     /// arrival* — the engine anchors it to its own clock at admission, so
     /// client clocks never enter the ordering
     pub deadline_ms: Option<u64>,
+    /// §Observability: opt into lifecycle span recording (`"trace": true`
+    /// on the wire). The engine records this request's seven-stage
+    /// timeline into its span ring and echoes it on the [`Completion`];
+    /// guidance-decision events are recorded regardless of this flag.
+    pub trace: bool,
+    /// §Observability: router-side stage durations in microseconds
+    /// (global admission check, placement decision, shard queue wait),
+    /// stamped by the fleet before the request reaches an engine — the
+    /// engine folds them into the span timeline at admission. Zero for
+    /// direct engine submissions.
+    pub span_admission_us: u64,
+    pub span_placement_us: u64,
+    pub span_queue_us: u64,
 }
 
 impl Request {
@@ -84,6 +97,10 @@ impl Request {
             client_id: None,
             priority: 0,
             deadline_ms: None,
+            trace: false,
+            span_admission_us: 0,
+            span_placement_us: 0,
+            span_queue_us: 0,
         }
     }
 }
@@ -125,6 +142,11 @@ pub struct Completion {
     pub trajectory: Option<ScoreTrajectory>,
     /// per-step data predictions (present when `record_iterates` was set)
     pub iterates: Vec<Vec<f32>>,
+    /// §Observability: the request's serialized span timeline (a JSON
+    /// array of events, see [`crate::trace`]), filled by the engine at
+    /// completion for requests that set [`Request::trace`] and echoed on
+    /// the server's completion line.
+    pub timeline: Option<crate::util::json::Value>,
 }
 
 /// Live per-request state.
@@ -222,6 +244,13 @@ impl RequestState {
     /// Evals required for the current step, in slot order.
     pub fn current_evals(&self) -> &'static [EvalKind] {
         Self::evals_for(&self.plan)
+    }
+
+    /// The plan the current step executes — read by the engine's tracing
+    /// layer *before* step completion replans (the guidance-decision
+    /// event records what actually ran, which `complete_step` forgets).
+    pub fn current_plan(&self) -> &StepPlan {
+        &self.plan
     }
 
     /// The engine's cost signal: evaluations still owed by the current
@@ -487,6 +516,7 @@ impl RequestState {
                 gammas_eps: std::mem::take(&mut self.gammas_eps),
                 trajectory,
                 iterates: std::mem::take(&mut self.iterates),
+                timeline: None,
             });
         }
 

@@ -193,6 +193,8 @@ pub struct Fleet {
     scheduler: SchedulerKind,
     draining: AtomicBool,
     next_id: AtomicU64,
+    /// Launch instant — `uptime_s` in `{"cmd": "stats"}`.
+    started: Instant,
     /// Fleet-level counters that belong to no shard engine: connection
     /// hygiene (`conn_*`, incremented by the server's handlers) and
     /// chaos injections (`chaos_*`). Merged into `{"cmd": "stats"}` /
@@ -261,6 +263,7 @@ impl Fleet {
             scheduler: cfg.scheduler,
             draining: AtomicBool::new(false),
             next_id: AtomicU64::new(0),
+            started: Instant::now(),
             telemetry: Mutex::new(Telemetry::new()),
         }
     }
@@ -339,6 +342,10 @@ impl Fleet {
     /// router-level: [`RouteError::Draining`]/[`RouteError::Closed`] or a
     /// global-scope [`ScopedShed`].
     pub fn submit(&self, mut req: Request) -> Result<Receiver<JobReply>> {
+        // §Observability: the admission and placement stage durations are
+        // stamped onto traced requests; the shard engine reconstructs
+        // start times from them (the queue stage is stamped shard-side)
+        let t_admit = Instant::now();
         // worst-case cost, for the global budget and the reservation; a
         // step count the engine would refuse anyway reserves nothing (and
         // skips the O(steps) plan walk on the router thread)
@@ -360,9 +367,15 @@ impl Fleet {
                 inner,
             }));
         }
+        let t_place = Instant::now();
         let Some(idx) = guard.router.place(&self.loads, req.client_id.as_deref()) else {
             return Err(anyhow::Error::new(RouteError::Closed));
         };
+        if req.trace {
+            req.span_admission_us =
+                t_place.saturating_duration_since(t_admit).as_micros() as u64;
+            req.span_placement_us = t_place.elapsed().as_micros() as u64;
+        }
         req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let load = &self.loads[idx];
         load.reserve(cost);
@@ -402,6 +415,26 @@ impl Fleet {
         let stats: Vec<ShardStats> = rxs.into_iter().filter_map(|rx| rx.recv().ok()).collect();
         anyhow::ensure!(!stats.is_empty(), "engine fleet is shut down");
         Ok(stats)
+    }
+
+    /// §Observability: drain every live shard's span ring
+    /// (`{"cmd": "spans"}`). Each batch arrives stamped with its shard id;
+    /// serialize with [`crate::trace::batches_to_json`].
+    pub fn drain_spans(&self) -> Result<Vec<crate::trace::SpanBatch>> {
+        let mut rxs = Vec::new();
+        for (tx, load) in self.channels().iter().zip(&self.loads) {
+            if load.is_dead() {
+                continue;
+            }
+            let (rtx, rx) = channel();
+            if tx.send(ShardMsg::Spans(rtx)).is_ok() {
+                rxs.push(rx);
+            }
+        }
+        let batches: Vec<crate::trace::SpanBatch> =
+            rxs.into_iter().filter_map(|rx| rx.recv().ok()).collect();
+        anyhow::ensure!(!batches.is_empty(), "engine fleet is shut down");
+        Ok(batches)
     }
 
     /// Merge shard registries: fleet totals (unlabelled) + per-shard
@@ -452,6 +485,7 @@ impl Fleet {
         let stats = self.collect()?;
         let sum = |f: &dyn Fn(&ShardStats) -> usize| stats.iter().map(f).sum::<usize>();
         let (batches, items) = (sum(&|t| t.batches), sum(&|t| t.items));
+        let spans_dropped: u64 = stats.iter().map(|t| t.spans_dropped).sum();
         let per_shard: Vec<Value> = stats
             .iter()
             .map(|t| {
@@ -463,12 +497,15 @@ impl Fleet {
                     ("batches", num(t.batches as f64)),
                     ("items", num(t.items as f64)),
                     ("mean_occupancy", num(t.mean_occupancy)),
+                    ("spans_dropped_total", num(t.spans_dropped as f64)),
                 ])
             })
             .collect();
         let telemetry = self.merged_telemetry(&stats);
         Ok(obj(vec![
             ("scheduler", s(self.scheduler.name())),
+            ("version", s(env!("CARGO_PKG_VERSION"))),
+            ("uptime_s", num(self.started.elapsed().as_secs_f64())),
             ("shards", num(self.loads.len() as f64)),
             ("placement", s(self.placement().name())),
             ("draining", json::Value::Bool(self.is_draining())),
@@ -485,6 +522,7 @@ impl Fleet {
                     items as f64 / batches as f64
                 }),
             ),
+            ("spans_dropped_total", num(spans_dropped as f64)),
             ("per_shard", arr(per_shard)),
             ("telemetry", telemetry.to_json()),
         ]))
@@ -595,6 +633,62 @@ mod tests {
         assert!(fleet.stats_json().is_err());
         // idempotent
         assert_eq!(fleet.shutdown(), 2);
+    }
+
+    #[test]
+    fn traced_requests_span_the_fleet_and_stats_carry_uptime() {
+        let fleet = fleet(2, Placement::RoundRobin);
+        let rxs: Vec<_> = (0..4)
+            .map(|i| {
+                let mut r = req(1 + i % 4, 6);
+                r.trace = true;
+                fleet.submit(r).unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            match rx.recv().unwrap() {
+                JobReply::Done(c, _) => {
+                    let tl = c.timeline.as_ref().expect("traced timeline");
+                    let rows = tl.as_arr().unwrap();
+                    // every lifecycle stage appears, including the three
+                    // front-end stages the fleet stamped
+                    for stage in crate::trace::Stage::ALL {
+                        assert!(
+                            rows.iter().any(|v| v.req("type").as_str() == Some("span")
+                                && v.req("stage").as_str() == Some(stage.name())),
+                            "missing {} in {tl:?}",
+                            stage.name()
+                        );
+                    }
+                }
+                JobReply::Error(line) => panic!("{line}"),
+            }
+        }
+        // spans drained per shard, stamped with their shard ids
+        let batches = fleet.drain_spans().unwrap();
+        assert_eq!(batches.len(), 2);
+        let shards: Vec<usize> = batches.iter().map(|b| b.shard).collect();
+        assert!(shards.contains(&0) && shards.contains(&1), "{shards:?}");
+        assert!(
+            batches.iter().all(|b| !b.events.is_empty()),
+            "round-robin put traced work on both shards"
+        );
+        // a second drain is empty (the rings cleared), drops still zero
+        let again = fleet.drain_spans().unwrap();
+        assert!(again.iter().all(|b| b.events.is_empty()));
+        // the stats satellite: uptime, crate version, per-shard drops
+        let stats = fleet.stats_json().unwrap();
+        assert!(stats.req("uptime_s").as_f64().unwrap() >= 0.0);
+        assert_eq!(
+            stats.req("version").as_str(),
+            Some(env!("CARGO_PKG_VERSION"))
+        );
+        assert_eq!(stats.req("spans_dropped_total").as_f64(), Some(0.0));
+        for sh in stats.req("per_shard").as_arr().unwrap() {
+            assert_eq!(sh.req("spans_dropped_total").as_f64(), Some(0.0));
+        }
+        fleet.shutdown();
+        assert!(fleet.drain_spans().is_err(), "shut-down fleet has no rings");
     }
 
     #[test]

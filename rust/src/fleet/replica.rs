@@ -77,6 +77,9 @@ pub struct ShardStats {
     pub batches: usize,
     pub items: usize,
     pub mean_occupancy: f64,
+    /// §Observability: span-ring events overwritten before being drained
+    /// (monotonic — surfaced per shard in `{"cmd": "stats"}`).
+    pub spans_dropped: u64,
     pub telemetry: Telemetry,
 }
 
@@ -85,6 +88,8 @@ pub(crate) enum ShardMsg {
     Job(Job),
     /// Reply with the shard's stats snapshot (stats/metrics aggregation).
     Stats(Sender<ShardStats>),
+    /// §Observability: drain the shard's span ring (`{"cmd": "spans"}`).
+    Spans(Sender<crate::trace::SpanBatch>),
     /// Acknowledge once the engine is idle (nothing queued or executing).
     Drain(Sender<()>),
     /// Finish in-flight work, then exit the thread.
@@ -134,6 +139,8 @@ pub(crate) fn run_replica<B: Backend>(
     load: Arc<ShardLoad>,
     shed_infeasible: bool,
 ) {
+    // exported span batches carry this shard's id (§Observability)
+    engine.set_shard(shard);
     let mut jobs: HashMap<u64, Pending> = HashMap::new();
     let mut waiters: Vec<Sender<()>> = Vec::new();
     let mut rate = ServiceRate::default();
@@ -278,8 +285,12 @@ fn handle_msg<B: Backend>(
                 batches: engine.batches(),
                 items: engine.items(),
                 mean_occupancy: engine.mean_occupancy(),
+                spans_dropped: engine.spans_dropped(),
                 telemetry: engine.telemetry().clone(),
             });
+        }
+        ShardMsg::Spans(reply) => {
+            let _ = reply.send(engine.drain_spans());
         }
         ShardMsg::Drain(reply) => {
             if engine.idle() {
@@ -305,11 +316,20 @@ fn admit<B: Backend>(
     job: Job,
 ) {
     let Job {
-        req,
+        mut req,
         cost,
         started,
         reply,
     } = job;
+    // §Observability: the queue stage — front-door arrival to engine
+    // admission, minus the admission/placement time the router already
+    // stamped (the engine reconstructs monotonic start times from these)
+    if req.trace {
+        let total_us = started.elapsed().as_micros() as u64;
+        req.span_queue_us = total_us
+            .saturating_sub(req.span_admission_us)
+            .saturating_sub(req.span_placement_us);
+    }
     // deadline-aware shedding: refuse work that cannot finish in time
     // given this shard's backlog and observed service rate. Skipped until
     // a rate exists — the first requests after a cold start must land.

@@ -96,6 +96,22 @@
 //! fleet (`rust/tests/chaos_integration.rs`). Faults shed with
 //! structured codes; survivors stay byte-identical to a clean run.
 //!
+//! ## The observability layer (§Observability)
+//!
+//! Aggregate counters say *that* AG saves NFEs; the tracing layer
+//! ([`trace`]) says *where each request spent its time* and *what the
+//! policy decided at every step*. Engines record lifecycle spans
+//! (admission → placement → queue → batch → denoise → combine →
+//! complete) and one guidance-decision event per denoising step into
+//! per-shard preallocated ring buffers — the zero-alloc `pump()`
+//! invariant holds with tracing on. Opt a request in with
+//! `"trace": true` (its timeline is echoed on the completion line),
+//! drain everything with `{"cmd": "spans"}`, and render with
+//! `agd profile --spans FILE` — Chrome trace-event JSON for Perfetto,
+//! per-stage p50/p95/p99, and the per-policy realized-NFE-savings
+//! ledger. The full metric/span catalogue lives in
+//! `docs/OBSERVABILITY.md`.
+//!
 //! Start with [`coordinator::engine::Engine`] and the constructor helpers
 //! in [`coordinator::policy`] (`cfg`, `ag`, …); see
 //! `examples/quickstart.rs`.
@@ -120,6 +136,7 @@ pub mod sim;
 pub mod stats;
 pub mod tensor;
 pub mod testing;
+pub mod trace;
 pub mod util;
 
 pub use backend::{Backend, BatchBuf, BatchOut, EvalInput, GmmBackend};

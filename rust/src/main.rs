@@ -5,6 +5,7 @@
 //!   generate [--prompt ..]       generate images under a policy, write PPMs
 //!   serve [--addr ..]            TCP line-protocol server
 //!   replay [--trace ..]          replay a captured trace against a server
+//!   profile [--spans ..]         render a drained spans capture (§Observability)
 //!   search [--iters ..]          run the NAS policy search (§4)
 //!   fit-ols [--train ..]         collect trajectories + fit LINEARAG OLS
 //!
@@ -41,6 +42,7 @@ fn main() {
         "generate" => cmd_generate(&args),
         "serve" => cmd_serve(&args),
         "replay" => cmd_replay(&args),
+        "profile" => cmd_profile(&args),
         "search" => cmd_search(&args),
         "fit-ols" => cmd_fit_ols(&args),
         _ => {
@@ -58,7 +60,7 @@ fn print_help() {
     let names = PolicyRegistry::builtin().names().join("|");
     eprintln!(
         "agd — Adaptive Guidance diffusion serving\n\n\
-         USAGE: agd <info|generate|serve|replay|search|fit-ols> [options]\n\n\
+         USAGE: agd <info|generate|serve|replay|profile|search|fit-ols> [options]\n\n\
          common options:\n\
            --artifacts DIR     artifacts directory (default: artifacts)\n\
            --model NAME        dit_s | dit_b (default: dit_b)\n\n\
@@ -90,7 +92,15 @@ fn print_help() {
            --trace-out FILE     append one JSONL record per served request\n\
          replay:   --trace FILE (required; a --trace-out capture)\n\
            --addr HOST:PORT --speed X --connections N --timeout-ms N\n\
+           --max-in-flight N    closed-loop: ignore the captured schedule,\n\
+                                keep N requests in flight per connection\n\
+                                (0 = open-loop at the captured rate)\n\
            --out FILE           wire-latency report (default BENCH_replay.json)\n\
+         profile:  --spans FILE (required; a {{\"cmd\": \"spans\"}} reply, JSON or JSONL)\n\
+           --out FILE           Chrome trace JSON for chrome://tracing or\n\
+                                Perfetto (default PROFILE_trace.json)\n\
+           prints per-stage p50/p95/p99 and the per-policy NFE-savings\n\
+           ledger; see docs/OBSERVABILITY.md\n\
          search:   --iters N --lr F --seed N --out FILE\n\
          fit-ols:  --train N --test N --steps N --out FILE"
     );
@@ -304,12 +314,19 @@ fn cmd_replay(args: &Args) -> Result<()> {
         speed: args.f64("speed", 1.0),
         connections: args.usize("connections", 4).max(1),
         timeout_ms: args.u64("timeout-ms", 30_000),
+        // 0 = open-loop (captured schedule); N = closed-loop throughput
+        // measurement at N in-flight per connection (§Observability)
+        max_in_flight: args.usize("max-in-flight", 0),
+    };
+    let mode = if cfg.max_in_flight > 0 {
+        format!("closed-loop, {} in flight/conn", cfg.max_in_flight)
+    } else {
+        format!("open-loop, speed {}x", cfg.speed)
     };
     eprintln!(
-        "replaying {} records from {trace_path} against {} (speed {}x, {} connections)",
+        "replaying {} records from {trace_path} against {} ({mode}, {} connections)",
         records.len(),
         cfg.addr,
-        cfg.speed,
         cfg.connections
     );
     let outcome = chaos::replay(&records, &cfg)?;
@@ -319,13 +336,15 @@ fn cmd_replay(args: &Args) -> Result<()> {
         .map(|(code, n)| format!("{code}={n}"))
         .collect();
     println!(
-        "sent {} completed {} shed {} [{}] transport_errors {} wall {:.0}ms",
+        "sent {} completed {} shed {} [{}] transport_errors {} wall {:.0}ms \
+         achieved {:.1} req/s",
         outcome.sent,
         outcome.completed,
         outcome.shed_total(),
         shed.join(","),
         outcome.transport_errors,
-        outcome.wall_ms
+        outcome.wall_ms,
+        outcome.completed as f64 / (outcome.wall_ms / 1e3).max(1e-9)
     );
     println!(
         "digests: {} checked, {} mismatched",
@@ -341,6 +360,56 @@ fn cmd_replay(args: &Args) -> Result<()> {
         outcome.digest_mismatches,
         outcome.digest_checked
     );
+    Ok(())
+}
+
+/// `agd profile`: render a drained spans capture (§Observability) — the
+/// saved reply of `{"cmd": "spans"}`, or any JSONL of span/guidance
+/// events — into Chrome trace-event JSON (`--out`, loadable at
+/// chrome://tracing or <https://ui.perfetto.dev>) plus two stdout tables:
+/// per-stage latency percentiles and the per-policy realized-NFE-savings
+/// ledger. Walkthrough in `docs/OBSERVABILITY.md`.
+fn cmd_profile(args: &Args) -> Result<()> {
+    use adaptive_guidance::trace::profile;
+
+    let spans_path = args.get("spans").ok_or_else(|| {
+        anyhow!("profile needs --spans FILE (a saved {{\"cmd\": \"spans\"}} reply)")
+    })?;
+    let text = std::fs::read_to_string(spans_path)
+        .map_err(|e| anyhow!("reading {spans_path}: {e}"))?;
+    let events = adaptive_guidance::trace::parse_capture(&text)?;
+    anyhow::ensure!(!events.is_empty(), "{spans_path} holds no trace events");
+    let spans = events
+        .iter()
+        .filter(|e| e.get("type").and_then(json::Value::as_str) == Some("span"))
+        .count();
+    eprintln!(
+        "{}: {} events ({} spans, {} guidance)",
+        spans_path,
+        events.len(),
+        spans,
+        events.len() - spans
+    );
+
+    let out = args.get_or("out", "PROFILE_trace.json");
+    std::fs::write(out, json::to_string(&profile::chrome_trace(&events)))
+        .map_err(|e| anyhow!("writing {out}: {e}"))?;
+    eprintln!("chrome trace written to {out} (open in chrome://tracing or Perfetto)");
+
+    let summaries = profile::stage_summaries(&events);
+    if summaries.is_empty() {
+        eprintln!("no lifecycle spans in the capture (no \"trace\": true requests?)");
+    } else {
+        adaptive_guidance::perfstat::print_summaries(&summaries);
+    }
+    let ledger = profile::policy_ledger(&events);
+    if !ledger.is_empty() {
+        println!("realized NFE savings by policy (final guidance events):");
+        adaptive_guidance::eval::harness::print_table(
+            &["policy", "requests", "nfes", "max_nfes", "saved", "truncated"],
+            &ledger.iter().map(profile::LedgerRow::row).collect::<Vec<_>>(),
+        );
+    }
     Ok(())
 }
 

@@ -60,4 +60,4 @@ pub use admission::{Admission, AdmitError};
 pub use scheduler::{
     CostAware, Deadline, FairShare, Fifo, RequestMeta, Scheduler, SchedulerKind, WorkItem,
 };
-pub use telemetry::{MetricKey, Telemetry};
+pub use telemetry::{MetricKey, Telemetry, STAGE_HIST};

@@ -58,6 +58,12 @@ use crate::util::json::{self, Value};
 /// `other` value. Applies to every metric written through the registry.
 pub const LABEL_VALUE_CAP: usize = 64;
 
+/// §Observability: shape of the per-pump `stage_ms{stage=..}` histograms
+/// (batch assembly / denoise / combine, 0..1 s in 10 ms bins). Fed by the
+/// engine from the same clock the trace spans use, so the aggregate
+/// distribution and a drained timeline agree.
+pub const STAGE_HIST: (f64, f64, usize) = (0.0, 1_000.0, 100);
+
 /// Registry key: metric name + sorted `(label, value)` pairs.
 type Key = (String, Vec<(String, String)>);
 
@@ -699,5 +705,102 @@ mod tests {
             text.contains("done{client=\"we\\\"b\\\\x\\nline\"} 1\n"),
             "{text}"
         );
+    }
+
+    /// §Observability edge cases in the exposition: a histogram whose
+    /// every sample clamps into an edge bin still renders exact
+    /// `_sum`/`_count`, a single-bin histogram renders only the `+Inf`
+    /// bucket, and reading a series that was never observed is defined
+    /// (zero), not a panic.
+    #[test]
+    fn prometheus_histogram_edge_cases() {
+        let mut t = Telemetry::new();
+        // out-of-range on both sides: clamped bins, exact sum/count
+        t.observe("clamp_ms", &[], -5.0, 0.0, 10.0, 2);
+        t.observe("clamp_ms", &[], 99.0, 0.0, 10.0, 2);
+        // single bin: the only bucket edge is +Inf
+        t.observe("one_bin", &[], 3.0, 0.0, 10.0, 1);
+        let text = t.to_prometheus();
+        assert!(text.contains("clamp_ms_bucket{le=\"5\"} 1\n"), "{text}");
+        assert!(text.contains("clamp_ms_bucket{le=\"+Inf\"} 2\n"), "{text}");
+        assert!(text.contains("clamp_ms_sum 94\n"), "{text}");
+        assert!(text.contains("clamp_ms_count 2\n"), "{text}");
+        assert_eq!(text.matches("one_bin_bucket").count(), 1, "{text}");
+        assert!(text.contains("one_bin_bucket{le=\"+Inf\"} 1\n"), "{text}");
+
+        // an "empty" histogram (series exists, zero samples) only arises
+        // through the merge path: absorb a shard, then render — the shard
+        // itself may have series this registry never observed into
+        let mut merged = Telemetry::new();
+        merged.absorb(&t, Some(("shard", "0")));
+        let text = merged.to_prometheus();
+        assert!(
+            text.contains("one_bin_count{shard=\"0\"} 1\n"),
+            "{text}"
+        );
+        // quantiles of a zero-sample cell are defined (0.0), not a panic
+        assert_eq!(merged.hist_mean("never_observed", &[]), 0.0);
+        assert_eq!(merged.hist_count("never_observed", &[]), 0);
+    }
+
+    /// Past [`LABEL_VALUE_CAP`] the overflow series renders as
+    /// `other` in the exposition — the text stays bounded and parseable.
+    #[test]
+    fn prometheus_renders_capped_overflow_as_other() {
+        let mut t = Telemetry::new();
+        for i in 0..(LABEL_VALUE_CAP + 7) {
+            let c = format!("client-{i}");
+            t.inc("done", &[("client", c.as_str())], 1);
+        }
+        let text = t.to_prometheus();
+        assert!(text.contains("done{client=\"other\"} 7\n"), "{text}");
+        assert!(text.contains("done{client=\"client-0\"} 1\n"), "{text}");
+        // one series per admitted value + the shared overflow series
+        assert_eq!(
+            text.matches("\ndone{").count() + usize::from(text.starts_with("done{")),
+            LABEL_VALUE_CAP + 1,
+            "{text}"
+        );
+    }
+
+    /// §Observability: the engine's per-pump `stage_ms{stage=..}`
+    /// histograms ([`STAGE_HIST`]) merge across shards like any other
+    /// series — bins add under the fleet total and survive per-shard —
+    /// while a shape-mismatched series is dropped, not corrupted.
+    #[test]
+    fn absorb_merges_stage_histograms() {
+        let (lo, hi, bins) = STAGE_HIST;
+        let mk = |batch: f64, denoise: f64| {
+            let mut t = Telemetry::new();
+            t.observe("stage_ms", &[("stage", "batch")], batch, lo, hi, bins);
+            t.observe("stage_ms", &[("stage", "denoise")], denoise, lo, hi, bins);
+            t
+        };
+        let shards = [mk(1.0, 40.0), mk(3.0, 60.0)];
+        let mut merged = Telemetry::new();
+        for (i, part) in shards.iter().enumerate() {
+            merged.absorb(part, None);
+            let shard = format!("{i}");
+            merged.absorb(part, Some(("shard", &shard)));
+        }
+        assert_eq!(merged.hist_count("stage_ms", &[("stage", "batch")]), 2);
+        assert_eq!(merged.hist_count("stage_ms", &[("stage", "denoise")]), 2);
+        assert!(
+            (merged.hist_mean("stage_ms", &[("stage", "denoise")]) - 50.0).abs() < 1e-9
+        );
+        assert_eq!(
+            merged.hist_count("stage_ms", &[("stage", "denoise"), ("shard", "1")]),
+            1
+        );
+        let prom = merged.to_prometheus();
+        assert!(prom.contains("# TYPE stage_ms histogram"), "{prom}");
+        assert!(prom.contains("stage_ms_count{stage=\"denoise\"} 2\n"), "{prom}");
+
+        // a same-name series with a different bin shape refuses to merge
+        // into the existing bins (dropped, totals unchanged)
+        let mut odd = Telemetry::new();
+        odd.observe("stage_ms", &[("stage", "batch")], 1.0, 0.0, 10.0, 5);
+        merged.absorb(&odd, None);
+        assert_eq!(merged.hist_count("stage_ms", &[("stage", "batch")]), 2);
     }
 }

@@ -56,6 +56,17 @@
 //!            multi-line reply in the protocol: it is terminated by a
 //!            blank line, so scrapers read until the first empty line
 //!            (everything else stays one line per reply).
+//! command  {"cmd": "spans"}
+//!          → {"spans": [{"type": "span"|"guidance", "req": 3,
+//!             "shard": 0, ...}, ...], "dropped": 0}
+//!            §Observability: drains every shard's span ring — request
+//!            lifecycle spans (for `"trace": true` requests) and one
+//!            guidance-decision event per denoising step of every
+//!            request. Save the reply to a file and render it with
+//!            `agd profile --spans FILE` (Chrome trace JSON + per-stage
+//!            percentiles + the per-policy NFE-savings ledger); full
+//!            schema in `docs/OBSERVABILITY.md`. Draining clears the
+//!            rings; `dropped` counts ring overwrites (monotonic).
 //! command  {"cmd": "drain"}
 //!          → {"drained": true, "shards": N}, sent only after every shard
 //!            has finished all in-flight work (nothing is dropped) and
@@ -125,6 +136,13 @@
 //! so simple clients never need the nested form. Unknown policy names
 //! produce a structured JSON error listing the registered policies instead
 //! of a dropped connection.
+//!
+//! Setting `"trace": true` on a request opts it into lifecycle-span
+//! recording (§Observability, [`crate::trace`]): its completion line
+//! gains a `"timeline"` array covering admission → placement → queue →
+//! batch → denoise → combine → complete, and the same spans land in the
+//! shard's ring for `{"cmd": "spans"}`. Guidance-decision events are
+//! recorded for every request regardless. See `docs/OBSERVABILITY.md`.
 //!
 //! Scheduling envelope fields are optional: `client_id` names the
 //! fair-share lane (and the `client=` telemetry label), `priority` and
@@ -253,7 +271,7 @@ impl ServerConfig {
 /// Top-level request fields that are *not* policy parameters.
 const ENVELOPE_KEYS: &[&str] = &[
     "prompt", "policy", "steps", "seed", "negative", "image", "model", "src_image", "guidance",
-    "client_id", "priority", "deadline_ms",
+    "client_id", "priority", "deadline_ms", "trace",
 ];
 
 /// Parse one protocol line into a [`Request`] (without an id — the fleet
@@ -361,6 +379,11 @@ pub fn parse_request_value(
     if let Some(d) = v.get("deadline_ms").and_then(Value::as_f64) {
         req.deadline_ms = Some(d as u64);
     }
+    // §Observability: opt this request into lifecycle-span recording; its
+    // timeline is echoed on the completion line
+    if v.get("trace").and_then(Value::as_bool) == Some(true) {
+        req.trace = true;
+    }
     let want_image = v.get("image").and_then(Value::as_bool).unwrap_or(false);
     Ok((req, want_image))
 }
@@ -385,6 +408,10 @@ pub fn completion_to_line(c: &Completion, ms: f64, with_image: bool) -> String {
             "image",
             arr(c.image.iter().map(|&v| num(v as f64)).collect()),
         ));
+    }
+    // §Observability: the span timeline for `"trace": true` requests
+    if let Some(tl) = &c.timeline {
+        fields.push(("timeline", tl.clone()));
     }
     json::to_string(&obj(fields))
 }
@@ -537,6 +564,12 @@ fn dispatch_line(
                 Ok(text) => text,
                 Err(e) => error_to_line(&e),
             },
+            // §Observability: drain every shard's span ring (one reply
+            // object; see docs/OBSERVABILITY.md and `agd profile`)
+            "spans" => match fleet.drain_spans() {
+                Ok(batches) => json::to_string(&crate::trace::batches_to_json(&batches)),
+                Err(e) => error_to_line(&e),
+            },
             // graceful quiesce: stop admitting, wait for every shard to go
             // idle, join the engine threads, then acknowledge
             "drain" => {
@@ -547,7 +580,7 @@ fn dispatch_line(
                 ]))
             }
             other => error_line_coded(
-                &anyhow!("unknown cmd `{other}` (supported: stats, metrics, drain)"),
+                &anyhow!("unknown cmd `{other}` (supported: stats, metrics, spans, drain)"),
                 "unknown_cmd",
             ),
         });
@@ -968,6 +1001,7 @@ mod tests {
             gammas_eps: vec![],
             trajectory: None,
             iterates: vec![],
+            timeline: None,
         };
         let line = completion_to_line(&c, 12.345, true);
         let v = json::parse(&line).unwrap();
@@ -1383,6 +1417,70 @@ mod tests {
         // drain is idempotent over the wire too
         let v = roundtrip(&mut conn, r#"{"cmd": "drain"}"#);
         assert_eq!(v.req("drained").as_bool(), Some(true));
+    }
+
+    /// §Observability over the wire: `"trace": true` echoes the request's
+    /// lifecycle timeline on the completion line (all seven stages), and
+    /// `{"cmd": "spans"}` drains the shard rings — span events for the
+    /// traced request plus guidance events for every request. A second
+    /// drain returns an empty batch set.
+    #[test]
+    fn tcp_trace_opt_in_and_spans_command() {
+        let (addr, _fleet) = spawn_test_server(ServerConfig {
+            shards: 2,
+            ..Default::default()
+        });
+        let mut conn = TcpStream::connect(addr).unwrap();
+        // untraced request: guidance events only, no timeline echo
+        let v = roundtrip(
+            &mut conn,
+            r#"{"prompt": "red circle", "policy": "cfg", "steps": 4, "guidance": 2.0}"#,
+        );
+        assert!(v.get("error").is_none(), "{v:?}");
+        assert!(v.get("timeline").is_none(), "{v:?}");
+        // traced request: the completion line carries the timeline
+        let v = roundtrip(
+            &mut conn,
+            r#"{"prompt": "red circle", "policy": "ag", "steps": 8,
+                "guidance": 2.0, "trace": true}"#,
+        );
+        assert!(v.get("error").is_none(), "{v:?}");
+        let tl = v.req("timeline").as_arr().expect("timeline array");
+        assert!(!tl.is_empty());
+        for stage in crate::trace::Stage::ALL {
+            assert!(
+                tl.iter().any(|e| e.get("stage").and_then(Value::as_str)
+                    == Some(stage.name())),
+                "timeline missing stage {} in {v:?}",
+                stage.name()
+            );
+        }
+        // the spans verb drains both requests' events from the rings
+        let v = roundtrip(&mut conn, r#"{"cmd": "spans"}"#);
+        let spans = v.req("spans").as_arr().expect("spans array");
+        assert!(v.req("dropped").as_f64().is_some(), "{v:?}");
+        assert!(
+            spans.iter().any(|e| e.get("type").and_then(Value::as_str)
+                == Some("guidance")),
+            "{v:?}"
+        );
+        assert!(
+            spans.iter().any(|e| e.get("type").and_then(Value::as_str)
+                == Some("span")),
+            "{v:?}"
+        );
+        // guidance events cover both policies even though only one traced
+        for policy in ["cfg", "ag"] {
+            assert!(
+                spans.iter().any(|e| {
+                    e.get("policy").and_then(Value::as_str) == Some(policy)
+                }),
+                "no guidance events for {policy}: {v:?}"
+            );
+        }
+        // draining cleared the rings
+        let v = roundtrip(&mut conn, r#"{"cmd": "spans"}"#);
+        assert_eq!(v.req("spans").as_arr().map(<[Value]>::len), Some(0), "{v:?}");
     }
 
     /// Structured `shard_failed` lines: a mid-flight shard death

@@ -1,0 +1,723 @@
+//! §Observability: request-lifecycle span recording & guidance-decision
+//! profiling.
+//!
+//! Distinct from [`crate::chaos::trace`], which captures *traffic* for
+//! replay — this module captures *where a request spent its time* and
+//! *what the guidance policy actually decided*, so the paper's efficiency
+//! claim (AG cuts NFEs without quality loss) is observable per request
+//! and per step, not just as aggregate counters.
+//!
+//! Two event kinds land in one per-shard ring:
+//!
+//! * **Lifecycle spans** ([`Event::Span`]) — one per stage a request
+//!   passes through: `admission → placement → queue → batch → denoise →
+//!   combine → complete` ([`Stage`]). Recorded only for requests that
+//!   opted in (`"trace": true` in the server envelope /
+//!   `Request::trace`), because the per-step stages (batch, denoise,
+//!   combine) repeat every denoising step.
+//! * **Guidance decisions** ([`Event::Guidance`]) — one per denoising
+//!   step for *every* request: step index, the evaluations the policy
+//!   executed ([`EvalSet`]: cond / cond+uncond / extrapolated / …),
+//!   gamma (Eq. 7), cumulative NFEs vs. the full-CFG baseline, and
+//!   whether the policy's `observe` fired truncation at this step. The
+//!   final event of a request carries `last = true` and is what the
+//!   [`profile`] ledger sums — by construction it reproduces the
+//!   engine's `nfes_saved_total{policy}` counters.
+//!
+//! # The zero-allocation contract
+//!
+//! The ring ([`SpanRing`]) is preallocated at engine construction and
+//! events are plain `Copy` structs, so recording from the engine's
+//! steady-state `pump()` performs **no heap allocation** — the
+//! `zero_alloc.rs` / `par_zero_alloc.rs` invariants hold with tracing
+//! on. Everything that does allocate (policy-name interning, per-request
+//! timeline reservation) happens at request admission; everything that
+//! serializes (drains, JSON) happens off the hot path. On overflow the
+//! ring overwrites the oldest event and bumps a monotonic `dropped`
+//! counter — surfaced as `spans_dropped_total` in `{"cmd": "stats"}` so
+//! loss is visible, never silent.
+//!
+//! # Draining and export
+//!
+//! [`TraceRecorder::drain`] snapshots the ring into a [`SpanBatch`]
+//! (events + the interned policy table + the drop counter); the fleet
+//! stamps each batch with its shard id and `{"cmd": "spans"}` serializes
+//! them ([`batches_to_json`]). `agd profile --spans FILE` then turns a
+//! drained capture into a Chrome trace-event JSON (load it at
+//! `chrome://tracing` or <https://ui.perfetto.dev>), a per-stage
+//! p50/p95/p99 table, and the per-policy realized-NFE-savings ledger
+//! ([`profile`]). See `docs/OBSERVABILITY.md` for the full schema and a
+//! walkthrough.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::policy::StepPlan;
+use crate::util::json::{self, Value};
+
+pub mod profile;
+
+/// Default per-shard ring capacity (events). At ~40 events per traced
+/// 8-step request this holds on the order of a hundred traced requests
+/// between drains.
+pub const DEFAULT_SPAN_CAP: usize = 4096;
+
+/// Cap on the interned policy-name table; admissions past it record
+/// under [`OTHER_POLICY`] rather than growing without bound.
+pub const MAX_POLICIES: usize = 256;
+
+/// Sentinel policy id for table overflow — resolves to `"other"`.
+pub const OTHER_POLICY: u16 = u16::MAX;
+
+/// The seven request-lifecycle stages, in request order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Global admission check at the fleet router.
+    Admission,
+    /// Router placement decision (shard choice).
+    Placement,
+    /// Shard queue wait: router hand-off → engine admit.
+    Queue,
+    /// Batch assembly: packing work items into the batch buffers.
+    Batch,
+    /// The batched network evaluation (`denoise_into_par`).
+    Denoise,
+    /// Fused combine+gamma / solver step completion.
+    Combine,
+    /// Completion bookkeeping and hand-back.
+    Complete,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 7] = [
+        Stage::Admission,
+        Stage::Placement,
+        Stage::Queue,
+        Stage::Batch,
+        Stage::Denoise,
+        Stage::Combine,
+        Stage::Complete,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::Placement => "placement",
+            Stage::Queue => "queue",
+            Stage::Batch => "batch",
+            Stage::Denoise => "denoise",
+            Stage::Combine => "combine",
+            Stage::Complete => "complete",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Stage> {
+        Stage::ALL.into_iter().find(|st| st.name() == s)
+    }
+}
+
+/// Which network evaluations a step actually executed — the observable
+/// form of a [`StepPlan`] (the OLS coefficients a `LinearGuided` plan
+/// carries are not part of the observation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalSet {
+    /// Conditional only (AG after truncation, cond-only baselines).
+    Cond,
+    /// The classic CFG pair.
+    CondUncond,
+    /// Conditional evaluated, unconditional *extrapolated* (LINEARAG).
+    Extrapolated,
+    /// Unconditional only (searched policies may select it).
+    Uncond,
+    /// The editing triple (Eq. 9).
+    EditTriple,
+    /// Editing after truncation: the full-conditioned eval only.
+    EditCond,
+}
+
+impl EvalSet {
+    /// Classify the plan a step executed.
+    pub fn of(plan: &StepPlan) -> EvalSet {
+        match plan {
+            StepPlan::Guided { .. } => EvalSet::CondUncond,
+            StepPlan::CondOnly => EvalSet::Cond,
+            StepPlan::UncondOnly => EvalSet::Uncond,
+            StepPlan::LinearGuided { .. } => EvalSet::Extrapolated,
+            StepPlan::EditGuided { .. } => EvalSet::EditTriple,
+            StepPlan::EditCondOnly => EvalSet::EditCond,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EvalSet::Cond => "cond",
+            EvalSet::CondUncond => "cond+uncond",
+            EvalSet::Extrapolated => "extrapolated",
+            EvalSet::Uncond => "uncond",
+            EvalSet::EditTriple => "edit-triple",
+            EvalSet::EditCond => "edit-cond",
+        }
+    }
+}
+
+/// One recorded event. `Copy` + fixed-size on purpose: recording is a
+/// slot write into a preallocated ring, never an allocation. Times are
+/// microseconds on the owning [`TraceRecorder`]'s clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event {
+    /// A lifecycle stage a traced request passed through.
+    Span {
+        req: u64,
+        stage: Stage,
+        start_us: u64,
+        dur_us: u64,
+    },
+    /// One guidance decision (one denoising step of one request).
+    Guidance {
+        req: u64,
+        /// Interned policy id ([`TraceRecorder::intern`]).
+        policy: u16,
+        at_us: u64,
+        /// Step index (0-based) the decision applied to.
+        step: u32,
+        evals: EvalSet,
+        /// Gamma (Eq. 7) observed at this step; NaN when the step had no
+        /// convergence signal (serialized as `null`).
+        gamma: f32,
+        /// Cumulative NFEs spent by this request through this step.
+        nfes: u32,
+        /// Cumulative full-CFG baseline: 2 evals for every step so far.
+        baseline: u32,
+        /// The policy's worst-case NFE budget for the whole request —
+        /// the engine's `nfes_saved` accounting is `max_nfes - nfes`.
+        max_nfes: u32,
+        /// The policy's `observe` fired truncation at this step.
+        truncated: bool,
+        /// This is the request's final step (the ledger sums these).
+        last: bool,
+    },
+}
+
+impl Default for Event {
+    fn default() -> Event {
+        Event::Span {
+            req: 0,
+            stage: Stage::Admission,
+            start_us: 0,
+            dur_us: 0,
+        }
+    }
+}
+
+impl Event {
+    pub fn req(&self) -> u64 {
+        match *self {
+            Event::Span { req, .. } | Event::Guidance { req, .. } => req,
+        }
+    }
+
+    /// Event timestamp (span start / decision instant) in recorder µs.
+    pub fn at_us(&self) -> u64 {
+        match *self {
+            Event::Span { start_us, .. } => start_us,
+            Event::Guidance { at_us, .. } => at_us,
+        }
+    }
+}
+
+/// Fixed-capacity overwrite ring of [`Event`]s. The buffer is fully
+/// allocated up front; `push` is a slot write (overwriting the oldest
+/// event when full and bumping the monotonic `dropped` total).
+#[derive(Debug)]
+pub struct SpanRing {
+    buf: Vec<Event>,
+    /// Next write slot.
+    head: usize,
+    /// Live events (≤ capacity).
+    len: usize,
+    dropped: u64,
+}
+
+impl SpanRing {
+    pub fn new(cap: usize) -> SpanRing {
+        let cap = cap.max(1);
+        SpanRing {
+            buf: vec![Event::default(); cap],
+            head: 0,
+            len: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Total events overwritten before being drained (monotonic — drains
+    /// do not reset it).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Record one event — no allocation, ever.
+    pub fn push(&mut self, ev: Event) {
+        let cap = self.buf.len();
+        self.buf[self.head] = ev;
+        self.head = (self.head + 1) % cap;
+        if self.len == cap {
+            self.dropped += 1;
+        } else {
+            self.len += 1;
+        }
+    }
+
+    /// Append the live events to `out` oldest-first and clear the ring.
+    pub fn drain_into(&mut self, out: &mut Vec<Event>) {
+        let cap = self.buf.len();
+        let start = (self.head + cap - self.len) % cap;
+        out.reserve(self.len);
+        for i in 0..self.len {
+            out.push(self.buf[(start + i) % cap]);
+        }
+        self.len = 0;
+        self.head = 0;
+    }
+}
+
+/// Per-shard recorder: the ring, the interned policy-name table, and the
+/// clock every event timestamp is measured on. Owned by the engine and
+/// only ever touched from the engine thread — no locks on the hot path.
+#[derive(Debug)]
+pub struct TraceRecorder {
+    ring: SpanRing,
+    policies: Vec<String>,
+    epoch: Instant,
+}
+
+impl TraceRecorder {
+    pub fn new(cap: usize) -> TraceRecorder {
+        TraceRecorder {
+            ring: SpanRing::new(cap),
+            policies: Vec::with_capacity(MAX_POLICIES.min(64)),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Microseconds since the recorder's epoch — the clock all events
+    /// (and the engine's stage histograms) share.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// An [`Instant`] on the recorder clock (0 for instants predating
+    /// the epoch — only reachable if a request outlived an engine swap).
+    pub fn us_since_epoch(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Intern a policy display name (admission-time only — this is the
+    /// one place the recorder may allocate). Past [`MAX_POLICIES`]
+    /// distinct names, returns [`OTHER_POLICY`].
+    pub fn intern(&mut self, name: &str) -> u16 {
+        if let Some(i) = self.policies.iter().position(|p| p == name) {
+            return i as u16;
+        }
+        if self.policies.len() >= MAX_POLICIES {
+            return OTHER_POLICY;
+        }
+        self.policies.push(name.to_owned());
+        (self.policies.len() - 1) as u16
+    }
+
+    /// The interned policy-name table — for serializing events without
+    /// draining the ring (the engine's per-request timelines).
+    pub fn policies(&self) -> &[String] {
+        &self.policies
+    }
+
+    pub fn policy_name(&self, id: u16) -> &str {
+        self.policies
+            .get(id as usize)
+            .map(String::as_str)
+            .unwrap_or("other")
+    }
+
+    /// Record one event into the ring — alloc-free.
+    pub fn record(&mut self, ev: Event) {
+        self.ring.push(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.ring.dropped()
+    }
+
+    /// Snapshot and clear the ring. The batch carries a copy of the
+    /// policy table so guidance events stay resolvable after transport.
+    pub fn drain(&mut self) -> SpanBatch {
+        let mut events = Vec::new();
+        self.ring.drain_into(&mut events);
+        SpanBatch {
+            shard: 0,
+            events,
+            policies: self.policies.clone(),
+            dropped: self.ring.dropped(),
+        }
+    }
+}
+
+/// Append `ev` only while spare capacity remains — the per-request
+/// timeline buffers are reserved at admission and must never reallocate
+/// inside `pump()`.
+pub fn push_capped(buf: &mut Vec<Event>, ev: Event) {
+    if buf.len() < buf.capacity() {
+        buf.push(ev);
+    }
+}
+
+/// A drained ring: events + the policy table that resolves guidance
+/// ids + the shard's monotonic drop total. `shard` is stamped by the
+/// fleet when batches from multiple replicas are merged.
+#[derive(Debug, Clone)]
+pub struct SpanBatch {
+    pub shard: usize,
+    pub events: Vec<Event>,
+    pub policies: Vec<String>,
+    pub dropped: u64,
+}
+
+impl SpanBatch {
+    /// Serialize every event, stamped with this batch's shard id.
+    pub fn events_json(&self) -> Vec<Value> {
+        self.events
+            .iter()
+            .map(|ev| event_to_json(ev, self.shard, &self.policies))
+            .collect()
+    }
+}
+
+fn policy_label(policies: &[String], id: u16) -> &str {
+    policies
+        .get(id as usize)
+        .map(String::as_str)
+        .unwrap_or("other")
+}
+
+/// The wire/file schema of one event (see `docs/OBSERVABILITY.md`).
+pub fn event_to_json(ev: &Event, shard: usize, policies: &[String]) -> Value {
+    match *ev {
+        Event::Span {
+            req,
+            stage,
+            start_us,
+            dur_us,
+        } => json::obj(vec![
+            ("type", json::s("span")),
+            ("req", json::num(req as f64)),
+            ("shard", json::num(shard as f64)),
+            ("stage", json::s(stage.name())),
+            ("start_us", json::num(start_us as f64)),
+            ("dur_us", json::num(dur_us as f64)),
+        ]),
+        Event::Guidance {
+            req,
+            policy,
+            at_us,
+            step,
+            evals,
+            gamma,
+            nfes,
+            baseline,
+            max_nfes,
+            truncated,
+            last,
+        } => json::obj(vec![
+            ("type", json::s("guidance")),
+            ("req", json::num(req as f64)),
+            ("shard", json::num(shard as f64)),
+            ("policy", json::s(policy_label(policies, policy))),
+            ("at_us", json::num(at_us as f64)),
+            ("step", json::num(step as f64)),
+            ("evals", json::s(evals.name())),
+            (
+                "gamma",
+                if gamma.is_finite() {
+                    json::num(gamma as f64)
+                } else {
+                    Value::Null
+                },
+            ),
+            ("nfes", json::num(nfes as f64)),
+            ("baseline_nfes", json::num(baseline as f64)),
+            ("max_nfes", json::num(max_nfes as f64)),
+            ("truncated", Value::Bool(truncated)),
+            ("final", Value::Bool(last)),
+        ]),
+    }
+}
+
+/// The `{"cmd": "spans"}` reply body: all events across shards (each
+/// stamped with its shard) plus the summed drop total.
+pub fn batches_to_json(batches: &[SpanBatch]) -> Value {
+    let mut events = Vec::new();
+    let mut dropped = 0u64;
+    for b in batches {
+        events.extend(b.events_json());
+        dropped += b.dropped;
+    }
+    json::obj(vec![
+        ("spans", Value::Arr(events)),
+        ("dropped", json::num(dropped as f64)),
+    ])
+}
+
+/// Parse a spans capture: a `{"cmd": "spans"}` reply object, a bare
+/// JSON array of events, a single event object, or JSONL (one event or
+/// reply object per line). The formats compose so `agd profile` accepts
+/// whatever a user saved — a raw netcat reply line or a concatenation
+/// of several drains.
+pub fn parse_capture(text: &str) -> Result<Vec<Value>> {
+    let trimmed = text.trim();
+    if trimmed.is_empty() {
+        return Ok(Vec::new());
+    }
+    if let Ok(v) = json::parse(trimmed) {
+        return capture_value_events(v);
+    }
+    // JSONL: one document per line
+    let mut out = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = json::parse(line).map_err(|e| anyhow!("line {}: {e}", idx + 1))?;
+        out.extend(capture_value_events(v)?);
+    }
+    Ok(out)
+}
+
+fn capture_value_events(v: Value) -> Result<Vec<Value>> {
+    match v {
+        Value::Arr(a) => Ok(a),
+        Value::Obj(_) => {
+            if let Some(a) = v.get("spans").and_then(Value::as_arr) {
+                Ok(a.to_vec())
+            } else if v.get("type").is_some() {
+                Ok(vec![v])
+            } else {
+                Err(anyhow!(
+                    "object is neither a spans reply nor an event (no `spans`/`type` key)"
+                ))
+            }
+        }
+        _ => Err(anyhow!("expected a spans object, array, or JSONL of events")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(req: u64, stage: Stage, start_us: u64, dur_us: u64) -> Event {
+        Event::Span {
+            req,
+            stage,
+            start_us,
+            dur_us,
+        }
+    }
+
+    fn guidance(req: u64, policy: u16, step: u32, nfes: u32, last: bool) -> Event {
+        Event::Guidance {
+            req,
+            policy,
+            at_us: 100 * (step as u64 + 1),
+            step,
+            evals: EvalSet::CondUncond,
+            gamma: 0.9,
+            nfes,
+            baseline: 2 * (step + 1),
+            max_nfes: 16,
+            truncated: false,
+            last,
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let mut r = SpanRing::new(3);
+        for i in 0..5u64 {
+            r.push(span(i, Stage::Queue, i, 1));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let mut out = Vec::new();
+        r.drain_into(&mut out);
+        let ids: Vec<u64> = out.iter().map(Event::req).collect();
+        assert_eq!(ids, vec![2, 3, 4], "oldest-first, oldest two overwritten");
+        assert!(r.is_empty());
+        // the drop total is monotonic across drains
+        assert_eq!(r.dropped(), 2);
+        r.push(span(9, Stage::Queue, 9, 1));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.dropped(), 2);
+    }
+
+    #[test]
+    fn ring_drains_in_order_below_capacity() {
+        let mut r = SpanRing::new(8);
+        for i in 0..3u64 {
+            r.push(span(i, Stage::Batch, i * 10, 1));
+        }
+        let mut out = Vec::new();
+        r.drain_into(&mut out);
+        assert_eq!(out.iter().map(Event::req).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn recorder_interns_policies_up_to_the_cap() {
+        let mut t = TraceRecorder::new(4);
+        let a = t.intern("cfg(s=2)");
+        let b = t.intern("ag(s=2,gamma_bar=0.99)");
+        assert_eq!(t.intern("cfg(s=2)"), a, "repeat lookups hit the same id");
+        assert_ne!(a, b);
+        assert_eq!(t.policy_name(a), "cfg(s=2)");
+        for i in 0..MAX_POLICIES {
+            t.intern(&format!("p{i}"));
+        }
+        assert_eq!(t.intern("one-too-many"), OTHER_POLICY);
+        assert_eq!(t.policy_name(OTHER_POLICY), "other");
+    }
+
+    #[test]
+    fn events_round_trip_through_json() {
+        let mut t = TraceRecorder::new(8);
+        let pid = t.intern("ag(s=2)");
+        t.record(span(7, Stage::Denoise, 120, 45));
+        t.record(guidance(7, pid, 3, 8, true));
+        let mut batch = t.drain();
+        batch.shard = 2;
+        let rows = batch.events_json();
+        assert_eq!(rows.len(), 2);
+        let sp = &rows[0];
+        assert_eq!(sp.req("type").as_str(), Some("span"));
+        assert_eq!(sp.req("stage").as_str(), Some("denoise"));
+        assert_eq!(sp.req("shard").as_usize(), Some(2));
+        assert_eq!(sp.req("start_us").as_usize(), Some(120));
+        assert_eq!(sp.req("dur_us").as_usize(), Some(45));
+        let g = &rows[1];
+        assert_eq!(g.req("type").as_str(), Some("guidance"));
+        assert_eq!(g.req("policy").as_str(), Some("ag(s=2)"));
+        assert_eq!(g.req("step").as_usize(), Some(3));
+        assert_eq!(g.req("evals").as_str(), Some("cond+uncond"));
+        assert_eq!(g.req("nfes").as_usize(), Some(8));
+        assert_eq!(g.req("baseline_nfes").as_usize(), Some(8));
+        assert_eq!(g.req("max_nfes").as_usize(), Some(16));
+        assert_eq!(g.req("final").as_bool(), Some(true));
+        // the serialized line is valid JSON end to end
+        let line = json::to_string(&batches_to_json(&[batch]));
+        let back = json::parse(&line).unwrap();
+        assert_eq!(back.req("spans").as_arr().unwrap().len(), 2);
+        assert_eq!(back.req("dropped").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn nan_gamma_serializes_as_null() {
+        let ev = Event::Guidance {
+            req: 1,
+            policy: 0,
+            at_us: 5,
+            step: 0,
+            evals: EvalSet::Cond,
+            gamma: f32::NAN,
+            nfes: 1,
+            baseline: 2,
+            max_nfes: 16,
+            truncated: false,
+            last: false,
+        };
+        let v = event_to_json(&ev, 0, &["cfg".to_owned()]);
+        assert_eq!(v.req("gamma"), &Value::Null);
+        // and the emitted text stays parseable (a bare NaN would not)
+        assert!(json::parse(&json::to_string(&v)).is_ok());
+    }
+
+    #[test]
+    fn eval_set_classifies_every_plan() {
+        assert_eq!(EvalSet::of(&StepPlan::Guided { s: 2.0 }), EvalSet::CondUncond);
+        assert_eq!(EvalSet::of(&StepPlan::CondOnly), EvalSet::Cond);
+        assert_eq!(EvalSet::of(&StepPlan::UncondOnly), EvalSet::Uncond);
+        assert_eq!(EvalSet::of(&StepPlan::EditCondOnly), EvalSet::EditCond);
+        assert_eq!(
+            EvalSet::of(&StepPlan::EditGuided {
+                s_text: 7.5,
+                s_img: 1.5
+            }),
+            EvalSet::EditTriple
+        );
+    }
+
+    #[test]
+    fn stage_names_round_trip() {
+        for st in Stage::ALL {
+            assert_eq!(Stage::parse(st.name()), Some(st));
+        }
+        assert_eq!(Stage::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn push_capped_never_grows_the_buffer() {
+        let mut buf: Vec<Event> = Vec::with_capacity(2);
+        let cap = buf.capacity();
+        for i in 0..5u64 {
+            push_capped(&mut buf, span(i, Stage::Queue, i, 1));
+        }
+        assert_eq!(buf.len(), 2);
+        assert_eq!(buf.capacity(), cap);
+    }
+
+    #[test]
+    fn parse_capture_accepts_reply_array_and_jsonl() {
+        let mut t = TraceRecorder::new(8);
+        let pid = t.intern("cfg");
+        t.record(span(1, Stage::Queue, 0, 10));
+        t.record(guidance(1, pid, 0, 2, true));
+        let batch = t.drain();
+        let reply = json::to_string(&batches_to_json(&[batch.clone()]));
+        assert_eq!(parse_capture(&reply).unwrap().len(), 2);
+
+        let arr = json::to_string(&Value::Arr(batch.events_json()));
+        assert_eq!(parse_capture(&arr).unwrap().len(), 2);
+
+        let jsonl: Vec<String> = batch
+            .events_json()
+            .iter()
+            .map(json::to_string)
+            .collect();
+        assert_eq!(parse_capture(&jsonl.join("\n")).unwrap().len(), 2);
+        // two reply lines concatenate (several drains appended to a file)
+        let two = format!("{reply}\n{reply}\n");
+        assert_eq!(parse_capture(&two).unwrap().len(), 4);
+
+        assert_eq!(parse_capture("  ").unwrap().len(), 0);
+        assert!(parse_capture("{\"neither\": 1}").is_err());
+        assert!(parse_capture("true").is_err());
+    }
+}

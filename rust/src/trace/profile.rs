@@ -1,0 +1,310 @@
+//! `agd profile` — turn a drained spans capture into human- and
+//! tool-readable profiles:
+//!
+//! * [`chrome_trace`] — Chrome trace-event JSON (the `traceEvents`
+//!   format), loadable at `chrome://tracing` or <https://ui.perfetto.dev>.
+//!   Lifecycle spans become complete events (`"ph": "X"`) with
+//!   `pid = shard`, `tid = request id`; guidance decisions become
+//!   thread-scoped instant events (`"ph": "i"`).
+//! * [`stage_summaries`] — per-stage latency distribution (p50/p95/p99)
+//!   over every span's duration, in [`Stage::ALL`] order.
+//! * [`policy_ledger`] — per-policy *realized* NFE savings, summed from
+//!   each request's final guidance event (`"final": true`); `saved`
+//!   matches the engine's `nfes_saved_total{policy}` counter because
+//!   both compute `max_nfes - nfes` at completion.
+//!
+//! All three consume the parsed event objects from
+//! [`super::parse_capture`] — they tolerate (skip) malformed entries so
+//! a partially-overwritten ring still profiles.
+
+use std::collections::BTreeMap;
+
+use crate::perfstat::Summary;
+use crate::trace::Stage;
+use crate::util::json::{self, Value};
+
+/// One policy's row in the realized-savings ledger.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LedgerRow {
+    pub policy: String,
+    /// Requests that reached their final step in this capture.
+    pub requests: usize,
+    /// NFEs actually spent across those requests.
+    pub nfes: u64,
+    /// Worst-case NFE budget across those requests.
+    pub max_nfes: u64,
+    /// `max_nfes - nfes` — realized savings vs. the policy's own budget.
+    pub saved: u64,
+    /// Requests whose policy fired truncation at some step.
+    pub truncated: usize,
+}
+
+impl LedgerRow {
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.policy.clone(),
+            self.requests.to_string(),
+            self.nfes.to_string(),
+            self.max_nfes.to_string(),
+            self.saved.to_string(),
+            self.truncated.to_string(),
+        ]
+    }
+}
+
+fn get_u64(v: &Value, key: &str) -> Option<u64> {
+    v.get(key).and_then(Value::as_f64).map(|f| f as u64)
+}
+
+/// Chrome trace-event JSON over the whole capture. Unknown or malformed
+/// entries are skipped, not fatal.
+pub fn chrome_trace(events: &[Value]) -> Value {
+    let mut rows = Vec::new();
+    for ev in events {
+        if let Some(row) = chrome_event(ev) {
+            rows.push(row);
+        }
+    }
+    json::obj(vec![
+        ("traceEvents", Value::Arr(rows)),
+        ("displayTimeUnit", json::s("ms")),
+    ])
+}
+
+fn chrome_event(ev: &Value) -> Option<Value> {
+    let shard = get_u64(ev, "shard").unwrap_or(0) as f64;
+    let req = get_u64(ev, "req")? as f64;
+    match ev.get("type").and_then(Value::as_str)? {
+        "span" => {
+            let stage = ev.get("stage").and_then(Value::as_str)?;
+            Some(json::obj(vec![
+                ("name", json::s(stage)),
+                ("cat", json::s("lifecycle")),
+                ("ph", json::s("X")),
+                ("ts", json::num(get_u64(ev, "start_us")? as f64)),
+                ("dur", json::num(get_u64(ev, "dur_us")? as f64)),
+                ("pid", json::num(shard)),
+                ("tid", json::num(req)),
+            ]))
+        }
+        "guidance" => {
+            let mut args: Vec<(&str, Value)> = Vec::new();
+            for key in ["policy", "evals"] {
+                if let Some(s) = ev.get(key).and_then(Value::as_str) {
+                    args.push((key, json::s(s)));
+                }
+            }
+            for key in ["step", "nfes", "baseline_nfes", "max_nfes"] {
+                if let Some(n) = ev.get(key).and_then(Value::as_f64) {
+                    args.push((key, json::num(n)));
+                }
+            }
+            if let Some(g) = ev.get("gamma").and_then(Value::as_f64) {
+                args.push(("gamma", json::num(g)));
+            }
+            for key in ["truncated", "final"] {
+                if let Some(b) = ev.get(key).and_then(Value::as_bool) {
+                    args.push((key, Value::Bool(b)));
+                }
+            }
+            Some(json::obj(vec![
+                ("name", json::s("guidance")),
+                ("cat", json::s("guidance")),
+                ("ph", json::s("i")),
+                ("s", json::s("t")),
+                ("ts", json::num(get_u64(ev, "at_us")? as f64)),
+                ("pid", json::num(shard)),
+                ("tid", json::num(req)),
+                ("args", json::obj(args)),
+            ]))
+        }
+        _ => None,
+    }
+}
+
+/// Per-stage duration summaries (ms), in lifecycle order; stages absent
+/// from the capture are omitted.
+pub fn stage_summaries(events: &[Value]) -> Vec<Summary> {
+    let mut by_stage: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    for ev in events {
+        if ev.get("type").and_then(Value::as_str) != Some("span") {
+            continue;
+        }
+        let (Some(stage), Some(dur)) = (
+            ev.get("stage").and_then(Value::as_str),
+            get_u64(ev, "dur_us"),
+        ) else {
+            continue;
+        };
+        by_stage.entry(stage).or_default().push(dur as f64 / 1e3);
+    }
+    let mut out = Vec::new();
+    for st in Stage::ALL {
+        if let Some(samples) = by_stage.get(st.name()) {
+            out.push(Summary::from_samples_ms(st.name(), samples));
+        }
+    }
+    out
+}
+
+/// The realized-savings ledger: one row per policy, from final guidance
+/// events only (in-flight requests would otherwise count phantom
+/// savings). Truncation is counted per request, whichever step it fired
+/// at.
+pub fn policy_ledger(events: &[Value]) -> Vec<LedgerRow> {
+    let mut rows: BTreeMap<String, LedgerRow> = BTreeMap::new();
+    // (policy, shard, req) -> truncation seen at any step
+    let mut truncated: BTreeMap<(String, u64, u64), bool> = BTreeMap::new();
+    for ev in events {
+        if ev.get("type").and_then(Value::as_str) != Some("guidance") {
+            continue;
+        }
+        let Some(policy) = ev.get("policy").and_then(Value::as_str) else {
+            continue;
+        };
+        let key = (
+            policy.to_owned(),
+            get_u64(ev, "shard").unwrap_or(0),
+            get_u64(ev, "req").unwrap_or(0),
+        );
+        if ev.get("truncated").and_then(Value::as_bool) == Some(true) {
+            truncated.insert(key.clone(), true);
+        }
+        if ev.get("final").and_then(Value::as_bool) != Some(true) {
+            continue;
+        }
+        let (Some(nfes), Some(max_nfes)) = (get_u64(ev, "nfes"), get_u64(ev, "max_nfes"))
+        else {
+            continue;
+        };
+        let row = rows.entry(policy.to_owned()).or_insert_with(|| LedgerRow {
+            policy: policy.to_owned(),
+            requests: 0,
+            nfes: 0,
+            max_nfes: 0,
+            saved: 0,
+            truncated: 0,
+        });
+        row.requests += 1;
+        row.nfes += nfes;
+        row.max_nfes += max_nfes;
+        row.saved += max_nfes.saturating_sub(nfes);
+        if truncated.get(&key).copied().unwrap_or(false) {
+            row.truncated += 1;
+        }
+    }
+    rows.into_values().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{event_to_json, Event, EvalSet, Stage};
+
+    fn span_v(req: u64, stage: Stage, start_us: u64, dur_us: u64) -> Value {
+        event_to_json(
+            &Event::Span {
+                req,
+                stage,
+                start_us,
+                dur_us,
+            },
+            0,
+            &[],
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn guidance_v(
+        req: u64,
+        step: u32,
+        nfes: u32,
+        max_nfes: u32,
+        truncated: bool,
+        last: bool,
+    ) -> Value {
+        event_to_json(
+            &Event::Guidance {
+                req,
+                policy: 0,
+                at_us: 10 * (step as u64 + 1),
+                step,
+                evals: EvalSet::CondUncond,
+                gamma: 0.95,
+                nfes,
+                baseline: 2 * (step + 1),
+                max_nfes,
+                truncated,
+                last,
+            },
+            0,
+            &["ag(s=2)".to_owned()],
+        )
+    }
+
+    #[test]
+    fn chrome_trace_emits_complete_and_instant_events() {
+        let events = vec![
+            span_v(1, Stage::Denoise, 100, 40),
+            guidance_v(1, 0, 2, 16, false, false),
+            Value::Bool(true), // malformed entries are skipped
+        ];
+        let v = chrome_trace(&events);
+        let rows = v.req("traceEvents").as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].req("ph").as_str(), Some("X"));
+        assert_eq!(rows[0].req("name").as_str(), Some("denoise"));
+        assert_eq!(rows[0].req("ts").as_usize(), Some(100));
+        assert_eq!(rows[0].req("dur").as_usize(), Some(40));
+        assert_eq!(rows[1].req("ph").as_str(), Some("i"));
+        assert_eq!(rows[1].req("args").req("policy").as_str(), Some("ag(s=2)"));
+        // the export is valid JSON end to end
+        let text = json::to_string(&v);
+        assert!(json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn stage_summaries_group_by_stage_in_lifecycle_order() {
+        let events = vec![
+            span_v(1, Stage::Denoise, 0, 2_000),
+            span_v(2, Stage::Denoise, 10, 4_000),
+            span_v(1, Stage::Queue, 0, 1_000),
+            guidance_v(1, 0, 2, 16, false, false),
+        ];
+        let sums = stage_summaries(&events);
+        assert_eq!(sums.len(), 2);
+        assert_eq!(sums[0].name, "queue", "lifecycle order, not alphabetical");
+        assert_eq!(sums[1].name, "denoise");
+        assert_eq!(sums[1].iters, 2);
+        assert!((sums[1].mean_ms - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ledger_sums_final_events_and_counts_truncation() {
+        let events = vec![
+            // request 1: truncated mid-flight, finished at 12/16
+            guidance_v(1, 2, 6, 16, true, false),
+            guidance_v(1, 7, 12, 16, false, true),
+            // request 2: full budget, never truncated
+            guidance_v(2, 7, 16, 16, false, true),
+            // request 3: still in flight — must not count
+            guidance_v(3, 1, 4, 16, false, false),
+        ];
+        let rows = policy_ledger(&events);
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.policy, "ag(s=2)");
+        assert_eq!(r.requests, 2);
+        assert_eq!(r.nfes, 28);
+        assert_eq!(r.max_nfes, 32);
+        assert_eq!(r.saved, 4);
+        assert_eq!(r.truncated, 1);
+    }
+
+    #[test]
+    fn ledger_is_empty_without_final_events() {
+        let events = vec![guidance_v(1, 0, 2, 16, false, false)];
+        assert!(policy_ledger(&events).is_empty());
+        assert!(policy_ledger(&[]).is_empty());
+    }
+}

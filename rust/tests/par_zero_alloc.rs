@@ -89,6 +89,8 @@ fn parallel_pump_is_allocation_free_at_steady_state() {
             // exercise the fair-share lanes and the deadline keys too
             r.client_id = Some(Arc::from(if i % 2 == 0 { "bulk" } else { "live" }));
             r.deadline_ms = Some(60_000 + i);
+            // §Observability: the invariant must hold with tracing ON
+            r.trace = true;
             e.submit(r);
         }
 
@@ -125,7 +127,8 @@ fn parallel_pump_is_allocation_free_at_steady_state() {
             kind.name()
         );
 
-        // the workload still drains to correct completions afterwards
+        // the workload still drains to correct completions afterwards,
+        // with every traced request's timeline recorded
         let out = e.drain().expect("drain");
         assert_eq!(out.len(), 8, "{}", kind.name());
         assert!(
@@ -133,5 +136,11 @@ fn parallel_pump_is_allocation_free_at_steady_state() {
             "AG requests should truncate on the oracle ({})",
             kind.name()
         );
+        assert!(
+            out.iter().all(|c| c.timeline.is_some()),
+            "traced requests must carry timelines ({})",
+            kind.name()
+        );
+        assert!(!e.drain_spans().events.is_empty(), "{}", kind.name());
     }
 }

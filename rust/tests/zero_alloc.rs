@@ -82,6 +82,10 @@ fn pump_is_allocation_free_at_steady_state_under_every_scheduler() {
             // exercise the fair-share lanes and the deadline keys too
             r.client_id = Some(Arc::from(if i % 2 == 0 { "bulk" } else { "live" }));
             r.deadline_ms = Some(60_000 + i);
+            // §Observability: the invariant must hold with tracing ON —
+            // lifecycle spans + per-step guidance events are slot writes
+            // into storage preallocated at admission/construction
+            r.trace = true;
             e.submit(r);
         }
 
@@ -116,12 +120,25 @@ fn pump_is_allocation_free_at_steady_state_under_every_scheduler() {
             kind.name()
         );
 
-        // the workload still drains to correct completions afterwards
+        // the workload still drains to correct completions afterwards —
+        // and tracing actually recorded: every completion carries its
+        // timeline and the ring holds span + guidance events to drain
         let out = e.drain().expect("drain");
         assert_eq!(out.len(), 8, "{}", kind.name());
         assert!(
             out.iter().filter(|c| c.truncated_at.is_some()).count() >= 1,
             "AG requests should truncate on the oracle ({})",
+            kind.name()
+        );
+        assert!(
+            out.iter().all(|c| c.timeline.is_some()),
+            "traced requests must carry timelines ({})",
+            kind.name()
+        );
+        let spans = e.drain_spans();
+        assert!(
+            !spans.events.is_empty(),
+            "the span ring must hold events after a traced run ({})",
             kind.name()
         );
     }

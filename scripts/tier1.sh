@@ -20,6 +20,10 @@ cargo test -q --test fleet_integration
 # the robustness invariant (faults change who is served, never what):
 # scenario corpus + capture->replay digest check against a live server
 scripts/chaos.sh
+# the observability loop (§Observability): a traced request echoes its
+# lifecycle timeline, {"cmd": "spans"} drains the rings, and
+# `agd profile` renders the capture into non-empty Chrome trace JSON
+scripts/trace_smoke.sh
 
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings

@@ -1,0 +1,64 @@
+#!/usr/bin/env bash
+# Trace smoke (§Observability): the capture → profile loop end-to-end
+# against a real `agd serve` process — one `"trace": true` request whose
+# completion line must echo a timeline, a `{"cmd": "spans"}` drain, and
+# `agd profile` over the drained capture producing non-empty Chrome
+# trace JSON plus the stage/ledger tables.
+#
+#   scripts/trace_smoke.sh                 -> PROFILE_trace.json in the repo root
+#   TRACE_PORT=7777 scripts/trace_smoke.sh -> custom port (default 7498)
+#
+# Requires the Rust toolchain; scripts/tier1.sh invokes it behind the
+# same availability check it applies to clippy/rustfmt.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+port="${TRACE_PORT:-7498}"
+addr="127.0.0.1:${port}"
+spans="$(mktemp /tmp/agd_trace_spans.XXXXXX.json)"
+trap 'rm -f "$spans"; [[ -n "${server_pid:-}" ]] && kill "$server_pid" 2>/dev/null || true' EXIT
+
+cargo build --release --bin agd
+agd=target/release/agd
+
+"$agd" serve --backend gmm --shards 2 --addr "$addr" &
+server_pid=$!
+
+# readiness: probe the TCP port itself rather than parsing the banner
+for _ in $(seq 1 100); do
+    if (exec 3<>"/dev/tcp/127.0.0.1/${port}") 2>/dev/null; then
+        exec 3>&- 3<&-
+        break
+    fi
+    sleep 0.1
+done
+
+# one traced request + one untraced one, then drain the span rings —
+# all on one connection (the line protocol replies in order)
+reply="$(
+    exec 3<>"/dev/tcp/127.0.0.1/${port}"
+    printf '%s\n' \
+        '{"prompt": "red circle", "policy": "ag", "steps": 8, "guidance": 2.0, "trace": true}' \
+        '{"prompt": "blue square", "policy": "cfg", "steps": 8, "guidance": 2.0}' \
+        '{"cmd": "spans"}' >&3
+    head -n 3 <&3
+)"
+
+# line 1: the traced completion must carry its timeline inline
+printf '%s\n' "$reply" | sed -n '1p' | grep -q '"timeline":' \
+    || { echo "trace_smoke: no timeline on the traced completion" >&2; exit 1; }
+# line 3: the drained rings must hold events
+printf '%s\n' "$reply" | sed -n '3p' > "$spans"
+grep -q '"guidance"' "$spans" \
+    || { echo "trace_smoke: spans drain holds no guidance events" >&2; exit 1; }
+
+kill "$server_pid" 2>/dev/null || true
+wait "$server_pid" 2>/dev/null || true
+server_pid=""
+
+# profile leg: the drained capture parses and renders non-empty
+"$agd" profile --spans "$spans" --out PROFILE_trace.json
+grep -q '"traceEvents":\[{' PROFILE_trace.json \
+    || { echo "trace_smoke: PROFILE_trace.json holds no trace events" >&2; exit 1; }
+
+echo "trace_smoke: OK (wrote PROFILE_trace.json)"
