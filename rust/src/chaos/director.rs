@@ -17,6 +17,12 @@
 //! slowloris a                one byte of an unfinished line, no newline
 //! disconnect a               drop a's socket mid-whatever
 //! kill-shard 0               inject a crash into shard 0 ([`Fleet::kill_shard`])
+//! fault error-every=3        arm the fleet's backend fault plan
+//!                            ([`crate::chaos::fault::FaultSpec`] grammar)
+//! fault clear                disarm every scheduled fault
+//! wait-respawn 0 2000        block until shard 0 is placeable again
+//!                            (supervisor respawn), failing after the
+//!                            timeout in ms
 //! drain                      fleet drain (graceful quiesce) from inside
 //! sleep 25                   wall-clock pause, ms
 //! ```
@@ -51,6 +57,13 @@ pub enum Op {
     Slowloris(String),
     Disconnect(String),
     KillShard(usize),
+    /// Arm the fleet's fault plan with a spec, or `clear` to disarm
+    /// (§Robustness). The grammar is validated at script parse time (a
+    /// bad spec names its line) and re-parsed cheaply at execution.
+    Fault(String),
+    /// Poll until the shard is placeable again (supervisor respawn),
+    /// failing after `timeout_ms`.
+    WaitRespawn { shard: usize, timeout_ms: u64 },
     Drain,
     Sleep(u64),
 }
@@ -156,6 +169,29 @@ fn parse_op(line: &str) -> Result<Op> {
                 .parse()
                 .map_err(|_| anyhow!("bad shard index `{rest}`"))?,
         ),
+        "fault" => {
+            let spec = one_word("fault spec (or `clear`)")?;
+            if spec != "clear" {
+                // validate the grammar here so the error names the line
+                crate::chaos::fault::FaultSpec::parse(&spec)
+                    .map_err(|e| anyhow!("bad fault spec: {e}"))?;
+            }
+            Op::Fault(spec)
+        }
+        "wait-respawn" => {
+            let parts: Vec<&str> = rest.split_whitespace().collect();
+            let [shard, timeout] = parts.as_slice() else {
+                bail!("`wait-respawn` needs: shard timeout-ms");
+            };
+            Op::WaitRespawn {
+                shard: shard
+                    .parse()
+                    .map_err(|_| anyhow!("bad shard index `{shard}`"))?,
+                timeout_ms: timeout
+                    .parse()
+                    .map_err(|_| anyhow!("bad timeout `{timeout}`"))?,
+            }
+        }
         "drain" => {
             if !rest.is_empty() {
                 bail!("`drain` takes no arguments");
@@ -338,6 +374,33 @@ impl<'a> Director<'a> {
                     "kill-shard {i}: no such shard or already dead"
                 );
             }
+            Op::Fault(spec) => {
+                let plan = self.fleet.fault_plan().ok_or_else(|| {
+                    anyhow!(
+                        "no fault plan installed — the fleet was launched without \
+                         FaultyBackend wrapping (serve wires it unconditionally)"
+                    )
+                })?;
+                if spec == "clear" {
+                    plan.clear();
+                } else {
+                    plan.arm(
+                        crate::chaos::fault::FaultSpec::parse(spec)
+                            .map_err(|e| anyhow!("bad fault spec: {e}"))?,
+                    );
+                }
+            }
+            Op::WaitRespawn { shard, timeout_ms } => {
+                let deadline = std::time::Instant::now() + Duration::from_millis(*timeout_ms);
+                while !self.fleet.shard_alive(*shard) {
+                    anyhow::ensure!(
+                        std::time::Instant::now() < deadline,
+                        "shard {shard} not respawned within {timeout_ms}ms \
+                         (is --shard-respawn on?)"
+                    );
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
             Op::Drain => {
                 self.fleet.drain();
             }
@@ -365,11 +428,14 @@ mod tests {
             expect-closed a
             disconnect a
             kill-shard 1
+            fault error-every=3,stall-at=2:50
+            fault clear
+            wait-respawn 1 2000
             drain
             sleep 25
         "#;
         let ops = parse_script(script).unwrap();
-        assert_eq!(ops.len(), 12);
+        assert_eq!(ops.len(), 15);
         assert_eq!(ops[0], Op::Connect("a".into()));
         let Op::Send { conn, line } = &ops[1] else { panic!("{:?}", ops[1]) };
         assert_eq!(conn, "a");
@@ -382,8 +448,11 @@ mod tests {
             Op::SendRawRepeat { conn: "a".into(), byte: 0x61, count: 8192 }
         );
         assert_eq!(ops[9], Op::KillShard(1));
-        assert_eq!(ops[10], Op::Drain);
-        assert_eq!(ops[11], Op::Sleep(25));
+        assert_eq!(ops[10], Op::Fault("error-every=3,stall-at=2:50".into()));
+        assert_eq!(ops[11], Op::Fault("clear".into()));
+        assert_eq!(ops[12], Op::WaitRespawn { shard: 1, timeout_ms: 2000 });
+        assert_eq!(ops[13], Op::Drain);
+        assert_eq!(ops[14], Op::Sleep(25));
     }
 
     #[test]
@@ -408,5 +477,11 @@ mod tests {
         assert!(err.to_string().contains("no arguments"), "{err}");
         let err = parse_script("connect a b\n").unwrap_err();
         assert!(err.to_string().contains("exactly one"), "{err}");
+        // fault specs are validated at parse time, naming the line
+        let err = parse_script("fault error-every=x\n").unwrap_err();
+        assert!(err.to_string().contains("bad fault spec"), "{err}");
+        assert!(err.to_string().contains("line 1"), "{err}");
+        let err = parse_script("wait-respawn 0\n").unwrap_err();
+        assert!(err.to_string().contains("timeout-ms"), "{err}");
     }
 }

@@ -1,0 +1,547 @@
+//! §Robustness: scheduled fault injection for any [`Backend`].
+//!
+//! [`FaultyBackend`] wraps a real backend and injects failures into the
+//! two batch-execution entry points (`denoise_into`/`denoise_into_par`)
+//! on a deterministic schedule — the missing half of the chaos harness:
+//! PR 6 could only kill shards from the *outside* (`kill-shard`); this
+//! makes the compute substrate itself misbehave, which is what transient
+//! device resets, OOM retries and wedged kernels look like in production.
+//!
+//! The schedule is a [`FaultPlan`]: a lock-free, re-armable set of
+//! trigger points over the wrapper's own batch counter (1-based — the
+//! first batch a backend executes is batch 1). Plans are parsed from the
+//! spec grammar ([`FaultSpec::parse`]) used by `agd serve --fault-spec`
+//! and the chaos director's `fault` op:
+//!
+//! ```text
+//!   error-every=N      every Nth batch fails (transient)
+//!   error-at=K         batch K fails (transient)
+//!   stall-at=K:M       batch K sleeps M ms, then executes normally
+//!   fail-after=K       every batch past K fails (fatal, permanent)
+//! ```
+//!
+//! Clauses combine with commas (`error-every=3,stall-at=5:200`). Checks
+//! run in severity order: fail-after (fatal) → stall → error-at →
+//! error-every. Because plans live behind an `Arc` and every field is
+//! atomic, the director can re-arm or clear a plan *while shards are
+//! executing* without a lock — and the per-shard batch counter lives on
+//! the wrapper (not the plan), so each shard sees the same deterministic
+//! schedule regardless of how the fleet interleaves.
+//!
+//! Injected failures are typed ([`BackendFault`], carrying a
+//! [`FaultClass`]): the engine's bounded-retry loop (`--max-batch-retries`)
+//! classifies errors via [`classify`] and retries only transients —
+//! anything it cannot downcast stays fatal, preserving the historical
+//! die-on-first-error behaviour for real backend bugs. Retry pacing is a
+//! seeded decorrelated-jitter backoff ([`JitterBackoff`]) so retry storms
+//! desynchronize across shards while staying reproducible in tests.
+//!
+//! §Perf: the unarmed (all-zero) plan is the production configuration —
+//! `serve` always wraps the backend so the director can arm faults later.
+//! The pass-through check is five relaxed atomic loads and no allocation,
+//! pinned by `rust/tests/fault_zero_alloc.rs`.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::backend::{Backend, BatchBuf, BatchOut};
+use crate::exec::{ExecPool, RunStats};
+use crate::util::rng::Rng;
+
+/// Severity of an injected (or classified) backend failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultClass {
+    /// Worth retrying: the batch may succeed on a later attempt
+    /// (device reset, allocator pressure, a wedged-then-recovered lane).
+    Transient,
+    /// Permanent: retrying cannot help; the shard's death path runs.
+    Fatal,
+}
+
+impl FaultClass {
+    /// Telemetry label value (`batch_retries_total{class=}`).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultClass::Transient => "transient",
+            FaultClass::Fatal => "fatal",
+        }
+    }
+}
+
+/// A typed injected backend failure. Carried inside `anyhow::Error` so it
+/// crosses the existing `Result` plumbing unchanged; the engine recovers
+/// the class with [`classify`].
+#[derive(Debug, Clone)]
+pub struct BackendFault {
+    pub class: FaultClass,
+    /// Which trigger fired: `error-every` | `error-at` | `fail-after`.
+    pub kind: &'static str,
+    /// 1-based batch number (on the injecting wrapper) that tripped.
+    pub batch: u64,
+}
+
+impl fmt::Display for BackendFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "injected {} backend fault ({} at batch {})",
+            self.class.name(),
+            self.kind,
+            self.batch
+        )
+    }
+}
+
+impl std::error::Error for BackendFault {}
+
+/// Recover the failure class from any backend error. Unknown errors are
+/// [`FaultClass::Fatal`] — a real backend bug must keep running the
+/// historical death path, never spin in a retry loop.
+pub fn classify(e: &anyhow::Error) -> FaultClass {
+    e.downcast_ref::<BackendFault>()
+        .map(|f| f.class)
+        .unwrap_or(FaultClass::Fatal)
+}
+
+/// A parsed fault schedule (see the grammar in the module docs). `0`
+/// disables a trigger — batch numbers are 1-based precisely so the
+/// all-zero default means "no faults".
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Every Nth batch errors (transient); 0 = off.
+    pub error_every: u64,
+    /// Batch K errors (transient); 0 = off.
+    pub error_at: u64,
+    /// Batch K stalls before executing; 0 = off.
+    pub stall_at: u64,
+    /// Stall duration in milliseconds.
+    pub stall_ms: u64,
+    /// Every batch past K errors (fatal); 0 = off.
+    pub fail_after: u64,
+}
+
+impl FaultSpec {
+    /// Parse the comma-joined clause grammar. Errors name the bad clause
+    /// and the valid forms — a typo in `--fault-spec` or a scenario file
+    /// must fail the run loudly, not silently inject nothing.
+    pub fn parse(text: &str) -> Result<FaultSpec, String> {
+        let mut spec = FaultSpec::default();
+        for clause in text.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let Some((key, val)) = clause.split_once('=') else {
+                return Err(format!(
+                    "fault clause `{clause}` is not key=value (valid: \
+                     error-every=N, error-at=K, stall-at=K:M, fail-after=K)"
+                ));
+            };
+            let num = |v: &str| {
+                v.parse::<u64>()
+                    .map_err(|_| format!("fault clause `{key}`: `{v}` is not a number"))
+            };
+            match key {
+                "error-every" => spec.error_every = num(val)?,
+                "error-at" => spec.error_at = num(val)?,
+                "fail-after" => spec.fail_after = num(val)?,
+                "stall-at" => {
+                    let Some((k, ms)) = val.split_once(':') else {
+                        return Err(format!(
+                            "fault clause `stall-at` wants BATCH:MS, got `{val}`"
+                        ));
+                    };
+                    spec.stall_at = num(k)?;
+                    spec.stall_ms = num(ms)?;
+                }
+                other => {
+                    return Err(format!(
+                        "unknown fault clause `{other}` (valid: error-every=N, \
+                         error-at=K, stall-at=K:M, fail-after=K)"
+                    ));
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    /// No trigger armed (the pass-through production configuration).
+    pub fn is_clear(&self) -> bool {
+        *self == FaultSpec::default()
+    }
+}
+
+/// The live, shared fault schedule: a [`FaultSpec`] as atomics (re-armable
+/// mid-run by the chaos director) plus per-kind injection counters. One
+/// plan is shared by every shard's wrapper via `Arc`; the batch counters
+/// driving the schedule are per-wrapper (see module docs).
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    error_every: AtomicU64,
+    error_at: AtomicU64,
+    stall_at: AtomicU64,
+    stall_ms: AtomicU64,
+    fail_after: AtomicU64,
+    injected_errors: AtomicU64,
+    injected_stalls: AtomicU64,
+    injected_fatals: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Install `spec`, replacing whatever was armed. Counters are kept —
+    /// they are a monotonic injection ledger, not part of the schedule.
+    pub fn arm(&self, spec: FaultSpec) {
+        self.error_every.store(spec.error_every, Ordering::Relaxed);
+        self.error_at.store(spec.error_at, Ordering::Relaxed);
+        self.stall_at.store(spec.stall_at, Ordering::Relaxed);
+        self.stall_ms.store(spec.stall_ms, Ordering::Relaxed);
+        self.fail_after.store(spec.fail_after, Ordering::Relaxed);
+    }
+
+    /// Disarm every trigger (the director's `fault clear`).
+    pub fn clear(&self) {
+        self.arm(FaultSpec::default());
+    }
+
+    /// Is any trigger armed?
+    pub fn armed(&self) -> bool {
+        self.error_every.load(Ordering::Relaxed) != 0
+            || self.error_at.load(Ordering::Relaxed) != 0
+            || self.stall_at.load(Ordering::Relaxed) != 0
+            || self.fail_after.load(Ordering::Relaxed) != 0
+    }
+
+    /// Transient errors injected so far (all wrappers sharing this plan).
+    pub fn errors(&self) -> u64 {
+        self.injected_errors.load(Ordering::Relaxed)
+    }
+
+    /// Stalls injected so far.
+    pub fn stalls(&self) -> u64 {
+        self.injected_stalls.load(Ordering::Relaxed)
+    }
+
+    /// Fatal errors injected so far.
+    pub fn fatals(&self) -> u64 {
+        self.injected_fatals.load(Ordering::Relaxed)
+    }
+}
+
+/// A [`Backend`] wrapper injecting its [`FaultPlan`]'s schedule into the
+/// batch-execution path. Every other trait method delegates untouched, so
+/// wrapping changes *when* batches fail, never what they compute.
+pub struct FaultyBackend<B: Backend> {
+    inner: B,
+    plan: Arc<FaultPlan>,
+    /// Batches this wrapper has been asked to execute (1-based in checks).
+    batches: u64,
+}
+
+impl<B: Backend> FaultyBackend<B> {
+    pub fn new(inner: B, plan: Arc<FaultPlan>) -> FaultyBackend<B> {
+        FaultyBackend {
+            inner,
+            plan,
+            batches: 0,
+        }
+    }
+
+    /// The wrapped backend (tests reach its counters through here).
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    /// Batches seen by this wrapper (injected failures included).
+    pub fn batches_seen(&self) -> u64 {
+        self.batches
+    }
+
+    /// Run the schedule for the next batch: count it, then fire whichever
+    /// trigger matches (severity order — fatal, stall, transient). The
+    /// unarmed path is branch-predictable atomic loads, nothing else.
+    fn check(&mut self) -> Result<()> {
+        self.batches += 1;
+        let n = self.batches;
+        let fail_after = self.plan.fail_after.load(Ordering::Relaxed);
+        if fail_after != 0 && n > fail_after {
+            self.plan.injected_fatals.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow::Error::new(BackendFault {
+                class: FaultClass::Fatal,
+                kind: "fail-after",
+                batch: n,
+            }));
+        }
+        let stall_at = self.plan.stall_at.load(Ordering::Relaxed);
+        if stall_at != 0 && n == stall_at {
+            let ms = self.plan.stall_ms.load(Ordering::Relaxed);
+            self.plan.injected_stalls.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        let error_at = self.plan.error_at.load(Ordering::Relaxed);
+        if error_at != 0 && n == error_at {
+            self.plan.injected_errors.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow::Error::new(BackendFault {
+                class: FaultClass::Transient,
+                kind: "error-at",
+                batch: n,
+            }));
+        }
+        let every = self.plan.error_every.load(Ordering::Relaxed);
+        if every != 0 && n % every == 0 {
+            self.plan.injected_errors.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow::Error::new(BackendFault {
+                class: FaultClass::Transient,
+                kind: "error-every",
+                batch: n,
+            }));
+        }
+        Ok(())
+    }
+}
+
+impl<B: Backend> Backend for FaultyBackend<B> {
+    fn flat_in(&self, model: &str) -> usize {
+        self.inner.flat_in(model)
+    }
+
+    fn flat_out(&self, model: &str) -> usize {
+        self.inner.flat_out(model)
+    }
+
+    fn buckets(&self) -> &[usize] {
+        self.inner.buckets()
+    }
+
+    fn max_batch(&self, model: &str) -> usize {
+        self.inner.max_batch(model)
+    }
+
+    fn validate_tokens(&self, model: &str, tokens: &[i32]) -> Result<(), &'static str> {
+        self.inner.validate_tokens(model, tokens)
+    }
+
+    fn denoise_into(&mut self, model: &str, batch: &BatchBuf, out: &mut BatchOut) -> Result<()> {
+        self.check()?;
+        self.inner.denoise_into(model, batch, out)
+    }
+
+    fn denoise_into_par(
+        &mut self,
+        model: &str,
+        batch: &BatchBuf,
+        out: &mut BatchOut,
+        exec: &ExecPool,
+    ) -> Result<Option<RunStats>> {
+        self.check()?;
+        self.inner.denoise_into_par(model, batch, out, exec)
+    }
+
+    fn models(&self) -> Vec<String> {
+        self.inner.models()
+    }
+}
+
+/// Decorrelated-jitter retry backoff (the AWS-architecture-blog variant):
+/// each delay is uniform in `[base, 3 * previous]`, capped — successive
+/// retries spread apart *and* desynchronize across independent retriers,
+/// which is what stops a transient-fault storm from re-aligning every
+/// shard's retry attempt into the same instant. Seeded via the crate's
+/// own [`Rng`] so schedules are identical across runs (the determinism
+/// pin in the fault unit suite); the fleet seeds each shard's engine with
+/// its shard index so shards still decorrelate from *each other*.
+#[derive(Debug)]
+pub struct JitterBackoff {
+    base_ms: u64,
+    cap_ms: u64,
+    prev_ms: u64,
+    rng: Rng,
+}
+
+impl JitterBackoff {
+    pub fn new(base_ms: u64, cap_ms: u64, seed: u64) -> JitterBackoff {
+        JitterBackoff {
+            base_ms,
+            cap_ms,
+            prev_ms: base_ms,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Next delay in milliseconds, advancing the sequence.
+    pub fn next_ms(&mut self) -> u64 {
+        let hi = self.prev_ms.saturating_mul(3).max(self.base_ms + 1);
+        let span = (hi - self.base_ms).min(usize::MAX as u64) as usize;
+        let ms = (self.base_ms + self.rng.below(span.max(1)) as u64).min(self.cap_ms);
+        self.prev_ms = ms.max(self.base_ms);
+        ms
+    }
+
+    /// Back to the base delay (after a successful attempt). The RNG
+    /// stream deliberately keeps advancing — determinism is a property of
+    /// the whole run, not of each outage.
+    pub fn reset(&mut self) {
+        self.prev_ms = self.base_ms;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::GmmBackend;
+    use crate::sim::gmm::Gmm;
+
+    fn gmm() -> GmmBackend {
+        GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05))
+    }
+
+    fn run_batch<B: Backend>(be: &mut B) -> Result<()> {
+        let mut batch = BatchBuf::new(8, 4);
+        let (x, toks) = batch.push_row(0.5);
+        x.fill(0.1);
+        toks[0] = 1;
+        let mut out = BatchOut::default();
+        be.denoise_into("gmm", &batch, &mut out)
+    }
+
+    #[test]
+    fn spec_grammar_round_trips() {
+        let spec = FaultSpec::parse("error-every=3,error-at=7,stall-at=5:200,fail-after=40")
+            .expect("full grammar");
+        assert_eq!(
+            spec,
+            FaultSpec {
+                error_every: 3,
+                error_at: 7,
+                stall_at: 5,
+                stall_ms: 200,
+                fail_after: 40,
+            }
+        );
+        // whitespace and empty clauses are tolerated; empty spec = clear
+        assert!(FaultSpec::parse("").unwrap().is_clear());
+        assert_eq!(FaultSpec::parse(" error-at=2 , ").unwrap().error_at, 2);
+    }
+
+    #[test]
+    fn spec_grammar_rejects_garbage_loudly() {
+        for bad in ["boom", "error-every", "error-at=x", "stall-at=5", "warp=1"] {
+            let err = FaultSpec::parse(bad).unwrap_err();
+            assert!(err.contains("fault clause") || err.contains("unknown"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn unarmed_plan_passes_everything_through() {
+        let plan = Arc::new(FaultPlan::default());
+        let mut be = FaultyBackend::new(gmm(), plan.clone());
+        for _ in 0..10 {
+            run_batch(&mut be).expect("unarmed wrapper is transparent");
+        }
+        assert!(!plan.armed());
+        assert_eq!((plan.errors(), plan.stalls(), plan.fatals()), (0, 0, 0));
+        assert_eq!(be.inner().calls, 10, "every batch reached the inner backend");
+    }
+
+    #[test]
+    fn error_every_fires_on_schedule_and_is_transient() {
+        let plan = Arc::new(FaultPlan::default());
+        plan.arm(FaultSpec::parse("error-every=3").unwrap());
+        let mut be = FaultyBackend::new(gmm(), plan.clone());
+        let mut outcomes = Vec::new();
+        for _ in 0..9 {
+            outcomes.push(run_batch(&mut be).is_ok());
+        }
+        assert_eq!(
+            outcomes,
+            vec![true, true, false, true, true, false, true, true, false]
+        );
+        assert_eq!(plan.errors(), 3);
+        // the injected error classifies as transient; its batch is named
+        let err = {
+            plan.arm(FaultSpec::parse("error-at=10").unwrap());
+            run_batch(&mut be).unwrap_err()
+        };
+        assert_eq!(classify(&err), FaultClass::Transient);
+        let fault = err.downcast_ref::<BackendFault>().unwrap();
+        assert_eq!((fault.kind, fault.batch), ("error-at", 10));
+    }
+
+    #[test]
+    fn fail_after_is_fatal_and_permanent() {
+        let plan = Arc::new(FaultPlan::default());
+        plan.arm(FaultSpec::parse("fail-after=2").unwrap());
+        let mut be = FaultyBackend::new(gmm(), plan.clone());
+        assert!(run_batch(&mut be).is_ok());
+        assert!(run_batch(&mut be).is_ok());
+        for _ in 0..3 {
+            let err = run_batch(&mut be).unwrap_err();
+            assert_eq!(classify(&err), FaultClass::Fatal);
+        }
+        assert_eq!(plan.fatals(), 3);
+        assert_eq!(be.inner().calls, 2, "failed batches never reach the backend");
+    }
+
+    #[test]
+    fn stall_delays_but_still_executes() {
+        let plan = Arc::new(FaultPlan::default());
+        plan.arm(FaultSpec::parse("stall-at=2:30").unwrap());
+        let mut be = FaultyBackend::new(gmm(), plan.clone());
+        run_batch(&mut be).unwrap();
+        let t0 = std::time::Instant::now();
+        run_batch(&mut be).expect("a stalled batch still completes");
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+        assert_eq!(plan.stalls(), 1);
+        assert_eq!(be.inner().calls, 2);
+    }
+
+    #[test]
+    fn clear_disarms_mid_run() {
+        let plan = Arc::new(FaultPlan::default());
+        plan.arm(FaultSpec::parse("error-every=1").unwrap());
+        let mut be = FaultyBackend::new(gmm(), plan.clone());
+        assert!(run_batch(&mut be).is_err());
+        plan.clear();
+        assert!(run_batch(&mut be).is_ok());
+        assert_eq!(plan.errors(), 1, "the ledger survives a clear");
+    }
+
+    #[test]
+    fn unknown_errors_classify_fatal() {
+        let plain = anyhow::anyhow!("segfault adjacent badness");
+        assert_eq!(classify(&plain), FaultClass::Fatal);
+    }
+
+    /// The retry-determinism satellite: same seed → byte-identical backoff
+    /// schedule; different seeds (shards) → decorrelated ones.
+    #[test]
+    fn jitter_backoff_is_seed_deterministic() {
+        let schedule = |seed: u64| {
+            let mut b = JitterBackoff::new(10, 2_000, seed);
+            (0..12).map(|_| b.next_ms()).collect::<Vec<_>>()
+        };
+        assert_eq!(schedule(7), schedule(7));
+        assert_ne!(schedule(0), schedule(1), "shard seeds must decorrelate");
+        let s = schedule(3);
+        assert!(s.iter().all(|&ms| (10..=2_000).contains(&ms)), "{s:?}");
+        // reset returns to base without disturbing determinism
+        let mut a = JitterBackoff::new(10, 2_000, 42);
+        let mut b = JitterBackoff::new(10, 2_000, 42);
+        a.next_ms();
+        a.reset();
+        b.next_ms();
+        b.reset();
+        assert_eq!(a.next_ms(), b.next_ms());
+    }
+
+    #[test]
+    fn zero_base_backoff_never_sleeps() {
+        let mut b = JitterBackoff::new(0, 0, 9);
+        for _ in 0..8 {
+            assert_eq!(b.next_ms(), 0);
+        }
+    }
+}

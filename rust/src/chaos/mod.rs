@@ -5,11 +5,11 @@
 //! module is the correctness backstop for the *real* socket path: it
 //! records what a live server actually served, replays it against
 //! another server at adjustable speed, and injects scripted faults —
-//! shard crashes, client disconnects, slowloris writers, malformed
-//! frames, drains under load — asserting that survivors stay
-//! byte-identical and failures shed with structured codes.
+//! shard crashes, backend failure storms, client disconnects, slowloris
+//! writers, malformed frames, drains under load — asserting that
+//! survivors stay byte-identical and failures shed with structured codes.
 //!
-//! Three std-only layers (like [`crate::exec`] and [`crate::fleet`]):
+//! Four std-only layers (like [`crate::exec`] and [`crate::fleet`]):
 //!
 //! * [`trace`] — capture (`agd serve --trace-out FILE` appends one JSONL
 //!   record per admitted request: arrival offset, envelope, client id,
@@ -17,25 +17,37 @@
 //!   both ends of the wire.
 //! * [`replay`] — `agd replay --trace FILE --speed X --connections N`:
 //!   open-loop re-issue over real TCP, recording wire-latency
-//!   p50/p95/p99, shed codes, and digest matches into
-//!   `BENCH_replay.json` ([`crate::perfstat`]).
+//!   p50/p95/p99, shed codes, digest matches, and the fleet's survival
+//!   counters (retries/salvages/respawns) into `BENCH_replay.json`
+//!   ([`crate::perfstat`]).
+//! * [`fault`] — [`FaultyBackend`]: scheduled fault injection *inside*
+//!   the compute path (transient errors, stalls, permanent failure),
+//!   armed by `agd serve --fault-spec` or the director's `fault` op,
+//!   plus the typed transient/fatal error classes and the seeded
+//!   [`JitterBackoff`] behind the engine's bounded batch retry.
 //! * [`director`] — `scenarios/*.txt` fault scripts interpreted against
 //!   a live listener + [`crate::fleet::Fleet`]
 //!   (`rust/tests/chaos_integration.rs` runs the corpus; see the
 //!   scenario grammar in [`director`]'s docs).
 //!
 //! The invariant under test is the fleet one restated under failure:
-//! **faults change who gets served, never what a survivor is served.**
-//! A kill-shard, a dropped client, or a drain may shed requests (with
-//! `shard_failed` / `draining` / `queue_full` codes), but every
-//! completion that does arrive is byte-identical to a clean
-//! single-shard run — placement, crashes and load never leak into the
-//! math.
+//! **faults change who gets served — and when, and on which shard —
+//! never what a survivor is served.** A kill-shard, a dropped client, or
+//! a drain may shed requests (with `shard_failed` / `draining` /
+//! `queue_full` codes), but every completion that does arrive is
+//! byte-identical to a clean single-shard run — placement, crashes,
+//! retries, salvage and load never leak into the math. The survival
+//! layer (engine retry, fleet salvage + respawn — `docs/ROBUSTNESS.md`)
+//! strengthens the shedding half: faults the fleet can absorb produce
+//! *completions*, not codes, and those completions are still
+//! byte-identical to a fault-free run.
 
 pub mod director;
+pub mod fault;
 pub mod replay;
 pub mod trace;
 
 pub use director::{parse_script, Director, Op, Reply};
-pub use replay::{replay, ReplayConfig, ReplayOutcome};
+pub use fault::{classify, BackendFault, FaultClass, FaultPlan, FaultSpec, FaultyBackend, JitterBackoff};
+pub use replay::{fetch_survival, replay, ReplayConfig, ReplayOutcome, SurvivalCounters};
 pub use trace::{completion_digest, read_trace, reply_digest, TraceRecord, TraceSink};

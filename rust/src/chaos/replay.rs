@@ -23,6 +23,14 @@
 //! ([`super::trace::reply_digest`]). The aggregate lands in
 //! `BENCH_replay.json` via [`crate::perfstat`] (wire-latency
 //! p50/p95/p99 + derived scalars).
+//!
+//! After the run, `agd replay` scrapes the fleet's **survival counters**
+//! (`{"cmd": "stats"}` → [`fetch_survival`]) into the same report: how
+//! many batches were transiently retried, jobs salvaged off dying
+//! shards, and shards died/respawned while the replay was being served.
+//! Replayed digests matching the capture *plus* non-zero survival
+//! counters is the whole robustness claim in one artifact: the fleet
+//! took damage and the bytes did not change (`docs/ROBUSTNESS.md`).
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -104,6 +112,83 @@ impl ReplayOutcome {
     pub fn shed_total(&self) -> usize {
         self.shed.values().sum()
     }
+}
+
+/// §Robustness: fleet survival counters scraped from `{"cmd": "stats"}`
+/// after a replay — the adversity the fleet absorbed while serving it.
+/// Each field sums one counter family across the fleet.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SurvivalCounters {
+    /// `batch_retries_total` — transiently-failed batches retried.
+    pub batch_retries: u64,
+    /// `jobs_salvaged_total` — never-started jobs re-placed off dying
+    /// shards.
+    pub jobs_salvaged: u64,
+    /// `shard_died_total` — lifetime shard deaths (persistent ledger;
+    /// survives respawn).
+    pub shards_died: u64,
+    /// `shard_respawned_total` — supervisor respawns.
+    pub shards_respawned: u64,
+}
+
+/// Sum one counter family out of a flat `{"name{label=v}": n}` counters
+/// object. Merged fleet telemetry publishes most series twice — summed
+/// (no `shard=` label) and per-shard — so fleet-total keys are preferred
+/// and the `shard=`-labelled copies are only summed for series that
+/// exist *exclusively* per-shard (`shard_died_total`,
+/// `shard_respawned_total`).
+fn sum_counter(counters: &Value, name: &str) -> u64 {
+    let Some(obj) = counters.as_obj() else { return 0 };
+    let (mut fleet, mut sharded) = (0.0f64, 0.0f64);
+    let mut saw_fleet = false;
+    for (k, v) in obj {
+        let is_family = k == name
+            || k.strip_prefix(name).is_some_and(|rest| rest.starts_with('{'));
+        if !is_family {
+            continue;
+        }
+        let val = v.as_f64().unwrap_or(0.0);
+        if k.contains("shard=") {
+            sharded += val;
+        } else {
+            fleet += val;
+            saw_fleet = true;
+        }
+    }
+    (if saw_fleet { fleet } else { sharded }) as u64
+}
+
+/// One `{"cmd": "stats"}` round trip against `addr`, reduced to the
+/// [`SurvivalCounters`] the replay report embeds. Failure is an error —
+/// the caller decides whether a missing scrape invalidates the run
+/// (`agd replay` degrades to a report without the survival section).
+pub fn fetch_survival(addr: &str, timeout_ms: u64) -> Result<SurvivalCounters> {
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("stats connect {addr}"))?;
+    stream
+        .set_read_timeout(Some(Duration::from_millis(timeout_ms.max(1))))
+        .ok();
+    let mut writer = stream.try_clone().context("stats stream clone")?;
+    writer
+        .write_all(b"{\"cmd\": \"stats\"}\n")
+        .context("stats write")?;
+    let mut line = String::new();
+    BufReader::new(stream)
+        .read_line(&mut line)
+        .context("stats read")?;
+    let v = json::parse(line.trim())
+        .map_err(|e| anyhow::anyhow!("stats reply is not JSON: {e}"))?;
+    let null = Value::Null;
+    let counters = v
+        .get("telemetry")
+        .and_then(|t| t.get("counters"))
+        .unwrap_or(&null);
+    Ok(SurvivalCounters {
+        batch_retries: sum_counter(counters, "batch_retries_total"),
+        jobs_salvaged: sum_counter(counters, "jobs_salvaged_total"),
+        shards_died: sum_counter(counters, "shard_died_total"),
+        shards_respawned: sum_counter(counters, "shard_respawned_total"),
+    })
 }
 
 /// What one connection expects back for one sent request.
@@ -289,8 +374,16 @@ fn run_connection(
 }
 
 /// Bundle the outcome into the `BENCH_replay.json` shape: the
-/// wire-latency [`Summary`] row plus derived scalars.
-pub fn report_json(outcome: &ReplayOutcome, cfg: &ReplayConfig) -> Value {
+/// wire-latency [`Summary`] row plus derived scalars. When a post-run
+/// stats scrape succeeded, its [`SurvivalCounters`] ride along as
+/// `survived_*` scalars — zero survival counters with clean digests
+/// means an undisturbed run; non-zero counters with clean digests means
+/// the fleet absorbed faults without changing a byte.
+pub fn report_json(
+    outcome: &ReplayOutcome,
+    cfg: &ReplayConfig,
+    survival: Option<&SurvivalCounters>,
+) -> Value {
     let lat = Summary::from_samples_ms("replay_wire_latency", &outcome.latencies_ms);
     let wall_s = outcome.wall_ms / 1e3;
     let mut derived: Vec<(String, f64)> = vec![
@@ -322,14 +415,28 @@ pub fn report_json(outcome: &ReplayOutcome, cfg: &ReplayConfig) -> Value {
     for (code, n) in &outcome.shed {
         derived.push((format!("shed_{code}"), *n as f64));
     }
+    if let Some(s) = survival {
+        derived.push(("survived_batch_retries".into(), s.batch_retries as f64));
+        derived.push(("survived_jobs_salvaged".into(), s.jobs_salvaged as f64));
+        derived.push(("survived_shard_deaths".into(), s.shards_died as f64));
+        derived.push((
+            "survived_shard_respawns".into(),
+            s.shards_respawned as f64,
+        ));
+    }
     let borrowed: Vec<(&str, f64)> =
         derived.iter().map(|(k, v)| (k.as_str(), *v)).collect();
     crate::perfstat::summaries_to_json(&[lat], &borrowed)
 }
 
 /// Write [`report_json`] to `path` (the `BENCH_replay.json` artifact).
-pub fn write_report(path: &str, outcome: &ReplayOutcome, cfg: &ReplayConfig) -> Result<()> {
-    let text = json::to_string(&report_json(outcome, cfg));
+pub fn write_report(
+    path: &str,
+    outcome: &ReplayOutcome,
+    cfg: &ReplayConfig,
+    survival: Option<&SurvivalCounters>,
+) -> Result<()> {
+    let text = json::to_string(&report_json(outcome, cfg, survival));
     std::fs::write(path, text).with_context(|| format!("writing replay report {path}"))?;
     eprintln!("replay report written to {path}");
     Ok(())
@@ -446,7 +553,7 @@ mod tests {
         assert_eq!(out.completed, 8);
         assert_eq!(out.transport_errors, 0);
         assert_eq!(out.latencies_ms.len(), 8);
-        let v = report_json(&out, &cfg);
+        let v = report_json(&out, &cfg, None);
         let d = v.req("derived");
         assert_eq!(d.req("max_in_flight").as_f64(), Some(2.0));
         assert!(d.req("achieved_rps").as_f64().unwrap() > 0.0);
@@ -500,7 +607,7 @@ mod tests {
         };
         out.shed.insert("queue_full".into(), 2);
         let cfg = ReplayConfig::default();
-        let v = report_json(&out, &cfg);
+        let v = report_json(&out, &cfg, None);
         let rows = v.req("benchmarks").as_arr().unwrap();
         assert_eq!(rows[0].req("name").as_str(), Some("replay_wire_latency"));
         assert_eq!(rows[0].req("iters").as_usize(), Some(10));
@@ -509,5 +616,84 @@ mod tests {
         assert_eq!(d.req("completed").as_f64(), Some(8.0));
         assert_eq!(d.req("shed_queue_full").as_f64(), Some(2.0));
         assert_eq!(d.req("achieved_rps").as_f64(), Some(4.0));
+        // without a scrape the survival section is absent, not zeroed —
+        // "unknown" and "undisturbed" must stay distinguishable
+        assert!(d.get("survived_batch_retries").is_none());
+        let s = SurvivalCounters {
+            batch_retries: 3,
+            jobs_salvaged: 2,
+            shards_died: 1,
+            shards_respawned: 1,
+        };
+        let d2 = report_json(&out, &cfg, Some(&s));
+        let d2 = d2.req("derived");
+        assert_eq!(d2.req("survived_batch_retries").as_f64(), Some(3.0));
+        assert_eq!(d2.req("survived_jobs_salvaged").as_f64(), Some(2.0));
+        assert_eq!(d2.req("survived_shard_deaths").as_f64(), Some(1.0));
+        assert_eq!(d2.req("survived_shard_respawns").as_f64(), Some(1.0));
+    }
+
+    /// Survival counters sum the fleet-total keys and fall back to the
+    /// `shard=`-labelled copies only for series that exist per-shard
+    /// exclusively — no double counting either way.
+    #[test]
+    fn survival_counter_sums_prefer_fleet_totals() {
+        let counters = json::parse(
+            r#"{"batch_retries_total{class=transient}": 4,
+                "batch_retries_total{class=transient,shard=0}": 3,
+                "batch_retries_total{class=transient,shard=1}": 1,
+                "shard_died_total{shard=0}": 2,
+                "shard_died_total{shard=1}": 1,
+                "shard_respawned_total{shard=0}": 2,
+                "jobs_salvaged_totally_unrelated": 99}"#,
+        )
+        .unwrap();
+        assert_eq!(sum_counter(&counters, "batch_retries_total"), 4);
+        assert_eq!(sum_counter(&counters, "shard_died_total"), 3);
+        assert_eq!(sum_counter(&counters, "shard_respawned_total"), 2);
+        // name matching is exact-family: `jobs_salvaged_total` must not
+        // swallow `jobs_salvaged_totally_unrelated`
+        assert_eq!(sum_counter(&counters, "jobs_salvaged_total"), 0);
+        assert_eq!(sum_counter(&Value::Null, "anything"), 0);
+    }
+
+    /// [`fetch_survival`] against a stub stats endpoint: one round trip,
+    /// counters reduced per family.
+    #[test]
+    fn fetch_survival_scrapes_a_stats_reply() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut writer = stream.try_clone().unwrap();
+            let mut line = String::new();
+            BufReader::new(stream).read_line(&mut line).unwrap();
+            assert!(line.contains("stats"), "{line}");
+            writeln!(
+                writer,
+                r#"{{"shards": 2, "telemetry": {{"counters": {{
+                    "batch_retries_total{{class=transient}}": 5,
+                    "jobs_salvaged_total{{shard=0}}": 2,
+                    "shard_died_total{{shard=0}}": 1,
+                    "shard_respawned_total{{shard=0}}": 1}}}}}}"#
+            )
+            .unwrap();
+        });
+        let s = fetch_survival(&addr.to_string(), 5_000).unwrap();
+        assert_eq!(
+            s,
+            SurvivalCounters {
+                batch_retries: 5,
+                jobs_salvaged: 2,
+                shards_died: 1,
+                shards_respawned: 1,
+            }
+        );
+        // an unreachable endpoint is an error the caller can degrade on
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        assert!(fetch_survival(&dead.to_string(), 200).is_err());
     }
 }

@@ -100,6 +100,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::backend::{Backend, BatchBuf, BatchOut};
+use crate::chaos::fault::{classify, FaultClass, JitterBackoff};
 use crate::coordinator::bufpool::{BufPool, StepBufs};
 use crate::coordinator::policy::PolicyState;
 use crate::coordinator::request::{Completion, EvalKind, Request, RequestState};
@@ -112,6 +113,16 @@ use crate::trace::{self, EvalSet, Stage, TraceRecorder};
 
 /// Queue-wait / execute-time histograms: 0..10 s in 100 ms bins.
 const LATENCY_HIST: (f64, f64, usize) = (0.0, 10_000.0, 100);
+
+/// Retry-backoff histogram (`retry_backoff_ms`): 0..4 s in 50 ms bins.
+const BACKOFF_HIST: (f64, f64, usize) = (0.0, 4_000.0, 80);
+
+/// Default decorrelated-jitter base delay for transient-batch retries
+/// (§Robustness; overridable via [`Engine::set_batch_retries`]).
+pub const DEFAULT_RETRY_BASE_MS: u64 = 25;
+
+/// Default retry-backoff delay cap.
+pub const DEFAULT_RETRY_CAP_MS: u64 = 2_000;
 
 /// Largest step count accepted through the validated front door
 /// ([`Engine::try_submit`]); the unvalidated [`Engine::submit`] preload
@@ -238,6 +249,15 @@ pub struct Engine<B: Backend> {
     k_stage_batch: MetricKey,
     k_stage_denoise: MetricKey,
     k_stage_combine: MetricKey,
+    k_batch_retries: MetricKey,
+    k_retry_backoff: MetricKey,
+    /// §Robustness: transient-batch-failure retry budget per pump (0 —
+    /// the default — is the historical fail-on-first-error behaviour)
+    max_batch_retries: usize,
+    /// Seeded decorrelated-jitter pacing between retry attempts (the
+    /// fleet seeds each shard with its index, so shards desynchronize
+    /// while every run stays reproducible)
+    backoff: JitterBackoff,
 }
 
 impl<B: Backend> Engine<B> {
@@ -274,6 +294,9 @@ impl<B: Backend> Engine<B> {
         let k_stage_batch = telemetry.metric_key("stage_ms", &[("stage", "batch")]);
         let k_stage_denoise = telemetry.metric_key("stage_ms", &[("stage", "denoise")]);
         let k_stage_combine = telemetry.metric_key("stage_ms", &[("stage", "combine")]);
+        let k_batch_retries =
+            telemetry.metric_key("batch_retries_total", &[("class", "transient")]);
+        let k_retry_backoff = telemetry.metric_key("retry_backoff_ms", &[]);
         Ok(Engine {
             backend,
             sched,
@@ -311,7 +334,24 @@ impl<B: Backend> Engine<B> {
             k_stage_batch,
             k_stage_denoise,
             k_stage_combine,
+            k_batch_retries,
+            k_retry_backoff,
+            max_batch_retries: 0,
+            backoff: JitterBackoff::new(DEFAULT_RETRY_BASE_MS, DEFAULT_RETRY_CAP_MS, 0),
         })
+    }
+
+    /// §Robustness: retry transient batch failures up to `max` times per
+    /// pump before escalating to a fatal pump error, pacing attempts with
+    /// a seeded decorrelated-jitter backoff (`agd serve
+    /// --max-batch-retries`). `0` restores the historical behaviour:
+    /// every backend error is fatal on first sight. Only errors that
+    /// classify as [`FaultClass::Transient`] (typed
+    /// [`crate::chaos::BackendFault`]s today) are retried — an unknown
+    /// error is fatal, so a real backend bug cannot spin here.
+    pub fn set_batch_retries(&mut self, max: usize, base_ms: u64, cap_ms: u64, seed: u64) {
+        self.max_batch_retries = max;
+        self.backoff = JitterBackoff::new(base_ms, cap_ms, seed);
     }
 
     /// §Scale: stamp the fleet shard id onto exported span batches (the
@@ -798,6 +838,96 @@ impl<B: Backend> Engine<B> {
         }
     }
 
+    /// One pack-and-execute attempt over the current `batch_items`: fill
+    /// the reused [`BatchBuf`], call the backend, validate output shape.
+    /// Returns the denoise-start stamp (batch-assembly stage boundary)
+    /// and the backend's parallel-run stats. On error the caller owns the
+    /// rollback (`requeue_failed_batch`) — nothing was delivered.
+    fn execute_batch(
+        &mut self,
+        model: &str,
+        flat_in: usize,
+        flat_out: usize,
+    ) -> Result<(Instant, Option<crate::exec::RunStats>)> {
+        // the token table is as wide as the widest request in the
+        // batch; narrower rows zero-fill their tail
+        // (`fill_eval_input`), matching the backends' all-zero =
+        // unconditional convention
+        let tok_width = self
+            .batch_items
+            .iter()
+            .map(|it| {
+                let st = self.states[it.state_idx].as_ref().expect("state for queued item");
+                st.req.tokens.len()
+            })
+            .max()
+            .unwrap_or(0);
+        self.batch.reset(flat_in, tok_width);
+        for it in &self.batch_items {
+            let st = self.states[it.state_idx].as_ref().expect("state for queued item");
+            let kind = st.current_evals()[it.slot];
+            anyhow::ensure!(
+                st.eval_input_len(kind) == flat_in,
+                "request {} input length {} != flat_in {flat_in} for model {model}",
+                st.req.id,
+                st.eval_input_len(kind)
+            );
+            let (x_row, tok_row) = self.batch.push_row(st.current_t() as f32);
+            st.fill_eval_input(kind, x_row, tok_row);
+        }
+        let denoise_start = Instant::now();
+        let stats = self
+            .backend
+            .denoise_into_par(model, &self.batch, &mut self.out, &self.exec)?;
+        anyhow::ensure!(
+            self.out.len() == self.batch.len() && self.out.flat_out() == flat_out,
+            "backend sized the output {}x{} for a {}x{flat_out} batch",
+            self.out.len(),
+            self.out.flat_out(),
+            self.batch.len()
+        );
+        Ok((denoise_start, stats))
+    }
+
+    /// §Robustness: pull back every admitted request that has never had a
+    /// batch item executed (`first_exec` unset) and release its engine
+    /// slot, returning the original [`Request`]s. The fleet calls this
+    /// when a shard dies: never-started requests restart from step 0 with
+    /// the same init noise on a survivor, so their completions stay
+    /// byte-identical — only truly mid-step work has to be shed with
+    /// `shard_failed`. Queued work items are removed via
+    /// [`Scheduler::revoke`], so the scheduler holds no orphans after.
+    pub fn salvage_unstarted(&mut self) -> Vec<Request> {
+        let mut salvaged = Vec::new();
+        for idx in 0..self.metas.len() {
+            let started = match self.metas[idx].as_ref() {
+                Some(meta) => meta.first_exec.is_some(),
+                None => continue,
+            };
+            if started {
+                continue;
+            }
+            let meta = self.metas[idx].take().expect("meta checked above");
+            let state = self.states[idx].take().expect("state for live request");
+            self.sched.revoke(idx);
+            self.active -= 1;
+            self.queued_nfes = self.queued_nfes.saturating_sub(meta.cost);
+            self.free.push(idx);
+            if let Some(n) = self.clients_in_flight.get_mut(&meta.client) {
+                if *n <= 1 {
+                    self.clients_in_flight.remove(&meta.client);
+                } else {
+                    *n -= 1;
+                }
+            }
+            salvaged.push(state.req);
+        }
+        if !salvaged.is_empty() {
+            self.update_gauges();
+        }
+        salvaged
+    }
+
     /// Execute one batch of work items (same model, up to the largest
     /// bucket), as chosen by the scheduler, and advance all requests whose
     /// step completed. Returns the completions this round produced.
@@ -821,63 +951,61 @@ impl<B: Backend> Engine<B> {
             self.sched.name()
         );
 
-        let exec_start = Instant::now();
-        // §Observability: batch-assembly stage = exec_start..denoise_start
-        // (set just before the backend call below)
-        let mut denoise_start = exec_start;
         let flat_in = self.backend.flat_in(&model);
         let flat_out = self.backend.flat_out(&model);
 
         // pack + execute, fallibly: on any error the un-executed items go
         // back to the scheduler (`requeue_failed_batch`), so accounting
         // (`active`/`queued_nfes`/pending slots) stays consistent and the
-        // engine remains usable — the caller just sees the error.
-        let mut exec_stats: Option<crate::exec::RunStats> = None;
-        let staged: Result<()> = (|| {
-            // the token table is as wide as the widest request in the
-            // batch; narrower rows zero-fill their tail
-            // (`fill_eval_input`), matching the backends' all-zero =
-            // unconditional convention
-            let tok_width = self
-                .batch_items
-                .iter()
-                .map(|it| {
-                    let st = self.states[it.state_idx].as_ref().expect("state for queued item");
-                    st.req.tokens.len()
-                })
-                .max()
-                .unwrap_or(0);
-            self.batch.reset(flat_in, tok_width);
-            for it in &self.batch_items {
-                let st = self.states[it.state_idx].as_ref().expect("state for queued item");
-                let kind = st.current_evals()[it.slot];
-                anyhow::ensure!(
-                    st.eval_input_len(kind) == flat_in,
-                    "request {} input length {} != flat_in {flat_in} for model {model}",
-                    st.req.id,
-                    st.eval_input_len(kind)
-                );
-                let (x_row, tok_row) = self.batch.push_row(st.current_t() as f32);
-                st.fill_eval_input(kind, x_row, tok_row);
+        // engine remains usable. §Robustness: errors that classify as
+        // transient (typed [`crate::chaos::BackendFault`]s) are retried up
+        // to `max_batch_retries` times with seeded decorrelated-jitter
+        // backoff — work rolls back through the scheduler between attempts
+        // and is re-taken, so the retried batch is re-packed from live
+        // state and the result is byte-identical to a fault-free run.
+        // Anything else (or a spent budget) escalates to a fatal pump
+        // error, exactly the historical behaviour.
+        let mut attempts = 0usize;
+        let (exec_start, denoise_start, mut exec_stats) = loop {
+            // §Observability: batch-assembly stage = t0..denoise_start;
+            // each retry re-stamps both so stage histograms measure the
+            // attempt that actually produced output
+            let t0 = Instant::now();
+            match self.execute_batch(&model, flat_in, flat_out) {
+                Ok((denoise_start, stats)) => {
+                    if attempts > 0 {
+                        self.backoff.reset();
+                    }
+                    break (t0, denoise_start, stats);
+                }
+                Err(e) => {
+                    self.requeue_failed_batch();
+                    if classify(&e) == FaultClass::Transient && attempts < self.max_batch_retries {
+                        attempts += 1;
+                        let ms = self.backoff.next_ms();
+                        self.telemetry.inc_key(&self.k_batch_retries, 1);
+                        let (lo, hi, bins) = BACKOFF_HIST;
+                        self.telemetry
+                            .observe_key(&self.k_retry_backoff, ms as f64, lo, hi, bins);
+                        if ms > 0 {
+                            std::thread::sleep(std::time::Duration::from_millis(ms));
+                        }
+                        // re-take: the scheduler may hand back a different
+                        // (even larger) batch than the one that failed —
+                        // retry is a fresh pump round, not a replay
+                        self.batch_items.clear();
+                        self.sched.take_batch(&model, max_bucket, &mut self.batch_items);
+                        if self.batch_items.is_empty() {
+                            self.telemetry.inc("pump_errors_total", &[], 1);
+                            return Err(e);
+                        }
+                        continue;
+                    }
+                    self.telemetry.inc("pump_errors_total", &[], 1);
+                    return Err(e);
+                }
             }
-            denoise_start = Instant::now();
-            exec_stats =
-                self.backend
-                    .denoise_into_par(&model, &self.batch, &mut self.out, &self.exec)?;
-            anyhow::ensure!(
-                self.out.len() == self.batch.len() && self.out.flat_out() == flat_out,
-                "backend sized the output {}x{} for a {}x{flat_out} batch",
-                self.out.len(),
-                self.out.flat_out(),
-                self.batch.len()
-            );
-            Ok(())
-        })();
-        if let Err(e) = staged {
-            self.requeue_failed_batch();
-            self.telemetry.inc("pump_errors_total", &[], 1);
-            return Err(e);
-        }
+        };
 
         let denoise_end = Instant::now();
         // queue-wait accounting: a request starts executing at its first
@@ -1461,6 +1589,100 @@ mod tests {
         assert!(e.pump().is_err());
         assert_eq!(e.queue_len(), before.2);
         assert_eq!(e.telemetry().counter("pump_errors_total", &[]), 2);
+    }
+
+    #[test]
+    fn transient_faults_retry_to_byte_identical_completions() {
+        use crate::chaos::fault::{FaultPlan, FaultSpec, FaultyBackend};
+        let reqs = || -> Vec<Request> {
+            (0..4).map(|i| req_seeded(i, 1 + (i % 4) as i32, cfg(2.0))).collect()
+        };
+        let clean = engine().run(reqs()).unwrap();
+        // every 3rd batch errors transiently; the retry budget absorbs it
+        let plan = Arc::new(FaultPlan::default());
+        plan.arm(FaultSpec::parse("error-every=3").unwrap());
+        let be = FaultyBackend::new(GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05)), plan.clone());
+        let mut e = Engine::new(be).unwrap();
+        e.set_batch_retries(3, 0, 0, 42); // base 0ms: no real sleeping in tests
+        let faulty = e.run(reqs()).unwrap();
+        assert!(plan.errors() > 0, "fault schedule never fired");
+        let t = e.telemetry();
+        assert_eq!(
+            t.counter("batch_retries_total", &[("class", "transient")]),
+            plan.errors(),
+            "every injected transient error must be absorbed by a retry"
+        );
+        assert_eq!(t.counter("pump_errors_total", &[]), 0);
+        assert_eq!(faulty.len(), clean.len());
+        for (a, b) in faulty.iter().zip(&clean) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.image, b.image, "request {}: retries leaked into the math", a.id);
+            assert_eq!(a.nfes, b.nfes);
+        }
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_escalates_to_a_fatal_pump_error() {
+        use crate::chaos::fault::{FaultPlan, FaultSpec, FaultyBackend};
+        let plan = Arc::new(FaultPlan::default());
+        // every batch errors: a budget of 2 retries can never succeed
+        plan.arm(FaultSpec::parse("error-every=1").unwrap());
+        let be = FaultyBackend::new(GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05)), plan);
+        let mut e = Engine::new(be).unwrap();
+        e.set_batch_retries(2, 0, 0, 7);
+        e.submit(req(0, 1, cfg(2.0)));
+        let before = (e.active(), e.queued_nfes(), e.queue_len());
+        let err = e.pump().unwrap_err();
+        assert!(err.to_string().contains("transient"), "{err}");
+        let t = e.telemetry();
+        assert_eq!(t.counter("batch_retries_total", &[("class", "transient")]), 2);
+        assert_eq!(t.counter("pump_errors_total", &[]), 1);
+        // the final failure rolled the batch back like any other pump error
+        assert_eq!((e.active(), e.queued_nfes(), e.queue_len()), before);
+    }
+
+    #[test]
+    fn fatal_faults_are_never_retried() {
+        use crate::chaos::fault::{FaultPlan, FaultSpec, FaultyBackend};
+        let plan = Arc::new(FaultPlan::default());
+        plan.arm(FaultSpec::parse("fail-after=1").unwrap());
+        let be = FaultyBackend::new(GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05)), plan);
+        let mut e = Engine::new(be).unwrap();
+        e.set_batch_retries(5, 0, 0, 7);
+        e.submit(req(0, 1, cfg(2.0)));
+        e.pump().unwrap(); // batch 1 is within the fail-after budget
+        let err = e.pump().unwrap_err();
+        assert!(err.to_string().contains("fatal"), "{err}");
+        let t = e.telemetry();
+        assert_eq!(t.counter("batch_retries_total", &[("class", "transient")]), 0);
+        assert_eq!(t.counter("pump_errors_total", &[]), 1);
+    }
+
+    #[test]
+    fn salvage_reclaims_only_never_started_requests() {
+        let mut e = engine();
+        e.submit(req(0, 1, cfg(2.0)));
+        e.pump().unwrap(); // request 0 has executed at least one batch
+        e.submit(req(1, 2, cfg(2.0)));
+        e.submit(req(2, 3, cfg(2.0)));
+        let salvaged = e.salvage_unstarted();
+        let mut ids: Vec<u64> = salvaged.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2], "started request 0 must not be salvaged");
+        // the survivor still completes; the engine goes fully idle after
+        assert_eq!(e.active(), 1);
+        let done = e.drain().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 0);
+        assert!(e.idle());
+        assert_eq!(e.queued_nfes(), 0);
+        assert_eq!(e.queue_len(), 0);
+        // salvaged slots are recycled, and resubmitting a salvaged request
+        // elsewhere reproduces the exact same completion (same init noise)
+        let fresh = engine().run(vec![req(1, 2, cfg(2.0))]).unwrap();
+        let resub = e.run(salvaged.into_iter().filter(|r| r.id == 1).collect()).unwrap();
+        assert_eq!(resub[0].image, fresh[0].image);
+        assert_eq!(resub[0].nfes, fresh[0].nfes);
     }
 
     #[test]

@@ -43,34 +43,54 @@
 //! The invariant holds under *failure* too, and is exercised on purpose:
 //! [`Fleet::kill_shard`] injects a crash into a live shard (the chaos
 //! harness's hook — [`crate::chaos`]), which runs the same fatal path as
-//! a real pump failure: in-flight jobs on the victim are refused with
-//! `"code": "shard_failed"` ([`ShardFailed`]), the shard is marked dead
-//! (visible as `shard_died_total{shard=}` and a dropped
-//! `fleet_shards_alive`), and the survivors keep serving byte-identical
-//! completions (`rust/tests/chaos_integration.rs`).
+//! a real pump failure: the shard is marked dead (visible as
+//! `shard_died_total{shard=}` and a dropped `fleet_shards_alive`) and
+//! the survivors keep serving byte-identical completions
+//! (`rust/tests/chaos_integration.rs`).
+//!
+//! §Robustness (`docs/ROBUSTNESS.md`): a death sheds as little as it
+//! can. The dying shard salvages every admitted job that never started
+//! executing and hands it to the fleet **supervisor** thread, which
+//! re-places the jobs onto survivors — restarted from step 0 with the
+//! same init noise, their completions stay byte-identical
+//! (`jobs_salvaged_total{shard=}`); only truly mid-step work is refused
+//! with `"code": "shard_failed"` ([`ShardFailed`]). With
+//! `--shard-respawn` the supervisor then rebuilds the dead shard from
+//! the retained backend factory under capped exponential backoff and
+//! revives it for placement (`shard_respawned_total{shard=}`).
 
 pub mod replica;
 pub mod router;
 
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::backend::Backend;
-use crate::coordinator::engine::{Engine, MAX_STEPS};
+use crate::chaos::fault::FaultPlan;
+use crate::coordinator::engine::{
+    Engine, DEFAULT_RETRY_BASE_MS, DEFAULT_RETRY_CAP_MS, MAX_STEPS,
+};
 use crate::coordinator::request::Request;
 use crate::sched::{Admission, AdmitError, SchedulerKind, Telemetry};
 use crate::util::json::{self, Value};
+use crate::util::logev::log_event;
 
 pub use replica::{Job, JobReply, ShardStats};
 pub use router::{Placement, Router, ShardLoad};
 
 use replica::ShardMsg;
+
+/// §Robustness: supervisor respawn backoff — capped exponential, per
+/// shard, doubling on every death of that shard (a crash-looping backend
+/// settles at one respawn attempt per [`RESPAWN_CAP_MS`]).
+const RESPAWN_BASE_MS: u64 = 25;
+const RESPAWN_CAP_MS: u64 = 2_000;
 
 /// An admission shed tagged with the level that made it: `"global"` (the
 /// router's fleet-wide budget) or `"shard"` (one engine's own budget).
@@ -156,6 +176,13 @@ pub struct FleetConfig {
     /// Shed deadline-infeasible requests at shard admission
     /// (`--shed-infeasible`).
     pub shed_infeasible: bool,
+    /// §Robustness: per-pump transient-error retry budget inside every
+    /// shard engine (`--max-batch-retries`; 0 = every backend error is
+    /// fatal on first sight, the historical behaviour).
+    pub max_batch_retries: usize,
+    /// §Robustness: respawn dead shards via the stored backend factory
+    /// (`--shard-respawn`), with capped exponential backoff.
+    pub respawn: bool,
 }
 
 impl Default for FleetConfig {
@@ -168,6 +195,8 @@ impl Default for FleetConfig {
             shard_admission: Admission::unlimited(),
             workers: 1,
             shed_infeasible: false,
+            max_batch_retries: 0,
+            respawn: false,
         }
     }
 }
@@ -182,24 +211,56 @@ struct RouterInner {
     txs: Vec<std::sync::mpsc::Sender<ShardMsg>>,
 }
 
+/// §Robustness: what a dying shard tells the supervisor thread.
+pub(crate) enum SuperMsg {
+    /// A shard ran its death path. `salvaged` carries every admitted job
+    /// that had not started executing (`first_exec` unset) — the
+    /// supervisor re-places them onto survivors; restarted from step 0
+    /// with the same init noise they complete byte-identically.
+    Died { shard: usize, salvaged: Vec<Job> },
+    /// Fleet shutdown: stop supervising and exit the thread.
+    Shutdown,
+}
+
+/// State shared between the fleet handle, its shard threads, and the
+/// supervisor thread (which must re-place salvaged jobs and swap a
+/// respawned shard's channel without holding a `&Fleet`).
+struct Shared {
+    loads: Vec<Arc<ShardLoad>>,
+    router: Mutex<RouterInner>,
+    /// Fleet-level counters that belong to no shard engine: connection
+    /// hygiene (`conn_*`, incremented by the server's handlers), chaos
+    /// injections (`chaos_*`), and the supervisor's survival ledger
+    /// (`jobs_salvaged_total`, `shard_respawned_total`). Merged into
+    /// `{"cmd": "stats"}` / `{"cmd": "metrics"}` alongside the shard
+    /// registries.
+    telemetry: Mutex<Telemetry>,
+    draining: AtomicBool,
+    joins: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// Spawns one shard's engine thread; retained by the supervisor so dead
+/// shards can be respawned with the same factory, config and seeds.
+type Spawner = Box<dyn Fn(usize, Receiver<ShardMsg>) -> JoinHandle<()> + Send>;
+
 /// The engine fleet (see module docs). Shared across connection-handler
 /// threads behind an `Arc`; every public method takes `&self`.
 pub struct Fleet {
-    loads: Vec<Arc<ShardLoad>>,
-    joins: Mutex<Vec<JoinHandle<()>>>,
-    router: Mutex<RouterInner>,
+    shared: Arc<Shared>,
     global: Admission,
     placement: Placement,
     scheduler: SchedulerKind,
-    draining: AtomicBool,
     next_id: AtomicU64,
     /// Launch instant — `uptime_s` in `{"cmd": "stats"}`.
     started: Instant,
-    /// Fleet-level counters that belong to no shard engine: connection
-    /// hygiene (`conn_*`, incremented by the server's handlers) and
-    /// chaos injections (`chaos_*`). Merged into `{"cmd": "stats"}` /
-    /// `{"cmd": "metrics"}` alongside the shard registries.
-    telemetry: Mutex<Telemetry>,
+    /// Supervisor mailbox (Mutex: `mpsc::Sender` is not `Sync` on every
+    /// supported toolchain, and this is far off the hot path).
+    super_tx: Mutex<Sender<SuperMsg>>,
+    /// §Robustness: the fault plan armed into every shard's
+    /// [`crate::chaos::FaultyBackend`] wrapper, when the server installed
+    /// one (`--fault-spec`); the chaos director's `fault` op re-arms it
+    /// live through [`Fleet::fault_plan`].
+    fault_plan: Mutex<Option<Arc<FaultPlan>>>,
 }
 
 impl Fleet {
@@ -222,50 +283,114 @@ impl Fleet {
             cfg.workers
         };
         let factory = Arc::new(factory);
+        let loads: Vec<Arc<ShardLoad>> = (0..n).map(|_| Arc::new(ShardLoad::default())).collect();
+        let (super_tx, super_rx) = channel::<SuperMsg>();
+        // the spawner is retained by the supervisor: a respawned shard is
+        // built by the *same* closure as the original (same factory, same
+        // scheduler/admission config, same per-shard retry seed), so a
+        // respawn restores exactly the topology that launched
+        let spawner: Spawner = {
+            let loads = loads.clone();
+            let super_tx = super_tx.clone();
+            let (kind, adm, shed) = (cfg.scheduler, cfg.shard_admission, cfg.shed_infeasible);
+            let retries = cfg.max_batch_retries;
+            Box::new(move |i: usize, rx: Receiver<ShardMsg>| {
+                let f = factory.clone();
+                let l = loads[i].clone();
+                let stx = super_tx.clone();
+                std::thread::Builder::new()
+                    .name(format!("agd-shard-{i}"))
+                    .spawn(move || {
+                        let engine =
+                            f(i).and_then(|be| Engine::with_scheduler(be, kind.build(), adm));
+                        match engine {
+                            Ok(mut engine) => {
+                                engine.set_workers(workers);
+                                engine.set_batch_retries(
+                                    retries,
+                                    DEFAULT_RETRY_BASE_MS,
+                                    DEFAULT_RETRY_CAP_MS,
+                                    i as u64,
+                                );
+                                replica::run_replica(i, engine, rx, l, shed, stx);
+                            }
+                            Err(e) => {
+                                // construction failures are permanent: the
+                                // supervisor is not told, because respawning
+                                // a backend that cannot be built would only
+                                // crash-loop (vs. a *runtime* death, whose
+                                // next construction may well succeed)
+                                log_event(
+                                    log::Level::Error,
+                                    &format!("shard-{i}"),
+                                    &format!("backend construction failed, marking dead: {e:#}"),
+                                );
+                                l.mark_dead();
+                            }
+                        }
+                    })
+                    .expect("spawn shard thread")
+            })
+        };
         let mut txs = Vec::with_capacity(n);
-        let mut loads = Vec::with_capacity(n);
         let mut joins = Vec::with_capacity(n);
         for i in 0..n {
             let (tx, rx) = channel::<ShardMsg>();
-            let load = Arc::new(ShardLoad::default());
-            let (f, l) = (factory.clone(), load.clone());
-            let (kind, adm, shed) = (cfg.scheduler, cfg.shard_admission, cfg.shed_infeasible);
-            let join = std::thread::Builder::new()
-                .name(format!("agd-shard-{i}"))
-                .spawn(move || {
-                    let engine =
-                        f(i).and_then(|be| Engine::with_scheduler(be, kind.build(), adm));
-                    match engine {
-                        Ok(mut engine) => {
-                            engine.set_workers(workers);
-                            replica::run_replica(i, engine, rx, l, shed);
-                        }
-                        Err(e) => {
-                            log::error!("shard {i}: backend construction failed: {e:#}");
-                            l.mark_dead();
-                        }
-                    }
-                })
-                .expect("spawn shard thread");
+            joins.push(spawner(i, rx));
             txs.push(tx);
-            loads.push(load);
-            joins.push(join);
         }
-        Fleet {
+        let shared = Arc::new(Shared {
             loads,
-            joins: Mutex::new(joins),
             router: Mutex::new(RouterInner {
                 router: Router::new(cfg.placement),
                 txs,
             }),
+            telemetry: Mutex::new(Telemetry::new()),
+            draining: AtomicBool::new(false),
+            joins: Mutex::new(joins),
+        });
+        {
+            let sup_shared = shared.clone();
+            let respawn = cfg.respawn;
+            let sup = std::thread::Builder::new()
+                .name("agd-supervisor".into())
+                .spawn(move || supervise(&sup_shared, spawner, super_rx, respawn))
+                .expect("spawn supervisor thread");
+            shared.joins.lock().expect("joins lock").push(sup);
+        }
+        Fleet {
+            shared,
             global: cfg.global_admission,
             placement: cfg.placement,
             scheduler: cfg.scheduler,
-            draining: AtomicBool::new(false),
             next_id: AtomicU64::new(0),
             started: Instant::now(),
-            telemetry: Mutex::new(Telemetry::new()),
+            super_tx: Mutex::new(super_tx),
+            fault_plan: Mutex::new(None),
         }
+    }
+
+    /// §Robustness: install the fault plan the server armed into every
+    /// shard's [`crate::chaos::FaultyBackend`], making it reachable by
+    /// the chaos director's `fault` op.
+    pub fn set_fault_plan(&self, plan: Arc<FaultPlan>) {
+        *self.fault_plan.lock().expect("fault plan lock") = Some(plan);
+    }
+
+    /// The installed fault plan, if the server armed one.
+    pub fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        self.fault_plan.lock().expect("fault plan lock").clone()
+    }
+
+    /// Is this shard currently placeable? (False while dead, true again
+    /// once the supervisor respawns it — the chaos director's
+    /// `wait-respawn` op polls this.)
+    pub fn shard_alive(&self, shard: usize) -> bool {
+        self.shared
+            .loads
+            .get(shard)
+            .map(|l| !l.is_dead())
+            .unwrap_or(false)
     }
 
     /// Bump a fleet-level counter (connection hygiene, chaos injections).
@@ -273,7 +398,8 @@ impl Fleet {
     /// a counter living in a dying engine's registry would never be
     /// scraped again.
     pub fn count(&self, name: &str, labels: &[(&str, &str)]) {
-        self.telemetry
+        self.shared
+            .telemetry
             .lock()
             .expect("fleet telemetry lock")
             .inc(name, labels, 1);
@@ -290,13 +416,13 @@ impl Fleet {
     /// refusal path, never a silent drop.
     pub fn kill_shard(&self, shard: usize) -> bool {
         {
-            let guard = self.router.lock().expect("router lock");
-            if shard >= self.loads.len() || self.loads[shard].is_dead() {
+            let guard = self.shared.router.lock().expect("router lock");
+            if shard >= self.shared.loads.len() || self.shared.loads[shard].is_dead() {
                 return false;
             }
             if guard.txs[shard].send(ShardMsg::Crash).is_err() {
                 // channel gone without a death mark (shutdown race)
-                self.loads[shard].mark_dead();
+                self.shared.loads[shard].mark_dead();
                 return false;
             }
         }
@@ -306,7 +432,7 @@ impl Fleet {
     }
 
     pub fn shards(&self) -> usize {
-        self.loads.len()
+        self.shared.loads.len()
     }
 
     pub fn placement(&self) -> Placement {
@@ -314,12 +440,13 @@ impl Fleet {
     }
 
     pub fn is_draining(&self) -> bool {
-        self.draining.load(Ordering::SeqCst)
+        self.shared.draining.load(Ordering::SeqCst)
     }
 
     /// Fleet-wide request count (live shards only; reservations included).
     fn total_requests(&self) -> usize {
-        self.loads
+        self.shared
+            .loads
             .iter()
             .filter(|l| !l.is_dead())
             .map(|l| l.requests())
@@ -328,7 +455,8 @@ impl Fleet {
 
     /// Fleet-wide queued-NFE estimate (live shards only).
     fn total_nfes(&self) -> usize {
-        self.loads
+        self.shared
+            .loads
             .iter()
             .filter(|l| !l.is_dead())
             .map(|l| l.nfes())
@@ -354,7 +482,7 @@ impl Fleet {
         } else {
             0
         };
-        let mut guard = self.router.lock().expect("router lock");
+        let mut guard = self.shared.router.lock().expect("router lock");
         if self.is_draining() {
             return Err(anyhow::Error::new(RouteError::Draining));
         }
@@ -368,7 +496,7 @@ impl Fleet {
             }));
         }
         let t_place = Instant::now();
-        let Some(idx) = guard.router.place(&self.loads, req.client_id.as_deref()) else {
+        let Some(idx) = guard.router.place(&self.shared.loads, req.client_id.as_deref()) else {
             return Err(anyhow::Error::new(RouteError::Closed));
         };
         if req.trace {
@@ -377,7 +505,7 @@ impl Fleet {
             req.span_placement_us = t_place.elapsed().as_micros() as u64;
         }
         req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let load = &self.loads[idx];
+        let load = &self.shared.loads[idx];
         load.reserve(cost);
         let (rtx, rrx) = channel();
         let job = Job {
@@ -397,13 +525,13 @@ impl Fleet {
     /// Clone the shard channels out of the router lock, so slow follow-up
     /// work (waiting on stats/drain acks) never blocks placement.
     fn channels(&self) -> Vec<std::sync::mpsc::Sender<ShardMsg>> {
-        self.router.lock().expect("router lock").txs.clone()
+        self.shared.router.lock().expect("router lock").txs.clone()
     }
 
     /// Collect every live shard's stats snapshot.
     fn collect(&self) -> Result<Vec<ShardStats>> {
         let mut rxs = Vec::new();
-        for (tx, load) in self.channels().iter().zip(&self.loads) {
+        for (tx, load) in self.channels().iter().zip(&self.shared.loads) {
             if load.is_dead() {
                 continue;
             }
@@ -422,7 +550,7 @@ impl Fleet {
     /// serialize with [`crate::trace::batches_to_json`].
     pub fn drain_spans(&self) -> Result<Vec<crate::trace::SpanBatch>> {
         let mut rxs = Vec::new();
-        for (tx, load) in self.channels().iter().zip(&self.loads) {
+        for (tx, load) in self.channels().iter().zip(&self.shared.loads) {
             if load.is_dead() {
                 continue;
             }
@@ -451,29 +579,32 @@ impl Fleet {
             let shard = st.shard.to_string();
             merged.absorb(&st.telemetry, Some(("shard", &shard)));
         }
-        // fleet-level counters (conn_*, chaos_*) ride along unlabelled
+        // fleet-level counters (conn_*, chaos_*, salvage/respawn) ride
+        // along unlabelled
         {
-            let own = self.telemetry.lock().expect("fleet telemetry lock");
+            let own = self.shared.telemetry.lock().expect("fleet telemetry lock");
             merged.absorb(&own, None);
         }
-        // dead shards answer no Stats message, so their death is derived
-        // here from the load flag instead of counted in a registry nobody
-        // can scrape: one series per dead shard, pinned at 1
-        for (i, load) in self.loads.iter().enumerate() {
-            if load.is_dead() {
+        // dead shards answer no Stats message, so deaths are counted here
+        // from the load's persistent ledger instead of a registry nobody
+        // can scrape — and the ledger survives a supervisor respawn, so a
+        // shard that died twice and came back twice still reports 2
+        for (i, load) in self.shared.loads.iter().enumerate() {
+            let died = load.died();
+            if died > 0 {
                 let shard = i.to_string();
-                merged.inc("shard_died_total", &[("shard", &shard)], 1);
+                merged.inc("shard_died_total", &[("shard", &shard)], died);
             }
         }
         let sum = |f: &dyn Fn(&ShardStats) -> usize| stats.iter().map(f).sum::<usize>() as f64;
         merged.set_gauge("active_requests", &[], sum(&|t| t.active));
         merged.set_gauge("queue_depth", &[], sum(&|t| t.queue_depth));
         merged.set_gauge("queued_nfes", &[], sum(&|t| t.queued_nfes));
-        merged.set_gauge("fleet_shards", &[], self.loads.len() as f64);
+        merged.set_gauge("fleet_shards", &[], self.shared.loads.len() as f64);
         merged.set_gauge(
             "fleet_shards_alive",
             &[],
-            self.loads.iter().filter(|l| !l.is_dead()).count() as f64,
+            self.shared.loads.iter().filter(|l| !l.is_dead()).count() as f64,
         );
         merged
     }
@@ -506,7 +637,7 @@ impl Fleet {
             ("scheduler", s(self.scheduler.name())),
             ("version", s(env!("CARGO_PKG_VERSION"))),
             ("uptime_s", num(self.started.elapsed().as_secs_f64())),
-            ("shards", num(self.loads.len() as f64)),
+            ("shards", num(self.shared.loads.len() as f64)),
             ("placement", s(self.placement().name())),
             ("draining", json::Value::Bool(self.is_draining())),
             ("active", num(sum(&|t| t.active) as f64)),
@@ -544,8 +675,8 @@ impl Fleet {
             // serialize with in-progress submits: a request that won the
             // router lock before us reaches its shard's channel ahead of
             // the Drain message and is therefore waited for
-            let _guard = self.router.lock().expect("router lock");
-            self.draining.store(true, Ordering::SeqCst);
+            let _guard = self.shared.router.lock().expect("router lock");
+            self.shared.draining.store(true, Ordering::SeqCst);
         }
         let mut acks = Vec::new();
         for tx in self.channels() {
@@ -557,7 +688,7 @@ impl Fleet {
         for rx in acks {
             let _ = rx.recv();
         }
-        self.loads.len()
+        self.shared.loads.len()
     }
 
     /// Drain, then join every engine thread. The graceful teardown path —
@@ -568,12 +699,126 @@ impl Fleet {
         for tx in self.channels() {
             let _ = tx.send(ShardMsg::Shutdown);
         }
-        let mut joins = self.joins.lock().expect("joins lock");
+        // stop the supervisor too — it sits in the same join set, and a
+        // respawn racing shutdown is harmless (the fresh shard idles and
+        // exits on its channel closing); drain already set the flag that
+        // stops further respawns
+        {
+            let tx = self.super_tx.lock().expect("supervisor tx lock");
+            let _ = tx.send(SuperMsg::Shutdown);
+        }
+        let mut joins = self.shared.joins.lock().expect("joins lock");
         for j in joins.drain(..) {
             let _ = j.join();
         }
         n
     }
+}
+
+/// §Robustness: the supervisor loop. Two duties per shard death: re-place
+/// the salvaged (never-started) jobs onto survivors, and — when
+/// `--shard-respawn` is on and the fleet is not draining — rebuild the
+/// dead shard via the retained [`Spawner`] after a capped exponential
+/// backoff, swap its channel in under the router lock, and revive its
+/// load so placement sees it again.
+fn supervise(shared: &Shared, spawner: Spawner, rx: Receiver<SuperMsg>, respawn: bool) {
+    let mut backoff: Vec<u64> = vec![RESPAWN_BASE_MS; shared.loads.len()];
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            SuperMsg::Died { shard, salvaged } => {
+                if !salvaged.is_empty() {
+                    replace_jobs(shared, shard, salvaged);
+                }
+                if respawn && !shared.draining.load(Ordering::SeqCst) {
+                    let delay = backoff[shard];
+                    backoff[shard] = (delay * 2).min(RESPAWN_CAP_MS);
+                    log_event(
+                        log::Level::Warn,
+                        "supervisor",
+                        &format!("shard {shard} died; respawning after {delay}ms backoff"),
+                    );
+                    std::thread::sleep(Duration::from_millis(delay));
+                    let (tx, shard_rx) = channel::<ShardMsg>();
+                    let join = spawner(shard, shard_rx);
+                    {
+                        // swap the channel in *before* reviving: from the
+                        // moment placement sees the shard alive, its sends
+                        // reach the fresh thread
+                        let mut guard = shared.router.lock().expect("router lock");
+                        guard.txs[shard] = tx;
+                    }
+                    shared.loads[shard].revive();
+                    shared.joins.lock().expect("joins lock").push(join);
+                    let label = shard.to_string();
+                    shared
+                        .telemetry
+                        .lock()
+                        .expect("fleet telemetry lock")
+                        .inc("shard_respawned_total", &[("shard", &label)], 1);
+                    log_event(
+                        log::Level::Info,
+                        "supervisor",
+                        &format!("shard {shard} respawned and serving"),
+                    );
+                }
+            }
+            SuperMsg::Shutdown => return,
+        }
+    }
+}
+
+/// Re-place one dead shard's salvaged jobs onto survivors. The jobs keep
+/// their fleet-assigned request ids and skip global admission — they were
+/// already admitted once, and shedding previously-accepted work to a
+/// budget check would turn a survivable fault into a refusal. A job only
+/// sheds (`shard_failed`) when no live shard remains to take it.
+fn replace_jobs(shared: &Shared, from: usize, jobs: Vec<Job>) {
+    let total = jobs.len();
+    let mut placed = 0usize;
+    for job in jobs {
+        let mut job = Some(job);
+        loop {
+            let mut guard = shared.router.lock().expect("router lock");
+            let j = job.take().expect("job to place");
+            let Some(idx) = guard.router.place(&shared.loads, j.req.client_id.as_deref()) else {
+                let e = anyhow::Error::new(ShardFailed {
+                    shard: from,
+                    reason: "shard died before execution; no live shard left to salvage onto"
+                        .into(),
+                });
+                let _ = j.reply.send(JobReply::Error(crate::server::error_to_line(&e)));
+                break;
+            };
+            let cost = j.cost;
+            shared.loads[idx].reserve(cost);
+            match guard.txs[idx].send(ShardMsg::Job(j)) {
+                Ok(()) => {
+                    placed += 1;
+                    break;
+                }
+                Err(std::sync::mpsc::SendError(msg)) => {
+                    // raced another shard's death: roll back, mark, retry
+                    shared.loads[idx].settle(cost);
+                    shared.loads[idx].mark_dead();
+                    match msg {
+                        ShardMsg::Job(back) => job = Some(back),
+                        _ => unreachable!("sent a job, got back something else"),
+                    }
+                }
+            }
+        }
+    }
+    let label = from.to_string();
+    shared
+        .telemetry
+        .lock()
+        .expect("fleet telemetry lock")
+        .inc("jobs_salvaged_total", &[("shard", &label)], placed as u64);
+    log_event(
+        log::Level::Warn,
+        "supervisor",
+        &format!("shard {from}: salvaged {placed}/{total} never-started job(s) onto survivors"),
+    );
 }
 
 #[cfg(test)]
@@ -689,6 +934,162 @@ mod tests {
         }
         fleet.shutdown();
         assert!(fleet.drain_spans().is_err(), "shut-down fleet has no rings");
+    }
+
+    /// A fleet whose every shard is a [`crate::chaos::FaultyBackend`]
+    /// wrapper sharing `plans[i]` — the same wiring `agd serve
+    /// --fault-spec` uses, with per-shard plans for targeted injection.
+    fn faulty_fleet(plans: Vec<Arc<FaultPlan>>, cfg: FleetConfig) -> Fleet {
+        use crate::chaos::fault::FaultyBackend;
+        Fleet::launch(
+            move |shard| {
+                Ok(FaultyBackend::new(
+                    GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05)),
+                    plans[shard].clone(),
+                ))
+            },
+            cfg,
+        )
+    }
+
+    fn recv_done(rx: &std::sync::mpsc::Receiver<JobReply>) -> Box<crate::coordinator::request::Completion> {
+        match rx.recv().unwrap() {
+            JobReply::Done(c, _) => c,
+            JobReply::Error(line) => panic!("unexpected error: {line}"),
+        }
+    }
+
+    #[test]
+    fn dead_shard_salvages_unstarted_jobs_to_survivors() {
+        use crate::chaos::fault::{FaultPlan, FaultSpec};
+        // shard 0 stalls 150ms inside its first batch; shard 1 is clean
+        let plans: Vec<Arc<FaultPlan>> =
+            (0..2).map(|_| Arc::new(FaultPlan::default())).collect();
+        plans[0].arm(FaultSpec::parse("stall-at=1:150").unwrap());
+        let fleet = faulty_fleet(
+            plans,
+            FleetConfig {
+                shards: 2,
+                placement: Placement::RoundRobin,
+                ..FleetConfig::default()
+            },
+        );
+        let rx0 = fleet.submit(req(1, 6)).unwrap(); // → shard 0, stalls mid-step
+        std::thread::sleep(Duration::from_millis(50)); // let it start executing
+        let rx1 = fleet.submit(req(2, 6)).unwrap(); // → shard 1, unaffected
+        let rx2 = fleet.submit(req(3, 6)).unwrap(); // → shard 0, never starts
+        assert!(fleet.kill_shard(0));
+        // mid-step work on the victim sheds with the salvage summary…
+        match rx0.recv().unwrap() {
+            JobReply::Error(line) => {
+                assert!(line.contains("shard_failed"), "{line}");
+                assert!(line.contains("1 never-started job(s) salvaged"), "{line}");
+            }
+            JobReply::Done(..) => panic!("mid-step work must shed on a killed shard"),
+        }
+        // …while the never-started job completes on the survivor,
+        // byte-identical to an undisturbed single-shard run
+        let salvaged = recv_done(&rx2);
+        let survivor = recv_done(&rx1);
+        assert_eq!(survivor.nfes, 12);
+        let clean = fleet2_free_run(req(3, 6));
+        assert_eq!(salvaged.image, clean.image, "salvage leaked into the math");
+        assert_eq!(salvaged.nfes, clean.nfes);
+        // the survival ledger is visible in the merged stats (the counter
+        // lands just after re-placement, so poll briefly)
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let stats = fleet.stats_json().unwrap();
+            let tel = stats.req("telemetry");
+            if tel.req("counters").get("jobs_salvaged_total{shard=0}").and_then(Value::as_f64)
+                == Some(1.0)
+            {
+                assert_eq!(
+                    tel.req("counters").req("shard_died_total{shard=0}").as_f64(),
+                    Some(1.0)
+                );
+                break;
+            }
+            assert!(Instant::now() < deadline, "salvage counter never appeared");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        fleet.shutdown();
+    }
+
+    /// One clean single-shard completion of `r`, for golden comparison.
+    fn fleet2_free_run(r: Request) -> Box<crate::coordinator::request::Completion> {
+        let f = fleet(1, Placement::LeastLoaded);
+        let rx = f.submit(r).unwrap();
+        let done = recv_done(&rx);
+        f.shutdown();
+        done
+    }
+
+    #[test]
+    fn supervisor_respawns_a_killed_shard() {
+        use crate::chaos::fault::FaultPlan;
+        let plans = vec![Arc::new(FaultPlan::default())];
+        let fleet = faulty_fleet(
+            plans,
+            FleetConfig {
+                shards: 1,
+                respawn: true,
+                ..FleetConfig::default()
+            },
+        );
+        let first = recv_done(&fleet.submit(req(1, 6)).unwrap());
+        assert!(fleet.kill_shard(0));
+        // the supervisor brings the shard back within its backoff window
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !fleet.shard_alive(0) {
+            assert!(Instant::now() < deadline, "shard 0 never respawned");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // and the respawned shard serves byte-identical results
+        let again = recv_done(&fleet.submit(req(1, 6)).unwrap());
+        assert_eq!(again.image, first.image);
+        assert_eq!(again.nfes, first.nfes);
+        // the respawn counter lands just after the revive — poll briefly
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let stats = fleet.stats_json().unwrap();
+            let tel = stats.req("telemetry");
+            if tel
+                .req("counters")
+                .get("shard_respawned_total{shard=0}")
+                .and_then(Value::as_f64)
+                == Some(1.0)
+            {
+                // the death ledger survives the revive
+                assert_eq!(
+                    tel.req("counters").req("shard_died_total{shard=0}").as_f64(),
+                    Some(1.0)
+                );
+                assert_eq!(tel.req("gauges").req("fleet_shards_alive").as_f64(), Some(1.0));
+                break;
+            }
+            assert!(Instant::now() < deadline, "respawn counter never appeared");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn without_respawn_a_dead_shard_stays_dead() {
+        let fleet = fleet(2, Placement::RoundRobin);
+        assert!(fleet.kill_shard(0));
+        // killing is not instant — wait for the death to land
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while fleet.shard_alive(0) {
+            assert!(Instant::now() < deadline, "shard 0 never died");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        std::thread::sleep(Duration::from_millis(60)); // would cover a respawn backoff
+        assert!(!fleet.shard_alive(0), "respawn must be opt-in");
+        // the survivor keeps serving
+        let done = recv_done(&fleet.submit(req(1, 6)).unwrap());
+        assert_eq!(done.nfes, 12);
+        fleet.shutdown();
     }
 
     #[test]

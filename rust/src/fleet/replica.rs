@@ -19,16 +19,21 @@
 //! * **shutdown** — [`ShardMsg::Shutdown`] lets the loop return at the
 //!   next idle point, which is what makes fleet threads joinable.
 //!
-//! A fatal pump error (deterministic backend failure) runs the death path
-//! ([`die`]): the error line is logged *first* (so an operator sees why
-//! even if nothing scrapes metrics again), every in-flight job is refused
-//! with `"code": "shard_failed"` ([`ShardFailed`]), and the shard is
-//! marked dead in its [`ShardLoad`] (the router stops placing onto it;
-//! the fleet derives `shard_died_total{shard=}` from the flag) before the
-//! thread exits — the rest of the fleet keeps serving. The chaos
-//! harness's [`ShardMsg::Crash`] injection (`Fleet::kill_shard`, driven
-//! by [`crate::chaos`]) exercises the *same* path between batch steps,
-//! which is what finally runs this code instead of only reading it.
+//! A fatal pump error (a backend failure the engine's bounded retry
+//! could not absorb — see [`Engine::set_batch_retries`]) runs the death
+//! path ([`die`]): never-started jobs are salvaged back out of the
+//! engine and handed to the fleet supervisor for re-placement, the death
+//! line is logged (so an operator sees why even if nothing scrapes
+//! metrics again), every truly mid-flight job is refused with
+//! `"code": "shard_failed"` ([`ShardFailed`]), and the shard is marked
+//! dead in its [`ShardLoad`] (the router stops placing onto it; the
+//! death ticks the load's persistent ledger behind
+//! `shard_died_total{shard=}`) before the thread exits — the rest of the
+//! fleet keeps serving, and with `--shard-respawn` the supervisor brings
+//! this shard back. The chaos harness's [`ShardMsg::Crash`] injection
+//! (`Fleet::kill_shard`, driven by [`crate::chaos`]) exercises the
+//! *same* path between batch steps, which is what finally runs this code
+//! instead of only reading it.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
@@ -39,9 +44,10 @@ use crate::backend::Backend;
 use crate::coordinator::engine::Engine;
 use crate::coordinator::request::{Completion, Request};
 use crate::fleet::router::ShardLoad;
-use crate::fleet::{ScopedShed, ShardFailed};
+use crate::fleet::{ScopedShed, ShardFailed, SuperMsg};
 use crate::sched::{AdmitError, Telemetry};
 use crate::server::error_to_line;
+use crate::util::logev::log_event;
 
 /// A placed request travelling router → shard thread.
 pub struct Job {
@@ -138,6 +144,7 @@ pub(crate) fn run_replica<B: Backend>(
     rx: Receiver<ShardMsg>,
     load: Arc<ShardLoad>,
     shed_infeasible: bool,
+    super_tx: Sender<SuperMsg>,
 ) {
     // exported span batches carry this shard's id (§Observability)
     engine.set_shard(shard);
@@ -193,12 +200,11 @@ pub(crate) fn run_replica<B: Backend>(
         if crashed {
             die(
                 shard,
+                &mut engine,
                 &mut jobs,
                 &load,
-                anyhow::Error::new(ShardFailed {
-                    shard,
-                    reason: "injected chaos crash (kill-shard)".into(),
-                }),
+                &super_tx,
+                "injected chaos crash (kill-shard)".into(),
             );
             return;
         }
@@ -222,12 +228,11 @@ pub(crate) fn run_replica<B: Backend>(
             Err(e) => {
                 die(
                     shard,
+                    &mut engine,
                     &mut jobs,
                     &load,
-                    anyhow::Error::new(ShardFailed {
-                        shard,
-                        reason: format!("engine pump failed: {e:#}"),
-                    }),
+                    &super_tx,
+                    format!("engine pump failed: {e:#}"),
                 );
                 return;
             }
@@ -236,27 +241,66 @@ pub(crate) fn run_replica<B: Backend>(
 }
 
 /// The shard death path, shared by real pump failures and injected
-/// crashes. Ordering is deliberate: **log the error line first** (a dead
-/// shard's registry is never scraped again, so the log line is the one
-/// artifact guaranteed to survive), then refuse every in-flight job with
-/// the structured `shard_failed` line, then mark the load dead — which
-/// is the signal `{"cmd": "stats"}` turns into
-/// `shard_died_total{shard=}` and a decremented `fleet_shards_alive`.
-fn die(
+/// crashes. §Robustness ordering, deliberate:
+///
+/// 1. **salvage** — pull back every admitted request that never started
+///    executing ([`Engine::salvage_unstarted`]); re-placed on a survivor
+///    it restarts from step 0 with the same init noise, so its eventual
+///    completion is byte-identical to an undisturbed run;
+/// 2. **log the death line** (through [`log_event`], with the monotonic
+///    event stamp) — a dead shard's registry is never scraped again, so
+///    the log line is the one artifact guaranteed to survive, and it
+///    carries the salvage/refusal split an operator needs first;
+/// 3. **refuse** the truly mid-flight jobs with the structured
+///    `shard_failed` line (its message names how many jobs were salvaged
+///    instead of shed);
+/// 4. **mark the load dead** — placement skips the shard,
+///    `shard_died_total{shard=}` ticks its persistent ledger;
+/// 5. **notify the supervisor**, handing it the salvaged jobs (re-placed
+///    onto survivors) and, with `--shard-respawn`, triggering the
+///    rebuild.
+fn die<B: Backend>(
     shard: usize,
+    engine: &mut Engine<B>,
     jobs: &mut HashMap<u64, Pending>,
     load: &ShardLoad,
-    e: anyhow::Error,
+    super_tx: &Sender<SuperMsg>,
+    reason: String,
 ) {
+    let mut salvaged = Vec::new();
+    for req in engine.salvage_unstarted() {
+        if let Some(p) = jobs.remove(&req.id) {
+            let cost = req.policy.max_nfes(req.steps);
+            salvaged.push(Job {
+                req,
+                cost,
+                started: p.started,
+                reply: p.reply,
+            });
+        }
+    }
+    let e = anyhow::Error::new(ShardFailed {
+        shard,
+        reason: format!(
+            "{reason} ({} never-started job(s) salvaged to survivors)",
+            salvaged.len()
+        ),
+    });
     let line = error_to_line(&e);
-    log::error!(
-        "shard {shard}: fatal, marking dead ({} in-flight job(s) refused): {line}",
-        jobs.len()
+    log_event(
+        log::Level::Error,
+        &format!("shard-{shard}"),
+        &format!(
+            "fatal, marking dead ({} mid-flight job(s) refused, {} salvaged): {line}",
+            jobs.len(),
+            salvaged.len()
+        ),
     );
     for (_, job) in jobs.drain() {
         let _ = job.reply.send(JobReply::Error(line.clone()));
     }
     load.mark_dead();
+    let _ = super_tx.send(SuperMsg::Died { shard, salvaged });
 }
 
 #[allow(clippy::too_many_arguments)]

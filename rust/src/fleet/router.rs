@@ -23,7 +23,7 @@
 //! lane). Dead shards (backend construction failed, or a fatal pump
 //! error) are skipped by every discipline.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 /// How the fleet router picks a shard for each request
 /// (`agd serve --placement`).
@@ -86,6 +86,11 @@ pub struct ShardLoad {
     /// Set when the shard thread died (failed construction or fatal pump
     /// error); placement skips dead shards.
     dead: AtomicBool,
+    /// §Robustness: lifetime death count. `dead` is *state* (cleared by
+    /// [`ShardLoad::revive`] when the supervisor respawns the shard);
+    /// this is the monotonic *ledger* behind `shard_died_total`, so the
+    /// history survives a respawn.
+    died: AtomicU64,
 }
 
 impl ShardLoad {
@@ -110,14 +115,28 @@ impl ShardLoad {
     }
 
     /// Mark the shard dead (skipped by placement from now on) and zero its
-    /// published load so fleet totals stop counting it.
+    /// published load so fleet totals stop counting it. Counts one death
+    /// per alive→dead transition, however many callers race to report it.
     pub fn mark_dead(&self) {
-        self.dead.store(true, Ordering::Relaxed);
+        if !self.dead.swap(true, Ordering::Relaxed) {
+            self.died.fetch_add(1, Ordering::Relaxed);
+        }
         self.publish(0, 0);
+    }
+
+    /// §Robustness: the supervisor respawned this shard — make it
+    /// placeable again. The death ledger ([`ShardLoad::died`]) is kept.
+    pub fn revive(&self) {
+        self.dead.store(false, Ordering::Relaxed);
     }
 
     pub fn is_dead(&self) -> bool {
         self.dead.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime alive→dead transitions (survives [`ShardLoad::revive`]).
+    pub fn died(&self) -> u64 {
+        self.died.load(Ordering::Relaxed)
     }
 
     /// Live queued-NFE estimate: engine-published + router reservations.
@@ -272,6 +291,23 @@ mod tests {
         let fallback = r.place(&ls, Some("web-7")).unwrap();
         assert_ne!(fallback, home);
         assert_eq!(r.place(&ls, Some("web-7")), Some(fallback));
+    }
+
+    #[test]
+    fn revive_restores_placement_but_keeps_the_death_ledger() {
+        let ls = loads(2);
+        let mut r = Router::new(Placement::LeastLoaded);
+        ls[0].mark_dead();
+        ls[0].mark_dead(); // double-report: still one recorded death
+        assert_eq!(ls[0].died(), 1);
+        assert_eq!(r.place(&ls, None), Some(1));
+        ls[0].revive();
+        assert!(!ls[0].is_dead());
+        assert_eq!(ls[0].died(), 1, "revive must not erase the ledger");
+        assert_eq!(r.place(&ls, None), Some(0));
+        // a second crash counts again
+        ls[0].mark_dead();
+        assert_eq!(ls[0].died(), 2);
     }
 
     #[test]

@@ -96,6 +96,24 @@
 //! fleet (`rust/tests/chaos_integration.rs`). Faults shed with
 //! structured codes; survivors stay byte-identical to a clean run.
 //!
+//! ## The survival layer (§Robustness)
+//!
+//! Shedding is the last resort; absorbing comes first. Every serving
+//! shard's backend sits behind a fault-injectable wrapper
+//! ([`chaos::fault::FaultyBackend`], armed by `agd serve --fault-spec`
+//! or the director's `fault` op), and three mechanisms turn injected —
+//! or real — failures into completions instead of codes: **bounded
+//! batch retry** (`--max-batch-retries`: transient denoise failures
+//! roll the batch back and retry under seeded jittered backoff),
+//! **work salvage** (a dying shard hands its never-started requests
+//! back to the router for re-placement on survivors), and **supervised
+//! respawn** (`--shard-respawn`: dead shards are rebuilt from the same
+//! backend factory under capped exponential backoff). All three
+//! preserve the invariant: retried, salvaged, and post-respawn
+//! completions are byte-identical to a fault-free run. The failure
+//! taxonomy, error-code catalogue, fault-spec grammar, and scenario
+//! authoring guide live in `docs/ROBUSTNESS.md`.
+//!
 //! ## The observability layer (§Observability)
 //!
 //! Aggregate counters say *that* AG saves NFEs; the tracing layer

@@ -90,6 +90,10 @@ fn print_help() {
            --max-line-bytes N   refuse+close frames past N bytes (default 1 MiB)\n\
            --read-timeout-ms N  idle/slowloris connection cutoff (default 60000, 0 = off)\n\
            --trace-out FILE     append one JSONL record per served request\n\
+           --fault-spec SPEC    arm backend fault injection at startup, e.g.\n\
+                                error-every=50,stall-at=120:200 (docs/ROBUSTNESS.md)\n\
+           --max-batch-retries N  per-batch transient-fault retry budget (default 0)\n\
+           --shard-respawn      supervisor respawns dead shards (capped backoff)\n\
          replay:   --trace FILE (required; a --trace-out capture)\n\
            --addr HOST:PORT --speed X --connections N --timeout-ms N\n\
            --max-in-flight N    closed-loop: ignore the captured schedule,\n\
@@ -266,6 +270,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_line_bytes: args.usize("max-line-bytes", 1 << 20),
         read_timeout_ms: args.u64("read-timeout-ms", 60_000),
         trace_out: args.get("trace-out").map(str::to_owned),
+        // §Robustness: fault injection + retry + supervision
+        fault_spec: args.get("fault-spec").map(str::to_owned),
+        max_batch_retries: args.usize("max-batch-retries", 0),
+        shard_respawn: args.flag("shard-respawn"),
     };
     // named policy presets extend the registry before the first request —
     // a bad file is a startup error, not a first-request surprise
@@ -350,8 +358,26 @@ fn cmd_replay(args: &Args) -> Result<()> {
         "digests: {} checked, {} mismatched",
         outcome.digest_checked, outcome.digest_mismatches
     );
+    // §Robustness: scrape the fleet's survival counters post-run — how
+    // many batches were retried, jobs salvaged, shards died/respawned
+    // while the replay was being served. A failed scrape degrades to a
+    // report without the survival section (the server may already be
+    // gone); it never fails the replay itself.
+    let survival = match chaos::replay::fetch_survival(&cfg.addr, cfg.timeout_ms) {
+        Ok(s) => {
+            println!(
+                "survival: {} batch retries, {} jobs salvaged, {} shard deaths, {} respawns",
+                s.batch_retries, s.jobs_salvaged, s.shards_died, s.shards_respawned
+            );
+            Some(s)
+        }
+        Err(e) => {
+            eprintln!("stats scrape failed (report omits survival counters): {e:#}");
+            None
+        }
+    };
     let out = args.get_or("out", "BENCH_replay.json");
-    chaos::replay::write_report(out, &outcome, &cfg)?;
+    chaos::replay::write_report(out, &outcome, &cfg, survival.as_ref())?;
     // a digest divergence means the server did not serve what it served
     // at capture time — fail loudly so CI catches it
     anyhow::ensure!(

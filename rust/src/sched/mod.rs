@@ -42,8 +42,12 @@
 //!    caller's buffer in your order — keep any selection scratch on the
 //!    struct so steady-state pops allocate nothing (`tests/zero_alloc.rs`
 //!    pins this for the built-ins); `forget` drops per-request
-//!    bookkeeping. Be deterministic: break ties by `RequestMeta::id`,
-//!    never by map iteration order.
+//!    bookkeeping; `revoke` additionally removes the request's *queued*
+//!    items (§Robustness: the fleet's shard-death salvage pulls
+//!    never-started requests back — a queue-holding discipline that only
+//!    takes the default `revoke` would orphan their items). Be
+//!    deterministic: break ties by `RequestMeta::id`, never by map
+//!    iteration order.
 //! 3. Wire a name into [`SchedulerKind`] (parse/build/ALL) and it becomes
 //!    reachable from `agd serve --scheduler`, the bench harness, and
 //!    [`crate::Engine::with_scheduler`] callers.

@@ -91,6 +91,16 @@ pub trait Scheduler: fmt::Debug + Send {
     /// Drop per-request bookkeeping after the request completes.
     fn forget(&mut self, _state_idx: usize) {}
 
+    /// §Robustness: remove every *queued* item of `state_idx` and drop
+    /// its bookkeeping — the salvage path. Unlike [`Scheduler::forget`]
+    /// (called only after all of a request's items have been taken),
+    /// `revoke` fires while items may still be queued, so queue-holding
+    /// implementations must override it to actually drop them; the
+    /// default only forgets, which would orphan queued items.
+    fn revoke(&mut self, state_idx: usize) {
+        self.forget(state_idx);
+    }
+
     /// Pending item count.
     fn len(&self) -> usize;
 
@@ -189,6 +199,10 @@ impl Scheduler for Fifo {
         });
     }
 
+    fn revoke(&mut self, state_idx: usize) {
+        self.queue.retain(|it| it.state_idx != state_idx);
+    }
+
     fn len(&self) -> usize {
         self.queue.len()
     }
@@ -273,6 +287,11 @@ impl<K: Ord + Copy + fmt::Debug> Ranked<K> {
         self.keys.remove(&state_idx);
     }
 
+    fn revoke(&mut self, state_idx: usize) {
+        self.items.retain(|it| it.state_idx != state_idx);
+        self.keys.remove(&state_idx);
+    }
+
     fn len(&self) -> usize {
         self.items.len()
     }
@@ -310,6 +329,10 @@ impl Scheduler for CostAware {
 
     fn forget(&mut self, state_idx: usize) {
         self.inner.forget(state_idx);
+    }
+
+    fn revoke(&mut self, state_idx: usize) {
+        self.inner.revoke(state_idx);
     }
 
     fn len(&self) -> usize {
@@ -352,6 +375,10 @@ impl Scheduler for Deadline {
 
     fn forget(&mut self, state_idx: usize) {
         self.inner.forget(state_idx);
+    }
+
+    fn revoke(&mut self, state_idx: usize) {
+        self.inner.revoke(state_idx);
     }
 
     fn len(&self) -> usize {
@@ -428,10 +455,28 @@ impl Scheduler for FairShare {
         self.cursor = pos % n;
         // drained lanes stay for reuse (the rotation skips them) until the
         // lane count exceeds the cap; past it, prune and remap the cursor
+        self.prune_lanes();
+    }
+
+    fn revoke(&mut self, state_idx: usize) {
+        for (_, lane) in &mut self.lanes {
+            lane.retain(|it| it.state_idx != state_idx);
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.lanes.iter().map(|(_, lane)| lane.len()).sum()
+    }
+}
+
+impl FairShare {
+    /// Prune drained lanes once the lane count exceeds [`LANE_CAP`],
+    /// remapping the rotation cursor past the removals.
+    fn prune_lanes(&mut self) {
         if self.lanes.len() > LANE_CAP {
             let cursor_lane = self.cursor;
             let mut new_cursor = 0;
-            let mut kept = Vec::with_capacity(n);
+            let mut kept = Vec::with_capacity(self.lanes.len());
             for (i, lane) in std::mem::take(&mut self.lanes).into_iter().enumerate() {
                 if !lane.1.is_empty() {
                     if i < cursor_lane {
@@ -447,10 +492,6 @@ impl Scheduler for FairShare {
                 new_cursor % self.lanes.len()
             };
         }
-    }
-
-    fn len(&self) -> usize {
-        self.lanes.iter().map(|(_, lane)| lane.len()).sum()
     }
 }
 
@@ -617,6 +658,36 @@ mod tests {
             assert!(take(&mut s, "gmm", 4).is_empty());
             assert_eq!(s.len(), 0);
             s.forget(3); // unknown request: no-op, no panic
+            s.revoke(3); // same for the salvage path
+        }
+    }
+
+    /// §Robustness: `revoke` pulls *queued* items back out under every
+    /// discipline — unlike `forget`, which only drops bookkeeping. The
+    /// fleet's shard-death salvage depends on this: a revoked request
+    /// must leave no orphaned items that a later batch could take.
+    #[test]
+    fn revoke_removes_queued_items_under_every_discipline() {
+        for kind in SchedulerKind::ALL {
+            let mut s = kind.build();
+            for idx in 0..3usize {
+                let mut m = meta(idx as u64, if idx == 1 { "live" } else { "bulk" }, 10);
+                m.deadline_ms = Some(100 + idx as u64);
+                push_step(s.as_mut(), idx, &m);
+            }
+            assert_eq!(s.len(), 6, "{}", s.name());
+            s.revoke(1);
+            assert_eq!(s.len(), 4, "{}", s.name());
+            // the survivors drain normally and never include the revoked
+            // request (a Ranked orphan would panic in key_of here)
+            let batch = take(s.as_mut(), "gmm", 8);
+            assert_eq!(batch.len(), 4, "{}", s.name());
+            assert!(
+                batch.iter().all(|it| it.state_idx != 1),
+                "{}: revoked items resurfaced",
+                s.name()
+            );
+            assert!(s.is_empty(), "{}", s.name());
         }
     }
 }

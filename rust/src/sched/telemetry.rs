@@ -39,15 +39,25 @@
 //! robustness events are counted in a registry owned by the fleet
 //! front-end itself and folded into the same merge ([`crate::fleet`]):
 //!
-//! * `shard_died_total{shard=N}` — the shard's engine died (pump failure
-//!   or injected fault); derived from router liveness so it survives the
-//!   shard's own registry.
+//! * `shard_died_total{shard=N}` — lifetime shard deaths (pump failure
+//!   or injected fault); read from the router's persistent death ledger,
+//!   so it survives both the shard's own registry and a supervisor
+//!   respawn ([`crate::fleet::ShardLoad`]).
+//! * `shard_respawned_total{shard=N}` — supervisor rebuilds of a dead
+//!   shard (`--shard-respawn`).
+//! * `jobs_salvaged_total{shard=N}` — never-started jobs reclaimed from
+//!   dying shard N and re-placed on survivors.
 //! * `chaos_kill_shard_total{shard=N}` — fault injections delivered via
 //!   `Fleet::kill_shard` (the chaos harness, [`crate::chaos`]).
 //! * `conn_bad_line_total{kind=utf8|oversized}` — refused wire frames
 //!   (server hardening: non-UTF-8 lines, `--max-line-bytes` cap).
 //! * `conn_timeout_total{kind=idle|midline}` — connections cut off at
 //!   `--read-timeout-ms` (idle peers vs slowloris mid-line stalls).
+//!
+//! Engine-side survival counters ride the normal per-shard registries:
+//! `batch_retries_total{class=..}` and the `retry_backoff_ms` histogram
+//! (bounded batch retry, [`crate::coordinator::engine`]). The full
+//! failure taxonomy lives in `docs/ROBUSTNESS.md`.
 
 use std::collections::{BTreeMap, BTreeSet};
 

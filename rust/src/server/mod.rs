@@ -125,8 +125,31 @@
 //! Fault injection is scripted: `scenarios/*.txt` files (ops: `connect` ·
 //! `send` · `expect-ok` · `expect-code` · `expect-closed` · `send-raw` ·
 //! `send-raw-repeat` · `slowloris` · `disconnect` · `kill-shard` ·
-//! `drain` · `sleep`; grammar in [`crate::chaos::director`]) run against
-//! a live listener via [`serve_on`] in `rust/tests/chaos_integration.rs`.
+//! `fault` · `wait-respawn` · `drain` · `sleep`; grammar in
+//! [`crate::chaos::director`]) run against a live listener via
+//! [`serve_on`] in `rust/tests/chaos_integration.rs`.
+//!
+//! # §Robustness: surviving backend faults and shard deaths
+//!
+//! Three layers stand between an injected (or real) backend fault and a
+//! client-visible error (`docs/ROBUSTNESS.md` has the full taxonomy):
+//!
+//! * **Backend faults** — `agd serve --fault-spec SPEC` arms scheduled
+//!   faults inside every shard's denoise path
+//!   ([`crate::chaos::fault::FaultSpec`] grammar: `error-every=N`,
+//!   `error-at=K`, `stall-at=K:MS`, `fail-after=K`); the chaos
+//!   director's `fault` op re-arms the same plan on a live fleet.
+//! * **Engine retry** — `--max-batch-retries N` lets each shard retry a
+//!   transiently-failed batch after rolling it back (seeded
+//!   decorrelated-jitter backoff), so retried completions stay
+//!   byte-identical; fatal faults escalate immediately.
+//! * **Fleet salvage + respawn** — a dying shard hands its never-started
+//!   requests back to the router for re-placement on survivors (their
+//!   replies arrive as if nothing happened); mid-batch work is refused
+//!   with `"code": "shard_failed"`. With `--shard-respawn` a supervisor
+//!   thread rebuilds dead shards from the same backend factory under
+//!   capped exponential backoff, and the `wait-respawn` scenario op
+//!   blocks until the shard is placeable again.
 //!
 //! The `"policy"` field is a [`PolicySpec`]: either a bare registered name
 //! (`"linear-ag"`, `"compressed-cfg"`, a `--policy-file` alias, …) or an
@@ -168,6 +191,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::chaos::fault::{FaultPlan, FaultSpec, FaultyBackend};
 use crate::chaos::trace::{completion_digest, TraceSink};
 use crate::coordinator::request::{Completion, Request};
 use crate::coordinator::spec::{PolicyRegistry, PolicySpec, SpecError};
@@ -217,6 +241,22 @@ pub struct ServerConfig {
     /// Append one JSONL trace record per served request
     /// (`--trace-out FILE`; [`crate::chaos::trace`]).
     pub trace_out: Option<String>,
+    /// §Robustness: arm the fault-injection layer at startup
+    /// (`--fault-spec`, e.g. `"error-every=50,stall-at=120:200"`;
+    /// grammar in [`crate::chaos::fault::FaultSpec`] and
+    /// `docs/ROBUSTNESS.md`). Every shard backend is wrapped in a
+    /// [`crate::chaos::fault::FaultyBackend`] regardless — a disarmed
+    /// plan is free — so the chaos director's `fault` op can arm faults
+    /// at runtime even when this is `None`.
+    pub fault_spec: Option<String>,
+    /// §Robustness: per-batch transient-fault retry budget
+    /// (`--max-batch-retries`, default 0 = escalate immediately; the
+    /// pre-retry rollback makes retried completions byte-identical).
+    pub max_batch_retries: usize,
+    /// §Robustness: supervisor respawns dead shards with capped
+    /// exponential backoff (`--shard-respawn`; default off — a dead
+    /// shard stays dead and survivors absorb the load).
+    pub shard_respawn: bool,
 }
 
 impl Default for ServerConfig {
@@ -237,6 +277,9 @@ impl Default for ServerConfig {
             max_line_bytes: 1 << 20,
             read_timeout_ms: 60_000,
             trace_out: None,
+            fault_spec: None,
+            max_batch_retries: 0,
+            shard_respawn: false,
         }
     }
 }
@@ -244,9 +287,9 @@ impl Default for ServerConfig {
 impl ServerConfig {
     /// The fleet topology this config describes (the per-client quota
     /// travels with the shard budgets — it is enforced shard-side).
-    /// The fleet topology this config describes — public so harnesses
-    /// that drive [`serve_on`] directly (the chaos integration tests)
-    /// launch their [`Fleet`] with exactly the serving semantics.
+    /// Public so harnesses that drive [`serve_on`] directly (the chaos
+    /// integration tests) launch their [`Fleet`] with exactly the
+    /// serving semantics.
     pub fn fleet_config(&self) -> FleetConfig {
         FleetConfig {
             shards: self.shards.max(1),
@@ -264,6 +307,8 @@ impl ServerConfig {
             },
             workers: self.workers,
             shed_infeasible: self.shed_infeasible,
+            max_batch_retries: self.max_batch_retries,
+            respawn: self.shard_respawn,
         }
     }
 }
@@ -837,7 +882,22 @@ where
         cfg.shards.max(1),
         cfg.placement.name()
     );
-    let fleet = Arc::new(Fleet::launch(move |_shard| factory(), cfg.fleet_config()));
+    // §Robustness: every shard backend goes behind the fault-injection
+    // wrapper. A disarmed plan adds one relaxed atomic load per batch, so
+    // the wrapper is unconditional — which is what lets the chaos
+    // director arm faults on a *running* fleet (`fault error-every=50`)
+    // without a restart. `--fault-spec` merely pre-arms the same plan.
+    let plan = Arc::new(FaultPlan::default());
+    if let Some(spec) = &cfg.fault_spec {
+        let parsed = FaultSpec::parse(spec).map_err(|e| anyhow!("--fault-spec: {e}"))?;
+        plan.arm(parsed);
+    }
+    let shard_plan = plan.clone();
+    let fleet = Arc::new(Fleet::launch(
+        move |_shard| factory().map(|be| FaultyBackend::new(be, shard_plan.clone())),
+        cfg.fleet_config(),
+    ));
+    fleet.set_fault_plan(plan);
     serve_on(listener, fleet, cfg, registry)
 }
 
@@ -900,6 +960,23 @@ mod tests {
 
     fn parse(line: &str) -> Result<(Request, bool)> {
         parse_request_line(line, &cfg(), &reg())
+    }
+
+    #[test]
+    fn fleet_config_forwards_the_robustness_knobs() {
+        let scfg = ServerConfig {
+            max_batch_retries: 3,
+            shard_respawn: true,
+            ..cfg()
+        };
+        let fc = scfg.fleet_config();
+        assert_eq!(fc.max_batch_retries, 3);
+        assert!(fc.respawn);
+        // and the defaults keep both behaviours off — no retry, no
+        // respawn — so pre-existing deployments are unchanged
+        let fc = cfg().fleet_config();
+        assert_eq!(fc.max_batch_retries, 0);
+        assert!(!fc.respawn);
     }
 
     #[test]

@@ -1,0 +1,52 @@
+//! §Robustness: one formatting path for fleet lifecycle log lines.
+//!
+//! Shard deaths, salvage summaries and supervisor respawns are the log
+//! lines an operator greps first during an incident, so they share one
+//! helper instead of N ad-hoc `log::error!` call sites: every line gets
+//! the same `[+<ms>ms <component>]` prefix, where `<ms>` is a monotonic
+//! offset from the first event the process ever logged. Monotonic
+//! (not wall-clock) on purpose — the offsets order a crash/salvage/
+//! respawn cascade unambiguously even when the system clock steps, and
+//! two lines with the same offset are provably concurrent.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// The process-wide event epoch: stamped lazily by the first
+/// [`log_event`] call, so offset 0 is always the first lifecycle event,
+/// not process start (which no one correlates logs against).
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Milliseconds since the event epoch (monotonic, saturating).
+pub fn event_ms() -> u64 {
+    epoch().elapsed().as_millis() as u64
+}
+
+/// Emit one lifecycle event line through the `log` facade:
+/// `[+<ms>ms <component>] <message>`.
+///
+/// `component` names the emitter (`shard-3`, `supervisor`, `listener`);
+/// the message should state what happened and the numbers that matter
+/// (jobs refused, jobs salvaged, backoff chosen) — it is the artifact
+/// guaranteed to survive a death even when nothing scrapes metrics again.
+pub fn log_event(level: log::Level, component: &str, message: &str) {
+    log::log!(level, "[+{}ms {component}] {message}", event_ms());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_clock_is_monotonic() {
+        let a = event_ms();
+        let b = event_ms();
+        assert!(b >= a, "{b} < {a}");
+        // and the helper itself never panics on any component/message
+        log_event(log::Level::Info, "test", "hello");
+        log_event(log::Level::Error, "shard-0", "fatal: x (2 refused, 1 salvaged)");
+    }
+}

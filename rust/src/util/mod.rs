@@ -3,5 +3,6 @@
 
 pub mod cli;
 pub mod json;
+pub mod logev;
 pub mod ppm;
 pub mod rng;

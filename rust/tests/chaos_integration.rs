@@ -14,10 +14,12 @@ use std::sync::Arc;
 
 use adaptive_guidance::backend::GmmBackend;
 use adaptive_guidance::chaos::{
-    self, completion_digest, read_trace, reply_digest, Director, ReplayConfig,
+    self, completion_digest, read_trace, reply_digest, Director, FaultPlan, FaultSpec,
+    FaultyBackend, ReplayConfig,
 };
 use adaptive_guidance::coordinator::spec::PolicyRegistry;
 use adaptive_guidance::fleet::{Fleet, JobReply};
+use adaptive_guidance::sched::SchedulerKind;
 use adaptive_guidance::server::{parse_request_line, serve_on, ServerConfig};
 use adaptive_guidance::sim::gmm::Gmm;
 use adaptive_guidance::util::json;
@@ -44,10 +46,23 @@ fn spawn_chaos_server(mut scfg: ServerConfig) -> (std::net::SocketAddr, Arc<Flee
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     scfg.addr = addr.to_string();
+    // mirror serve_with_registry: every shard backend behind the fault
+    // wrapper, plan installed (disarmed unless the scenario arms it)
+    let plan = Arc::new(FaultPlan::default());
+    if let Some(spec) = &scfg.fault_spec {
+        plan.arm(FaultSpec::parse(spec).unwrap());
+    }
+    let shard_plan = plan.clone();
     let fleet = Arc::new(Fleet::launch(
-        |_shard| Ok(GmmBackend::new(chaos_gmm())),
+        move |_shard| {
+            Ok(FaultyBackend::new(
+                GmmBackend::new(chaos_gmm()),
+                shard_plan.clone(),
+            ))
+        },
         scfg.fleet_config(),
     ));
+    fleet.set_fault_plan(plan);
     let registry = Arc::new(PolicyRegistry::builtin());
     {
         let fleet = fleet.clone();
@@ -174,6 +189,100 @@ fn scenario_drain_under_load() {
     assert_survivors_match_clean(&d.replies, &scfg);
 }
 
+/// §Robustness: a transient-fault storm armed by the director is fully
+/// absorbed — every request completes (byte-identical to a clean run),
+/// no shard dies, and `fault clear` disarms the live plan.
+#[test]
+fn scenario_backend_fault_storm() {
+    let (addr, fleet, scfg) = spawn_chaos_server(ServerConfig {
+        max_batch_retries: 6,
+        ..base_cfg()
+    });
+    let mut d = Director::new(&fleet, addr);
+    d.run(&scenario("backend_fault_storm.txt")).unwrap();
+    let plan = fleet.fault_plan().unwrap();
+    assert!(plan.errors() > 0, "the storm never injected a fault");
+    assert!(!plan.armed(), "`fault clear` must disarm the live plan");
+    let m = fleet.metrics_prometheus().unwrap();
+    assert!(m.contains("batch_retries_total"), "{m}");
+    assert!(!m.contains("shard_died_total"), "{m}");
+    assert!(m.contains("fleet_shards_alive 2"), "{m}");
+    assert_survivors_match_clean(&d.replies, &scfg);
+}
+
+/// §Robustness: a killed shard comes back. Single-shard fleet with
+/// `--shard-respawn`: the post-respawn request can only be served by the
+/// rebuilt shard, and its completion matches a clean run byte for byte.
+#[test]
+fn scenario_shard_respawn() {
+    let (addr, fleet, scfg) = spawn_chaos_server(ServerConfig {
+        shards: 1,
+        shard_respawn: true,
+        ..base_cfg()
+    });
+    let mut d = Director::new(&fleet, addr);
+    d.run(&scenario("shard_respawn.txt")).unwrap();
+    let m = fleet.metrics_prometheus().unwrap();
+    assert!(m.contains(r#"shard_died_total{shard="0"} 1"#), "{m}");
+    assert!(m.contains(r#"shard_respawned_total{shard="0"} 1"#), "{m}");
+    assert!(m.contains("fleet_shards_alive 1"), "{m}");
+    assert_survivors_match_clean(&d.replies, &scfg);
+}
+
+/// §Robustness × §Sched: retried completions are byte-identical to a
+/// fault-free run under *every* scheduling discipline — the retry path
+/// (rollback, requeue, fresh take_batch) must not interact with any
+/// scheduler's ordering state.
+#[test]
+fn retried_completions_match_clean_under_every_scheduler() {
+    let lines: Vec<String> = (0..4)
+        .map(|i| {
+            format!(
+                r#"{{"prompt": "red circle", "policy": "ag", "steps": 8, "guidance": 2.0, "seed": {}, "image": true, "client_id": "c{}"}}"#,
+                30 + i,
+                i % 2
+            )
+        })
+        .collect();
+    for kind in SchedulerKind::ALL {
+        let scfg = ServerConfig {
+            scheduler: kind,
+            shards: 1,
+            max_batch_retries: 8,
+            ..base_cfg()
+        };
+        // armed from the start: every 3rd batch errors transiently
+        let plan = Arc::new(FaultPlan::default());
+        plan.arm(FaultSpec::parse("error-every=3").unwrap());
+        let shard_plan = plan.clone();
+        let fleet = Fleet::launch(
+            move |_shard| {
+                Ok(FaultyBackend::new(
+                    GmmBackend::new(chaos_gmm()),
+                    shard_plan.clone(),
+                ))
+            },
+            scfg.fleet_config(),
+        );
+        let registry = PolicyRegistry::builtin();
+        for line in &lines {
+            let (req, _) = parse_request_line(line, &scfg, &registry).unwrap();
+            let rx = fleet.submit(req).unwrap();
+            match rx.recv().unwrap() {
+                JobReply::Done(c, _) => assert_eq!(
+                    completion_digest(&c),
+                    clean_digest(line, &scfg),
+                    "{line} under {}",
+                    kind.name()
+                ),
+                JobReply::Error(l) => panic!("refused under {}: {l}", kind.name()),
+            }
+        }
+        assert!(plan.errors() > 0, "no fault fired under {}", kind.name());
+        fleet.shutdown();
+    }
+}
+
 /// The corpus itself stays parseable — a scenario that rots into a
 /// syntax error should fail here, not deep inside a director run.
 #[test]
@@ -191,7 +300,7 @@ fn scenario_corpus_parses() {
         assert!(!ops.is_empty(), "{} is empty", path.display());
         scripts += 1;
     }
-    assert!(scripts >= 5, "scenario corpus shrank to {scripts} scripts");
+    assert!(scripts >= 7, "scenario corpus shrank to {scripts} scripts");
 }
 
 /// Capture → replay round trip over real TCP:
@@ -267,8 +376,12 @@ fn capture_then_replay_round_trips_digests() {
     assert_eq!(outcome.digest_mismatches, 0);
     assert_eq!(outcome.latencies_ms.len(), outcome.completed);
 
-    // the report is the BENCH_replay.json the CLI writes
-    chaos::replay::write_report(report.to_str().unwrap(), &outcome, &cfg_b).unwrap();
+    // the report is the BENCH_replay.json the CLI writes — including the
+    // post-run survival scrape (all zero here: nothing was injected)
+    let survival = chaos::fetch_survival(&cfg_b.addr, 5_000).unwrap();
+    assert_eq!(survival, chaos::SurvivalCounters::default());
+    chaos::replay::write_report(report.to_str().unwrap(), &outcome, &cfg_b, Some(&survival))
+        .unwrap();
     let v = json::parse(&std::fs::read_to_string(&report).unwrap()).unwrap();
     let rows = v.req("benchmarks").as_arr().unwrap();
     assert_eq!(rows[0].req("name").as_str(), Some("replay_wire_latency"));
@@ -276,6 +389,8 @@ fn capture_then_replay_round_trips_digests() {
     let derived = v.req("derived");
     assert_eq!(derived.req("digest_mismatches").as_f64(), Some(0.0));
     assert_eq!(derived.req("completed").as_f64(), Some(captured.len() as f64));
+    assert_eq!(derived.req("survived_batch_retries").as_f64(), Some(0.0));
+    assert_eq!(derived.req("survived_shard_deaths").as_f64(), Some(0.0));
     let _ = std::fs::remove_file(&capture);
     let _ = std::fs::remove_file(&report);
 }

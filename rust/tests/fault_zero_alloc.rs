@@ -1,0 +1,132 @@
+//! §Robustness acceptance pin: the fault-injection wrapper is free when
+//! it is not firing. [`FaultyBackend`] sits on *every* serving shard's
+//! denoise path unconditionally (that is what lets the chaos director
+//! arm faults on a live fleet), so its steady-state cost must be zero
+//! heap allocations — both disarmed and armed-but-not-yet-firing, the
+//! wrapper is a handful of relaxed atomic ops per batch.
+//!
+//! Same shape as `zero_alloc.rs`: a counting global allocator over
+//! `System`, exactly one `#[test]` so nothing else allocates inside the
+//! measurement window, warmup pumps to capacity, then a measured window
+//! asserting zero allocations.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use adaptive_guidance::backend::GmmBackend;
+use adaptive_guidance::chaos::fault::{FaultPlan, FaultSpec, FaultyBackend};
+use adaptive_guidance::coordinator::engine::Engine;
+use adaptive_guidance::coordinator::policy::{ag, cfg};
+use adaptive_guidance::coordinator::request::Request;
+use adaptive_guidance::sched::{Admission, SchedulerKind};
+use adaptive_guidance::sim::gmm::Gmm;
+
+struct CountingAlloc;
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+const STEPS: usize = 48;
+const WARMUP_PUMPS: usize = 16;
+const MEASURED_PUMPS: usize = 16;
+
+#[test]
+fn faulty_backend_pump_is_allocation_free_when_not_firing() {
+    // disarmed, then armed with a schedule that cannot fire inside the
+    // window — the armed check path (counter bump + comparisons) must be
+    // as free as the disarmed one
+    let plans = [
+        Arc::new(FaultPlan::default()),
+        {
+            let p = Arc::new(FaultPlan::default());
+            p.arm(FaultSpec::parse("error-every=1000000").expect("spec"));
+            p
+        },
+    ];
+    for plan in plans {
+        let armed = plan.armed();
+        let be = FaultyBackend::new(GmmBackend::new(Gmm::axes(16, 4, 3.0, 0.05)), plan.clone());
+        let mut e = Engine::with_scheduler(
+            be,
+            SchedulerKind::Fifo.build(),
+            Admission::unlimited(),
+        )
+        .expect("engine over the wrapped GMM oracle");
+        for i in 0..8u64 {
+            let policy = if i % 2 == 0 { cfg(2.0) } else { ag(2.0, 0.99) };
+            let r = Request::new(
+                i,
+                "gmm",
+                vec![1 + (i % 4) as i32, 0, 0, 0],
+                900 + i,
+                STEPS,
+                policy,
+            );
+            e.submit(r);
+        }
+
+        let mut done = 0usize;
+        for _ in 0..WARMUP_PUMPS {
+            done += e.pump().expect("warmup pump").len();
+        }
+        assert_eq!(done, 0, "warmup completed requests (armed={armed})");
+
+        ALLOCS.store(0, Ordering::SeqCst);
+        COUNTING.store(true, Ordering::SeqCst);
+        let mut completed = 0usize;
+        for _ in 0..MEASURED_PUMPS {
+            completed += e.pump().expect("steady-state pump").len();
+        }
+        COUNTING.store(false, Ordering::SeqCst);
+        let allocs = ALLOCS.load(Ordering::SeqCst);
+
+        assert_eq!(
+            completed, 0,
+            "measurement window must stay mid-flight (armed={armed})"
+        );
+        assert_eq!(
+            allocs, 0,
+            "FaultyBackend pump() allocated {allocs} time(s) at steady state \
+             (armed={armed}) — the wrapper must stay a few relaxed atomics \
+             per batch when no fault fires"
+        );
+
+        // the wrapper saw every batch and injected nothing
+        assert!(plan.errors() == 0 && plan.stalls() == 0 && plan.fatals() == 0);
+
+        // and the workload still drains to correct completions
+        let out = e.drain().expect("drain");
+        assert_eq!(out.len(), 8, "armed={armed}");
+    }
+}

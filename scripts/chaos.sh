@@ -50,4 +50,27 @@ done
 kill "$server_pid" 2>/dev/null || true
 wait "$server_pid" 2>/dev/null || true
 server_pid=""
-echo "chaos: OK (wrote BENCH_replay.json)"
+
+# survival leg (§Robustness): the same capture against a fleet taking
+# scheduled backend faults, with batch retries and shard respawn armed.
+# Every digest must STILL match — faults the fleet absorbs change when
+# work runs, never its bytes — and the final BENCH_replay.json carries
+# the survived_* counters scraped from {"cmd": "stats"} post-run.
+"$agd" serve --backend gmm --shards 2 --addr "$addr" \
+    --fault-spec error-every=3 --max-batch-retries 6 --shard-respawn &
+server_pid=$!
+for _ in $(seq 1 100); do
+    if (exec 3<>"/dev/tcp/127.0.0.1/${port}") 2>/dev/null; then
+        exec 3>&- 3<&-
+        break
+    fi
+    sleep 0.1
+done
+"$agd" replay --trace "$capture" --addr "$addr" \
+    --speed 20 --connections 4 --out BENCH_replay.json
+grep -q "survived_batch_retries" BENCH_replay.json
+
+kill "$server_pid" 2>/dev/null || true
+wait "$server_pid" 2>/dev/null || true
+server_pid=""
+echo "chaos: OK (wrote BENCH_replay.json, survival counters included)"

@@ -17,8 +17,14 @@ cargo test -q
 # placements) is the scale-out safety net — run its suite explicitly so a
 # filtered/partial `cargo test` configuration can never silently skip it
 cargo test -q --test fleet_integration
+# the fault wrapper must stay free when not firing: it sits on every
+# serving shard's denoise path unconditionally, so a regression here is
+# a per-batch allocation tax on every deployment
+cargo test -q --test fault_zero_alloc
 # the robustness invariant (faults change who is served, never what):
-# scenario corpus + capture->replay digest check against a live server
+# scenario corpus (incl. backend_fault_storm + shard_respawn) +
+# capture->replay digest check, then the same replay against a fleet
+# taking scheduled faults with retries/respawn armed
 scripts/chaos.sh
 # the observability loop (§Observability): a traced request echoes its
 # lifecycle timeline, {"cmd": "spans"} drains the rings, and
