@@ -18,15 +18,25 @@
 //!   error-at=K         batch K fails (transient)
 //!   stall-at=K:M       batch K sleeps M ms, then executes normally
 //!   fail-after=K       every batch past K fails (fatal, permanent)
+//!   error-p=P[:seed=S] each batch fails with probability P (transient,
+//!                      seeded — the same (seed, shard, batch) triple
+//!                      always decides the same way, so probabilistic
+//!                      chaos runs still reproduce exactly)
 //! ```
+//!
+//! A whole spec may be prefixed with `shard=I:` (e.g.
+//! `shard=1:error-every=3`) to target one shard: wrappers constructed
+//! with [`FaultyBackend::with_shard`] pass every batch through untouched
+//! unless their shard index matches. Untargeted specs arm every shard
+//! identically, the historical behaviour.
 //!
 //! Clauses combine with commas (`error-every=3,stall-at=5:200`). Checks
 //! run in severity order: fail-after (fatal) → stall → error-at →
-//! error-every. Because plans live behind an `Arc` and every field is
-//! atomic, the director can re-arm or clear a plan *while shards are
-//! executing* without a lock — and the per-shard batch counter lives on
-//! the wrapper (not the plan), so each shard sees the same deterministic
-//! schedule regardless of how the fleet interleaves.
+//! error-every → error-p. Because plans live behind an `Arc` and every
+//! field is atomic, the director can re-arm or clear a plan *while shards
+//! are executing* without a lock — and the per-shard batch counter lives
+//! on the wrapper (not the plan), so each shard sees the same
+//! deterministic schedule regardless of how the fleet interleaves.
 //!
 //! Injected failures are typed ([`BackendFault`], carrying a
 //! [`FaultClass`]): the engine's bounded-retry loop (`--max-batch-retries`)
@@ -38,8 +48,8 @@
 //!
 //! §Perf: the unarmed (all-zero) plan is the production configuration —
 //! `serve` always wraps the backend so the director can arm faults later.
-//! The pass-through check is five relaxed atomic loads and no allocation,
-//! pinned by `rust/tests/fault_zero_alloc.rs`.
+//! The pass-through check is a handful of relaxed atomic loads and no
+//! allocation, pinned by `rust/tests/fault_zero_alloc.rs`.
 
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -78,7 +88,8 @@ impl FaultClass {
 #[derive(Debug, Clone)]
 pub struct BackendFault {
     pub class: FaultClass,
-    /// Which trigger fired: `error-every` | `error-at` | `fail-after`.
+    /// Which trigger fired: `error-every` | `error-at` | `fail-after` |
+    /// `error-p`.
     pub kind: &'static str,
     /// 1-based batch number (on the injecting wrapper) that tripped.
     pub batch: u64,
@@ -109,8 +120,8 @@ pub fn classify(e: &anyhow::Error) -> FaultClass {
 
 /// A parsed fault schedule (see the grammar in the module docs). `0`
 /// disables a trigger — batch numbers are 1-based precisely so the
-/// all-zero default means "no faults".
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+/// all-zero default means "no faults". (No `Eq`: `error_p` is an `f64`.)
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct FaultSpec {
     /// Every Nth batch errors (transient); 0 = off.
     pub error_every: u64,
@@ -122,6 +133,13 @@ pub struct FaultSpec {
     pub stall_ms: u64,
     /// Every batch past K errors (fatal); 0 = off.
     pub fail_after: u64,
+    /// Each batch errors with this probability (transient, seeded);
+    /// 0.0 = off.
+    pub error_p: f64,
+    /// Seed for the `error-p` decision hash (`:seed=S`; default 0).
+    pub error_p_seed: u64,
+    /// Target one shard (`shard=I:` prefix); `None` = every shard.
+    pub shard: Option<usize>,
 }
 
 impl FaultSpec {
@@ -130,6 +148,19 @@ impl FaultSpec {
     /// must fail the run loudly, not silently inject nothing.
     pub fn parse(text: &str) -> Result<FaultSpec, String> {
         let mut spec = FaultSpec::default();
+        // a whole-spec `shard=I:` prefix targets one shard's wrapper
+        let mut text = text.trim();
+        if let Some(rest) = text.strip_prefix("shard=") {
+            let Some((idx, tail)) = rest.split_once(':') else {
+                return Err(format!(
+                    "fault spec `shard=` prefix wants shard=I:CLAUSES, got `{text}`"
+                ));
+            };
+            spec.shard = Some(idx.trim().parse::<usize>().map_err(|_| {
+                format!("fault spec shard index `{}` is not a number", idx.trim())
+            })?);
+            text = tail;
+        }
         for clause in text.split(',') {
             let clause = clause.trim();
             if clause.is_empty() {
@@ -138,7 +169,8 @@ impl FaultSpec {
             let Some((key, val)) = clause.split_once('=') else {
                 return Err(format!(
                     "fault clause `{clause}` is not key=value (valid: \
-                     error-every=N, error-at=K, stall-at=K:M, fail-after=K)"
+                     error-every=N, error-at=K, stall-at=K:M, fail-after=K, \
+                     error-p=P[:seed=S])"
                 ));
             };
             let num = |v: &str| {
@@ -158,10 +190,33 @@ impl FaultSpec {
                     spec.stall_at = num(k)?;
                     spec.stall_ms = num(ms)?;
                 }
+                "error-p" => {
+                    let (p, seed) = match val.split_once(':') {
+                        Some((p, rest)) => {
+                            let Some(s) = rest.strip_prefix("seed=") else {
+                                return Err(format!(
+                                    "fault clause `error-p` wants P or P:seed=S, got `{val}`"
+                                ));
+                            };
+                            (p, num(s)?)
+                        }
+                        None => (val, 0),
+                    };
+                    let p: f64 = p.parse().map_err(|_| {
+                        format!("fault clause `error-p`: `{p}` is not a probability")
+                    })?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!(
+                            "fault clause `error-p`: `{p}` is not in [0, 1]"
+                        ));
+                    }
+                    spec.error_p = p;
+                    spec.error_p_seed = seed;
+                }
                 other => {
                     return Err(format!(
                         "unknown fault clause `{other}` (valid: error-every=N, \
-                         error-at=K, stall-at=K:M, fail-after=K)"
+                         error-at=K, stall-at=K:M, fail-after=K, error-p=P[:seed=S])"
                     ));
                 }
             }
@@ -186,6 +241,13 @@ pub struct FaultPlan {
     stall_at: AtomicU64,
     stall_ms: AtomicU64,
     fail_after: AtomicU64,
+    /// `error-p` probability as `f64::to_bits` (0 = off — `0.0f64`
+    /// to-bits is exactly 0, so the all-zero default stays "no faults").
+    error_p_bits: AtomicU64,
+    error_p_seed: AtomicU64,
+    /// Targeted shard + 1 (`shard=I:` prefix); 0 = every shard. The +1
+    /// encoding keeps the all-zero derived default meaning "untargeted".
+    target_shard: AtomicU64,
     injected_errors: AtomicU64,
     injected_stalls: AtomicU64,
     injected_fatals: AtomicU64,
@@ -200,6 +262,14 @@ impl FaultPlan {
         self.stall_at.store(spec.stall_at, Ordering::Relaxed);
         self.stall_ms.store(spec.stall_ms, Ordering::Relaxed);
         self.fail_after.store(spec.fail_after, Ordering::Relaxed);
+        self.error_p_bits
+            .store(spec.error_p.to_bits(), Ordering::Relaxed);
+        self.error_p_seed
+            .store(spec.error_p_seed, Ordering::Relaxed);
+        self.target_shard.store(
+            spec.shard.map(|s| s as u64 + 1).unwrap_or(0),
+            Ordering::Relaxed,
+        );
     }
 
     /// Disarm every trigger (the director's `fault clear`).
@@ -213,6 +283,7 @@ impl FaultPlan {
             || self.error_at.load(Ordering::Relaxed) != 0
             || self.stall_at.load(Ordering::Relaxed) != 0
             || self.fail_after.load(Ordering::Relaxed) != 0
+            || self.error_p_bits.load(Ordering::Relaxed) != 0
     }
 
     /// Transient errors injected so far (all wrappers sharing this plan).
@@ -239,14 +310,26 @@ pub struct FaultyBackend<B: Backend> {
     plan: Arc<FaultPlan>,
     /// Batches this wrapper has been asked to execute (1-based in checks).
     batches: u64,
+    /// This wrapper's shard index: `shard=I:` specs fire only where it
+    /// matches, and it salts the `error-p` decision hash so shards
+    /// decorrelate under one shared plan.
+    shard: u64,
 }
 
 impl<B: Backend> FaultyBackend<B> {
     pub fn new(inner: B, plan: Arc<FaultPlan>) -> FaultyBackend<B> {
+        FaultyBackend::with_shard(inner, plan, 0)
+    }
+
+    /// A wrapper that knows which shard it serves — what the fleet
+    /// installs, so `shard=I:` targeting and per-shard `error-p` salting
+    /// work. [`FaultyBackend::new`] is shard 0 (the single-engine case).
+    pub fn with_shard(inner: B, plan: Arc<FaultPlan>, shard: u64) -> FaultyBackend<B> {
         FaultyBackend {
             inner,
             plan,
             batches: 0,
+            shard,
         }
     }
 
@@ -266,6 +349,13 @@ impl<B: Backend> FaultyBackend<B> {
     fn check(&mut self) -> Result<()> {
         self.batches += 1;
         let n = self.batches;
+        // `shard=I:` targeting: a plan aimed elsewhere is transparent
+        // here (the batch still counts — the schedule is positional on
+        // *this* wrapper, matching the untargeted semantics)
+        let target = self.plan.target_shard.load(Ordering::Relaxed);
+        if target != 0 && target != self.shard + 1 {
+            return Ok(());
+        }
         let fail_after = self.plan.fail_after.load(Ordering::Relaxed);
         if fail_after != 0 && n > fail_after {
             self.plan.injected_fatals.fetch_add(1, Ordering::Relaxed);
@@ -299,8 +389,37 @@ impl<B: Backend> FaultyBackend<B> {
                 batch: n,
             }));
         }
+        let p_bits = self.plan.error_p_bits.load(Ordering::Relaxed);
+        if p_bits != 0 {
+            let p = f64::from_bits(p_bits);
+            let seed = self.plan.error_p_seed.load(Ordering::Relaxed);
+            if decide(seed, self.shard, n) < p {
+                self.plan.injected_errors.fetch_add(1, Ordering::Relaxed);
+                return Err(anyhow::Error::new(BackendFault {
+                    class: FaultClass::Transient,
+                    kind: "error-p",
+                    batch: n,
+                }));
+            }
+        }
         Ok(())
     }
+}
+
+/// The `error-p` decision hash: a stateless splitmix64 finalizer over the
+/// (seed, shard, batch) triple, mapped to a uniform in [0, 1). Stateless
+/// on purpose — re-arming the plan mid-run cannot shift which batches
+/// fail, and every wrapper sharing a plan decides independently per
+/// (shard, batch) without any cross-thread RNG state.
+fn decide(seed: u64, shard: u64, batch: u64) -> f64 {
+    let mut z = seed
+        ^ shard.wrapping_mul(0xD1B5_4A32_D192_ED03)
+        ^ batch.wrapping_mul(0x2545_F491_4F6C_DD1D);
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    let h = z ^ (z >> 31);
+    (h >> 11) as f64 / (1u64 << 53) as f64
 }
 
 impl<B: Backend> Backend for FaultyBackend<B> {
@@ -419,11 +538,22 @@ mod tests {
                 stall_at: 5,
                 stall_ms: 200,
                 fail_after: 40,
+                ..FaultSpec::default()
             }
         );
         // whitespace and empty clauses are tolerated; empty spec = clear
         assert!(FaultSpec::parse("").unwrap().is_clear());
         assert_eq!(FaultSpec::parse(" error-at=2 , ").unwrap().error_at, 2);
+        // the shard prefix and the probabilistic clause
+        let spec = FaultSpec::parse("shard=1:error-every=3,error-p=0.05:seed=42").unwrap();
+        assert_eq!(spec.shard, Some(1));
+        assert_eq!(spec.error_every, 3);
+        assert_eq!(spec.error_p, 0.05);
+        assert_eq!(spec.error_p_seed, 42);
+        // seed is optional (defaults to 0); a bare probability parses
+        let spec = FaultSpec::parse("error-p=1").unwrap();
+        assert_eq!((spec.error_p, spec.error_p_seed), (1.0, 0));
+        assert!(!spec.is_clear(), "an armed error-p is not a clear spec");
     }
 
     #[test]
@@ -432,6 +562,71 @@ mod tests {
             let err = FaultSpec::parse(bad).unwrap_err();
             assert!(err.contains("fault clause") || err.contains("unknown"), "{bad}: {err}");
         }
+        // new-grammar garbage is named just as loudly
+        for bad in [
+            "shard=x:error-at=1",
+            "shard=2",
+            "error-p=1.5",
+            "error-p=-0.1",
+            "error-p=nope",
+            "error-p=0.1:sneed=3",
+        ] {
+            let err = FaultSpec::parse(bad).unwrap_err();
+            assert!(
+                err.contains("fault clause") || err.contains("fault spec"),
+                "{bad}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn shard_prefix_targets_one_wrapper() {
+        let plan = Arc::new(FaultPlan::default());
+        plan.arm(FaultSpec::parse("shard=1:error-every=1").unwrap());
+        let mut be0 = FaultyBackend::with_shard(gmm(), plan.clone(), 0);
+        let mut be1 = FaultyBackend::with_shard(gmm(), plan.clone(), 1);
+        for _ in 0..4 {
+            run_batch(&mut be0).expect("shard 0 is not the target");
+            run_batch(&mut be1).unwrap_err();
+        }
+        assert_eq!(be0.inner().calls, 4);
+        assert_eq!(be1.inner().calls, 0);
+        assert_eq!(plan.errors(), 4, "only the targeted wrapper injects");
+        // re-arming untargeted hits every wrapper again — and the
+        // bystander's batch counter kept advancing while it was exempt,
+        // so positional triggers stay aligned with batches *seen*
+        plan.arm(FaultSpec::parse("error-at=5").unwrap());
+        run_batch(&mut be0).unwrap_err();
+        assert_eq!(be0.batches_seen(), 5);
+    }
+
+    #[test]
+    fn error_p_is_seed_deterministic() {
+        let outcomes = |seed: u64, shard: u64| {
+            let plan = Arc::new(FaultPlan::default());
+            plan.arm(FaultSpec {
+                error_p: 0.5,
+                error_p_seed: seed,
+                ..FaultSpec::default()
+            });
+            let mut be = FaultyBackend::with_shard(gmm(), plan, shard);
+            (0..32).map(|_| run_batch(&mut be).is_ok()).collect::<Vec<_>>()
+        };
+        // same (seed, shard) → identical schedule; either axis decorrelates
+        assert_eq!(outcomes(42, 0), outcomes(42, 0));
+        assert_ne!(outcomes(42, 0), outcomes(43, 0), "seed must matter");
+        assert_ne!(outcomes(42, 0), outcomes(42, 1), "shard must salt");
+        // p=0.5 over 32 draws: both outcomes occur (vanishing odds otherwise)
+        let o = outcomes(42, 0);
+        assert!(o.iter().any(|&ok| ok) && o.iter().any(|&ok| !ok), "{o:?}");
+        // p=1 always fires and classifies transient with the right kind
+        let plan = Arc::new(FaultPlan::default());
+        plan.arm(FaultSpec::parse("error-p=1:seed=7").unwrap());
+        let mut be = FaultyBackend::new(gmm(), plan.clone());
+        let err = run_batch(&mut be).unwrap_err();
+        assert_eq!(classify(&err), FaultClass::Transient);
+        assert_eq!(err.downcast_ref::<BackendFault>().unwrap().kind, "error-p");
+        assert!(plan.armed());
     }
 
     #[test]

@@ -124,6 +124,9 @@ pub struct SurvivalCounters {
     /// `jobs_salvaged_total` — never-started jobs re-placed off dying
     /// shards.
     pub jobs_salvaged: u64,
+    /// `jobs_resumed_total` — checkpointed mid-flight jobs resumed on
+    /// survivors (`--checkpoint-steps`).
+    pub jobs_resumed: u64,
     /// `shard_died_total` — lifetime shard deaths (persistent ledger;
     /// survives respawn).
     pub shards_died: u64,
@@ -186,6 +189,7 @@ pub fn fetch_survival(addr: &str, timeout_ms: u64) -> Result<SurvivalCounters> {
     Ok(SurvivalCounters {
         batch_retries: sum_counter(counters, "batch_retries_total"),
         jobs_salvaged: sum_counter(counters, "jobs_salvaged_total"),
+        jobs_resumed: sum_counter(counters, "jobs_resumed_total"),
         shards_died: sum_counter(counters, "shard_died_total"),
         shards_respawned: sum_counter(counters, "shard_respawned_total"),
     })
@@ -418,6 +422,7 @@ pub fn report_json(
     if let Some(s) = survival {
         derived.push(("survived_batch_retries".into(), s.batch_retries as f64));
         derived.push(("survived_jobs_salvaged".into(), s.jobs_salvaged as f64));
+        derived.push(("survived_jobs_resumed".into(), s.jobs_resumed as f64));
         derived.push(("survived_shard_deaths".into(), s.shards_died as f64));
         derived.push((
             "survived_shard_respawns".into(),
@@ -622,6 +627,7 @@ mod tests {
         let s = SurvivalCounters {
             batch_retries: 3,
             jobs_salvaged: 2,
+            jobs_resumed: 4,
             shards_died: 1,
             shards_respawned: 1,
         };
@@ -629,6 +635,7 @@ mod tests {
         let d2 = d2.req("derived");
         assert_eq!(d2.req("survived_batch_retries").as_f64(), Some(3.0));
         assert_eq!(d2.req("survived_jobs_salvaged").as_f64(), Some(2.0));
+        assert_eq!(d2.req("survived_jobs_resumed").as_f64(), Some(4.0));
         assert_eq!(d2.req("survived_shard_deaths").as_f64(), Some(1.0));
         assert_eq!(d2.req("survived_shard_respawns").as_f64(), Some(1.0));
     }
@@ -685,6 +692,7 @@ mod tests {
             SurvivalCounters {
                 batch_retries: 5,
                 jobs_salvaged: 2,
+                jobs_resumed: 0,
                 shards_died: 1,
                 shards_respawned: 1,
             }

@@ -1,0 +1,476 @@
+//! §Robustness: per-request solver-state checkpoints.
+//!
+//! A denoising trajectory under a deterministic guidance policy is a pure
+//! function of (initial noise, step index, policy state): randomness enters
+//! exactly once, at x_T. That makes a mid-flight request resumable from a
+//! compact snapshot — the latents, the solver cursor (step index), the
+//! policy's per-request state and the cumulative accounting — without any
+//! RNG state, and with the byte-identical-output invariant intact: a
+//! request killed mid-trajectory and resumed on a survivor completes with
+//! exactly the bytes a fault-free run would have produced.
+//!
+//! Two pieces live here:
+//!
+//! * [`RequestCheckpoint`] — the snapshot itself, plus a versioned
+//!   little-endian wire form ([`RequestCheckpoint::to_bytes`] /
+//!   [`RequestCheckpoint::from_bytes`]) so a checkpoint can cross any
+//!   boundary that can carry bytes. In-process salvage moves the struct
+//!   itself (swap-don't-copy); the wire form is for durability layers and
+//!   the round-trip tests.
+//! * [`CheckpointStore`] — the engine's per-slot store. One preallocated
+//!   checkpoint per admission slot, written in place after completed steps
+//!   ([`CheckpointStore::begin_write`]) and handed out whole at salvage
+//!   ([`CheckpointStore::take`]).
+//!
+//! # §Perf: staying off the allocation hot path
+//!
+//! Buffers are sized once, at admission ([`CheckpointStore::register`]):
+//! latents reserve `flat_out`, the per-step histories reserve `steps`.
+//! The per-step capture ([`crate::coordinator::request::RequestState::save_checkpoint`])
+//! then runs `clear()` + `extend_from_slice` into that reserved capacity —
+//! zero allocations in steady state, pinned by
+//! `rust/tests/ckpt_zero_alloc.rs`. The only captures that allocate are the
+//! ones that must retain per-step tensors (LINEARAG history, recorded
+//! trajectories/iterates) — the same paths that already allocate per step
+//! in the request state machine itself.
+
+/// A resumable snapshot of one in-flight request, taken at a step boundary
+/// (all of the step's evaluations combined, the solver advanced, the next
+/// step not yet executed). The [`crate::coordinator::request::Request`]
+/// itself — tokens, seed, policy, shapes — travels alongside the
+/// checkpoint through the salvage path; this struct only carries what the
+/// trajectory has *accumulated*.
+#[derive(Debug, Clone, Default)]
+pub struct RequestCheckpoint {
+    /// id of the request this snapshot belongs to (stale-slot guard)
+    pub id: u64,
+    /// completed denoising steps — the rng-free solver cursor; resume
+    /// re-enters the scheduler exactly here
+    pub step: usize,
+    /// cumulative model evaluations spent through `step`
+    pub nfes: usize,
+    /// cumulative guided (two-stream) steps through `step`
+    pub cfg_steps: usize,
+    /// [`crate::coordinator::policy::PolicyState`] — truncation flag
+    pub truncated: bool,
+    /// step at which the policy's truncation rule fired
+    pub truncated_at: Option<usize>,
+    /// guided-step counter from the policy state
+    pub guided_steps: usize,
+    /// current latents x_t
+    pub x: Vec<f32>,
+    /// last data prediction x0 (the solver's in-place companion buffer)
+    pub x0_prev: Vec<f32>,
+    /// canonical per-step gamma history (x0-cosine form)
+    pub gammas: Vec<f64>,
+    /// policy-private scratch values
+    pub scratch: Vec<f64>,
+    /// per-step gamma history (raw-eps cosine form)
+    pub gammas_eps: Vec<f64>,
+    /// retained conditional scores (LINEARAG / `record_trajectory`)
+    pub hist_c: Vec<Vec<f32>>,
+    /// retained unconditional / extrapolated scores
+    pub hist_u: Vec<Vec<f32>>,
+    /// per-step data predictions (`record_iterates`)
+    pub iterates: Vec<Vec<f32>>,
+}
+
+/// Wire-format version byte; bump on any layout change so a stale blob
+/// fails loudly instead of deserializing garbage.
+const CKPT_VERSION: u8 = 1;
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    put_u64(out, v.len() as u64);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_f64s(out: &mut Vec<u8>, v: &[f64]) {
+    put_u64(out, v.len() as u64);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_nested(out: &mut Vec<u8>, v: &[Vec<f32>]) {
+    put_u64(out, v.len() as u64);
+    for row in v {
+        put_f32s(out, row);
+    }
+}
+
+/// Bounded little-endian reader over a checkpoint blob; every read is
+/// length-checked so truncated input is an error, never a panic.
+struct Reader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn u64(&mut self) -> Result<u64, String> {
+        let end = self.at.checked_add(8).filter(|&e| e <= self.buf.len());
+        let end = end.ok_or("checkpoint blob truncated")?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&self.buf[self.at..end]);
+        self.at = end;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn len(&mut self, elem: usize) -> Result<usize, String> {
+        let n = self.u64()? as usize;
+        // cap by what the buffer could possibly hold, so a corrupt length
+        // cannot drive a huge allocation before the bounds check trips
+        if n.saturating_mul(elem) > self.buf.len() {
+            return Err("checkpoint blob declares impossible length".into());
+        }
+        Ok(n)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.len(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            let end = self.at + 4;
+            if end > self.buf.len() {
+                return Err("checkpoint blob truncated".into());
+            }
+            let mut b = [0u8; 4];
+            b.copy_from_slice(&self.buf[self.at..end]);
+            self.at = end;
+            v.push(f32::from_le_bytes(b));
+        }
+        Ok(v)
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>, String> {
+        let n = self.len(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(f64::from_bits(self.u64()?));
+        }
+        Ok(v)
+    }
+
+    fn nested(&mut self) -> Result<Vec<Vec<f32>>, String> {
+        let n = self.len(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f32s()?);
+        }
+        Ok(v)
+    }
+}
+
+impl RequestCheckpoint {
+    /// Drop all accumulated data but keep every buffer's capacity — the
+    /// slot-reuse form of reset.
+    pub fn clear(&mut self) {
+        self.id = 0;
+        self.step = 0;
+        self.nfes = 0;
+        self.cfg_steps = 0;
+        self.truncated = false;
+        self.truncated_at = None;
+        self.guided_steps = 0;
+        self.x.clear();
+        self.x0_prev.clear();
+        self.gammas.clear();
+        self.scratch.clear();
+        self.gammas_eps.clear();
+        self.hist_c.clear();
+        self.hist_u.clear();
+        self.iterates.clear();
+    }
+
+    /// Reserve the capacities one request of this shape can ever need, so
+    /// steady-state captures never grow a buffer (§Perf above).
+    pub fn reserve(&mut self, flat_out: usize, steps: usize) {
+        reserve_to(&mut self.x, flat_out);
+        reserve_to(&mut self.x0_prev, flat_out);
+        reserve_f64(&mut self.gammas, steps);
+        reserve_f64(&mut self.scratch, steps);
+        reserve_f64(&mut self.gammas_eps, steps);
+    }
+
+    /// Serialized size in bytes — the `checkpoint_bytes` histogram sample,
+    /// computable without serializing.
+    pub fn encoded_len(&self) -> usize {
+        let scalars = 2 + 8 * 7; // magic+version, id/step/nfes/cfg/trunc_at/guided + flags word
+        let f32v = |v: &Vec<f32>| 8 + 4 * v.len();
+        let f64v = |v: &Vec<f64>| 8 + 8 * v.len();
+        let nested = |v: &Vec<Vec<f32>>| 8 + v.iter().map(|r| 8 + 4 * r.len()).sum::<usize>();
+        scalars
+            + f32v(&self.x)
+            + f32v(&self.x0_prev)
+            + f64v(&self.gammas)
+            + f64v(&self.scratch)
+            + f64v(&self.gammas_eps)
+            + nested(&self.hist_c)
+            + nested(&self.hist_u)
+            + nested(&self.iterates)
+    }
+
+    /// Versioned little-endian serialization (off the hot path — salvage
+    /// moves the struct itself; this form is for durability and tests).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_len());
+        out.push(b'C');
+        out.push(CKPT_VERSION);
+        put_u64(&mut out, self.id);
+        put_u64(&mut out, self.step as u64);
+        put_u64(&mut out, self.nfes as u64);
+        put_u64(&mut out, self.cfg_steps as u64);
+        // flags word: bit 0 = truncated, bit 1 = truncated_at present
+        let flags =
+            u64::from(self.truncated) | (u64::from(self.truncated_at.is_some()) << 1);
+        put_u64(&mut out, flags);
+        put_u64(&mut out, self.truncated_at.unwrap_or(0) as u64);
+        put_u64(&mut out, self.guided_steps as u64);
+        put_f32s(&mut out, &self.x);
+        put_f32s(&mut out, &self.x0_prev);
+        put_f64s(&mut out, &self.gammas);
+        put_f64s(&mut out, &self.scratch);
+        put_f64s(&mut out, &self.gammas_eps);
+        put_nested(&mut out, &self.hist_c);
+        put_nested(&mut out, &self.hist_u);
+        put_nested(&mut out, &self.iterates);
+        out
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<RequestCheckpoint, String> {
+        if buf.len() < 2 || buf[0] != b'C' {
+            return Err("not a checkpoint blob (bad magic)".into());
+        }
+        if buf[1] != CKPT_VERSION {
+            return Err(format!(
+                "checkpoint version {} unsupported (expected {CKPT_VERSION})",
+                buf[1]
+            ));
+        }
+        let mut r = Reader { buf, at: 2 };
+        let id = r.u64()?;
+        let step = r.u64()? as usize;
+        let nfes = r.u64()? as usize;
+        let cfg_steps = r.u64()? as usize;
+        let flags = r.u64()?;
+        let trunc_at_raw = r.u64()? as usize;
+        let guided_steps = r.u64()? as usize;
+        Ok(RequestCheckpoint {
+            id,
+            step,
+            nfes,
+            cfg_steps,
+            truncated: flags & 1 != 0,
+            truncated_at: (flags & 2 != 0).then_some(trunc_at_raw),
+            guided_steps,
+            x: r.f32s()?,
+            x0_prev: r.f32s()?,
+            gammas: r.f64s()?,
+            scratch: r.f64s()?,
+            gammas_eps: r.f64s()?,
+            hist_c: r.nested()?,
+            hist_u: r.nested()?,
+            iterates: r.nested()?,
+        })
+    }
+}
+
+fn reserve_to(v: &mut Vec<f32>, cap: usize) {
+    if v.capacity() < cap {
+        v.reserve(cap - v.len());
+    }
+}
+
+fn reserve_f64(v: &mut Vec<f64>, cap: usize) {
+    if v.capacity() < cap {
+        v.reserve(cap - v.len());
+    }
+}
+
+/// The engine's per-slot checkpoint store. Slot indices are the engine's
+/// admission slot indices, so slot reuse keeps the store at a constant
+/// size; buffers registered once per admission are rewritten in place
+/// every capture.
+#[derive(Debug, Default)]
+pub struct CheckpointStore {
+    every: usize,
+    slots: Vec<Slot>,
+}
+
+#[derive(Debug, Default)]
+struct Slot {
+    /// request id the stored checkpoint belongs to; `None` = no live
+    /// checkpoint (never written, retired at completion, or taken)
+    id: Option<u64>,
+    ckpt: RequestCheckpoint,
+}
+
+impl CheckpointStore {
+    /// Checkpoint cadence: write after every `every`-th completed step;
+    /// 0 disables the store entirely (no registration, no captures —
+    /// PR 8 behavior, byte for byte and allocation for allocation).
+    pub fn set_every(&mut self, every: usize) {
+        self.every = every;
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.every > 0
+    }
+
+    /// Whether a request that just completed its `step`-th boundary is due
+    /// a capture.
+    pub fn due(&self, step: usize) -> bool {
+        self.every > 0 && step % self.every == 0
+    }
+
+    /// Admission hook: size slot `idx` for a request of this shape. All
+    /// capacity growth happens here, off the steady-state pump.
+    pub fn register(&mut self, idx: usize, flat_out: usize, steps: usize) {
+        if !self.enabled() {
+            return;
+        }
+        if self.slots.len() <= idx {
+            self.slots.resize_with(idx + 1, Slot::default);
+        }
+        let slot = &mut self.slots[idx];
+        slot.id = None;
+        slot.ckpt.clear();
+        slot.ckpt.reserve(flat_out, steps);
+    }
+
+    /// Start (or overwrite) slot `idx`'s checkpoint for request `id`,
+    /// returning the buffer for the caller to fill in place.
+    pub fn begin_write(&mut self, idx: usize, id: u64) -> &mut RequestCheckpoint {
+        debug_assert!(idx < self.slots.len(), "checkpoint slot never registered");
+        let slot = &mut self.slots[idx];
+        slot.id = Some(id);
+        &mut slot.ckpt
+    }
+
+    /// Completion/abandonment hook: the slot's checkpoint is stale; keep
+    /// the buffers for the next occupant.
+    pub fn retire(&mut self, idx: usize) {
+        if let Some(slot) = self.slots.get_mut(idx) {
+            slot.id = None;
+        }
+    }
+
+    /// Salvage hook: move slot `idx`'s checkpoint out whole (the slot is
+    /// left empty — the dying engine has no next occupant to serve).
+    /// Returns `None` unless a live checkpoint for exactly `id` is stored.
+    pub fn take(&mut self, idx: usize, id: u64) -> Option<RequestCheckpoint> {
+        let slot = self.slots.get_mut(idx)?;
+        if slot.id != Some(id) {
+            return None;
+        }
+        slot.id = None;
+        Some(std::mem::take(&mut slot.ckpt))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RequestCheckpoint {
+        RequestCheckpoint {
+            id: 42,
+            step: 3,
+            nfes: 6,
+            cfg_steps: 3,
+            truncated: true,
+            truncated_at: Some(2),
+            guided_steps: 3,
+            x: vec![0.25, -1.5, 3.75],
+            x0_prev: vec![0.5, 0.125, -2.0],
+            gammas: vec![0.9, f64::NAN, 0.99],
+            scratch: vec![1.5],
+            gammas_eps: vec![0.8, 0.81, 0.82],
+            hist_c: vec![vec![1.0, 2.0, 3.0]],
+            hist_u: vec![vec![4.0, 5.0, 6.0]],
+            iterates: vec![vec![7.0, 8.0, 9.0], vec![1.0, 1.0, 1.0]],
+        }
+    }
+
+    #[test]
+    fn wire_round_trip_is_exact() {
+        let ck = sample();
+        let bytes = ck.to_bytes();
+        assert_eq!(bytes.len(), ck.encoded_len());
+        let back = RequestCheckpoint::from_bytes(&bytes).unwrap();
+        // NaN gammas make derived equality useless; byte equality is the
+        // actual invariant (resume consumes exactly these bits)
+        assert_eq!(back.to_bytes(), bytes);
+        assert_eq!(back.truncated_at, Some(2));
+        assert!(back.gammas[1].is_nan());
+    }
+
+    #[test]
+    fn wire_rejects_garbage_loudly() {
+        assert!(RequestCheckpoint::from_bytes(b"").is_err());
+        assert!(RequestCheckpoint::from_bytes(b"Xjunk").is_err());
+        let mut bytes = sample().to_bytes();
+        bytes[1] = 99; // future version
+        assert!(RequestCheckpoint::from_bytes(&bytes)
+            .unwrap_err()
+            .contains("version"));
+        let bytes = sample().to_bytes();
+        assert!(RequestCheckpoint::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        // corrupt a length word into something impossible
+        let mut bytes = sample().to_bytes();
+        bytes[2 + 8 * 7] = 0xFF;
+        bytes[2 + 8 * 7 + 4] = 0xFF;
+        assert!(RequestCheckpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn store_register_write_take_lifecycle() {
+        let mut store = CheckpointStore::default();
+        store.set_every(2);
+        assert!(store.enabled());
+        assert!(!store.due(1));
+        assert!(store.due(2));
+        store.register(5, 8, 10);
+        // capture capacity is preallocated at registration
+        let ck = store.begin_write(5, 7);
+        assert!(ck.x.capacity() >= 8 && ck.gammas.capacity() >= 10);
+        ck.id = 7;
+        ck.step = 4;
+        ck.x.extend_from_slice(&[1.0; 8]);
+        // wrong id: stale-slot guard refuses
+        assert!(store.take(5, 8).is_none());
+        let taken = store.take(5, 7).expect("live checkpoint");
+        assert_eq!(taken.step, 4);
+        // taken means gone
+        assert!(store.take(5, 7).is_none());
+    }
+
+    #[test]
+    fn disabled_store_registers_nothing() {
+        let mut store = CheckpointStore::default();
+        assert!(!store.enabled());
+        assert!(!store.due(4));
+        store.register(3, 8, 10);
+        assert!(store.slots.is_empty(), "off means off: no growth at all");
+    }
+
+    #[test]
+    fn retire_keeps_buffers_for_the_next_occupant() {
+        let mut store = CheckpointStore::default();
+        store.set_every(1);
+        store.register(0, 16, 4);
+        let ck = store.begin_write(0, 1);
+        ck.x.extend_from_slice(&[0.5; 16]);
+        store.retire(0);
+        assert!(store.take(0, 1).is_none(), "retired checkpoint is dead");
+        // re-registration reuses the grown buffers
+        store.register(0, 16, 4);
+        let ck = store.begin_write(0, 2);
+        assert!(ck.x.is_empty() && ck.x.capacity() >= 16);
+    }
+}

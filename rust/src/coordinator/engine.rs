@@ -102,6 +102,7 @@ use anyhow::Result;
 use crate::backend::{Backend, BatchBuf, BatchOut};
 use crate::chaos::fault::{classify, FaultClass, JitterBackoff};
 use crate::coordinator::bufpool::{BufPool, StepBufs};
+use crate::coordinator::checkpoint::{CheckpointStore, RequestCheckpoint};
 use crate::coordinator::policy::PolicyState;
 use crate::coordinator::request::{Completion, EvalKind, Request, RequestState};
 use crate::exec::{ExecPool, SliceShards};
@@ -116,6 +117,10 @@ const LATENCY_HIST: (f64, f64, usize) = (0.0, 10_000.0, 100);
 
 /// Retry-backoff histogram (`retry_backoff_ms`): 0..4 s in 50 ms bins.
 const BACKOFF_HIST: (f64, f64, usize) = (0.0, 4_000.0, 80);
+
+/// Checkpoint-size histogram (`checkpoint_bytes`): 0..64 KiB in 1 KiB
+/// bins — sized for the serialized form of one [`RequestCheckpoint`].
+const CKPT_HIST: (f64, f64, usize) = (0.0, 65_536.0, 64);
 
 /// Default decorrelated-jitter base delay for transient-batch retries
 /// (§Robustness; overridable via [`Engine::set_batch_retries`]).
@@ -141,6 +146,18 @@ pub struct EngineLoad {
     pub queued_nfes: usize,
     /// Work items pending in the scheduler.
     pub queue_depth: usize,
+}
+
+/// §Robustness: one re-placeable request pulled off a dying engine by
+/// [`Engine::salvage_all`]. `checkpoint` is `None` for never-started
+/// requests (restart from step 0) and the boxed mid-flight snapshot for
+/// started ones; `cost` is the engine's live remaining-NFE estimate at
+/// death — what the router should reserve for re-placement.
+#[derive(Debug)]
+pub struct Salvaged {
+    pub req: Request,
+    pub checkpoint: Option<Box<RequestCheckpoint>>,
+    pub cost: usize,
 }
 
 /// Engine-side per-request bookkeeping: scheduling labels, the live
@@ -258,6 +275,10 @@ pub struct Engine<B: Backend> {
     /// fleet seeds each shard with its index, so shards desynchronize
     /// while every run stays reproducible)
     backoff: JitterBackoff,
+    /// §Robustness: per-slot mid-flight checkpoints (`--checkpoint-steps`;
+    /// disabled by default — zero registrations, zero captures)
+    ckpts: CheckpointStore,
+    k_checkpoint_bytes: MetricKey,
 }
 
 impl<B: Backend> Engine<B> {
@@ -297,6 +318,7 @@ impl<B: Backend> Engine<B> {
         let k_batch_retries =
             telemetry.metric_key("batch_retries_total", &[("class", "transient")]);
         let k_retry_backoff = telemetry.metric_key("retry_backoff_ms", &[]);
+        let k_checkpoint_bytes = telemetry.metric_key("checkpoint_bytes", &[]);
         Ok(Engine {
             backend,
             sched,
@@ -338,7 +360,21 @@ impl<B: Backend> Engine<B> {
             k_retry_backoff,
             max_batch_retries: 0,
             backoff: JitterBackoff::new(DEFAULT_RETRY_BASE_MS, DEFAULT_RETRY_CAP_MS, 0),
+            ckpts: CheckpointStore::default(),
+            k_checkpoint_bytes,
         })
+    }
+
+    /// §Robustness: arm per-request solver-state checkpointing — a
+    /// resumable snapshot after every `every`-th completed step
+    /// (`agd serve --checkpoint-steps`). `0` (the default) disables the
+    /// store entirely: no buffers are registered and `pump()` is byte- and
+    /// allocation-identical to the un-checkpointed engine. Armed, the
+    /// steady-state capture is still allocation-free — buffers are sized
+    /// at admission and rewritten in place (pinned by
+    /// `rust/tests/ckpt_zero_alloc.rs`).
+    pub fn set_checkpoints(&mut self, every: usize) {
+        self.ckpts.set_every(every);
     }
 
     /// §Robustness: retry transient batch failures up to `max` times per
@@ -613,6 +649,54 @@ impl<B: Backend> Engine<B> {
         self.submit_costed(req, cost);
     }
 
+    /// §Robustness: admit a salvaged mid-flight request from its
+    /// checkpoint. Runs the same shape validation and admission/quota
+    /// checks as [`Self::try_submit`] — a resumed request re-enters the
+    /// queue like fresh work, except that its charged cost is the
+    /// *remaining* NFE estimate at the checkpointed step, so cost-aware
+    /// scheduling and the queued-NFE budget see the truth, not the
+    /// original worst case.
+    pub fn try_resume(&mut self, req: Request, ck: &RequestCheckpoint) -> Result<(), AdmitError> {
+        if let Err(e) = self.validate(&req) {
+            self.telemetry.inc("requests_rejected_total", &[], 1);
+            return Err(e);
+        }
+        let flat_out = self.backend.flat_out(&req.model);
+        if ck.step == 0
+            || ck.step >= req.steps
+            || ck.x.len() != flat_out
+            || ck.x0_prev.len() != flat_out
+        {
+            self.telemetry.inc("requests_rejected_total", &[], 1);
+            return Err(AdmitError::Invalid {
+                reason: "checkpoint does not fit the request \
+                         (step out of range or latent shape mismatch)",
+            });
+        }
+        let max_nfes = req.policy.max_nfes(req.steps);
+        let state = RequestState::resume(req, flat_out, ck);
+        let cost = state.remaining_nfes();
+        if let Err(e) = self.admission.check(self.active, self.queued_nfes, cost) {
+            self.telemetry.inc("requests_rejected_total", &[], 1);
+            return Err(e);
+        }
+        let client = state
+            .req
+            .client_id
+            .clone()
+            .unwrap_or_else(|| self.anon_client.clone());
+        let in_flight = self.clients_in_flight.get(&client).copied().unwrap_or(0);
+        if let Err(e) = self.admission.check_client(&client, in_flight) {
+            self.telemetry.inc("requests_rejected_total", &[], 1);
+            let name: &str = &client;
+            self.telemetry
+                .inc("client_quota_rejected_total", &[("client", name)], 1);
+            return Err(e);
+        }
+        self.enroll(state, cost, max_nfes);
+        Ok(())
+    }
+
     /// Shared admission tail: the `cost` the caller checked/charged is the
     /// single value used for the queued-NFE accounting, so the admission
     /// budget and the bookkeeping cannot drift.
@@ -623,6 +707,15 @@ impl<B: Backend> Engine<B> {
         // own estimate agree for every StepPlan variant today; catch any
         // future divergence in tests rather than drifting silently
         debug_assert_eq!(cost, state.remaining_nfes());
+        self.enroll(state, cost, cost);
+    }
+
+    /// Enrollment tail shared by fresh admissions and checkpoint resumes:
+    /// slot assignment, meta/bookkeeping, first enqueue. `cost` is the
+    /// live remaining-NFE estimate (equal to `max_nfes` for fresh work);
+    /// `max_nfes` stays the request's own full worst case so the
+    /// NFEs-saved ledger is placement-independent.
+    fn enroll(&mut self, state: RequestState, cost: usize, max_nfes: usize) {
         let submitted = Instant::now();
         // anchor the arrival-relative deadline to the engine clock so EDF
         // compares like with like regardless of client clocks
@@ -675,7 +768,7 @@ impl<B: Backend> Engine<B> {
                 .deadline_ms
                 .map(|rel| rel.saturating_add(arrival_ms)),
             cost,
-            max_nfes: cost,
+            max_nfes,
             submitted,
             first_exec: None,
             policy_id,
@@ -696,6 +789,9 @@ impl<B: Backend> Engine<B> {
             }
         };
         self.metas[idx] = Some(meta);
+        // §Robustness: size this slot's checkpoint buffers now, off the
+        // steady-state pump (no-op with checkpointing disabled)
+        self.ckpts.register(idx, state.x.len(), state.req.steps);
         self.enqueue_step(&state, idx);
         self.states[idx] = Some(state);
         self.active += 1;
@@ -921,6 +1017,57 @@ impl<B: Backend> Engine<B> {
                 }
             }
             salvaged.push(state.req);
+        }
+        if !salvaged.is_empty() {
+            self.update_gauges();
+        }
+        salvaged
+    }
+
+    /// §Robustness: [`Self::salvage_unstarted`] grown for checkpointing —
+    /// pull back *everything* re-placeable from a dying engine. Each
+    /// salvaged entry is either a never-started request (restart from step
+    /// 0, `checkpoint: None`) or a started request whose latest
+    /// [`RequestCheckpoint`] is moved out of the store whole
+    /// (swap-don't-copy — the dying engine has no further use for it).
+    /// Started requests with no stored checkpoint remain, for the shard
+    /// to refuse with `shard_failed` — with `--checkpoint-steps 1` that
+    /// set is exactly the requests that never completed a step.
+    pub fn salvage_all(&mut self) -> Vec<Salvaged> {
+        let mut salvaged = Vec::new();
+        for idx in 0..self.metas.len() {
+            let (id, started) = match self.metas[idx].as_ref() {
+                Some(meta) => (meta.id, meta.first_exec.is_some()),
+                None => continue,
+            };
+            let checkpoint = if started {
+                match self.ckpts.take(idx, id) {
+                    Some(ck) => Some(Box::new(ck)),
+                    // started but never checkpointed: too late to salvage
+                    None => continue,
+                }
+            } else {
+                self.ckpts.retire(idx);
+                None
+            };
+            let meta = self.metas[idx].take().expect("meta checked above");
+            let state = self.states[idx].take().expect("state for live request");
+            self.sched.revoke(idx);
+            self.active -= 1;
+            self.queued_nfes = self.queued_nfes.saturating_sub(meta.cost);
+            self.free.push(idx);
+            if let Some(n) = self.clients_in_flight.get_mut(&meta.client) {
+                if *n <= 1 {
+                    self.clients_in_flight.remove(&meta.client);
+                } else {
+                    *n -= 1;
+                }
+            }
+            salvaged.push(Salvaged {
+                req: state.req,
+                checkpoint,
+                cost: meta.cost,
+            });
         }
         if !salvaged.is_empty() {
             self.update_gauges();
@@ -1164,6 +1311,9 @@ impl<B: Backend> Engine<B> {
                 self.active -= 1;
                 self.sched.forget(idx);
                 self.free.push(idx);
+                // §Robustness: the slot's checkpoint is stale the moment
+                // the request completes (buffers stay for the next tenant)
+                self.ckpts.retire(idx);
                 let mut meta = self.metas[idx].take().expect("meta for completed request");
                 self.queued_nfes = self.queued_nfes.saturating_sub(meta.cost);
                 // unwind the per-client quota count
@@ -1233,6 +1383,17 @@ impl<B: Backend> Engine<B> {
                 meta.cost = new_cost;
                 self.queued_nfes = self.queued_nfes.saturating_sub(old_cost) + new_cost;
                 self.enqueue_step(&st, idx);
+                // §Robustness: capture the step-boundary checkpoint while
+                // the state is out of its slot — clear()+extend into the
+                // buffers registered at admission, no allocation
+                if self.ckpts.due(st.step) {
+                    let ck = self.ckpts.begin_write(idx, st.req.id);
+                    st.save_checkpoint(ck);
+                    let bytes = ck.encoded_len() as f64;
+                    let (lo, hi, bins) = CKPT_HIST;
+                    self.telemetry
+                        .observe_key(&self.k_checkpoint_bytes, bytes, lo, hi, bins);
+                }
                 self.states[idx] = Some(st);
             }
         }
@@ -1683,6 +1844,69 @@ mod tests {
         let resub = e.run(salvaged.into_iter().filter(|r| r.id == 1).collect()).unwrap();
         assert_eq!(resub[0].image, fresh[0].image);
         assert_eq!(resub[0].nfes, fresh[0].nfes);
+    }
+
+    /// §Robustness: the tentpole invariant at engine level — a started
+    /// request pulled off a checkpointing engine mid-trajectory and
+    /// resumed on a second engine completes byte-identical to an
+    /// uninterrupted run, with exact NFE accounting.
+    #[test]
+    fn salvage_all_resumes_started_requests_byte_identically() {
+        let mut e = engine();
+        e.set_checkpoints(1);
+        e.submit(req(0, 1, cfg(2.0)));
+        e.submit(req(1, 2, ag(2.0, 0.99)));
+        for _ in 0..3 {
+            e.pump().unwrap(); // both requests are mid-flight, checkpointed
+        }
+        e.submit(req(2, 3, cfg(2.0))); // never started
+        let salvaged = e.salvage_all();
+        assert_eq!(salvaged.len(), 3, "started-with-checkpoint AND unstarted");
+        assert!(e.idle(), "everything re-placeable left the engine");
+        assert_eq!(e.active(), 0);
+        assert_eq!(e.queued_nfes(), 0);
+        let mut survivor = engine();
+        survivor.set_checkpoints(1);
+        for s in salvaged {
+            match s.checkpoint {
+                Some(ck) => {
+                    assert!(ck.step >= 1);
+                    survivor.try_resume(s.req, &ck).unwrap();
+                }
+                None => {
+                    assert_eq!(s.req.id, 2);
+                    survivor.try_submit(s.req).unwrap();
+                }
+            }
+        }
+        let mut resumed = survivor.drain().unwrap();
+        resumed.sort_by_key(|c| c.id);
+        let clean = engine()
+            .run(vec![req(0, 1, cfg(2.0)), req(1, 2, ag(2.0, 0.99)), req(2, 3, cfg(2.0))])
+            .unwrap();
+        for (r, c) in resumed.iter().zip(clean.iter()) {
+            assert_eq!(r.id, c.id);
+            assert_eq!(r.image, c.image, "request {} diverged across resume", r.id);
+            assert_eq!(r.nfes, c.nfes, "NFE accounting must survive resume");
+            assert_eq!(r.cfg_steps, c.cfg_steps);
+            assert_eq!(r.truncated_at, c.truncated_at);
+        }
+    }
+
+    /// With checkpointing off (the default), a started request is NOT
+    /// returned by `salvage_all` — PR 8 semantics exactly.
+    #[test]
+    fn salvage_all_without_checkpoints_matches_unstarted_only() {
+        let mut e = engine();
+        e.submit(req(0, 1, cfg(2.0)));
+        e.pump().unwrap();
+        e.submit(req(1, 2, cfg(2.0)));
+        let salvaged = e.salvage_all();
+        assert_eq!(salvaged.len(), 1);
+        assert_eq!(salvaged[0].req.id, 1);
+        assert!(salvaged[0].checkpoint.is_none());
+        // the started request stays, to be refused by the shard's die path
+        assert_eq!(e.active(), 1);
     }
 
     #[test]

@@ -9,6 +9,9 @@
 //!   API (no engine changes)
 //! * [`solver`] — cosine-VP schedule + DPM-Solver++(2M) coefficient folding
 //! * [`request`] — per-request state machine (combine, policy state, history)
+//! * [`checkpoint`] — §Robustness: resumable mid-flight snapshots of a
+//!   request's solver cursor, for byte-identical failover across shard
+//!   death (`--checkpoint-steps`)
 //! * [`bufpool`] — the length-keyed buffer pool behind the zero-allocation
 //!   steady-state hot path (§Perf: buffer ownership)
 //! * [`engine`] — continuation batching of NFE work items over a
@@ -16,6 +19,7 @@
 //!   with admission control and telemetry ([`crate::sched`])
 
 pub mod bufpool;
+pub mod checkpoint;
 pub mod engine;
 pub mod ext;
 pub mod policy;

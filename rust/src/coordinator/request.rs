@@ -22,6 +22,7 @@ use std::sync::Arc;
 
 use crate::backend::EvalInput;
 use crate::coordinator::bufpool::{BufPool, BufSource, StepBufs};
+use crate::coordinator::checkpoint::RequestCheckpoint;
 use crate::coordinator::policy::{PolicyRef, PolicyState, StepObservation, StepPlan};
 use crate::coordinator::solver::{self, StepCoefs};
 use crate::ols::ScoreTrajectory;
@@ -227,6 +228,105 @@ impl RequestState {
             coefs,
             iterates: Vec::new(),
         }
+    }
+
+    /// §Robustness: re-seed a request state from a mid-flight checkpoint.
+    /// The returned state is positioned exactly where the snapshot was
+    /// taken — at the boundary after `ck.step` completed steps, with the
+    /// next step freshly planned against the restored policy state — so
+    /// driving it forward produces the same bytes the uninterrupted run
+    /// would have (pinned by `checkpoint_round_trip_resumes_identically`
+    /// below and the chaos resume tests).
+    pub fn resume(req: Request, flat_out: usize, ck: &RequestCheckpoint) -> RequestState {
+        assert!(
+            ck.step >= 1 && ck.step < req.steps,
+            "checkpoint step {} out of range for a {}-step request",
+            ck.step,
+            req.steps
+        );
+        assert_eq!(ck.x.len(), flat_out, "checkpoint latent length mismatch");
+        assert_eq!(ck.x0_prev.len(), flat_out, "checkpoint x0 length mismatch");
+        let coefs = solver::coef_table(req.steps);
+        let mut policy_state = PolicyState::new();
+        policy_state.gammas.reserve(req.steps);
+        policy_state.gammas.extend_from_slice(&ck.gammas);
+        policy_state.scratch.extend_from_slice(&ck.scratch);
+        policy_state.truncated = ck.truncated;
+        policy_state.truncated_at = ck.truncated_at;
+        policy_state.guided_steps = ck.guided_steps;
+        let mut gammas_eps = Vec::with_capacity(req.steps);
+        gammas_eps.extend_from_slice(&ck.gammas_eps);
+        // the next step is planned against the *restored* state, exactly
+        // as the replan at the end of `complete_step_core` would have
+        let plan = req.policy.plan(ck.step, req.steps, &policy_state);
+        let slots = Self::evals_for(&plan).len();
+        let mut pending = Vec::with_capacity(MAX_SLOTS);
+        pending.resize_with(slots, || None);
+        RequestState {
+            req,
+            x: ck.x.clone(),
+            x0_prev: ck.x0_prev.clone(),
+            step: ck.step,
+            policy_state,
+            nfes: ck.nfes,
+            cfg_steps: ck.cfg_steps,
+            gammas_eps,
+            pending,
+            pending_left: slots,
+            plan,
+            hist_c: ck
+                .hist_c
+                .iter()
+                .map(|d| Tensor::new(vec![flat_out], d.clone()))
+                .collect(),
+            hist_u: ck
+                .hist_u
+                .iter()
+                .map(|d| Tensor::new(vec![flat_out], d.clone()))
+                .collect(),
+            coefs,
+            iterates: ck.iterates.clone(),
+        }
+    }
+
+    /// §Robustness: copy the live solver cursor into `ck`, which must have
+    /// been sized by [`crate::coordinator::checkpoint::CheckpointStore::register`].
+    /// Runs at step boundaries only (the engine calls it right after a
+    /// completed step, before the next step executes), so the in-flight
+    /// `pending` slots are structurally empty and need no capture. The
+    /// common-path copies are `clear()` + `extend_from_slice` into reserved
+    /// capacity — no allocation (pinned by `ckpt_zero_alloc.rs`); only the
+    /// history/iterate captures allocate, mirroring the recording paths
+    /// that already allocate per step.
+    pub fn save_checkpoint(&self, ck: &mut RequestCheckpoint) {
+        debug_assert_eq!(
+            self.pending_left,
+            self.pending.len(),
+            "checkpoints are taken at step boundaries only"
+        );
+        ck.id = self.req.id;
+        ck.step = self.step;
+        ck.nfes = self.nfes;
+        ck.cfg_steps = self.cfg_steps;
+        ck.truncated = self.policy_state.truncated;
+        ck.truncated_at = self.policy_state.truncated_at;
+        ck.guided_steps = self.policy_state.guided_steps;
+        ck.x.clear();
+        ck.x.extend_from_slice(&self.x);
+        ck.x0_prev.clear();
+        ck.x0_prev.extend_from_slice(&self.x0_prev);
+        ck.gammas.clear();
+        ck.gammas.extend_from_slice(&self.policy_state.gammas);
+        ck.scratch.clear();
+        ck.scratch.extend_from_slice(&self.policy_state.scratch);
+        ck.gammas_eps.clear();
+        ck.gammas_eps.extend_from_slice(&self.gammas_eps);
+        ck.hist_c.clear();
+        ck.hist_c.extend(self.hist_c.iter().map(|t| t.data.clone()));
+        ck.hist_u.clear();
+        ck.hist_u.extend(self.hist_u.iter().map(|t| t.data.clone()));
+        ck.iterates.clear();
+        ck.iterates.extend(self.iterates.iter().cloned());
     }
 
     pub(crate) fn evals_for(plan: &StepPlan) -> &'static [EvalKind] {
@@ -712,6 +812,71 @@ mod tests {
         assert_eq!(p.pooled(), 1);
         assert_eq!(p.allocs(), 1);
         assert_eq!(p.reuses(), 2);
+    }
+
+    /// §Robustness: serialize → restore → identical next step (and on to
+    /// an identical completion). The AG policy truncates mid-run here, so
+    /// the checkpoint carries a non-trivial policy state (truncation flag,
+    /// NaN gammas) and the trajectory recording exercises the history
+    /// round trip.
+    #[test]
+    fn checkpoint_round_trip_resumes_identically() {
+        fn mk() -> RequestState {
+            let mut req = Request::new(7, "gmm", vec![1, 0, 0, 0], 99, 6, ag(2.0, 0.9));
+            req.record_trajectory = true;
+            req.record_iterates = true;
+            RequestState::new(req, 8)
+        }
+        fn drive(st: &mut RequestState, p: &mut BufPool, step: usize) -> Option<Completion> {
+            for slot in 0..st.current_evals().len() {
+                st.deliver(slot, vec![0.3 + 0.2 * slot as f32 + 0.05 * step as f32; 8]);
+            }
+            st.complete_step(p)
+        }
+        fn bits(v: &[f64]) -> Vec<u64> {
+            v.iter().map(|x| x.to_bits()).collect()
+        }
+        let mut p = pool();
+        let mut a = mk();
+        for s in 0..3 {
+            assert!(drive(&mut a, &mut p, s).is_none());
+        }
+        let mut ck = RequestCheckpoint::default();
+        a.save_checkpoint(&mut ck);
+        assert_eq!(ck.step, 3);
+        assert_eq!(ck.nfes, a.nfes);
+        // wire round trip: byte equality is the invariant (NaN gammas make
+        // float equality useless)
+        let bytes = ck.to_bytes();
+        let ck = RequestCheckpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(ck.to_bytes(), bytes);
+        let mut b = RequestState::resume(mk().req, 8, &ck);
+        assert_eq!(b.step, a.step);
+        assert_eq!(b.x, a.x);
+        assert_eq!(b.x0_prev, a.x0_prev);
+        assert_eq!(b.remaining_nfes(), a.remaining_nfes());
+        assert_eq!(b.current_evals(), a.current_evals());
+        // drive both to completion on identical deliveries: every byte of
+        // the completion must match
+        let (mut ca, mut cb) = (None, None);
+        for s in 3..6 {
+            ca = drive(&mut a, &mut p, s);
+            cb = drive(&mut b, &mut p, s);
+            assert_eq!(b.x, a.x, "diverged at step {s}");
+        }
+        let (ca, cb) = (ca.unwrap(), cb.unwrap());
+        assert_eq!(ca.image, cb.image);
+        assert_eq!(ca.nfes, cb.nfes);
+        assert_eq!(ca.cfg_steps, cb.cfg_steps);
+        assert_eq!(ca.truncated_at, cb.truncated_at);
+        assert_eq!(bits(&ca.gammas), bits(&cb.gammas));
+        assert_eq!(bits(&ca.gammas_eps), bits(&cb.gammas_eps));
+        assert_eq!(ca.iterates, cb.iterates);
+        let (ta, tb) = (ca.trajectory.unwrap(), cb.trajectory.unwrap());
+        assert_eq!(
+            ta.eps_c.iter().map(|t| &t.data).collect::<Vec<_>>(),
+            tb.eps_c.iter().map(|t| &t.data).collect::<Vec<_>>()
+        );
     }
 
     #[test]

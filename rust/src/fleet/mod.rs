@@ -53,11 +53,18 @@
 //! executing and hands it to the fleet **supervisor** thread, which
 //! re-places the jobs onto survivors — restarted from step 0 with the
 //! same init noise, their completions stay byte-identical
-//! (`jobs_salvaged_total{shard=}`); only truly mid-step work is refused
+//! (`jobs_salvaged_total{shard=}`). With `--checkpoint-steps N` the
+//! engine also snapshots every started request's solver cursor each N
+//! completed steps ([`crate::coordinator::checkpoint`]), so mid-flight
+//! work is salvaged too: re-placed with its checkpoint, a survivor
+//! resumes the trajectory at the recorded step and still completes
+//! byte-identically (`jobs_resumed_total{shard=}`, `resume_step`
+//! histogram). Only started work without a usable checkpoint is refused
 //! with `"code": "shard_failed"` ([`ShardFailed`]). With
 //! `--shard-respawn` the supervisor then rebuilds the dead shard from
-//! the retained backend factory under capped exponential backoff and
-//! revives it for placement (`shard_respawned_total{shard=}`).
+//! the retained backend factory under capped exponential backoff, runs
+//! one synthetic warm-up eval (`shard_warmup_ms`), and revives it for
+//! placement (`shard_respawned_total{shard=}`).
 
 pub mod replica;
 pub mod router;
@@ -71,7 +78,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::backend::Backend;
+use crate::backend::{Backend, BatchBuf, BatchOut};
 use crate::chaos::fault::FaultPlan;
 use crate::coordinator::engine::{
     Engine, DEFAULT_RETRY_BASE_MS, DEFAULT_RETRY_CAP_MS, MAX_STEPS,
@@ -183,6 +190,12 @@ pub struct FleetConfig {
     /// §Robustness: respawn dead shards via the stored backend factory
     /// (`--shard-respawn`), with capped exponential backoff.
     pub respawn: bool,
+    /// §Robustness: checkpoint every N completed denoising steps per
+    /// request (`--checkpoint-steps`; 0 = off — byte- and
+    /// allocation-identical to a fleet without the feature). Armed, a
+    /// dying shard hands started requests back with their latest
+    /// snapshot and survivors resume them mid-trajectory.
+    pub checkpoint_steps: usize,
 }
 
 impl Default for FleetConfig {
@@ -197,6 +210,7 @@ impl Default for FleetConfig {
             shed_infeasible: false,
             max_batch_retries: 0,
             respawn: false,
+            checkpoint_steps: 0,
         }
     }
 }
@@ -214,9 +228,12 @@ struct RouterInner {
 /// §Robustness: what a dying shard tells the supervisor thread.
 pub(crate) enum SuperMsg {
     /// A shard ran its death path. `salvaged` carries every admitted job
-    /// that had not started executing (`first_exec` unset) — the
-    /// supervisor re-places them onto survivors; restarted from step 0
-    /// with the same init noise they complete byte-identically.
+    /// the engine could hand back: never-started jobs (`first_exec`
+    /// unset, restarted from step 0 with the same init noise) and — with
+    /// `--checkpoint-steps` — started jobs with their latest
+    /// [`crate::coordinator::checkpoint::RequestCheckpoint`], resumed at
+    /// the recorded step. The supervisor re-places them onto survivors;
+    /// either way they complete byte-identically.
     Died { shard: usize, salvaged: Vec<Job> },
     /// Fleet shutdown: stop supervising and exit the thread.
     Shutdown,
@@ -240,8 +257,12 @@ struct Shared {
 }
 
 /// Spawns one shard's engine thread; retained by the supervisor so dead
-/// shards can be respawned with the same factory, config and seeds.
-type Spawner = Box<dyn Fn(usize, Receiver<ShardMsg>) -> JoinHandle<()> + Send>;
+/// shards can be respawned with the same factory, config and seeds. The
+/// `bool` is the warm-up flag: `true` on supervisor respawns (§Robustness
+/// satellite — one synthetic eval before the shard rejoins placement, so
+/// the first real request doesn't eat cold-start latency), `false` at
+/// launch (the historical behaviour, and what keeps launch fast).
+type Spawner = Box<dyn Fn(usize, Receiver<ShardMsg>, bool) -> JoinHandle<()> + Send>;
 
 /// The engine fleet (see module docs). Shared across connection-handler
 /// threads behind an `Arc`; every public method takes `&self`.
@@ -294,7 +315,8 @@ impl Fleet {
             let super_tx = super_tx.clone();
             let (kind, adm, shed) = (cfg.scheduler, cfg.shard_admission, cfg.shed_infeasible);
             let retries = cfg.max_batch_retries;
-            Box::new(move |i: usize, rx: Receiver<ShardMsg>| {
+            let ckpt_every = cfg.checkpoint_steps;
+            Box::new(move |i: usize, rx: Receiver<ShardMsg>, warm: bool| {
                 let f = factory.clone();
                 let l = loads[i].clone();
                 let stx = super_tx.clone();
@@ -312,6 +334,10 @@ impl Fleet {
                                     DEFAULT_RETRY_CAP_MS,
                                     i as u64,
                                 );
+                                engine.set_checkpoints(ckpt_every);
+                                if warm {
+                                    warm_up(&mut engine, i);
+                                }
                                 replica::run_replica(i, engine, rx, l, shed, stx);
                             }
                             Err(e) => {
@@ -336,7 +362,7 @@ impl Fleet {
         let mut joins = Vec::with_capacity(n);
         for i in 0..n {
             let (tx, rx) = channel::<ShardMsg>();
-            joins.push(spawner(i, rx));
+            joins.push(spawner(i, rx, false));
             txs.push(tx);
         }
         let shared = Arc::new(Shared {
@@ -513,6 +539,7 @@ impl Fleet {
             cost,
             started: Instant::now(),
             reply: rtx,
+            checkpoint: None,
         };
         if guard.txs[idx].send(ShardMsg::Job(job)).is_err() {
             load.settle(cost);
@@ -715,6 +742,37 @@ impl Fleet {
     }
 }
 
+/// §Robustness: warm a respawned shard before it rejoins placement — one
+/// synthetic single-row eval through the backend's real batch path, off
+/// the serving hot path (the shard is still dead to the router while this
+/// runs, because [`supervise`] revives the load only after the thread is
+/// spawned *and* the channel is swapped in; the warm-up runs first thing
+/// inside the thread, before the replica loop can pick anything up). A
+/// GMM backend warms its lane scratch; a PJRT backend touches its
+/// compiled artifact so the first real request doesn't pay cold-start
+/// latency. Failures are deliberately ignored: a backend that faults on
+/// the warm-up row (e.g. a still-armed fault plan) will fault on real
+/// work too, and the death path handles that — the warm-up must never
+/// turn a respawn into a construction failure. Duration is published as
+/// the `shard_warmup_ms` gauge on the shard's own registry.
+fn warm_up<B: Backend>(engine: &mut Engine<B>, shard: usize) {
+    let t0 = Instant::now();
+    let flat_in = engine.backend.flat_in("gmm");
+    let mut batch = BatchBuf::new(flat_in, 4);
+    let (x, tokens) = batch.push_row(0.5);
+    x.fill(0.1);
+    tokens.fill(0); // unconditional row: valid for every token vocabulary
+    let mut out = BatchOut::default();
+    let _ = engine.backend.denoise_into("gmm", &batch, &mut out);
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    engine.telemetry_mut().set_gauge("shard_warmup_ms", &[], ms);
+    log_event(
+        log::Level::Info,
+        &format!("shard-{shard}"),
+        &format!("respawn warm-up eval ran in {ms:.3}ms"),
+    );
+}
+
 /// §Robustness: the supervisor loop. Two duties per shard death: re-place
 /// the salvaged (never-started) jobs onto survivors, and — when
 /// `--shard-respawn` is on and the fleet is not draining — rebuild the
@@ -739,7 +797,7 @@ fn supervise(shared: &Shared, spawner: Spawner, rx: Receiver<SuperMsg>, respawn:
                     );
                     std::thread::sleep(Duration::from_millis(delay));
                     let (tx, shard_rx) = channel::<ShardMsg>();
-                    let join = spawner(shard, shard_rx);
+                    let join = spawner(shard, shard_rx, true);
                     {
                         // swap the channel in *before* reviving: from the
                         // moment placement sees the shard alive, its sends
@@ -772,9 +830,15 @@ fn supervise(shared: &Shared, spawner: Spawner, rx: Receiver<SuperMsg>, respawn:
 /// already admitted once, and shedding previously-accepted work to a
 /// budget check would turn a survivable fault into a refusal. A job only
 /// sheds (`shard_failed`) when no live shard remains to take it.
+/// Never-started jobs tick `jobs_salvaged_total{shard=}` (the PR 8
+/// ledger); checkpointed mid-flight jobs tick `jobs_resumed_total{shard=}`
+/// and record their resume step in the `resume_step` histogram, so an
+/// operator can see how deep into trajectories the fleet is recovering.
 fn replace_jobs(shared: &Shared, from: usize, jobs: Vec<Job>) {
     let total = jobs.len();
     let mut placed = 0usize;
+    let mut resumed = 0u64;
+    let mut resume_steps: Vec<f64> = Vec::new();
     for job in jobs {
         let mut job = Some(job);
         loop {
@@ -791,9 +855,14 @@ fn replace_jobs(shared: &Shared, from: usize, jobs: Vec<Job>) {
             };
             let cost = j.cost;
             shared.loads[idx].reserve(cost);
+            let resume_step = j.checkpoint.as_ref().map(|ck| ck.step);
             match guard.txs[idx].send(ShardMsg::Job(j)) {
                 Ok(()) => {
                     placed += 1;
+                    if let Some(step) = resume_step {
+                        resumed += 1;
+                        resume_steps.push(step as f64);
+                    }
                     break;
                 }
                 Err(std::sync::mpsc::SendError(msg)) => {
@@ -809,15 +878,24 @@ fn replace_jobs(shared: &Shared, from: usize, jobs: Vec<Job>) {
         }
     }
     let label = from.to_string();
-    shared
-        .telemetry
-        .lock()
-        .expect("fleet telemetry lock")
-        .inc("jobs_salvaged_total", &[("shard", &label)], placed as u64);
+    {
+        let mut tel = shared.telemetry.lock().expect("fleet telemetry lock");
+        let unstarted = placed as u64 - resumed;
+        tel.inc("jobs_salvaged_total", &[("shard", &label)], unstarted);
+        if resumed > 0 {
+            tel.inc("jobs_resumed_total", &[("shard", &label)], resumed);
+            for step in &resume_steps {
+                // same shape every shard, so the fleet histogram merges
+                tel.observe("resume_step", &[], *step, 0.0, 200.0, 40);
+            }
+        }
+    }
     log_event(
         log::Level::Warn,
         "supervisor",
-        &format!("shard {from}: salvaged {placed}/{total} never-started job(s) onto survivors"),
+        &format!(
+            "shard {from}: salvaged {placed}/{total} job(s) onto survivors ({resumed} resuming mid-flight)"
+        ),
     );
 }
 
@@ -943,9 +1021,10 @@ mod tests {
         use crate::chaos::fault::FaultyBackend;
         Fleet::launch(
             move |shard| {
-                Ok(FaultyBackend::new(
+                Ok(FaultyBackend::with_shard(
                     GmmBackend::new(Gmm::axes(8, 4, 3.0, 0.05)),
                     plans[shard].clone(),
+                    shard as u64,
                 ))
             },
             cfg,
@@ -1011,6 +1090,52 @@ mod tests {
                 break;
             }
             assert!(Instant::now() < deadline, "salvage counter never appeared");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn checkpointed_mid_flight_jobs_resume_on_survivors() {
+        use crate::chaos::fault::{FaultPlan, FaultSpec};
+        let plans: Vec<Arc<FaultPlan>> =
+            (0..2).map(|_| Arc::new(FaultPlan::default())).collect();
+        // shard 0 completes exactly 2 batches (= 2 steps for a lone CFG
+        // request: cond + uncond pack into one batch per step), then dies
+        // fatally on the 3rd — fully deterministic, no timing involved
+        plans[0].arm(FaultSpec::parse("fail-after=2").unwrap());
+        let fleet = faulty_fleet(
+            plans,
+            FleetConfig {
+                shards: 2,
+                placement: Placement::RoundRobin,
+                checkpoint_steps: 1,
+                ..FleetConfig::default()
+            },
+        );
+        let rx = fleet.submit(req(1, 6)).unwrap(); // → shard 0, dies mid-flight
+        // the job is not refused: its checkpoint travels to shard 1,
+        // which resumes at the recorded step and completes byte-identical
+        // to an undisturbed run
+        let done = recv_done(&rx);
+        let clean = fleet2_free_run(req(1, 6));
+        assert_eq!(done.image, clean.image, "resume leaked into the math");
+        assert_eq!(done.nfes, clean.nfes);
+        assert_eq!(done.cfg_steps, clean.cfg_steps);
+        // ledger: counted as resumed, not as never-started salvage
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let stats = fleet.stats_json().unwrap();
+            let tel = stats.req("telemetry");
+            if tel
+                .req("counters")
+                .get("jobs_resumed_total{shard=0}")
+                .and_then(Value::as_f64)
+                == Some(1.0)
+            {
+                break;
+            }
+            assert!(Instant::now() < deadline, "resume counter never appeared");
             std::thread::sleep(Duration::from_millis(5));
         }
         fleet.shutdown();

@@ -41,6 +41,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::backend::Backend;
+use crate::coordinator::checkpoint::RequestCheckpoint;
 use crate::coordinator::engine::Engine;
 use crate::coordinator::request::{Completion, Request};
 use crate::fleet::router::ShardLoad;
@@ -58,6 +59,11 @@ pub struct Job {
     /// like the single-engine server did).
     pub started: Instant,
     pub reply: Sender<JobReply>,
+    /// §Robustness: mid-flight snapshot salvaged off a dead shard
+    /// (`--checkpoint-steps`). `Some` routes the job through
+    /// [`Engine::try_resume`] on the receiving shard instead of a fresh
+    /// submit, so the trajectory re-enters at the recorded step.
+    pub checkpoint: Option<Box<RequestCheckpoint>>,
 }
 
 /// What a shard sends back on a job's reply channel. Completions stay
@@ -243,10 +249,12 @@ pub(crate) fn run_replica<B: Backend>(
 /// The shard death path, shared by real pump failures and injected
 /// crashes. §Robustness ordering, deliberate:
 ///
-/// 1. **salvage** — pull back every admitted request that never started
-///    executing ([`Engine::salvage_unstarted`]); re-placed on a survivor
-///    it restarts from step 0 with the same init noise, so its eventual
-///    completion is byte-identical to an undisturbed run;
+/// 1. **salvage** — pull back every admitted request the engine can hand
+///    to a survivor ([`Engine::salvage_all`]): never-started requests
+///    restart from step 0 with the same init noise, and — with
+///    `--checkpoint-steps` armed — started requests carry their latest
+///    [`RequestCheckpoint`] and resume at the recorded step; either way
+///    the eventual completion is byte-identical to an undisturbed run;
 /// 2. **log the death line** (through [`log_event`], with the monotonic
 ///    event stamp) — a dead shard's registry is never scraped again, so
 ///    the log line is the one artifact guaranteed to survive, and it
@@ -268,22 +276,24 @@ fn die<B: Backend>(
     reason: String,
 ) {
     let mut salvaged = Vec::new();
-    for req in engine.salvage_unstarted() {
-        if let Some(p) = jobs.remove(&req.id) {
-            let cost = req.policy.max_nfes(req.steps);
+    for s in engine.salvage_all() {
+        if let Some(p) = jobs.remove(&s.req.id) {
             salvaged.push(Job {
-                req,
-                cost,
+                req: s.req,
+                cost: s.cost,
                 started: p.started,
                 reply: p.reply,
+                checkpoint: s.checkpoint,
             });
         }
     }
+    let resumed = salvaged.iter().filter(|j| j.checkpoint.is_some()).count();
+    let unstarted = salvaged.len() - resumed;
     let e = anyhow::Error::new(ShardFailed {
         shard,
         reason: format!(
-            "{reason} ({} never-started job(s) salvaged to survivors)",
-            salvaged.len()
+            "{reason} ({unstarted} never-started job(s) salvaged to survivors, \
+             {resumed} checkpointed job(s) resuming)"
         ),
     });
     let line = error_to_line(&e);
@@ -291,7 +301,7 @@ fn die<B: Backend>(
         log::Level::Error,
         &format!("shard-{shard}"),
         &format!(
-            "fatal, marking dead ({} mid-flight job(s) refused, {} salvaged): {line}",
+            "fatal, marking dead ({} mid-flight job(s) refused, {} salvaged, {resumed} resuming): {line}",
             jobs.len(),
             salvaged.len()
         ),
@@ -364,6 +374,7 @@ fn admit<B: Backend>(
         cost,
         started,
         reply,
+        checkpoint,
     } = job;
     // §Observability: the queue stage — front-door arrival to engine
     // admission, minus the admission/placement time the router already
@@ -405,7 +416,15 @@ fn admit<B: Backend>(
         }
     }
     let id = req.id;
-    match engine.try_submit(req) {
+    // §Robustness: a salvaged checkpoint re-enters mid-trajectory through
+    // the resume path; everything else is a fresh submit. Error handling
+    // is identical — a resume that no longer fits is refused like any
+    // malformed request.
+    let admitted = match &checkpoint {
+        Some(ck) => engine.try_resume(req, ck),
+        None => engine.try_submit(req),
+    };
+    match admitted {
         Ok(()) => {
             jobs.insert(id, Pending { started, reply });
         }

@@ -94,6 +94,9 @@ fn print_help() {
                                 error-every=50,stall-at=120:200 (docs/ROBUSTNESS.md)\n\
            --max-batch-retries N  per-batch transient-fault retry budget (default 0)\n\
            --shard-respawn      supervisor respawns dead shards (capped backoff)\n\
+           --checkpoint-steps N checkpoint each request every N completed steps so\n\
+                                a dying shard's started work resumes mid-flight on\n\
+                                survivors, byte-identical (default 0 = off)\n\
          replay:   --trace FILE (required; a --trace-out capture)\n\
            --addr HOST:PORT --speed X --connections N --timeout-ms N\n\
            --max-in-flight N    closed-loop: ignore the captured schedule,\n\
@@ -274,6 +277,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fault_spec: args.get("fault-spec").map(str::to_owned),
         max_batch_retries: args.usize("max-batch-retries", 0),
         shard_respawn: args.flag("shard-respawn"),
+        checkpoint_steps: args.usize("checkpoint-steps", 0),
     };
     // named policy presets extend the registry before the first request —
     // a bad file is a startup error, not a first-request surprise
@@ -366,8 +370,10 @@ fn cmd_replay(args: &Args) -> Result<()> {
     let survival = match chaos::replay::fetch_survival(&cfg.addr, cfg.timeout_ms) {
         Ok(s) => {
             println!(
-                "survival: {} batch retries, {} jobs salvaged, {} shard deaths, {} respawns",
-                s.batch_retries, s.jobs_salvaged, s.shards_died, s.shards_respawned
+                "survival: {} batch retries, {} jobs salvaged, {} jobs resumed, \
+                 {} shard deaths, {} respawns",
+                s.batch_retries, s.jobs_salvaged, s.jobs_resumed, s.shards_died,
+                s.shards_respawned
             );
             Some(s)
         }

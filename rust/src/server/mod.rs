@@ -257,6 +257,12 @@ pub struct ServerConfig {
     /// exponential backoff (`--shard-respawn`; default off — a dead
     /// shard stays dead and survivors absorb the load).
     pub shard_respawn: bool,
+    /// §Robustness: checkpoint every N completed denoising steps per
+    /// request (`--checkpoint-steps`, default 0 = off — byte- and
+    /// allocation-identical to a server without the feature). Armed, a
+    /// dying shard's started requests resume mid-trajectory on
+    /// survivors instead of being refused.
+    pub checkpoint_steps: usize,
 }
 
 impl Default for ServerConfig {
@@ -280,6 +286,7 @@ impl Default for ServerConfig {
             fault_spec: None,
             max_batch_retries: 0,
             shard_respawn: false,
+            checkpoint_steps: 0,
         }
     }
 }
@@ -309,6 +316,7 @@ impl ServerConfig {
             shed_infeasible: self.shed_infeasible,
             max_batch_retries: self.max_batch_retries,
             respawn: self.shard_respawn,
+            checkpoint_steps: self.checkpoint_steps,
         }
     }
 }
@@ -894,7 +902,7 @@ where
     }
     let shard_plan = plan.clone();
     let fleet = Arc::new(Fleet::launch(
-        move |_shard| factory().map(|be| FaultyBackend::new(be, shard_plan.clone())),
+        move |shard| factory().map(|be| FaultyBackend::with_shard(be, shard_plan.clone(), shard as u64)),
         cfg.fleet_config(),
     ));
     fleet.set_fault_plan(plan);
@@ -967,16 +975,20 @@ mod tests {
         let scfg = ServerConfig {
             max_batch_retries: 3,
             shard_respawn: true,
+            checkpoint_steps: 2,
             ..cfg()
         };
         let fc = scfg.fleet_config();
         assert_eq!(fc.max_batch_retries, 3);
         assert!(fc.respawn);
-        // and the defaults keep both behaviours off — no retry, no
-        // respawn — so pre-existing deployments are unchanged
+        assert_eq!(fc.checkpoint_steps, 2);
+        // and the defaults keep every behaviour off — no retry, no
+        // respawn, no checkpointing — so pre-existing deployments are
+        // unchanged
         let fc = cfg().fleet_config();
         assert_eq!(fc.max_batch_retries, 0);
         assert!(!fc.respawn);
+        assert_eq!(fc.checkpoint_steps, 0);
     }
 
     #[test]

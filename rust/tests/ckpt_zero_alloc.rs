@@ -1,0 +1,113 @@
+//! §Robustness acceptance pin: checkpointing stays off the allocation
+//! hot path. With `--checkpoint-steps 1` — the most aggressive setting,
+//! a snapshot after *every* completed denoising step — the steady-state
+//! pump must make zero heap allocations: capture buffers are sized once
+//! at admission ([`CheckpointStore::register`]) and every per-step
+//! capture is `clear()` + `extend_from_slice` into retained capacity.
+//!
+//! Same shape as `zero_alloc.rs` / `fault_zero_alloc.rs`: a counting
+//! global allocator over `System`, exactly one `#[test]` so nothing else
+//! allocates inside the measurement window, warmup pumps to capacity,
+//! then a measured window asserting zero allocations.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use adaptive_guidance::backend::GmmBackend;
+use adaptive_guidance::coordinator::engine::Engine;
+use adaptive_guidance::coordinator::policy::{ag, cfg};
+use adaptive_guidance::coordinator::request::Request;
+use adaptive_guidance::sched::{Admission, SchedulerKind};
+use adaptive_guidance::sim::gmm::Gmm;
+
+struct CountingAlloc;
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+const STEPS: usize = 48;
+const WARMUP_PUMPS: usize = 16;
+const MEASURED_PUMPS: usize = 16;
+
+#[test]
+fn checkpoint_armed_pump_is_allocation_free() {
+    let be = GmmBackend::new(Gmm::axes(16, 4, 3.0, 0.05));
+    let mut e = Engine::with_scheduler(
+        be,
+        SchedulerKind::Fifo.build(),
+        Admission::unlimited(),
+    )
+    .expect("engine over the GMM oracle");
+    // checkpoint after every completed step — the heaviest configuration
+    e.set_checkpoints(1);
+    for i in 0..8u64 {
+        let policy = if i % 2 == 0 { cfg(2.0) } else { ag(2.0, 0.99) };
+        let r = Request::new(
+            i,
+            "gmm",
+            vec![1 + (i % 4) as i32, 0, 0, 0],
+            900 + i,
+            STEPS,
+            policy,
+        );
+        e.submit(r);
+    }
+
+    // warmup: buffer pools, batch buffers, scheduler state, checkpoint
+    // slots and the checkpoint_bytes histogram all reach capacity here
+    let mut done = 0usize;
+    for _ in 0..WARMUP_PUMPS {
+        done += e.pump().expect("warmup pump").len();
+    }
+    assert_eq!(done, 0, "warmup must stay mid-flight");
+
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    let mut completed = 0usize;
+    for _ in 0..MEASURED_PUMPS {
+        completed += e.pump().expect("steady-state pump").len();
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    let allocs = ALLOCS.load(Ordering::SeqCst);
+
+    assert_eq!(completed, 0, "measurement window must stay mid-flight");
+    assert_eq!(
+        allocs, 0,
+        "checkpoint-armed pump() allocated {allocs} time(s) at steady state \
+         — captures must be swap-don't-copy into buffers sized at admission"
+    );
+
+    // and the workload still drains to correct completions
+    let out = e.drain().expect("drain");
+    assert_eq!(out.len(), 8);
+}

@@ -73,4 +73,27 @@ grep -q "survived_batch_retries" BENCH_replay.json
 kill "$server_pid" 2>/dev/null || true
 wait "$server_pid" 2>/dev/null || true
 server_pid=""
+
+# resume leg (§Robustness): shard 0 dies fatally mid-run with per-step
+# checkpointing armed, so its started requests resume on shard 1 instead
+# of being replayed from scratch. The digest check is the point: resumed
+# completions must be byte-identical to the capture-time (fault-free)
+# bytes. shard=0: targets the fault so the survivor stays transparent.
+"$agd" serve --backend gmm --shards 2 --addr "$addr" \
+    --checkpoint-steps 1 --fault-spec shard=0:fail-after=20 --shard-respawn &
+server_pid=$!
+for _ in $(seq 1 100); do
+    if (exec 3<>"/dev/tcp/127.0.0.1/${port}") 2>/dev/null; then
+        exec 3>&- 3<&-
+        break
+    fi
+    sleep 0.1
+done
+"$agd" replay --trace "$capture" --addr "$addr" \
+    --speed 20 --connections 4 --out BENCH_replay.json
+grep -q "survived_shard_deaths" BENCH_replay.json
+
+kill "$server_pid" 2>/dev/null || true
+wait "$server_pid" 2>/dev/null || true
+server_pid=""
 echo "chaos: OK (wrote BENCH_replay.json, survival counters included)"

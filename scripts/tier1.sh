@@ -21,6 +21,10 @@ cargo test -q --test fleet_integration
 # serving shard's denoise path unconditionally, so a regression here is
 # a per-batch allocation tax on every deployment
 cargo test -q --test fault_zero_alloc
+# checkpoint-armed pump must also stay allocation-free: with
+# --checkpoint-steps 1 every completed step captures a snapshot, and all
+# of it has to land in buffers sized at admission
+cargo test -q --test ckpt_zero_alloc
 # the robustness invariant (faults change who is served, never what):
 # scenario corpus (incl. backend_fault_storm + shard_respawn) +
 # capture->replay digest check, then the same replay against a fleet
