@@ -1,0 +1,198 @@
+//! **Connection-scaling bench** (§Scale) — the reactor front end vs the
+//! thread-per-connection baseline over real TCP, closed-loop.
+//!
+//! For each front end (`--net reactor|threads`) and each connection
+//! count in `--conns-sweep` (default 32,256,1024), the bench opens that
+//! many persistent connections to an in-process `serve_on` fleet, then
+//! runs `--rounds` closed-loop rounds: every connection has exactly one
+//! id-tagged request in flight, a round completes when every reply has
+//! arrived. Requests are tiny (`--steps`, default 4, on a small GMM) so
+//! the measured quantity is front-end dispatch overhead — threads,
+//! wakeups, reply routing — not denoising time.
+//!
+//! Reported per row: total requests served, wall seconds, throughput
+//! (req/s), and mean per-round latency. The expectation this bench
+//! guards: reactor throughput stays flat (or grows) as connections
+//! scale to 1024, while the baseline pays per-connection thread costs;
+//! both serve byte-identical bytes (`rust/tests/reactor_integration.rs`
+//! proves parity — this file only times).
+//!
+//! Run: `cargo bench --bench conn_scaling -- --conns-sweep 32,256,1024`
+//! JSON: `--out conn_scaling.json`, or `--merge-into BENCH_perf.json`
+//! to fold the sweep into the shared perf trajectory under
+//! `"conn_scaling"` (`scripts/bench.sh` does this).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use adaptive_guidance::backend::GmmBackend;
+use adaptive_guidance::coordinator::spec::PolicyRegistry;
+use adaptive_guidance::eval::harness::print_table;
+use adaptive_guidance::fleet::Fleet;
+use adaptive_guidance::server::{serve_on, NetMode, ServerConfig};
+use adaptive_guidance::sim::gmm::Gmm;
+use adaptive_guidance::util::cli::Args;
+use adaptive_guidance::util::json;
+
+fn spawn_server(net: NetMode) -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("local_addr");
+    let scfg = ServerConfig {
+        model: "gmm".into(),
+        addr: addr.to_string(),
+        shards: 2,
+        workers: 2,
+        net,
+        ..Default::default()
+    };
+    let fleet = Arc::new(Fleet::launch(
+        |_shard| Ok(GmmBackend::new(Gmm::axes(8, 3, 3.0, 0.05))),
+        scfg.fleet_config(),
+    ));
+    let registry = Arc::new(PolicyRegistry::builtin());
+    std::thread::spawn(move || {
+        let _ = serve_on(listener, fleet, scfg, registry);
+    });
+    addr
+}
+
+struct Row {
+    net: &'static str,
+    conns: usize,
+    requests: usize,
+    secs: f64,
+    round_ms: f64,
+}
+
+fn drive(net: NetMode, name: &'static str, conns: usize, rounds: usize, steps: usize) -> Row {
+    let addr = spawn_server(net);
+    let mut socks: Vec<(TcpStream, BufReader<TcpStream>)> = (0..conns)
+        .map(|_| {
+            let s = TcpStream::connect(addr).expect("connect");
+            s.set_read_timeout(Some(Duration::from_secs(60))).ok();
+            let r = BufReader::new(s.try_clone().expect("clone"));
+            (s, r)
+        })
+        .collect();
+    // one warm-up round outside the timed window (thread spawn, page
+    // faults, fleet warm-up), then the measured rounds
+    let mut round_times = Vec::with_capacity(rounds);
+    for round in 0..rounds + 1 {
+        let t0 = Instant::now();
+        for (i, (w, _)) in socks.iter_mut().enumerate() {
+            writeln!(
+                w,
+                r#"{{"id": {round}, "prompt": "red circle", "policy": "cfg", "steps": {steps}, "guidance": 2.0, "seed": {i}}}"#
+            )
+            .expect("write");
+        }
+        for (_, r) in socks.iter_mut() {
+            let mut line = String::new();
+            let n = r.read_line(&mut line).expect("read");
+            assert!(n > 0, "server closed a connection mid-round");
+            assert!(
+                !line.contains("\"error\""),
+                "bench request refused: {line}"
+            );
+        }
+        if round > 0 {
+            round_times.push(t0.elapsed().as_secs_f64());
+        }
+    }
+    let secs: f64 = round_times.iter().sum();
+    Row {
+        net: name,
+        conns,
+        requests: conns * rounds,
+        secs,
+        round_ms: 1000.0 * secs / rounds as f64,
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let rounds = args.usize("rounds", 4);
+    let steps = args.usize("steps", 4);
+    let sweep: Vec<usize> = args
+        .get_or("conns-sweep", "32,256,1024")
+        .split(',')
+        .map(|tok| tok.trim().parse().expect("--conns-sweep: integer list"))
+        .collect();
+
+    println!(
+        "# Connection scaling — closed-loop, {rounds} rounds, cfg steps={steps}, \
+         reactor vs threads\n"
+    );
+
+    let mut rows = Vec::new();
+    for &conns in &sweep {
+        for (net, name) in [(NetMode::Reactor, "reactor"), (NetMode::Threads, "threads")] {
+            rows.push(drive(net, name, conns, rounds, steps));
+        }
+    }
+
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.net.to_string(),
+                r.conns.to_string(),
+                r.requests.to_string(),
+                format!("{:.3}", r.secs),
+                format!("{:.0}", r.requests as f64 / r.secs.max(1e-9)),
+                format!("{:.1}", r.round_ms),
+            ]
+        })
+        .collect();
+    print_table(
+        &["net", "conns", "requests", "secs", "req/s", "round ms"],
+        &table,
+    );
+
+    let rows_json = json::arr(
+        rows.iter()
+            .map(|r| {
+                json::obj(vec![
+                    ("net", json::s(r.net)),
+                    ("conns", json::num(r.conns as f64)),
+                    ("requests", json::num(r.requests as f64)),
+                    ("secs", json::num(r.secs)),
+                    ("rps", json::num(r.requests as f64 / r.secs.max(1e-9))),
+                    ("round_ms", json::num(r.round_ms)),
+                ])
+            })
+            .collect(),
+    );
+    let sweep_obj = json::obj(vec![
+        ("rounds", json::num(rounds as f64)),
+        ("steps", json::num(steps as f64)),
+        ("rows", rows_json),
+    ]);
+
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, json::to_string(&sweep_obj)).expect("write --out");
+        eprintln!("results written to {path}");
+    }
+
+    // fold into the shared perf trajectory, same contract as
+    // sched_tail_latency: a present-but-unparseable file is a hard error
+    // (never clobber a recorded trajectory)
+    if let Some(path) = args.get("merge-into") {
+        let mut map = match std::fs::read_to_string(path) {
+            Ok(text) => match json::parse(&text) {
+                Ok(json::Value::Obj(map)) => map,
+                Ok(_) | Err(_) => panic!(
+                    "--merge-into {path}: existing file is not a JSON object; \
+                     refusing to overwrite it (delete it to start fresh)"
+                ),
+            },
+            Err(_) => Default::default(),
+        };
+        map.insert("conn_scaling".to_owned(), sweep_obj);
+        std::fs::write(path, json::to_string(&json::Value::Obj(map)))
+            .expect("write --merge-into");
+        eprintln!("connection sweep merged into {path}");
+    }
+}

@@ -11,6 +11,11 @@
 //! send a {"prompt": ...}     write one protocol line (rest of line verbatim)
 //! expect-ok a                read a's next reply; fail if it has `error`
 //! expect-code a queue_full   read a's next reply; fail unless code matches
+//! expect-id a 3              await the reply echoing wire id 3 (pipelined
+//!                            connections answer out of order; progress
+//!                            events are skipped, other ids stashed for
+//!                            their own expect); fail if it has `error`
+//! expect-id-code a 3 canceled  same await, but fail unless code matches
 //! expect-closed a            fail unless the server closed a's socket
 //! send-raw a bytes…          raw bytes, no newline (\n \r \t \\ \xNN escapes)
 //! send-raw-repeat a 61 8192  one byte (hex) repeated N times, no newline
@@ -51,6 +56,11 @@ pub enum Op {
     Send { conn: String, line: String },
     ExpectOk(String),
     ExpectCode { conn: String, code: String },
+    /// Await the reply echoing wire id `id` on a pipelined connection
+    /// (skipping progress events, stashing other ids); fail on `error`.
+    ExpectId { conn: String, id: u64 },
+    /// Await wire id `id`'s reply and require its error `code`.
+    ExpectIdCode { conn: String, id: u64, code: String },
     ExpectClosed(String),
     SendRaw { conn: String, bytes: Vec<u8> },
     SendRawRepeat { conn: String, byte: u8, count: usize },
@@ -140,6 +150,27 @@ fn parse_op(line: &str) -> Result<Op> {
                 code: code.trim().to_owned(),
             }
         }
+        "expect-id" => {
+            let parts: Vec<&str> = rest.split_whitespace().collect();
+            let [conn, id] = parts.as_slice() else {
+                bail!("`expect-id` needs: conn id");
+            };
+            Op::ExpectId {
+                conn: (*conn).to_owned(),
+                id: id.parse().map_err(|_| anyhow!("bad wire id `{id}`"))?,
+            }
+        }
+        "expect-id-code" => {
+            let parts: Vec<&str> = rest.split_whitespace().collect();
+            let [conn, id, code] = parts.as_slice() else {
+                bail!("`expect-id-code` needs: conn id code");
+            };
+            Op::ExpectIdCode {
+                conn: (*conn).to_owned(),
+                id: id.parse().map_err(|_| anyhow!("bad wire id `{id}`"))?,
+                code: (*code).to_owned(),
+            }
+        }
         "expect-closed" => Op::ExpectClosed(one_word("connection name")?),
         "send-raw" => {
             let (conn, payload) = rest
@@ -221,6 +252,9 @@ struct Conn {
     /// Request lines sent but not yet consumed by an expect op, FIFO —
     /// the line protocol answers in order per connection.
     pending: VecDeque<String>,
+    /// Replies read while hunting for a specific wire id, parked for the
+    /// expect op that wants them (pipelined replies interleave freely).
+    stash: Vec<Value>,
 }
 
 /// Interprets a parsed scenario against a live server + its fleet handle.
@@ -289,6 +323,51 @@ impl<'a> Director<'a> {
         json::parse(line.trim()).map_err(|e| anyhow!("reply on `{name}` is not JSON: {line:?} ({e})"))
     }
 
+    /// Read until the reply echoing `id` arrives: progress events are
+    /// skipped, replies for other ids are stashed for their own expect
+    /// op, and a previously stashed match is consumed first.
+    fn read_reply_for_id(&mut self, name: &str, id: u64) -> Result<Value> {
+        let want = Some(id as f64);
+        let conn = self.conn(name)?;
+        if let Some(pos) = conn
+            .stash
+            .iter()
+            .position(|v| v.get("id").and_then(Value::as_f64) == want)
+        {
+            return Ok(conn.stash.remove(pos));
+        }
+        loop {
+            let mut line = String::new();
+            let n = conn
+                .reader
+                .read_line(&mut line)
+                .with_context(|| format!("reading reply for id {id} on `{name}`"))?;
+            anyhow::ensure!(n > 0, "server closed `{name}` before replying to id {id}");
+            let v = json::parse(line.trim())
+                .map_err(|e| anyhow!("reply on `{name}` is not JSON: {line:?} ({e})"))?;
+            if v.get("event").and_then(Value::as_str) == Some("progress") {
+                continue;
+            }
+            if v.get("id").and_then(Value::as_f64) == want {
+                return Ok(v);
+            }
+            conn.stash.push(v);
+        }
+    }
+
+    /// Pull the sent request line carrying `"id": <id>` out of the
+    /// pending set (pipelined expects consume out of FIFO order).
+    fn take_request_for_id(&mut self, name: &str, id: u64) -> Result<String> {
+        let conn = self.conn(name)?;
+        let pos = conn.pending.iter().position(|l| {
+            json::parse(l)
+                .ok()
+                .and_then(|v| v.get("id").and_then(Value::as_f64))
+                == Some(id as f64)
+        });
+        Ok(pos.and_then(|p| conn.pending.remove(p)).unwrap_or_default())
+    }
+
     fn step(&mut self, op: &Op) -> Result<()> {
         match op {
             Op::Connect(name) => {
@@ -302,6 +381,7 @@ impl<'a> Director<'a> {
                         writer: stream,
                         reader,
                         pending: VecDeque::new(),
+                        stash: Vec::new(),
                     },
                 );
             }
@@ -337,6 +417,30 @@ impl<'a> Director<'a> {
                     json::to_string(&v)
                 );
                 self.conn(name)?.pending.pop_front();
+            }
+            Op::ExpectId { conn: name, id } => {
+                let v = self.read_reply_for_id(name, *id)?;
+                anyhow::ensure!(
+                    v.get("error").is_none(),
+                    "expected a completion for id {id} on `{name}`, got {}",
+                    json::to_string(&v)
+                );
+                let request_line = self.take_request_for_id(name, *id)?;
+                self.replies.push(Reply {
+                    conn: name.clone(),
+                    request_line,
+                    value: v,
+                });
+            }
+            Op::ExpectIdCode { conn: name, id, code } => {
+                let v = self.read_reply_for_id(name, *id)?;
+                let got = v.get("code").and_then(Value::as_str).unwrap_or("");
+                anyhow::ensure!(
+                    got == code,
+                    "expected code `{code}` for id {id} on `{name}`, got {}",
+                    json::to_string(&v)
+                );
+                self.take_request_for_id(name, *id)?;
             }
             Op::ExpectClosed(name) => {
                 let conn = self.conn(name)?;
@@ -433,9 +537,11 @@ mod tests {
             wait-respawn 1 2000
             drain
             sleep 25
+            expect-id b 3
+            expect-id-code b 4 canceled
         "#;
         let ops = parse_script(script).unwrap();
-        assert_eq!(ops.len(), 15);
+        assert_eq!(ops.len(), 17);
         assert_eq!(ops[0], Op::Connect("a".into()));
         let Op::Send { conn, line } = &ops[1] else { panic!("{:?}", ops[1]) };
         assert_eq!(conn, "a");
@@ -453,6 +559,11 @@ mod tests {
         assert_eq!(ops[12], Op::WaitRespawn { shard: 1, timeout_ms: 2000 });
         assert_eq!(ops[13], Op::Drain);
         assert_eq!(ops[14], Op::Sleep(25));
+        assert_eq!(ops[15], Op::ExpectId { conn: "b".into(), id: 3 });
+        assert_eq!(
+            ops[16],
+            Op::ExpectIdCode { conn: "b".into(), id: 4, code: "canceled".into() }
+        );
     }
 
     #[test]
@@ -483,5 +594,11 @@ mod tests {
         assert!(err.to_string().contains("line 1"), "{err}");
         let err = parse_script("wait-respawn 0\n").unwrap_err();
         assert!(err.to_string().contains("timeout-ms"), "{err}");
+        let err = parse_script("expect-id a\n").unwrap_err();
+        assert!(err.to_string().contains("conn id"), "{err}");
+        let err = parse_script("expect-id-code a 3\n").unwrap_err();
+        assert!(err.to_string().contains("conn id code"), "{err}");
+        let err = parse_script("expect-id a x\n").unwrap_err();
+        assert!(err.to_string().contains("bad wire id"), "{err}");
     }
 }

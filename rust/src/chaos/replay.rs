@@ -16,6 +16,17 @@
 //! bounded concurrency?" — the `achieved_rps` scalar in
 //! `BENCH_replay.json` is the throughput measurement.
 //!
+//! `--pipeline DEPTH` is closed-loop over the **pipelined wire protocol**
+//! (§Scale, `docs/PROTOCOL.md`): every request is tagged with a unique
+//! wire `"id"`, up to `DEPTH` ride one connection concurrently, and
+//! replies are matched by their echoed id rather than FIFO — which is
+//! what lets the reactor front end interleave them out of order. Streamed
+//! `{"event": "progress"}` lines are skipped (they are samples, not
+//! replies); wire latency is recorded per id at its *terminal* reply.
+//! This is the depth-N/conn throughput measurement for the reactor;
+//! against `--net threads` it degrades gracefully (the threaded loop
+//! answers in order, ids still match).
+//!
 //! Per request the replayer records wire latency (send → reply line
 //! read), the structured `code` on shed/error replies, and — when the
 //! trace record carries a digest *and* the envelope asked for the image —
@@ -60,6 +71,11 @@ pub struct ReplayConfig {
     /// ignores record offsets and keeps up to `N` requests in flight,
     /// sending the next the moment a reply frees a slot.
     pub max_in_flight: usize,
+    /// Pipelined closed-loop depth (§Scale): `N>0` tags every request
+    /// with a unique wire `"id"`, keeps up to `N` in flight per
+    /// connection, and matches replies by echoed id (progress events
+    /// skipped). Takes precedence over `max_in_flight`.
+    pub pipeline: usize,
 }
 
 impl Default for ReplayConfig {
@@ -70,6 +86,7 @@ impl Default for ReplayConfig {
             connections: 4,
             timeout_ms: 30_000,
             max_in_flight: 0,
+            pipeline: 0,
         }
     }
 }
@@ -199,6 +216,43 @@ pub fn fetch_survival(addr: &str, timeout_ms: u64) -> Result<SurvivalCounters> {
 struct Expected {
     sent_at: Instant,
     digest: Option<String>,
+    /// The wire id the request was tagged with (pipelined mode only);
+    /// `None` matches FIFO.
+    wire_id: Option<u64>,
+}
+
+/// Classify one terminal reply line into the outcome tallies (shared by
+/// the FIFO and by-id readers).
+fn tally_reply(out: &mut ReplayOutcome, v: &Value, exp: &Expected) {
+    if v.get("error").is_some() {
+        let code = v
+            .get("code")
+            .and_then(Value::as_str)
+            .unwrap_or("error")
+            .to_owned();
+        *out.shed.entry(code).or_insert(0) += 1;
+        return;
+    }
+    out.completed += 1;
+    if let Some(expected) = &exp.digest {
+        if let Some(got) = reply_digest(v) {
+            out.digest_checked += 1;
+            if got != *expected {
+                out.digest_mismatches += 1;
+            }
+        }
+    }
+}
+
+/// The record's request line with a replayer-assigned wire `"id"`
+/// (pipelined mode). Overwrites any captured id: replay ids must be
+/// unique per connection for by-id matching.
+fn tagged_line(rec: &TraceRecord, id: u64) -> String {
+    let mut env = rec.envelope.clone();
+    if let Value::Obj(m) = &mut env {
+        m.insert("id".into(), json::num(id as f64));
+    }
+    json::to_string(&env)
 }
 
 /// Replay `records` (already offset-sorted — [`super::trace::read_trace`]
@@ -219,6 +273,7 @@ pub fn replay(records: &[TraceRecord], cfg: &ReplayConfig) -> Result<ReplayOutco
     let speed = cfg.speed;
     let timeout = Duration::from_millis(cfg.timeout_ms.max(1));
     let max_in_flight = cfg.max_in_flight;
+    let pipeline = cfg.pipeline;
     let addr = cfg.addr.clone();
     let t0 = Instant::now();
     let handles: Vec<_> = per_conn
@@ -227,7 +282,7 @@ pub fn replay(records: &[TraceRecord], cfg: &ReplayConfig) -> Result<ReplayOutco
         .map(|batch| {
             let addr = addr.clone();
             std::thread::spawn(move || {
-                run_connection(&addr, batch, epoch, speed, timeout, max_in_flight)
+                run_connection(&addr, batch, epoch, speed, timeout, max_in_flight, pipeline)
             })
         })
         .collect();
@@ -250,9 +305,127 @@ pub fn replay(records: &[TraceRecord], cfg: &ReplayConfig) -> Result<ReplayOutco
     Ok(outcome)
 }
 
+/// Closed-loop slot bookkeeping shared between a connection's writer and
+/// reader: outstanding-request count + a flag the reader raises when the
+/// connection dies so the writer stops waiting.
+type Slots = std::sync::Arc<(std::sync::Mutex<usize>, std::sync::Condvar)>;
+type DeadFlag = std::sync::Arc<std::sync::atomic::AtomicBool>;
+
+/// The historical reader: replies matched FIFO to what was sent (the
+/// line protocol answers in order on one connection).
+fn read_replies_fifo(
+    stream: TcpStream,
+    rx: std::sync::mpsc::Receiver<Expected>,
+    slots: &Slots,
+    dead: &DeadFlag,
+    cap: usize,
+) -> ReplayOutcome {
+    let mut out = ReplayOutcome::default();
+    let mut lines = BufReader::new(stream);
+    for exp in rx.iter() {
+        let mut line = String::new();
+        match lines.read_line(&mut line) {
+            Ok(n) if n > 0 => {}
+            // EOF/timeout: this reply — and every reply behind it on
+            // this connection — is gone
+            _ => {
+                out.transport_errors += 1;
+                out.transport_errors += rx.try_iter().count();
+                dead.store(true, std::sync::atomic::Ordering::SeqCst);
+                slots.1.notify_all();
+                return out;
+            }
+        }
+        if cap > 0 {
+            *slots.0.lock().unwrap() -= 1;
+            slots.1.notify_one();
+        }
+        out.latencies_ms
+            .push(exp.sent_at.elapsed().as_secs_f64() * 1e3);
+        let Ok(v) = json::parse(line.trim()) else {
+            out.transport_errors += 1;
+            continue;
+        };
+        tally_reply(&mut out, &v, &exp);
+    }
+    out
+}
+
+/// The pipelined reader (§Scale): replies matched by echoed wire `"id"`,
+/// in whatever order the reactor interleaves them; streamed
+/// `{"event": "progress"}` lines are skipped. The writer registers each
+/// [`Expected`] *before* writing its request, so a reply can never beat
+/// its bookkeeping here.
+fn read_replies_by_id(
+    stream: TcpStream,
+    rx: std::sync::mpsc::Receiver<Expected>,
+    slots: &Slots,
+    dead: &DeadFlag,
+) -> ReplayOutcome {
+    use std::sync::mpsc::TryRecvError;
+    let mut out = ReplayOutcome::default();
+    let mut lines = BufReader::new(stream);
+    let mut pending: std::collections::HashMap<u64, Expected> = std::collections::HashMap::new();
+    let mut closed = false;
+    loop {
+        loop {
+            match rx.try_recv() {
+                Ok(exp) => {
+                    let id = exp.wire_id.expect("pipelined Expected carries an id");
+                    pending.insert(id, exp);
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    closed = true;
+                    break;
+                }
+            }
+        }
+        if closed && pending.is_empty() {
+            return out;
+        }
+        let mut line = String::new();
+        match lines.read_line(&mut line) {
+            Ok(n) if n > 0 => {}
+            // EOF/timeout: every reply still owed on this connection is
+            // gone (the channel may still hold Expecteds the loop above
+            // has not drained yet)
+            _ => {
+                out.transport_errors += pending.len() + rx.try_iter().count();
+                dead.store(true, std::sync::atomic::Ordering::SeqCst);
+                slots.1.notify_all();
+                return out;
+            }
+        }
+        let Ok(v) = json::parse(line.trim()) else {
+            out.transport_errors += 1;
+            continue;
+        };
+        // progress events are samples, not replies: they do not free a
+        // slot and carry no latency observation
+        if v.get("event").and_then(Value::as_str) == Some("progress") {
+            continue;
+        }
+        let Some(exp) = v
+            .get("id")
+            .and_then(Value::as_f64)
+            .and_then(|id| pending.remove(&(id as u64)))
+        else {
+            // a reply the replayer cannot attribute (no id, unknown id)
+            out.transport_errors += 1;
+            continue;
+        };
+        *slots.0.lock().unwrap() -= 1;
+        slots.1.notify_one();
+        out.latencies_ms
+            .push(exp.sent_at.elapsed().as_secs_f64() * 1e3);
+        tally_reply(&mut out, &v, &exp);
+    }
+}
+
 /// One connection: a writer (this thread — pacing the captured schedule
-/// open-loop, or gating on free slots closed-loop) and a reader thread
-/// matching replies FIFO to what was sent.
+/// open-loop, or gating on free slots closed-loop/pipelined) and a
+/// reader thread matching replies FIFO or by wire id.
 fn run_connection(
     addr: &str,
     batch: Vec<TraceRecord>,
@@ -260,75 +433,36 @@ fn run_connection(
     speed: f64,
     timeout: Duration,
     max_in_flight: usize,
+    pipeline: usize,
 ) -> Result<ReplayOutcome> {
+    // pipelined mode is closed-loop at the pipeline depth
+    let cap = if pipeline > 0 { pipeline } else { max_in_flight };
     let stream =
         TcpStream::connect(addr).with_context(|| format!("replay connect {addr}"))?;
     stream.set_read_timeout(Some(timeout)).ok();
     let reader_stream = stream.try_clone().context("replay stream clone")?;
     let (tx, rx) = channel::<Expected>();
-    // closed-loop bookkeeping: outstanding-request count + a flag the
-    // reader raises when the connection dies so the writer stops waiting
-    let slots = std::sync::Arc::new((std::sync::Mutex::new(0usize), std::sync::Condvar::new()));
-    let conn_dead = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let slots: Slots =
+        std::sync::Arc::new((std::sync::Mutex::new(0usize), std::sync::Condvar::new()));
+    let conn_dead: DeadFlag =
+        std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     let (r_slots, r_dead) = (slots.clone(), conn_dead.clone());
     let reader = std::thread::spawn(move || {
-        let mut out = ReplayOutcome::default();
-        let mut lines = BufReader::new(reader_stream);
-        for exp in rx {
-            let mut line = String::new();
-            match lines.read_line(&mut line) {
-                Ok(n) if n > 0 => {}
-                // EOF/timeout: this reply — and every reply behind it on
-                // this connection — is gone
-                _ => {
-                    out.transport_errors += 1;
-                    out.transport_errors += rx.try_iter().count();
-                    r_dead.store(true, std::sync::atomic::Ordering::SeqCst);
-                    r_slots.1.notify_all();
-                    return out;
-                }
-            }
-            if max_in_flight > 0 {
-                *r_slots.0.lock().unwrap() -= 1;
-                r_slots.1.notify_one();
-            }
-            out.latencies_ms
-                .push(exp.sent_at.elapsed().as_secs_f64() * 1e3);
-            let Ok(v) = json::parse(line.trim()) else {
-                out.transport_errors += 1;
-                continue;
-            };
-            if v.get("error").is_some() {
-                let code = v
-                    .get("code")
-                    .and_then(Value::as_str)
-                    .unwrap_or("error")
-                    .to_owned();
-                *out.shed.entry(code).or_insert(0) += 1;
-                continue;
-            }
-            out.completed += 1;
-            if let Some(expected) = exp.digest {
-                if let Some(got) = reply_digest(&v) {
-                    out.digest_checked += 1;
-                    if got != expected {
-                        out.digest_mismatches += 1;
-                    }
-                }
-            }
+        if pipeline > 0 {
+            read_replies_by_id(reader_stream, rx, &r_slots, &r_dead)
+        } else {
+            read_replies_fifo(reader_stream, rx, &r_slots, &r_dead, cap)
         }
-        out
     });
     let mut writer = stream;
     let mut sent = 0usize;
     let mut write_errors = 0usize;
-    for rec in &batch {
-        if max_in_flight > 0 {
+    for (i, rec) in batch.iter().enumerate() {
+        if cap > 0 {
             // closed-loop: ignore the captured schedule, wait for a slot
             let (lock, cv) = &*slots;
             let mut in_flight = lock.lock().unwrap();
-            while *in_flight >= max_in_flight
-                && !conn_dead.load(std::sync::atomic::Ordering::SeqCst)
+            while *in_flight >= cap && !conn_dead.load(std::sync::atomic::Ordering::SeqCst)
             {
                 let (guard, _) = cv
                     .wait_timeout(in_flight, Duration::from_millis(100))
@@ -351,23 +485,51 @@ fn run_connection(
                 std::thread::sleep(due - now);
             }
         }
-        let line = rec.request_line();
-        let sent_at = Instant::now();
-        if writer
-            .write_all(line.as_bytes())
-            .and_then(|()| writer.write_all(b"\n"))
-            .is_err()
-        {
-            // connection is gone; everything left on it is unserved
-            write_errors = batch.len() - sent;
-            break;
-        }
-        sent += 1;
         let digest = rec
             .digest
             .clone()
             .filter(|_| rec.wants_image());
-        let _ = tx.send(Expected { sent_at, digest });
+        let (line, wire_id) = if pipeline > 0 {
+            (tagged_line(rec, i as u64), Some(i as u64))
+        } else {
+            (rec.request_line(), None)
+        };
+        let sent_at = Instant::now();
+        if pipeline > 0 {
+            // register the expectation before the bytes leave: a fast
+            // reply must find its id already in the reader's table
+            let _ = tx.send(Expected {
+                sent_at,
+                digest,
+                wire_id,
+            });
+            if writer
+                .write_all(line.as_bytes())
+                .and_then(|()| writer.write_all(b"\n"))
+                .is_err()
+            {
+                // connection is gone; everything left on it is unserved
+                // (the orphaned expectation resolves at the reader's EOF)
+                write_errors = batch.len() - sent;
+                break;
+            }
+            sent += 1;
+        } else {
+            if writer
+                .write_all(line.as_bytes())
+                .and_then(|()| writer.write_all(b"\n"))
+                .is_err()
+            {
+                write_errors = batch.len() - sent;
+                break;
+            }
+            sent += 1;
+            let _ = tx.send(Expected {
+                sent_at,
+                digest,
+                wire_id,
+            });
+        }
     }
     drop(tx); // reader drains and returns
     let _ = writer.shutdown(std::net::Shutdown::Write);
@@ -415,6 +577,9 @@ pub fn report_json(
         // in-flight per connection, where achieved_rps is the measured
         // bounded-concurrency throughput
         ("max_in_flight".into(), cfg.max_in_flight as f64),
+        // 0 = one request on the wire at a time; N = pipelined with N
+        // wire ids in flight per connection
+        ("pipeline".into(), cfg.pipeline as f64),
     ];
     for (code, n) in &outcome.shed {
         derived.push((format!("shed_{code}"), *n as f64));
@@ -520,6 +685,7 @@ mod tests {
             connections: 2,
             timeout_ms: 5_000,
             max_in_flight: 0,
+            pipeline: 0,
         };
         let out = replay(&records, &cfg).unwrap();
         assert_eq!(out.sent, 4);
@@ -547,6 +713,7 @@ mod tests {
             connections: 2,
             timeout_ms: 5_000,
             max_in_flight: 2,
+            pipeline: 0,
         };
         let t0 = Instant::now();
         let out = replay(&records, &cfg).unwrap();
@@ -564,6 +731,70 @@ mod tests {
         assert!(d.req("achieved_rps").as_f64().unwrap() > 0.0);
     }
 
+    /// A pipelined stub: reads every request first (the client must not
+    /// be gated on replies), then answers **in reverse order**, echoing
+    /// each request's wire id and interleaving progress events that the
+    /// replayer must skip. Only an id-matching reader can pass this.
+    fn spawn_pipelined_stub(expect: usize) -> std::net::SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { continue };
+                std::thread::spawn(move || {
+                    let mut writer = stream.try_clone().unwrap();
+                    let mut lines = BufReader::new(stream).lines().map_while(Result::ok);
+                    let mut ids = Vec::new();
+                    while ids.len() < expect {
+                        let Some(line) = lines.next() else { break };
+                        let v = json::parse(&line).unwrap();
+                        ids.push(v.req("id").as_f64().unwrap() as u64);
+                    }
+                    for id in ids.iter().rev() {
+                        let _ = writeln!(
+                            writer,
+                            r#"{{"event": "progress", "id": {id}, "step": 1, "of": 4, "gamma": 0.5, "nfes": 2}}"#
+                        );
+                        let _ = writeln!(
+                            writer,
+                            r#"{{"id": {id}, "nfes": 4, "cfg_steps": 2, "truncated_at": null, "image": [0.5, -0.25]}}"#
+                        );
+                    }
+                });
+            }
+        });
+        addr
+    }
+
+    /// `--pipeline DEPTH` keeps DEPTH wire ids in flight, matches
+    /// replies by echoed id (here: fully reversed), skips progress
+    /// frames, and still verifies digests per request.
+    #[test]
+    fn pipelined_mode_matches_replies_by_wire_id() {
+        let n = 6;
+        let addr = spawn_pipelined_stub(n);
+        let good = stub_digest();
+        let records: Vec<TraceRecord> =
+            (0..n).map(|i| record(i as u64 * 100, true, Some(&good))).collect();
+        let cfg = ReplayConfig {
+            addr: addr.to_string(),
+            speed: 1.0,
+            connections: 1,
+            timeout_ms: 5_000,
+            max_in_flight: 0,
+            pipeline: n, // the stub answers nothing until all N arrive
+        };
+        let out = replay(&records, &cfg).unwrap();
+        assert_eq!(out.sent, n);
+        assert_eq!(out.completed, n);
+        assert_eq!(out.transport_errors, 0);
+        assert_eq!(out.digest_checked, n);
+        assert_eq!(out.digest_mismatches, 0);
+        assert_eq!(out.latencies_ms.len(), n);
+        let d = report_json(&out, &cfg, None);
+        assert_eq!(d.req("derived").req("pipeline").as_f64(), Some(n as f64));
+    }
+
     #[test]
     fn shed_replies_are_tallied_by_code() {
         let addr = spawn_stub_server(2); // every 2nd request per conn shed
@@ -575,6 +806,7 @@ mod tests {
             connections: 1,
             timeout_ms: 5_000,
             max_in_flight: 0,
+            pipeline: 0,
         };
         let out = replay(&records, &cfg).unwrap();
         assert_eq!(out.sent, 6);

@@ -160,6 +160,27 @@ pub struct Salvaged {
     pub cost: usize,
 }
 
+/// One per-step progress sample for a request that opted in with
+/// `progress: true` — the payload of the reactor's streaming
+/// `{"event":"progress",..}` line, cut from the same guidance-decision
+/// data the trace ring records. Buffered in a reusable engine-owned Vec
+/// and drained by the shard loop after each pump
+/// ([`Engine::drain_progress`]); requests that never opt in push nothing,
+/// so the zero-allocation steady state is untouched.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProgressNote {
+    /// engine-assigned request id
+    pub id: u64,
+    /// step that just completed (0-based)
+    pub step: u32,
+    /// total steps the request asked for
+    pub of: u32,
+    /// this step's guidance signal (Eq. 7 cosine; NaN when undefined)
+    pub gamma: f32,
+    /// NFEs spent so far
+    pub nfes: u32,
+}
+
 /// Engine-side per-request bookkeeping: scheduling labels, the live
 /// remaining-cost estimate, and queue-wait/execute timing.
 #[derive(Debug)]
@@ -185,6 +206,10 @@ struct Meta {
     /// admission, appended via [`trace::push_capped`] only — never grows
     /// inside `pump()`
     timeline: Option<Vec<trace::Event>>,
+    /// the request opted into per-step progress streaming
+    progress: bool,
+    /// total steps (denominator of a progress line's `step k of T`)
+    steps: u32,
 }
 
 /// §Observability: what a ready slot's step looked like *before*
@@ -279,6 +304,12 @@ pub struct Engine<B: Backend> {
     /// disabled by default — zero registrations, zero captures)
     ckpts: CheckpointStore,
     k_checkpoint_bytes: MetricKey,
+    /// per-step progress samples for opted-in requests, buffered between
+    /// [`Self::pump`] and [`Self::drain_progress`] (reused — the Vec is
+    /// swapped out whole by the drain, so capacity cycles, and requests
+    /// that never opt in keep this permanently empty)
+    progress_notes: Vec<ProgressNote>,
+    k_requests_canceled: MetricKey,
 }
 
 impl<B: Backend> Engine<B> {
@@ -319,6 +350,7 @@ impl<B: Backend> Engine<B> {
             telemetry.metric_key("batch_retries_total", &[("class", "transient")]);
         let k_retry_backoff = telemetry.metric_key("retry_backoff_ms", &[]);
         let k_checkpoint_bytes = telemetry.metric_key("checkpoint_bytes", &[]);
+        let k_requests_canceled = telemetry.metric_key("requests_canceled_total", &[]);
         Ok(Engine {
             backend,
             sched,
@@ -362,6 +394,8 @@ impl<B: Backend> Engine<B> {
             backoff: JitterBackoff::new(DEFAULT_RETRY_BASE_MS, DEFAULT_RETRY_CAP_MS, 0),
             ckpts: CheckpointStore::default(),
             k_checkpoint_bytes,
+            progress_notes: Vec::new(),
+            k_requests_canceled,
         })
     }
 
@@ -773,6 +807,8 @@ impl<B: Backend> Engine<B> {
             first_exec: None,
             policy_id,
             timeline,
+            progress: state.req.progress,
+            steps: state.req.steps as u32,
         };
         // per-client live count for the admission quota; unwound when the
         // request completes
@@ -1075,6 +1111,55 @@ impl<B: Backend> Engine<B> {
         salvaged
     }
 
+    /// Wire-level cancellation: pull a live request back out of the engine
+    /// by id, releasing its slot, its queued work items
+    /// ([`Scheduler::revoke`]) and its admission/quota charges — the same
+    /// teardown a salvage performs, applied to one request on purpose.
+    /// Mid-flight requests cancel too (the shard loop only calls this
+    /// between pumps, so no batch is executing): already-delivered partial
+    /// buffers are dropped with the state. Returns `false` when the id is
+    /// unknown — already completed, never admitted here, or a repeat
+    /// cancel — so the caller can answer `unknown_id` instead of lying.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        let mut found = None;
+        for idx in 0..self.metas.len() {
+            if let Some(meta) = self.metas[idx].as_ref() {
+                if meta.id == id {
+                    found = Some(idx);
+                    break;
+                }
+            }
+        }
+        let Some(idx) = found else { return false };
+        let meta = self.metas[idx].take().expect("meta checked above");
+        self.states[idx] = None;
+        self.sched.revoke(idx);
+        self.active -= 1;
+        self.queued_nfes = self.queued_nfes.saturating_sub(meta.cost);
+        self.free.push(idx);
+        // the slot's checkpoint (if any) is dead with the request
+        self.ckpts.retire(idx);
+        if let Some(n) = self.clients_in_flight.get_mut(&meta.client) {
+            if *n <= 1 {
+                self.clients_in_flight.remove(&meta.client);
+            } else {
+                *n -= 1;
+            }
+        }
+        self.telemetry.inc_key(&self.k_requests_canceled, 1);
+        self.update_gauges();
+        true
+    }
+
+    /// Move the buffered per-step progress notes out (cheap Vec swap; the
+    /// shard loop recycles the drained Vec's capacity by handing it back
+    /// empty on the next call). Empty unless some in-flight request opted
+    /// in with `progress: true`.
+    pub fn drain_progress(&mut self, into: &mut Vec<ProgressNote>) {
+        into.clear();
+        std::mem::swap(&mut self.progress_notes, into);
+    }
+
     /// Execute one batch of work items (same model, up to the largest
     /// bucket), as chosen by the scheduler, and advance all requests whose
     /// step completed. Returns the completions this round produced.
@@ -1375,6 +1460,22 @@ impl<B: Backend> Engine<B> {
                     truncated,
                     false,
                 );
+                // streaming progress for opted-in requests: same payload
+                // as the guidance event, buffered for the shard loop to
+                // drain. Requests that never opt in skip this entirely,
+                // keeping the steady-state pump allocation-free.
+                {
+                    let meta = self.metas[idx].as_ref().unwrap();
+                    if meta.progress {
+                        self.progress_notes.push(ProgressNote {
+                            id: meta.id,
+                            step: snap.step,
+                            of: meta.steps,
+                            gamma,
+                            nfes: st.nfes as u32,
+                        });
+                    }
+                }
                 // re-estimate before re-queueing: this is where a policy
                 // truncation reaches the scheduler's cost signal
                 let meta = self.metas[idx].as_mut().unwrap();

@@ -69,6 +69,12 @@ pub struct Request {
     /// timeline into its span ring and echoes it on the [`Completion`];
     /// guidance-decision events are recorded regardless of this flag.
     pub trace: bool,
+    /// Opt into per-step progress streaming (`"progress": true` on the
+    /// wire). The engine emits a [`crate::coordinator::ProgressNote`]
+    /// after every completed non-final step; front-ends that can stream
+    /// (the reactor) forward them as `{"event":"progress",..}` lines.
+    /// Requests that never opt in take the exact historical pump path.
+    pub progress: bool,
     /// §Observability: router-side stage durations in microseconds
     /// (global admission check, placement decision, shard queue wait),
     /// stamped by the fleet before the request reaches an engine — the
@@ -99,6 +105,7 @@ impl Request {
             priority: 0,
             deadline_ms: None,
             trace: false,
+            progress: false,
             span_admission_us: 0,
             span_placement_us: 0,
             span_queue_us: 0,

@@ -88,7 +88,7 @@ use crate::sched::{Admission, AdmitError, SchedulerKind, Telemetry};
 use crate::util::json::{self, Value};
 use crate::util::logev::log_event;
 
-pub use replica::{Job, JobReply, ShardStats};
+pub use replica::{Job, JobReply, ReplyTarget, ReplyTo, ShardStats};
 pub use router::{Placement, Router, ShardLoad};
 
 use replica::ShardMsg;
@@ -138,6 +138,32 @@ impl fmt::Display for ShardFailed {
 }
 
 impl std::error::Error for ShardFailed {}
+
+/// A request the client pulled back with `{"cmd":"cancel","id":..}` —
+/// its pending reply is answered with this error (`"code": "canceled"`
+/// on the wire) after the shard engine tore the work down and refunded
+/// the admission/quota charges.
+#[derive(Debug, Clone, Copy)]
+pub struct Canceled {
+    pub id: u64,
+}
+
+impl fmt::Display for Canceled {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "request {} canceled by the client", self.id)
+    }
+}
+
+impl std::error::Error for Canceled {}
+
+/// A submitted request's fleet-side address: the id the fleet assigned
+/// (echoed on every reply line) and the shard it was placed on — what
+/// [`Fleet::cancel`] needs to route a wire-level cancellation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ticket {
+    pub id: u64,
+    pub shard: usize,
+}
 
 /// Routing-level refusals that are not admission sheds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -495,7 +521,18 @@ impl Fleet {
     /// [`JobReply::Error`] with the protocol line). Errors here are
     /// router-level: [`RouteError::Draining`]/[`RouteError::Closed`] or a
     /// global-scope [`ScopedShed`].
-    pub fn submit(&self, mut req: Request) -> Result<Receiver<JobReply>> {
+    pub fn submit(&self, req: Request) -> Result<Receiver<JobReply>> {
+        let (rtx, rrx) = channel();
+        self.submit_to(req, ReplyTo::Channel(rtx))?;
+        Ok(rrx)
+    }
+
+    /// [`Self::submit`] for front-ends that cannot block on a channel: the
+    /// caller supplies the reply sink (§Scale: the reactor hands in a
+    /// push-and-wake [`ReplyTarget`]) and gets back the [`Ticket`] naming
+    /// the fleet-assigned id and the shard the request landed on — the
+    /// address a later [`Self::cancel`] routes to.
+    pub fn submit_to(&self, mut req: Request, reply: ReplyTo) -> Result<Ticket> {
         // §Observability: the admission and placement stage durations are
         // stamped onto traced requests; the shard engine reconstructs
         // start times from them (the queue stage is stamped shard-side)
@@ -531,14 +568,14 @@ impl Fleet {
             req.span_placement_us = t_place.elapsed().as_micros() as u64;
         }
         req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = req.id;
         let load = &self.shared.loads[idx];
         load.reserve(cost);
-        let (rtx, rrx) = channel();
         let job = Job {
             req,
             cost,
             started: Instant::now(),
-            reply: rtx,
+            reply,
             checkpoint: None,
         };
         if guard.txs[idx].send(ShardMsg::Job(job)).is_err() {
@@ -546,7 +583,26 @@ impl Fleet {
             load.mark_dead();
             return Err(anyhow::Error::new(RouteError::Closed));
         }
-        Ok(rrx)
+        Ok(Ticket { id, shard: idx })
+    }
+
+    /// Wire-level cancellation: ask the ticket's shard to pull the request
+    /// back out of its engine ([`ShardMsg::Cancel`]). Fire-and-forget —
+    /// the outcome arrives on the request's own reply sink (a structured
+    /// `"code": "canceled"` line when the cancel won, the completion when
+    /// it lost the race). Returns `false` when the shard is gone (dead or
+    /// respawning — its jobs were already refused or salvaged elsewhere,
+    /// so there is nothing left to cancel). The shard channel is FIFO, so
+    /// a cancel can never overtake its own job. A supervisor re-placement
+    /// after shard death may move the request to a different shard than
+    /// the ticket names; a cancel issued across that window misses — an
+    /// accepted, observable race (the request simply completes).
+    pub fn cancel(&self, t: Ticket) -> bool {
+        let guard = self.shared.router.lock().expect("router lock");
+        if t.shard >= guard.txs.len() || self.shared.loads[t.shard].is_dead() {
+            return false;
+        }
+        guard.txs[t.shard].send(ShardMsg::Cancel(t.id)).is_ok()
     }
 
     /// Clone the shard channels out of the router lock, so slow follow-up
@@ -850,7 +906,7 @@ fn replace_jobs(shared: &Shared, from: usize, jobs: Vec<Job>) {
                     reason: "shard died before execution; no live shard left to salvage onto"
                         .into(),
                 });
-                let _ = j.reply.send(JobReply::Error(crate::server::error_to_line(&e)));
+                j.reply.send(JobReply::Error(crate::server::error_to_line(&e)));
                 break;
             };
             let cost = j.cost;
@@ -933,6 +989,7 @@ mod tests {
                     assert!(ms >= 0.0);
                 }
                 JobReply::Error(line) => panic!("unexpected error: {line}"),
+                JobReply::Progress(n) => panic!("unexpected progress: {n:?}"),
             }
         }
         let stats = fleet.stats_json().unwrap();
@@ -985,6 +1042,7 @@ mod tests {
                     }
                 }
                 JobReply::Error(line) => panic!("{line}"),
+                JobReply::Progress(n) => panic!("unexpected progress: {n:?}"),
             }
         }
         // spans drained per shard, stamped with their shard ids
@@ -1035,6 +1093,7 @@ mod tests {
         match rx.recv().unwrap() {
             JobReply::Done(c, _) => c,
             JobReply::Error(line) => panic!("unexpected error: {line}"),
+            JobReply::Progress(n) => panic!("unexpected progress: {n:?}"),
         }
     }
 
@@ -1065,6 +1124,7 @@ mod tests {
                 assert!(line.contains("1 never-started job(s) salvaged"), "{line}");
             }
             JobReply::Done(..) => panic!("mid-step work must shed on a killed shard"),
+            JobReply::Progress(n) => panic!("unexpected progress: {n:?}"),
         }
         // …while the never-started job completes on the survivor,
         // byte-identical to an undisturbed single-shard run
@@ -1226,6 +1286,7 @@ mod tests {
         match rx.recv().unwrap() {
             JobReply::Done(c, _) => assert_eq!(c.nfes, 24),
             JobReply::Error(line) => panic!("{line}"),
+            JobReply::Progress(n) => panic!("unexpected progress: {n:?}"),
         }
         let err = fleet.submit(req(1, 4)).unwrap_err();
         assert!(matches!(

@@ -42,13 +42,44 @@ use std::time::{Duration, Instant};
 
 use crate::backend::Backend;
 use crate::coordinator::checkpoint::RequestCheckpoint;
-use crate::coordinator::engine::Engine;
+use crate::coordinator::engine::{Engine, ProgressNote};
 use crate::coordinator::request::{Completion, Request};
 use crate::fleet::router::ShardLoad;
 use crate::fleet::{ScopedShed, ShardFailed, SuperMsg};
 use crate::sched::{AdmitError, Telemetry};
 use crate::server::error_to_line;
 use crate::util::logev::log_event;
+
+/// Where a job's replies land. The threaded front end blocks on a plain
+/// mpsc channel per request; the reactor registers a wakeup target so one
+/// poll thread can multiplex thousands of connections without a blocked
+/// receiver each. Both paths carry the same typed [`JobReply`]s.
+#[derive(Clone)]
+pub enum ReplyTo {
+    /// Classic per-request channel (threaded server, fleet tests).
+    Channel(Sender<JobReply>),
+    /// §Scale: push-and-wake sink owned by a reactor connection.
+    Target(Arc<dyn ReplyTarget>),
+}
+
+impl ReplyTo {
+    /// Deliver one reply; a gone receiver is ignored (disconnected client).
+    pub fn send(&self, reply: JobReply) {
+        match self {
+            ReplyTo::Channel(tx) => {
+                let _ = tx.send(reply);
+            }
+            ReplyTo::Target(t) => t.deliver(reply),
+        }
+    }
+}
+
+/// A reply sink that front-ends implement to receive shard-thread pushes:
+/// enqueue the reply somewhere bounded and wake the owning event loop.
+/// Implementations must never block the shard thread.
+pub trait ReplyTarget: Send + Sync {
+    fn deliver(&self, reply: JobReply);
+}
 
 /// A placed request travelling router → shard thread.
 pub struct Job {
@@ -58,7 +89,7 @@ pub struct Job {
     /// Arrival instant at the front door (latency is measured from here,
     /// like the single-engine server did).
     pub started: Instant,
-    pub reply: Sender<JobReply>,
+    pub reply: ReplyTo,
     /// §Robustness: mid-flight snapshot salvaged off a dead shard
     /// (`--checkpoint-steps`). `Some` routes the job through
     /// [`Engine::try_resume`] on the receiving shard instead of a fresh
@@ -76,6 +107,11 @@ pub enum JobReply {
     /// The request was refused or failed; the payload is the protocol
     /// error line.
     Error(String),
+    /// A per-step progress sample for an opted-in (`"progress": true`)
+    /// request — zero or more of these precede the terminal
+    /// `Done`/`Error`. Receivers that cannot stream (the threaded
+    /// front end's blocking recv loop) simply skip them.
+    Progress(ProgressNote),
 }
 
 /// One shard's stats snapshot for `{"cmd": "stats"}` aggregation.
@@ -104,6 +140,12 @@ pub(crate) enum ShardMsg {
     Spans(Sender<crate::trace::SpanBatch>),
     /// Acknowledge once the engine is idle (nothing queued or executing).
     Drain(Sender<()>),
+    /// Wire-level cancellation: pull the identified request back out of
+    /// the engine ([`Engine::cancel`]) and answer its pending reply with
+    /// the structured `canceled` line. Unknown/already-completed ids are
+    /// ignored — the shard channel is FIFO, so a job always precedes its
+    /// own cancel, and a miss means the completion already won the race.
+    Cancel(u64),
     /// Finish in-flight work, then exit the thread.
     Shutdown,
     /// Chaos injection ([`crate::fleet::Fleet::kill_shard`]): run the
@@ -140,7 +182,7 @@ impl ServiceRate {
 /// Per-admitted-job bookkeeping on the shard thread.
 struct Pending {
     started: Instant,
-    reply: Sender<JobReply>,
+    reply: ReplyTo,
 }
 
 /// Run one shard's engine loop until shutdown (or a fatal error).
@@ -157,6 +199,10 @@ pub(crate) fn run_replica<B: Backend>(
     let mut jobs: HashMap<u64, Pending> = HashMap::new();
     let mut waiters: Vec<Sender<()>> = Vec::new();
     let mut rate = ServiceRate::default();
+    // reusable buffer for per-step progress notes (capacity ping-pongs
+    // with the engine's own buffer; permanently empty unless a request
+    // opted in)
+    let mut notes: Vec<ProgressNote> = Vec::new();
     let mut shutdown = false;
     let mut crashed = false;
     loop {
@@ -222,10 +268,18 @@ pub(crate) fn run_replica<B: Backend>(
                 if executed > 0 {
                     rate.observe(executed, t0.elapsed());
                 }
+                // stream progress before this round's completions so a
+                // request's final line is always the last it receives
+                engine.drain_progress(&mut notes);
+                for n in &notes {
+                    if let Some(job) = jobs.get(&n.id) {
+                        job.reply.send(JobReply::Progress(*n));
+                    }
+                }
                 for c in completions {
                     if let Some(job) = jobs.remove(&c.id) {
                         let ms = job.started.elapsed().as_secs_f64() * 1e3;
-                        let _ = job.reply.send(JobReply::Done(Box::new(c), ms));
+                        job.reply.send(JobReply::Done(Box::new(c), ms));
                     }
                 }
                 let l = engine.load();
@@ -307,7 +361,7 @@ fn die<B: Backend>(
         ),
     );
     for (_, job) in jobs.drain() {
-        let _ = job.reply.send(JobReply::Error(line.clone()));
+        job.reply.send(JobReply::Error(line.clone()));
     }
     load.mark_dead();
     let _ = super_tx.send(SuperMsg::Died { shard, salvaged });
@@ -351,6 +405,19 @@ fn handle_msg<B: Backend>(
                 let _ = reply.send(());
             } else {
                 waiters.push(reply);
+            }
+        }
+        ShardMsg::Cancel(id) => {
+            // safe between pumps: the replica thread only handles messages
+            // when no batch is executing, so the engine can tear the
+            // request down without racing a delivery
+            if engine.cancel(id) {
+                if let Some(p) = jobs.remove(&id) {
+                    let e = anyhow::Error::new(crate::fleet::Canceled { id });
+                    p.reply.send(JobReply::Error(error_to_line(&e)));
+                }
+                let l = engine.load();
+                load.publish(l.active, l.queued_nfes);
             }
         }
         ShardMsg::Shutdown => *shutdown = true,
@@ -409,7 +476,7 @@ fn admit<B: Backend>(
                     estimated_ms: estimated.ceil() as u64,
                     queued_nfes: backlog,
                 });
-                let _ = reply.send(JobReply::Error(error_to_line(&e)));
+                reply.send(JobReply::Error(error_to_line(&e)));
                 load.settle(cost);
                 return;
             }
@@ -430,14 +497,14 @@ fn admit<B: Backend>(
         }
         Err(e @ AdmitError::Invalid { .. }) => {
             // malformed, not over-budget: no shed scope on the line
-            let _ = reply.send(JobReply::Error(error_to_line(&anyhow::Error::new(e))));
+            reply.send(JobReply::Error(error_to_line(&anyhow::Error::new(e))));
         }
         Err(e) => {
             let scoped = ScopedShed {
                 scope: "shard",
                 inner: e,
             };
-            let _ = reply.send(JobReply::Error(error_to_line(&anyhow::Error::new(scoped))));
+            reply.send(JobReply::Error(error_to_line(&anyhow::Error::new(scoped))));
         }
     }
     load.settle(cost);

@@ -82,7 +82,12 @@
 //! (`--shed-infeasible`), merged `shard=`-labelled telemetry, and a
 //! graceful `{"cmd": "drain"}` quiesce. Placement changes batching, never
 //! per-request math — completions are byte-identical for every shard
-//! count (`rust/tests/fleet_integration.rs`).
+//! count (`rust/tests/fleet_integration.rs`). The front door is the
+//! poll-based connection [`reactor`] (one event-loop thread multiplexing
+//! thousands of persistent connections; wire-level request ids,
+//! pipelining, per-step progress streaming, and `{"cmd": "cancel"}` —
+//! protocol in `docs/PROTOCOL.md`); `--net threads` keeps the
+//! thread-per-connection loop as the A/B baseline.
 //!
 //! ## The chaos harness (§Robustness)
 //!
@@ -145,6 +150,7 @@ pub mod ols;
 pub mod perfstat;
 pub mod prompts;
 pub mod quality;
+pub mod reactor;
 pub mod render;
 pub mod runtime;
 pub mod sched;

@@ -27,7 +27,7 @@ use adaptive_guidance::prompts::{self, Prompt};
 use adaptive_guidance::runtime::PjrtBackend;
 use adaptive_guidance::sched::{Admission, SchedulerKind};
 use adaptive_guidance::search;
-use adaptive_guidance::server::{serve_with_registry, ServerConfig};
+use adaptive_guidance::server::{serve_with_registry, NetMode, ServerConfig};
 use adaptive_guidance::sim::gmm::Gmm;
 use adaptive_guidance::util::cli::Args;
 use adaptive_guidance::util::json;
@@ -90,6 +90,11 @@ fn print_help() {
            --max-line-bytes N   refuse+close frames past N bytes (default 1 MiB)\n\
            --read-timeout-ms N  idle/slowloris connection cutoff (default 60000, 0 = off)\n\
            --trace-out FILE     append one JSONL record per served request\n\
+           --spans-out FILE     continuously ship lifecycle/guidance spans to a\n\
+                                JSONL file (500ms cadence; mirrors --trace-out)\n\
+           --net reactor|threads  connection front end: poll-based reactor with\n\
+                                pipelined ids, progress streaming and cancel\n\
+                                (default), or thread-per-connection baseline\n\
            --fault-spec SPEC    arm backend fault injection at startup, e.g.\n\
                                 error-every=50,stall-at=120:200 (docs/ROBUSTNESS.md)\n\
            --max-batch-retries N  per-batch transient-fault retry budget (default 0)\n\
@@ -102,6 +107,9 @@ fn print_help() {
            --max-in-flight N    closed-loop: ignore the captured schedule,\n\
                                 keep N requests in flight per connection\n\
                                 (0 = open-loop at the captured rate)\n\
+           --pipeline DEPTH     tag requests with wire ids and keep DEPTH\n\
+                                pipelined per connection (reactor protocol;\n\
+                                0 = one-at-a-time, the historical framing)\n\
            --out FILE           wire-latency report (default BENCH_replay.json)\n\
          profile:  --spans FILE (required; a {{\"cmd\": \"spans\"}} reply, JSON or JSONL)\n\
            --out FILE           Chrome trace JSON for chrome://tracing or\n\
@@ -273,6 +281,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_line_bytes: args.usize("max-line-bytes", 1 << 20),
         read_timeout_ms: args.u64("read-timeout-ms", 60_000),
         trace_out: args.get("trace-out").map(str::to_owned),
+        // §Scale: front-end selection — the poll reactor (default) or
+        // the thread-per-connection baseline for A/B comparison
+        net: NetMode::parse(args.choice("net", "reactor", &["reactor", "threads"]).map_err(|e| anyhow!(e))?)
+            .expect("choice() validated the net mode"),
+        spans_out: args.get("spans-out").map(str::to_owned),
         // §Robustness: fault injection + retry + supervision
         fault_spec: args.get("fault-spec").map(str::to_owned),
         max_batch_retries: args.usize("max-batch-retries", 0),
@@ -329,8 +342,13 @@ fn cmd_replay(args: &Args) -> Result<()> {
         // 0 = open-loop (captured schedule); N = closed-loop throughput
         // measurement at N in-flight per connection (§Observability)
         max_in_flight: args.usize("max-in-flight", 0),
+        // 0 = historical one-at-a-time framing; N = wire-id pipelining
+        // at depth N per connection (reactor protocol, §Scale)
+        pipeline: args.usize("pipeline", 0),
     };
-    let mode = if cfg.max_in_flight > 0 {
+    let mode = if cfg.pipeline > 0 {
+        format!("pipelined, depth {}/conn", cfg.pipeline)
+    } else if cfg.max_in_flight > 0 {
         format!("closed-loop, {} in flight/conn", cfg.max_in_flight)
     } else {
         format!("open-loop, speed {}x", cfg.speed)

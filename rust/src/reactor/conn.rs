@@ -1,0 +1,338 @@
+//! Per-connection state for the reactor: the inbound line accumulator,
+//! the in-flight request table (wire id → [`Ticket`]), and the bounded
+//! outbound queue with progress coalescing — the write-backpressure
+//! half of the §Scale story.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::fleet::{JobReply, ReplyTarget, Ticket};
+use crate::util::json::Value;
+
+use super::poll::Waker;
+
+/// Outbound soft budget: past this many queued bytes, *new* progress
+/// events for a request that already has none queued are shed (counted
+/// as `conn_progress_dropped_total{kind="shed"}`). Completions and
+/// errors are never shed.
+pub(crate) const PROGRESS_OUT_BUDGET: usize = 256 * 1024;
+
+/// Outbound hard budget: past this, the reactor stops *reading* from the
+/// connection (its `POLLIN` interest is dropped), so a client that won't
+/// drain its replies throttles itself instead of growing the queue.
+pub(crate) const HARD_OUT_BUDGET: usize = 1024 * 1024;
+
+/// Parsed-but-undispatched line cap per connection — bounds memory when
+/// a pipelined client keeps writing while an id-less request serializes
+/// the dispatch pipeline. At the cap the connection stops being read.
+pub(crate) const PENDING_MAX: usize = 1024;
+
+/// Coalescing key for the connection's one id-less in-flight request.
+/// Cannot collide with a wire-id key: those are JSON-serialized, so a
+/// string id arrives quoted (`"\"x\""`) and a number as digits.
+pub(crate) const SERIAL_KEY: &str = "#serial";
+
+/// One queued outbound line (stored with its trailing `\n`).
+enum OutItem {
+    /// Completion / error / admin reply: never dropped, never replaced.
+    Line(String),
+    /// A progress event for the request keyed by `.0`: replaceable by a
+    /// newer sample while it still waits (at most one queued progress
+    /// line per request per connection).
+    Progress(String, String),
+}
+
+impl OutItem {
+    fn bytes(&self) -> &[u8] {
+        match self {
+            OutItem::Line(s) => s.as_bytes(),
+            OutItem::Progress(_, s) => s.as_bytes(),
+        }
+    }
+}
+
+/// Bounded outbound queue. Writes go out through [`OutQueue::flush`] in
+/// strict push order; a partially-written front item is tracked by
+/// `front_pos` and is never replaced (coalescing skips it).
+#[derive(Default)]
+pub(crate) struct OutQueue {
+    items: VecDeque<OutItem>,
+    front_pos: usize,
+    bytes: usize,
+}
+
+impl OutQueue {
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Queue a reply line (newline appended here). Never refused: the
+    /// hard budget is enforced upstream by parking the *read* side.
+    pub fn push_line(&mut self, mut line: String) {
+        line.push('\n');
+        self.bytes += line.len();
+        self.items.push_back(OutItem::Line(line));
+    }
+
+    /// Queue a progress event for request `key`. If one is already
+    /// waiting it is replaced in place (coalesced — the client sees the
+    /// freshest sample, in the original position). Returns `false` when
+    /// the sample was shed because the queue is over the soft budget.
+    pub fn push_progress(&mut self, key: &str, mut line: String) -> bool {
+        line.push('\n');
+        let skip = usize::from(self.front_pos > 0);
+        for item in self.items.iter_mut().skip(skip) {
+            if let OutItem::Progress(k, old) = item {
+                if k == key {
+                    self.bytes = self.bytes - old.len() + line.len();
+                    *old = line;
+                    return true;
+                }
+            }
+        }
+        if self.bytes > PROGRESS_OUT_BUDGET {
+            return false;
+        }
+        self.bytes += line.len();
+        self.items.push_back(OutItem::Progress(key.to_owned(), line));
+        true
+    }
+
+    /// Write as much as the socket accepts without blocking. `Ok(())`
+    /// means the socket is healthy (queue may or may not be empty);
+    /// `Err` means the connection is dead.
+    pub fn flush(&mut self, stream: &TcpStream) -> io::Result<()> {
+        while let Some(front) = self.items.front() {
+            let buf = &front.bytes()[self.front_pos..];
+            match (&mut &*stream).write(buf) {
+                Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+                Ok(n) => {
+                    self.front_pos += n;
+                    self.bytes -= n;
+                    if self.front_pos == front.bytes().len() {
+                        self.items.pop_front();
+                        self.front_pos = 0;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Trace-capture context carried from dispatch to completion delivery
+/// (the reactor's analogue of the locals in the threaded
+/// `dispatch_line`): arrival offset, the envelope verbatim, client id.
+pub(crate) struct TraceCtx {
+    pub arrival_us: u64,
+    pub envelope: Value,
+    pub client_id: Option<Arc<str>>,
+}
+
+/// One parsed-off inbound frame awaiting dispatch. Refusals that must
+/// keep their place in arrival order (a non-UTF-8 frame between two
+/// pipelined requests) ride the same queue as dispatchable lines.
+pub(crate) enum PendingLine {
+    Dispatch(String),
+    /// Pre-rendered reply: emitted, never dispatched.
+    Reply(String),
+}
+
+/// One in-flight request on a connection.
+pub(crate) struct InFlight {
+    pub ticket: Ticket,
+    /// The client's wire id, verbatim, for echoing (`None` = id-less).
+    pub wire_id: Option<Value>,
+    pub want_image: bool,
+    pub trace: Option<TraceCtx>,
+}
+
+/// Per-connection reactor state.
+pub(crate) struct Conn {
+    pub stream: TcpStream,
+    pub peer: String,
+    /// Partial-line inbound bytes (bounded by `--max-line-bytes`).
+    pub rbuf: Vec<u8>,
+    /// When the current partial line's first byte arrived (slowloris
+    /// deadline anchor), `None` when `rbuf` is empty.
+    pub line_start: Option<Instant>,
+    /// Last completed line / reply activity (idle-timeout anchor).
+    pub last_activity: Instant,
+    /// Complete lines awaiting dispatch (bounded by [`PENDING_MAX`]).
+    pub pending: VecDeque<PendingLine>,
+    /// In-flight requests keyed by serialized wire id (or [`SERIAL_KEY`]
+    /// for the one id-less slot).
+    pub inflight: HashMap<String, InFlight>,
+    pub outq: OutQueue,
+    /// Peer half-closed its write side: stop reading, but finish every
+    /// already-received line and deliver every in-flight reply first.
+    pub eof: bool,
+    /// Deferred terminal refusal (oversized frame, mid-line timeout):
+    /// queued after every already-owed reply, then the connection
+    /// closes. `Some` implies reads have stopped.
+    pub fatal: Option<String>,
+    /// Hard close after the outbound queue drains (protocol violation,
+    /// timeout); nothing further is read or dispatched.
+    pub closing: bool,
+    /// Tear down now, queue and all (IO error on the socket).
+    pub dead: bool,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream, peer: String) -> Conn {
+        Conn {
+            stream,
+            peer,
+            rbuf: Vec::new(),
+            line_start: None,
+            last_activity: Instant::now(),
+            pending: VecDeque::new(),
+            inflight: HashMap::new(),
+            outq: OutQueue::default(),
+            eof: false,
+            fatal: None,
+            closing: false,
+            dead: false,
+        }
+    }
+
+    /// Is the connection's `POLLIN` interest live? Backpressure in both
+    /// directions parks the read side instead of buffering unboundedly.
+    pub fn wants_read(&self) -> bool {
+        !self.dead
+            && !self.closing
+            && !self.eof
+            && self.outq.bytes() <= HARD_OUT_BUDGET
+            && self.pending.len() < PENDING_MAX
+    }
+
+    /// An id-less request is in flight: dispatch is serialized (reply
+    /// order must match arrival order, exactly like the threaded loop).
+    pub fn serial_blocked(&self) -> bool {
+        self.inflight.contains_key(SERIAL_KEY)
+    }
+}
+
+/// One reply hop from a shard engine thread to the reactor: the shard
+/// pushes, wakes, and returns to its pump — it never renders JSON or
+/// touches a socket.
+pub(crate) struct Delivery {
+    pub token: u64,
+    pub key: String,
+    pub reply: JobReply,
+}
+
+/// State shared between the reactor thread and every shard thread: the
+/// delivery queue and the waker that un-parks `poll`.
+pub(crate) struct Shared {
+    queue: Mutex<VecDeque<Delivery>>,
+    pub waker: Waker,
+}
+
+impl Shared {
+    pub fn new(waker: Waker) -> Shared {
+        Shared {
+            queue: Mutex::new(VecDeque::new()),
+            waker,
+        }
+    }
+
+    pub fn push(&self, d: Delivery) {
+        self.queue.lock().expect("delivery queue lock").push_back(d);
+        self.waker.wake();
+    }
+
+    /// Swap the queue out (reactor side), reusing `into`'s capacity.
+    pub fn drain(&self, into: &mut VecDeque<Delivery>) {
+        into.clear();
+        std::mem::swap(&mut *self.queue.lock().expect("delivery queue lock"), into);
+    }
+}
+
+/// The [`ReplyTarget`] handed to [`crate::fleet::Fleet::submit_to`]: one
+/// per submitted request, addressing (connection token, request key).
+/// Delivery to a token whose connection has since closed is dropped by
+/// the reactor — the shard side never needs to know.
+pub(crate) struct ConnTarget {
+    pub shared: Arc<Shared>,
+    pub token: u64,
+    pub key: String,
+}
+
+impl ReplyTarget for ConnTarget {
+    fn deliver(&self, reply: JobReply) {
+        self.shared.push(Delivery {
+            token: self.token,
+            key: self.key.clone(),
+            reply,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(s: &str) -> String {
+        s.to_owned()
+    }
+
+    #[test]
+    fn progress_coalesces_in_place_per_key() {
+        let mut q = OutQueue::default();
+        q.push_line(line("{\"a\":1}"));
+        assert!(q.push_progress("7", line("{\"step\":1}")));
+        q.push_line(line("{\"b\":2}"));
+        // same key: replaced in place, queue length unchanged
+        assert!(q.push_progress("7", line("{\"step\":2}")));
+        assert_eq!(q.items.len(), 3);
+        // different key: appended
+        assert!(q.push_progress("8", line("{\"step\":1}")));
+        assert_eq!(q.items.len(), 4);
+        match &q.items[1] {
+            OutItem::Progress(k, s) => {
+                assert_eq!(k, "7");
+                assert_eq!(s, "{\"step\":2}\n");
+            }
+            OutItem::Line(_) => panic!("expected progress at slot 1"),
+        }
+    }
+
+    #[test]
+    fn progress_is_shed_over_the_soft_budget_but_lines_never_are() {
+        let mut q = OutQueue::default();
+        let big = "x".repeat(PROGRESS_OUT_BUDGET + 1);
+        q.push_line(big);
+        // a fresh progress key is shed...
+        assert!(!q.push_progress("1", line("{\"step\":1}")));
+        // ...but coalescing onto an already-queued one still works
+        q.bytes = 0; // pretend the queue drained
+        assert!(q.push_progress("1", line("{\"step\":1}")));
+        q.bytes = PROGRESS_OUT_BUDGET + 1;
+        assert!(q.push_progress("1", line("{\"step\":2}")));
+        // and completions always enqueue
+        q.push_line(line("{\"id\":1}"));
+        assert!(matches!(q.items.back(), Some(OutItem::Line(_))));
+    }
+
+    #[test]
+    fn byte_accounting_tracks_pushes_and_replacements() {
+        let mut q = OutQueue::default();
+        q.push_line(line("abc")); // 4 bytes with newline
+        assert_eq!(q.bytes(), 4);
+        q.push_progress("k", line("pp")); // 3
+        assert_eq!(q.bytes(), 7);
+        q.push_progress("k", line("ppppp")); // replaces: 4 + 6
+        assert_eq!(q.bytes(), 10);
+    }
+}

@@ -1,0 +1,591 @@
+//! §Scale: the poll-based connection reactor (`agd serve`, default
+//! front end; `--net threads` keeps the historical loop as an A/B
+//! baseline).
+//!
+//! The threaded front end burns one OS thread (and one blocked stack)
+//! per connection and cannot act on a connection while a request is in
+//! flight — which makes pipelining, per-step progress streaming, and
+//! wire-level cancellation structurally impossible. The reactor
+//! multiplexes every connection onto **one** event-loop thread over raw
+//! `poll(2)` (bound directly in [`poll`]; the offline vendor set has no
+//! mio/tokio), with non-blocking sockets and a self-pipe waker:
+//!
+//! * **Submit side** — parsed requests enter the fleet through
+//!   [`crate::fleet::Fleet::submit_to`] with a push-and-wake
+//!   [`crate::fleet::ReplyTarget`]; the reactor never blocks on a reply
+//!   channel.
+//! * **Reply side** — shard engine threads push
+//!   [`crate::fleet::JobReply`]s onto a shared queue and poke the waker;
+//!   the reactor renders them to protocol lines (ids echoed, traces
+//!   recorded) on its own thread, so shard pumps never touch sockets.
+//!
+//! # Pipelining and ordering
+//!
+//! A client that tags requests with a wire `"id"` may keep any number in
+//! flight per connection; every reply line echoes the id, so replies may
+//! be matched out of order. Id-less requests keep the historical
+//! contract instead: each one *serializes* the connection (nothing later
+//! is dispatched until its reply is queued), so reply order equals
+//! arrival order and an id-less conversation is byte-identical to the
+//! threaded front end. Control lines (`{"cmd": ..}`) take their place in
+//! the same arrival order.
+//!
+//! # Backpressure (bounded memory at 1k+ connections)
+//!
+//! Outbound queues are bounded per connection: past a soft budget, new
+//! progress events are shed (`conn_progress_dropped_total`) — though a
+//! request's already-queued progress line is still *coalesced* in place,
+//! so the client always sees the freshest sample; completions and errors
+//! are never shed. Past the hard budget the connection's read interest
+//! is parked (so a peer that won't drain replies throttles itself), as
+//! it also is when too many parsed lines await dispatch. Inbound lines
+//! are capped by `--max-line-bytes` exactly like the threaded loop, with
+//! the same counters and refusal lines.
+//!
+//! # Cancellation
+//!
+//! `{"cmd": "cancel", "id": X}` looks X up in the connection's in-flight
+//! table and routes a cancel to the shard named by its
+//! [`crate::fleet::Ticket`]. A still-queued request is revoked from the
+//! scheduler (admission refunded, `requests_canceled_total`) and the id
+//! gets `{"error": .., "code": "canceled", "id": X}`; a request already
+//! denoising (or re-placed by salvage after a shard death) simply
+//! completes — cancel is best-effort by design. Unknown ids get
+//! `"code": "unknown_id"`. Closing a connection best-effort-cancels
+//! everything it still has in flight, so queued work for a vanished
+//! client is refunded instead of computed.
+//!
+//! Timeout and oversized-frame hardening mirror `crate::server` byte for
+//! byte (same counters, same refusal lines): a mid-line stall or an
+//! oversized frame queues its coded refusal *after* every already-owed
+//! reply, then closes; an idle connection (nothing partial, nothing in
+//! flight) closes silently.
+
+pub mod conn;
+pub mod poll;
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, Read};
+use std::net::TcpListener;
+use std::os::unix::io::AsRawFd;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::chaos::trace::{completion_digest, TraceSink};
+use crate::coordinator::engine::ProgressNote;
+use crate::coordinator::spec::PolicyRegistry;
+use crate::fleet::{Fleet, JobReply, ReplyTo};
+use crate::server::{self, ServerConfig};
+use crate::util::json::{self, Value};
+
+use conn::{Conn, ConnTarget, Delivery, InFlight, PendingLine, Shared, TraceCtx, SERIAL_KEY};
+use poll::{PollFd, POLLIN, POLLOUT};
+
+/// Immutable per-reactor context threaded through the event handlers.
+struct Ctx {
+    fleet: Arc<Fleet>,
+    cfg: ServerConfig,
+    registry: Arc<PolicyRegistry>,
+    trace: Option<Arc<TraceSink>>,
+    shared: Arc<Shared>,
+}
+
+/// Serve an already-bound listener on the reactor. Blocks the calling
+/// thread forever (the event loop); returns only on a permanent
+/// listener/poll failure, mirroring the threaded loop's contract.
+pub fn serve_reactor(
+    listener: TcpListener,
+    fleet: Arc<Fleet>,
+    cfg: ServerConfig,
+    registry: Arc<PolicyRegistry>,
+    trace: Option<Arc<TraceSink>>,
+) -> Result<()> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| anyhow!("listener set_nonblocking: {e}"))?;
+    let (waker, wake_rx) = poll::waker_pair().map_err(|e| anyhow!("reactor waker: {e}"))?;
+    let shared = Arc::new(Shared::new(waker));
+    let ctx = Ctx {
+        fleet,
+        cfg,
+        registry,
+        trace,
+        shared,
+    };
+    let deadline =
+        (ctx.cfg.read_timeout_ms > 0).then(|| Duration::from_millis(ctx.cfg.read_timeout_ms));
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_token: u64 = 1;
+    let mut deliveries: VecDeque<Delivery> = VecDeque::new();
+    let mut fds: Vec<PollFd> = Vec::new();
+    let mut tokens: Vec<u64> = Vec::new();
+
+    loop {
+        fds.clear();
+        tokens.clear();
+        fds.push(PollFd::new(listener.as_raw_fd(), POLLIN));
+        fds.push(PollFd::new(wake_rx.fd(), POLLIN));
+        for (&token, c) in &conns {
+            let mut ev = 0i16;
+            if c.wants_read() {
+                ev |= POLLIN;
+            }
+            if !c.outq.is_empty() {
+                ev |= POLLOUT;
+            }
+            fds.push(PollFd::new(c.stream.as_raw_fd(), ev));
+            tokens.push(token);
+        }
+        poll::poll_fds(&mut fds, poll_timeout_ms(&conns, deadline))
+            .map_err(|e| anyhow!("poll: {e}"))?;
+        wake_rx.drain();
+
+        // Shard replies first: a completion may free a serialized
+        // connection's dispatch slot before its socket is even looked at.
+        ctx.shared.drain(&mut deliveries);
+        for d in deliveries.drain(..) {
+            on_delivery(&mut conns, d, &ctx);
+        }
+
+        if fds[0].readable() {
+            accept_ready(&listener, &mut conns, &mut next_token)?;
+        }
+        for (i, &token) in tokens.iter().enumerate() {
+            let pfd = fds[i + 2];
+            let Some(c) = conns.get_mut(&token) else {
+                continue;
+            };
+            if pfd.invalid() {
+                c.dead = true;
+                continue;
+            }
+            if pfd.readable() {
+                read_ready(c, token, &ctx);
+            }
+        }
+
+        conns.retain(|_, c| {
+            if !c.dead {
+                sweep_timeouts(c, &ctx, deadline);
+                settle(c);
+                if !c.outq.is_empty() && c.outq.flush(&c.stream).is_err() {
+                    c.dead = true;
+                }
+                settle(c); // an eof conn that just fully drained closes now
+            }
+            let reap = c.dead || (c.closing && c.outq.is_empty());
+            if reap {
+                // refund queued work the peer will never read for
+                for inf in c.inflight.values() {
+                    ctx.fleet.cancel(inf.ticket);
+                }
+                log::info!("connection {} closed", c.peer);
+            }
+            !reap
+        });
+    }
+}
+
+/// Next poll timeout: 1s housekeeping tick, shortened to the nearest
+/// read-deadline so timeout refusals stay prompt at small
+/// `--read-timeout-ms` without a busy tick at the 60s default.
+fn poll_timeout_ms(conns: &HashMap<u64, Conn>, deadline: Option<Duration>) -> i32 {
+    let mut t = Duration::from_millis(1000);
+    if let Some(dl) = deadline {
+        for c in conns.values() {
+            if c.dead || c.closing || c.fatal.is_some() {
+                continue;
+            }
+            let anchor = if c.line_start.is_some() {
+                c.line_start
+            } else if c.inflight.is_empty() && c.pending.is_empty() && c.outq.is_empty() && !c.eof
+            {
+                Some(c.last_activity)
+            } else {
+                None
+            };
+            if let Some(t0) = anchor {
+                t = t.min(dl.saturating_sub(t0.elapsed()));
+            }
+        }
+    }
+    (t.as_millis() as i32).clamp(10, 1000)
+}
+
+/// Drain the accept backlog. Transient failures log and yield (same
+/// classification as the threaded loop); permanent ones propagate.
+fn accept_ready(
+    listener: &TcpListener,
+    conns: &mut HashMap<u64, Conn>,
+    next_token: &mut u64,
+) -> Result<()> {
+    loop {
+        match listener.accept() {
+            Ok((stream, addr)) => {
+                if stream.set_nonblocking(true).is_err() {
+                    continue; // fd already torn down: drop this one
+                }
+                let token = *next_token;
+                *next_token += 1;
+                conns.insert(token, Conn::new(stream, addr.to_string()));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
+            Err(e) if server::transient_accept_error(&e) => {
+                log::warn!("accept failed (transient, continuing): {e}");
+                return Ok(());
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Pull everything the socket has, split lines, dispatch what the
+/// ordering rules allow.
+fn read_ready(c: &mut Conn, token: u64, ctx: &Ctx) {
+    let mut buf = [0u8; 8192];
+    while c.wants_read() {
+        let mut r = &c.stream;
+        match r.read(&mut buf) {
+            Ok(0) => {
+                c.eof = true;
+                break;
+            }
+            Ok(n) => {
+                if c.rbuf.is_empty() {
+                    c.line_start = Some(Instant::now());
+                }
+                ingest(c, &buf[..n], ctx);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.dead = true;
+                return;
+            }
+        }
+    }
+    dispatch_pending(c, token, ctx);
+}
+
+/// Append a chunk to the line accumulator and move complete lines to the
+/// pending queue, enforcing `--max-line-bytes` with the same refusal
+/// lines and counters as the threaded `read_line_bounded`.
+fn ingest(c: &mut Conn, chunk: &[u8], ctx: &Ctx) {
+    c.rbuf.extend_from_slice(chunk);
+    loop {
+        let Some(pos) = c.rbuf.iter().position(|&b| b == b'\n') else {
+            if c.rbuf.len() > ctx.cfg.max_line_bytes {
+                oversized(c, ctx);
+            }
+            return;
+        };
+        let rest = c.rbuf.split_off(pos + 1);
+        let mut line_bytes = std::mem::replace(&mut c.rbuf, rest);
+        line_bytes.pop(); // the newline
+        c.last_activity = Instant::now();
+        c.line_start = (!c.rbuf.is_empty()).then(Instant::now);
+        if line_bytes.len() > ctx.cfg.max_line_bytes {
+            oversized(c, ctx);
+            return;
+        }
+        match String::from_utf8(line_bytes) {
+            Ok(s) => c.pending.push_back(PendingLine::Dispatch(s)),
+            // refusable in-band without closing; the reply rides the
+            // pending queue so it keeps its place in arrival order
+            Err(_) => {
+                ctx.fleet.count("conn_bad_line_total", &[("kind", "utf8")]);
+                c.pending.push_back(PendingLine::Reply(server::static_error_line(
+                    "request line is not valid UTF-8",
+                    "invalid_request",
+                )));
+            }
+        }
+    }
+}
+
+/// Oversized frame: the rest of the stream is undelimited garbage.
+/// Queue the refusal *after* every reply already owed, stop reading,
+/// close once drained — so pipelined replies in flight are not jumped.
+fn oversized(c: &mut Conn, ctx: &Ctx) {
+    ctx.fleet.count("conn_bad_line_total", &[("kind", "oversized")]);
+    if c.fatal.is_none() {
+        c.fatal = Some(server::static_error_line(
+            &format!(
+                "request line exceeds --max-line-bytes ({})",
+                ctx.cfg.max_line_bytes
+            ),
+            "invalid_request",
+        ));
+    }
+    c.eof = true;
+    c.rbuf.clear();
+    c.line_start = None;
+}
+
+/// Dispatch pending lines in arrival order until one serializes the
+/// connection (id-less request) or the connection is closing.
+fn dispatch_pending(c: &mut Conn, token: u64, ctx: &Ctx) {
+    while !c.closing && !c.dead && !c.serial_blocked() {
+        let Some(item) = c.pending.pop_front() else {
+            break;
+        };
+        match item {
+            PendingLine::Reply(line) => c.outq.push_line(line),
+            PendingLine::Dispatch(line) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                dispatch_one(c, token, ctx, &line);
+            }
+        }
+    }
+}
+
+/// The reactor's analogue of the threaded `dispatch_line`: one protocol
+/// line in, zero (submitted) or one (refusal/admin) reply lines out.
+fn dispatch_one(c: &mut Conn, token: u64, ctx: &Ctx, line: &str) {
+    let v = match json::parse(line) {
+        Ok(v) => v,
+        Err(e) => {
+            c.outq.push_line(server::error_line_coded(
+                &anyhow!("bad request json: {e}"),
+                "invalid_request",
+            ));
+            return;
+        }
+    };
+    if let Some(cmd) = v.get("cmd").and_then(Value::as_str) {
+        if cmd == "cancel" {
+            dispatch_cancel(c, ctx, &v);
+        } else {
+            let reply = server::admin_cmd_line(cmd, &ctx.fleet);
+            c.outq.push_line(reply);
+        }
+        return;
+    }
+    let wire_id = v.get("id").cloned();
+    let key = match &wire_id {
+        Some(idv) => json::to_string(idv),
+        None => SERIAL_KEY.to_owned(),
+    };
+    // two live requests under one id would make replies unmatchable, so
+    // the second is refused up front (the serial slot cannot collide:
+    // dispatch stops while it is occupied)
+    if wire_id.is_some() && c.inflight.contains_key(&key) {
+        c.outq.push_line(server::inject_id(
+            server::static_error_line(
+                "`id` is already in flight on this connection",
+                "invalid_request",
+            ),
+            wire_id.as_ref(),
+        ));
+        return;
+    }
+    let arrival_us = ctx.trace.as_deref().map(TraceSink::arrival_offset_us);
+    match server::parse_request_value(&v, &ctx.cfg, &ctx.registry) {
+        Ok((req, want_image)) => {
+            let client_id = req.client_id.clone();
+            let target = ConnTarget {
+                shared: ctx.shared.clone(),
+                token,
+                key: key.clone(),
+            };
+            match ctx.fleet.submit_to(req, ReplyTo::Target(Arc::new(target))) {
+                Ok(ticket) => {
+                    let trace = arrival_us.map(|at| TraceCtx {
+                        arrival_us: at,
+                        envelope: v,
+                        client_id,
+                    });
+                    c.inflight.insert(
+                        key,
+                        InFlight {
+                            ticket,
+                            wire_id,
+                            want_image,
+                            trace,
+                        },
+                    );
+                }
+                Err(e) => c
+                    .outq
+                    .push_line(server::inject_id(server::error_to_line(&e), wire_id.as_ref())),
+            }
+        }
+        Err(e) => c.outq.push_line(server::inject_id(
+            server::error_line_coded(&e, "invalid_request"),
+            wire_id.as_ref(),
+        )),
+    }
+}
+
+/// `{"cmd": "cancel", "id": X}`: route a best-effort cancel to the shard
+/// holding X. No immediate reply on a hit — the canceled request itself
+/// answers with `"code": "canceled"` (or its completion, if the cancel
+/// lost the race; either way the id resolves exactly once).
+fn dispatch_cancel(c: &mut Conn, ctx: &Ctx, v: &Value) {
+    let Some(idv) = v.get("id") else {
+        c.outq.push_line(server::static_error_line(
+            "cancel requires an `id`",
+            "invalid_request",
+        ));
+        return;
+    };
+    let key = json::to_string(idv);
+    match c.inflight.get(&key) {
+        Some(inf) => {
+            ctx.fleet.cancel(inf.ticket);
+        }
+        None => c.outq.push_line(server::inject_id(
+            server::static_error_line(
+                "no such request in flight on this connection",
+                "unknown_id",
+            ),
+            Some(idv),
+        )),
+    }
+}
+
+/// Route one shard reply to its connection. Deliveries for closed
+/// connections (or ids the client already resolved) are dropped.
+fn on_delivery(conns: &mut HashMap<u64, Conn>, d: Delivery, ctx: &Ctx) {
+    let Some(c) = conns.get_mut(&d.token) else {
+        return;
+    };
+    match d.reply {
+        JobReply::Progress(n) => {
+            let Some(inf) = c.inflight.get(&d.key) else {
+                return;
+            };
+            let line = progress_line(&n, inf.wire_id.as_ref());
+            if !c.outq.push_progress(&d.key, line) {
+                ctx.fleet
+                    .count("conn_progress_dropped_total", &[("kind", "shed")]);
+            }
+        }
+        JobReply::Done(completion, ms) => {
+            let Some(inf) = c.inflight.remove(&d.key) else {
+                return;
+            };
+            if let (Some(sink), Some(tc)) = (&ctx.trace, &inf.trace) {
+                sink.record(
+                    tc.arrival_us,
+                    &tc.envelope,
+                    tc.client_id.as_deref(),
+                    &completion_digest(&completion),
+                );
+            }
+            c.outq.push_line(server::completion_to_line_tagged(
+                &completion,
+                ms,
+                inf.want_image,
+                inf.wire_id.as_ref(),
+            ));
+            c.last_activity = Instant::now();
+            dispatch_pending(c, d.token, ctx);
+        }
+        JobReply::Error(line) => {
+            let Some(inf) = c.inflight.remove(&d.key) else {
+                return;
+            };
+            c.outq.push_line(server::inject_id(line, inf.wire_id.as_ref()));
+            c.last_activity = Instant::now();
+            dispatch_pending(c, d.token, ctx);
+        }
+    }
+}
+
+/// Render one streamed progress event. The id mirrors the completion's:
+/// the client's wire id verbatim when it supplied one, else the
+/// fleet-assigned id.
+fn progress_line(n: &ProgressNote, wire_id: Option<&Value>) -> String {
+    let id = wire_id
+        .cloned()
+        .unwrap_or_else(|| json::num(n.id as f64));
+    json::to_string(&json::obj(vec![
+        ("event", json::s("progress")),
+        ("id", id),
+        ("step", json::num(n.step as f64)),
+        ("of", json::num(n.of as f64)),
+        ("gamma", json::num(n.gamma as f64)),
+        ("nfes", json::num(n.nfes as f64)),
+    ]))
+}
+
+/// End-of-life bookkeeping: once every owed reply is queued, append the
+/// deferred fatal refusal (oversized / mid-line timeout) and close; an
+/// `eof` connection with nothing left to say closes silently.
+fn settle(c: &mut Conn) {
+    if c.pending.is_empty() && c.inflight.is_empty() {
+        if let Some(line) = c.fatal.take() {
+            c.outq.push_line(line);
+            c.closing = true;
+        } else if c.eof && c.outq.is_empty() {
+            c.closing = true;
+        }
+    }
+}
+
+/// The slowloris/idle sweep — same taxonomy, counters and refusal lines
+/// as the threaded `read_line_bounded`, measured per line: mid-line
+/// stalls get a coded reply then close; idle connections (no partial
+/// line, nothing in flight, nothing owed) close silently. A connection
+/// waiting on its own in-flight requests is *not* idle.
+fn sweep_timeouts(c: &mut Conn, ctx: &Ctx, deadline: Option<Duration>) {
+    let Some(dl) = deadline else {
+        return;
+    };
+    if c.closing || c.dead || c.fatal.is_some() {
+        return;
+    }
+    if let Some(t0) = c.line_start {
+        if t0.elapsed() >= dl {
+            ctx.fleet.count("conn_timeout_total", &[("kind", "midline")]);
+            c.fatal = Some(server::static_error_line(
+                &format!(
+                    "no complete request line within --read-timeout-ms ({})",
+                    ctx.cfg.read_timeout_ms
+                ),
+                "timeout",
+            ));
+            c.eof = true;
+            c.rbuf.clear();
+            c.line_start = None;
+        }
+    } else if c.inflight.is_empty()
+        && c.pending.is_empty()
+        && c.outq.is_empty()
+        && !c.eof
+        && c.last_activity.elapsed() >= dl
+    {
+        ctx.fleet.count("conn_timeout_total", &[("kind", "idle")]);
+        c.closing = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn progress_lines_echo_the_wire_id_or_fall_back_to_the_fleet_id() {
+        let n = ProgressNote {
+            id: 42,
+            step: 3,
+            of: 8,
+            gamma: 0.5,
+            nfes: 5,
+        };
+        let with = progress_line(&n, Some(&json::s("job-1")));
+        let v = json::parse(&with).unwrap();
+        assert_eq!(v.get("event").and_then(Value::as_str), Some("progress"));
+        assert_eq!(v.get("id").and_then(Value::as_str), Some("job-1"));
+        assert_eq!(v.get("step").and_then(Value::as_f64), Some(3.0));
+        assert_eq!(v.get("of").and_then(Value::as_f64), Some(8.0));
+        let without = progress_line(&n, None);
+        let v = json::parse(&without).unwrap();
+        assert_eq!(v.get("id").and_then(Value::as_f64), Some(42.0));
+    }
+}

@@ -1,0 +1,147 @@
+//! Raw `poll(2)` binding and the self-pipe waker — the two readiness
+//! primitives the reactor is built on. The offline vendor set has no
+//! `mio`/`libc`, so the syscall is bound directly (the same approach as
+//! `crate::server`'s errno table): a `#[repr(C)]` `pollfd` mirror and an
+//! `extern "C"` declaration resolved by the platform libc every Rust
+//! binary already links. `poll` is POSIX; the constants below are the
+//! universal values shared by Linux and the BSDs.
+
+use std::io::{self, Read, Write};
+use std::os::raw::{c_int, c_ulong};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+
+pub const POLLIN: i16 = 0x001;
+pub const POLLOUT: i16 = 0x004;
+pub const POLLERR: i16 = 0x008;
+pub const POLLHUP: i16 = 0x010;
+pub const POLLNVAL: i16 = 0x020;
+
+/// Mirror of `struct pollfd` (identical layout on every libc the fleet
+/// deploys on: `int fd; short events; short revents;`).
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct PollFd {
+    pub fd: RawFd,
+    pub events: i16,
+    pub revents: i16,
+}
+
+impl PollFd {
+    pub fn new(fd: RawFd, events: i16) -> PollFd {
+        PollFd {
+            fd,
+            events,
+            revents: 0,
+        }
+    }
+
+    pub fn readable(&self) -> bool {
+        self.revents & (POLLIN | POLLHUP | POLLERR) != 0
+    }
+
+    pub fn invalid(&self) -> bool {
+        self.revents & POLLNVAL != 0
+    }
+}
+
+extern "C" {
+    /// POSIX `poll(2)`. `nfds_t` is `unsigned long` on the glibc/musl
+    /// targets this deploys on.
+    fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+}
+
+/// Block until at least one fd is ready or `timeout_ms` elapses
+/// (`-1` = forever). Retries on EINTR; returns the ready count.
+pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+    loop {
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as c_ulong, timeout_ms) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = io::Error::last_os_error();
+        if err.kind() != io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+/// Cross-thread wakeup for a `poll`-parked reactor: shard engine threads
+/// finishing a request must interrupt the sleep. Classic self-pipe,
+/// built on `UnixStream::pair` (std's portable pipe). Both ends are
+/// non-blocking: a full pipe means a wake is already pending, so the
+/// dropped byte is harmless — the reactor drains the pipe and then the
+/// whole delivery queue every time it wakes.
+pub struct Waker {
+    tx: UnixStream,
+}
+
+impl Waker {
+    /// Wake the reactor. Callable from any thread (`&self`; the write is
+    /// a single byte, atomic at the pipe level).
+    pub fn wake(&self) {
+        let _ = (&self.tx).write(&[1u8]);
+    }
+}
+
+/// The reactor-side read end of the waker pipe.
+pub struct WakeReader {
+    rx: UnixStream,
+}
+
+impl WakeReader {
+    pub fn fd(&self) -> RawFd {
+        self.rx.as_raw_fd()
+    }
+
+    /// Swallow every pending wake byte (level-triggered `poll` would
+    /// otherwise spin on them).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 256];
+        while matches!((&self.rx).read(&mut buf), Ok(n) if n > 0) {}
+    }
+}
+
+pub fn waker_pair() -> io::Result<(Waker, WakeReader)> {
+    let (rx, tx) = UnixStream::pair()?;
+    rx.set_nonblocking(true)?;
+    tx.set_nonblocking(true)?;
+    Ok((Waker { tx }, WakeReader { rx }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn waker_makes_the_pipe_readable_and_drain_clears_it() {
+        let (waker, reader) = waker_pair().unwrap();
+        let mut fds = [PollFd::new(reader.fd(), POLLIN)];
+        // nothing pending: poll times out
+        assert_eq!(poll_fds(&mut fds, 0).unwrap(), 0);
+        waker.wake();
+        waker.wake(); // coalesces, never blocks
+        let mut fds = [PollFd::new(reader.fd(), POLLIN)];
+        assert_eq!(poll_fds(&mut fds, 1000).unwrap(), 1);
+        assert!(fds[0].readable());
+        reader.drain();
+        let mut fds = [PollFd::new(reader.fd(), POLLIN)];
+        assert_eq!(poll_fds(&mut fds, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn wake_from_another_thread_interrupts_a_parked_poll() {
+        let (waker, reader) = waker_pair().unwrap();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            waker.wake();
+        });
+        let t0 = Instant::now();
+        let mut fds = [PollFd::new(reader.fd(), POLLIN)];
+        let n = poll_fds(&mut fds, 5000).unwrap();
+        assert_eq!(n, 1);
+        assert!(t0.elapsed().as_millis() < 5000);
+        t.join().unwrap();
+    }
+}

@@ -24,6 +24,17 @@
 //! (`--max-in-flight-per-client`) is enforced shard-side; under
 //! `client-hash` placement it is exact fleet-wide.
 //!
+//! Two front ends serve the same protocol (`--net reactor|threads`):
+//! the default poll-based reactor ([`crate::reactor`]) multiplexes every
+//! connection onto one event-loop thread — enabling pipelined wire ids,
+//! streamed progress, wire-level cancellation, and thousands of idle
+//! connections at no per-connection thread cost — while `--net threads`
+//! keeps the historical thread-per-connection loop as the A/B baseline.
+//! Both render replies through the same functions, so completions are
+//! byte-identical across front ends. The full framing contract (ids,
+//! ordering, backpressure, the error-code catalogue) lives in
+//! `docs/PROTOCOL.md`.
+//!
 //! # Protocol: one JSON object per line
 //!
 //! request  {"prompt": "a large red circle at the center", "policy": "ag",
@@ -67,6 +78,32 @@
 //!            percentiles + the per-policy NFE-savings ledger); full
 //!            schema in `docs/OBSERVABILITY.md`. Draining clears the
 //!            rings; `dropped` counts ring overwrites (monotonic).
+//! tagged   {"id": 7, "prompt": ...} → {"id": 7, "policy": ..., ...}
+//!            An optional client-chosen `id` (any JSON value) is echoed
+//!            verbatim on every reply and progress event for that
+//!            request. Id-tagged requests *pipeline*: the reactor keeps
+//!            them all in flight at once and replies in completion
+//!            order. Id-less requests keep the historical contract —
+//!            dispatch serializes, replies in arrival order. A second
+//!            live request under the same id on one connection is
+//!            refused (`invalid_request`) since its replies would be
+//!            unmatchable.
+//! progress {"prompt": ..., "progress": true, ...}
+//!          → {"event": "progress", "id": 7, "step": 4, "of": 20,
+//!             "gamma": 0.93, "nfes": 9}   (0-based step, one per step)
+//!            Opt-in per-step streaming ahead of the completion. Under
+//!            write backpressure stale samples are coalesced/shed
+//!            (`conn_progress_dropped_total`) — the completion never is.
+//! command  {"cmd": "cancel", "id": 7}
+//!          → the canceled request itself answers with
+//!            `"code": "canceled"` (or its completion, if the cancel
+//!            lost the race; the id resolves exactly once). Cancelling
+//!            revokes queued work, refunds the admission budget and the
+//!            per-client quota, and counts `requests_canceled_total`.
+//!            An id not in flight on this connection answers
+//!            `"code": "unknown_id"`. Reactor front end only: the
+//!            threaded loop serves synchronously, so there is no window
+//!            in which a cancel can arrive.
 //! command  {"cmd": "drain"}
 //!          → {"drained": true, "shards": N}, sent only after every shard
 //!            has finished all in-flight work (nothing is dropped) and
@@ -90,8 +127,8 @@
 //! Every structured refusal carries a `"code"`; the full set is
 //! `invalid_request` · `unknown_cmd` · `queue_full` ·
 //! `deadline_infeasible` · `draining` · `unavailable` · `shard_failed` ·
-//! `timeout`. Beyond bad JSON, two wire-level attacks are handled per
-//! connection:
+//! `timeout` · `canceled` · `unknown_id`. Beyond bad JSON, two
+//! wire-level attacks are handled per connection:
 //!
 //! * **Oversized frames** — a request line longer than `--max-line-bytes`
 //!   (default 1 MiB) is refused with `"code": "invalid_request"` and the
@@ -115,19 +152,23 @@
 //!  "envelope": {"prompt": "red circle", "steps": 8, "image": true}}
 //! ```
 //!
-//! `agd replay --trace FILE --speed X --connections N [--addr H:P]`
-//! re-issues a trace open-loop over real TCP connections and writes wire
-//! latency (p50/p95/p99), shed codes, and digest-match counts to
-//! `BENCH_replay.json` ([`crate::chaos::replay`]). Because the digest is
-//! computable on both ends of the wire, capture → replay round trips
-//! prove served completions byte-identical.
+//! `agd replay --trace FILE --speed X --connections N [--addr H:P]
+//! [--pipeline DEPTH]` re-issues a trace open-loop over real TCP
+//! connections and writes wire latency (p50/p95/p99), shed codes, and
+//! digest-match counts to `BENCH_replay.json` ([`crate::chaos::replay`]).
+//! `--pipeline DEPTH` tags each request with a wire id and keeps up to
+//! DEPTH in flight per connection, matching replies by echoed id instead
+//! of FIFO order. Because the digest is computable on both ends of the
+//! wire, capture → replay round trips prove served completions
+//! byte-identical.
 //!
 //! Fault injection is scripted: `scenarios/*.txt` files (ops: `connect` ·
-//! `send` · `expect-ok` · `expect-code` · `expect-closed` · `send-raw` ·
-//! `send-raw-repeat` · `slowloris` · `disconnect` · `kill-shard` ·
-//! `fault` · `wait-respawn` · `drain` · `sleep`; grammar in
-//! [`crate::chaos::director`]) run against a live listener via
-//! [`serve_on`] in `rust/tests/chaos_integration.rs`.
+//! `send` · `expect-ok` · `expect-code` · `expect-id` · `expect-id-code` ·
+//! `expect-closed` · `send-raw` · `send-raw-repeat` · `slowloris` ·
+//! `disconnect` · `kill-shard` · `fault` · `wait-respawn` · `drain` ·
+//! `sleep`; grammar in [`crate::chaos::director`]) run against a live
+//! listener via [`serve_on`] in `rust/tests/chaos_integration.rs` and
+//! `rust/tests/reactor_integration.rs`.
 //!
 //! # §Robustness: surviving backend faults and shard deaths
 //!
@@ -195,7 +236,9 @@ use crate::chaos::fault::{FaultPlan, FaultSpec, FaultyBackend};
 use crate::chaos::trace::{completion_digest, TraceSink};
 use crate::coordinator::request::{Completion, Request};
 use crate::coordinator::spec::{PolicyRegistry, PolicySpec, SpecError};
-use crate::fleet::{Fleet, FleetConfig, JobReply, Placement, RouteError, ScopedShed, ShardFailed};
+use crate::fleet::{
+    Canceled, Fleet, FleetConfig, JobReply, Placement, RouteError, ScopedShed, ShardFailed,
+};
 use crate::prompts::Prompt;
 use crate::sched::{Admission, AdmitError, SchedulerKind};
 use crate::backend::Backend;
@@ -263,6 +306,46 @@ pub struct ServerConfig {
     /// dying shard's started requests resume mid-trajectory on
     /// survivors instead of being refused.
     pub checkpoint_steps: usize,
+    /// §Scale: which connection front end serves the listener (`--net`).
+    /// The poll-based reactor (default) multiplexes every connection on
+    /// one thread with pipelined request ids, streaming progress, and
+    /// wire-level cancel; `threads` keeps the historical
+    /// thread-per-connection loop as the A/B baseline.
+    pub net: NetMode,
+    /// §Observability: continuous span shipping (`--spans-out FILE`) — a
+    /// background thread drains every shard's span ring to JSONL on a
+    /// short cadence, so spans land on disk instead of dropping on ring
+    /// overwrite between `{"cmd": "spans"}` polls. Mirrors `--trace-out`.
+    pub spans_out: Option<String>,
+}
+
+/// Connection front end selector (`agd serve --net reactor|threads`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetMode {
+    /// Poll-based readiness loop ([`crate::reactor`]): one thread
+    /// multiplexing every connection, pipelined ids, per-step progress,
+    /// `{"cmd":"cancel"}`, bounded per-connection write queues.
+    Reactor,
+    /// Thread-per-connection blocking loop — the historical front end,
+    /// kept for one release as the A/B baseline.
+    Threads,
+}
+
+impl NetMode {
+    pub fn parse(s: &str) -> Option<NetMode> {
+        match s {
+            "reactor" => Some(NetMode::Reactor),
+            "threads" => Some(NetMode::Threads),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            NetMode::Reactor => "reactor",
+            NetMode::Threads => "threads",
+        }
+    }
 }
 
 impl Default for ServerConfig {
@@ -287,6 +370,8 @@ impl Default for ServerConfig {
             max_batch_retries: 0,
             shard_respawn: false,
             checkpoint_steps: 0,
+            net: NetMode::Reactor,
+            spans_out: None,
         }
     }
 }
@@ -324,7 +409,7 @@ impl ServerConfig {
 /// Top-level request fields that are *not* policy parameters.
 const ENVELOPE_KEYS: &[&str] = &[
     "prompt", "policy", "steps", "seed", "negative", "image", "model", "src_image", "guidance",
-    "client_id", "priority", "deadline_ms", "trace",
+    "client_id", "priority", "deadline_ms", "trace", "id", "progress",
 ];
 
 /// Parse one protocol line into a [`Request`] (without an id — the fleet
@@ -437,6 +522,12 @@ pub fn parse_request_value(
     if v.get("trace").and_then(Value::as_bool) == Some(true) {
         req.trace = true;
     }
+    // opt into per-step `{"event":"progress",..}` streaming — honoured by
+    // the reactor front end; the threaded baseline cannot stream and
+    // silently drops the samples
+    if v.get("progress").and_then(Value::as_bool) == Some(true) {
+        req.progress = true;
+    }
     let want_image = v.get("image").and_then(Value::as_bool).unwrap_or(false);
     Ok((req, want_image))
 }
@@ -444,9 +535,26 @@ pub fn parse_request_value(
 /// Encode a completion as a protocol line (the serving policy's display
 /// name is echoed so clients can attribute per-policy cost).
 pub fn completion_to_line(c: &Completion, ms: f64, with_image: bool) -> String {
+    completion_to_line_tagged(c, ms, with_image, None)
+}
+
+/// [`completion_to_line`] with the client's own wire id echoed in place
+/// of the fleet-assigned one — the pipelined protocol (a client that
+/// tags requests with `"id"` gets that id back verbatim on every reply,
+/// which is what lets it match replies arriving out of order). `None`
+/// keeps the fleet id, byte-identical to the historical rendering.
+pub fn completion_to_line_tagged(
+    c: &Completion,
+    ms: f64,
+    with_image: bool,
+    wire_id: Option<&Value>,
+) -> String {
     use json::{arr, num, obj, s};
     let mut fields = vec![
-        ("id", num(c.id as f64)),
+        (
+            "id",
+            wire_id.cloned().unwrap_or_else(|| num(c.id as f64)),
+        ),
         ("policy", s(&c.policy)),
         ("nfes", num(c.nfes as f64)),
         ("cfg_steps", num(c.cfg_steps as f64)),
@@ -537,6 +645,11 @@ fn error_fields(e: &anyhow::Error) -> Vec<(&'static str, Value)> {
         fields.push(("code", json::s("shard_failed")));
         fields.push(("shard", json::num(failed.shard as f64)));
     }
+    // the client pulled the request back with {"cmd":"cancel"}: the work
+    // was torn down and the admission/quota charges refunded
+    if e.downcast_ref::<Canceled>().is_some() {
+        fields.push(("code", json::s("canceled")));
+    }
     match e.downcast_ref::<RouteError>() {
         // graceful drain: clients should stop sending and disconnect
         Some(RouteError::Draining) => fields.push(("code", json::s("draining"))),
@@ -565,7 +678,7 @@ pub fn error_to_line(e: &anyhow::Error) -> String {
 /// the request path uses this so *every* refusal is machine-readable
 /// (a bad-JSON frame or unknown policy is `"invalid_request"`, an
 /// unrecognized `{"cmd"}` is `"unknown_cmd"`).
-fn error_line_coded(e: &anyhow::Error, code: &str) -> String {
+pub(crate) fn error_line_coded(e: &anyhow::Error, code: &str) -> String {
     let mut fields = error_fields(e);
     if !fields.iter().any(|(k, _)| *k == "code") {
         fields.push(("code", json::s(code)));
@@ -575,11 +688,68 @@ fn error_line_coded(e: &anyhow::Error, code: &str) -> String {
 
 /// A protocol error line from scratch (no anyhow error to downcast) —
 /// the wire-hardening replies (oversized frame, mid-line timeout).
-fn static_error_line(msg: &str, code: &str) -> String {
+pub(crate) fn static_error_line(msg: &str, code: &str) -> String {
     json::to_string(&json::obj(vec![
         ("error", json::s(msg)),
         ("code", json::s(code)),
     ]))
+}
+
+/// Splice the client's wire id onto an already-rendered reply line (the
+/// error renderers never emit an `"id"` themselves, so the splice cannot
+/// collide). Identity when the client supplied no id — keeping id-less
+/// traffic byte-identical to the historical protocol.
+pub(crate) fn inject_id(line: String, wire_id: Option<&Value>) -> String {
+    match wire_id {
+        Some(idv) if line.ends_with('}') => {
+            let mut out = line;
+            out.pop();
+            out.push_str(",\"id\":");
+            out.push_str(&json::to_string(idv));
+            out.push('}');
+            out
+        }
+        _ => line,
+    }
+}
+
+/// Handle one administrative `{"cmd": ..}` verb — shared by the threaded
+/// front end ([`dispatch_line`]) and the reactor (`cancel` is *not* here:
+/// it needs the connection's in-flight id table, so each front end
+/// implements it).
+pub(crate) fn admin_cmd_line(cmd: &str, fleet: &Fleet) -> String {
+    match cmd {
+        "stats" => match fleet.stats_json() {
+            Ok(v) => json::to_string(&v),
+            Err(e) => error_to_line(&e),
+        },
+        // the exposition is multi-line; the connection handler's
+        // closing "\n" turns the trailing newline into the blank-line
+        // terminator the protocol docs promise
+        "metrics" => match fleet.metrics_prometheus() {
+            Ok(text) => text,
+            Err(e) => error_to_line(&e),
+        },
+        // §Observability: drain every shard's span ring (one reply
+        // object; see docs/OBSERVABILITY.md and `agd profile`)
+        "spans" => match fleet.drain_spans() {
+            Ok(batches) => json::to_string(&crate::trace::batches_to_json(&batches)),
+            Err(e) => error_to_line(&e),
+        },
+        // graceful quiesce: stop admitting, wait for every shard to go
+        // idle, join the engine threads, then acknowledge
+        "drain" => {
+            let shards = fleet.shutdown();
+            json::to_string(&json::obj(vec![
+                ("drained", Value::Bool(true)),
+                ("shards", json::num(shards as f64)),
+            ]))
+        }
+        other => error_line_coded(
+            &anyhow!("unknown cmd `{other}` (supported: stats, metrics, spans, drain, cancel)"),
+            "unknown_cmd",
+        ),
+    }
 }
 
 /// Dispatch one protocol line: a `{"cmd": ..}` control line or a
@@ -605,58 +775,46 @@ fn dispatch_line(
         }
     };
     if let Some(cmd) = v.get("cmd").and_then(Value::as_str) {
-        return Some(match cmd {
-            "stats" => match fleet.stats_json() {
-                Ok(v) => json::to_string(&v),
-                Err(e) => error_to_line(&e),
-            },
-            // the exposition is multi-line; the connection handler's
-            // closing "\n" turns the trailing newline into the blank-line
-            // terminator the protocol docs promise
-            "metrics" => match fleet.metrics_prometheus() {
-                Ok(text) => text,
-                Err(e) => error_to_line(&e),
-            },
-            // §Observability: drain every shard's span ring (one reply
-            // object; see docs/OBSERVABILITY.md and `agd profile`)
-            "spans" => match fleet.drain_spans() {
-                Ok(batches) => json::to_string(&crate::trace::batches_to_json(&batches)),
-                Err(e) => error_to_line(&e),
-            },
-            // graceful quiesce: stop admitting, wait for every shard to go
-            // idle, join the engine threads, then acknowledge
-            "drain" => {
-                let shards = fleet.shutdown();
-                json::to_string(&json::obj(vec![
-                    ("drained", Value::Bool(true)),
-                    ("shards", json::num(shards as f64)),
-                ]))
-            }
-            other => error_line_coded(
-                &anyhow!("unknown cmd `{other}` (supported: stats, metrics, spans, drain)"),
-                "unknown_cmd",
-            ),
-        });
+        // the threaded front end serves each connection synchronously —
+        // by the time a cancel line is read, the previous request already
+        // completed — so every cancel misses. The reactor implements the
+        // verb for real; this keeps the A/B baseline protocol-complete.
+        if cmd == "cancel" {
+            let line = static_error_line(
+                "no such request in flight on this connection \
+                 (the threaded front end serves synchronously; \
+                 use --net reactor for wire-level cancellation)",
+                "unknown_id",
+            );
+            return Some(inject_id(line, v.get("id")));
+        }
+        return Some(admin_cmd_line(cmd, fleet));
     }
+    let wire_id = v.get("id");
     let arrival_us = trace.map(TraceSink::arrival_offset_us);
     match parse_request_value(&v, cfg, registry) {
         Ok((req, want_image)) => {
             let client_id = req.client_id.clone();
             match fleet.submit(req) {
-                Ok(reply) => match reply.recv() {
-                    Ok(JobReply::Done(c, ms)) => {
-                        if let (Some(sink), Some(at)) = (trace, arrival_us) {
-                            sink.record(at, &v, client_id.as_deref(), &completion_digest(&c));
+                Ok(reply) => loop {
+                    match reply.recv() {
+                        // a blocking front end cannot stream: progress
+                        // samples for opted-in requests are dropped here
+                        Ok(JobReply::Progress(_)) => continue,
+                        Ok(JobReply::Done(c, ms)) => {
+                            if let (Some(sink), Some(at)) = (trace, arrival_us) {
+                                sink.record(at, &v, client_id.as_deref(), &completion_digest(&c));
+                            }
+                            break Some(completion_to_line_tagged(&c, ms, want_image, wire_id));
                         }
-                        Some(completion_to_line(&c, ms, want_image))
+                        Ok(JobReply::Error(line)) => break Some(inject_id(line, wire_id)),
+                        Err(_) => break None, // shard died mid-request
                     }
-                    Ok(JobReply::Error(line)) => Some(line),
-                    Err(_) => None, // shard died mid-request
                 },
-                Err(e) => Some(error_to_line(&e)),
+                Err(e) => Some(inject_id(error_to_line(&e), wire_id)),
             }
         }
-        Err(e) => Some(error_line_coded(&e, "invalid_request")),
+        Err(e) => Some(inject_id(error_line_coded(&e, "invalid_request"), wire_id)),
     }
 }
 
@@ -827,7 +985,7 @@ fn handle_conn(
 /// `ErrorKind`, so they are matched by raw OS errno). Anything else —
 /// an invalidated listener, a torn-down address — is permanent and must
 /// kill `serve` so a supervisor restarts it.
-fn transient_accept_error(e: &std::io::Error) -> bool {
+pub(crate) fn transient_accept_error(e: &std::io::Error) -> bool {
     use std::io::ErrorKind;
     matches!(
         e.kind(),
@@ -909,12 +1067,60 @@ where
     serve_on(listener, fleet, cfg, registry)
 }
 
-/// The accept loop over an already-bound listener and an already-launched
-/// fleet — the production path of [`serve_with_registry`], public so the
-/// chaos harness (`rust/tests/chaos_integration.rs`) can drive the *real*
+/// §Observability: the `--spans-out` pump — a detached background thread
+/// draining every shard's span ring to a JSONL file on a short cadence,
+/// mirroring `--trace-out`'s always-on capture. Rings hold
+/// [`crate::trace::DEFAULT_SPAN_CAP`] events and overwrite on overflow;
+/// between `{"cmd": "spans"}` polls that means silent loss under load —
+/// this sink turns drop-on-full into append-to-disk. The thread exits on
+/// its own when the fleet shuts down (`drain_spans` errors once every
+/// shard is gone). Each line is one event object (the same schema
+/// `{"cmd": "spans"}` replies carry, plus the shard id already stamped);
+/// ring overwrites that still happen between sweeps are surfaced as the
+/// monotonic `dropped` total in `{"cmd": "stats"}`.
+fn spawn_span_pump(path: &str, fleet: &Arc<Fleet>) -> Result<()> {
+    use std::io::BufWriter;
+    let file = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .map_err(|e| anyhow!("--spans-out {path}: {e}"))?;
+    let mut out = BufWriter::new(file);
+    let fleet = fleet.clone();
+    std::thread::spawn(move || loop {
+        std::thread::sleep(Duration::from_millis(500));
+        match fleet.drain_spans() {
+            Ok(batches) => {
+                for batch in &batches {
+                    for ev in &batch.events {
+                        let row = crate::trace::event_to_json(ev, batch.shard, &batch.policies);
+                        if out
+                            .write_all(json::to_string(&row).as_bytes())
+                            .and_then(|_| out.write_all(b"\n"))
+                            .is_err()
+                        {
+                            log::warn!("--spans-out: write failed; span shipping stopped");
+                            return;
+                        }
+                    }
+                }
+                let _ = out.flush();
+            }
+            // every shard gone: fleet drained/shut down — stop shipping
+            Err(_) => return,
+        }
+    });
+    Ok(())
+}
+
+/// Serve an already-bound listener with an already-launched fleet — the
+/// production path of [`serve_with_registry`], public so the chaos
+/// harness (`rust/tests/chaos_integration.rs`) can drive the *real*
 /// serving loop (hardened reads, trace capture, counters and all) on an
 /// ephemeral port while keeping a [`Fleet`] handle to inject faults into.
-/// Blocks until the listener fails permanently.
+/// Dispatches on [`ServerConfig::net`]: the poll-based reactor (default)
+/// or the legacy thread-per-connection loop. Blocks until the listener
+/// fails permanently.
 pub fn serve_on(
     listener: TcpListener,
     fleet: Arc<Fleet>,
@@ -925,6 +1131,24 @@ pub fn serve_on(
         Some(path) => Some(Arc::new(TraceSink::create(path)?)),
         None => None,
     };
+    if let Some(path) = &cfg.spans_out {
+        spawn_span_pump(path, &fleet)?;
+    }
+    match cfg.net {
+        NetMode::Reactor => crate::reactor::serve_reactor(listener, fleet, cfg, registry, trace),
+        NetMode::Threads => serve_threads(listener, fleet, cfg, registry, trace),
+    }
+}
+
+/// The historical accept loop: one OS thread per connection, blocking
+/// line reads (`--net threads`; the A/B baseline against the reactor).
+fn serve_threads(
+    listener: TcpListener,
+    fleet: Arc<Fleet>,
+    cfg: ServerConfig,
+    registry: Arc<PolicyRegistry>,
+    trace: Option<Arc<TraceSink>>,
+) -> Result<()> {
     for stream in listener.incoming() {
         // transient accept failures (EMFILE, aborted handshakes, EINTR)
         // must not kill the fleet: log, back off a beat, keep accepting.

@@ -101,6 +101,7 @@ fn clean_digest(request_line: &str, scfg: &ServerConfig) -> String {
     match rx.recv().unwrap() {
         JobReply::Done(c, _) => completion_digest(&c),
         JobReply::Error(line) => panic!("clean run refused {request_line}: {line}"),
+        JobReply::Progress(n) => panic!("unexpected progress: {n:?}"),
     }
 }
 
@@ -325,6 +326,7 @@ fn resumed_completions_match_clean_under_every_scheduler() {
                     JobReply::Error(l) => {
                         panic!("refused under {} x{shards}: {l}", kind.name())
                     }
+                    JobReply::Progress(n) => panic!("unexpected progress: {n:?}"),
                 }
             }
             assert!(
@@ -399,6 +401,7 @@ fn retried_completions_match_clean_under_every_scheduler() {
                     kind.name()
                 ),
                 JobReply::Error(l) => panic!("refused under {}: {l}", kind.name()),
+                JobReply::Progress(n) => panic!("unexpected progress: {n:?}"),
             }
         }
         assert!(plan.errors() > 0, "no fault fired under {}", kind.name());

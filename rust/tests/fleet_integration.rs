@@ -77,6 +77,7 @@ fn run_fleet(fleet: &Fleet, reqs: Vec<Request>) -> Vec<Completion> {
         .map(|rx| match rx.recv().expect("shard replied") {
             JobReply::Done(c, _ms) => *c,
             JobReply::Error(line) => panic!("unexpected error reply: {line}"),
+            JobReply::Progress(n) => panic!("unexpected progress: {n:?}"),
         })
         .collect();
     out.sort_by_key(|c| c.id);
@@ -249,6 +250,7 @@ fn global_budget_trips_before_shard_budgets() {
     match rx.recv().unwrap() {
         JobReply::Done(c, _) => assert_eq!(c.nfes, 100_000),
         JobReply::Error(line) => panic!("{line}"),
+        JobReply::Progress(n) => panic!("unexpected progress: {n:?}"),
     }
     fleet.shutdown();
 }
@@ -276,6 +278,7 @@ fn shard_budget_sheds_with_shard_scope() {
     let line = match rx.recv().unwrap() {
         JobReply::Error(line) => line,
         JobReply::Done(..) => panic!("must be shed by the shard budget"),
+        JobReply::Progress(n) => panic!("unexpected progress: {n:?}"),
     };
     let v = json::parse(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
     assert_eq!(v.req("code").as_str(), Some("queue_full"));
@@ -288,6 +291,7 @@ fn shard_budget_sheds_with_shard_scope() {
     match rx.recv().unwrap() {
         JobReply::Done(c, _) => assert_eq!(c.nfes, 8),
         JobReply::Error(line) => panic!("{line}"),
+        JobReply::Progress(n) => panic!("unexpected progress: {n:?}"),
     }
     fleet.shutdown();
 }
@@ -313,6 +317,7 @@ fn infeasible_deadlines_are_shed_at_admission() {
     match rx.recv().unwrap() {
         JobReply::Done(c, _) => assert_eq!(c.nfes, 4000),
         JobReply::Error(line) => panic!("cold start must admit: {line}"),
+        JobReply::Progress(n) => panic!("unexpected progress: {n:?}"),
     }
     // the warmup measured a per-NFE rate; a 4000-NFE request due "now"
     // is infeasible by construction
@@ -322,6 +327,7 @@ fn infeasible_deadlines_are_shed_at_admission() {
     let line = match rx.recv().unwrap() {
         JobReply::Error(line) => line,
         JobReply::Done(..) => panic!("infeasible deadline must be shed"),
+        JobReply::Progress(n) => panic!("unexpected progress: {n:?}"),
     };
     let v = json::parse(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
     assert_eq!(v.req("code").as_str(), Some("deadline_infeasible"));
@@ -362,6 +368,7 @@ fn drain_completes_in_flight_work_and_refuses_new() {
         match rx.recv().expect("drained fleets answer every in-flight job") {
             JobReply::Done(c, _) => assert!(c.nfes > 0),
             JobReply::Error(line) => panic!("{line}"),
+            JobReply::Progress(n) => panic!("unexpected progress: {n:?}"),
         }
     }
     let err = fleet

@@ -1,0 +1,553 @@
+//! Reactor front-end integration (§Scale): every test drives the *real*
+//! serving loop — `serve_on` on an ephemeral port with `--net reactor` —
+//! over real TCP, and checks the protocol invariants the reactor adds:
+//!
+//! * completions are byte-identical to the threaded front end (same
+//!   renderers, same refusal lines — only wall-clock `ms` may differ);
+//! * wire-id-tagged requests pipeline and replies match by echoed id,
+//!   id-less requests keep the historical serialized order;
+//! * `{"cmd": "cancel", "id": X}` revokes queued/in-flight work, refunds
+//!   the admission budget, and answers `"code": "canceled"`;
+//! * opted-in requests stream `{"event": "progress"}` lines;
+//! * one event-loop thread serves ≥1024 concurrent connections.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use adaptive_guidance::backend::GmmBackend;
+use adaptive_guidance::chaos::{self, completion_digest, read_trace, Director, ReplayConfig};
+use adaptive_guidance::coordinator::spec::PolicyRegistry;
+use adaptive_guidance::fleet::{Fleet, JobReply};
+use adaptive_guidance::sched::Admission;
+use adaptive_guidance::server::{parse_request_line, serve_on, NetMode, ServerConfig};
+use adaptive_guidance::sim::gmm::Gmm;
+use adaptive_guidance::util::json::{self, Value};
+
+/// Fast backend for throughput-shaped tests (a request is milliseconds).
+fn fast_gmm() -> Gmm {
+    Gmm::axes(8, 3, 3.0, 0.05)
+}
+
+/// Deliberately slow backend (the chaos suite's), so long-step requests
+/// are still grinding when cancels and shard kills land.
+fn slow_gmm() -> Gmm {
+    Gmm::axes(64, 6, 3.0, 0.05)
+}
+
+fn base_cfg() -> ServerConfig {
+    ServerConfig {
+        model: "gmm".into(),
+        shards: 2,
+        workers: 2,
+        net: NetMode::Reactor,
+        ..Default::default()
+    }
+}
+
+/// Bind an ephemeral port and run the production `serve_on` dispatch
+/// (reactor or threads, per `scfg.net`) against a GMM fleet.
+fn spawn_server(
+    mut scfg: ServerConfig,
+    gmm: fn() -> Gmm,
+) -> (SocketAddr, Arc<Fleet>, ServerConfig) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    scfg.addr = addr.to_string();
+    let fleet = Arc::new(Fleet::launch(
+        move |_shard| Ok(GmmBackend::new(gmm())),
+        scfg.fleet_config(),
+    ));
+    let registry = Arc::new(PolicyRegistry::builtin());
+    {
+        let fleet = fleet.clone();
+        let scfg = scfg.clone();
+        std::thread::spawn(move || {
+            let _ = serve_on(listener, fleet, scfg, registry);
+        });
+    }
+    (addr, fleet, scfg)
+}
+
+fn connect(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+fn send(stream: &mut TcpStream, line: &str) {
+    writeln!(stream, "{line}").unwrap();
+}
+
+fn read_line(reader: &mut BufReader<TcpStream>) -> String {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).unwrap();
+    assert!(n > 0, "server closed the connection mid-conversation");
+    line.trim().to_owned()
+}
+
+/// Read the next non-progress reply and require it to echo `id`.
+fn read_for_id(reader: &mut BufReader<TcpStream>, id: u64) -> Value {
+    loop {
+        let line = read_line(reader);
+        let v = json::parse(&line).unwrap_or_else(|e| panic!("bad reply {line:?}: {e}"));
+        if v.get("event").and_then(Value::as_str) == Some("progress") {
+            continue;
+        }
+        assert_eq!(
+            v.get("id").and_then(Value::as_f64),
+            Some(id as f64),
+            "expected id {id}, got {line}"
+        );
+        return v;
+    }
+}
+
+/// Serve `request_line` on a fresh fault-free single-shard fleet and
+/// return its completion digest (the golden value).
+fn clean_digest(request_line: &str, scfg: &ServerConfig, gmm: fn() -> Gmm) -> String {
+    let clean = ServerConfig {
+        shards: 1,
+        ..scfg.clone()
+    };
+    let fleet = Fleet::launch(move |_shard| Ok(GmmBackend::new(gmm())), clean.fleet_config());
+    let (req, _) = parse_request_line(request_line, &clean, &PolicyRegistry::builtin())
+        .unwrap_or_else(|e| panic!("golden parse of {request_line}: {e}"));
+    let rx = fleet.submit(req).unwrap();
+    match rx.recv().unwrap() {
+        JobReply::Done(c, _) => completion_digest(&c),
+        JobReply::Error(line) => panic!("clean run refused {request_line}: {line}"),
+        JobReply::Progress(n) => panic!("unexpected progress: {n:?}"),
+    }
+}
+
+/// Strip the wall-clock `ms` field — the only part of a reply that may
+/// legitimately differ between two servings of the same request.
+fn sans_ms(line: &str) -> String {
+    let mut v = json::parse(line).unwrap_or_else(|e| panic!("bad reply {line:?}: {e}"));
+    if let Value::Obj(m) = &mut v {
+        m.remove("ms");
+    }
+    json::to_string(&v)
+}
+
+/// The largest value of a counter family in the fleet's merged
+/// telemetry, matching `name` exactly or `name{...}` (max, not sum:
+/// merged telemetry may carry both a fleet total and per-shard copies).
+fn counter_max(fleet: &Fleet, name: &str) -> f64 {
+    let stats = fleet.stats_json().unwrap();
+    let counters = stats.req("telemetry").req("counters");
+    let Value::Obj(m) = counters else {
+        panic!("counters is not an object")
+    };
+    let prefix = format!("{name}{{");
+    m.iter()
+        .filter(|(k, _)| k.as_str() == name || k.starts_with(&prefix))
+        .filter_map(|(_, v)| v.as_f64())
+        .fold(0.0, f64::max)
+}
+
+/// Fleet-wide queued-NFE estimate from the stats the server publishes.
+fn queued_nfes(fleet: &Fleet) -> f64 {
+    fleet.stats_json().unwrap().req("queued_nfes").as_f64().unwrap()
+}
+
+/// The same conversation served by both front ends must render the same
+/// bytes (modulo `ms`): completions, image payloads, wire-id echoes,
+/// parse refusals, unknown-policy refusals.
+#[test]
+fn reactor_and_threads_render_identical_replies() {
+    let conversation = [
+        r#"{"prompt": "red circle", "policy": "cfg", "steps": 6, "guidance": 2.0, "seed": 1, "image": true}"#,
+        "this is not json",
+        r#"{"prompt": "x", "policy": "no-such-policy", "steps": 4}"#,
+        r#"{"id": 9, "prompt": "green triangle", "policy": "ag", "steps": 8, "guidance": 2.0, "seed": 2, "image": true}"#,
+        r#"{"id": "job-a", "prompt": "red circle", "policy": "cfg", "steps": 120000, "guidance": 2.0, "seed": 3}"#,
+    ];
+    let mut renderings: Vec<Vec<String>> = Vec::new();
+    for net in [NetMode::Reactor, NetMode::Threads] {
+        let (addr, _fleet, _) = spawn_server(
+            ServerConfig {
+                net,
+                ..base_cfg()
+            },
+            fast_gmm,
+        );
+        let (mut w, mut r) = connect(addr);
+        let mut replies = Vec::new();
+        for line in conversation {
+            send(&mut w, line);
+            replies.push(sans_ms(&read_line(&mut r)));
+        }
+        renderings.push(replies);
+    }
+    assert_eq!(
+        renderings[0], renderings[1],
+        "reactor and threads diverged on the same conversation"
+    );
+    // spot-check the interesting shapes
+    let replies = &renderings[0];
+    assert!(replies[0].contains("\"image\""), "{}", replies[0]);
+    let bad = json::parse(&replies[1]).unwrap();
+    assert_eq!(bad.req("code").as_str(), Some("invalid_request"));
+    let idle = json::parse(&replies[3]).unwrap();
+    assert_eq!(idle.req("id").as_f64(), Some(9.0), "wire id not echoed");
+    // a string wire id is echoed verbatim too (here: on a step-count
+    // refusal, which exceeds MAX_STEPS)
+    let refused = json::parse(&replies[4]).unwrap();
+    assert_eq!(refused.req("id").as_str(), Some("job-a"));
+    assert!(refused.get("error").is_some());
+}
+
+/// Four wire ids written back-to-back on one connection: the reactor
+/// keeps them all in flight, every reply echoes its id, and each
+/// completion digest-matches a clean single-shard run.
+#[test]
+fn pipelined_wire_ids_all_complete_and_match_clean() {
+    let (addr, _fleet, scfg) = spawn_server(base_cfg(), fast_gmm);
+    let lines: Vec<String> = (0..4)
+        .map(|i| {
+            format!(
+                r#"{{"id": {i}, "prompt": "red circle", "policy": "{}", "steps": {}, "guidance": 2.0, "seed": {}, "image": true}}"#,
+                if i % 2 == 0 { "cfg" } else { "ag" },
+                5 + i,
+                30 + i,
+            )
+        })
+        .collect();
+    let (mut w, mut r) = connect(addr);
+    for line in &lines {
+        send(&mut w, line);
+    }
+    let mut got: HashMap<u64, Value> = HashMap::new();
+    while got.len() < lines.len() {
+        let line = read_line(&mut r);
+        let v = json::parse(&line).unwrap();
+        if v.get("event").and_then(Value::as_str) == Some("progress") {
+            continue;
+        }
+        let id = v.req("id").as_f64().unwrap() as u64;
+        assert!(got.insert(id, v).is_none(), "id {id} replied twice");
+    }
+    for (i, line) in lines.iter().enumerate() {
+        let v = &got[&(i as u64)];
+        assert!(v.get("error").is_none(), "{line} refused: {v:?}");
+        assert_eq!(
+            chaos::reply_digest(v).unwrap(),
+            clean_digest(line, &scfg, fast_gmm),
+            "pipelined completion diverged from the clean run: {line}"
+        );
+    }
+}
+
+/// Id-less requests keep the historical contract: dispatch serializes,
+/// so replies come back in exact arrival order even when the client
+/// writes the whole burst up front.
+#[test]
+fn idless_requests_serialize_in_arrival_order() {
+    let (addr, _fleet, _) = spawn_server(base_cfg(), fast_gmm);
+    let (mut w, mut r) = connect(addr);
+    // distinct step counts → distinct nfes in the replies
+    for steps in [4usize, 6, 8] {
+        send(
+            &mut w,
+            &format!(
+                r#"{{"prompt": "red circle", "policy": "cfg", "steps": {steps}, "guidance": 2.0, "seed": 5}}"#
+            ),
+        );
+    }
+    for steps in [4usize, 6, 8] {
+        let v = json::parse(&read_line(&mut r)).unwrap();
+        assert_eq!(
+            v.req("nfes").as_f64(),
+            Some((steps * 2) as f64),
+            "reply out of arrival order"
+        );
+    }
+}
+
+/// Two live requests under one wire id are unmatchable, so the second
+/// is refused up front — and a mid-flight cancel resolves the first.
+#[test]
+fn duplicate_wire_id_is_refused_and_cancel_resolves_the_original() {
+    let (addr, _fleet, _) = spawn_server(
+        ServerConfig {
+            shards: 1,
+            ..base_cfg()
+        },
+        slow_gmm,
+    );
+    let (mut w, mut r) = connect(addr);
+    send(
+        &mut w,
+        r#"{"id": 7, "prompt": "red circle", "policy": "cfg", "steps": 90000, "guidance": 2.0, "seed": 6}"#,
+    );
+    send(
+        &mut w,
+        r#"{"id": 7, "prompt": "red circle", "policy": "cfg", "steps": 4, "guidance": 2.0, "seed": 6}"#,
+    );
+    let dup = read_for_id(&mut r, 7);
+    assert_eq!(dup.req("code").as_str(), Some("invalid_request"));
+    assert!(
+        dup.req("error").as_str().unwrap().contains("already in flight"),
+        "{dup:?}"
+    );
+    send(&mut w, r#"{"cmd": "cancel", "id": 7}"#);
+    let canceled = read_for_id(&mut r, 7);
+    assert_eq!(canceled.req("code").as_str(), Some("canceled"));
+}
+
+/// The cancellation acceptance path: canceling a request drops the
+/// queued-NFE gauge, refunds the fleet admission budget (a request the
+/// budget refused before is admitted after), and increments
+/// `requests_canceled_total`. Unknown ids get `"code": "unknown_id"`.
+#[test]
+fn cancel_refunds_admission_and_counts() {
+    let (addr, fleet, _) = spawn_server(
+        ServerConfig {
+            shards: 1,
+            admission: Admission {
+                max_queued_nfes: Some(400_000),
+                ..Admission::unlimited()
+            },
+            ..base_cfg()
+        },
+        slow_gmm,
+    );
+    let (mut w, mut r) = connect(addr);
+    // cfg worst case is 2 NFEs/step: id 1 reserves 200k, id 2 180k
+    send(
+        &mut w,
+        r#"{"id": 1, "prompt": "red circle", "policy": "cfg", "steps": 100000, "guidance": 2.0, "seed": 11}"#,
+    );
+    send(
+        &mut w,
+        r#"{"id": 2, "prompt": "green triangle", "policy": "cfg", "steps": 90000, "guidance": 2.0, "seed": 12}"#,
+    );
+    // id 3 (60k) would put the budget at 440k > 400k: refused, id echoed
+    send(
+        &mut w,
+        r#"{"id": 3, "prompt": "blue square", "policy": "cfg", "steps": 30000, "guidance": 2.0, "seed": 13}"#,
+    );
+    let refused = read_for_id(&mut r, 3);
+    assert_eq!(refused.req("code").as_str(), Some("queue_full"));
+    // the admitted work is on the engine-published gauge (poll: the
+    // router's reservation lands on the gauge once the shard admits)
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while queued_nfes(&fleet) < 250_000.0 {
+        assert!(Instant::now() < deadline, "queued-NFE gauge never rose");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // cancel something that was never admitted → unknown_id
+    send(&mut w, r#"{"cmd": "cancel", "id": 3}"#);
+    assert_eq!(read_for_id(&mut r, 3).req("code").as_str(), Some("unknown_id"));
+    // cancel id 2: the canceled reply resolves the id, the gauge drops
+    send(&mut w, r#"{"cmd": "cancel", "id": 2}"#);
+    assert_eq!(read_for_id(&mut r, 2).req("code").as_str(), Some("canceled"));
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while queued_nfes(&fleet) > 220_000.0 {
+        assert!(Instant::now() < deadline, "queued-NFE gauge never dropped");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // the refund re-opens the budget: more work is admitted now (no
+    // immediate reply), proven by its cancel answering `canceled`
+    send(
+        &mut w,
+        r#"{"id": 4, "prompt": "blue square", "policy": "cfg", "steps": 10000, "guidance": 2.0, "seed": 13}"#,
+    );
+    send(&mut w, r#"{"cmd": "cancel", "id": 4}"#);
+    assert_eq!(read_for_id(&mut r, 4).req("code").as_str(), Some("canceled"));
+    send(&mut w, r#"{"cmd": "cancel", "id": 1}"#);
+    assert_eq!(read_for_id(&mut r, 1).req("code").as_str(), Some("canceled"));
+    assert_eq!(counter_max(&fleet, "requests_canceled_total"), 3.0);
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while queued_nfes(&fleet) > 0.0 {
+        assert!(Instant::now() < deadline, "gauge never returned to zero");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// `"progress": true` streams per-step `{"event": "progress"}` lines:
+/// the wire id is echoed on every sample, step/of/gamma/nfes ride
+/// along, and the completion still arrives at the end.
+#[test]
+fn progress_streams_per_step_events() {
+    let (addr, _fleet, _) = spawn_server(
+        ServerConfig {
+            shards: 1,
+            ..base_cfg()
+        },
+        fast_gmm,
+    );
+    let (mut w, mut r) = connect(addr);
+    send(
+        &mut w,
+        r#"{"id": 5, "prompt": "red circle", "policy": "cfg", "steps": 64, "guidance": 2.0, "seed": 9, "progress": true}"#,
+    );
+    let mut samples = 0usize;
+    let completion = loop {
+        let v = json::parse(&read_line(&mut r)).unwrap();
+        if v.get("event").and_then(Value::as_str) == Some("progress") {
+            assert_eq!(v.req("id").as_f64(), Some(5.0), "progress id not echoed");
+            let step = v.req("step").as_f64().unwrap();
+            let of = v.req("of").as_f64().unwrap();
+            assert!(step < of, "step {step} of {of} (0-based)");
+            assert_eq!(of, 64.0);
+            assert!(v.req("nfes").as_f64().unwrap() >= 1.0);
+            assert!(v.get("gamma").is_some());
+            samples += 1;
+            continue;
+        }
+        break v;
+    };
+    assert!(samples >= 1, "no progress event survived to the wire");
+    assert_eq!(completion.req("id").as_f64(), Some(5.0));
+    assert!(completion.get("error").is_none(), "{completion:?}");
+    // a request that does NOT opt in gets no progress lines at all
+    send(
+        &mut w,
+        r#"{"prompt": "red circle", "policy": "cfg", "steps": 16, "guidance": 2.0, "seed": 10}"#,
+    );
+    let v = json::parse(&read_line(&mut r)).unwrap();
+    assert!(v.get("event").is_none(), "unrequested progress: {v:?}");
+    assert!(v.get("error").is_none());
+}
+
+/// §Scale acceptance: ≥1024 concurrent connections, all held open at
+/// once with a request in flight on each, served closed-loop by the one
+/// event-loop thread.
+#[test]
+fn a_thousand_connections_share_one_reactor() {
+    const CONNS: usize = 1024;
+    let (addr, fleet, _) = spawn_server(base_cfg(), fast_gmm);
+    let mut socks = Vec::with_capacity(CONNS);
+    for _ in 0..CONNS {
+        socks.push(connect(addr));
+    }
+    for (i, (w, _)) in socks.iter_mut().enumerate() {
+        send(
+            w,
+            &format!(
+                r#"{{"id": {i}, "prompt": "red circle", "policy": "cfg", "steps": 2, "guidance": 2.0, "seed": {i}}}"#
+            ),
+        );
+    }
+    for (i, (_, r)) in socks.iter_mut().enumerate() {
+        let v = read_for_id(r, i as u64);
+        assert!(v.get("error").is_none(), "conn {i} refused: {v:?}");
+        assert_eq!(v.req("nfes").as_f64(), Some(4.0));
+    }
+    // every connection is still open and serviceable after the burst
+    let (w, r) = &mut socks[CONNS - 1];
+    send(w, r#"{"cmd": "stats"}"#);
+    let stats = json::parse(&read_line(r)).unwrap();
+    assert_eq!(stats.req("shards").as_f64(), Some(2.0));
+    drop(socks);
+    // the reactor reaps them; the fleet survives
+    assert!(fleet.stats_json().is_ok());
+}
+
+/// The pipelined chaos scenario: four wire ids on one connection racing
+/// a mid-flight cancel and a shard kill. The canceled id answers
+/// `"code": "canceled"`, the killed shard's id answers `shard_failed`,
+/// and the surviving ids complete byte-identical to a clean run.
+#[test]
+fn scenario_pipelined_kill() {
+    let (addr, fleet, scfg) = spawn_server(base_cfg(), slow_gmm);
+    let script = std::fs::read_to_string(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("scenarios")
+            .join("pipelined_kill.txt"),
+    )
+    .unwrap();
+    let mut d = Director::new(&fleet, addr);
+    d.run(&script).unwrap();
+    assert!(
+        counter_max(&fleet, "requests_canceled_total") >= 1.0,
+        "the cancel never reached an engine"
+    );
+    let m = fleet.metrics_prometheus().unwrap();
+    assert!(m.contains(r#"shard_died_total{shard="0"} 1"#), "{m}");
+    assert!(m.contains("fleet_shards_alive 1"), "{m}");
+    // ids 3 and 4 carried images: digest-check both against clean runs
+    let mut checked = 0;
+    for reply in &d.replies {
+        let Some(digest) = chaos::reply_digest(&reply.value) else {
+            continue;
+        };
+        assert_eq!(
+            digest,
+            clean_digest(&reply.request_line, &scfg, slow_gmm),
+            "survivor diverged: {}",
+            reply.request_line
+        );
+        checked += 1;
+    }
+    assert_eq!(checked, 2, "both pipelined survivors must digest-check");
+}
+
+/// Capture → pipelined replay round trip against the reactor: serve the
+/// sample trace with `--trace-out`, then replay the capture with
+/// `--pipeline 4` against a fresh reactor server. Every reply matches
+/// its captured digest — pipelining changes reply *order*, never bytes.
+#[test]
+fn pipelined_replay_round_trips_digests() {
+    let capture = std::env::temp_dir().join(format!(
+        "agd_reactor_capture_{}.jsonl",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&capture);
+    let (addr_a, _fleet_a, _) = spawn_server(
+        ServerConfig {
+            trace_out: Some(capture.to_str().unwrap().to_owned()),
+            ..base_cfg()
+        },
+        fast_gmm,
+    );
+    let sample = read_trace(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("scenarios")
+            .join("sample_trace.jsonl")
+            .to_str()
+            .unwrap(),
+    )
+    .unwrap();
+    let outcome = chaos::replay(
+        &sample,
+        &ReplayConfig {
+            addr: addr_a.to_string(),
+            speed: 50.0,
+            connections: 2,
+            pipeline: 4,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(outcome.sent, sample.len());
+    assert_eq!(outcome.completed, sample.len(), "shed: {:?}", outcome.shed);
+    assert_eq!(outcome.transport_errors, 0);
+
+    let captured = read_trace(capture.to_str().unwrap()).unwrap();
+    assert_eq!(captured.len(), sample.len());
+    assert!(captured.iter().all(|r| r.digest.is_some()));
+
+    let (addr_b, _fleet_b, _) = spawn_server(base_cfg(), fast_gmm);
+    let outcome = chaos::replay(
+        &captured,
+        &ReplayConfig {
+            addr: addr_b.to_string(),
+            speed: 50.0,
+            connections: 2,
+            pipeline: 4,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(outcome.completed, captured.len(), "shed: {:?}", outcome.shed);
+    assert_eq!(outcome.digest_checked, captured.len());
+    assert_eq!(outcome.digest_mismatches, 0);
+    let _ = std::fs::remove_file(&capture);
+}

@@ -21,4 +21,8 @@ iters="${BENCH_ITERS:-30}"
 
 cargo bench --bench perf_microbench -- --iters "$iters" --out "$out"
 cargo bench --bench sched_tail_latency -- --shards-sweep 1,2,4 --merge-into "$out"
+# §Scale: the front-end sweep — reactor vs thread-per-connection at
+# 32/256/1024 persistent connections, closed-loop (merged under
+# "conn_scaling"; expect reactor req/s to hold flat as conns grow)
+cargo bench --bench conn_scaling -- --conns-sweep 32,256,1024 --merge-into "$out"
 echo "bench: wrote $out"

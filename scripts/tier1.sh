@@ -25,6 +25,10 @@ cargo test -q --test fault_zero_alloc
 # --checkpoint-steps 1 every completed step captures a snapshot, and all
 # of it has to land in buffers sized at admission
 cargo test -q --test ckpt_zero_alloc
+# the serving front-end contract (§Scale): reactor vs threads byte
+# parity, pipelined wire ids, wire-level cancellation with admission
+# refund, progress streaming, and the 1024-connection event loop
+cargo test -q --test reactor_integration
 # the robustness invariant (faults change who is served, never what):
 # scenario corpus (incl. backend_fault_storm + shard_respawn) +
 # capture->replay digest check, then the same replay against a fleet
